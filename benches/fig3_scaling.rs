@@ -1,0 +1,84 @@
+//! Fig. 3 (2a/2b): final return bars and (3a/3b): total-runtime bars
+//! (log2 y-axis) for N ∈ {4, 25, 49, 100} agents, both domains; also
+//! regenerates the appendix Fig. 5/6 runtime panels.
+//!
+//! Paper shape to reproduce: GS runtime grows steeply with N while the
+//! DIALS *critical path* stays nearly flat (the paper's cluster measured
+//! wall-clock with one process per agent; on this 1-CPU box the critical
+//! path is the equivalent quantity — DESIGN.md substitution). The paper's
+//! headline: 100 agents, DIALS ≈ 6h vs GS ≈ 10 days → speedup ≈ 40×.
+//!
+//!     cargo bench --offline --bench fig3_scaling
+//!     cargo bench --offline --bench fig3_scaling -- --all-sizes --steps 2000
+
+use anyhow::Result;
+
+use dials::baselines::GsTrainer;
+use dials::config::{Domain, ExperimentConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::runtime::Engine;
+use dials::util::bench::{fmt_secs, Table};
+use dials::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
+    let steps = args.get_usize("steps", 1200)?;
+    let sizes = if args.get_bool("all-sizes") {
+        vec![2usize, 5, 7, 10]
+    } else {
+        args.get_usize_list("sizes", &[2, 5, 7])?
+    };
+    let engine = Engine::cpu()?;
+
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let mut table = Table::new(
+            &format!("Fig3 scaling — {} ({} steps/agent)", domain.name(), steps),
+            &["agents", "mode", "final return", "wall(serial)", "critical path", "log2(CP s)"],
+        );
+        let mut cp: Vec<(usize, SimMode, f64)> = Vec::new();
+        for &side in &sizes {
+            for mode in [SimMode::GlobalSim, SimMode::Dials, SimMode::UntrainedDials] {
+                let cfg = ExperimentConfig {
+                    domain,
+                    mode,
+                    grid_side: side,
+                    total_steps: steps,
+                    aip_train_freq: (steps / 2).max(1),
+                    aip_dataset: 300,
+                    aip_epochs: 20,
+                    eval_every: steps, // evaluate only at the end (runtime bench)
+                    eval_episodes: 2,
+                    horizon: 100,
+                    seed: 0,
+                    ..Default::default()
+                };
+                let coord = DialsCoordinator::new(&engine, cfg)?;
+                let log = match mode {
+                    SimMode::GlobalSim => GsTrainer::new(coord).run()?,
+                    _ => coord.run()?,
+                };
+                table.row(vec![
+                    format!("{}", side * side),
+                    log.label.clone(),
+                    format!("{:.3}", log.final_return),
+                    fmt_secs(log.wall_seconds),
+                    fmt_secs(log.critical_path_seconds),
+                    format!("{:.2}", log.critical_path_seconds.max(1e-9).log2()),
+                ]);
+                cp.push((side * side, mode, log.critical_path_seconds));
+            }
+        }
+        table.print();
+        table.save_csv(&format!("fig3_scaling_{}", domain.name()));
+
+        // paper-shape summary: speedup(GS/DIALS) should grow with N
+        println!("speedup (GS critical path / DIALS critical path):");
+        for &side in &sizes {
+            let n = side * side;
+            let gs = cp.iter().find(|x| x.0 == n && x.1 == SimMode::GlobalSim).unwrap().2;
+            let di = cp.iter().find(|x| x.0 == n && x.1 == SimMode::Dials).unwrap().2;
+            println!("  {n:>4} agents: {:.1}x", gs / di.max(1e-9));
+        }
+    }
+    Ok(())
+}

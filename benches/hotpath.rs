@@ -1,0 +1,132 @@
+//! Hot-path microbenchmarks (§Perf deliverable, not a paper table).
+//!
+//! Measures every component on the per-step critical path so the perf pass
+//! can attribute time: simulator steps, PJRT executable invocations
+//! (policy forward, AIP forward), the PPO/AIP update calls, and the
+//! end-to-end per-agent step of the IALS training loop.
+//!
+//!     cargo bench --offline --bench hotpath
+
+use anyhow::Result;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::ppo::PpoTrainer;
+use dials::runtime::Engine;
+use dials::sim::{traffic::TrafficGlobalSim, warehouse::WarehouseGlobalSim, GlobalSim, LocalSim};
+use dials::sim::traffic::TrafficLocalSim;
+use dials::sim::warehouse::WarehouseLocalSim;
+use dials::util::bench::{time_n, Table};
+use dials::util::npk::Tensor;
+use dials::util::rng::Pcg64;
+
+fn main() -> Result<()> {
+    let engine = Engine::cpu()?;
+    let mut table = Table::new("hot path microbenchmarks", &["op", "mean", "min", "per-unit"]);
+    let reps = 200;
+
+    // ---- simulators
+    {
+        let mut rng = Pcg64::seed(0);
+        let mut ls = TrafficLocalSim::new();
+        ls.reset(&mut rng);
+        let (mean, min) = time_n(reps, || {
+            ls.step(0, &[1.0, 0.0, 0.0, 0.0], &mut rng);
+        });
+        table.row(vec!["traffic LS step".into(), us(mean), us(min), "1 step".into()]);
+
+        let mut wls = WarehouseLocalSim::new();
+        wls.reset(&mut rng);
+        let (mean, min) = time_n(reps, || {
+            wls.step(1, &[3.0, 3.0, 3.0, 3.0], &mut rng);
+        });
+        table.row(vec!["warehouse LS step".into(), us(mean), us(min), "1 step".into()]);
+
+        let mut gs = TrafficGlobalSim::new(5);
+        gs.reset(&mut rng);
+        let acts = vec![0usize; 25];
+        let (mean, min) = time_n(reps, || {
+            gs.step(&acts, &mut rng);
+        });
+        table.row(vec!["traffic GS step (25 ints)".into(), us(mean), us(min), "25 agents".into()]);
+
+        let mut wgs = WarehouseGlobalSim::new(5);
+        wgs.reset(&mut rng);
+        let (mean, min) = time_n(reps, || {
+            wgs.step(&acts, &mut rng);
+        });
+        table.row(vec!["warehouse GS step (25 rb)".into(), us(mean), us(min), "25 agents".into()]);
+    }
+
+    // ---- PJRT executable calls
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let cfg = ExperimentConfig {
+            domain,
+            mode: SimMode::Dials,
+            ppo: PpoConfig::default(),
+            ..Default::default()
+        };
+        let coord = DialsCoordinator::new(&engine, cfg.clone())?;
+        let arts = coord.artifacts();
+        let spec = &arts.spec;
+        let params = arts.policy_init.clone();
+        let obs = Tensor::zeros(&[1, spec.obs_dim]);
+        let h = Tensor::zeros(&[1, spec.policy_hstate]);
+        let (mean, min) = time_n(reps, || {
+            arts.policy_step.run(&[params.clone(), obs.clone(), h.clone()]).unwrap();
+        });
+        table.row(vec![format!("{} policy_step HLO call", domain.name()), us(mean), us(min), "1 fwd".into()]);
+
+        let ap = arts.aip_init.clone();
+        let feat = Tensor::zeros(&[1, spec.aip_feat]);
+        let ah = Tensor::zeros(&[1, spec.aip_hstate]);
+        let (mean, min) = time_n(reps, || {
+            arts.aip_forward.run(&[ap.clone(), feat.clone(), ah.clone()]).unwrap();
+        });
+        table.row(vec![format!("{} aip_forward HLO call", domain.name()), us(mean), us(min), "1 fwd".into()]);
+
+        // full PPO update (epochs × minibatches over one rollout)
+        let mut workers = coord.make_workers(0);
+        let w = &mut workers[0];
+        let trainer = PpoTrainer::new(cfg.ppo.clone());
+        // fill one rollout via real stepping
+        w.train_segment(arts, &trainer, cfg.ppo.rollout_len, cfg.horizon)?;
+        let mut rng = Pcg64::seed(1);
+        // measure the raw update call on a synthetic full buffer
+        let mut buf = dials::ppo::RolloutBuffer::new(cfg.ppo.rollout_len, spec.obs_dim, spec.policy_hstate);
+        let obs_row = vec![0.1f32; spec.obs_dim];
+        let h_row = vec![0.0f32; spec.policy_hstate];
+        for t in 0..cfg.ppo.rollout_len {
+            buf.push(&obs_row, &h_row, t % spec.act_dim, -0.5, 0.3, 0.2, t % cfg.horizon == cfg.horizon - 1);
+        }
+        let (mean, min) = time_n(20, || {
+            trainer.update(arts, &mut w.policy.net, &buf, 0.0, &mut rng).unwrap();
+        });
+        let calls = cfg.ppo.epochs * (cfg.ppo.rollout_len / cfg.ppo.minibatch);
+        table.row(vec![
+            format!("{} PPO update (rollout)", domain.name()),
+            us(mean), us(min), format!("{calls} HLO calls"),
+        ]);
+
+        // end-to-end IALS training step
+        let (mean, min) = time_n(20, || {
+            w.train_segment(arts, &trainer, 32, cfg.horizon).unwrap();
+        });
+        table.row(vec![
+            format!("{} IALS train step e2e", domain.name()),
+            us(mean / 32.0), us(min / 32.0), "per env step".into(),
+        ]);
+    }
+
+    table.print();
+    table.save_csv("hotpath");
+    Ok(())
+}
+
+fn us(secs: f64) -> String {
+    if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.1}us", secs * 1e6)
+    }
+}

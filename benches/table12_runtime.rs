@@ -1,0 +1,91 @@
+//! Tables 1 & 2 (App. G): runtime breakdown — "agents training" vs "data
+//! collection + influence training" vs total — for GS, DIALS at several F,
+//! and untrained-DIALS, across agent counts.
+//!
+//! Paper shape to reproduce (per domain):
+//!   * GS total grows steeply with N; DIALS agent-training stays ~flat
+//!     (critical-path model on this box, see DESIGN.md);
+//!   * the influence column scales with N (data collection is the GS) and
+//!     inversely with F — exactly the paper's gap between DIALS F=100K
+//!     and F=4M;
+//!   * untrained-DIALS has zero influence cost.
+//!
+//!     cargo bench --offline --bench table12_runtime
+//!     cargo bench --offline --bench table12_runtime -- --sizes 2,5,7 --steps 1500
+
+use anyhow::Result;
+
+use dials::baselines::GsTrainer;
+use dials::config::{Domain, ExperimentConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::runtime::Engine;
+use dials::util::bench::{fmt_secs, Table};
+use dials::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
+    let steps = args.get_usize("steps", 1000)?;
+    let sizes = args.get_usize_list("sizes", &[2, 5])?;
+    let engine = Engine::cpu()?;
+
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let tbl_no = if domain == Domain::Traffic { 1 } else { 2 };
+        let mut table = Table::new(
+            &format!("Table {tbl_no} — {} runtimes ({} steps/agent; CP model)", domain.name(), steps),
+            &["condition", "agents", "agents training", "data+influence", "total"],
+        );
+        for &side in &sizes {
+            let n = side * side;
+            // GS row
+            let gs_log = {
+                let cfg = base_cfg(domain, side, steps, steps, SimMode::GlobalSim);
+                GsTrainer::new(DialsCoordinator::new(&engine, cfg)?).run()?
+            };
+            table.row(vec![
+                "GS".into(), format!("{n}"),
+                fmt_secs(gs_log.agent_train_seconds), "-".into(),
+                fmt_secs(gs_log.critical_path_seconds),
+            ]);
+            // DIALS rows at several F (paper: F=100K..4M of 4M)
+            for divisor in [8usize, 4, 2, 1] {
+                let f = (steps / divisor).max(1);
+                let cfg = base_cfg(domain, side, steps, f, SimMode::Dials);
+                let log = DialsCoordinator::new(&engine, cfg)?.run()?;
+                table.row(vec![
+                    format!("DIALS F={f}"), format!("{n}"),
+                    fmt_secs(log.agent_train_seconds),
+                    fmt_secs(log.influence_seconds),
+                    fmt_secs(log.critical_path_seconds),
+                ]);
+            }
+            // untrained row
+            let cfg = base_cfg(domain, side, steps, steps, SimMode::UntrainedDials);
+            let log = DialsCoordinator::new(&engine, cfg)?.run()?;
+            table.row(vec![
+                "untrained-DIALS".into(), format!("{n}"),
+                fmt_secs(log.agent_train_seconds), "-".into(),
+                fmt_secs(log.critical_path_seconds),
+            ]);
+        }
+        table.print();
+        table.save_csv(&format!("table{tbl_no}_runtime_{}", domain.name()));
+    }
+    Ok(())
+}
+
+fn base_cfg(domain: Domain, side: usize, steps: usize, f: usize, mode: SimMode) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode,
+        grid_side: side,
+        total_steps: steps,
+        aip_train_freq: f,
+        aip_dataset: 300,
+        aip_epochs: 20,
+        eval_every: steps,
+        eval_episodes: 1,
+        horizon: 100,
+        seed: 0,
+        ..Default::default()
+    }
+}

@@ -1,0 +1,85 @@
+//! Table 3 (App. H): peak memory usage — GS vs DIALS per-process / total.
+//!
+//! The original measured per-process RSS (one OS process per simulator).
+//! Here simulators are in-process workers, so a global tracking allocator
+//! measures: (a) peak heap of constructing + stepping the GS, and (b) peak
+//! heap per DIALS worker (local sim + AIP + policy + dataset + buffers),
+//! with DIALS total = per-worker × N.
+//!
+//! Paper shape to reproduce: GS memory grows sub-linearly with N; DIALS
+//! per-process memory stays ~constant; DIALS total grows linearly with N
+//! and overtakes the GS (the paper's stated trade-off).
+//!
+//!     cargo bench --offline --bench table3_memory -- --sizes 2,5,7,10
+
+use anyhow::Result;
+
+use dials::config::{Domain, ExperimentConfig, SimMode};
+use dials::coordinator::{make_global_sim, DialsCoordinator};
+use dials::runtime::Engine;
+use dials::util::alloc::{measure_peak, TrackingAlloc};
+use dials::util::bench::Table;
+use dials::util::cli::Args;
+use dials::util::rng::Pcg64;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn mb(bytes: usize) -> String {
+    format!("{:.3}", bytes as f64 / 1e6)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
+    let sizes = args.get_usize_list("sizes", &[2, 5, 7, 10])?;
+    let engine = Engine::cpu()?;
+
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let mut table = Table::new(
+            &format!("Table 3 — peak heap (MB), {}", domain.name()),
+            &["agents", "GS", "DIALS per-worker", "DIALS total"],
+        );
+        for &side in &sizes {
+            let n = side * side;
+            // (a) global simulator: construct + step through 2 episodes
+            let (_, gs_peak) = measure_peak(|| {
+                let mut gs = make_global_sim(domain, side);
+                let mut rng = Pcg64::seed(0);
+                gs.reset(&mut rng);
+                let acts = vec![0usize; n];
+                for _ in 0..200 {
+                    gs.step(&acts, &mut rng);
+                }
+                gs.n_agents()
+            });
+
+            // (b) one DIALS worker: nets + AIP + dataset + buffer + LS
+            let cfg = ExperimentConfig {
+                domain,
+                mode: SimMode::Dials,
+                grid_side: side,
+                aip_dataset: 300,
+                ..Default::default()
+            };
+            let coord = DialsCoordinator::new(&engine, cfg)?;
+            let (_, worker_peak) = measure_peak(|| {
+                let workers = coord.make_workers(0);
+                workers.len()
+            });
+            let per_worker = worker_peak / n;
+
+            table.row(vec![
+                format!("{n}"),
+                mb(gs_peak),
+                mb(per_worker),
+                mb(per_worker * n),
+            ]);
+        }
+        table.print();
+        table.save_csv(&format!("table3_memory_{}", domain.name()));
+    }
+    println!("\nNote: heap-only accounting (the PJRT runtime and compiled
+executables are shared across workers in-process and excluded, matching the
+paper's per-simulator-process comparison).");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Warehouse commissioning fleet (paper §5.2): GRU policies + GRU AIPs.
+//!
+//! Demonstrates the paper's §4.3 finding in miniature: in this weakly
+//! coupled domain, training the AIPs ONCE at the start (F = total) is as
+//! good as retraining them frequently — and strictly cheaper.
+//!
+//!     cargo run --release --offline --example warehouse_fleet -- --steps 3000
+
+use anyhow::Result;
+
+use dials::baselines::scripted_return;
+use dials::config::{Domain, ExperimentConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::runtime::Engine;
+use dials::util::bench::{fmt_secs, Table};
+use dials::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.get_usize("steps", 3000)?;
+    let side = args.get_usize("grid-side", 2)?;
+    let seed = args.get_u64("seed", 0)?;
+
+    let engine = Engine::cpu()?;
+    let mut table = Table::new(
+        &format!("warehouse fleet: {} robots, {} steps/agent", side * side, steps),
+        &["condition", "final return", "total (CP)"],
+    );
+
+    // Condition sweep: retrain-often vs train-once vs never (untrained).
+    let conditions: Vec<(String, SimMode, usize)> = vec![
+        (format!("DIALS F={}", steps / 4), SimMode::Dials, steps / 4),
+        (format!("DIALS F={steps} (once)"), SimMode::Dials, steps),
+        ("untrained-DIALS".into(), SimMode::UntrainedDials, steps),
+    ];
+
+    for (label, mode, f) in conditions {
+        let cfg = ExperimentConfig {
+            domain: Domain::Warehouse,
+            mode,
+            grid_side: side,
+            total_steps: steps,
+            aip_train_freq: f.max(1),
+            aip_dataset: 600,
+            aip_epochs: 40,
+            eval_every: steps / 4,
+            eval_episodes: 2,
+            horizon: 100,
+            seed,
+            ..Default::default()
+        };
+        let coord = DialsCoordinator::new(&engine, cfg)?;
+        let log = coord.run()?;
+        println!("[{label}] curve:");
+        for p in &log.eval_curve {
+            println!("  step {:>6}  return {:>8.3}", p.step, p.value);
+        }
+        table.row(vec![
+            label,
+            format!("{:.3}", log.final_return),
+            fmt_secs(log.critical_path_seconds),
+        ]);
+    }
+
+    let scripted = scripted_return(Domain::Warehouse, side, 4, 100, seed);
+    table.row(vec!["hand-coded (greedy oldest)".into(), format!("{scripted:.3}"), "-".into()]);
+    table.print();
+    table.save_csv("warehouse_fleet");
+    Ok(())
+}

@@ -1,0 +1,286 @@
+"""AOT compile path: lower every Layer-2 function to HLO text artifacts.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Per domain (traffic, warehouse) this emits:
+
+    <dom>_policy_step.hlo.txt   (flat,obs[B,D],h[B,H]) -> (logits,value,h')
+    <dom>_ppo_update.hlo.txt    one PPO minibatch Adam step
+    <dom>_aip_forward.hlo.txt   (flat,feat[B,F],h[B,H]) -> (probs,h')
+    <dom>_aip_update.hlo.txt    one AIP cross-entropy Adam step
+    <dom>_aip_eval.hlo.txt      batch CE loss (Fig. 4 curves)
+    <dom>_policy_init.npk       initial flat policy params
+    <dom>_aip_init.npk          initial flat AIP params
+    <dom>.meta                  key=value interface contract for Rust
+    golden/<artifact>/{in,out}NN.npk   golden IO for Rust integration tests
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import envspec as es
+from . import model as M
+from .npk import write_npk
+
+
+# --------------------------------------------------------------------------
+# Domain configurations
+# --------------------------------------------------------------------------
+
+class DomainCfg:
+    """Everything aot needs to lower one domain's artifact set."""
+
+    def __init__(self, name, policy: M.PolicySpec, aip: M.AipSpec,
+                 ppo: M.PpoCfg, aip_lr: float, minibatch: int,
+                 aip_batch: int, aip_seq: int, u_dim: int):
+        self.name = name
+        self.policy = policy
+        self.aip = aip
+        self.ppo = ppo
+        self.aip_lr = aip_lr
+        self.minibatch = minibatch
+        self.aip_batch = aip_batch
+        self.aip_seq = aip_seq
+        self.u_dim = u_dim
+
+
+def domain_cfgs(size: str):
+    """`small` (default; CPU-friendly) or `paper` (Table 4/5 sizes)."""
+    if size == "paper":
+        t_pol, w_emb, w_hid = (256, 128), 256, 128
+        t_aip, w_aip, w_seq = 128, 64, 100
+    else:
+        t_pol, w_emb, w_hid = (64, 64), 64, 64
+        t_aip, w_aip, w_seq = 64, 32, 16
+    traffic = DomainCfg(
+        "traffic",
+        policy=M.PolicySpec(es.TRAFFIC_OBS, es.TRAFFIC_ACT, False, *t_pol),
+        aip=M.AipSpec(es.TRAFFIC_AIP_FEAT, False, t_aip, es.TRAFFIC_N_SRC, 1),
+        ppo=M.PpoCfg(),
+        aip_lr=1e-4,
+        minibatch=32,
+        aip_batch=128,
+        aip_seq=1,
+        u_dim=es.TRAFFIC_U_DIM,
+    )
+    warehouse = DomainCfg(
+        "warehouse",
+        policy=M.PolicySpec(es.WAREHOUSE_OBS, es.WAREHOUSE_ACT, True, w_emb, w_hid),
+        aip=M.AipSpec(es.WAREHOUSE_AIP_FEAT, True, w_aip,
+                      es.WAREHOUSE_N_HEADS, es.WAREHOUSE_N_CLS),
+        ppo=M.PpoCfg(),
+        aip_lr=1e-4,
+        minibatch=32,
+        aip_batch=32,
+        aip_seq=w_seq,
+        u_dim=es.WAREHOUSE_U_DIM,
+    )
+    return [traffic, warehouse]
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers
+# --------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: PJRT untuples the root into one device buffer per
+    # output, which lets the Rust side chain update outputs (params, m, v)
+    # directly into the next execute_b call without host round-trips.
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def lower_and_write(fn, args, out_path):
+    # keep_unused=True: the unified signatures carry dummy hidden-state
+    # args for the FNN variants; default jit would DCE them out of the
+    # compiled HLO and break the Rust caller's calling convention.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return lowered
+
+
+def write_golden(fn, arg_specs, gold_dir, seed, n_cases=2, label_heads=None,
+                 label_cls=0, arg_kinds=None):
+    """Run `fn` on deterministic random inputs; dump input/output NPKs.
+
+    arg_kinds: optional {arg_index: kind} map with semantic constraints —
+      "nonneg" (Adam second moment: |x|), "step" (Adam step counter: 1.0),
+      "tfirst" (packed batch whose element 0 is the step counter).
+    """
+    os.makedirs(gold_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    jfn = jax.jit(fn, keep_unused=True)
+    arg_kinds = arg_kinds or {}
+    for c in range(n_cases):
+        ins = []
+        for k, spec in enumerate(arg_specs):
+            if label_heads is not None and k == len(arg_specs) - 1:
+                # Final arg is a label tensor: integer classes as f32.
+                a = rng.integers(0, max(label_cls, 2), size=spec.shape)
+                a = a.astype(np.float32)
+                if label_cls == 0:  # Bernoulli labels
+                    a = (a > 0).astype(np.float32)
+            else:
+                a = rng.standard_normal(spec.shape).astype(np.float32) * 0.5
+                kind = arg_kinds.get(k)
+                if kind == "nonneg":
+                    a = np.abs(a)
+                elif kind == "step":
+                    a = np.ones(spec.shape, np.float32)
+                elif kind == "tfirst":
+                    a.flat[0] = 1.0
+            ins.append(a)
+        outs = jfn(*ins)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for o in outs:
+            assert np.all(np.isfinite(np.asarray(o))), f"golden output not finite in {gold_dir}"
+        for k, a in enumerate(ins):
+            write_npk(os.path.join(gold_dir, f"in{c}_{k}.npk"), a)
+        for k, o in enumerate(outs):
+            write_npk(os.path.join(gold_dir, f"out{c}_{k}.npk"), np.asarray(o))
+
+
+# --------------------------------------------------------------------------
+# Per-domain emission
+# --------------------------------------------------------------------------
+
+def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool):
+    key = jax.random.PRNGKey(seed)
+    kp, ka = jax.random.split(key)
+    pol_params = M.init_policy(kp, cfg.policy)
+    aip_params = M.init_aip(ka, cfg.aip)
+    pol_flat, pol_unravel = M.flatten_params(pol_params)
+    aip_flat, aip_unravel = M.flatten_params(aip_params)
+
+    d = cfg.name
+    ps, asp = cfg.policy, cfg.aip
+    mb = cfg.minibatch
+
+    write_npk(os.path.join(out_dir, f"{d}_policy_init.npk"), np.asarray(pol_flat))
+    write_npk(os.path.join(out_dir, f"{d}_aip_init.npk"), np.asarray(aip_flat))
+
+    pdim, adim = pol_flat.shape[0], aip_flat.shape[0]
+
+    # ---- policy step (B=1 streaming; the coordinator steps agents 1-by-1)
+    policy_step = M.make_policy_step(ps, pol_unravel)
+    step_args = (_spec(pdim), _spec(1, ps.obs), _spec(1, ps.hstate))
+    lower_and_write(policy_step, step_args, os.path.join(out_dir, f"{d}_policy_step.hlo.txt"))
+
+    # ---- PPO minibatch update (packed state + packed batch)
+    ppo_update = M.make_ppo_update(ps, cfg.ppo, pol_unravel, pdim, mb)
+    upd_args = (
+        _spec(3 * pdim + 4),
+        _spec(1 + mb * (ps.obs + ps.hstate + 4)),
+    )
+    lower_and_write(ppo_update, upd_args, os.path.join(out_dir, f"{d}_ppo_update.hlo.txt"))
+
+    # ---- AIP forward (B=1 streaming)
+    aip_forward = M.make_aip_forward(asp, aip_unravel)
+    af_args = (_spec(adim), _spec(1, asp.feat), _spec(1, asp.hstate))
+    lower_and_write(aip_forward, af_args, os.path.join(out_dir, f"{d}_aip_forward.hlo.txt"))
+
+    # ---- AIP update + eval (packed state + packed batch)
+    adam = M.AdamCfg(lr=cfg.aip_lr)
+    if asp.recurrent:
+        fshape = (cfg.aip_batch, cfg.aip_seq, asp.feat)
+        lshape = (cfg.aip_batch, cfg.aip_seq, asp.n_heads)
+    else:
+        fshape = (cfg.aip_batch, asp.feat)
+        lshape = (cfg.aip_batch, asp.n_heads)
+    feats = _spec(*fshape)
+    labels = _spec(*lshape)
+    aip_update = M.make_aip_update(asp, adam, aip_unravel, adim, fshape, lshape)
+    aip_eval = M.make_aip_eval(asp, aip_unravel)
+    import numpy as _np
+    au_args = (
+        _spec(3 * adim + 1),
+        _spec(1 + int(_np.prod(fshape)) + int(_np.prod(lshape))),
+    )
+    lower_and_write(aip_update, au_args, os.path.join(out_dir, f"{d}_aip_update.hlo.txt"))
+    lower_and_write(aip_eval, (_spec(adim), feats, labels),
+                    os.path.join(out_dir, f"{d}_aip_eval.hlo.txt"))
+
+    # ---- interface contract for the Rust loader
+    meta = {
+        "domain": d,
+        "obs_dim": ps.obs,
+        "act_dim": ps.act,
+        "policy_recurrent": int(ps.recurrent),
+        "policy_hstate": ps.hstate,
+        "policy_params": pdim,
+        "aip_feat": asp.feat,
+        "aip_recurrent": int(asp.recurrent),
+        "aip_hstate": asp.hstate,
+        "aip_params": adim,
+        "aip_heads": asp.n_heads,
+        "aip_cls": asp.n_cls,
+        "u_dim": cfg.u_dim,
+        "minibatch": mb,
+        "aip_batch": cfg.aip_batch,
+        "aip_seq": cfg.aip_seq,
+        "seed": seed,
+    }
+    with open(os.path.join(out_dir, f"{d}.meta"), "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k}={v}\n")
+
+    # ---- golden IO for the Rust runtime integration tests
+    if goldens:
+        gd = os.path.join(out_dir, "golden")
+        write_golden(policy_step, step_args, os.path.join(gd, f"{d}_policy_step"), seed + 1)
+        write_golden(aip_forward, af_args, os.path.join(gd, f"{d}_aip_forward"), seed + 2)
+        # packed state arg 0 must be non-negative (its v-slice feeds sqrt);
+        # packed batch arg 1 carries the step counter at element 0.
+        adam_kinds = {0: "nonneg", 1: "tfirst"}
+        write_golden(
+            ppo_update, upd_args, os.path.join(gd, f"{d}_ppo_update"), seed + 3,
+            n_cases=1, arg_kinds=adam_kinds,
+        )
+        write_golden(
+            aip_update, au_args, os.path.join(gd, f"{d}_aip_update"), seed + 4,
+            n_cases=1, arg_kinds=adam_kinds,
+        )
+    print(f"[aot] {d}: policy_params={pdim} aip_params={adim}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--size", choices=["small", "paper"], default="small")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--domains", default="traffic,warehouse")
+    ap.add_argument("--no-goldens", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.domains.split(","))
+    for cfg in domain_cfgs(args.size):
+        if cfg.name in wanted:
+            emit_domain(cfg, args.out_dir, args.seed, not args.no_goldens)
+    print(f"[aot] artifacts written to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Single source of truth for environment interface dimensions.
+
+These constants define the contract between the Rust simulators (Layer 3)
+and the compiled networks (Layers 1-2). aot.py copies them into each
+``artifacts/<domain>.meta`` file and the Rust loader asserts they match its
+own compile-time constants, so drift is caught at startup, not at runtime.
+"""
+
+# ---------------------------------------------------------------- traffic
+# Local state of one intersection: binary occupancy of the 6 visible cells
+# on each of the 4 incoming lanes (24), one-hot light phase (2: NS-green /
+# EW-green), and time-in-phase normalised by the max phase length (1).
+TRAFFIC_LANES = 4
+TRAFFIC_VISIBLE_CELLS = 6
+TRAFFIC_OBS = TRAFFIC_LANES * TRAFFIC_VISIBLE_CELLS + 2 + 1  # 27
+TRAFFIC_ACT = 2  # keep phase / switch phase
+# Influence sources: Bernoulli "a car enters lane l next tick" per lane.
+TRAFFIC_N_SRC = TRAFFIC_LANES  # 4 heads, 1 logit each
+TRAFFIC_U_DIM = TRAFFIC_N_SRC  # AIP output width (probabilities)
+TRAFFIC_AIP_FEAT = TRAFFIC_OBS + TRAFFIC_ACT  # local state ⊕ one-hot action
+
+# -------------------------------------------------------------- warehouse
+# Local state of one robot: own-location bitmap over the 5×5 region (25)
+# plus 12 binary item indicators on the shelf cells.
+WAREHOUSE_REGION = 5
+WAREHOUSE_ITEM_SLOTS = 12
+WAREHOUSE_OBS = WAREHOUSE_REGION * WAREHOUSE_REGION + WAREHOUSE_ITEM_SLOTS  # 37
+WAREHOUSE_ACT = 5  # up / down / left / right / stay
+# Influence sources: for each of the 4 neighbour robots, a categorical over
+# {3 shared shelf cells, "not on the shared edge"}.
+WAREHOUSE_N_HEADS = 4
+WAREHOUSE_N_CLS = 4
+WAREHOUSE_U_DIM = WAREHOUSE_N_HEADS * WAREHOUSE_N_CLS  # 16 probabilities
+WAREHOUSE_AIP_FEAT = WAREHOUSE_OBS + WAREHOUSE_ACT  # 42

@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: fused linear layer  y = act(x @ W + b).
+
+This is the compute hot spot of every network in the system (policy FNNs,
+GRU gate projections, AIP heads). The kernel is tiled for TPU execution —
+block shapes are chosen as multiples of the (8, 128) VPU/MXU lane layout
+whenever the operand dims allow — but is *run* with ``interpret=True``
+because the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+DESIGN.md §Hardware-Adaptation).
+
+Autodiff: ``pallas_call`` is not differentiable, so the public entry point
+``fused_linear`` carries a ``jax.custom_vjp`` whose backward pass is also
+expressed with Pallas matmul kernels:
+
+    dx = g' @ W^T      dW = x^T @ g'      db = sum_B g'
+
+where g' folds the activation derivative into the cotangent.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True is mandatory on CPU; kept as a module switch so a real-TPU
+# build can flip it in one place.
+INTERPRET = True
+
+_LANE = 128  # MXU/VPU minor-dim tile
+_SUBLANE = 8  # second-minor tile for f32
+
+
+def _block(dim: int, pref: int) -> int:
+    """Largest tile ≤ pref that divides dim (falls back to dim itself)."""
+    if dim % pref == 0:
+        return pref
+    for cand in (pref // 2, pref // 4, pref // 8):
+        if cand and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _apply_act(y, act: str):
+    if act == "none":
+        return y
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    # x tile: [bm, K]  w tile: [K, bn]  b tile: [1, bn]  → o tile: [bm, bn]
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _apply_act(y + b_ref[...], act)
+
+
+def _linear_pallas(x, w, b, act: str):
+    bsz, k = x.shape
+    n = w.shape[1]
+    bm = _block(bsz, _SUBLANE)
+    bn = _block(n, _LANE)
+    grid = (bsz // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b.reshape(1, n))
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(a, b):
+    """Pallas tiled matmul c = a @ b (used by the backward pass)."""
+    m, k = a.shape
+    n = b.shape[1]
+    bm = _block(m, _SUBLANE)
+    bn = _block(n, _LANE)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act: str = "none"):
+    """y = act(x @ w + b) as a single Pallas kernel. x:[B,K] w:[K,N] b:[N]."""
+    return _linear_pallas(x, w, b, act)
+
+
+def _fused_linear_fwd(x, w, b, act):
+    y = _linear_pallas(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(act, res, g):
+    x, w, y = res
+    if act == "tanh":
+        g = g * (1.0 - y * y)
+    elif act == "relu":
+        g = g * (y > 0.0).astype(g.dtype)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

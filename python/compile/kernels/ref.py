@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+Every Pallas kernel in this package has a reference implementation here.
+`python/tests/test_kernels.py` sweeps shapes/dtypes with hypothesis and
+asserts allclose between the kernel (interpret=True) and these functions;
+this is the core L1 correctness signal.
+"""
+
+import jax.numpy as jnp
+
+
+def apply_act(y, act: str):
+    """Shared activation table (must match kernels.fused_linear)."""
+    if act == "none":
+        return y
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def linear_ref(x, w, b, act: str = "none"):
+    """y = act(x @ w + b); x:[B,K] w:[K,N] b:[N]."""
+    return apply_act(jnp.dot(x, w) + b[None, :], act)
+
+
+def matmul_ref(a, b):
+    """c = a @ b; a:[M,K] b:[K,N]."""
+    return jnp.dot(a, b)
+
+
+def gru_cell_ref(x, h, wx, wh, bx, bh):
+    """PyTorch-convention GRU cell.
+
+    x:[B,D] h:[B,H] wx:[D,3H] wh:[H,3H] bx,bh:[3H]
+    gates ordered (r, z, n) along the 3H axis.
+    """
+    hid = h.shape[1]
+    gx = jnp.dot(x, wx) + bx[None, :]
+    gh = jnp.dot(h, wh) + bh[None, :]
+    r = 1.0 / (1.0 + jnp.exp(-(gx[:, :hid] + gh[:, :hid])))
+    z = 1.0 / (1.0 + jnp.exp(-(gx[:, hid : 2 * hid] + gh[:, hid : 2 * hid])))
+    n = jnp.tanh(gx[:, 2 * hid :] + r * gh[:, 2 * hid :])
+    return (1.0 - z) * n + z * h

@@ -1,0 +1,380 @@
+"""Layer-2: JAX definitions of every network and training update in DIALS.
+
+Contents
+--------
+* Policy networks: FNN (traffic, paper Table 5) and GRU (warehouse), both
+  exposed through the unified signature
+      policy_step(flat_params, obs[B,D], h[B,H]) -> (logits[B,A], value[B], h'[B,H])
+  (the FNN carries a width-1 dummy hidden state so the Rust driver is
+  domain-agnostic).
+* Approximate Influence Predictors (AIPs, paper §3.2 / App. E.1): FNN with
+  Bernoulli heads (traffic) and GRU with categorical heads (warehouse),
+  unified as
+      aip_forward(flat_params, feat[B,F], h[B,H]) -> (probs[B,U], h'[B,H])
+* PPO clipped-surrogate minibatch update with Adam folded into the graph
+  (paper Table 6 hyperparameters), and AIP cross-entropy updates (Table 4).
+
+All parameters travel as a single flat f32 vector (ravel_pytree) so the
+Rust side only ever holds opaque buffers; aot.py lowers each function once
+per domain to an HLO-text artifact.
+
+Every dense projection and GRU cell routes through the Layer-1 Pallas
+kernels (`kernels.fused_linear`, `kernels.gru_cell`).
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.fused_linear import fused_linear
+from .kernels.gru_cell import gru_cell
+
+
+# --------------------------------------------------------------------------
+# Initialisers
+# --------------------------------------------------------------------------
+
+def _dense_init(key, fan_in, fan_out, scale=None):
+    """Orthogonal-ish (scaled Gaussian) init, zeros bias."""
+    if scale is None:
+        scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    w = scale * jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+    return {"w": w, "b": jnp.zeros((fan_out,), jnp.float32)}
+
+
+def _gru_init(key, feat, hid):
+    k1, k2 = jax.random.split(key)
+    s_x = (1.0 / feat) ** 0.5
+    s_h = (1.0 / hid) ** 0.5
+    return {
+        "wx": s_x * jax.random.normal(k1, (feat, 3 * hid), jnp.float32),
+        "wh": s_h * jax.random.normal(k2, (hid, 3 * hid), jnp.float32),
+        "bx": jnp.zeros((3 * hid,), jnp.float32),
+        "bh": jnp.zeros((3 * hid,), jnp.float32),
+    }
+
+
+def _dense(p, x, act="none"):
+    return fused_linear(x, p["w"], p["b"], act)
+
+
+# --------------------------------------------------------------------------
+# Policy networks
+# --------------------------------------------------------------------------
+
+class PolicySpec(NamedTuple):
+    obs: int
+    act: int
+    recurrent: bool
+    h1: int  # embed size (recurrent) or first hidden (FNN)
+    h2: int  # GRU hidden (recurrent) or second hidden (FNN)
+
+    @property
+    def hstate(self) -> int:
+        return self.h2 if self.recurrent else 1
+
+
+def init_policy(key, spec: PolicySpec):
+    ks = jax.random.split(key, 4)
+    if spec.recurrent:
+        return {
+            "emb": _dense_init(ks[0], spec.obs, spec.h1),
+            "gru": _gru_init(ks[1], spec.h1, spec.h2),
+            "pi": _dense_init(ks[2], spec.h2, spec.act, scale=0.01),
+            "vf": _dense_init(ks[3], spec.h2, 1, scale=1.0),
+        }
+    return {
+        "fc1": _dense_init(ks[0], spec.obs, spec.h1),
+        "fc2": _dense_init(ks[1], spec.h1, spec.h2),
+        "pi": _dense_init(ks[2], spec.h2, spec.act, scale=0.01),
+        "vf": _dense_init(ks[3], spec.h2, 1, scale=1.0),
+    }
+
+
+def policy_apply(params, spec: PolicySpec, obs, h):
+    """Shared forward. obs:[B,D] h:[B,H] -> (logits, value[B], h')."""
+    if spec.recurrent:
+        e = _dense(params["emb"], obs, "tanh")
+        g = params["gru"]
+        h_new = gru_cell(e, h, g["wx"], g["wh"], g["bx"], g["bh"])
+        z = h_new
+    else:
+        z = _dense(params["fc2"], _dense(params["fc1"], obs, "tanh"), "tanh")
+        h_new = jnp.zeros_like(h)
+    logits = _dense(params["pi"], z)
+    value = _dense(params["vf"], z)[:, 0]
+    return logits, value, h_new
+
+
+def make_policy_step(spec: PolicySpec, unravel):
+    """B=1 streaming step, packed output.
+
+    All artifacts return a SINGLE array: the vendored xla runtime returns
+    multi-output programs as one tuple buffer that cannot be re-fed to
+    `execute_b`, so outputs are concatenated and sliced by the Rust caller.
+
+    (flat[P], obs[1,D], h[1,H]) -> packed[A + 1 + H] =
+        [logits | value | h']
+    """
+
+    def step(flat, obs, h):
+        logits, value, h_new = policy_apply(unravel(flat), spec, obs, h)
+        return jnp.concatenate([logits[0], value, h_new[0]])
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# AIP networks
+# --------------------------------------------------------------------------
+
+class AipSpec(NamedTuple):
+    feat: int
+    recurrent: bool
+    hid: int
+    n_heads: int  # number of influence sources
+    n_cls: int  # 1 => Bernoulli head (sigmoid); >1 => softmax head
+
+    @property
+    def u_dim(self) -> int:
+        return self.n_heads * self.n_cls
+
+    @property
+    def hstate(self) -> int:
+        return self.hid if self.recurrent else 1
+
+
+def init_aip(key, spec: AipSpec):
+    ks = jax.random.split(key, 3)
+    out = spec.n_heads * max(spec.n_cls, 1)
+    if spec.recurrent:
+        return {
+            "gru": _gru_init(ks[0], spec.feat, spec.hid),
+            "head": _dense_init(ks[1], spec.hid, out),
+        }
+    return {
+        "fc1": _dense_init(ks[0], spec.feat, spec.hid),
+        "fc2": _dense_init(ks[1], spec.hid, spec.hid),
+        "head": _dense_init(ks[2], spec.hid, out),
+    }
+
+
+def _aip_logits(params, spec: AipSpec, feat, h):
+    if spec.recurrent:
+        g = params["gru"]
+        h_new = gru_cell(feat, h, g["wx"], g["wh"], g["bx"], g["bh"])
+        z = h_new
+    else:
+        z = _dense(params["fc2"], _dense(params["fc1"], feat, "tanh"), "tanh")
+        h_new = jnp.zeros_like(h)
+    return _dense(params["head"], z), h_new
+
+
+def aip_apply(params, spec: AipSpec, feat, h):
+    """feat:[B,F] h:[B,H] -> (probs[B,U], h').
+
+    Bernoulli heads (n_cls == 1): probs[:, k] = P(u_k = 1).
+    Categorical heads: probs reshaped per head and softmaxed.
+    """
+    logits, h_new = _aip_logits(params, spec, feat, h)
+    if spec.n_cls == 1:
+        probs = jax.nn.sigmoid(logits)
+    else:
+        b = feat.shape[0]
+        grouped = logits.reshape(b, spec.n_heads, spec.n_cls)
+        probs = jax.nn.softmax(grouped, axis=-1).reshape(b, spec.u_dim)
+    return probs, h_new
+
+
+def make_aip_forward(spec: AipSpec, unravel):
+    """B=1 streaming forward, packed output (see make_policy_step):
+
+    (flat[P], feat[1,F], h[1,H]) -> packed[U + H] = [probs | h']
+    """
+
+    def fwd(flat, feat, h):
+        probs, h_new = aip_apply(unravel(flat), spec, feat, h)
+        return jnp.concatenate([probs[0], h_new[0]])
+
+    return fwd
+
+
+def aip_ce_loss(params, spec: AipSpec, feats, labels):
+    """Mean cross-entropy of the AIP on a batch.
+
+    FNN AIP: feats:[B,F], labels:[B,n_heads] in {0,1}.
+    GRU AIP: feats:[B,T,F], labels:[B,T,n_heads] class indices (as f32);
+             the GRU is unrolled over T from h0 = 0 (BPTT over the whole
+             sequence, paper App. I "seq. length").
+    """
+    if spec.recurrent:
+        b, t, _ = feats.shape
+        h0 = jnp.zeros((b, spec.hid), jnp.float32)
+
+        def scan_fn(h, xt):
+            logits, h = _aip_logits(params, spec, xt, h)
+            return h, logits
+
+        _, logits_t = jax.lax.scan(scan_fn, h0, jnp.swapaxes(feats, 0, 1))
+        logits = jnp.swapaxes(logits_t, 0, 1)  # [B,T,out]
+        grouped = logits.reshape(b, t, spec.n_heads, spec.n_cls)
+        logp = jax.nn.log_softmax(grouped, axis=-1)
+        idx = labels.astype(jnp.int32)  # [B,T,n_heads]
+        picked = jnp.take_along_axis(logp, idx[..., None], axis=-1)[..., 0]
+        return -jnp.mean(picked)
+    h0 = jnp.zeros((feats.shape[0], 1), jnp.float32)
+    logits, _ = _aip_logits(params, spec, feats, h0)
+    # Numerically-stable BCE with logits.
+    y = labels
+    ce = jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(ce)
+
+
+# --------------------------------------------------------------------------
+# Adam (folded into the update graphs)
+# --------------------------------------------------------------------------
+
+class AdamCfg(NamedTuple):
+    lr: float = 2.5e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-5
+
+
+def adam_step(flat, m, v, g, t, cfg: AdamCfg):
+    """One Adam step on flat vectors. t: f32[1] 1-based step counter."""
+    m = cfg.b1 * m + (1.0 - cfg.b1) * g
+    v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+    t1 = t[0]
+    mhat = m / (1.0 - cfg.b1 ** t1)
+    vhat = v / (1.0 - cfg.b2 ** t1)
+    flat = flat - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+    return flat, m, v
+
+
+# --------------------------------------------------------------------------
+# PPO update (paper Table 6)
+# --------------------------------------------------------------------------
+
+class PpoCfg(NamedTuple):
+    clip_eps: float = 0.1
+    vf_coef: float = 1.0
+    ent_coef: float = 1.0e-2
+    adam: AdamCfg = AdamCfg(lr=2.5e-4)
+    max_grad_norm: float = 0.5
+
+
+def ppo_loss(params, spec: PolicySpec, cfg: PpoCfg, obs, h0, act, old_logp, adv, ret):
+    logits, value, _ = policy_apply(params, spec, obs, h0)
+    logp_all = jax.nn.log_softmax(logits)
+    a = act.astype(jnp.int32)
+    logp = jnp.take_along_axis(logp_all, a[:, None], axis=1)[:, 0]
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps)
+    pg_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+    v_loss = jnp.mean((value - ret) ** 2)
+    probs = jax.nn.softmax(logits)
+    entropy = -jnp.mean(jnp.sum(probs * logp_all, axis=1))
+    total = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
+    return total, (pg_loss, v_loss, entropy)
+
+
+def _clip_by_global_norm(g, max_norm):
+    norm = jnp.sqrt(jnp.sum(g * g))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-8))
+    return g * scale
+
+
+def make_ppo_update(spec: PolicySpec, cfg: PpoCfg, unravel, pdim: int, mb: int):
+    """One minibatch gradient step; epochs × minibatches loop lives in Rust.
+
+    Packed-state convention (single-output, chainable through execute_b):
+
+    (state[3P+4], batch[1 + MB*(D+H+4)]) -> state'[3P+4]
+      state  = [flat | m | v | tail(ignored)]
+      batch  = [t | obs(MB·D) | h0(MB·H) | act(MB) | old_logp(MB)
+                  | adv(MB) | ret(MB)]      (single upload per minibatch)
+      state' = [flat'| m'| v'| metrics(total, pg, vf, entropy)]
+    """
+    d, h = spec.obs, spec.hstate
+
+    def update(state, batch):
+        flat = state[:pdim]
+        m = state[pdim : 2 * pdim]
+        v = state[2 * pdim : 3 * pdim]
+        t = batch[:1]
+        o = 1
+        obs = batch[o : o + mb * d].reshape(mb, d)
+        o += mb * d
+        h0 = batch[o : o + mb * h].reshape(mb, h)
+        o += mb * h
+        act = batch[o : o + mb]
+        old_logp = batch[o + mb : o + 2 * mb]
+        adv = batch[o + 2 * mb : o + 3 * mb]
+        ret = batch[o + 3 * mb : o + 4 * mb]
+
+        def loss_fn(fl):
+            return ppo_loss(
+                unravel(fl), spec, cfg, obs, h0, act, old_logp, adv, ret
+            )
+
+        (total, (pg, vl, ent)), g = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        g = _clip_by_global_norm(g, cfg.max_grad_norm)
+        flat, m, v = adam_step(flat, m, v, g, t, cfg.adam)
+        metrics = jnp.stack([total, pg, vl, ent])
+        return jnp.concatenate([flat, m, v, metrics])
+
+    return update
+
+
+def make_aip_update(spec: AipSpec, adam_cfg: AdamCfg, unravel, adim: int,
+                    batch_shape, label_shape):
+    """Packed-state AIP update (see make_ppo_update):
+
+    (state[3P+1], batch[1 + prod(feats) + prod(labels)]) -> state'[3P+1]
+      batch  = [t | feats | labels]     (single upload per gradient step)
+      state' = [flat' | m' | v' | ce]
+    """
+    import numpy as _np
+
+    f_n = int(_np.prod(batch_shape))
+    l_n = int(_np.prod(label_shape))
+
+    def update(state, batch):
+        flat = state[:adim]
+        m = state[adim : 2 * adim]
+        v = state[2 * adim : 3 * adim]
+        t = batch[:1]
+        feats = batch[1 : 1 + f_n].reshape(batch_shape)
+        labels = batch[1 + f_n : 1 + f_n + l_n].reshape(label_shape)
+
+        def loss_fn(fl):
+            return aip_ce_loss(unravel(fl), spec, feats, labels)
+
+        ce, g = jax.value_and_grad(loss_fn)(flat)
+        flat, m, v = adam_step(flat, m, v, g, t, adam_cfg)
+        return jnp.concatenate([flat, m, v, ce.reshape(1)])
+
+    return update
+
+
+def make_aip_eval(spec: AipSpec, unravel):
+    """(flat, feats, labels) -> ce[1] — used for the Fig. 4 CE-loss curves."""
+
+    def evaluate(flat, feats, labels):
+        return aip_ce_loss(unravel(flat), spec, feats, labels).reshape(1)
+
+    return evaluate
+
+
+# --------------------------------------------------------------------------
+# Flattening helpers
+# --------------------------------------------------------------------------
+
+def flatten_params(params):
+    """-> (flat[P] f32, unravel_fn)."""
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel

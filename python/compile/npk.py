@@ -1,0 +1,43 @@
+"""NPK: the tiny tensor interchange format shared with the Rust side.
+
+Layout (little-endian):
+    magic   4 bytes  b"NPK1"
+    ndim    u32
+    dims    ndim × u32
+    data    prod(dims) × f32
+
+All tensors in the system are f32; integer payloads (actions, class labels)
+are carried as f32 and cast inside the HLO graphs. The Rust reader/writer
+lives in ``rust/src/util/npk.rs``; ``python/tests/test_npk.py`` and the Rust
+unit tests pin the format from both sides.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"NPK1"
+
+
+def write_npk(path, arr) -> None:
+    arr = np.ascontiguousarray(arr, dtype=np.float32)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", arr.ndim))
+        for d in arr.shape:
+            f.write(struct.pack("<I", d))
+        f.write(arr.tobytes())
+
+
+def read_npk(path) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (ndim,) = struct.unpack("<I", f.read(4))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        data = np.frombuffer(f.read(), dtype="<f4")
+    n = int(np.prod(dims)) if dims else 1
+    if data.size != n:
+        raise ValueError(f"{path}: expected {n} elems, got {data.size}")
+    return data.reshape(dims).copy()

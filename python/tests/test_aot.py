@@ -1,0 +1,103 @@
+"""AOT path tests: domain configs, lowering, meta contract, goldens."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, envspec as es, model as M
+from compile.npk import read_npk
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_domain_cfgs_small_vs_paper():
+    small = {c.name: c for c in aot.domain_cfgs("small")}
+    paper = {c.name: c for c in aot.domain_cfgs("paper")}
+    assert set(small) == {"traffic", "warehouse"}
+    # Interface dims must be identical across size presets...
+    for d in small:
+        assert small[d].policy.obs == paper[d].policy.obs
+        assert small[d].policy.act == paper[d].policy.act
+        assert small[d].aip.feat == paper[d].aip.feat
+        assert small[d].u_dim == paper[d].u_dim
+    # ...only capacity changes.
+    assert paper["traffic"].policy.h1 > small["traffic"].policy.h1
+    assert paper["warehouse"].policy.h2 > small["warehouse"].policy.h2
+
+
+def test_envspec_consistency():
+    assert es.TRAFFIC_OBS == 27
+    assert es.TRAFFIC_AIP_FEAT == es.TRAFFIC_OBS + es.TRAFFIC_ACT
+    assert es.WAREHOUSE_OBS == 37
+    assert es.WAREHOUSE_U_DIM == es.WAREHOUSE_N_HEADS * es.WAREHOUSE_N_CLS
+
+
+def test_hlo_text_lowering_roundtrips():
+    """A tiny fn lowers to parseable HLO text with the tuple-return shape."""
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    def _meta(self, domain):
+        meta = {}
+        with open(os.path.join(ART, f"{domain}.meta")) as f:
+            for line in f:
+                k, v = line.strip().split("=")
+                meta[k] = v
+        return meta
+
+    @pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+    def test_meta_matches_envspec(self, domain):
+        meta = self._meta(domain)
+        if domain == "traffic":
+            assert int(meta["obs_dim"]) == es.TRAFFIC_OBS
+            assert int(meta["act_dim"]) == es.TRAFFIC_ACT
+            assert int(meta["u_dim"]) == es.TRAFFIC_U_DIM
+            assert int(meta["policy_recurrent"]) == 0
+        else:
+            assert int(meta["obs_dim"]) == es.WAREHOUSE_OBS
+            assert int(meta["act_dim"]) == es.WAREHOUSE_ACT
+            assert int(meta["u_dim"]) == es.WAREHOUSE_U_DIM
+            assert int(meta["policy_recurrent"]) == 1
+
+    @pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+    def test_init_params_match_meta(self, domain):
+        meta = self._meta(domain)
+        pol = read_npk(os.path.join(ART, f"{domain}_policy_init.npk"))
+        aip = read_npk(os.path.join(ART, f"{domain}_aip_init.npk"))
+        assert pol.shape == (int(meta["policy_params"]),)
+        assert aip.shape == (int(meta["aip_params"]),)
+        assert np.all(np.isfinite(pol)) and np.all(np.isfinite(aip))
+
+    @pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+    def test_all_artifacts_present(self, domain):
+        for suffix in ["policy_step", "ppo_update", "aip_forward",
+                       "aip_update", "aip_eval"]:
+            p = os.path.join(ART, f"{domain}_{suffix}.hlo.txt")
+            assert os.path.isfile(p), p
+            with open(p) as f:
+                assert "HloModule" in f.read(200)
+
+    def test_goldens_selfconsistent(self):
+        """Replaying a golden input through the jax fn reproduces its output."""
+        cfg = [c for c in aot.domain_cfgs("small") if c.name == "traffic"][0]
+        key = jax.random.PRNGKey(0)
+        kp, _ = jax.random.split(key)
+        params = M.init_policy(kp, cfg.policy)
+        flat, unravel = M.flatten_params(params)
+        step = M.make_policy_step(cfg.policy, unravel)
+        gd = os.path.join(ART, "golden", "traffic_policy_step")
+        ins = [read_npk(os.path.join(gd, f"in0_{k}.npk")) for k in range(3)]
+        packed = step(*[jnp.asarray(a) for a in ins])
+        want = read_npk(os.path.join(gd, "out0_0.npk"))
+        np.testing.assert_allclose(np.asarray(packed), want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes; fixed-seed numpy drives the values. This is the
+primary correctness signal for the kernel layer — everything downstream
+(the lowered artifacts, the Rust runtime) composes these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import fused_linear, matmul
+from compile.kernels.gru_cell import gru_cell
+
+DIMS = st.sampled_from([1, 2, 3, 4, 5, 8, 16, 24, 32, 64, 128])
+SMALL = st.sampled_from([1, 2, 3, 4, 8, 16])
+ACTS = st.sampled_from(["none", "tanh", "relu"])
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=SMALL, k=DIMS, n=DIMS, act=ACTS, seed=st.integers(0, 2**16))
+def test_fused_linear_matches_ref(b, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = _rand(rng, b, k), _rand(rng, k, n), _rand(rng, n)
+    got = fused_linear(x, w, bias, act)
+    want = ref.linear_ref(x, w, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=SMALL, k=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=SMALL, d=DIMS, h=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+       seed=st.integers(0, 2**16))
+def test_gru_cell_matches_ref(b, d, h, seed):
+    rng = np.random.default_rng(seed)
+    x, h0 = _rand(rng, b, d), _rand(rng, b, h)
+    wx, wh = _rand(rng, d, 3 * h) * 0.3, _rand(rng, h, 3 * h) * 0.3
+    bx, bh = _rand(rng, 3 * h) * 0.1, _rand(rng, 3 * h) * 0.1
+    got = gru_cell(x, h0, wx, wh, bx, bh)
+    want = ref.gru_cell_ref(x, h0, wx, wh, bx, bh)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_linear_under_jit():
+    rng = np.random.default_rng(0)
+    x, w, b = _rand(rng, 4, 8), _rand(rng, 8, 16), _rand(rng, 16)
+    got = jax.jit(lambda *a: fused_linear(*a, "tanh"))(x, w, b)
+    np.testing.assert_allclose(got, ref.linear_ref(x, w, b, "tanh"), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["none", "tanh", "relu"])
+def test_fused_linear_grad_matches_jnp(act):
+    """custom_vjp backward (Pallas matmuls) vs jax autodiff of the oracle."""
+    rng = np.random.default_rng(1)
+    x, w, b = _rand(rng, 4, 8), _rand(rng, 8, 16), _rand(rng, 16)
+
+    def f_ker(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear(x, w, b, act)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.linear_ref(x, w, b, act)))
+
+    g_ker = jax.grad(f_ker, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gk, gr in zip(g_ker, g_ref):
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+
+
+def test_gru_cell_grad_matches_jnp():
+    rng = np.random.default_rng(2)
+    b_, d, h = 3, 6, 5
+    args = (
+        _rand(rng, b_, d), _rand(rng, b_, h),
+        _rand(rng, d, 3 * h) * 0.3, _rand(rng, h, 3 * h) * 0.3,
+        _rand(rng, 3 * h) * 0.1, _rand(rng, 3 * h) * 0.1,
+    )
+
+    def f_ker(*a):
+        return jnp.sum(jnp.cos(gru_cell(*a)))
+
+    def f_ref(*a):
+        return jnp.sum(jnp.cos(ref.gru_cell_ref(*a)))
+
+    g_ker = jax.grad(f_ker, argnums=tuple(range(6)))(*args)
+    g_ref = jax.grad(f_ref, argnums=tuple(range(6)))(*args)
+    for gk, gr in zip(g_ker, g_ref):
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+
+
+def test_gru_saturation_extremes():
+    """Gates saturate cleanly: huge positive z ⇒ h' ≈ h."""
+    b_, d, h = 2, 3, 4
+    x = np.zeros((b_, d), np.float32)
+    h0 = np.full((b_, h), 0.7, np.float32)
+    wx = np.zeros((d, 3 * h), np.float32)
+    wh = np.zeros((h, 3 * h), np.float32)
+    bx = np.zeros(3 * h, np.float32)
+    bx[h : 2 * h] = 50.0  # z -> 1
+    bh = np.zeros(3 * h, np.float32)
+    out = gru_cell(x, h0, wx, wh, bx, bh)
+    np.testing.assert_allclose(out, h0, atol=1e-6)

@@ -1,0 +1,214 @@
+"""L2 correctness: policies, AIPs, PPO and AIP updates.
+
+Checks shapes, probability invariants, loss values against hand-rolled
+references, and that Adam-in-graph actually descends.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+TRAFFIC_POL = M.PolicySpec(27, 2, False, 16, 16)
+WARE_POL = M.PolicySpec(37, 5, True, 16, 16)
+TRAFFIC_AIP = M.AipSpec(29, False, 16, 4, 1)
+WARE_AIP = M.AipSpec(42, True, 16, 4, 4)
+
+
+def _flat_policy(spec, seed=0):
+    params = M.init_policy(jax.random.PRNGKey(seed), spec)
+    return M.flatten_params(params)
+
+
+def _flat_aip(spec, seed=0):
+    params = M.init_aip(jax.random.PRNGKey(seed), spec)
+    return M.flatten_params(params)
+
+
+def _unpack_step(spec, packed):
+    """Split the packed [logits|value|h'] artifact output."""
+    a = spec.act
+    return packed[:a], packed[a], packed[a + 1 :]
+
+
+@pytest.mark.parametrize("spec", [TRAFFIC_POL, WARE_POL], ids=["fnn", "gru"])
+def test_policy_step_shapes(spec):
+    flat, unravel = _flat_policy(spec)
+    step = M.make_policy_step(spec, unravel)
+    obs = jnp.ones((1, spec.obs))
+    h = jnp.zeros((1, spec.hstate))
+    packed = step(flat, obs, h)
+    assert packed.shape == (spec.act + 1 + spec.hstate,)
+    logits, value, h2 = _unpack_step(spec, packed)
+    assert logits.shape == (spec.act,)
+    assert h2.shape == (spec.hstate,)
+    assert np.all(np.isfinite(np.asarray(packed)))
+    assert np.isfinite(float(value))
+
+
+def test_fnn_policy_ignores_hidden_state():
+    spec = TRAFFIC_POL
+    flat, unravel = _flat_policy(spec)
+    step = M.make_policy_step(spec, unravel)
+    obs = jnp.ones((1, spec.obs))
+    p1 = step(flat, obs, jnp.zeros((1, 1)))
+    p2 = step(flat, obs, jnp.full((1, 1), 9.0))
+    np.testing.assert_allclose(p1[: spec.act + 1], p2[: spec.act + 1])
+
+
+def test_gru_policy_state_carries_information():
+    spec = WARE_POL
+    flat, unravel = _flat_policy(spec)
+    step = M.make_policy_step(spec, unravel)
+    obs = jnp.ones((1, spec.obs))
+    _, _, h1 = _unpack_step(spec, step(flat, obs, jnp.zeros((1, spec.hstate))))
+    l_a, _, _ = _unpack_step(spec, step(flat, obs, h1[None, :]))
+    l_b, _, _ = _unpack_step(spec, step(flat, obs, jnp.zeros((1, spec.hstate))))
+    assert not np.allclose(l_a, l_b)
+
+
+@pytest.mark.parametrize("spec", [TRAFFIC_AIP, WARE_AIP], ids=["fnn", "gru"])
+def test_aip_forward_probabilities(spec):
+    flat, unravel = _flat_aip(spec)
+    fwd = M.make_aip_forward(spec, unravel)
+    feat = jnp.ones((1, spec.feat)) * 0.3
+    h = jnp.zeros((1, spec.hstate))
+    packed = fwd(flat, feat, h)  # [probs | h']
+    assert packed.shape == (spec.u_dim + spec.hstate,)
+    p = np.asarray(packed[: spec.u_dim])
+    assert np.all(p >= 0) and np.all(p <= 1)
+    if spec.n_cls > 1:
+        groups = p.reshape(spec.n_heads, spec.n_cls)
+        np.testing.assert_allclose(groups.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_ppo_loss_matches_manual():
+    spec = TRAFFIC_POL
+    cfg = M.PpoCfg()
+    flat, unravel = _flat_policy(spec)
+    params = unravel(flat)
+    rng = np.random.default_rng(0)
+    mb = 8
+    obs = jnp.asarray(rng.standard_normal((mb, spec.obs)), jnp.float32)
+    h0 = jnp.zeros((mb, 1))
+    act = jnp.asarray(rng.integers(0, spec.act, mb), jnp.float32)
+    old_logp = jnp.asarray(rng.standard_normal(mb) * 0.1 - 0.7, jnp.float32)
+    adv = jnp.asarray(rng.standard_normal(mb), jnp.float32)
+    ret = jnp.asarray(rng.standard_normal(mb), jnp.float32)
+
+    total, (pg, vl, ent) = M.ppo_loss(params, spec, cfg, obs, h0, act, old_logp, adv, ret)
+
+    logits, value, _ = M.policy_apply(params, spec, obs, h0)
+    logp_all = np.asarray(jax.nn.log_softmax(logits))
+    a = np.asarray(act, np.int32)
+    logp = logp_all[np.arange(mb), a]
+    ratio = np.exp(logp - np.asarray(old_logp))
+    clipped = np.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps)
+    pg_m = -np.mean(np.minimum(ratio * np.asarray(adv), clipped * np.asarray(adv)))
+    vl_m = np.mean((np.asarray(value) - np.asarray(ret)) ** 2)
+    probs = np.exp(logp_all)
+    ent_m = -np.mean(np.sum(probs * logp_all, axis=1))
+    np.testing.assert_allclose(pg, pg_m, rtol=1e-5)
+    np.testing.assert_allclose(vl, vl_m, rtol=1e-5)
+    np.testing.assert_allclose(ent, ent_m, rtol=1e-5)
+    np.testing.assert_allclose(total, pg_m + cfg.vf_coef * vl_m - cfg.ent_coef * ent_m, rtol=1e-5)
+
+
+@pytest.mark.parametrize("spec", [TRAFFIC_POL, WARE_POL], ids=["fnn", "gru"])
+def test_ppo_update_descends(spec):
+    cfg = M.PpoCfg()
+    flat, unravel = _flat_policy(spec)
+    pdim = flat.shape[0]
+    mb = 16
+    upd = jax.jit(M.make_ppo_update(spec, cfg, unravel, pdim, mb))
+    rng = np.random.default_rng(1)
+    obs = jnp.asarray(rng.standard_normal((mb, spec.obs)), jnp.float32)
+    h0 = jnp.zeros((mb, spec.hstate))
+    act = jnp.asarray(rng.integers(0, spec.act, mb), jnp.float32)
+    # old_logp consistent with the current policy (ratio starts at 1).
+    logits, _, _ = M.policy_apply(unravel(flat), spec, obs, h0)
+    logp_all = jax.nn.log_softmax(logits)
+    old_logp = jnp.take_along_axis(logp_all, act.astype(jnp.int32)[:, None], 1)[:, 0]
+    adv = jnp.asarray(rng.standard_normal(mb), jnp.float32)
+    ret = jnp.asarray(rng.standard_normal(mb), jnp.float32)
+
+    # packed [flat|m|v|metrics] state + packed [t|obs|h|act|logp|adv|ret] batch
+    state = jnp.concatenate([flat, jnp.zeros(2 * pdim + 4, jnp.float32)])
+    losses = []
+    for t in range(1, 15):
+        batch = jnp.concatenate([
+            jnp.asarray([float(t)]), obs.ravel(), h0.ravel(),
+            act, old_logp, adv, ret,
+        ])
+        state = upd(state, batch)
+        losses.append(float(state[3 * pdim]))
+    assert losses[-1] < losses[0], f"no descent: {losses[0]} -> {losses[-1]}"
+    assert np.all(np.isfinite(np.asarray(state)))
+
+
+@pytest.mark.parametrize("spec,seq", [(TRAFFIC_AIP, 1), (WARE_AIP, 5)], ids=["fnn", "gru"])
+def test_aip_update_descends(spec, seq):
+    flat, unravel = _flat_aip(spec)
+    adim = flat.shape[0]
+    rng = np.random.default_rng(2)
+    b = 16
+    if spec.recurrent:
+        fshape, lshape = (b, seq, spec.feat), (b, seq, spec.n_heads)
+        feats = jnp.asarray(rng.standard_normal(fshape), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, spec.n_cls, lshape), jnp.float32)
+    else:
+        fshape, lshape = (b, spec.feat), (b, spec.n_heads)
+        feats = jnp.asarray(rng.standard_normal(fshape), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 2, lshape), jnp.float32)
+    upd = jax.jit(M.make_aip_update(spec, M.AdamCfg(lr=3e-3), unravel, adim, fshape, lshape))
+    state = jnp.concatenate([flat, jnp.zeros(2 * adim + 1, jnp.float32)])
+    ces = []
+    for t in range(1, 30):
+        batch = jnp.concatenate([jnp.asarray([float(t)]), feats.ravel(), labels.ravel()])
+        state = upd(state, batch)
+        ces.append(float(state[3 * adim]))
+    assert ces[-1] < ces[0], f"CE did not descend: {ces[0]} -> {ces[-1]}"
+
+
+def test_aip_ce_loss_matches_manual_bernoulli():
+    spec = TRAFFIC_AIP
+    flat, unravel = _flat_aip(spec)
+    params = unravel(flat)
+    rng = np.random.default_rng(3)
+    b = 8
+    feats = jnp.asarray(rng.standard_normal((b, spec.feat)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 2, (b, spec.n_heads)), jnp.float32)
+    ce = float(M.aip_ce_loss(params, spec, feats, labels))
+    probs, _ = M.aip_apply(params, spec, feats, jnp.zeros((b, 1)))
+    p = np.clip(np.asarray(probs), 1e-7, 1 - 1e-7)
+    y = np.asarray(labels)
+    manual = -np.mean(y * np.log(p) + (1 - y) * np.log(1 - p))
+    np.testing.assert_allclose(ce, manual, rtol=1e-4)
+
+
+def test_adam_step_matches_reference():
+    cfg = M.AdamCfg(lr=1e-2)
+    flat = jnp.asarray([1.0, -2.0, 3.0])
+    m = jnp.zeros(3)
+    v = jnp.zeros(3)
+    g = jnp.asarray([0.5, -0.5, 1.0])
+    f2, m2, v2 = M.adam_step(flat, m, v, g, jnp.asarray([1.0]), cfg)
+    m_ref = 0.1 * np.asarray(g)
+    v_ref = 0.001 * np.asarray(g) ** 2
+    mh = m_ref / (1 - 0.9)
+    vh = v_ref / (1 - 0.999)
+    f_ref = np.asarray(flat) - cfg.lr * mh / (np.sqrt(vh) + cfg.eps)
+    np.testing.assert_allclose(f2, f_ref, rtol=1e-5)
+    np.testing.assert_allclose(m2, m_ref, rtol=1e-6)
+    np.testing.assert_allclose(v2, v_ref, rtol=1e-6)
+
+
+def test_grad_clip_limits_norm():
+    g = jnp.full((100,), 10.0)
+    clipped = M._clip_by_global_norm(g, 0.5)
+    assert abs(float(jnp.sqrt(jnp.sum(clipped**2))) - 0.5) < 1e-4
+    g_small = jnp.full((4,), 1e-3)
+    np.testing.assert_allclose(M._clip_by_global_norm(g_small, 0.5), g_small, rtol=1e-5)

@@ -1,0 +1,49 @@
+"""Pin the NPK tensor format from the Python side (Rust pins it too)."""
+
+import numpy as np
+import pytest
+
+from compile.npk import MAGIC, read_npk, write_npk
+
+
+def test_roundtrip(tmp_path):
+    arr = np.arange(24, dtype=np.float32).reshape(2, 3, 4) * 0.5
+    p = tmp_path / "t.npk"
+    write_npk(p, arr)
+    got = read_npk(p)
+    assert got.shape == (2, 3, 4)
+    np.testing.assert_array_equal(got, arr)
+
+
+def test_scalar_and_1d(tmp_path):
+    p = tmp_path / "v.npk"
+    write_npk(p, np.asarray([1.5, -2.0], np.float32))
+    np.testing.assert_array_equal(read_npk(p), [1.5, -2.0])
+
+
+def test_exact_byte_layout(tmp_path):
+    p = tmp_path / "b.npk"
+    write_npk(p, np.asarray([[1.0]], np.float32))
+    raw = p.read_bytes()
+    assert raw[:4] == MAGIC
+    assert raw[4:8] == (2).to_bytes(4, "little")
+    assert raw[8:12] == (1).to_bytes(4, "little")
+    assert raw[12:16] == (1).to_bytes(4, "little")
+    assert raw[16:20] == np.float32(1.0).tobytes()
+    assert len(raw) == 20
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "x.npk"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        read_npk(p)
+
+
+def test_truncated_rejected(tmp_path):
+    p = tmp_path / "t.npk"
+    write_npk(p, np.ones(10, np.float32))
+    raw = p.read_bytes()
+    p.write_bytes(raw[:-4])
+    with pytest.raises(ValueError):
+        read_npk(p)

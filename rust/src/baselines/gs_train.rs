@@ -1,0 +1,119 @@
+//! The GS baseline: all agents learn simultaneously on the one global
+//! simulator with independent PPO (IPPO, paper §5.1 condition 1).
+//!
+//! Every env step requires simulating the WHOLE networked system, so the
+//! per-agent cost grows with the number of agents — the scaling wall that
+//! motivates DIALS. The sim stepping is inherently sequential; runtime
+//! tables therefore report wall-clock = critical path for this baseline.
+
+use anyhow::Result;
+
+use crate::config::SimMode;
+use crate::coordinator::{evaluate_on_gs, make_global_sim, AgentWorker, DialsCoordinator};
+use crate::ppo::PpoTrainer;
+use crate::util::metrics::{CurvePoint, RunLog};
+use crate::util::rng::Pcg64;
+use crate::util::timer::PhaseTimers;
+
+pub struct GsTrainer {
+    coord: DialsCoordinator,
+}
+
+impl GsTrainer {
+    pub fn new(coord: DialsCoordinator) -> Self {
+        GsTrainer { coord }
+    }
+
+    /// Joint IPPO training for `cfg.total_steps` GS steps.
+    pub fn run(&self) -> Result<RunLog> {
+        let cfg = &self.coord.cfg;
+        let arts = self.coord.artifacts().clone();
+        // Workers carry policy/buffer state; AIPs and local sims are unused.
+        let mut workers: Vec<AgentWorker> = self.coord.make_workers(cfg.seed);
+        let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+        let mut rng = Pcg64::new(cfg.seed, 4321);
+        let trainer = PpoTrainer::new(cfg.ppo.clone());
+        let n = cfg.n_agents();
+
+        let mut timers = PhaseTimers::new();
+        let mut log = RunLog { label: SimMode::GlobalSim.label().to_string(), ..Default::default() };
+
+        let r0 = timers.time("eval", || {
+            evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+        })?;
+        log.eval_curve.push(CurvePoint { step: 0, value: r0 });
+
+        let mut obs = vec![vec![0.0f32; arts.spec.obs_dim]; n];
+        let mut actions = vec![0usize; n];
+        let eval_every = if cfg.eval_every == 0 { cfg.total_steps } else { cfg.eval_every };
+
+        let t_train = std::time::Instant::now();
+        let mut ep_step = 0usize;
+        gs.reset(&mut rng);
+        for w in workers.iter_mut() {
+            w.policy.reset_episode();
+        }
+        for step in 0..cfg.total_steps {
+            // joint action from all policies
+            let mut outs = Vec::with_capacity(n);
+            for (i, w) in workers.iter_mut().enumerate() {
+                gs.observe(i, &mut obs[i]);
+                let (a, logp, o) = w.policy.act(&arts, &obs[i], &mut rng)?;
+                actions[i] = a;
+                outs.push((a, logp, o));
+            }
+            let rewards = gs.step(&actions, &mut rng);
+            ep_step += 1;
+            let done = ep_step >= cfg.horizon;
+
+            for (i, w) in workers.iter_mut().enumerate() {
+                let (a, logp, o) = &outs[i];
+                w.buffer.push(&obs[i], &o.h_before, *a, *logp, rewards[i], o.value, done);
+            }
+            if done {
+                gs.reset(&mut rng);
+                for w in workers.iter_mut() {
+                    w.policy.reset_episode();
+                }
+                ep_step = 0;
+            }
+
+            // per-agent PPO updates when rollouts fill (simultaneous learning)
+            if workers[0].buffer.is_full() {
+                for (i, w) in workers.iter_mut().enumerate() {
+                    let last_value = if done {
+                        0.0
+                    } else {
+                        gs.observe(i, &mut obs[i]);
+                        w.policy.peek_value(&arts, &obs[i])?
+                    };
+                    trainer.update(&arts, &mut w.policy.net, &w.buffer, last_value, &mut w.rng)?;
+                    w.buffer.clear();
+                }
+            }
+
+            if (step + 1) % eval_every == 0 || step + 1 == cfg.total_steps {
+                timers.add("agent_train", t_train.elapsed().as_secs_f64() - timers.get("agent_train") - timers.get("eval_gap"));
+                let ret = timers.time("eval", || {
+                    evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+                })?;
+                timers.add("eval_gap", timers.get("eval") - timers.get("eval_gap"));
+                log.eval_curve.push(CurvePoint { step: step + 1, value: ret });
+                // training episode state was clobbered by eval; restart episode
+                gs.reset(&mut rng);
+                for w in workers.iter_mut() {
+                    w.policy.reset_episode();
+                }
+                ep_step = 0;
+            }
+        }
+
+        log.final_return = log.eval_curve.last().map(|p| p.value).unwrap_or(0.0);
+        log.agent_train_seconds = timers.get("agent_train");
+        log.influence_seconds = 0.0;
+        log.wall_seconds = timers.get("agent_train");
+        // the GS rollout is a single sequential process: CP == wall
+        log.critical_path_seconds = log.wall_seconds;
+        Ok(log)
+    }
+}

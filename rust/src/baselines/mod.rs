@@ -1,0 +1,9 @@
+//! Baselines from the paper's evaluation: joint IPPO training on the
+//! global simulator (the "GS" condition) and the hand-coded policies
+//! (Fig. 3 dashed lines).
+
+mod gs_train;
+mod scripted;
+
+pub use gs_train::GsTrainer;
+pub use scripted::{fixed_cycle_traffic, greedy_warehouse, scripted_return};

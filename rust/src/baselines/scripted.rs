@@ -1,0 +1,132 @@
+//! Hand-coded policies (Fig. 3 dashed-black lines).
+//!
+//! Traffic: fixed-cycle light controllers (the paper used cycles tuned by
+//! Wu et al. 2017; here the cycle length is a parameter, default 10).
+//! Warehouse: follow the shortest path toward the oldest item in the
+//! agent's region (paper App. — exactly this heuristic).
+
+use crate::config::Domain;
+use crate::coordinator::evaluate_scripted;
+use crate::sim::traffic::TrafficGlobalSim;
+use crate::sim::warehouse::WarehouseGlobalSim;
+use crate::util::rng::Pcg64;
+
+/// Fixed-cycle controller: switch the phase every `period` ticks.
+pub fn fixed_cycle_traffic(period: u32) -> impl FnMut(usize, &TrafficGlobalSim) -> usize {
+    move |agent, gs| {
+        let light = gs.light(agent);
+        if light.time_in_phase >= period {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+/// Greedy shortest-path-to-oldest-item policy.
+/// Moves row-first toward the oldest active item; stays if none.
+pub fn greedy_warehouse() -> impl FnMut(usize, &WarehouseGlobalSim) -> usize {
+    |agent, gs| {
+        let (r, c) = gs.robot_local(agent);
+        match gs.oldest_item_slot(agent) {
+            None => 4, // stay
+            Some((tr, tc)) => {
+                if r < tr {
+                    1 // down
+                } else if r > tr {
+                    0 // up
+                } else if c < tc {
+                    3 // right
+                } else if c > tc {
+                    2 // left
+                } else {
+                    4 // on it (collect happened on arrival; stay)
+                }
+            }
+        }
+    }
+}
+
+/// Mean per-agent return of the domain's scripted policy on the GS.
+pub fn scripted_return(
+    domain: Domain,
+    side: usize,
+    episodes: usize,
+    horizon: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Pcg64::new(seed, 999);
+    match domain {
+        Domain::Traffic => {
+            let mut gs = TrafficGlobalSim::new(side);
+            evaluate_scripted(&mut gs, fixed_cycle_traffic(10), episodes, horizon, &mut rng)
+        }
+        Domain::Warehouse => {
+            let mut gs = WarehouseGlobalSim::new(side);
+            evaluate_scripted(&mut gs, greedy_warehouse(), episodes, horizon, &mut rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GlobalSim;
+
+    #[test]
+    fn fixed_cycle_switches_on_period() {
+        let mut gs = TrafficGlobalSim::new(1);
+        let mut rng = Pcg64::seed(0);
+        gs.reset(&mut rng);
+        let mut policy = fixed_cycle_traffic(3);
+        let mut switches = 0;
+        for _ in 0..20 {
+            let a = policy(0, &gs);
+            if a == 1 {
+                switches += 1;
+            }
+            gs.step(&[a], &mut rng);
+        }
+        assert!(switches >= 4, "expected periodic switching, got {switches}");
+    }
+
+    #[test]
+    fn greedy_warehouse_moves_toward_items() {
+        let mut gs = WarehouseGlobalSim::with_spawn(1, 0.0);
+        let mut rng = Pcg64::seed(1);
+        gs.reset(&mut rng);
+        // place an item, then verify the robot reaches it within 8 steps
+        // slot 4 = E edge middle = local (2,4)
+        // (private access via test-only helper: re-derive through spawn)
+        let mut policy = greedy_warehouse();
+        // force an item by stepping a high-spawn sim instead
+        let mut gs = WarehouseGlobalSim::with_spawn(1, 1.0);
+        gs.reset(&mut rng);
+        gs.step(&[4], &mut rng); // fills every slot
+        let mut collected = 0.0;
+        for _ in 0..12 {
+            let a = policy(0, &gs);
+            collected += gs.step(&[a], &mut rng)[0];
+        }
+        assert!(collected > 0.0, "greedy policy never collected an item");
+    }
+
+    #[test]
+    fn scripted_return_is_finite_and_positive() {
+        let r_t = scripted_return(Domain::Traffic, 2, 2, 40, 0);
+        assert!(r_t.is_finite() && r_t > 0.0, "traffic scripted return {r_t}");
+        let r_w = scripted_return(Domain::Warehouse, 2, 2, 40, 0);
+        assert!(r_w.is_finite() && r_w >= 0.0, "warehouse scripted return {r_w}");
+    }
+
+    #[test]
+    fn scripted_beats_starvation_traffic() {
+        // fixed-cycle must outperform "never switch" (EW lanes starve)
+        let mut rng = Pcg64::seed(3);
+        let mut gs = TrafficGlobalSim::new(2);
+        let fixed = evaluate_scripted(&mut gs, fixed_cycle_traffic(10), 4, 80, &mut rng);
+        let mut gs2 = TrafficGlobalSim::new(2);
+        let starve = evaluate_scripted(&mut gs2, |_, _| 0usize, 4, 80, &mut rng);
+        assert!(fixed > starve, "fixed cycle {fixed} vs starvation {starve}");
+    }
+}

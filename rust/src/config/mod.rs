@@ -1,0 +1,315 @@
+//! Experiment configuration system.
+//!
+//! The offline vendor ships no `serde`/`toml`, so DIALS carries a TOML-subset
+//! parser (`parse`): `[section]` headers, `key = value` with strings, bools,
+//! integers, floats, and flat arrays. Typed configs (`ExperimentConfig`) are
+//! built on top with defaulting + validation; `configs/*.toml` hold the
+//! paper's hyperparameter tables (App. I).
+
+mod toml_lite;
+
+pub use toml_lite::{parse, Value};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Which simulator trains the agents (paper §5.1 conditions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimMode {
+    /// Joint training on the global simulator (IPPO baseline).
+    GlobalSim,
+    /// Distributed influence-augmented local simulators, AIPs retrained
+    /// every `aip_train_freq` timesteps.
+    Dials,
+    /// DIALS with the AIPs left at their random initialisation.
+    UntrainedDials,
+}
+
+impl SimMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gs" | "global" => SimMode::GlobalSim,
+            "dials" => SimMode::Dials,
+            "untrained-dials" | "untrained" => SimMode::UntrainedDials,
+            other => bail!("unknown sim mode {other:?} (gs|dials|untrained-dials)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimMode::GlobalSim => "GS",
+            SimMode::Dials => "DIALS",
+            SimMode::UntrainedDials => "untrained-DIALS",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    Traffic,
+    Warehouse,
+}
+
+impl Domain {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "traffic" => Domain::Traffic,
+            "warehouse" => Domain::Warehouse,
+            other => bail!("unknown domain {other:?} (traffic|warehouse)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Traffic => "traffic",
+            Domain::Warehouse => "warehouse",
+        }
+    }
+}
+
+/// PPO hyperparameters that live on the Rust side (paper Table 6). The
+/// clip/vf/entropy coefficients are baked into the update artifact; these
+/// control the rollout/minibatch loop that Rust owns.
+#[derive(Clone, Debug)]
+pub struct PpoConfig {
+    /// Env steps collected per policy update (per agent).
+    pub rollout_len: usize,
+    /// Minibatch rows per gradient step (must match the artifact).
+    pub minibatch: usize,
+    /// Optimisation epochs over each rollout.
+    pub epochs: usize,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig { rollout_len: 128, minibatch: 32, epochs: 3, gamma: 0.99, gae_lambda: 0.95 }
+    }
+}
+
+/// Full experiment description; one of these drives every run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub domain: Domain,
+    pub mode: SimMode,
+    /// Grid side; the number of agents is `grid_side^2` (paper: 2,5,7,10).
+    pub grid_side: usize,
+    /// Total env timesteps each agent is trained for.
+    pub total_steps: usize,
+    /// AIP retraining frequency F in env timesteps (paper Fig. 4).
+    pub aip_train_freq: usize,
+    /// ALSH/influence samples collected from the GS per AIP retrain
+    /// (paper §5.3: 80K traffic / 10K warehouse; scaled down by default).
+    pub aip_dataset: usize,
+    /// Gradient steps per AIP retrain.
+    pub aip_epochs: usize,
+    /// Evaluate on the GS every this many timesteps (0 = only at the end).
+    pub eval_every: usize,
+    /// Episodes per evaluation.
+    pub eval_episodes: usize,
+    /// Episode horizon.
+    pub horizon: usize,
+    pub seed: u64,
+    pub ppo: PpoConfig,
+    /// Directory with the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Worker threads for the parallel phases (0 = one per agent).
+    pub threads: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            domain: Domain::Traffic,
+            mode: SimMode::Dials,
+            grid_side: 2,
+            total_steps: 4_000,
+            aip_train_freq: 1_000,
+            aip_dataset: 1_000,
+            aip_epochs: 30,
+            eval_every: 1_000,
+            eval_episodes: 4,
+            horizon: 100,
+            seed: 0,
+            ppo: PpoConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+            threads: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn n_agents(&self) -> usize {
+        self.grid_side * self.grid_side
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.grid_side == 0 {
+            bail!("grid_side must be >= 1");
+        }
+        if self.horizon == 0 || self.total_steps == 0 {
+            bail!("horizon and total_steps must be > 0");
+        }
+        if self.ppo.rollout_len % self.ppo.minibatch != 0 {
+            bail!(
+                "rollout_len ({}) must be a multiple of minibatch ({})",
+                self.ppo.rollout_len, self.ppo.minibatch
+            );
+        }
+        if self.aip_train_freq == 0 {
+            bail!("aip_train_freq must be > 0 (use total_steps for train-once)");
+        }
+        Ok(())
+    }
+
+    /// Build from a parsed TOML-subset document, applying defaults.
+    pub fn from_doc(doc: &BTreeMap<String, BTreeMap<String, Value>>) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let empty = BTreeMap::new();
+        let exp = doc.get("experiment").unwrap_or(&empty);
+        if let Some(v) = exp.get("domain") {
+            cfg.domain = Domain::parse(v.as_str()?)?;
+        }
+        if let Some(v) = exp.get("mode") {
+            cfg.mode = SimMode::parse(v.as_str()?)?;
+        }
+        macro_rules! get_usize {
+            ($tbl:expr, $key:literal, $field:expr) => {
+                if let Some(v) = $tbl.get($key) {
+                    $field = v.as_int()? as usize;
+                }
+            };
+        }
+        get_usize!(exp, "grid_side", cfg.grid_side);
+        get_usize!(exp, "total_steps", cfg.total_steps);
+        get_usize!(exp, "aip_train_freq", cfg.aip_train_freq);
+        get_usize!(exp, "aip_dataset", cfg.aip_dataset);
+        get_usize!(exp, "aip_epochs", cfg.aip_epochs);
+        get_usize!(exp, "eval_every", cfg.eval_every);
+        get_usize!(exp, "eval_episodes", cfg.eval_episodes);
+        get_usize!(exp, "horizon", cfg.horizon);
+        get_usize!(exp, "threads", cfg.threads);
+        if let Some(v) = exp.get("seed") {
+            cfg.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = exp.get("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        let ppo = doc.get("ppo").unwrap_or(&empty);
+        get_usize!(ppo, "rollout_len", cfg.ppo.rollout_len);
+        get_usize!(ppo, "minibatch", cfg.ppo.minibatch);
+        get_usize!(ppo, "epochs", cfg.ppo.epochs);
+        if let Some(v) = ppo.get("gamma") {
+            cfg.ppo.gamma = v.as_float()? as f32;
+        }
+        if let Some(v) = ppo.get("gae_lambda") {
+            cfg.ppo.gae_lambda = v.as_float()? as f32;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let doc = parse(&text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Build from optional `--config FILE` plus CLI flag overrides
+    /// (the `dials train` surface; also used by tests).
+    pub fn from_cli(args: &crate::util::cli::Args) -> Result<Self> {
+        let mut cfg = match args.get("config") {
+            Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+            None => ExperimentConfig::default(),
+        };
+        if let Some(d) = args.get("domain") {
+            cfg.domain = Domain::parse(d)?;
+        }
+        if let Some(m) = args.get("mode") {
+            cfg.mode = SimMode::parse(m)?;
+        }
+        cfg.grid_side = args.get_usize("grid-side", cfg.grid_side)?;
+        cfg.total_steps = args.get_usize("total-steps", cfg.total_steps)?;
+        cfg.aip_train_freq = args.get_usize("aip-freq", cfg.aip_train_freq)?;
+        cfg.aip_dataset = args.get_usize("aip-dataset", cfg.aip_dataset)?;
+        cfg.aip_epochs = args.get_usize("aip-epochs", cfg.aip_epochs)?;
+        cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+        cfg.eval_episodes = args.get_usize("eval-episodes", cfg.eval_episodes)?;
+        cfg.horizon = args.get_usize("horizon", cfg.horizon)?;
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+        cfg.threads = args.get_usize("threads", cfg.threads)?;
+        if let Some(dir) = args.get("artifacts") {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = parse(
+            "[experiment]\ndomain = \"warehouse\"\nmode = \"gs\"\ngrid_side = 5\n\
+             seed = 7\n[ppo]\nrollout_len = 64\ngamma = 0.9\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.domain, Domain::Warehouse);
+        assert_eq!(cfg.mode, SimMode::GlobalSim);
+        assert_eq!(cfg.grid_side, 5);
+        assert_eq!(cfg.n_agents(), 25);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.ppo.rollout_len, 64);
+        assert!((cfg.ppo.gamma - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rollout_must_divide_minibatch() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.ppo.rollout_len = 100;
+        cfg.ppo.minibatch = 32;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_cli_overrides_and_validates() {
+        let args = crate::util::cli::Args::parse(
+            ["--domain", "warehouse", "--mode", "gs", "--grid-side", "3", "--seed", "9"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_cli(&args).unwrap();
+        assert_eq!(cfg.domain, Domain::Warehouse);
+        assert_eq!(cfg.mode, SimMode::GlobalSim);
+        assert_eq!(cfg.n_agents(), 9);
+        assert_eq!(cfg.seed, 9);
+        // invalid override rejected
+        let bad = crate::util::cli::Args::parse(
+            ["--grid-side", "0"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_cli(&bad).is_err());
+    }
+
+    #[test]
+    fn mode_labels() {
+        assert_eq!(SimMode::parse("gs").unwrap().label(), "GS");
+        assert_eq!(SimMode::parse("dials").unwrap().label(), "DIALS");
+        assert_eq!(SimMode::parse("untrained").unwrap().label(), "untrained-DIALS");
+        assert!(SimMode::parse("bogus").is_err());
+    }
+}

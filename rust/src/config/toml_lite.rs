@@ -1,0 +1,241 @@
+//! Minimal TOML-subset parser (no serde/toml crates in the offline vendor).
+//!
+//! Supported: `[section]` headers, `key = value` pairs, `#` comments,
+//! strings (double-quoted, `\"`/`\\`/`\n`/`\t` escapes), booleans, integers,
+//! floats, and flat arrays of those. Keys outside a section land in `""`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(a) => Ok(a),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: unterminated section header: {raw:?}", lineno + 1);
+            };
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`: {raw:?}", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.entry(section.clone()).or_default().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        return parse_string(rest);
+    }
+    if s.starts_with('[') {
+        return parse_array(s);
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn parse_string(rest: &str) -> Result<Value> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let tail: String = chars.collect();
+                if !tail.trim().is_empty() {
+                    bail!("trailing garbage after string: {tail:?}");
+                }
+                return Ok(Value::Str(out));
+            }
+            '\\' => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                other => bail!("bad escape \\{other:?}"),
+            },
+            c => out.push(c),
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_array(s: &str) -> Result<Value> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| anyhow::anyhow!("unterminated array {s:?}"))?;
+    let mut items = Vec::new();
+    // Split on commas outside strings (no nested arrays in the subset).
+    let mut depth_str = false;
+    let mut start = 0usize;
+    let bytes = inner.as_bytes();
+    for i in 0..bytes.len() {
+        match bytes[i] {
+            b'"' => depth_str = !depth_str,
+            b',' if !depth_str => {
+                let part = inner[start..i].trim();
+                if !part.is_empty() {
+                    items.push(parse_value(part)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = inner[start..].trim();
+    if !last.is_empty() {
+        items.push(parse_value(last)?);
+    }
+    Ok(Value::Array(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "# top comment\ntitle = \"hello # not a comment\"\n[a]\nx = 3\ny = 2.5\n\
+             z = true\narr = [1, 2, 3]\n[b]\nname = \"w\\\"x\"\nbig = 1_000_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["title"], Value::Str("hello # not a comment".into()));
+        assert_eq!(doc["a"]["x"], Value::Int(3));
+        assert_eq!(doc["a"]["y"], Value::Float(2.5));
+        assert_eq!(doc["a"]["z"], Value::Bool(true));
+        assert_eq!(
+            doc["a"]["arr"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(doc["b"]["name"], Value::Str("w\"x".into()));
+        assert_eq!(doc["b"]["big"], Value::Int(1_000_000));
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let doc = parse("x = 5 # five\n").unwrap();
+        assert_eq!(doc[""]["x"], Value::Int(5));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = parse("x = \n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(parse("just words\n").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("s = \"oops\n").is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_float().unwrap(), 3.0);
+        assert!(Value::Str("x".into()).as_int().is_err());
+        assert!(Value::Bool(true).as_bool().unwrap());
+        let arr = Value::Array(vec![Value::Int(1)]);
+        assert_eq!(arr.as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_and_whitespace_ok() {
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("\n\n  \n# only comments\n").unwrap().is_empty());
+    }
+}

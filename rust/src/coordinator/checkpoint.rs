@@ -1,0 +1,68 @@
+//! Checkpointing: persist / restore every agent's policy and AIP state.
+//!
+//! Layout: `<dir>/agent_<i>_{policy,aip}_{flat,m,v}.npk` plus a
+//! `checkpoint.meta` (key=value) with the interface fingerprint, so
+//! restoring against mismatched artifacts fails loudly instead of
+//! silently mis-slicing parameter vectors.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::NetSpec;
+use crate::util::npk::{read_npk, write_npk};
+
+use super::worker::AgentWorker;
+
+pub fn save_checkpoint(dir: &Path, spec: &NetSpec, workers: &[AgentWorker]) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let meta = format!(
+        "domain={}\nn_agents={}\npolicy_params={}\naip_params={}\n",
+        spec.domain,
+        workers.len(),
+        spec.policy_params,
+        spec.aip_params
+    );
+    std::fs::write(dir.join("checkpoint.meta"), meta)?;
+    for w in workers {
+        let i = w.id;
+        write_npk(&dir.join(format!("agent_{i}_policy_flat.npk")), &w.policy.net.flat)?;
+        write_npk(&dir.join(format!("agent_{i}_policy_m.npk")), &w.policy.net.m)?;
+        write_npk(&dir.join(format!("agent_{i}_policy_v.npk")), &w.policy.net.v)?;
+        write_npk(&dir.join(format!("agent_{i}_aip_flat.npk")), &w.aip.net.flat)?;
+        write_npk(&dir.join(format!("agent_{i}_aip_m.npk")), &w.aip.net.m)?;
+        write_npk(&dir.join(format!("agent_{i}_aip_v.npk")), &w.aip.net.v)?;
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(dir: &Path, spec: &NetSpec, workers: &mut [AgentWorker]) -> Result<()> {
+    let meta = std::fs::read_to_string(dir.join("checkpoint.meta"))
+        .with_context(|| format!("read checkpoint meta in {}", dir.display()))?;
+    let get = |key: &str| -> Option<&str> {
+        meta.lines().find_map(|l| l.strip_prefix(&format!("{key}=")))
+    };
+    if get("domain") != Some(spec.domain.as_str()) {
+        bail!("checkpoint domain {:?} != artifact domain {}", get("domain"), spec.domain);
+    }
+    let n: usize = get("n_agents").unwrap_or("0").parse().unwrap_or(0);
+    if n != workers.len() {
+        bail!("checkpoint has {n} agents, run expects {}", workers.len());
+    }
+    let pp: usize = get("policy_params").unwrap_or("0").parse().unwrap_or(0);
+    if pp != spec.policy_params {
+        bail!("checkpoint policy_params {pp} != artifact {}", spec.policy_params);
+    }
+    for w in workers.iter_mut() {
+        let i = w.id;
+        let flat = read_npk(&dir.join(format!("agent_{i}_policy_flat.npk")))?;
+        let m = read_npk(&dir.join(format!("agent_{i}_policy_m.npk")))?;
+        let v = read_npk(&dir.join(format!("agent_{i}_policy_v.npk")))?;
+        w.policy.net.absorb(flat, m, v);
+        let flat = read_npk(&dir.join(format!("agent_{i}_aip_flat.npk")))?;
+        let m = read_npk(&dir.join(format!("agent_{i}_aip_m.npk")))?;
+        let v = read_npk(&dir.join(format!("agent_{i}_aip_v.npk")))?;
+        w.aip.net.absorb(flat, m, v);
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Algorithm 2: collect influence datasets {D_i} from the global simulator
+//! under the current joint policy.
+//!
+//! Each GS episode contributes, per agent, a sequence of
+//! (ALSH features = local state ⊕ one-hot action, influence label u_i^t)
+//! pairs, appended to that agent's dataset.
+
+use anyhow::Result;
+
+use crate::influence::{encode_alsh, label_to_classes};
+use crate::runtime::ArtifactSet;
+use crate::sim::GlobalSim;
+use crate::util::rng::Pcg64;
+
+use super::worker::AgentWorker;
+
+/// Run the GS until each dataset has gained `rows_per_agent` fresh rows.
+/// Returns the number of GS env steps consumed (for the runtime tables).
+pub fn collect_datasets(
+    arts: &ArtifactSet,
+    gs: &mut dyn GlobalSim,
+    workers: &mut [AgentWorker],
+    rows_per_agent: usize,
+    horizon: usize,
+    rng: &mut Pcg64,
+) -> Result<usize> {
+    let n = gs.n_agents();
+    debug_assert_eq!(workers.len(), n);
+    let spec = &arts.spec;
+
+    let mut obs = vec![vec![0.0f32; spec.obs_dim]; n];
+    let mut feat = vec![0.0f32; spec.aip_feat];
+    let mut raw_label = vec![0.0f32; spec.u_dim];
+    let mut label = vec![0.0f32; spec.aip_heads];
+    let mut actions = vec![0usize; n];
+    let mut gs_steps = 0usize;
+    let mut collected = 0usize;
+
+    while collected < rows_per_agent {
+        gs.reset(rng);
+        for w in workers.iter_mut() {
+            w.policy.reset_episode();
+            w.dataset.begin_episode();
+        }
+        for _t in 0..horizon {
+            for (i, w) in workers.iter_mut().enumerate() {
+                gs.observe(i, &mut obs[i]);
+                let (a, _logp, _out) = w.policy.act(arts, &obs[i], rng)?;
+                actions[i] = a;
+            }
+            gs.step(&actions, rng);
+            gs_steps += 1;
+            for (i, w) in workers.iter_mut().enumerate() {
+                encode_alsh(&obs[i], actions[i], spec.act_dim, &mut feat);
+                gs.influence_label(i, &mut raw_label);
+                label_to_classes(&raw_label, spec.aip_heads, spec.aip_cls, &mut label);
+                w.dataset.push(&feat, &label);
+            }
+            collected += 1;
+            if collected >= rows_per_agent {
+                break;
+            }
+        }
+    }
+    Ok(gs_steps)
+}

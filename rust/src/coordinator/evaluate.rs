@@ -1,0 +1,66 @@
+//! Periodic evaluation on the global simulator (paper §5.1: "training is
+//! interleaved with periodic evaluations on the GS"; the reported metric is
+//! the mean return of all learning agents).
+
+use anyhow::Result;
+
+use crate::runtime::ArtifactSet;
+use crate::sim::GlobalSim;
+use crate::util::rng::Pcg64;
+
+use super::worker::AgentWorker;
+
+/// Run `episodes` GS episodes with the current joint policy; returns the
+/// mean per-agent episodic return (averaged over agents and episodes).
+pub fn evaluate_on_gs(
+    arts: &ArtifactSet,
+    gs: &mut dyn GlobalSim,
+    workers: &mut [AgentWorker],
+    episodes: usize,
+    horizon: usize,
+    rng: &mut Pcg64,
+) -> Result<f64> {
+    let n = gs.n_agents();
+    let mut obs = vec![vec![0.0f32; arts.spec.obs_dim]; n];
+    let mut actions = vec![0usize; n];
+    let mut total_return = 0.0f64;
+
+    for _ep in 0..episodes {
+        gs.reset(rng);
+        for w in workers.iter_mut() {
+            w.policy.reset_episode();
+        }
+        for _t in 0..horizon {
+            for (i, w) in workers.iter_mut().enumerate() {
+                gs.observe(i, &mut obs[i]);
+                let (a, _lp, _o) = w.policy.act(arts, &obs[i], rng)?;
+                actions[i] = a;
+            }
+            let rewards = gs.step(&actions, rng);
+            total_return += rewards.iter().map(|&r| r as f64).sum::<f64>();
+        }
+    }
+    Ok(total_return / (episodes * n) as f64)
+}
+
+/// Evaluate a scripted joint policy (hand-coded baselines, Fig. 3 dashed
+/// lines). `policy(agent, gs) -> action` may use privileged sim access.
+pub fn evaluate_scripted<G: GlobalSim>(
+    gs: &mut G,
+    mut policy: impl FnMut(usize, &G) -> usize,
+    episodes: usize,
+    horizon: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let n = gs.n_agents();
+    let mut total = 0.0f64;
+    for _ep in 0..episodes {
+        gs.reset(rng);
+        for _t in 0..horizon {
+            let actions: Vec<usize> = (0..n).map(|i| policy(i, gs)).collect();
+            let rewards = gs.step(&actions, rng);
+            total += rewards.iter().map(|&r| r as f64).sum::<f64>();
+        }
+    }
+    total / (episodes * n) as f64
+}

@@ -1,0 +1,375 @@
+//! The DIALS coordinator — the paper's Algorithm 1.
+//!
+//! Orchestrates: the GS data-collection phase (Algorithm 2), parallel AIP
+//! retraining every `F` timesteps, the embarrassingly-parallel per-agent
+//! IALS training segments (Algorithm 3 + PPO), and periodic GS evaluation.
+//!
+//! Parallel phases run on worker threads; every agent task is also timed
+//! individually so runs on this single-CPU box can report the *critical
+//! path* — the wall-clock a ≥N-core machine (the paper's cluster) would
+//! measure. See DESIGN.md's substitution table.
+
+mod checkpoint;
+mod collect;
+mod evaluate;
+mod policy_rt;
+mod worker;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use collect::collect_datasets;
+pub use evaluate::{evaluate_on_gs, evaluate_scripted};
+pub use policy_rt::{PolicyRuntime, StepOut};
+pub use worker::AgentWorker;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::{Domain, ExperimentConfig, SimMode};
+use crate::influence::AipRuntime;
+use crate::nn::NetState;
+use crate::ppo::PpoTrainer;
+use crate::runtime::{ArtifactSet, Engine};
+use crate::sim::{traffic, warehouse, GlobalSim, LocalSim};
+use crate::util::metrics::{CurvePoint, RunLog};
+use crate::util::rng::Pcg64;
+use crate::util::timer::{CriticalPath, PhaseTimers};
+
+/// One entry of the training schedule produced by `plan_segments`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Global step at which the segment starts.
+    pub start: usize,
+    pub len: usize,
+    /// Retrain the AIPs before running this segment (start % F == 0).
+    pub retrain_before: bool,
+}
+
+/// Split `total` training steps into segments bounded by both the
+/// evaluation period and the AIP retrain frequency `f`. Invariants
+/// (property-tested): segments tile [0, total); retrains fire exactly at
+/// multiples of `f`; no segment crosses a multiple of `eval_every` or `f`.
+pub fn plan_segments(total: usize, f: usize, eval_every: usize) -> Vec<Segment> {
+    let eval_every = if eval_every == 0 { total } else { eval_every };
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < total {
+        let next_f = ((pos / f) + 1) * f;
+        let next_e = ((pos / eval_every) + 1) * eval_every;
+        let end = next_f.min(next_e).min(total);
+        out.push(Segment { start: pos, len: end - pos, retrain_before: pos % f == 0 });
+        pos = end;
+    }
+    out
+}
+
+/// Build the domain's global simulator.
+pub fn make_global_sim(domain: Domain, side: usize) -> Box<dyn GlobalSim> {
+    match domain {
+        Domain::Traffic => Box::new(traffic::TrafficGlobalSim::new(side)),
+        Domain::Warehouse => Box::new(warehouse::WarehouseGlobalSim::new(side)),
+    }
+}
+
+/// Build one agent's local simulator.
+pub fn make_local_sim(domain: Domain) -> Box<dyn LocalSim> {
+    match domain {
+        Domain::Traffic => Box::new(traffic::TrafficLocalSim::new()),
+        Domain::Warehouse => Box::new(warehouse::WarehouseLocalSim::new()),
+    }
+}
+
+/// The full DIALS system (also runs the untrained-DIALS ablation).
+pub struct DialsCoordinator {
+    pub cfg: ExperimentConfig,
+    arts: Arc<ArtifactSet>,
+}
+
+impl DialsCoordinator {
+    pub fn new(engine: &Engine, cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let arts = ArtifactSet::load(engine, std::path::Path::new(&cfg.artifacts_dir), cfg.domain)?;
+        Ok(DialsCoordinator { cfg, arts })
+    }
+
+    pub fn artifacts(&self) -> &Arc<ArtifactSet> {
+        &self.arts
+    }
+
+    /// Build the per-agent workers (fresh policies + AIPs + local sims).
+    pub fn make_workers(&self, seed: u64) -> Vec<AgentWorker> {
+        let n = self.cfg.n_agents();
+        let mut root = Pcg64::new(seed, 77);
+        (0..n)
+            .map(|i| {
+                let mut rng = root.split(i as u64 + 1);
+                let policy = PolicyRuntime::new(
+                    &self.arts.spec,
+                    NetState::jittered(&self.arts.policy_init, &mut rng, 0.01),
+                );
+                let aip = AipRuntime::new(
+                    &self.arts.spec,
+                    NetState::jittered(&self.arts.aip_init, &mut rng, 0.01),
+                );
+                AgentWorker::new(
+                    i,
+                    &self.arts,
+                    policy,
+                    aip,
+                    make_local_sim(self.cfg.domain),
+                    &self.cfg.ppo,
+                    self.cfg.aip_dataset * 2,
+                    rng,
+                )
+            })
+            .collect()
+    }
+
+    /// Run the full Algorithm-1 training loop; returns the run log.
+    pub fn run(&self) -> Result<RunLog> {
+        self.run_ckpt(None, None)
+    }
+
+    /// `run` with optional checkpoint restore (before training) and save
+    /// (after training). See `coordinator::checkpoint`.
+    pub fn run_ckpt(
+        &self,
+        load: Option<&std::path::Path>,
+        save: Option<&std::path::Path>,
+    ) -> Result<RunLog> {
+        let cfg = &self.cfg;
+        let mut workers = self.make_workers(cfg.seed);
+        if let Some(dir) = load {
+            load_checkpoint(dir, &self.arts.spec, &mut workers)?;
+        }
+        let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+        let mut rng = Pcg64::new(cfg.seed, 1234);
+        let trainer = PpoTrainer::new(cfg.ppo.clone());
+
+        let mut timers = PhaseTimers::new();
+        // Critical paths accumulate per parallel phase: each segment's CP is
+        // the max over agents; segments are sequential, so CPs add up.
+        let mut train_cp_total = 0.0f64;
+        let mut aip_cp_total = 0.0f64;
+        let mut log = RunLog { label: cfg.mode.label().to_string(), ..Default::default() };
+        let threads = effective_threads(cfg.threads, cfg.n_agents());
+
+        // initial evaluation point (step 0)
+        let r0 = timers.time("eval", || {
+            evaluate_on_gs(&self.arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+        })?;
+        log.eval_curve.push(CurvePoint { step: 0, value: r0 });
+
+        let segments = plan_segments(cfg.total_steps, cfg.aip_train_freq, cfg.eval_every);
+        for seg in &segments {
+            // ---- influence phase (DIALS only; Algorithm 1 lines 3-6)
+            if seg.retrain_before && cfg.mode == SimMode::Dials {
+                timers.time("collect", || {
+                    collect_datasets(
+                        &self.arts, gs.as_mut(), &mut workers,
+                        cfg.aip_dataset, cfg.horizon, &mut rng,
+                    )
+                })?;
+                // CE on fresh on-policy data BEFORE retraining (Fig. 4)
+                let ce_pre = mean_ce(&self.arts, &mut workers)?;
+                if let Some(ce) = ce_pre {
+                    log.ce_curve.push(CurvePoint { step: seg.start, value: ce as f64 });
+                }
+                // parallel AIP retraining (timed per agent for the CP)
+                let durations = run_parallel(&mut workers, threads, |w| {
+                    let t0 = std::time::Instant::now();
+                    w.train_aip(&self.arts, self.cfg.aip_epochs).map(|_| t0.elapsed().as_secs_f64())
+                })?;
+                let mut cp = CriticalPath::new();
+                for d in &durations {
+                    cp.record(*d);
+                    timers.add("aip_train", *d);
+                }
+                aip_cp_total += cp.with_slots(cfg.n_agents());
+                if let Some(ce) = mean_ce(&self.arts, &mut workers)? {
+                    log.ce_curve.push(CurvePoint { step: seg.start + 1, value: ce as f64 });
+                }
+            }
+
+            // ---- parallel IALS training segment (Algorithm 1 lines 7-12)
+            let horizon = cfg.horizon;
+            let seg_len = seg.len;
+            let durations = run_parallel(&mut workers, threads, |w| {
+                let t0 = std::time::Instant::now();
+                w.train_segment(&self.arts, &trainer, seg_len, horizon)
+                    .map(|_| t0.elapsed().as_secs_f64())
+            })?;
+            let mut cp = CriticalPath::new();
+            for d in &durations {
+                cp.record(*d);
+                timers.add("agent_train", *d);
+            }
+            train_cp_total += cp.with_slots(cfg.n_agents());
+
+            // ---- periodic evaluation (excluded from runtime totals)
+            let ret = timers.time("eval", || {
+                evaluate_on_gs(&self.arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+            })?;
+            log.eval_curve.push(CurvePoint { step: seg.start + seg.len, value: ret });
+        }
+
+        if let Some(dir) = save {
+            save_checkpoint(dir, &self.arts.spec, &workers)?;
+        }
+        log.final_return = log.eval_curve.last().map(|p| p.value).unwrap_or(0.0);
+        log.agent_train_seconds = train_cp_total;
+        log.influence_seconds = timers.get("collect") + aip_cp_total;
+        log.wall_seconds = timers.get("collect") + timers.get("aip_train") + timers.get("agent_train");
+        log.critical_path_seconds = timers.get("collect") + aip_cp_total + train_cp_total;
+        Ok(log)
+    }
+}
+
+fn effective_threads(requested: usize, n_agents: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let t = if requested == 0 { hw } else { requested };
+    t.clamp(1, n_agents)
+}
+
+/// Mean AIP CE over all agents (on their freshly-collected datasets).
+fn mean_ce(arts: &ArtifactSet, workers: &mut [AgentWorker]) -> Result<Option<f32>> {
+    let mut acc = 0.0f32;
+    let mut k = 0usize;
+    for w in workers.iter_mut() {
+        if let Some(ce) = w.eval_aip_ce(arts)? {
+            acc += ce;
+            k += 1;
+        }
+    }
+    Ok(if k == 0 { None } else { Some(acc / k as f32) })
+}
+
+/// Run `task` once per worker, distributing workers over `threads` OS
+/// threads (round-robin). Returns per-worker durations (seconds) in worker
+/// order. This is the "distributed simulators" phase of the paper — each
+/// worker owns its IALS, AIP, and policy, so no state is shared.
+pub fn run_parallel<F>(workers: &mut [AgentWorker], threads: usize, task: F) -> Result<Vec<f64>>
+where
+    F: Fn(&mut AgentWorker) -> Result<f64> + Sync,
+{
+    let n = workers.len();
+    if threads <= 1 || n <= 1 {
+        let mut out = Vec::with_capacity(n);
+        for w in workers.iter_mut() {
+            out.push(task(w)?);
+        }
+        return Ok(out);
+    }
+    let results: Mutex<Vec<Option<Result<f64>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let task_ref = &task;
+    let results_ref = &results;
+    std::thread::scope(|scope| {
+        let mut chunks: Vec<Vec<(usize, &mut AgentWorker)>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, w) in workers.iter_mut().enumerate() {
+            chunks[i % threads].push((i, w));
+        }
+        for chunk in chunks {
+            scope.spawn(move || {
+                for (i, w) in chunk {
+                    let r = task_ref(w);
+                    results_ref.lock().unwrap()[i] = Some(r);
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_res;
+
+    #[test]
+    fn segments_tile_the_horizon() {
+        forall_res(
+            200,
+            |r| {
+                let total = (r.below(5000) + 1) as usize;
+                let f = (r.below(1000) + 1) as usize;
+                let e = r.below(1000) as usize;
+                (total, f, e)
+            },
+            |&(total, f, e)| {
+                let segs = plan_segments(total, f, e);
+                let mut pos = 0usize;
+                for s in &segs {
+                    if s.start != pos {
+                        return Err(format!("gap at {pos}: segment starts {}", s.start));
+                    }
+                    if s.len == 0 {
+                        return Err("empty segment".into());
+                    }
+                    pos += s.len;
+                }
+                if pos != total {
+                    return Err(format!("segments cover {pos}, want {total}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn retrains_fire_exactly_at_multiples_of_f() {
+        forall_res(
+            200,
+            |r| {
+                let total = (r.below(5000) + 1) as usize;
+                let f = (r.below(500) + 1) as usize;
+                let e = r.below(700) as usize;
+                (total, f, e)
+            },
+            |&(total, f, e)| {
+                let segs = plan_segments(total, f, e);
+                for s in &segs {
+                    if s.retrain_before != (s.start % f == 0) {
+                        return Err(format!("retrain flag wrong at {}", s.start));
+                    }
+                    // no segment crosses a multiple of f
+                    if s.start / f != (s.start + s.len - 1) / f {
+                        return Err(format!("segment {s:?} crosses an F boundary"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn segments_respect_eval_boundaries() {
+        let segs = plan_segments(1000, 400, 250);
+        // boundaries must include every multiple of 250 and of 400
+        let boundaries: Vec<usize> = segs.iter().map(|s| s.start + s.len).collect();
+        for b in [250, 400, 500, 750, 800, 1000] {
+            assert!(boundaries.contains(&b), "missing boundary {b}: {boundaries:?}");
+        }
+    }
+
+    #[test]
+    fn train_once_schedule() {
+        // F = total: a single retrain at step 0 (paper's "train once")
+        let segs = plan_segments(800, 800, 200);
+        assert_eq!(segs.len(), 4);
+        assert!(segs[0].retrain_before);
+        assert!(segs[1..].iter().all(|s| !s.retrain_before));
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(8, 4), 4);
+        assert_eq!(effective_threads(2, 100), 2);
+        assert!(effective_threads(0, 100) >= 1);
+    }
+}

@@ -1,0 +1,109 @@
+//! Streaming policy runtime: drives the `policy_step` artifact for one
+//! agent (B = 1), carrying the recurrent hidden state across an episode.
+//!
+//! Hot-path optimisation (§Perf): the flat parameter vector is uploaded to
+//! the device ONCE per policy version and reused across forwards via
+//! `run_b`; only the tiny obs/h tensors move per step. This cut the
+//! per-forward cost ~2-3× (EXPERIMENTS.md §Perf).
+
+use anyhow::Result;
+
+use crate::nn::{sample_categorical, NetState};
+use crate::runtime::{ArtifactSet, DeviceTensor};
+use crate::util::npk::Tensor;
+use crate::util::rng::Pcg64;
+
+pub struct PolicyRuntime {
+    pub net: NetState,
+    hstate: Vec<f32>,
+    dev_params: Option<(u64, DeviceTensor)>,
+    obs_dim: usize,
+    act_dim: usize,
+    h_dim: usize,
+}
+
+/// One forward step's outputs.
+pub struct StepOut {
+    pub logits: Vec<f32>,
+    pub value: f32,
+    /// Hidden state BEFORE this step (what PPO stores for replay).
+    pub h_before: Vec<f32>,
+}
+
+impl PolicyRuntime {
+    pub fn new(spec: &crate::runtime::NetSpec, net: NetState) -> Self {
+        PolicyRuntime {
+            net,
+            hstate: vec![0.0; spec.policy_hstate],
+            dev_params: None,
+            obs_dim: spec.obs_dim,
+            act_dim: spec.act_dim,
+            h_dim: spec.policy_hstate,
+        }
+    }
+
+    pub fn h_dim(&self) -> usize {
+        self.h_dim
+    }
+
+    pub fn reset_episode(&mut self) {
+        self.hstate.fill(0.0);
+    }
+
+    /// Device-resident params, re-uploaded only when the version changed.
+    fn params(&mut self, arts: &ArtifactSet) -> Result<&DeviceTensor> {
+        let stale = match &self.dev_params {
+            Some((v, _)) => *v != self.net.version,
+            None => true,
+        };
+        if stale {
+            let buf = arts.engine.upload(&self.net.flat)?;
+            self.dev_params = Some((self.net.version, buf));
+        }
+        Ok(&self.dev_params.as_ref().unwrap().1)
+    }
+
+    fn forward(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<(Vec<f32>, f32, Vec<f32>)> {
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        let obs_t = arts.engine.upload(&Tensor::new(vec![1, self.obs_dim], obs.to_vec()))?;
+        let h_t = arts.engine.upload(&Tensor::new(vec![1, self.h_dim], self.hstate.clone()))?;
+        // borrow params after the small uploads to appease the borrow checker
+        let p = self.params(arts)?;
+        let outs = arts.policy_step.run_b(&[p, &obs_t, &h_t])?;
+        // packed output: [logits(A) | value(1) | h'(H)]
+        let packed = outs[0].to_tensor()?.data;
+        debug_assert_eq!(packed.len(), self.act_dim + 1 + self.h_dim);
+        let logits = packed[..self.act_dim].to_vec();
+        let value = packed[self.act_dim];
+        let h_new = packed[self.act_dim + 1..].to_vec();
+        Ok((logits, value, h_new))
+    }
+
+    /// Forward the policy on `obs`, advancing the hidden state.
+    pub fn step(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<StepOut> {
+        let h_before = self.hstate.clone();
+        let (logits, value, h_new) = self.forward(arts, obs)?;
+        self.hstate = h_new;
+        Ok(StepOut { logits, value, h_before })
+    }
+
+    /// Forward WITHOUT advancing the hidden state (value bootstrap query).
+    pub fn peek_value(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<f32> {
+        let h_save = self.hstate.clone();
+        let (_logits, value, _h) = self.forward(arts, obs)?;
+        self.hstate = h_save;
+        Ok(value)
+    }
+
+    /// Sample an action from a forward pass.
+    pub fn act(
+        &mut self,
+        arts: &ArtifactSet,
+        obs: &[f32],
+        rng: &mut Pcg64,
+    ) -> Result<(usize, f32, StepOut)> {
+        let out = self.step(arts, obs)?;
+        let (a, logp) = sample_categorical(&out.logits, rng);
+        Ok((a, logp, out))
+    }
+}

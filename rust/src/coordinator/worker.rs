@@ -1,0 +1,141 @@
+//! The per-agent IALS training worker (paper Algorithm 1 lines 7-12 +
+//! Algorithm 3): roll out the local simulator with influence samples from
+//! the agent's AIP, train the policy with PPO every `rollout_len` steps.
+//!
+//! One worker owns everything for one agent, so workers run embarrassingly
+//! parallel — the paper's key systems claim. The coordinator times each
+//! worker segment to report both serial wall-clock and the critical path.
+
+use anyhow::Result;
+
+use crate::config::PpoConfig;
+use crate::influence::{encode_alsh, AipRuntime, InfluenceDataset};
+use crate::ppo::{PpoTrainer, RolloutBuffer};
+use crate::runtime::ArtifactSet;
+use crate::sim::LocalSim;
+use crate::util::rng::Pcg64;
+
+use super::policy_rt::PolicyRuntime;
+
+/// All state owned by one agent's worker.
+pub struct AgentWorker {
+    pub id: usize,
+    pub policy: PolicyRuntime,
+    pub aip: AipRuntime,
+    pub dataset: InfluenceDataset,
+    pub ls: Box<dyn LocalSim>,
+    pub buffer: RolloutBuffer,
+    pub rng: Pcg64,
+    /// Steps taken in the current episode.
+    ep_step: usize,
+    /// Total IALS env steps this agent has trained for.
+    pub env_steps: usize,
+    /// Running mean of recent local rewards (diagnostics).
+    pub recent_reward: f32,
+    feat_buf: Vec<f32>,
+    obs_buf: Vec<f32>,
+}
+
+impl AgentWorker {
+    pub fn new(
+        id: usize,
+        arts: &ArtifactSet,
+        policy: PolicyRuntime,
+        aip: AipRuntime,
+        ls: Box<dyn LocalSim>,
+        ppo: &PpoConfig,
+        dataset_capacity: usize,
+        rng: Pcg64,
+    ) -> Self {
+        let spec = &arts.spec;
+        AgentWorker {
+            id,
+            buffer: RolloutBuffer::new(ppo.rollout_len, spec.obs_dim, spec.policy_hstate),
+            dataset: InfluenceDataset::new(spec.aip_feat, spec.aip_heads, dataset_capacity),
+            feat_buf: vec![0.0; spec.aip_feat],
+            obs_buf: vec![0.0; spec.obs_dim],
+            policy,
+            aip,
+            ls,
+            rng: rng,
+            ep_step: 0,
+            env_steps: 0,
+            recent_reward: 0.0,
+        }
+    }
+
+    /// Reset the episode state (local sim + both recurrent memories).
+    fn begin_episode(&mut self) {
+        self.ls.reset(&mut self.rng);
+        self.policy.reset_episode();
+        self.aip.reset_episode();
+        self.ep_step = 0;
+    }
+
+    /// Train on the IALS for `steps` env steps (one parallel segment).
+    /// PPO updates fire whenever the rollout buffer fills.
+    pub fn train_segment(
+        &mut self,
+        arts: &ArtifactSet,
+        trainer: &PpoTrainer,
+        steps: usize,
+        horizon: usize,
+    ) -> Result<()> {
+        if self.env_steps == 0 && self.ep_step == 0 {
+            self.begin_episode();
+        }
+        for _ in 0..steps {
+            // observe + policy
+            self.ls.observe(&mut self.obs_buf);
+            let (action, logp, out) =
+                self.policy.act(arts, &self.obs_buf, &mut self.rng)?;
+
+            // influence: predict + sample u (Algorithm 3 line 8)
+            encode_alsh(&self.obs_buf, action, arts.spec.act_dim, &mut self.feat_buf);
+            let probs = self.aip.forward(arts, &self.feat_buf)?;
+            let u = self.aip.sample_u(&probs, &mut self.rng);
+
+            // local transition
+            let reward = self.ls.step(action, &u, &mut self.rng);
+            self.ep_step += 1;
+            self.env_steps += 1;
+            let done = self.ep_step >= horizon;
+
+            self.buffer.push(&self.obs_buf, &out.h_before, action, logp, reward, out.value, done);
+            self.recent_reward = 0.99 * self.recent_reward + 0.01 * reward;
+
+            if done {
+                self.begin_episode();
+            }
+
+            if self.buffer.is_full() {
+                let last_value = if done {
+                    0.0
+                } else {
+                    self.ls.observe(&mut self.obs_buf);
+                    self.policy.peek_value(arts, &self.obs_buf)?
+                };
+                trainer.update(
+                    arts,
+                    &mut self.policy.net,
+                    &self.buffer,
+                    last_value,
+                    &mut self.rng,
+                )?;
+                self.buffer.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Retrain this agent's AIP on its dataset (paper Algorithm 1 line 5).
+    /// Returns the mean training CE.
+    pub fn train_aip(&mut self, arts: &ArtifactSet, epochs: usize) -> Result<f32> {
+        self.dataset.train(arts, &mut self.aip.net, epochs, &mut self.rng)
+    }
+
+    /// CE of the AIP on the current dataset (Fig. 4 right curves).
+    pub fn eval_aip_ce(&mut self, arts: &ArtifactSet) -> Result<Option<f32>> {
+        self.dataset.evaluate(arts, &self.aip.net, &mut self.rng)
+    }
+}

@@ -1,0 +1,153 @@
+//! The AIP runtime: streaming forward calls into the `aip_forward`
+//! artifact plus influence-source sampling for the local simulators.
+//!
+//! Like the policy runtime, the AIP keeps its parameter vector
+//! device-resident across forwards (§Perf).
+
+use anyhow::Result;
+
+use crate::nn::NetState;
+use crate::runtime::{ArtifactSet, DeviceTensor, NetSpec};
+use crate::util::npk::Tensor;
+use crate::util::rng::Pcg64;
+
+/// One agent's AIP: network state + the streaming hidden state used while
+/// driving its IALS (paper Algorithm 3, line `u ~ I(·|l)`).
+pub struct AipRuntime {
+    pub net: NetState,
+    /// GRU hidden state across the current episode (width `aip_hstate`).
+    hstate: Vec<f32>,
+    dev_params: Option<(u64, DeviceTensor)>,
+    n_heads: usize,
+    n_cls: usize,
+    feat_dim: usize,
+    h_dim: usize,
+}
+
+impl AipRuntime {
+    pub fn new(spec: &NetSpec, net: NetState) -> Self {
+        AipRuntime {
+            net,
+            hstate: vec![0.0; spec.aip_hstate],
+            dev_params: None,
+            n_heads: spec.aip_heads,
+            n_cls: spec.aip_cls,
+            feat_dim: spec.aip_feat,
+            h_dim: spec.aip_hstate,
+        }
+    }
+
+    /// Reset the episode memory (call at episode boundaries).
+    pub fn reset_episode(&mut self) {
+        self.hstate.fill(0.0);
+    }
+
+    fn params(&mut self, arts: &ArtifactSet) -> Result<&DeviceTensor> {
+        let stale = match &self.dev_params {
+            Some((v, _)) => *v != self.net.version,
+            None => true,
+        };
+        if stale {
+            let buf = arts.engine.upload(&self.net.flat)?;
+            self.dev_params = Some((self.net.version, buf));
+        }
+        Ok(&self.dev_params.as_ref().unwrap().1)
+    }
+
+    /// Predict influence-source probabilities for the current ALSH step.
+    /// Returns `u_dim` probabilities and advances the hidden state.
+    pub fn forward(&mut self, arts: &ArtifactSet, feat: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(feat.len(), self.feat_dim);
+        let feat_t = arts.engine.upload(&Tensor::new(vec![1, self.feat_dim], feat.to_vec()))?;
+        let h_t = arts.engine.upload(&Tensor::new(vec![1, self.h_dim], self.hstate.clone()))?;
+        let p = self.params(arts)?;
+        let outs = arts.aip_forward.run_b(&[p, &feat_t, &h_t])?;
+        // packed output: [probs(U) | h'(H)]
+        let mut packed = outs[0].to_tensor()?.data;
+        let u_dim = self.n_heads * self.n_cls.max(1);
+        debug_assert_eq!(packed.len(), u_dim + self.h_dim);
+        self.hstate.copy_from_slice(&packed[u_dim..]);
+        packed.truncate(u_dim);
+        Ok(packed)
+    }
+
+    /// Sample an influence realisation `u` in the local simulator's input
+    /// format: Bernoulli heads → {0,1} per head; categorical heads → class
+    /// index per head.
+    pub fn sample_u(&self, probs: &[f32], rng: &mut Pcg64) -> Vec<f32> {
+        let mut u = Vec::with_capacity(self.n_heads);
+        if self.n_cls <= 1 {
+            for &p in probs.iter().take(self.n_heads) {
+                u.push(if rng.bernoulli(p as f64) { 1.0 } else { 0.0 });
+            }
+        } else {
+            for h in 0..self.n_heads {
+                let group = &probs[h * self.n_cls..(h + 1) * self.n_cls];
+                u.push(rng.categorical(group) as f32);
+            }
+        }
+        u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_spec(cls: usize) -> NetSpec {
+        NetSpec {
+            domain: "t".into(),
+            obs_dim: 4,
+            act_dim: 2,
+            policy_recurrent: false,
+            policy_hstate: 1,
+            policy_params: 10,
+            aip_feat: 6,
+            aip_recurrent: cls > 1,
+            aip_hstate: 3,
+            aip_params: 10,
+            aip_heads: 4,
+            aip_cls: cls,
+            u_dim: 4 * cls.max(1),
+            minibatch: 4,
+            aip_batch: 4,
+            aip_seq: 2,
+        }
+    }
+
+    fn runtime(cls: usize) -> AipRuntime {
+        let spec = dummy_spec(cls);
+        let net = NetState::new(&Tensor::zeros(&[spec.aip_params]));
+        AipRuntime::new(&spec, net)
+    }
+
+    #[test]
+    fn bernoulli_sampling_tracks_probs() {
+        let rt = runtime(1);
+        let mut rng = Pcg64::seed(0);
+        let probs = [1.0f32, 0.0, 1.0, 0.0];
+        for _ in 0..20 {
+            assert_eq!(rt.sample_u(&probs, &mut rng), vec![1.0, 0.0, 1.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn categorical_sampling_picks_valid_classes() {
+        let rt = runtime(4);
+        let mut rng = Pcg64::seed(1);
+        // head h always class h
+        let mut probs = vec![0.0f32; 16];
+        for h in 0..4 {
+            probs[h * 4 + h] = 1.0;
+        }
+        assert_eq!(rt.sample_u(&probs, &mut rng), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reset_zeroes_hidden_state() {
+        let mut rt = runtime(4);
+        rt.hstate.fill(0.7);
+        rt.reset_episode();
+        assert!(rt.hstate.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,311 @@
+//! The influence dataset D_i: (ALSH-features, influence-source labels)
+//! pairs collected from the GS (paper Algorithm 2), plus batch assembly
+//! for the `aip_update` / `aip_eval` artifacts and the training loop.
+
+use anyhow::{ensure, Result};
+
+use crate::nn::NetState;
+use crate::runtime::ArtifactSet;
+use crate::util::npk::Tensor;
+use crate::util::rng::Pcg64;
+
+/// One episode's worth of (feature, label) rows, kept contiguous so the
+/// recurrent AIP can train on in-episode windows.
+#[derive(Clone, Debug, Default)]
+struct Episode {
+    feats: Vec<f32>,  // [len × feat_dim]
+    labels: Vec<f32>, // [len × n_heads]
+    len: usize,
+}
+
+/// Agent i's dataset D_i.
+#[derive(Clone, Debug)]
+pub struct InfluenceDataset {
+    feat_dim: usize,
+    n_heads: usize,
+    episodes: Vec<Episode>,
+    total_rows: usize,
+    /// Rows to keep (oldest episodes evicted beyond this).
+    capacity_rows: usize,
+}
+
+impl InfluenceDataset {
+    pub fn new(feat_dim: usize, n_heads: usize, capacity_rows: usize) -> Self {
+        InfluenceDataset {
+            feat_dim,
+            n_heads,
+            episodes: Vec::new(),
+            total_rows: 0,
+            capacity_rows,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.total_rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_rows == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.episodes.clear();
+        self.total_rows = 0;
+    }
+
+    pub fn begin_episode(&mut self) {
+        self.episodes.push(Episode::default());
+    }
+
+    pub fn push(&mut self, feat: &[f32], label: &[f32]) {
+        debug_assert_eq!(feat.len(), self.feat_dim);
+        debug_assert_eq!(label.len(), self.n_heads);
+        if self.episodes.is_empty() {
+            self.begin_episode();
+        }
+        let ep = self.episodes.last_mut().unwrap();
+        ep.feats.extend_from_slice(feat);
+        ep.labels.extend_from_slice(label);
+        ep.len += 1;
+        self.total_rows += 1;
+        // Evict the oldest full episodes beyond capacity.
+        while self.total_rows > self.capacity_rows && self.episodes.len() > 1 {
+            let old = self.episodes.remove(0);
+            self.total_rows -= old.len;
+        }
+    }
+
+    /// Assemble a flat minibatch for the FNN AIP update:
+    /// feats [B, F], labels [B, H].
+    pub fn sample_flat(&self, batch: usize, rng: &mut Pcg64) -> Option<(Tensor, Tensor)> {
+        if self.total_rows == 0 {
+            return None;
+        }
+        let mut feats = Tensor::zeros(&[batch, self.feat_dim]);
+        let mut labels = Tensor::zeros(&[batch, self.n_heads]);
+        for b in 0..batch {
+            let (ep, t) = self.random_row(rng);
+            feats.data[b * self.feat_dim..(b + 1) * self.feat_dim]
+                .copy_from_slice(&ep.feats[t * self.feat_dim..(t + 1) * self.feat_dim]);
+            labels.data[b * self.n_heads..(b + 1) * self.n_heads]
+                .copy_from_slice(&ep.labels[t * self.n_heads..(t + 1) * self.n_heads]);
+        }
+        Some((feats, labels))
+    }
+
+    /// Assemble a windowed minibatch for the GRU AIP update:
+    /// feats [B, T, F], labels [B, T, H]. Windows are contiguous in-episode
+    /// spans starting from a random offset (truncated BPTT with h0 = 0;
+    /// the update artifact unrolls exactly `seq` steps).
+    pub fn sample_windows(
+        &self,
+        batch: usize,
+        seq: usize,
+        rng: &mut Pcg64,
+    ) -> Option<(Tensor, Tensor)> {
+        let eligible: Vec<&Episode> = self.episodes.iter().filter(|e| e.len >= seq).collect();
+        if eligible.is_empty() {
+            return None;
+        }
+        let mut feats = Tensor::zeros(&[batch, seq, self.feat_dim]);
+        let mut labels = Tensor::zeros(&[batch, seq, self.n_heads]);
+        for b in 0..batch {
+            let ep = eligible[rng.below(eligible.len() as u64) as usize];
+            let start = rng.below((ep.len - seq + 1) as u64) as usize;
+            for t in 0..seq {
+                let src = start + t;
+                let fdst = (b * seq + t) * self.feat_dim;
+                feats.data[fdst..fdst + self.feat_dim]
+                    .copy_from_slice(&ep.feats[src * self.feat_dim..(src + 1) * self.feat_dim]);
+                let ldst = (b * seq + t) * self.n_heads;
+                labels.data[ldst..ldst + self.n_heads]
+                    .copy_from_slice(&ep.labels[src * self.n_heads..(src + 1) * self.n_heads]);
+            }
+        }
+        Some((feats, labels))
+    }
+
+    fn random_row(&self, rng: &mut Pcg64) -> (&Episode, usize) {
+        let mut idx = rng.below(self.total_rows as u64) as usize;
+        for ep in &self.episodes {
+            if idx < ep.len {
+                return (ep, idx);
+            }
+            idx -= ep.len;
+        }
+        unreachable!("row index out of range")
+    }
+
+    /// Train the AIP for `epochs` gradient steps on this dataset (paper
+    /// §3.2: supervised cross-entropy on (l, u) pairs). Mutates `net`.
+    /// Returns the mean CE over the performed steps.
+    ///
+    /// §Perf: params/m/v stay device-resident and chain across epochs;
+    /// only the sampled batches and the scalar CE cross the host boundary.
+    pub fn train(
+        &self,
+        arts: &ArtifactSet,
+        net: &mut NetState,
+        epochs: usize,
+        rng: &mut Pcg64,
+    ) -> Result<f32> {
+        ensure!(!self.is_empty(), "cannot train AIP on an empty dataset");
+        let spec = &arts.spec;
+        let engine = &arts.engine;
+        let mut steps = 0usize;
+        // packed [flat|m|v|ce] state chained across gradient steps
+        let p = net.flat.len();
+        let mut packed = Vec::with_capacity(3 * p + 1);
+        packed.extend_from_slice(&net.flat.data);
+        packed.extend_from_slice(&net.m.data);
+        packed.extend_from_slice(&net.v.data);
+        packed.push(0.0);
+        let mut d_state = engine.upload(&Tensor::new(vec![3 * p + 1], packed))?;
+        for _ in 0..epochs {
+            let batch = if spec.aip_recurrent {
+                self.sample_windows(spec.aip_batch, spec.aip_seq, rng)
+            } else {
+                self.sample_flat(spec.aip_batch, rng)
+            };
+            let Some((feats, labels)) = batch else {
+                break; // not enough data for a full window batch
+            };
+            net.step += 1;
+            // single packed upload: [t | feats | labels]
+            let mut b = Vec::with_capacity(1 + feats.len() + labels.len());
+            b.push(net.step as f32);
+            b.extend_from_slice(&feats.data);
+            b.extend_from_slice(&labels.data);
+            let d_batch = engine.upload(&Tensor::new(vec![b.len()], b))?;
+            let mut outs = arts.aip_update.run_b(&[&d_state, &d_batch])?;
+            d_state = outs.pop().unwrap();
+            steps += 1;
+        }
+        if steps == 0 {
+            return Ok(f32::NAN);
+        }
+        let out = d_state.to_tensor()?.data;
+        net.absorb(
+            Tensor::new(vec![p], out[..p].to_vec()),
+            Tensor::new(vec![p], out[p..2 * p].to_vec()),
+            Tensor::new(vec![p], out[2 * p..3 * p].to_vec()),
+        );
+        // tail = CE of the LAST gradient step
+        Ok(out[3 * p])
+    }
+
+    /// Evaluate the AIP's CE loss on a batch drawn from this dataset
+    /// (Fig. 4 right: CE of the AIPs on fresh GS trajectories).
+    pub fn evaluate(
+        &self,
+        arts: &ArtifactSet,
+        net: &NetState,
+        rng: &mut Pcg64,
+    ) -> Result<Option<f32>> {
+        let spec = &arts.spec;
+        let batch = if spec.aip_recurrent {
+            self.sample_windows(spec.aip_batch, spec.aip_seq, rng)
+        } else {
+            self.sample_flat(spec.aip_batch, rng)
+        };
+        let Some((feats, labels)) = batch else {
+            return Ok(None);
+        };
+        let outs = arts.aip_eval.run(&[net.flat.clone(), feats, labels])?;
+        Ok(Some(outs[0].data[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_dataset(n_eps: usize, ep_len: usize) -> InfluenceDataset {
+        let mut d = InfluenceDataset::new(3, 2, 10_000);
+        for e in 0..n_eps {
+            d.begin_episode();
+            for t in 0..ep_len {
+                let f = [e as f32, t as f32, 0.5];
+                let l = [(t % 2) as f32, ((t + e) % 2) as f32];
+                d.push(&f, &l);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn rows_counted_across_episodes() {
+        let d = make_dataset(3, 5);
+        assert_eq!(d.len(), 15);
+    }
+
+    #[test]
+    fn flat_sampling_has_right_shapes() {
+        let d = make_dataset(2, 4);
+        let mut rng = Pcg64::seed(0);
+        let (f, l) = d.sample_flat(6, &mut rng).unwrap();
+        assert_eq!(f.dims, vec![6, 3]);
+        assert_eq!(l.dims, vec![6, 2]);
+        // every sampled row must exist in the dataset (feat[2] == 0.5)
+        for b in 0..6 {
+            assert_eq!(f.data[b * 3 + 2], 0.5);
+        }
+    }
+
+    #[test]
+    fn window_sampling_is_contiguous() {
+        let d = make_dataset(1, 10);
+        let mut rng = Pcg64::seed(1);
+        let (f, _l) = d.sample_windows(4, 3, &mut rng).unwrap();
+        assert_eq!(f.dims, vec![4, 3, 3]);
+        for b in 0..4 {
+            // feat[1] is the within-episode time index: must increase by 1
+            let t0 = f.data[(b * 3) * 3 + 1];
+            let t1 = f.data[(b * 3 + 1) * 3 + 1];
+            let t2 = f.data[(b * 3 + 2) * 3 + 1];
+            assert_eq!(t1 - t0, 1.0);
+            assert_eq!(t2 - t1, 1.0);
+        }
+    }
+
+    #[test]
+    fn windows_need_long_enough_episodes() {
+        let d = make_dataset(2, 3);
+        let mut rng = Pcg64::seed(2);
+        assert!(d.sample_windows(2, 5, &mut rng).is_none());
+        assert!(d.sample_windows(2, 3, &mut rng).is_some());
+    }
+
+    #[test]
+    fn empty_dataset_yields_none() {
+        let d = InfluenceDataset::new(3, 2, 100);
+        let mut rng = Pcg64::seed(3);
+        assert!(d.sample_flat(2, &mut rng).is_none());
+        assert!(d.sample_windows(2, 2, &mut rng).is_none());
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_episodes() {
+        let mut d = InfluenceDataset::new(1, 1, 10);
+        for e in 0..5 {
+            d.begin_episode();
+            for _ in 0..4 {
+                d.push(&[e as f32], &[0.0]);
+            }
+        }
+        assert!(d.len() <= 10 + 4, "len={} should hover near capacity", d.len());
+        // the oldest episode (e=0) must be gone
+        let mut rng = Pcg64::seed(4);
+        for _ in 0..50 {
+            let (f, _) = d.sample_flat(1, &mut rng).unwrap();
+            assert!(f.data[0] > 0.5, "evicted episode still sampled");
+        }
+    }
+
+    #[test]
+    fn push_without_begin_opens_episode() {
+        let mut d = InfluenceDataset::new(1, 1, 100);
+        d.push(&[1.0], &[1.0]);
+        assert_eq!(d.len(), 1);
+    }
+}

@@ -1,0 +1,75 @@
+//! Influence machinery: ALSH feature encoding, the approximate influence
+//! predictor (AIP) runtime, the replay dataset collected from the GS, and
+//! the AIP trainer (paper §3.2, §4.2, App. E).
+
+mod aip;
+mod dataset;
+
+pub use aip::AipRuntime;
+pub use dataset::InfluenceDataset;
+
+/// Encode one ALSH step as AIP features: local state ⊕ one-hot action.
+/// (The d-separating set of both domains — App. E.1.)
+pub fn encode_alsh(obs: &[f32], action: usize, act_dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), obs.len() + act_dim);
+    out[..obs.len()].copy_from_slice(obs);
+    for (k, o) in out[obs.len()..].iter_mut().enumerate() {
+        *o = if k == action { 1.0 } else { 0.0 };
+    }
+}
+
+/// Convert a GS influence label (as written by `GlobalSim::influence_label`)
+/// into the per-head class representation stored in the dataset.
+///
+/// * Bernoulli heads (`n_cls == 1`, traffic): labels are already one value
+///   per head in {0,1} — copied through.
+/// * Categorical heads (warehouse): the label is `n_heads` one-hot groups of
+///   `n_cls`; each head becomes its class index.
+pub fn label_to_classes(raw: &[f32], n_heads: usize, n_cls: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n_heads);
+    if n_cls <= 1 {
+        out.copy_from_slice(&raw[..n_heads]);
+        return;
+    }
+    debug_assert_eq!(raw.len(), n_heads * n_cls);
+    for h in 0..n_heads {
+        let group = &raw[h * n_cls..(h + 1) * n_cls];
+        let cls = group
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        out[h] = cls as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alsh_encoding_appends_action_onehot() {
+        let obs = [0.5, 0.25];
+        let mut out = [0.0f32; 5];
+        encode_alsh(&obs, 2, 3, &mut out);
+        assert_eq!(out, [0.5, 0.25, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn bernoulli_labels_pass_through() {
+        let raw = [1.0, 0.0, 1.0, 0.0];
+        let mut out = [9.0f32; 4];
+        label_to_classes(&raw, 4, 1, &mut out);
+        assert_eq!(out, raw);
+    }
+
+    #[test]
+    fn categorical_labels_become_class_indices() {
+        // 2 heads × 3 classes one-hot
+        let raw = [0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let mut out = [0.0f32; 2];
+        label_to_classes(&raw, 2, 3, &mut out);
+        assert_eq!(out, [1.0, 2.0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! DIALS: Distributed Influence-Augmented Local Simulators for parallel
+//! multi-agent reinforcement learning in large networked systems.
+//!
+//! Rust reproduction of Suau et al., NeurIPS 2022, as a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md). This crate is Layer 3: the
+//! coordinator, the simulators, and the PJRT runtime that executes the
+//! AOT-compiled network artifacts. Python never runs on the training path.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod influence;
+pub mod nn;
+pub mod ppo;
+pub mod runtime;
+pub mod sim;
+pub mod util;

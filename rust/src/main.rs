@@ -1,0 +1,141 @@
+//! `dials` — the DIALS leader binary.
+//!
+//! Subcommands:
+//!   train     run one experiment (GS | DIALS | untrained-DIALS)
+//!   eval      evaluate the scripted baselines on the GS
+//!   inspect   print an artifact set's interface contract
+//!   help      usage
+//!
+//! Examples:
+//!   dials train --domain traffic --mode dials --grid-side 2 --total-steps 4000
+//!   dials train --config configs/traffic_4.toml
+//!   dials eval --domain warehouse --grid-side 5
+//!   dials inspect --domain traffic
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use dials::baselines::{scripted_return, GsTrainer};
+use dials::config::{Domain, ExperimentConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::runtime::{ArtifactSet, Engine};
+use dials::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(rest.iter().cloned())?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `dials help`)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_cli(args)?;
+    eprintln!(
+        "[dials] {} / {} / {} agents / {} steps (F={}, seed={})",
+        cfg.domain.name(), cfg.mode.label(), cfg.n_agents(), cfg.total_steps,
+        cfg.aip_train_freq, cfg.seed
+    );
+    let engine = Engine::cpu()?;
+    let coord = DialsCoordinator::new(&engine, cfg.clone())?;
+    let load = args.get("load-ckpt").map(Path::new);
+    let save = args.get("save-ckpt").map(Path::new);
+    let log = match cfg.mode {
+        SimMode::GlobalSim => GsTrainer::new(coord).run()?,
+        _ => coord.run_ckpt(load, save)?,
+    };
+    println!("mode,step,eval_return");
+    for p in &log.eval_curve {
+        println!("{},{},{:.4}", log.label, p.step, p.value);
+    }
+    if !log.ce_curve.is_empty() {
+        println!("# ce curve (step,ce)");
+        for p in &log.ce_curve {
+            println!("# {},{:.4}", p.step, p.value);
+        }
+    }
+    eprintln!(
+        "[dials] final_return={:.4} wall={:.2}s critical_path={:.2}s (agents={:.2}s influence={:.2}s)",
+        log.final_return, log.wall_seconds, log.critical_path_seconds,
+        log.agent_train_seconds, log.influence_seconds
+    );
+    if let Some(out) = args.get("out") {
+        if let Some(parent) = Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(out, log.to_csv())?;
+        eprintln!("[dials] curve written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let domain = Domain::parse(args.get_or("domain", "traffic"))?;
+    let side = args.get_usize("grid-side", 2)?;
+    let episodes = args.get_usize("episodes", 5)?;
+    let horizon = args.get_usize("horizon", 100)?;
+    let seed = args.get_u64("seed", 0)?;
+    let ret = scripted_return(domain, side, episodes, horizon, seed);
+    println!(
+        "scripted baseline: domain={} agents={} mean_return={ret:.4}",
+        domain.name(), side * side
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let domain = Domain::parse(args.get_or("domain", "traffic"))?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let engine = Engine::cpu()?;
+    let arts = ArtifactSet::load(&engine, Path::new(dir), domain)?;
+    let s = &arts.spec;
+    println!("domain            : {}", s.domain);
+    println!("obs/act dims      : {} / {}", s.obs_dim, s.act_dim);
+    println!("policy            : {} params, recurrent={}, h={}", s.policy_params, s.policy_recurrent, s.policy_hstate);
+    println!("aip               : {} params, recurrent={}, h={}", s.aip_params, s.aip_recurrent, s.aip_hstate);
+    println!("influence sources : {} heads × {} classes (u_dim {})", s.aip_heads, s.aip_cls, s.u_dim);
+    println!("update shapes     : minibatch={}, aip_batch={}, aip_seq={}", s.minibatch, s.aip_batch, s.aip_seq);
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "dials — Distributed Influence-Augmented Local Simulators (NeurIPS'22 reproduction)
+
+USAGE: dials <train|eval|inspect|help> [--flags]
+
+train:
+  --config FILE           TOML config (configs/*.toml); flags override
+  --domain traffic|warehouse     --mode gs|dials|untrained-dials
+  --grid-side N           agents = N²          --total-steps N
+  --aip-freq F            AIP retrain period   --aip-dataset N
+  --eval-every N          --eval-episodes N    --horizon N
+  --seed N  --threads N   --artifacts DIR      --out curve.csv
+  --save-ckpt DIR          save nets at end     --load-ckpt DIR resume
+eval:
+  --domain D --grid-side N --episodes N --horizon N  (scripted baseline)
+inspect:
+  --domain D --artifacts DIR   (print artifact interface contract)"
+    );
+}

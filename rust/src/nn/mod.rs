@@ -1,0 +1,180 @@
+//! Network state owned by the Rust side.
+//!
+//! Parameters and Adam moments are opaque flat f32 vectors that round-trip
+//! through the update executables; Rust only allocates, jitters (per-agent
+//! init), and book-keeps them.
+
+use crate::runtime::NetSpec;
+use crate::util::npk::Tensor;
+use crate::util::rng::Pcg64;
+
+/// One network's trainable state: flat params + Adam moments + step count.
+#[derive(Clone, Debug)]
+pub struct NetState {
+    pub flat: Tensor,
+    pub m: Tensor,
+    pub v: Tensor,
+    pub step: u64,
+    /// Bumped on every parameter change; the forward runtimes use it to
+    /// invalidate their device-resident parameter buffers.
+    pub version: u64,
+}
+
+impl NetState {
+    pub fn new(init: &Tensor) -> Self {
+        NetState {
+            flat: init.clone(),
+            m: Tensor::zeros(&[init.len()]),
+            v: Tensor::zeros(&[init.len()]),
+            step: 0,
+            version: 0,
+        }
+    }
+
+    /// Per-agent initialisation: the shared init vector plus small seeded
+    /// Gaussian jitter, so agents do not start from identical policies
+    /// (the original re-samples each network's init; the init logic lives
+    /// in Python here, so we perturb the emitted init instead).
+    pub fn jittered(init: &Tensor, rng: &mut Pcg64, scale: f32) -> Self {
+        let mut state = Self::new(init);
+        for w in state.flat.data.iter_mut() {
+            *w += scale * rng.normal() as f32;
+        }
+        state
+    }
+
+    /// The f32 Adam step counter tensor expected by the update artifacts
+    /// (1-based; call AFTER incrementing `step`).
+    pub fn step_tensor(&self) -> Tensor {
+        Tensor::scalar(self.step as f32)
+    }
+
+    /// Install the (params', m', v') returned by an update executable.
+    pub fn absorb(&mut self, flat: Tensor, m: Tensor, v: Tensor) {
+        debug_assert_eq!(flat.len(), self.flat.len());
+        self.flat = flat;
+        self.m = m;
+        self.v = v;
+        self.version += 1;
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.flat.data.iter().map(|w| w * w).sum::<f32>().sqrt()
+    }
+}
+
+/// All per-agent network state for one agent: policy + AIP.
+#[derive(Clone, Debug)]
+pub struct AgentNets {
+    pub policy: NetState,
+    pub aip: NetState,
+}
+
+impl AgentNets {
+    pub fn new(spec: &NetSpec, policy_init: &Tensor, aip_init: &Tensor, rng: &mut Pcg64) -> Self {
+        let _ = spec;
+        AgentNets {
+            policy: NetState::jittered(policy_init, rng, 0.01),
+            aip: NetState::jittered(aip_init, rng, 0.01),
+        }
+    }
+}
+
+/// Log-softmax over a logits row (numerically stable).
+pub fn log_softmax(logits: &[f32], out: &mut Vec<f32>) {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let log_z = logits.iter().map(|&l| (l - max).exp()).sum::<f32>().ln() + max;
+    out.clear();
+    out.extend(logits.iter().map(|&l| l - log_z));
+}
+
+/// Sample an action from logits; returns (action, log-prob of the action).
+pub fn sample_categorical(logits: &[f32], rng: &mut Pcg64) -> (usize, f32) {
+    let mut logp = Vec::with_capacity(logits.len());
+    log_softmax(logits, &mut logp);
+    let probs: Vec<f32> = logp.iter().map(|&lp| lp.exp()).collect();
+    let a = rng.categorical(&probs);
+    (a, logp[a])
+}
+
+/// Greedy argmax action.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netstate_init_and_absorb() {
+        let init = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut s = NetState::new(&init);
+        assert_eq!(s.m.data, vec![0.0; 4]);
+        assert_eq!(s.step, 0);
+        s.step += 1;
+        assert_eq!(s.step_tensor().data, vec![1.0]);
+        s.absorb(
+            Tensor::new(vec![4], vec![0.0; 4]),
+            Tensor::new(vec![4], vec![0.1; 4]),
+            Tensor::new(vec![4], vec![0.2; 4]),
+        );
+        assert_eq!(s.flat.data, vec![0.0; 4]);
+        assert_eq!(s.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn jitter_differs_between_agents() {
+        let init = Tensor::new(vec![8], vec![0.5; 8]);
+        let mut rng = Pcg64::seed(0);
+        let a = NetState::jittered(&init, &mut rng, 0.01);
+        let b = NetState::jittered(&init, &mut rng, 0.01);
+        assert_ne!(a.flat.data, b.flat.data);
+        // jitter is small
+        for (x, y) in a.flat.data.iter().zip(init.data.iter()) {
+            assert!((x - y).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalises() {
+        let mut out = Vec::new();
+        log_softmax(&[1.0, 2.0, 3.0], &mut out);
+        let total: f32 = out.iter().map(|l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(out[2] > out[1] && out[1] > out[0]);
+    }
+
+    #[test]
+    fn log_softmax_handles_extremes() {
+        let mut out = Vec::new();
+        log_softmax(&[1000.0, 0.0], &mut out);
+        assert!((out[0] - 0.0).abs() < 1e-4);
+        assert!(out[1] < -900.0);
+        assert!(out.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn categorical_sampling_respects_probs() {
+        let mut rng = Pcg64::seed(1);
+        let logits = [0.0f32, 2.0, -1.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            let (a, lp) = sample_categorical(&logits, &mut rng);
+            assert!(lp <= 0.0);
+            counts[a] += 1;
+        }
+        assert!(counts[1] > counts[0] && counts[0] > counts[2]);
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Rollout buffer: fixed-capacity, row-major storage of one agent's
+//! on-policy experience between updates.
+
+#[derive(Clone, Debug)]
+pub struct RolloutBuffer {
+    pub obs_dim: usize,
+    pub h_dim: usize,
+    capacity: usize,
+    /// [capacity × obs_dim] row-major observations.
+    pub obs: Vec<f32>,
+    /// [capacity × h_dim] policy hidden state BEFORE each step.
+    pub hstates: Vec<f32>,
+    pub actions: Vec<f32>,
+    pub logps: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub values: Vec<f32>,
+    pub dones: Vec<bool>,
+    len: usize,
+}
+
+impl RolloutBuffer {
+    pub fn new(capacity: usize, obs_dim: usize, h_dim: usize) -> Self {
+        RolloutBuffer {
+            obs_dim,
+            h_dim,
+            capacity,
+            obs: vec![0.0; capacity * obs_dim],
+            hstates: vec![0.0; capacity * h_dim],
+            actions: vec![0.0; capacity],
+            logps: vec![0.0; capacity],
+            rewards: vec![0.0; capacity],
+            values: vec![0.0; capacity],
+            dones: vec![false; capacity],
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.capacity
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        obs: &[f32],
+        hstate: &[f32],
+        action: usize,
+        logp: f32,
+        reward: f32,
+        value: f32,
+        done: bool,
+    ) {
+        assert!(self.len < self.capacity, "rollout buffer overflow");
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        debug_assert_eq!(hstate.len(), self.h_dim);
+        let i = self.len;
+        self.obs[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(obs);
+        self.hstates[i * self.h_dim..(i + 1) * self.h_dim].copy_from_slice(hstate);
+        self.actions[i] = action as f32;
+        self.logps[i] = logp;
+        self.rewards[i] = reward;
+        self.values[i] = value;
+        self.dones[i] = done;
+        self.len += 1;
+    }
+
+    pub fn obs_row(&self, i: usize) -> &[f32] {
+        &self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+    }
+
+    pub fn hstate_row(&self, i: usize) -> &[f32] {
+        &self.hstates[i * self.h_dim..(i + 1) * self.h_dim]
+    }
+
+    pub fn mean_reward(&self) -> f32 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.rewards[..self.len].iter().sum::<f32>() / self.len as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read_back() {
+        let mut b = RolloutBuffer::new(4, 3, 2);
+        b.push(&[1.0, 2.0, 3.0], &[0.5, 0.6], 1, -0.7, 0.9, 0.4, false);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.obs_row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.hstate_row(0), &[0.5, 0.6]);
+        assert_eq!(b.actions[0], 1.0);
+        assert!(!b.is_full());
+    }
+
+    #[test]
+    fn fills_to_capacity() {
+        let mut b = RolloutBuffer::new(2, 1, 1);
+        b.push(&[0.0], &[0.0], 0, 0.0, 0.0, 0.0, false);
+        b.push(&[1.0], &[0.0], 0, 0.0, 1.0, 0.0, true);
+        assert!(b.is_full());
+        assert_eq!(b.mean_reward(), 0.5);
+        b.clear();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut b = RolloutBuffer::new(1, 1, 1);
+        b.push(&[0.0], &[0.0], 0, 0.0, 0.0, 0.0, false);
+        b.push(&[0.0], &[0.0], 0, 0.0, 0.0, 0.0, false);
+    }
+}

@@ -1,0 +1,125 @@
+//! PPO on the Rust side: rollout storage, GAE(λ), and the minibatch loop
+//! driving the `ppo_update` artifact (the clipped objective + Adam live in
+//! the compiled graph; see python/compile/model.py).
+
+mod buffer;
+mod trainer;
+
+pub use buffer::RolloutBuffer;
+pub use trainer::{PpoTrainer, UpdateMetrics};
+
+/// Generalised Advantage Estimation over a (possibly episode-spanning)
+/// rollout. `dones[t]` marks that step `t` TERMINATED its episode (the
+/// value bootstrap is cut after it). `last_value` bootstraps the final
+/// step when the rollout stops mid-episode.
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    dones: &[bool],
+    last_value: f32,
+    gamma: f32,
+    lambda: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = rewards.len();
+    debug_assert_eq!(values.len(), n);
+    debug_assert_eq!(dones.len(), n);
+    let mut advantages = vec![0.0f32; n];
+    let mut gae_acc = 0.0f32;
+    for t in (0..n).rev() {
+        let (next_value, next_nonterminal) = if dones[t] {
+            (0.0, 0.0)
+        } else if t == n - 1 {
+            (last_value, 1.0)
+        } else {
+            (values[t + 1], 1.0)
+        };
+        let delta = rewards[t] + gamma * next_value - values[t];
+        gae_acc = delta + gamma * lambda * next_nonterminal * gae_acc;
+        if dones[t] {
+            // restart accumulation at episode boundaries
+            gae_acc = delta;
+        }
+        advantages[t] = gae_acc;
+    }
+    let returns: Vec<f32> = advantages.iter().zip(values).map(|(a, v)| a + v).collect();
+    (advantages, returns)
+}
+
+/// Normalise advantages to zero mean / unit std (standard PPO practice).
+pub fn normalise(xs: &mut [f32]) {
+    if xs.len() < 2 {
+        return;
+    }
+    let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+    let std = var.sqrt().max(1e-8);
+    for x in xs.iter_mut() {
+        *x = (*x - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gae_single_step_episode() {
+        // one step, terminal: A = r - V, return = r
+        let (adv, ret) = gae(&[1.0], &[0.4], &[true], 9.9, 0.99, 0.95);
+        assert!((adv[0] - 0.6).abs() < 1e-6);
+        assert!((ret[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_bootstraps_when_truncated() {
+        // non-terminal last step bootstraps with last_value
+        let (adv, _) = gae(&[0.0], &[0.0], &[false], 1.0, 0.5, 1.0);
+        assert!((adv[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        let gamma = 0.9;
+        let lambda = 0.8;
+        let rewards = [1.0, 0.0, 2.0];
+        let values = [0.5, 0.4, 0.3];
+        let dones = [false, false, true];
+        let d2 = 2.0 - 0.3; // terminal
+        let d1 = 0.0 + gamma * 0.3 - 0.4;
+        let d0 = 1.0 + gamma * 0.4 - 0.5;
+        let a2 = d2;
+        let a1 = d1 + gamma * lambda * a2;
+        let a0 = d0 + gamma * lambda * a1;
+        let (adv, ret) = gae(&rewards, &values, &dones, 0.0, gamma, lambda);
+        assert!((adv[2] - a2).abs() < 1e-5);
+        assert!((adv[1] - a1).abs() < 1e-5);
+        assert!((adv[0] - a0).abs() < 1e-5);
+        assert!((ret[0] - (a0 + 0.5)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gae_resets_across_episode_boundary() {
+        // two one-step episodes: the second's advantage is independent of
+        // the first's reward
+        let (adv_a, _) = gae(&[5.0, 1.0], &[0.0, 0.0], &[true, true], 0.0, 0.99, 0.95);
+        let (adv_b, _) = gae(&[0.0, 1.0], &[0.0, 0.0], &[true, true], 0.0, 0.99, 0.95);
+        assert!((adv_a[1] - adv_b[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalise_zero_mean_unit_std() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0];
+        normalise(&mut xs);
+        let mean: f32 = xs.iter().sum::<f32>() / 4.0;
+        let var: f32 = xs.iter().map(|x| x * x).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn normalise_noop_on_tiny_slices() {
+        let mut xs = vec![5.0];
+        normalise(&mut xs);
+        assert_eq!(xs, vec![5.0]);
+    }
+}

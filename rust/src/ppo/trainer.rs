@@ -1,0 +1,121 @@
+//! The PPO trainer: epochs × shuffled minibatches, each minibatch one call
+//! into the `ppo_update` artifact (clipped surrogate + Adam in-graph).
+//!
+//! Hot path (§Perf): params / Adam moments are uploaded to the device once
+//! per update and the (params', m', v') outputs chain straight into the
+//! next minibatch via `run_b`; only the small staging tensors and the loss
+//! metrics cross the host boundary per minibatch.
+
+use anyhow::{ensure, Result};
+
+use crate::config::PpoConfig;
+use crate::nn::NetState;
+use crate::runtime::ArtifactSet;
+use crate::util::npk::Tensor;
+use crate::util::rng::Pcg64;
+
+use super::{gae, normalise, RolloutBuffer};
+
+/// Averaged loss metrics over one `update` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateMetrics {
+    pub total: f32,
+    pub pg: f32,
+    pub vf: f32,
+    pub entropy: f32,
+    pub minibatches: usize,
+}
+
+pub struct PpoTrainer {
+    pub cfg: PpoConfig,
+}
+
+impl PpoTrainer {
+    pub fn new(cfg: PpoConfig) -> Self {
+        PpoTrainer { cfg }
+    }
+
+    /// Run the full PPO update for one rollout. `last_value` bootstraps a
+    /// truncated final episode. Mutates `net` in place.
+    pub fn update(
+        &self,
+        arts: &ArtifactSet,
+        net: &mut NetState,
+        buf: &RolloutBuffer,
+        last_value: f32,
+        rng: &mut Pcg64,
+    ) -> Result<UpdateMetrics> {
+        let n = buf.len();
+        let mb = self.cfg.minibatch;
+        ensure!(n > 0, "empty rollout");
+        ensure!(n % mb == 0, "rollout length {n} not a multiple of minibatch {mb}");
+
+        let (mut adv, ret) = gae(
+            &buf.rewards[..n],
+            &buf.values[..n],
+            &buf.dones[..n],
+            last_value,
+            self.cfg.gamma,
+            self.cfg.gae_lambda,
+        );
+        normalise(&mut adv);
+
+        let mut indices: Vec<usize> = (0..n).collect();
+        let mut metrics = UpdateMetrics::default();
+        let engine = &arts.engine;
+
+        // Device-resident packed state [flat|m|v|metrics4], chained across
+        // minibatches (uploaded once, downloaded once).
+        let p = net.flat.len();
+        let mut packed = Vec::with_capacity(3 * p + 4);
+        packed.extend_from_slice(&net.flat.data);
+        packed.extend_from_slice(&net.m.data);
+        packed.extend_from_slice(&net.v.data);
+        packed.extend_from_slice(&[0.0; 4]);
+        let mut d_state = engine.upload(&Tensor::new(vec![3 * p + 4], packed))?;
+
+        // Single packed staging tensor per minibatch (one upload):
+        // [t | obs | h | act | old_logp | adv | ret]
+        let (od, hd) = (buf.obs_dim, buf.h_dim);
+        let batch_len = 1 + mb * (od + hd + 4);
+        let mut t_batch = Tensor::zeros(&[batch_len]);
+        let (o_obs, o_h) = (1, 1 + mb * od);
+        let o_act = o_h + mb * hd;
+        let (o_logp, o_adv, o_ret) = (o_act + mb, o_act + 2 * mb, o_act + 3 * mb);
+
+        for _epoch in 0..self.cfg.epochs {
+            rng.shuffle(&mut indices);
+            for chunk in indices.chunks_exact(mb) {
+                for (row, &i) in chunk.iter().enumerate() {
+                    t_batch.data[o_obs + row * od..o_obs + (row + 1) * od]
+                        .copy_from_slice(buf.obs_row(i));
+                    t_batch.data[o_h + row * hd..o_h + (row + 1) * hd]
+                        .copy_from_slice(buf.hstate_row(i));
+                    t_batch.data[o_act + row] = buf.actions[i];
+                    t_batch.data[o_logp + row] = buf.logps[i];
+                    t_batch.data[o_adv + row] = adv[i];
+                    t_batch.data[o_ret + row] = ret[i];
+                }
+                net.step += 1;
+                t_batch.data[0] = net.step as f32;
+                let d_batch = engine.upload(&t_batch)?;
+                let mut outs = arts.ppo_update.run_b(&[&d_state, &d_batch])?;
+                d_state = outs.pop().unwrap();
+                metrics.minibatches += 1;
+            }
+        }
+        // One host download at the end of the whole update.
+        let out = d_state.to_tensor()?.data;
+        net.absorb(
+            Tensor::new(vec![p], out[..p].to_vec()),
+            Tensor::new(vec![p], out[p..2 * p].to_vec()),
+            Tensor::new(vec![p], out[2 * p..3 * p].to_vec()),
+        );
+        // metrics tail reports the LAST minibatch (diagnostic only).
+        metrics.total = out[3 * p];
+        metrics.pg = out[3 * p + 1];
+        metrics.vf = out[3 * p + 2];
+        metrics.entropy = out[3 * p + 3];
+        Ok(metrics)
+    }
+}

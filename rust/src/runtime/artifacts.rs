@@ -1,0 +1,184 @@
+//! Artifact registry: the `.meta` interface contract + the five compiled
+//! executables of one domain.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Domain;
+use crate::sim;
+use crate::util::npk::{read_npk, Tensor};
+
+use super::{Engine, Exec};
+
+/// Parsed `<domain>.meta` — the interface contract emitted by aot.py.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub domain: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub policy_recurrent: bool,
+    pub policy_hstate: usize,
+    pub policy_params: usize,
+    pub aip_feat: usize,
+    pub aip_recurrent: bool,
+    pub aip_hstate: usize,
+    pub aip_params: usize,
+    pub aip_heads: usize,
+    pub aip_cls: usize,
+    pub u_dim: usize,
+    pub minibatch: usize,
+    pub aip_batch: usize,
+    pub aip_seq: usize,
+}
+
+impl NetSpec {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("bad meta line {line:?}");
+            };
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("meta missing key {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("meta key {k} not an integer"))
+        };
+        Ok(NetSpec {
+            domain: kv.get("domain").cloned().unwrap_or_default(),
+            obs_dim: get("obs_dim")?,
+            act_dim: get("act_dim")?,
+            policy_recurrent: get("policy_recurrent")? != 0,
+            policy_hstate: get("policy_hstate")?,
+            policy_params: get("policy_params")?,
+            aip_feat: get("aip_feat")?,
+            aip_recurrent: get("aip_recurrent")? != 0,
+            aip_hstate: get("aip_hstate")?,
+            aip_params: get("aip_params")?,
+            aip_heads: get("aip_heads")?,
+            aip_cls: get("aip_cls")?,
+            u_dim: get("u_dim")?,
+            minibatch: get("minibatch")?,
+            aip_batch: get("aip_batch")?,
+            aip_seq: get("aip_seq")?,
+        })
+    }
+
+    /// Cross-check against the Rust simulators' compile-time constants —
+    /// catches Python/Rust interface drift at startup.
+    pub fn validate_against_sim(&self, domain: Domain) -> Result<()> {
+        let (obs, act, u) = match domain {
+            Domain::Traffic => (sim::TRAFFIC_OBS, sim::TRAFFIC_ACT, sim::TRAFFIC_U_DIM),
+            Domain::Warehouse => (sim::WAREHOUSE_OBS, sim::WAREHOUSE_ACT, sim::WAREHOUSE_U_DIM),
+        };
+        if self.obs_dim != obs || self.act_dim != act || self.u_dim != u {
+            bail!(
+                "artifact/simulator interface drift for {}: meta (obs={}, act={}, u={}) \
+                 vs sim (obs={obs}, act={act}, u={u}) — re-run `make artifacts`",
+                domain.name(), self.obs_dim, self.act_dim, self.u_dim
+            );
+        }
+        if self.aip_feat != obs + act {
+            bail!("aip_feat {} != obs+act {}", self.aip_feat, obs + act);
+        }
+        Ok(())
+    }
+}
+
+/// Everything the coordinator needs for one domain: compiled executables,
+/// the interface spec, the initial parameter vectors, and the engine
+/// handle (for device-buffer uploads on the hot path).
+pub struct ArtifactSet {
+    pub spec: NetSpec,
+    pub engine: Engine,
+    pub policy_step: Exec,
+    pub ppo_update: Exec,
+    pub aip_forward: Exec,
+    pub aip_update: Exec,
+    pub aip_eval: Exec,
+    pub policy_init: Tensor,
+    pub aip_init: Tensor,
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Load + compile every artifact of `domain` from `dir`.
+    pub fn load(engine: &Engine, dir: &Path, domain: Domain) -> Result<Arc<Self>> {
+        let d = domain.name();
+        let meta_path = dir.join(format!("{d}.meta"));
+        let meta_text = std::fs::read_to_string(&meta_path).with_context(|| {
+            format!(
+                "read {} — did you run `make artifacts`?",
+                meta_path.display()
+            )
+        })?;
+        let spec = NetSpec::parse(&meta_text)?;
+        spec.validate_against_sim(domain)?;
+
+        let load = |name: &str| engine.load_hlo(&dir.join(format!("{d}_{name}.hlo.txt")));
+        let set = ArtifactSet {
+            engine: engine.clone(),
+            policy_step: load("policy_step")?,
+            ppo_update: load("ppo_update")?,
+            aip_forward: load("aip_forward")?,
+            aip_update: load("aip_update")?,
+            aip_eval: load("aip_eval")?,
+            policy_init: read_npk(&dir.join(format!("{d}_policy_init.npk")))?,
+            aip_init: read_npk(&dir.join(format!("{d}_aip_init.npk")))?,
+            spec,
+            dir: dir.to_path_buf(),
+        };
+        if set.policy_init.len() != set.spec.policy_params {
+            bail!(
+                "policy_init length {} != meta policy_params {}",
+                set.policy_init.len(), set.spec.policy_params
+            );
+        }
+        if set.aip_init.len() != set.spec.aip_params {
+            bail!("aip_init length {} != meta aip_params {}", set.aip_init.len(), set.spec.aip_params);
+        }
+        Ok(Arc::new(set))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = "domain=traffic\nobs_dim=27\nact_dim=2\npolicy_recurrent=0\n\
+                        policy_hstate=1\npolicy_params=6147\naip_feat=29\naip_recurrent=0\n\
+                        aip_hstate=1\naip_params=6340\naip_heads=4\naip_cls=1\nu_dim=4\n\
+                        minibatch=32\naip_batch=128\naip_seq=1\nseed=0\n";
+
+    #[test]
+    fn parses_meta() {
+        let spec = NetSpec::parse(META).unwrap();
+        assert_eq!(spec.obs_dim, 27);
+        assert_eq!(spec.act_dim, 2);
+        assert!(!spec.policy_recurrent);
+        assert_eq!(spec.minibatch, 32);
+        spec.validate_against_sim(Domain::Traffic).unwrap();
+    }
+
+    #[test]
+    fn drift_detected() {
+        let spec = NetSpec::parse(META).unwrap();
+        // traffic meta validated against warehouse sims must fail
+        assert!(spec.validate_against_sim(Domain::Warehouse).is_err());
+    }
+
+    #[test]
+    fn missing_keys_rejected() {
+        assert!(NetSpec::parse("domain=traffic\n").is_err());
+        assert!(NetSpec::parse("garbage line\n").is_err());
+    }
+}

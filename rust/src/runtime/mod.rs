@@ -1,0 +1,16 @@
+//! Runtime: load and execute the AOT-compiled HLO artifacts via PJRT.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `client.compile` → `execute`. The rust binary is
+//! self-contained after `make artifacts`; Python never runs here.
+//!
+//! `Engine`/`Exec` are shared across the coordinator's worker threads —
+//! the underlying XLA PJRT CPU client is thread-safe, the Rust wrapper
+//! types just don't carry the marker traits, hence the scoped
+//! `unsafe impl Send/Sync` below.
+
+mod artifacts;
+mod exec;
+
+pub use artifacts::{ArtifactSet, NetSpec};
+pub use exec::{DeviceTensor, Engine, Exec};

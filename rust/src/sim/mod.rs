@@ -1,0 +1,85 @@
+//! Simulation substrates.
+//!
+//! The paper evaluates DIALS on two networked multi-agent environments:
+//! a signalised traffic grid (built on SUMO/Flow in the original; rebuilt
+//! here as a microscopic cellular-automaton model — see DESIGN.md) and a
+//! warehouse commissioning task (re-implemented from the paper's spec).
+//!
+//! Each domain provides a **global simulator** (GS: the whole networked
+//! system) and a **local simulator** (LS: one agent's region, driven by
+//! influence-source samples instead of the rest of the system). The
+//! interface constants mirror `python/compile/envspec.py`; the Rust loader
+//! cross-checks them against each artifact's `.meta` file at startup.
+
+pub mod traffic;
+pub mod warehouse;
+
+use crate::util::rng::Pcg64;
+
+// ---- traffic interface dims (= envspec.py) ------------------------------
+pub const TRAFFIC_LANES: usize = 4;
+pub const TRAFFIC_VISIBLE_CELLS: usize = 6;
+pub const TRAFFIC_OBS: usize = TRAFFIC_LANES * TRAFFIC_VISIBLE_CELLS + 2 + 1; // 27
+pub const TRAFFIC_ACT: usize = 2;
+pub const TRAFFIC_U_DIM: usize = TRAFFIC_LANES; // 4 Bernoulli sources
+
+// ---- warehouse interface dims (= envspec.py) ----------------------------
+pub const WAREHOUSE_REGION: usize = 5;
+pub const WAREHOUSE_ITEM_SLOTS: usize = 12;
+pub const WAREHOUSE_OBS: usize = WAREHOUSE_REGION * WAREHOUSE_REGION + WAREHOUSE_ITEM_SLOTS; // 37
+pub const WAREHOUSE_ACT: usize = 5;
+pub const WAREHOUSE_N_HEADS: usize = 4;
+pub const WAREHOUSE_N_CLS: usize = 4;
+pub const WAREHOUSE_U_DIM: usize = WAREHOUSE_N_HEADS * WAREHOUSE_N_CLS; // 16 probs
+
+/// A global simulator over all `n_agents()` coupled local regions.
+///
+/// Influence-source labels `u_i^t` are recorded *during* `step` (they are
+/// the realised boundary events of the transition s^t → s^{t+1}, exactly
+/// what the IALM's local transition conditions on) and stay readable via
+/// `influence_label` until the next `step`.
+pub trait GlobalSim: Send {
+    fn n_agents(&self) -> usize;
+    fn obs_dim(&self) -> usize;
+    fn n_actions(&self) -> usize;
+    /// Width of one agent's influence label vector.
+    fn u_dim(&self) -> usize;
+
+    fn reset(&mut self, rng: &mut Pcg64);
+    /// Write agent `i`'s local observation into `out` (len = obs_dim).
+    fn observe(&self, agent: usize, out: &mut [f32]);
+    /// Advance one joint step; returns per-agent local rewards.
+    fn step(&mut self, actions: &[usize], rng: &mut Pcg64) -> Vec<f32>;
+    /// Influence label for agent `i` realised during the last `step`.
+    /// Traffic: 4 × {0,1}. Warehouse: 4 × one-hot(4) flattened.
+    fn influence_label(&self, agent: usize, out: &mut [f32]);
+}
+
+/// A local simulator of one agent's region, driven by sampled influence
+/// sources `u` instead of the surrounding system (paper Algorithm 3).
+pub trait LocalSim: Send {
+    fn obs_dim(&self) -> usize;
+    fn n_actions(&self) -> usize;
+    /// Width of the influence sample `u` expected by `step`.
+    /// Traffic: 4 × {0,1}. Warehouse: 4 × class index (len 4).
+    fn u_len(&self) -> usize;
+
+    fn reset(&mut self, rng: &mut Pcg64);
+    fn observe(&self, out: &mut [f32]);
+    /// Advance one step under `action` with influence sample `u`;
+    /// returns the local reward.
+    fn step(&mut self, action: usize, u: &[f32], rng: &mut Pcg64) -> f32;
+}
+
+/// Convenience: allocate and fill an observation vector.
+pub fn observe_vec_global(sim: &dyn GlobalSim, agent: usize) -> Vec<f32> {
+    let mut v = vec![0.0; sim.obs_dim()];
+    sim.observe(agent, &mut v);
+    v
+}
+
+pub fn observe_vec_local(sim: &dyn LocalSim) -> Vec<f32> {
+    let mut v = vec![0.0; sim.obs_dim()];
+    sim.observe(&mut v);
+    v
+}

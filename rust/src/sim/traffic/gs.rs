@@ -1,0 +1,409 @@
+//! The traffic GLOBAL simulator: an n×n grid of signalised intersections.
+//!
+//! Every interior road segment is stored as the incoming lane of its
+//! downstream intersection; cars leaving the grid enter per-edge sink
+//! segments. One tick (paper's GS step):
+//!
+//!   1. actions → light phases
+//!   2. crossings: stop-line cars on green lanes cross, turn, and enter
+//!      the downstream segment's entry cell (recorded as an influence
+//!      event for the downstream agent) or a sink segment
+//!   3. boundary inflows: Bernoulli(BOUNDARY_INFLOW) spawns at edge lanes
+//!      (also influence events)
+//!   4. all segments advance one CA step; sinks drain
+//!   5. local rewards = moved / max(1, cars) over each agent's 4 incoming
+//!      lanes (mean car speed with v_max = 1, paper §5.2)
+
+use crate::sim::{GlobalSim, TRAFFIC_ACT, TRAFFIC_OBS, TRAFFIC_U_DIM};
+use crate::util::rng::Pcg64;
+
+use super::{exit_dir, sample_turn, Dir, Light, Segment, BOUNDARY_INFLOW, DIRS, SEG_LEN};
+
+pub struct TrafficGlobalSim {
+    side: usize,
+    /// incoming[agent][dir] — lane arriving at `agent` from `dir`.
+    incoming: Vec<[Segment; 4]>,
+    /// Sink segments for cars leaving the grid: sinks[agent][dir] is only
+    /// used when `agent` has no neighbour toward `dir`.
+    sinks: Vec<[Segment; 4]>,
+    lights: Vec<Light>,
+    /// Influence labels realised during the last step: u[agent][lane].
+    labels: Vec<[f32; TRAFFIC_U_DIM]>,
+    /// Per-agent (moved, cars) accumulators of the last step.
+    rewards: Vec<f32>,
+    inflow: f64,
+}
+
+impl TrafficGlobalSim {
+    pub fn new(side: usize) -> Self {
+        assert!(side >= 1);
+        let n = side * side;
+        TrafficGlobalSim {
+            side,
+            incoming: (0..n).map(|_| Default::default()).collect(),
+            sinks: (0..n).map(|_| Default::default()).collect(),
+            lights: vec![Light::new(); n],
+            labels: vec![[0.0; TRAFFIC_U_DIM]; n],
+            rewards: vec![0.0; n],
+            inflow: BOUNDARY_INFLOW,
+        }
+    }
+
+    pub fn with_inflow(side: usize, inflow: f64) -> Self {
+        let mut s = Self::new(side);
+        s.inflow = inflow;
+        s
+    }
+
+    pub fn side(&self) -> usize {
+        self.side
+    }
+
+    fn agent_at(&self, r: i64, c: i64) -> Option<usize> {
+        if r < 0 || c < 0 || r >= self.side as i64 || c >= self.side as i64 {
+            None
+        } else {
+            Some(r as usize * self.side + c as usize)
+        }
+    }
+
+    fn coords(&self, agent: usize) -> (i64, i64) {
+        ((agent / self.side) as i64, (agent % self.side) as i64)
+    }
+
+    /// Neighbour agent in direction `d` of `agent`, if on the grid.
+    fn neighbour(&self, agent: usize, d: Dir) -> Option<usize> {
+        let (r, c) = self.coords(agent);
+        let (dr, dc) = d.delta();
+        self.agent_at(r + dr, c + dc)
+    }
+
+    /// Total cars currently in the system (for conservation tests).
+    pub fn total_cars(&self) -> usize {
+        let inc: usize = self.incoming.iter().flat_map(|l| l.iter()).map(|s| s.car_count()).sum();
+        let snk: usize = self.sinks.iter().flat_map(|l| l.iter()).map(|s| s.car_count()).sum();
+        inc + snk
+    }
+
+    pub fn light(&self, agent: usize) -> &Light {
+        &self.lights[agent]
+    }
+}
+
+impl GlobalSim for TrafficGlobalSim {
+    fn n_agents(&self) -> usize {
+        self.side * self.side
+    }
+
+    fn obs_dim(&self) -> usize {
+        TRAFFIC_OBS
+    }
+
+    fn n_actions(&self) -> usize {
+        TRAFFIC_ACT
+    }
+
+    fn u_dim(&self) -> usize {
+        TRAFFIC_U_DIM
+    }
+
+    fn reset(&mut self, _rng: &mut Pcg64) {
+        for lanes in self.incoming.iter_mut().chain(self.sinks.iter_mut()) {
+            for seg in lanes.iter_mut() {
+                seg.clear();
+            }
+        }
+        for l in self.lights.iter_mut() {
+            *l = Light::new();
+        }
+        for lab in self.labels.iter_mut() {
+            *lab = [0.0; TRAFFIC_U_DIM];
+        }
+    }
+
+    fn observe(&self, agent: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), TRAFFIC_OBS);
+        for (d, lane) in self.incoming[agent].iter().enumerate() {
+            lane.write_occupancy(&mut out[d * SEG_LEN..(d + 1) * SEG_LEN]);
+        }
+        let base = 4 * SEG_LEN;
+        let light = &self.lights[agent];
+        out[base] = if light.phase.serves(Dir::N) { 1.0 } else { 0.0 };
+        out[base + 1] = 1.0 - out[base];
+        out[base + 2] = light.time_feature();
+    }
+
+    fn step(&mut self, actions: &[usize], rng: &mut Pcg64) -> Vec<f32> {
+        let n = self.n_agents();
+        debug_assert_eq!(actions.len(), n);
+
+        // 1. lights
+        for (l, &a) in self.lights.iter_mut().zip(actions) {
+            l.act(a);
+        }
+        for lab in self.labels.iter_mut() {
+            *lab = [0.0; TRAFFIC_U_DIM];
+        }
+        let mut moved = vec![0usize; n];
+        let mut cars = vec![0usize; n];
+        for agent in 0..n {
+            cars[agent] = self.incoming[agent].iter().map(|s| s.car_count()).sum();
+        }
+
+        // 2. crossings (fixed agent order keeps runs deterministic)
+        for agent in 0..n {
+            for d in DIRS {
+                if !self.lights[agent].phase.serves(d) {
+                    continue;
+                }
+                if !self.incoming[agent][d.idx()].at_stop_line() {
+                    continue;
+                }
+                let out_dir = exit_dir(d, sample_turn(rng));
+                match self.neighbour(agent, out_dir) {
+                    Some(tgt) => {
+                        // downstream lane arrives at tgt FROM the opposite dir
+                        let lane = out_dir.opposite().idx();
+                        if self.incoming[tgt][lane].entry_free() {
+                            self.incoming[agent][d.idx()].pop_stop_line();
+                            self.incoming[tgt][lane].push_entry();
+                            self.labels[tgt][lane] = 1.0;
+                            moved[agent] += 1;
+                        }
+                        // else: blocked by downstream congestion, car waits
+                    }
+                    None => {
+                        // leaves the grid through this agent's sink
+                        let sink = &mut self.sinks[agent][out_dir.idx()];
+                        if sink.entry_free() {
+                            sink.push_entry();
+                            self.incoming[agent][d.idx()].pop_stop_line();
+                            moved[agent] += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // 3. boundary inflows (lanes whose upstream is outside the grid)
+        for agent in 0..n {
+            for d in DIRS {
+                if self.neighbour(agent, d).is_none()
+                    && rng.bernoulli(self.inflow)
+                    && self.incoming[agent][d.idx()].entry_free()
+                {
+                    self.incoming[agent][d.idx()].push_entry();
+                    self.labels[agent][d.idx()] = 1.0;
+                    moved[agent] += 1;
+                    cars[agent] += 1; // entered this tick; counts as moving car
+                }
+            }
+        }
+
+        // 4. CA advance
+        for agent in 0..n {
+            for d in DIRS {
+                moved[agent] += self.incoming[agent][d.idx()].advance();
+                self.sinks[agent][d.idx()].advance_and_drain();
+            }
+        }
+
+        // 5. rewards = mean speed over the agent's incoming lanes
+        for agent in 0..n {
+            self.rewards[agent] = if cars[agent] == 0 {
+                1.0 // free-flowing empty region
+            } else {
+                moved[agent] as f32 / cars[agent] as f32
+            };
+        }
+        self.rewards.clone()
+    }
+
+    fn influence_label(&self, agent: usize, out: &mut [f32]) {
+        out.copy_from_slice(&self.labels[agent]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::observe_vec_global;
+
+    fn keep_all(n: usize) -> Vec<usize> {
+        vec![0; n]
+    }
+
+    #[test]
+    fn reset_empties_the_grid() {
+        let mut gs = TrafficGlobalSim::new(3);
+        let mut rng = Pcg64::seed(0);
+        gs.reset(&mut rng);
+        for _ in 0..10 {
+            gs.step(&keep_all(9), &mut rng);
+        }
+        assert!(gs.total_cars() > 0);
+        gs.reset(&mut rng);
+        assert_eq!(gs.total_cars(), 0);
+    }
+
+    #[test]
+    fn cars_flow_in_from_boundaries() {
+        let mut gs = TrafficGlobalSim::new(2);
+        let mut rng = Pcg64::seed(1);
+        gs.reset(&mut rng);
+        gs.step(&keep_all(4), &mut rng);
+        // With inflow 0.25 over 8 boundary lanes (2x2 grid: each corner has
+        // 2 boundary incoming lanes) some cars should appear quickly.
+        let mut seen = gs.total_cars();
+        for _ in 0..20 {
+            gs.step(&keep_all(4), &mut rng);
+            seen = seen.max(gs.total_cars());
+        }
+        assert!(seen > 0);
+    }
+
+    #[test]
+    fn determinism_given_seed_and_actions() {
+        let run = || {
+            let mut gs = TrafficGlobalSim::new(2);
+            let mut rng = Pcg64::seed(7);
+            gs.reset(&mut rng);
+            let mut trace = Vec::new();
+            for t in 0..50 {
+                let acts: Vec<usize> = (0..4).map(|i| ((t + i) % 7 == 0) as usize).collect();
+                let r = gs.step(&acts, &mut rng);
+                trace.push((r, gs.total_cars()));
+            }
+            trace
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn influence_labels_match_entry_events() {
+        // Inflow 1.0: every free boundary entry cell receives a car, and
+        // the label for that lane must be 1.
+        let mut gs = TrafficGlobalSim::with_inflow(1, 1.0);
+        let mut rng = Pcg64::seed(2);
+        gs.reset(&mut rng);
+        gs.step(&[0], &mut rng);
+        let mut u = [0.0f32; 4];
+        gs.influence_label(0, &mut u);
+        assert_eq!(u, [1.0; 4]); // single intersection: all 4 lanes are boundary
+    }
+
+    #[test]
+    fn labels_zero_with_no_inflow() {
+        let mut gs = TrafficGlobalSim::with_inflow(2, 0.0);
+        let mut rng = Pcg64::seed(3);
+        gs.reset(&mut rng);
+        gs.step(&keep_all(4), &mut rng);
+        for agent in 0..4 {
+            let mut u = [9.0f32; 4];
+            gs.influence_label(agent, &mut u);
+            assert_eq!(u, [0.0; 4]);
+        }
+    }
+
+    #[test]
+    fn observation_layout() {
+        let mut gs = TrafficGlobalSim::with_inflow(1, 0.0);
+        let mut rng = Pcg64::seed(4);
+        gs.reset(&mut rng);
+        let obs = observe_vec_global(&gs, 0);
+        assert_eq!(obs.len(), TRAFFIC_OBS);
+        // empty grid: occupancy zeros, NS-green one-hot, time 0
+        assert!(obs[..24].iter().all(|&x| x == 0.0));
+        assert_eq!(obs[24], 1.0);
+        assert_eq!(obs[25], 0.0);
+        assert_eq!(obs[26], 0.0);
+    }
+
+    #[test]
+    fn switching_changes_phase_observation() {
+        let mut gs = TrafficGlobalSim::with_inflow(1, 0.0);
+        let mut rng = Pcg64::seed(5);
+        gs.reset(&mut rng);
+        gs.step(&[1], &mut rng);
+        let obs = observe_vec_global(&gs, 0);
+        assert_eq!(obs[24], 0.0);
+        assert_eq!(obs[25], 1.0);
+    }
+
+    #[test]
+    fn cars_conserved_modulo_boundary_events() {
+        // No inflow, cars drain out via sinks only: total cars never grows.
+        let mut gs = TrafficGlobalSim::with_inflow(2, 0.3);
+        let mut rng = Pcg64::seed(6);
+        gs.reset(&mut rng);
+        // seed some traffic
+        for _ in 0..30 {
+            gs.step(&keep_all(4), &mut rng);
+        }
+        let mut gs_no_inflow = gs;
+        gs_no_inflow.inflow = 0.0;
+        let mut prev = gs_no_inflow.total_cars();
+        for t in 0..60 {
+            let acts: Vec<usize> = (0..4).map(|i| ((t + i) % 5 == 0) as usize).collect();
+            gs_no_inflow.step(&acts, &mut rng);
+            let now = gs_no_inflow.total_cars();
+            assert!(now <= prev, "cars appeared from nowhere: {prev} -> {now}");
+            prev = now;
+        }
+    }
+
+    #[test]
+    fn green_wave_drains_queue_faster_than_red() {
+        // Single intersection, cars arriving from N only. Holding NS-green
+        // must yield strictly better reward than holding EW-green.
+        let reward_sum = |hold_ns: bool| {
+            let mut gs = TrafficGlobalSim::with_inflow(1, 0.0);
+            let mut rng = Pcg64::seed(8);
+            gs.reset(&mut rng);
+            // Inject a queue on the N lane.
+            for j in 0..SEG_LEN {
+                gs.incoming[0][Dir::N.idx()].occ[j] = true;
+            }
+            let first_action = if hold_ns { 0 } else { 1 };
+            let mut total = 0.0;
+            for t in 0..10 {
+                let a = if t == 0 { first_action } else { 0 };
+                total += gs.step(&[a], &mut rng)[0];
+            }
+            total
+        };
+        assert!(reward_sum(true) > reward_sum(false));
+    }
+
+    #[test]
+    fn crossing_cars_enter_neighbour_lane_and_label_it() {
+        // 1x2 grid: force a car at agent 0's W stop line with EW green and
+        // straight-only routing — it must enter agent 1's W lane.
+        let mut gs = TrafficGlobalSim::with_inflow(2, 0.0);
+        // make it 1 row x 2 cols by using side=2 but only using row 0
+        let mut rng = Pcg64::seed(9);
+        gs.reset(&mut rng);
+        gs.incoming[0][Dir::W.idx()].occ[SEG_LEN - 1] = true;
+        // switch both lights to EW green
+        gs.step(&[1, 1, 1, 1], &mut rng);
+        // car from W goes straight (p=0.6), left (exit S) or right (exit N
+        // = off-grid sink for row 0). Re-run with several seeds until the
+        // straight turn happens; label must appear on agent 1 lane W.
+        let mut hit = false;
+        for seed in 0..20 {
+            let mut gs = TrafficGlobalSim::with_inflow(2, 0.0);
+            let mut rng = Pcg64::seed(seed);
+            gs.reset(&mut rng);
+            gs.incoming[0][Dir::W.idx()].occ[SEG_LEN - 1] = true;
+            gs.step(&[1, 1, 1, 1], &mut rng); // EW green; crossing may happen
+            let mut u = [0.0f32; 4];
+            gs.influence_label(1, &mut u);
+            if u[Dir::W.idx()] == 1.0 {
+                assert!(gs.incoming[1][Dir::W.idx()].occ[0]);
+                hit = true;
+                break;
+            }
+        }
+        assert!(hit, "straight crossing never materialised across 20 seeds");
+    }
+}

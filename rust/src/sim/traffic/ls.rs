@@ -1,0 +1,224 @@
+//! The traffic LOCAL simulator: one intersection driven by influence
+//! samples (paper Algorithm 3).
+//!
+//! Identical local dynamics to the GS's per-intersection behaviour, except
+//! that upstream arrivals are *sampled* from the AIP: `u[l] = 1` spawns a
+//! car at the entry cell of incoming lane `l`. Crossing cars leave through
+//! four outgoing stubs that drain freely (downstream congestion outside
+//! the region is not modelled — exactly the IALM abstraction boundary).
+
+use crate::sim::{LocalSim, TRAFFIC_ACT, TRAFFIC_OBS, TRAFFIC_U_DIM};
+use crate::util::rng::Pcg64;
+
+use super::{exit_dir, sample_turn, Dir, Light, Segment, DIRS, SEG_LEN};
+
+pub struct TrafficLocalSim {
+    incoming: [Segment; 4],
+    outgoing: [Segment; 4],
+    light: Light,
+}
+
+impl TrafficLocalSim {
+    pub fn new() -> Self {
+        TrafficLocalSim {
+            incoming: Default::default(),
+            outgoing: Default::default(),
+            light: Light::new(),
+        }
+    }
+
+    pub fn total_cars(&self) -> usize {
+        self.incoming.iter().chain(self.outgoing.iter()).map(|s| s.car_count()).sum()
+    }
+
+    pub fn light(&self) -> &Light {
+        &self.light
+    }
+}
+
+impl Default for TrafficLocalSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalSim for TrafficLocalSim {
+    fn obs_dim(&self) -> usize {
+        TRAFFIC_OBS
+    }
+
+    fn n_actions(&self) -> usize {
+        TRAFFIC_ACT
+    }
+
+    fn u_len(&self) -> usize {
+        TRAFFIC_U_DIM
+    }
+
+    fn reset(&mut self, _rng: &mut Pcg64) {
+        for s in self.incoming.iter_mut().chain(self.outgoing.iter_mut()) {
+            s.clear();
+        }
+        self.light = Light::new();
+    }
+
+    fn observe(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), TRAFFIC_OBS);
+        for (d, lane) in self.incoming.iter().enumerate() {
+            lane.write_occupancy(&mut out[d * SEG_LEN..(d + 1) * SEG_LEN]);
+        }
+        let base = 4 * SEG_LEN;
+        out[base] = if self.light.phase.serves(Dir::N) { 1.0 } else { 0.0 };
+        out[base + 1] = 1.0 - out[base];
+        out[base + 2] = self.light.time_feature();
+    }
+
+    fn step(&mut self, action: usize, u: &[f32], rng: &mut Pcg64) -> f32 {
+        debug_assert_eq!(u.len(), TRAFFIC_U_DIM);
+        // 1. light
+        self.light.act(action);
+        let mut cars: usize = self.incoming.iter().map(|s| s.car_count()).sum();
+        let mut moved = 0usize;
+
+        // 2. crossings on green
+        for d in DIRS {
+            if !self.light.phase.serves(d) || !self.incoming[d.idx()].at_stop_line() {
+                continue;
+            }
+            let out_dir = exit_dir(d, sample_turn(rng));
+            if self.outgoing[out_dir.idx()].entry_free() {
+                self.incoming[d.idx()].pop_stop_line();
+                self.outgoing[out_dir.idx()].push_entry();
+                moved += 1;
+            }
+        }
+
+        // 3. sampled influence sources spawn upstream arrivals
+        for (l, &ul) in u.iter().enumerate() {
+            if ul >= 0.5 && self.incoming[l].entry_free() {
+                self.incoming[l].push_entry();
+                moved += 1;
+                cars += 1;
+            }
+        }
+
+        // 4. CA advance; outgoing stubs drain
+        for d in DIRS {
+            moved += self.incoming[d.idx()].advance();
+            self.outgoing[d.idx()].advance_and_drain();
+        }
+
+        // 5. local reward = mean speed
+        if cars == 0 {
+            1.0
+        } else {
+            moved as f32 / cars as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::observe_vec_local;
+
+    #[test]
+    fn influence_sample_spawns_cars() {
+        let mut ls = TrafficLocalSim::new();
+        let mut rng = Pcg64::seed(0);
+        ls.reset(&mut rng);
+        ls.step(0, &[1.0, 0.0, 1.0, 0.0], &mut rng);
+        assert_eq!(ls.total_cars(), 2);
+        let obs = observe_vec_local(&ls);
+        assert_eq!(obs[0], 1.0); // lane N entry cell
+        assert_eq!(obs[2 * SEG_LEN], 1.0); // lane S entry cell
+    }
+
+    #[test]
+    fn no_influence_no_cars() {
+        let mut ls = TrafficLocalSim::new();
+        let mut rng = Pcg64::seed(1);
+        ls.reset(&mut rng);
+        for _ in 0..20 {
+            let r = ls.step(0, &[0.0; 4], &mut rng);
+            assert_eq!(r, 1.0); // empty region: free flow
+        }
+        assert_eq!(ls.total_cars(), 0);
+    }
+
+    #[test]
+    fn cars_cross_and_eventually_drain() {
+        let mut ls = TrafficLocalSim::new();
+        let mut rng = Pcg64::seed(2);
+        ls.reset(&mut rng);
+        // feed the N lane (served by the initial NS-green phase)
+        ls.step(0, &[1.0, 0.0, 0.0, 0.0], &mut rng);
+        for _ in 0..40 {
+            ls.step(0, &[0.0; 4], &mut rng);
+        }
+        assert_eq!(ls.total_cars(), 0, "car never drained out of the region");
+    }
+
+    #[test]
+    fn red_light_blocks_crossing() {
+        let mut ls = TrafficLocalSim::new();
+        let mut rng = Pcg64::seed(3);
+        ls.reset(&mut rng);
+        // feed the E lane while the light stays NS-green
+        ls.step(0, &[0.0, 1.0, 0.0, 0.0], &mut rng);
+        for _ in 0..20 {
+            ls.step(0, &[0.0; 4], &mut rng);
+        }
+        // car is stuck at the stop line of lane E
+        assert_eq!(ls.total_cars(), 1);
+        assert!(ls.incoming[Dir::E.idx()].at_stop_line());
+        // switch to EW green: it crosses and drains
+        ls.step(1, &[0.0; 4], &mut rng);
+        for _ in 0..20 {
+            ls.step(0, &[0.0; 4], &mut rng);
+        }
+        assert_eq!(ls.total_cars(), 0);
+    }
+
+    #[test]
+    fn reward_reflects_congestion() {
+        let mut rng = Pcg64::seed(4);
+        // saturate all lanes with a red-for-everyone policy impossible, so
+        // compare: holding green for loaded lanes vs for empty ones.
+        let mut run = |serve_loaded: bool| {
+            let mut ls = TrafficLocalSim::new();
+            ls.reset(&mut rng);
+            let mut total = 0.0;
+            for t in 0..30 {
+                // cars keep arriving on N and S
+                let action = if t == 0 && !serve_loaded { 1 } else { 0 };
+                total += ls.step(action, &[1.0, 0.0, 1.0, 0.0], &mut rng);
+            }
+            total
+        };
+        let good = run(true);
+        let bad = run(false);
+        assert!(good > bad, "serving loaded lanes should score higher: {good} vs {bad}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let run = || {
+            let mut ls = TrafficLocalSim::new();
+            let mut rng = Pcg64::seed(5);
+            ls.reset(&mut rng);
+            (0..50)
+                .map(|t| ls.step(t % 2, &[(t % 3 == 0) as i32 as f32, 0.0, 1.0, 0.0], &mut rng))
+                .collect::<Vec<f32>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn obs_dims_match_contract() {
+        let ls = TrafficLocalSim::new();
+        assert_eq!(ls.obs_dim(), TRAFFIC_OBS);
+        assert_eq!(ls.n_actions(), TRAFFIC_ACT);
+        assert_eq!(ls.u_len(), TRAFFIC_U_DIM);
+    }
+}

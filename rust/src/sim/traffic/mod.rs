@@ -1,0 +1,228 @@
+//! Traffic-control domain: a microscopic cellular-automaton traffic grid.
+//!
+//! Replaces SUMO/Flow from the paper (DESIGN.md substitution table). Cars
+//! are v_max=1 cellular-automaton particles on directed road segments of
+//! `SEG_LEN` cells; each of the n×n intersections is signalised with two
+//! phases (NS-green / EW-green) controlled by one agent. Cars cross on
+//! green, turn with fixed routing probabilities, and enter the grid at
+//! boundary lanes with a Bernoulli inflow.
+//!
+//! Influence sources (paper §5.2): for each of an intersection's 4 incoming
+//! lanes, whether a car enters its outermost cell during the tick.
+
+mod gs;
+mod ls;
+mod segment;
+
+pub use gs::TrafficGlobalSim;
+pub use ls::TrafficLocalSim;
+pub use segment::{Segment, SEG_LEN};
+
+/// Compass direction an incoming lane arrives FROM.
+/// `Dir::N` = the lane carrying southbound cars that arrive from the north.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    N = 0,
+    E = 1,
+    S = 2,
+    W = 3,
+}
+
+pub const DIRS: [Dir; 4] = [Dir::N, Dir::E, Dir::S, Dir::W];
+
+impl Dir {
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_idx(i: usize) -> Dir {
+        DIRS[i]
+    }
+
+    /// The direction opposite to this one.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::N => Dir::S,
+            Dir::S => Dir::N,
+            Dir::E => Dir::W,
+            Dir::W => Dir::E,
+        }
+    }
+
+    /// Grid displacement of the neighbour lying in this direction.
+    pub fn delta(self) -> (i64, i64) {
+        match self {
+            Dir::N => (-1, 0),
+            Dir::S => (1, 0),
+            Dir::E => (0, 1),
+            Dir::W => (0, -1),
+        }
+    }
+
+    /// Is this lane served by the NS-green phase?
+    pub fn is_ns(self) -> bool {
+        matches!(self, Dir::N | Dir::S)
+    }
+}
+
+/// A turn decision for a car crossing an intersection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Turn {
+    Straight,
+    Left,
+    Right,
+}
+
+/// Paper-style fixed routing: straight 0.6, left 0.2, right 0.2.
+pub fn sample_turn(rng: &mut crate::util::rng::Pcg64) -> Turn {
+    let x = rng.next_f64();
+    if x < 0.6 {
+        Turn::Straight
+    } else if x < 0.8 {
+        Turn::Left
+    } else {
+        Turn::Right
+    }
+}
+
+/// Outgoing direction for a car that arrived from `from` and turns `turn`.
+/// A car arriving from the north (southbound) going straight exits south.
+pub fn exit_dir(from: Dir, turn: Turn) -> Dir {
+    let straight = from.opposite();
+    match turn {
+        Turn::Straight => straight,
+        // left/right relative to travel direction (southbound left = east)
+        Turn::Left => match from {
+            Dir::N => Dir::E,
+            Dir::S => Dir::W,
+            Dir::E => Dir::S,
+            Dir::W => Dir::N,
+        },
+        Turn::Right => match from {
+            Dir::N => Dir::W,
+            Dir::S => Dir::E,
+            Dir::E => Dir::N,
+            Dir::W => Dir::S,
+        },
+    }
+}
+
+/// Traffic-light phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    NsGreen,
+    EwGreen,
+}
+
+impl Phase {
+    pub fn serves(self, d: Dir) -> bool {
+        match self {
+            Phase::NsGreen => d.is_ns(),
+            Phase::EwGreen => !d.is_ns(),
+        }
+    }
+
+    pub fn toggled(self) -> Phase {
+        match self {
+            Phase::NsGreen => Phase::EwGreen,
+            Phase::EwGreen => Phase::NsGreen,
+        }
+    }
+}
+
+/// Shared light-controller state for one intersection.
+#[derive(Clone, Debug)]
+pub struct Light {
+    pub phase: Phase,
+    pub time_in_phase: u32,
+}
+
+impl Light {
+    pub fn new() -> Self {
+        Light { phase: Phase::NsGreen, time_in_phase: 0 }
+    }
+
+    /// Apply an agent action (0 = keep, 1 = switch).
+    pub fn act(&mut self, action: usize) {
+        if action == 1 {
+            self.phase = self.phase.toggled();
+            self.time_in_phase = 0;
+        } else {
+            self.time_in_phase = self.time_in_phase.saturating_add(1);
+        }
+    }
+
+    /// Normalised time-in-phase feature for observations.
+    pub fn time_feature(&self) -> f32 {
+        (self.time_in_phase.min(50) as f32) / 50.0
+    }
+}
+
+impl Default for Light {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Default Bernoulli inflow rate at boundary lanes.
+pub const BOUNDARY_INFLOW: f64 = 0.25;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn exit_dirs_are_consistent() {
+        // Southbound car (from N): straight->S, left->E, right->W.
+        assert_eq!(exit_dir(Dir::N, Turn::Straight), Dir::S);
+        assert_eq!(exit_dir(Dir::N, Turn::Left), Dir::E);
+        assert_eq!(exit_dir(Dir::N, Turn::Right), Dir::W);
+        // Eastbound-arriving car (from W): straight->E.
+        assert_eq!(exit_dir(Dir::W, Turn::Straight), Dir::E);
+        // A car never exits back the way it came.
+        for d in DIRS {
+            for t in [Turn::Straight, Turn::Left, Turn::Right] {
+                assert_ne!(exit_dir(d, t), d);
+            }
+        }
+    }
+
+    #[test]
+    fn turn_distribution_matches_routing() {
+        let mut rng = Pcg64::seed(0);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            match sample_turn(&mut rng) {
+                Turn::Straight => counts[0] += 1,
+                Turn::Left => counts[1] += 1,
+                Turn::Right => counts[2] += 1,
+            }
+        }
+        assert!((counts[0] as f64 / 30_000.0 - 0.6).abs() < 0.02);
+        assert!((counts[1] as f64 / 30_000.0 - 0.2).abs() < 0.02);
+        assert!((counts[2] as f64 / 30_000.0 - 0.2).abs() < 0.02);
+    }
+
+    #[test]
+    fn light_act_semantics() {
+        let mut l = Light::new();
+        assert_eq!(l.phase, Phase::NsGreen);
+        l.act(0);
+        assert_eq!(l.time_in_phase, 1);
+        l.act(1);
+        assert_eq!(l.phase, Phase::EwGreen);
+        assert_eq!(l.time_in_phase, 0);
+        assert!(l.phase.serves(Dir::E) && l.phase.serves(Dir::W));
+        assert!(!l.phase.serves(Dir::N));
+    }
+
+    #[test]
+    fn time_feature_saturates() {
+        let mut l = Light::new();
+        for _ in 0..100 {
+            l.act(0);
+        }
+        assert_eq!(l.time_feature(), 1.0);
+    }
+}

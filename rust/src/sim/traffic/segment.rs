@@ -1,0 +1,163 @@
+//! A directed road segment: `SEG_LEN` cells of v_max=1 cellular automaton.
+//!
+//! Cell 0 is the upstream entry, cell `SEG_LEN-1` the stop line at the
+//! downstream intersection. Cars advance one cell per tick when the next
+//! cell is free; `fresh` marks cars that already moved this tick (crossed
+//! in from an upstream intersection or spawned at the boundary) so no car
+//! ever moves twice per tick.
+
+pub const SEG_LEN: usize = 6;
+
+#[derive(Clone, Debug, Default)]
+pub struct Segment {
+    pub occ: [bool; SEG_LEN],
+    fresh: [bool; SEG_LEN],
+}
+
+impl Segment {
+    pub fn new() -> Self {
+        Segment::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.occ = [false; SEG_LEN];
+        self.fresh = [false; SEG_LEN];
+    }
+
+    pub fn car_count(&self) -> usize {
+        self.occ.iter().filter(|&&o| o).count()
+    }
+
+    /// Is the stop-line cell occupied?
+    pub fn at_stop_line(&self) -> bool {
+        self.occ[SEG_LEN - 1]
+    }
+
+    /// Remove the car at the stop line (it crossed the intersection).
+    pub fn pop_stop_line(&mut self) {
+        debug_assert!(self.occ[SEG_LEN - 1]);
+        self.occ[SEG_LEN - 1] = false;
+        self.fresh[SEG_LEN - 1] = false;
+    }
+
+    /// Can a car enter at cell 0?
+    pub fn entry_free(&self) -> bool {
+        !self.occ[0]
+    }
+
+    /// Insert a car at cell 0 (marks it fresh for this tick).
+    pub fn push_entry(&mut self) {
+        debug_assert!(!self.occ[0]);
+        self.occ[0] = true;
+        self.fresh[0] = true;
+    }
+
+    /// Advance non-fresh cars one cell toward the stop line; returns the
+    /// number of cars that moved. Call once per tick, after crossings and
+    /// entries; clears the fresh marks at the end.
+    pub fn advance(&mut self) -> usize {
+        let mut moved = 0;
+        for j in (1..SEG_LEN).rev() {
+            if !self.occ[j] && self.occ[j - 1] && !self.fresh[j - 1] {
+                self.occ[j] = true;
+                self.occ[j - 1] = false;
+                moved += 1;
+            }
+        }
+        self.fresh = [false; SEG_LEN];
+        moved
+    }
+
+    /// Advance AND drain: the stop-line car leaves the segment (used by
+    /// sink segments that exit the simulated area). Returns cars moved
+    /// (including the drained one).
+    pub fn advance_and_drain(&mut self) -> usize {
+        let mut moved = 0;
+        if self.occ[SEG_LEN - 1] && !self.fresh[SEG_LEN - 1] {
+            self.occ[SEG_LEN - 1] = false;
+            moved += 1;
+        }
+        moved + self.advance()
+    }
+
+    /// Copy occupancy into an observation slice (len SEG_LEN).
+    pub fn write_occupancy(&self, out: &mut [f32]) {
+        for (o, &c) in out.iter_mut().zip(self.occ.iter()) {
+            *o = if c { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cars_advance_one_cell_per_tick() {
+        let mut s = Segment::new();
+        s.push_entry();
+        // Fresh car does not move the tick it entered.
+        assert_eq!(s.advance(), 0);
+        assert!(s.occ[0]);
+        // Then one cell per tick until the stop line.
+        for t in 1..SEG_LEN {
+            assert_eq!(s.advance(), 1);
+            assert!(s.occ[t], "tick {t}");
+        }
+        assert!(s.at_stop_line());
+        // Blocked at the stop line: no more movement.
+        assert_eq!(s.advance(), 0);
+    }
+
+    #[test]
+    fn queue_compacts_behind_stop_line() {
+        let mut s = Segment::new();
+        s.occ = [true, true, false, false, false, true];
+        let moved = s.advance();
+        // stop-line car blocked; two cars move.
+        assert_eq!(moved, 2);
+        assert_eq!(s.occ, [false, true, true, false, false, true]);
+    }
+
+    #[test]
+    fn drain_removes_stop_line_car() {
+        let mut s = Segment::new();
+        s.occ[SEG_LEN - 1] = true;
+        s.occ[SEG_LEN - 2] = true;
+        let moved = s.advance_and_drain();
+        assert_eq!(moved, 2); // drained + follower moved up
+        assert_eq!(s.car_count(), 1);
+        assert!(s.at_stop_line());
+    }
+
+    #[test]
+    fn pop_and_push_roundtrip() {
+        let mut s = Segment::new();
+        s.push_entry();
+        assert!(!s.entry_free());
+        for _ in 0..SEG_LEN {
+            s.advance();
+        }
+        assert!(s.at_stop_line());
+        s.pop_stop_line();
+        assert_eq!(s.car_count(), 0);
+    }
+
+    #[test]
+    fn car_count_conserved_by_advance() {
+        let mut s = Segment::new();
+        s.occ = [true, false, true, true, false, false];
+        let before = s.car_count();
+        s.advance();
+        assert_eq!(s.car_count(), before);
+    }
+
+    #[test]
+    fn occupancy_written_as_f32() {
+        let mut s = Segment::new();
+        s.occ[2] = true;
+        let mut out = [0.0f32; SEG_LEN];
+        s.write_occupancy(&mut out);
+        assert_eq!(out, [0.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! The warehouse LOCAL simulator: one 5×5 region driven by influence
+//! samples (paper Algorithm 3 + §5.2).
+//!
+//! The sampled influence `u` gives, per neighbour head, the shared shelf
+//! cell the neighbour occupies (class 0-2) or `CLS_ABSENT`. If a sampled
+//! neighbour stands on a shared cell holding an active item, that item is
+//! removed — the neighbour collected it and this robot can no longer
+//! (paper §5.2, warehouse paragraph).
+
+use crate::sim::{
+    LocalSim, WAREHOUSE_ACT, WAREHOUSE_ITEM_SLOTS, WAREHOUSE_N_HEADS, WAREHOUSE_OBS,
+    WAREHOUSE_REGION,
+};
+use crate::util::rng::Pcg64;
+
+use super::{age_rank_reward, apply_move, slot_at_local, CLS_ABSENT, ITEM_SPAWN_P};
+
+pub struct WarehouseLocalSim {
+    /// Item age per slot (None = empty). Slot order: N,E,S,W × 3.
+    items: [Option<u32>; WAREHOUSE_ITEM_SLOTS],
+    robot: (usize, usize),
+    spawn_p: f64,
+}
+
+impl WarehouseLocalSim {
+    pub fn new() -> Self {
+        Self::with_spawn(ITEM_SPAWN_P)
+    }
+
+    pub fn with_spawn(spawn_p: f64) -> Self {
+        WarehouseLocalSim { items: [None; WAREHOUSE_ITEM_SLOTS], robot: (2, 2), spawn_p }
+    }
+
+    pub fn total_items(&self) -> usize {
+        self.items.iter().filter(|i| i.is_some()).count()
+    }
+
+    pub fn robot(&self) -> (usize, usize) {
+        self.robot
+    }
+
+    pub fn set_item(&mut self, slot: usize, age: u32) {
+        self.items[slot] = Some(age);
+    }
+
+    fn region_ages(&self) -> Vec<u32> {
+        self.items.iter().filter_map(|&a| a).collect()
+    }
+}
+
+impl Default for WarehouseLocalSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalSim for WarehouseLocalSim {
+    fn obs_dim(&self) -> usize {
+        WAREHOUSE_OBS
+    }
+
+    fn n_actions(&self) -> usize {
+        WAREHOUSE_ACT
+    }
+
+    /// `u` carries one class index per neighbour head.
+    fn u_len(&self) -> usize {
+        WAREHOUSE_N_HEADS
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) {
+        self.items = [None; WAREHOUSE_ITEM_SLOTS];
+        self.robot = (
+            rng.below(WAREHOUSE_REGION as u64) as usize,
+            rng.below(WAREHOUSE_REGION as u64) as usize,
+        );
+    }
+
+    fn observe(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), WAREHOUSE_OBS);
+        out.fill(0.0);
+        let (r, c) = self.robot;
+        out[r * WAREHOUSE_REGION + c] = 1.0;
+        let base = WAREHOUSE_REGION * WAREHOUSE_REGION;
+        for (k, item) in self.items.iter().enumerate() {
+            if item.is_some() {
+                out[base + k] = 1.0;
+            }
+        }
+    }
+
+    fn step(&mut self, action: usize, u: &[f32], rng: &mut Pcg64) -> f32 {
+        debug_assert_eq!(u.len(), WAREHOUSE_N_HEADS);
+
+        // 1. sampled neighbours collect from the shared shelf cells
+        for head in 0..WAREHOUSE_N_HEADS {
+            let cls = u[head] as usize;
+            if cls < CLS_ABSENT {
+                let slot = head * 3 + cls;
+                self.items[slot] = None;
+            }
+        }
+
+        // 2. move
+        let (r, c) = self.robot;
+        self.robot = apply_move(r, c, action);
+
+        // 3. collect
+        let mut reward = 0.0;
+        if let Some(slot) = slot_at_local(self.robot.0, self.robot.1) {
+            if let Some(age) = self.items[slot] {
+                reward = age_rank_reward(age, &self.region_ages());
+                self.items[slot] = None;
+            }
+        }
+
+        // 4. age + spawn
+        for it in self.items.iter_mut() {
+            if let Some(age) = it {
+                *age = age.saturating_add(1);
+            }
+        }
+        for it in self.items.iter_mut() {
+            if it.is_none() && rng.bernoulli(self.spawn_p) {
+                *it = Some(0);
+            }
+        }
+        reward
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::observe_vec_local;
+
+    const ABSENT_U: [f32; 4] = [3.0, 3.0, 3.0, 3.0];
+
+    #[test]
+    fn neighbours_steal_items() {
+        let mut ls = WarehouseLocalSim::with_spawn(0.0);
+        let mut rng = Pcg64::seed(0);
+        ls.reset(&mut rng);
+        ls.set_item(1, 5); // N edge middle cell (slot 1 = head 0 class 1)
+        let u = [1.0, 3.0, 3.0, 3.0]; // north neighbour on class-1 cell
+        ls.step(4, &u, &mut rng);
+        assert_eq!(ls.total_items(), 0, "neighbour should have collected");
+    }
+
+    #[test]
+    fn absent_neighbours_leave_items() {
+        let mut ls = WarehouseLocalSim::with_spawn(0.0);
+        let mut rng = Pcg64::seed(1);
+        ls.reset(&mut rng);
+        ls.set_item(1, 5);
+        ls.robot = (2, 2); // not on any slot after a stay
+        ls.step(4, &ABSENT_U, &mut rng);
+        assert_eq!(ls.total_items(), 1);
+    }
+
+    #[test]
+    fn robot_collects_with_age_rank_reward() {
+        let mut ls = WarehouseLocalSim::with_spawn(0.0);
+        let mut rng = Pcg64::seed(2);
+        ls.reset(&mut rng);
+        ls.set_item(0, 10); // N edge (0,1): the older
+        ls.set_item(6, 1); // S edge (4,1): the younger
+        ls.robot = (0, 0);
+        let r = ls.step(3, &ABSENT_U, &mut rng); // move right onto (0,1)
+        assert_eq!(r, 1.0);
+        assert_eq!(ls.total_items(), 1);
+        // now collect the remaining (only) item: full reward again
+        let mut ls2 = WarehouseLocalSim::with_spawn(0.0);
+        ls2.reset(&mut rng);
+        ls2.set_item(0, 1);
+        ls2.set_item(6, 10);
+        ls2.robot = (0, 0);
+        let r2 = ls2.step(3, &ABSENT_U, &mut rng);
+        assert_eq!(r2, 0.5, "younger of two items pays half");
+    }
+
+    #[test]
+    fn items_spawn_over_time() {
+        let mut ls = WarehouseLocalSim::with_spawn(0.5);
+        let mut rng = Pcg64::seed(3);
+        ls.reset(&mut rng);
+        ls.robot = (2, 2);
+        for _ in 0..10 {
+            ls.step(4, &ABSENT_U, &mut rng);
+        }
+        assert!(ls.total_items() > 6);
+    }
+
+    #[test]
+    fn observation_layout() {
+        let mut ls = WarehouseLocalSim::with_spawn(0.0);
+        let mut rng = Pcg64::seed(4);
+        ls.reset(&mut rng);
+        ls.robot = (3, 1);
+        ls.set_item(11, 2); // W edge slot index 11 = local (3,0)
+        let obs = observe_vec_local(&ls);
+        assert_eq!(obs[3 * WAREHOUSE_REGION + 1], 1.0);
+        assert_eq!(obs[WAREHOUSE_REGION * WAREHOUSE_REGION + 11], 1.0);
+        assert_eq!(obs.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn reward_zero_off_shelf() {
+        let mut ls = WarehouseLocalSim::with_spawn(0.0);
+        let mut rng = Pcg64::seed(5);
+        ls.reset(&mut rng);
+        ls.robot = (2, 2);
+        for a in [0, 1, 2, 3, 4] {
+            let mut ls2 = WarehouseLocalSim::with_spawn(0.0);
+            ls2.reset(&mut rng);
+            ls2.robot = (2, 2);
+            let r = ls2.step(a, &ABSENT_U, &mut rng);
+            assert_eq!(r, 0.0);
+        }
+        let _ = ls;
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let run = || {
+            let mut ls = WarehouseLocalSim::new();
+            let mut rng = Pcg64::seed(6);
+            ls.reset(&mut rng);
+            (0..100)
+                .map(|t| {
+                    let u = [(t % 5) as f32, 3.0, ((t / 2) % 4) as f32, 3.0];
+                    ls.step(t % 5, &u, &mut rng)
+                })
+                .collect::<Vec<f32>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

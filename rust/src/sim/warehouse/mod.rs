@@ -1,0 +1,134 @@
+//! Warehouse-commissioning domain (paper §5.2, App. F).
+//!
+//! A team of robots, one per 5×5 region; regions overlap so that each of
+//! the 4 item shelves on a region's edges is shared with one neighbour.
+//! Items appear with probability `ITEM_SPAWN_P` on shelf cells; robots
+//! collect the item under them after moving and receive a reward in [0,1]
+//! proportional to how old the item is relative to the other items in
+//! their region (oldest-first incentive).
+//!
+//! Influence sources: the positions of the 4 neighbour robots projected
+//! onto the shared shelf cells — a 4-class categorical per neighbour
+//! ({cell 0, cell 1, cell 2, not-on-shared-edge}).
+
+mod gs;
+mod ls;
+
+pub use gs::WarehouseGlobalSim;
+pub use ls::WarehouseLocalSim;
+
+use crate::sim::{WAREHOUSE_ITEM_SLOTS, WAREHOUSE_REGION};
+
+/// Per-slot item spawn probability per step (paper: 0.02).
+pub const ITEM_SPAWN_P: f64 = 0.02;
+
+/// Edge order for slots and influence heads: N, E, S, W.
+pub const EDGE_N: usize = 0;
+pub const EDGE_E: usize = 1;
+pub const EDGE_S: usize = 2;
+pub const EDGE_W: usize = 3;
+
+/// "Neighbour not on the shared edge" class for influence heads.
+pub const CLS_ABSENT: usize = 3;
+
+/// Local coordinates (row, col) of slot `k` (0..12) within a 5×5 region.
+/// Slots are the 3 interior cells of each edge, ordered N, E, S, W.
+pub fn slot_local(k: usize) -> (usize, usize) {
+    debug_assert!(k < WAREHOUSE_ITEM_SLOTS);
+    let edge = k / 3;
+    let i = k % 3;
+    let r = WAREHOUSE_REGION - 1;
+    match edge {
+        EDGE_N => (0, i + 1),
+        EDGE_E => (i + 1, r),
+        EDGE_S => (r, i + 1),
+        _ => (i + 1, 0),
+    }
+}
+
+/// Inverse of `slot_local`: slot index at local (row, col), if any.
+pub fn slot_at_local(r: usize, c: usize) -> Option<usize> {
+    let last = WAREHOUSE_REGION - 1;
+    if r == 0 && (1..last).contains(&c) {
+        Some(EDGE_N * 3 + (c - 1))
+    } else if c == last && (1..last).contains(&r) {
+        Some(EDGE_E * 3 + (r - 1))
+    } else if r == last && (1..last).contains(&c) {
+        Some(EDGE_S * 3 + (c - 1))
+    } else if c == 0 && (1..last).contains(&r) {
+        Some(EDGE_W * 3 + (r - 1))
+    } else {
+        None
+    }
+}
+
+/// Apply a movement action within region bounds. Actions:
+/// 0 = up, 1 = down, 2 = left, 3 = right, 4 = stay.
+pub fn apply_move(r: usize, c: usize, action: usize) -> (usize, usize) {
+    let last = WAREHOUSE_REGION - 1;
+    match action {
+        0 => (r.saturating_sub(1), c),
+        1 => ((r + 1).min(last), c),
+        2 => (r, c.saturating_sub(1)),
+        3 => (r, (c + 1).min(last)),
+        _ => (r, c),
+    }
+}
+
+/// Age-rank reward (paper: in [0,1], oldest item in the region pays 1).
+/// `age` is the collected item's age; `region_ages` are the ages of all
+/// active items in the region (including the collected one).
+pub fn age_rank_reward(age: u32, region_ages: &[u32]) -> f32 {
+    debug_assert!(!region_ages.is_empty());
+    let younger_or_eq = region_ages.iter().filter(|&&a| a <= age).count();
+    younger_or_eq as f32 / region_ages.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_layout_roundtrips() {
+        for k in 0..WAREHOUSE_ITEM_SLOTS {
+            let (r, c) = slot_local(k);
+            assert_eq!(slot_at_local(r, c), Some(k), "slot {k} at ({r},{c})");
+        }
+    }
+
+    #[test]
+    fn corners_and_interior_are_not_slots() {
+        assert_eq!(slot_at_local(0, 0), None);
+        assert_eq!(slot_at_local(0, 4), None);
+        assert_eq!(slot_at_local(4, 0), None);
+        assert_eq!(slot_at_local(4, 4), None);
+        assert_eq!(slot_at_local(2, 2), None);
+    }
+
+    #[test]
+    fn twelve_distinct_slots() {
+        let mut cells: Vec<_> = (0..WAREHOUSE_ITEM_SLOTS).map(slot_local).collect();
+        cells.sort();
+        cells.dedup();
+        assert_eq!(cells.len(), 12);
+    }
+
+    #[test]
+    fn moves_clamp_to_region() {
+        assert_eq!(apply_move(0, 0, 0), (0, 0)); // up at top edge
+        assert_eq!(apply_move(0, 0, 2), (0, 0)); // left at left edge
+        assert_eq!(apply_move(4, 4, 1), (4, 4));
+        assert_eq!(apply_move(4, 4, 3), (4, 4));
+        assert_eq!(apply_move(2, 2, 0), (1, 2));
+        assert_eq!(apply_move(2, 2, 4), (2, 2));
+    }
+
+    #[test]
+    fn age_rank_rewards_oldest_first() {
+        let ages = [10, 5, 1];
+        assert_eq!(age_rank_reward(10, &ages), 1.0);
+        assert!((age_rank_reward(5, &ages) - 2.0 / 3.0).abs() < 1e-6);
+        assert!((age_rank_reward(1, &ages) - 1.0 / 3.0).abs() < 1e-6);
+        assert_eq!(age_rank_reward(7, &[7]), 1.0); // lone item pays full
+    }
+}

@@ -1,0 +1,139 @@
+//! Mini benchmark/reporting framework (no `criterion` in the offline
+//! vendor). Provides wall-clock measurement helpers and aligned-table
+//! printing used by every `benches/` harness; results also land as CSV in
+//! `results/`.
+
+use std::time::Instant;
+
+/// Measure a closure's wall time in seconds.
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run a closure `n` times, report (mean_secs, min_secs).
+pub fn time_n(n: usize, mut f: impl FnMut()) -> (f64, f64) {
+    let mut total = 0.0;
+    let mut best = f64::INFINITY;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        best = best.min(dt);
+    }
+    (total / n as f64, best)
+}
+
+/// Pretty-print an aligned table to stdout.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    /// Also persist as CSV under results/.
+    pub fn save_csv(&self, name: &str) {
+        let mut w = crate::util::metrics::CsvWriter::new(
+            &self.header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for row in &self.rows {
+            w.row(row);
+        }
+        let path = std::path::Path::new("results").join(format!("{name}.csv"));
+        if let Err(e) = w.save(&path) {
+            eprintln!("warn: could not save {}: {e}", path.display());
+        } else {
+            eprintln!("[bench] wrote {}", path.display());
+        }
+    }
+}
+
+/// Format seconds compactly.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{:.0}s", s)
+    } else if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}ms", s * 1e3)
+    }
+}
+
+/// log2 of a duration ratio (the paper's Fig. 3 runtime axis is log2).
+pub fn log2_ratio(a: f64, b: f64) -> f64 {
+    (a / b).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_value() {
+        let (v, dt) = time(|| 6 * 7);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn time_n_reports_mean_and_min() {
+        let (mean, min) = time_n(3, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(min <= mean);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // should not panic
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(0.0123), "12.3ms");
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(150.0), "150s");
+        assert_eq!(log2_ratio(8.0, 2.0), 2.0);
+    }
+}

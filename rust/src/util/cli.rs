@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch lives in `main.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse a raw argv slice (without the program name / subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--sizes 2,5,7`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .with_context(|| format!("--{key}: bad integer {p:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_forms() {
+        // NOTE: `--flag value` is greedy — positionals go before flags.
+        let a = args(&["pos1", "--mode", "dials", "--seed=7", "--verbose"]);
+        assert_eq!(a.get("mode"), Some("dials"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.get_usize("steps", 100).unwrap(), 100);
+        assert_eq!(a.get_or("domain", "traffic"), "traffic");
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = args(&["--fast", "--steps", "10"]);
+        assert!(a.get_bool("fast"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = args(&["--steps", "ten"]);
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = args(&["--sizes", "2,5, 7"]);
+        assert_eq!(a.get_usize_list("sizes", &[]).unwrap(), vec![2, 5, 7]);
+        assert_eq!(a.get_usize_list("other", &[1]).unwrap(), vec![1]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Metrics: run statistics, learning-curve recording, CSV output.
+//!
+//! Every experiment run produces `RunLog`s that the bench harnesses fold
+//! into the paper's tables/figures; CSVs land in `results/` so the curves
+//! can be inspected or re-plotted.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean (paper's shaded areas / error bars).
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        std_dev(xs) / (xs.len() as f64).sqrt()
+    }
+}
+
+/// One point on a learning curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub value: f64,
+}
+
+/// Everything a single training run reports.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub label: String,
+    /// Periodic GS-evaluation returns (mean over agents & episodes).
+    pub eval_curve: Vec<CurvePoint>,
+    /// AIP cross-entropy on GS trajectories over time (Fig. 4 right).
+    pub ce_curve: Vec<CurvePoint>,
+    /// Wall-clock seconds, as measured (serial on this box).
+    pub wall_seconds: f64,
+    /// Critical-path seconds = max per-agent worker time + serial phases;
+    /// what a >=N-core machine would measure (DESIGN.md substitution).
+    pub critical_path_seconds: f64,
+    /// Seconds spent in agent training (parallel phase, critical path).
+    pub agent_train_seconds: f64,
+    /// Seconds spent in GS data collection + AIP training.
+    pub influence_seconds: f64,
+    pub final_return: f64,
+}
+
+impl RunLog {
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,eval_return\n");
+        for p in &self.eval_curve {
+            let _ = writeln!(s, "{},{}", p.step, p.value);
+        }
+        s
+    }
+}
+
+/// Minimal CSV writer for arbitrary tables.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())
+            .with_context(|| format!("write {}", path.display()))
+    }
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Average several curves point-wise (aligning by index) and report SEM.
+pub fn aggregate_curves(curves: &[Vec<CurvePoint>]) -> Vec<(usize, f64, f64)> {
+    if curves.is_empty() {
+        return Vec::new();
+    }
+    let n_points = curves.iter().map(|c| c.len()).min().unwrap_or(0);
+    (0..n_points)
+        .map(|i| {
+            let vals: Vec<f64> = curves.iter().map(|c| c[i].value).collect();
+            (curves[0][i].step, mean(&vals), sem(&vals))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 0.01);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+        assert!(sem(&[1.0, 2.0, 3.0]) > 0.0);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["plain".into(), "needs,quote".into()]);
+        w.row(&["has\"q".into(), "x".into()]);
+        let s = w.to_string();
+        assert!(s.contains("\"needs,quote\""));
+        assert!(s.contains("\"has\"\"q\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn csv_width_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn curve_aggregation() {
+        let c1 = vec![CurvePoint { step: 0, value: 1.0 }, CurvePoint { step: 10, value: 2.0 }];
+        let c2 = vec![CurvePoint { step: 0, value: 3.0 }, CurvePoint { step: 10, value: 4.0 }];
+        let agg = aggregate_curves(&[c1, c2]);
+        assert_eq!(agg.len(), 2);
+        assert_eq!(agg[0].0, 0);
+        assert_eq!(agg[0].1, 2.0);
+        assert_eq!(agg[1].1, 3.0);
+    }
+
+    #[test]
+    fn runlog_csv() {
+        let mut log = RunLog::default();
+        log.eval_curve.push(CurvePoint { step: 100, value: 0.5 });
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,eval_return\n"));
+        assert!(csv.contains("100,0.5"));
+    }
+}

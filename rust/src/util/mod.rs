@@ -1,0 +1,11 @@
+//! Shared utilities: PRNG, tensor IO, CLI, metrics, allocator tracking,
+//! property-test harness, and timers.
+
+pub mod alloc;
+pub mod bench;
+pub mod cli;
+pub mod metrics;
+pub mod npk;
+pub mod prop;
+pub mod rng;
+pub mod timer;

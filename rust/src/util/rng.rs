@@ -1,0 +1,227 @@
+//! PCG64 pseudo-random number generator.
+//!
+//! The offline crate vendor ships no `rand` crate, so DIALS carries its own
+//! PRNG. PCG-XSL-RR 128/64 (O'Neill 2014): 128-bit LCG state, 64-bit
+//! xorshift-rotate output. Deterministic, seedable, streamable — every
+//! simulator, policy sampler, and influence sampler owns an independent
+//! stream so runs are reproducible regardless of thread interleaving.
+
+const MUL: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+impl Pcg64 {
+    /// Seed with a (seed, stream) pair; distinct streams never collide.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(MUL).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(MUL).wrapping_add(rng.inc);
+        rng
+    }
+
+    pub fn seed(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+        if total <= 0.0 {
+            return self.below(weights.len() as u64) as usize;
+        }
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w.max(0.0) as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child stream (for per-agent/per-worker rngs).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64();
+        Pcg64::new(s ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::new(7, 1);
+        let mut b = Pcg64::new(7, 2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Pcg64::seed(4);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_f64()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_n() {
+        let mut r = Pcg64::seed(5);
+        let mut counts = [0u32; 3];
+        for _ in 0..90_000 {
+            counts[r.below(3) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as i64 - 30_000).abs() < 1_200, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg64::seed(6);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.02)).count();
+        assert!((hits as i64 - 2000).abs() < 350, "hits={hits}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed(7);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn categorical_follows_weights() {
+        let mut r = Pcg64::seed(8);
+        let w = [1.0f32, 3.0, 0.0, 6.0];
+        let mut counts = [0u32; 4];
+        for _ in 0..100_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        assert!((counts[0] as f64 / 100_000.0 - 0.1).abs() < 0.01);
+        assert!((counts[3] as f64 / 100_000.0 - 0.6).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_diverge_from_parent() {
+        let mut parent = Pcg64::seed(10);
+        let mut c1 = parent.split(1);
+        let mut c2 = parent.split(2);
+        let a = c1.next_u64();
+        let b = c2.next_u64();
+        assert_ne!(a, b);
+    }
+}

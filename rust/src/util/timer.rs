@@ -1,0 +1,148 @@
+//! Phase timers for the runtime tables (paper App. G).
+//!
+//! DIALS phases are timed separately: per-agent training work (the parallel
+//! phase — its critical path is the max over agents), GS data collection,
+//! and AIP training. `PhaseTimers` accumulates seconds per named phase.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimers {
+    acc: BTreeMap<String, f64>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, seconds: f64) {
+        *self.acc.entry(phase.to_string()).or_insert(0.0) += seconds;
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.acc.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+
+    /// Merge another timer set (e.g. from a worker thread).
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (k, v) in &other.acc {
+            self.add(k, *v);
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.acc.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+/// Track the critical path of a parallel phase executed serially: record
+/// each worker's duration, report the max (what N cores would measure).
+#[derive(Default, Debug, Clone)]
+pub struct CriticalPath {
+    durations: Vec<f64>,
+}
+
+impl CriticalPath {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.durations.push(seconds);
+    }
+
+    /// Critical path assuming `slots` parallel workers (list scheduling:
+    /// longest-processing-time first over `slots` identical machines).
+    pub fn with_slots(&self, slots: usize) -> f64 {
+        if self.durations.is_empty() {
+            return 0.0;
+        }
+        let slots = slots.max(1);
+        let mut sorted = self.durations.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut machines = vec![0.0f64; slots.min(sorted.len())];
+        for d in sorted {
+            // assign to least-loaded machine
+            let (idx, _) = machines
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            machines[idx] += d;
+        }
+        machines.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Fully-parallel critical path (one worker per task).
+    pub fn max(&self) -> f64 {
+        self.durations.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.durations.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate_and_merge() {
+        let mut t = PhaseTimers::new();
+        t.add("a", 1.0);
+        t.add("a", 2.0);
+        t.add("b", 0.5);
+        assert_eq!(t.get("a"), 3.0);
+        assert_eq!(t.total(), 3.5);
+        let mut u = PhaseTimers::new();
+        u.add("a", 1.0);
+        u.merge(&t);
+        assert_eq!(u.get("a"), 4.0);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimers::new();
+        let v = t.time("x", || 7);
+        assert_eq!(v, 7);
+        assert!(t.get("x") >= 0.0);
+    }
+
+    #[test]
+    fn critical_path_max_and_slots() {
+        let mut c = CriticalPath::new();
+        for d in [3.0, 1.0, 2.0, 2.0] {
+            c.record(d);
+        }
+        assert_eq!(c.max(), 3.0);
+        assert_eq!(c.sum(), 8.0);
+        // 2 slots, LPT: [3,1]=4 and [2,2]=4 -> 4.0
+        assert!((c.with_slots(2) - 4.0).abs() < 1e-9);
+        // enough slots -> max
+        assert_eq!(c.with_slots(10), 3.0);
+        // single slot -> sum
+        assert_eq!(c.with_slots(1), 8.0);
+    }
+
+    #[test]
+    fn empty_critical_path() {
+        let c = CriticalPath::new();
+        assert_eq!(c.max(), 0.0);
+        assert_eq!(c.with_slots(4), 0.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! End-to-end coordinator tests over real compiled artifacts.
+//! Requires `make artifacts` (tests skip with a notice otherwise).
+
+use std::path::PathBuf;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{collect_datasets, make_global_sim, run_parallel, DialsCoordinator};
+use dials::baselines::GsTrainer;
+use dials::runtime::Engine;
+use dials::util::rng::Pcg64;
+
+fn artifacts_ready() -> bool {
+    let ok = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/traffic.meta").is_file();
+    if !ok {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn tiny_cfg(domain: Domain, mode: SimMode) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode,
+        grid_side: 2,
+        total_steps: 256,
+        aip_train_freq: 128,
+        aip_dataset: 60,
+        aip_epochs: 3,
+        eval_every: 128,
+        eval_episodes: 1,
+        horizon: 32,
+        seed: 7,
+        ppo: PpoConfig { rollout_len: 64, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
+        threads: 1,
+    }
+}
+
+#[test]
+fn dials_traffic_run_produces_curves() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(Domain::Traffic, SimMode::Dials)).unwrap();
+    let log = coord.run().unwrap();
+    // initial + one eval per segment boundary (eval_every=128, total=256)
+    assert_eq!(log.eval_curve.len(), 3);
+    assert_eq!(log.eval_curve[0].step, 0);
+    assert_eq!(log.eval_curve[2].step, 256);
+    // two retrain rounds → 4 CE points (pre+post each)
+    assert_eq!(log.ce_curve.len(), 4);
+    assert!(log.wall_seconds > 0.0);
+    assert!(log.critical_path_seconds <= log.wall_seconds + 1e-9);
+    assert!(log.eval_curve.iter().all(|p| p.value.is_finite()));
+}
+
+#[test]
+fn untrained_dials_skips_influence_phase() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let coord =
+        DialsCoordinator::new(&engine, tiny_cfg(Domain::Traffic, SimMode::UntrainedDials)).unwrap();
+    let log = coord.run().unwrap();
+    assert!(log.ce_curve.is_empty());
+    assert_eq!(log.influence_seconds, 0.0);
+    assert_eq!(log.label, "untrained-DIALS");
+}
+
+#[test]
+fn dials_warehouse_recurrent_stack_runs() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = tiny_cfg(Domain::Warehouse, SimMode::Dials);
+    cfg.horizon = 40; // >= aip_seq window (16)
+    let coord = DialsCoordinator::new(&engine, cfg).unwrap();
+    let log = coord.run().unwrap();
+    assert!(!log.ce_curve.is_empty(), "GRU AIP should train and report CE");
+    assert!(log.final_return.is_finite());
+}
+
+#[test]
+fn gs_baseline_runs_and_reports_no_influence_time() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(Domain::Traffic, SimMode::GlobalSim)).unwrap();
+    let log = GsTrainer::new(coord).run().unwrap();
+    assert_eq!(log.label, "GS");
+    assert_eq!(log.influence_seconds, 0.0);
+    assert!(log.eval_curve.len() >= 3);
+    assert_eq!(log.wall_seconds, log.critical_path_seconds);
+}
+
+/// Lemma 1 (operationally): the same joint policy replayed with the same
+/// seed induces exactly the same influence datasets.
+#[test]
+fn lemma1_same_policy_same_influence_data() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(Domain::Traffic, SimMode::Dials);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let collect = |seed: u64| {
+        let mut workers = coord.make_workers(seed);
+        let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+        let mut rng = Pcg64::new(seed, 5);
+        collect_datasets(coord.artifacts(), gs.as_mut(), &mut workers, 50, cfg.horizon, &mut rng)
+            .unwrap();
+        let mut probe = Pcg64::seed(99);
+        workers
+            .iter()
+            .map(|w| w.dataset.sample_flat(8, &mut probe.clone()).unwrap())
+            .collect::<Vec<_>>()
+    };
+    let a = collect(11);
+    let b = collect(11);
+    for ((fa, la), (fb, lb)) in a.iter().zip(b.iter()) {
+        assert_eq!(fa.data, fb.data);
+        assert_eq!(la.data, lb.data);
+    }
+    // different seed (different policies) → different data
+    let c = collect(12);
+    assert!(
+        a.iter().zip(c.iter()).any(|((fa, _), (fc, _))| fa.data != fc.data),
+        "distinct joint policies should induce distinct ALSH distributions"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_restores_exact_state() {
+    if !artifacts_ready() {
+        return;
+    }
+    use dials::coordinator::{load_checkpoint, save_checkpoint};
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(Domain::Traffic, SimMode::Dials);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let trainer = dials::ppo::PpoTrainer::new(cfg.ppo.clone());
+
+    // train a little so the state is non-trivial
+    let mut workers = coord.make_workers(5);
+    for w in workers.iter_mut() {
+        w.train_segment(coord.artifacts(), &trainer, 64, cfg.horizon).unwrap();
+    }
+    let dir = std::env::temp_dir().join("dials_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    save_checkpoint(&dir, &coord.artifacts().spec, &workers).unwrap();
+
+    // restore into FRESH workers: params must match bit-for-bit
+    let mut fresh = coord.make_workers(999);
+    load_checkpoint(&dir, &coord.artifacts().spec, &mut fresh).unwrap();
+    for (a, b) in workers.iter().zip(fresh.iter()) {
+        assert_eq!(a.policy.net.flat.data, b.policy.net.flat.data);
+        assert_eq!(a.policy.net.m.data, b.policy.net.m.data);
+        assert_eq!(a.aip.net.flat.data, b.aip.net.flat.data);
+    }
+
+    // mismatched agent count rejected
+    let mut wrong = coord.make_workers(1);
+    wrong.truncate(2);
+    assert!(load_checkpoint(&dir, &coord.artifacts().spec, &mut wrong).is_err());
+}
+
+/// The thread pool must not change results, only wall-clock: training the
+/// same workers serially vs in parallel yields identical policies.
+#[test]
+fn parallelism_does_not_change_results() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(Domain::Traffic, SimMode::UntrainedDials);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let trainer = dials::ppo::PpoTrainer::new(cfg.ppo.clone());
+
+    let run = |threads: usize| {
+        let mut workers = coord.make_workers(3);
+        run_parallel(&mut workers, threads, |w| {
+            let t0 = std::time::Instant::now();
+            w.train_segment(coord.artifacts(), &trainer, 128, cfg.horizon)?;
+            Ok(t0.elapsed().as_secs_f64())
+        })
+        .unwrap();
+        workers.into_iter().map(|w| w.policy.net.flat.data).collect::<Vec<_>>()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(parallel.iter()) {
+        assert_eq!(s, p, "worker results depend on thread count");
+    }
+}

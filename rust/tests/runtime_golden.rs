@@ -1,0 +1,134 @@
+//! Runtime integration tests: execute every compiled artifact on the
+//! golden inputs emitted by aot.py and compare against the jax outputs.
+//!
+//! This pins the whole AOT bridge — jax lowering → HLO text → PJRT compile
+//! → execute — to the Python-side numerics. Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use dials::runtime::{ArtifactSet, Engine};
+use dials::config::Domain;
+use dials::util::npk::{read_npk, Tensor};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("traffic.meta").is_file() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn golden_cases(dir: &Path) -> Vec<(Vec<Tensor>, Vec<Tensor>)> {
+    let mut cases = Vec::new();
+    for c in 0.. {
+        if !dir.join(format!("in{c}_0.npk")).is_file() {
+            break;
+        }
+        let mut ins = Vec::new();
+        for k in 0.. {
+            let p = dir.join(format!("in{c}_{k}.npk"));
+            if !p.is_file() {
+                break;
+            }
+            ins.push(read_npk(&p).unwrap());
+        }
+        let mut outs = Vec::new();
+        for k in 0.. {
+            let p = dir.join(format!("out{c}_{k}.npk"));
+            if !p.is_file() {
+                break;
+            }
+            outs.push(read_npk(&p).unwrap());
+        }
+        cases.push((ins, outs));
+    }
+    assert!(!cases.is_empty(), "no golden cases in {}", dir.display());
+    cases
+}
+
+fn assert_close(got: &Tensor, want: &Tensor, tol: f32, ctx: &str) {
+    assert_eq!(got.dims, want.dims, "{ctx}: dims mismatch");
+    for (i, (g, w)) in got.data.iter().zip(want.data.iter()).enumerate() {
+        let denom = w.abs().max(1.0);
+        assert!(
+            (g - w).abs() / denom < tol,
+            "{ctx}: elem {i}: got {g}, want {w}"
+        );
+    }
+}
+
+fn check_artifact(engine: &Engine, art_dir: &Path, name: &str, tol: f32) {
+    let exec = engine.load_hlo(&art_dir.join(format!("{name}.hlo.txt"))).unwrap();
+    let gold = art_dir.join("golden").join(name);
+    if !gold.is_dir() {
+        eprintln!("SKIP golden for {name} (not emitted)");
+        return;
+    }
+    for (case, (ins, wants)) in golden_cases(&gold).into_iter().enumerate() {
+        let outs = exec.run(&ins).unwrap();
+        assert_eq!(outs.len(), wants.len(), "{name} case {case}: output arity");
+        for (k, (got, want)) in outs.iter().zip(wants.iter()).enumerate() {
+            assert_close(got, want, tol, &format!("{name} case {case} out {k}"));
+        }
+    }
+}
+
+#[test]
+fn policy_step_matches_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    check_artifact(&engine, &dir, "traffic_policy_step", 1e-4);
+    check_artifact(&engine, &dir, "warehouse_policy_step", 1e-4);
+}
+
+#[test]
+fn aip_forward_matches_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    check_artifact(&engine, &dir, "traffic_aip_forward", 1e-4);
+    check_artifact(&engine, &dir, "warehouse_aip_forward", 1e-4);
+}
+
+#[test]
+fn ppo_update_matches_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    // updates chain matmuls + Adam: slightly looser tolerance
+    check_artifact(&engine, &dir, "traffic_ppo_update", 5e-4);
+    check_artifact(&engine, &dir, "warehouse_ppo_update", 5e-4);
+}
+
+#[test]
+fn aip_update_matches_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    check_artifact(&engine, &dir, "traffic_aip_update", 5e-4);
+    check_artifact(&engine, &dir, "warehouse_aip_update", 5e-4);
+}
+
+#[test]
+fn artifact_sets_load_and_validate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let arts = ArtifactSet::load(&engine, &dir, domain).unwrap();
+        assert_eq!(arts.spec.domain, domain.name());
+        assert!(arts.policy_init.data.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn policy_step_deterministic_across_calls() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let exec = engine.load_hlo(&dir.join("traffic_policy_step.hlo.txt")).unwrap();
+    let params = read_npk(&dir.join("traffic_policy_init.npk")).unwrap();
+    let obs = Tensor::new(vec![1, 27], (0..27).map(|i| (i as f32) / 27.0).collect());
+    let h = Tensor::zeros(&[1, 1]);
+    let a = exec.run(&[params.clone(), obs.clone(), h.clone()]).unwrap();
+    let b = exec.run(&[params, obs, h]).unwrap();
+    assert_eq!(a.len(), 1, "packed single-output convention");
+    assert_eq!(a[0].data, b[0].data);
+}

@@ -1,0 +1,213 @@
+//! Property tests over the simulation substrates (no artifacts needed).
+//!
+//! These pin the invariants the influence machinery relies on: label
+//! well-formedness, conservation laws, bounds, and the cross-simulator
+//! consistency between each GS's local regions and the corresponding LS.
+
+use dials::sim::traffic::{TrafficGlobalSim, TrafficLocalSim};
+use dials::sim::warehouse::{WarehouseGlobalSim, WarehouseLocalSim, CLS_ABSENT};
+use dials::sim::{GlobalSim, LocalSim};
+use dials::util::prop::forall_res;
+use dials::util::rng::Pcg64;
+
+#[test]
+fn traffic_labels_are_binary_and_match_entry_occupancy() {
+    forall_res(
+        40,
+        |r| (r.below(3) + 1, r.next_u64()),
+        |&(side, seed)| {
+            let side = side as usize;
+            let n = side * side;
+            let mut gs = TrafficGlobalSim::new(side);
+            let mut rng = Pcg64::seed(seed);
+            gs.reset(&mut rng);
+            let mut u = vec![0.0f32; gs.u_dim()];
+            for t in 0..40 {
+                let acts: Vec<usize> = (0..n).map(|i| ((t + i) % 4 == 0) as usize).collect();
+                gs.step(&acts, &mut rng);
+                for agent in 0..n {
+                    gs.influence_label(agent, &mut u);
+                    for &x in &u {
+                        if x != 0.0 && x != 1.0 {
+                            return Err(format!("non-binary label {x}"));
+                        }
+                    }
+                    // a label of 1 implies the entry cell is now occupied
+                    let mut obs = vec![0.0f32; gs.obs_dim()];
+                    gs.observe(agent, &mut obs);
+                    for lane in 0..4 {
+                        if u[lane] == 1.0 && obs[lane * 6] != 1.0 {
+                            return Err(format!(
+                                "agent {agent} lane {lane}: label=1 but entry cell empty"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn warehouse_labels_are_one_hot_per_head() {
+    forall_res(
+        30,
+        |r| (r.below(3) + 1, r.next_u64()),
+        |&(side, seed)| {
+            let side = side as usize;
+            let n = side * side;
+            let mut gs = WarehouseGlobalSim::new(side);
+            let mut rng = Pcg64::seed(seed);
+            gs.reset(&mut rng);
+            let mut u = vec![0.0f32; gs.u_dim()];
+            for t in 0..30 {
+                let acts: Vec<usize> = (0..n).map(|i| (t * 7 + i) % 5).collect();
+                gs.step(&acts, &mut rng);
+                for agent in 0..n {
+                    gs.influence_label(agent, &mut u);
+                    for head in 0..4 {
+                        let group = &u[head * 4..(head + 1) * 4];
+                        let ones = group.iter().filter(|&&x| x == 1.0).count();
+                        let zeros = group.iter().filter(|&&x| x == 0.0).count();
+                        if ones != 1 || zeros != 3 {
+                            return Err(format!("head {head} not one-hot: {group:?}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn warehouse_boundary_heads_always_absent() {
+    // Agents on the grid edge have no neighbour on that side: the
+    // corresponding head must always be the ABSENT class.
+    let mut gs = WarehouseGlobalSim::new(3);
+    let mut rng = Pcg64::seed(1);
+    gs.reset(&mut rng);
+    let mut u = vec![0.0f32; gs.u_dim()];
+    for t in 0..50 {
+        let acts: Vec<usize> = (0..9).map(|i| (t + i) % 5).collect();
+        gs.step(&acts, &mut rng);
+        // agent 0 = top-left: heads N (0) and W (3) absent
+        gs.influence_label(0, &mut u);
+        assert_eq!(u[0 * 4 + CLS_ABSENT], 1.0);
+        assert_eq!(u[3 * 4 + CLS_ABSENT], 1.0);
+        // agent 8 = bottom-right: heads S (2) and E (1) absent
+        gs.influence_label(8, &mut u);
+        assert_eq!(u[2 * 4 + CLS_ABSENT], 1.0);
+        assert_eq!(u[1 * 4 + CLS_ABSENT], 1.0);
+    }
+}
+
+#[test]
+fn traffic_rewards_bounded_and_finite() {
+    forall_res(
+        30,
+        |r| (r.below(3) + 1, r.next_u64()),
+        |&(side, seed)| {
+            let side = side as usize;
+            let n = side * side;
+            let mut gs = TrafficGlobalSim::new(side);
+            let mut rng = Pcg64::seed(seed);
+            gs.reset(&mut rng);
+            for t in 0..60 {
+                let acts: Vec<usize> = (0..n).map(|i| ((t * 3 + i) % 6 == 0) as usize).collect();
+                for r in gs.step(&acts, &mut rng) {
+                    if !(0.0..=1.0).contains(&r) || !r.is_finite() {
+                        return Err(format!("traffic reward out of [0,1]: {r}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn local_sims_never_panic_on_any_input_stream() {
+    // Fuzz the LS interfaces with arbitrary (action, u) streams.
+    forall_res(
+        60,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Pcg64::seed(seed);
+            let mut tls = TrafficLocalSim::new();
+            tls.reset(&mut rng);
+            let mut wls = WarehouseLocalSim::new();
+            wls.reset(&mut rng);
+            for _ in 0..80 {
+                let a_t = rng.below(2) as usize;
+                let u_t: Vec<f32> = (0..4).map(|_| (rng.below(2)) as f32).collect();
+                let r = tls.step(a_t, &u_t, &mut rng);
+                if !r.is_finite() {
+                    return Err("traffic LS produced non-finite reward".into());
+                }
+                let a_w = rng.below(5) as usize;
+                let u_w: Vec<f32> = (0..4).map(|_| rng.below(4) as f32).collect();
+                let r = wls.step(a_w, &u_w, &mut rng);
+                if !(0.0..=1.0).contains(&r) {
+                    return Err(format!("warehouse LS reward {r} out of range"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn traffic_ls_car_population_is_stable_under_saturation() {
+    // Even with u = all-ones forever, the region cannot exceed its cell
+    // capacity (4 incoming + 4 outgoing segments × 6 cells).
+    let mut ls = TrafficLocalSim::new();
+    let mut rng = Pcg64::seed(2);
+    ls.reset(&mut rng);
+    for t in 0..500 {
+        ls.step((t / 10) % 2, &[1.0; 4], &mut rng);
+        assert!(ls.total_cars() <= 48, "overflow: {} cars", ls.total_cars());
+    }
+}
+
+#[test]
+fn warehouse_ls_item_count_bounded_by_slots() {
+    let mut ls = WarehouseLocalSim::with_spawn(1.0);
+    let mut rng = Pcg64::seed(3);
+    ls.reset(&mut rng);
+    for _ in 0..100 {
+        ls.step(4, &[3.0; 4], &mut rng);
+        assert!(ls.total_items() <= 12);
+    }
+}
+
+#[test]
+fn observations_are_always_well_formed() {
+    forall_res(
+        40,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Pcg64::seed(seed);
+            let mut gs = WarehouseGlobalSim::new(2);
+            gs.reset(&mut rng);
+            let mut obs = vec![0.0f32; gs.obs_dim()];
+            for t in 0..40 {
+                let acts: Vec<usize> = (0..4).map(|i| (t + i) % 5).collect();
+                gs.step(&acts, &mut rng);
+                for agent in 0..4 {
+                    gs.observe(agent, &mut obs);
+                    // exactly one robot-location bit
+                    let loc_bits = obs[..25].iter().filter(|&&x| x == 1.0).count();
+                    if loc_bits != 1 {
+                        return Err(format!("agent {agent}: {loc_bits} location bits"));
+                    }
+                    if obs.iter().any(|&x| x != 0.0 && x != 1.0) {
+                        return Err("non-binary warehouse obs".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
