@@ -1,9 +1,22 @@
 //! Hot-path microbenchmarks (§Perf deliverable, not a paper table).
 //!
 //! Measures every component on the per-step critical path so the perf pass
-//! can attribute time: simulator steps, PJRT executable invocations
+//! can attribute time — simulator steps, PJRT executable invocations
 //! (policy forward, AIP forward), the PPO/AIP update calls, and the
-//! end-to-end per-agent step of the IALS training loop.
+//! end-to-end per-agent step of the IALS training loop — AND, since the
+//! zero-allocation step refactor, the heap traffic of each loop via the
+//! tracking allocator (`util::alloc`):
+//!
+//! * the steady-state simulator loops (traffic/warehouse GS + LS with the
+//!   buffer-out `step` API) must allocate ZERO bytes per step — the bench
+//!   fails loudly if they regress;
+//! * the NN-in-the-loop paths report bytes/step so later PRs (batched NN
+//!   stepping, run_b output reuse) have a trajectory to push down.
+//!
+//! Results are printed, saved as `results/hotpath.csv`, and emitted as
+//! machine-readable `BENCH_hotpath.json` in the working directory.
+//! Sections that need compiled artifacts skip with a notice when
+//! `make artifacts` has not run (or the `xla` feature is off).
 //!
 //!     cargo bench --offline --bench hotpath
 
@@ -13,52 +26,104 @@ use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
 use dials::coordinator::DialsCoordinator;
 use dials::ppo::PpoTrainer;
 use dials::runtime::Engine;
-use dials::sim::{traffic::TrafficGlobalSim, warehouse::WarehouseGlobalSim, GlobalSim, LocalSim};
 use dials::sim::traffic::TrafficLocalSim;
 use dials::sim::warehouse::WarehouseLocalSim;
+use dials::sim::{traffic::TrafficGlobalSim, warehouse::WarehouseGlobalSim, GlobalSim, LocalSim};
+use dials::util::alloc::{self, TrackingAlloc};
 use dials::util::bench::{time_n, Table};
 use dials::util::npk::Tensor;
 use dials::util::rng::Pcg64;
 
-fn main() -> Result<()> {
-    let engine = Engine::cpu()?;
-    let mut table = Table::new("hot path microbenchmarks", &["op", "mean", "min", "per-unit"]);
-    let reps = 200;
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
 
-    // ---- simulators
+/// One benchmark row destined for BENCH_hotpath.json.
+struct JsonRow {
+    op: String,
+    mean_s: f64,
+    min_s: f64,
+    bytes_per_step: f64,
+    peak_extra_bytes: usize,
+}
+
+/// Heap traffic of `steps` iterations of `f` after a warm-up pass:
+/// (net live bytes per step, peak extra bytes over the whole window).
+fn alloc_per_step(steps: usize, mut f: impl FnMut()) -> (f64, usize) {
+    for _ in 0..steps.min(64) {
+        f(); // warm-up: scratch buffers reach steady-state capacity
+    }
+    alloc::reset_peak();
+    let before = alloc::snapshot();
+    for _ in 0..steps {
+        f();
+    }
+    let after = alloc::snapshot();
+    let net = after.live as f64 - before.live as f64;
+    (net / steps as f64, after.peak.saturating_sub(before.live))
+}
+
+fn main() -> Result<()> {
+    let mut table = Table::new(
+        "hot path microbenchmarks",
+        &["op", "mean", "min", "per-unit", "B/step", "peak extra"],
+    );
+    let mut json: Vec<JsonRow> = Vec::new();
+    let reps = 200;
+    let mut sim_zero_alloc = true;
+
+    // ---- simulators (always run; must be allocation-free per step)
     {
         let mut rng = Pcg64::seed(0);
+
         let mut ls = TrafficLocalSim::new();
         ls.reset(&mut rng);
         let (mean, min) = time_n(reps, || {
             ls.step(0, &[1.0, 0.0, 0.0, 0.0], &mut rng);
         });
-        table.row(vec!["traffic LS step".into(), us(mean), us(min), "1 step".into()]);
+        let (bps, peak) = alloc_per_step(512, || {
+            ls.step(0, &[1.0, 0.0, 0.0, 0.0], &mut rng);
+        });
+        sim_zero_alloc &= bps == 0.0 && peak == 0;
+        push_row(&mut table, &mut json, "traffic LS step", mean, min, "1 step", bps, peak);
 
         let mut wls = WarehouseLocalSim::new();
         wls.reset(&mut rng);
         let (mean, min) = time_n(reps, || {
             wls.step(1, &[3.0, 3.0, 3.0, 3.0], &mut rng);
         });
-        table.row(vec!["warehouse LS step".into(), us(mean), us(min), "1 step".into()]);
+        let (bps, peak) = alloc_per_step(512, || {
+            wls.step(1, &[3.0, 3.0, 3.0, 3.0], &mut rng);
+        });
+        sim_zero_alloc &= bps == 0.0 && peak == 0;
+        push_row(&mut table, &mut json, "warehouse LS step", mean, min, "1 step", bps, peak);
 
         let mut gs = TrafficGlobalSim::new(5);
         gs.reset(&mut rng);
         let acts = vec![0usize; 25];
+        let mut rewards = vec![0.0f32; 25];
         let (mean, min) = time_n(reps, || {
-            gs.step(&acts, &mut rng);
+            gs.step(&acts, &mut rewards, &mut rng);
         });
-        table.row(vec!["traffic GS step (25 ints)".into(), us(mean), us(min), "25 agents".into()]);
+        let (bps, peak) = alloc_per_step(512, || {
+            gs.step(&acts, &mut rewards, &mut rng);
+        });
+        sim_zero_alloc &= bps == 0.0 && peak == 0;
+        push_row(&mut table, &mut json, "traffic GS step (25 ints)", mean, min, "25 agents", bps, peak);
 
         let mut wgs = WarehouseGlobalSim::new(5);
         wgs.reset(&mut rng);
         let (mean, min) = time_n(reps, || {
-            wgs.step(&acts, &mut rng);
+            wgs.step(&acts, &mut rewards, &mut rng);
         });
-        table.row(vec!["warehouse GS step (25 rb)".into(), us(mean), us(min), "25 agents".into()]);
+        let (bps, peak) = alloc_per_step(512, || {
+            wgs.step(&acts, &mut rewards, &mut rng);
+        });
+        sim_zero_alloc &= bps == 0.0 && peak == 0;
+        push_row(&mut table, &mut json, "warehouse GS step (25 rb)", mean, min, "25 agents", bps, peak);
     }
 
-    // ---- PJRT executable calls
+    // ---- PJRT executable calls + e2e training step (need artifacts)
+    let engine = Engine::cpu()?;
     for domain in [Domain::Traffic, Domain::Warehouse] {
         let cfg = ExperimentConfig {
             domain,
@@ -66,6 +131,18 @@ fn main() -> Result<()> {
             ppo: PpoConfig::default(),
             ..Default::default()
         };
+        if !cfg!(feature = "xla") {
+            eprintln!("SKIP: built without the `xla` feature; NN-path rows omitted");
+            break;
+        }
+        let meta = std::path::Path::new(&cfg.artifacts_dir).join(format!("{}.meta", domain.name()));
+        if !meta.is_file() {
+            eprintln!(
+                "SKIP: {} artifacts not built (run `make artifacts`); NN-path rows omitted",
+                domain.name()
+            );
+            continue;
+        }
         let coord = DialsCoordinator::new(&engine, cfg.clone())?;
         let arts = coord.artifacts();
         let spec = &arts.spec;
@@ -75,7 +152,10 @@ fn main() -> Result<()> {
         let (mean, min) = time_n(reps, || {
             arts.policy_step.run(&[params.clone(), obs.clone(), h.clone()]).unwrap();
         });
-        table.row(vec![format!("{} policy_step HLO call", domain.name()), us(mean), us(min), "1 fwd".into()]);
+        let (bps, peak) = alloc_per_step(reps, || {
+            arts.policy_step.run(&[params.clone(), obs.clone(), h.clone()]).unwrap();
+        });
+        push_row(&mut table, &mut json, &format!("{} policy_step HLO call", domain.name()), mean, min, "1 fwd", bps, peak);
 
         let ap = arts.aip_init.clone();
         let feat = Tensor::zeros(&[1, spec.aip_feat]);
@@ -83,7 +163,10 @@ fn main() -> Result<()> {
         let (mean, min) = time_n(reps, || {
             arts.aip_forward.run(&[ap.clone(), feat.clone(), ah.clone()]).unwrap();
         });
-        table.row(vec![format!("{} aip_forward HLO call", domain.name()), us(mean), us(min), "1 fwd".into()]);
+        let (bps, peak) = alloc_per_step(reps, || {
+            arts.aip_forward.run(&[ap.clone(), feat.clone(), ah.clone()]).unwrap();
+        });
+        push_row(&mut table, &mut json, &format!("{} aip_forward HLO call", domain.name()), mean, min, "1 fwd", bps, peak);
 
         // full PPO update (epochs × minibatches over one rollout)
         let mut workers = coord.make_workers(0);
@@ -93,7 +176,8 @@ fn main() -> Result<()> {
         w.train_segment(arts, &trainer, cfg.ppo.rollout_len, cfg.horizon)?;
         let mut rng = Pcg64::seed(1);
         // measure the raw update call on a synthetic full buffer
-        let mut buf = dials::ppo::RolloutBuffer::new(cfg.ppo.rollout_len, spec.obs_dim, spec.policy_hstate);
+        let mut buf =
+            dials::ppo::RolloutBuffer::new(cfg.ppo.rollout_len, spec.obs_dim, spec.policy_hstate);
         let obs_row = vec![0.1f32; spec.obs_dim];
         let h_row = vec![0.0f32; spec.policy_hstate];
         for t in 0..cfg.ppo.rollout_len {
@@ -103,23 +187,78 @@ fn main() -> Result<()> {
             trainer.update(arts, &mut w.policy.net, &buf, 0.0, &mut rng).unwrap();
         });
         let calls = cfg.ppo.epochs * (cfg.ppo.rollout_len / cfg.ppo.minibatch);
-        table.row(vec![
-            format!("{} PPO update (rollout)", domain.name()),
-            us(mean), us(min), format!("{calls} HLO calls"),
-        ]);
+        push_row(&mut table, &mut json, &format!("{} PPO update (rollout)", domain.name()), mean, min, &format!("{calls} HLO calls"), f64::NAN, 0);
 
-        // end-to-end IALS training step
+        // end-to-end IALS training step (post-warmup steady state)
         let (mean, min) = time_n(20, || {
             w.train_segment(arts, &trainer, 32, cfg.horizon).unwrap();
         });
-        table.row(vec![
-            format!("{} IALS train step e2e", domain.name()),
-            us(mean / 32.0), us(min / 32.0), "per env step".into(),
-        ]);
+        let (bytes_32, peak) = alloc_per_step(20, || {
+            w.train_segment(arts, &trainer, 32, cfg.horizon).unwrap();
+        });
+        push_row(
+            &mut table, &mut json,
+            &format!("{} IALS train step e2e", domain.name()),
+            mean / 32.0, min / 32.0, "per env step", bytes_32 / 32.0, peak,
+        );
     }
 
     table.print();
     table.save_csv("hotpath");
+    write_json(&json, sim_zero_alloc)?;
+    println!(
+        "\nsim-layer zero-alloc check: {}",
+        if sim_zero_alloc { "PASS (0 B/step across GS+LS loops)" } else { "FAIL" }
+    );
+    if !sim_zero_alloc {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    bytes_per_step: f64,
+    peak_extra: usize,
+) {
+    let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
+    table.row(vec![
+        op.to_string(),
+        us(mean),
+        us(min),
+        unit.to_string(),
+        bps,
+        format!("{peak_extra}B"),
+    ]);
+    json.push(JsonRow {
+        op: op.to_string(),
+        mean_s: mean,
+        min_s: min,
+        bytes_per_step,
+        peak_extra_bytes: peak_extra,
+    });
+}
+
+/// Hand-rolled JSON (the offline vendor ships no serde).
+fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
+    let mut s = String::from("{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n");
+    for (k, r) in rows.iter().enumerate() {
+        let bps = if r.bytes_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.bytes_per_step) };
+        s.push_str(&format!(
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes,
+            if k + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str(&format!("  ],\n  \"sim_zero_alloc\": {sim_zero_alloc}\n}}\n"));
+    std::fs::write("BENCH_hotpath.json", &s)?;
+    eprintln!("[bench] wrote BENCH_hotpath.json");
     Ok(())
 }
 

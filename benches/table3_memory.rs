@@ -47,8 +47,9 @@ fn main() -> Result<()> {
                 let mut rng = Pcg64::seed(0);
                 gs.reset(&mut rng);
                 let acts = vec![0usize; n];
+                let mut rewards = vec![0.0f32; n];
                 for _ in 0..200 {
-                    gs.step(&acts, &mut rng);
+                    gs.step(&acts, &mut rewards, &mut rng);
                 }
                 gs.n_agents()
             });

@@ -5,11 +5,16 @@
 //! per-agent cost grows with the number of agents — the scaling wall that
 //! motivates DIALS. The sim stepping is inherently sequential; runtime
 //! tables therefore report wall-clock = critical path for this baseline.
+//! Like the DIALS loop, the per-step path is allocation-free: joint
+//! observations/actions/rewards live in a `GsScratch` and the per-agent
+//! acting outputs in a reused `ActOut` row.
 
 use anyhow::Result;
 
 use crate::config::SimMode;
-use crate::coordinator::{evaluate_on_gs, make_global_sim, AgentWorker, DialsCoordinator};
+use crate::coordinator::{
+    evaluate_on_gs, make_global_sim, ActOut, AgentWorker, DialsCoordinator, GsScratch,
+};
 use crate::ppo::PpoTrainer;
 use crate::util::metrics::{CurvePoint, RunLog};
 use crate::util::rng::Pcg64;
@@ -37,14 +42,15 @@ impl GsTrainer {
 
         let mut timers = PhaseTimers::new();
         let mut log = RunLog { label: SimMode::GlobalSim.label().to_string(), ..Default::default() };
+        let mut scratch = GsScratch::new(&arts.spec, n);
+        let od = arts.spec.obs_dim;
 
         let r0 = timers.time("eval", || {
-            evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+            evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch)
         })?;
         log.eval_curve.push(CurvePoint { step: 0, value: r0 });
 
-        let mut obs = vec![vec![0.0f32; arts.spec.obs_dim]; n];
-        let mut actions = vec![0usize; n];
+        let mut step_outs: Vec<ActOut> = vec![ActOut::default(); n];
         let eval_every = if cfg.eval_every == 0 { cfg.total_steps } else { cfg.eval_every };
 
         let t_train = std::time::Instant::now();
@@ -55,20 +61,28 @@ impl GsTrainer {
         }
         for step in 0..cfg.total_steps {
             // joint action from all policies
-            let mut outs = Vec::with_capacity(n);
             for (i, w) in workers.iter_mut().enumerate() {
-                gs.observe(i, &mut obs[i]);
-                let (a, logp, o) = w.policy.act(&arts, &obs[i], &mut rng)?;
-                actions[i] = a;
-                outs.push((a, logp, o));
+                let obs = &mut scratch.obs[i * od..(i + 1) * od];
+                gs.observe(i, obs);
+                let act = w.policy.act_into(&arts, obs, &mut rng)?;
+                scratch.actions[i] = act.action;
+                step_outs[i] = act;
             }
-            let rewards = gs.step(&actions, &mut rng);
+            gs.step(&scratch.actions, &mut scratch.rewards, &mut rng);
             ep_step += 1;
             let done = ep_step >= cfg.horizon;
 
             for (i, w) in workers.iter_mut().enumerate() {
-                let (a, logp, o) = &outs[i];
-                w.buffer.push(&obs[i], &o.h_before, *a, *logp, rewards[i], o.value, done);
+                let act = step_outs[i];
+                w.buffer.push(
+                    &scratch.obs[i * od..(i + 1) * od],
+                    w.policy.h_before(),
+                    act.action,
+                    act.logp,
+                    scratch.rewards[i],
+                    act.value,
+                    done,
+                );
             }
             if done {
                 gs.reset(&mut rng);
@@ -84,8 +98,9 @@ impl GsTrainer {
                     let last_value = if done {
                         0.0
                     } else {
-                        gs.observe(i, &mut obs[i]);
-                        w.policy.peek_value(&arts, &obs[i])?
+                        let obs = &mut scratch.obs[i * od..(i + 1) * od];
+                        gs.observe(i, obs);
+                        w.policy.peek_value(&arts, obs)?
                     };
                     trainer.update(&arts, &mut w.policy.net, &w.buffer, last_value, &mut w.rng)?;
                     w.buffer.clear();
@@ -95,7 +110,7 @@ impl GsTrainer {
             if (step + 1) % eval_every == 0 || step + 1 == cfg.total_steps {
                 timers.add("agent_train", t_train.elapsed().as_secs_f64() - timers.get("agent_train") - timers.get("eval_gap"));
                 let ret = timers.time("eval", || {
-                    evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+                    evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch)
                 })?;
                 timers.add("eval_gap", timers.get("eval") - timers.get("eval_gap"));
                 log.eval_curve.push(CurvePoint { step: step + 1, value: ret });

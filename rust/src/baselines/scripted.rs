@@ -71,7 +71,7 @@ pub fn scripted_return(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::GlobalSim;
+    use crate::sim::{gs_step_vec, GlobalSim};
 
     #[test]
     fn fixed_cycle_switches_on_period() {
@@ -85,7 +85,7 @@ mod tests {
             if a == 1 {
                 switches += 1;
             }
-            gs.step(&[a], &mut rng);
+            gs_step_vec(&mut gs, &[a], &mut rng);
         }
         assert!(switches >= 4, "expected periodic switching, got {switches}");
     }
@@ -102,11 +102,11 @@ mod tests {
         // force an item by stepping a high-spawn sim instead
         let mut gs = WarehouseGlobalSim::with_spawn(1, 1.0);
         gs.reset(&mut rng);
-        gs.step(&[4], &mut rng); // fills every slot
+        gs_step_vec(&mut gs, &[4], &mut rng); // fills every slot
         let mut collected = 0.0;
         for _ in 0..12 {
             let a = policy(0, &gs);
-            collected += gs.step(&[a], &mut rng)[0];
+            collected += gs_step_vec(&mut gs, &[a], &mut rng)[0];
         }
         assert!(collected > 0.0, "greedy policy never collected an item");
     }

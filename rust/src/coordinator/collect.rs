@@ -3,7 +3,8 @@
 //!
 //! Each GS episode contributes, per agent, a sequence of
 //! (ALSH features = local state ⊕ one-hot action, influence label u_i^t)
-//! pairs, appended to that agent's dataset.
+//! pairs, appended to that agent's dataset. All per-step staging buffers
+//! live in `GsScratch` and are reused across retrain rounds.
 
 use anyhow::Result;
 
@@ -13,6 +14,7 @@ use crate::sim::GlobalSim;
 use crate::util::rng::Pcg64;
 
 use super::worker::AgentWorker;
+use super::GsScratch;
 
 /// Run the GS until each dataset has gained `rows_per_agent` fresh rows.
 /// Returns the number of GS env steps consumed (for the runtime tables).
@@ -23,16 +25,13 @@ pub fn collect_datasets(
     rows_per_agent: usize,
     horizon: usize,
     rng: &mut Pcg64,
+    scratch: &mut GsScratch,
 ) -> Result<usize> {
     let n = gs.n_agents();
     debug_assert_eq!(workers.len(), n);
+    debug_assert_eq!(scratch.obs.len(), n * arts.spec.obs_dim);
     let spec = &arts.spec;
 
-    let mut obs = vec![vec![0.0f32; spec.obs_dim]; n];
-    let mut feat = vec![0.0f32; spec.aip_feat];
-    let mut raw_label = vec![0.0f32; spec.u_dim];
-    let mut label = vec![0.0f32; spec.aip_heads];
-    let mut actions = vec![0usize; n];
     let mut gs_steps = 0usize;
     let mut collected = 0usize;
 
@@ -44,17 +43,25 @@ pub fn collect_datasets(
         }
         for _t in 0..horizon {
             for (i, w) in workers.iter_mut().enumerate() {
-                gs.observe(i, &mut obs[i]);
-                let (a, _logp, _out) = w.policy.act(arts, &obs[i], rng)?;
-                actions[i] = a;
+                let obs = scratch.obs_row_mut(i);
+                gs.observe(i, obs);
+                let act = w.policy.act_into(arts, obs, rng)?;
+                scratch.actions[i] = act.action;
             }
-            gs.step(&actions, rng);
+            gs.step(&scratch.actions, &mut scratch.rewards, rng);
             gs_steps += 1;
+            let od = scratch.obs_dim;
             for (i, w) in workers.iter_mut().enumerate() {
-                encode_alsh(&obs[i], actions[i], spec.act_dim, &mut feat);
-                gs.influence_label(i, &mut raw_label);
-                label_to_classes(&raw_label, spec.aip_heads, spec.aip_cls, &mut label);
-                w.dataset.push(&feat, &label);
+                // field-precise slices keep the borrows of `scratch` disjoint
+                encode_alsh(
+                    &scratch.obs[i * od..(i + 1) * od],
+                    scratch.actions[i],
+                    spec.act_dim,
+                    &mut scratch.feat,
+                );
+                gs.influence_label(i, &mut scratch.raw_label);
+                label_to_classes(&scratch.raw_label, spec.aip_heads, spec.aip_cls, &mut scratch.label);
+                w.dataset.push(&scratch.feat, &scratch.label);
             }
             collected += 1;
             if collected >= rows_per_agent {

@@ -9,9 +9,12 @@ use crate::sim::GlobalSim;
 use crate::util::rng::Pcg64;
 
 use super::worker::AgentWorker;
+use super::GsScratch;
 
 /// Run `episodes` GS episodes with the current joint policy; returns the
 /// mean per-agent episodic return (averaged over agents and episodes).
+/// All per-step buffers live in `scratch`, so repeated evaluations
+/// allocate nothing.
 pub fn evaluate_on_gs(
     arts: &ArtifactSet,
     gs: &mut dyn GlobalSim,
@@ -19,10 +22,11 @@ pub fn evaluate_on_gs(
     episodes: usize,
     horizon: usize,
     rng: &mut Pcg64,
+    scratch: &mut GsScratch,
 ) -> Result<f64> {
     let n = gs.n_agents();
-    let mut obs = vec![vec![0.0f32; arts.spec.obs_dim]; n];
-    let mut actions = vec![0usize; n];
+    debug_assert_eq!(workers.len(), n);
+    debug_assert_eq!(scratch.obs.len(), n * arts.spec.obs_dim);
     let mut total_return = 0.0f64;
 
     for _ep in 0..episodes {
@@ -32,12 +36,13 @@ pub fn evaluate_on_gs(
         }
         for _t in 0..horizon {
             for (i, w) in workers.iter_mut().enumerate() {
-                gs.observe(i, &mut obs[i]);
-                let (a, _lp, _o) = w.policy.act(arts, &obs[i], rng)?;
-                actions[i] = a;
+                let obs = &mut scratch.obs[i * scratch.obs_dim..(i + 1) * scratch.obs_dim];
+                gs.observe(i, obs);
+                let act = w.policy.act_into(arts, obs, rng)?;
+                scratch.actions[i] = act.action;
             }
-            let rewards = gs.step(&actions, rng);
-            total_return += rewards.iter().map(|&r| r as f64).sum::<f64>();
+            gs.step(&scratch.actions, &mut scratch.rewards, rng);
+            total_return += scratch.rewards.iter().map(|&r| r as f64).sum::<f64>();
         }
     }
     Ok(total_return / (episodes * n) as f64)
@@ -53,12 +58,16 @@ pub fn evaluate_scripted<G: GlobalSim>(
     rng: &mut Pcg64,
 ) -> f64 {
     let n = gs.n_agents();
+    let mut actions = vec![0usize; n];
+    let mut rewards = vec![0.0f32; n];
     let mut total = 0.0f64;
     for _ep in 0..episodes {
         gs.reset(rng);
         for _t in 0..horizon {
-            let actions: Vec<usize> = (0..n).map(|i| policy(i, gs)).collect();
-            let rewards = gs.step(&actions, rng);
+            for (i, a) in actions.iter_mut().enumerate() {
+                *a = policy(i, gs);
+            }
+            gs.step(&actions, &mut rewards, rng);
             total += rewards.iter().map(|&r| r as f64).sum::<f64>();
         }
     }

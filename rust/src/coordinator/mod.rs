@@ -4,8 +4,10 @@
 //! retraining every `F` timesteps, the embarrassingly-parallel per-agent
 //! IALS training segments (Algorithm 3 + PPO), and periodic GS evaluation.
 //!
-//! Parallel phases run on worker threads; every agent task is also timed
-//! individually so runs on this single-CPU box can report the *critical
+//! Parallel phases run on ONE persistent work-stealing pool
+//! (`crate::exec::WorkerPool`), created when a run starts and reused by
+//! every segment and retrain phase; every agent task is timed individually
+//! by the pool so runs on this single-CPU box can report the *critical
 //! path* — the wall-clock a ≥N-core machine (the paper's cluster) would
 //! measure. See DESIGN.md's substitution table.
 
@@ -18,22 +20,56 @@ mod worker;
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub use collect::collect_datasets;
 pub use evaluate::{evaluate_on_gs, evaluate_scripted};
-pub use policy_rt::{PolicyRuntime, StepOut};
+pub use policy_rt::{ActOut, PolicyRuntime, StepOut};
 pub use worker::AgentWorker;
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::{Domain, ExperimentConfig, SimMode};
+use crate::exec::WorkerPool;
 use crate::influence::AipRuntime;
 use crate::nn::NetState;
 use crate::ppo::PpoTrainer;
-use crate::runtime::{ArtifactSet, Engine};
+use crate::runtime::{ArtifactSet, Engine, NetSpec};
 use crate::sim::{traffic, warehouse, GlobalSim, LocalSim};
 use crate::util::metrics::{CurvePoint, RunLog};
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CriticalPath, PhaseTimers};
+
+/// Reusable buffers for the GS-driving phases (evaluation + influence
+/// data collection). Allocated once per run and threaded through
+/// `evaluate_on_gs` / `collect_datasets` so those loops stay
+/// allocation-free after warm-up.
+pub struct GsScratch {
+    /// Row-major per-agent observations: `[n × obs_dim]`.
+    pub(crate) obs: Vec<f32>,
+    pub(crate) actions: Vec<usize>,
+    pub(crate) rewards: Vec<f32>,
+    pub(crate) feat: Vec<f32>,
+    pub(crate) raw_label: Vec<f32>,
+    pub(crate) label: Vec<f32>,
+    pub(crate) obs_dim: usize,
+}
+
+impl GsScratch {
+    pub fn new(spec: &NetSpec, n_agents: usize) -> Self {
+        GsScratch {
+            obs: vec![0.0; n_agents * spec.obs_dim],
+            actions: vec![0; n_agents],
+            rewards: vec![0.0; n_agents],
+            feat: vec![0.0; spec.aip_feat],
+            raw_label: vec![0.0; spec.u_dim],
+            label: vec![0.0; spec.aip_heads],
+            obs_dim: spec.obs_dim,
+        }
+    }
+
+    pub(crate) fn obs_row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+    }
+}
 
 /// One entry of the training schedule produced by `plan_segments`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -152,11 +188,20 @@ impl DialsCoordinator {
         let mut train_cp_total = 0.0f64;
         let mut aip_cp_total = 0.0f64;
         let mut log = RunLog { label: cfg.mode.label().to_string(), ..Default::default() };
-        let threads = effective_threads(cfg.threads, cfg.n_agents());
+
+        // ONE persistent pool for the whole run: threads are spawned here
+        // and reused by every retrain + training segment below (no
+        // `thread::spawn` inside the segment loop), with chunks of agents
+        // stolen dynamically so stragglers never serialise a phase.
+        let pool = WorkerPool::new(effective_threads(cfg.threads, cfg.n_agents()));
+        let mut scratch = GsScratch::new(&self.arts.spec, cfg.n_agents());
 
         // initial evaluation point (step 0)
         let r0 = timers.time("eval", || {
-            evaluate_on_gs(&self.arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+            evaluate_on_gs(
+                &self.arts, gs.as_mut(), &mut workers,
+                cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch,
+            )
         })?;
         log.eval_curve.push(CurvePoint { step: 0, value: r0 });
 
@@ -167,7 +212,7 @@ impl DialsCoordinator {
                 timers.time("collect", || {
                     collect_datasets(
                         &self.arts, gs.as_mut(), &mut workers,
-                        cfg.aip_dataset, cfg.horizon, &mut rng,
+                        cfg.aip_dataset, cfg.horizon, &mut rng, &mut scratch,
                     )
                 })?;
                 // CE on fresh on-policy data BEFORE retraining (Fig. 4)
@@ -175,10 +220,9 @@ impl DialsCoordinator {
                 if let Some(ce) = ce_pre {
                     log.ce_curve.push(CurvePoint { step: seg.start, value: ce as f64 });
                 }
-                // parallel AIP retraining (timed per agent for the CP)
-                let durations = run_parallel(&mut workers, threads, |w| {
-                    let t0 = std::time::Instant::now();
-                    w.train_aip(&self.arts, self.cfg.aip_epochs).map(|_| t0.elapsed().as_secs_f64())
+                // parallel AIP retraining (timed per agent by the pool)
+                let durations = pool.run(&mut workers, |_i, w| {
+                    w.train_aip(&self.arts, self.cfg.aip_epochs).map(|_| ())
                 })?;
                 let mut cp = CriticalPath::new();
                 for d in &durations {
@@ -194,10 +238,8 @@ impl DialsCoordinator {
             // ---- parallel IALS training segment (Algorithm 1 lines 7-12)
             let horizon = cfg.horizon;
             let seg_len = seg.len;
-            let durations = run_parallel(&mut workers, threads, |w| {
-                let t0 = std::time::Instant::now();
+            let durations = pool.run(&mut workers, |_i, w| {
                 w.train_segment(&self.arts, &trainer, seg_len, horizon)
-                    .map(|_| t0.elapsed().as_secs_f64())
             })?;
             let mut cp = CriticalPath::new();
             for d in &durations {
@@ -208,7 +250,10 @@ impl DialsCoordinator {
 
             // ---- periodic evaluation (excluded from runtime totals)
             let ret = timers.time("eval", || {
-                evaluate_on_gs(&self.arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng)
+                evaluate_on_gs(
+                    &self.arts, gs.as_mut(), &mut workers,
+                    cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch,
+                )
             })?;
             log.eval_curve.push(CurvePoint { step: seg.start + seg.len, value: ret });
         }
@@ -244,46 +289,17 @@ fn mean_ce(arts: &ArtifactSet, workers: &mut [AgentWorker]) -> Result<Option<f32
     Ok(if k == 0 { None } else { Some(acc / k as f32) })
 }
 
-/// Run `task` once per worker, distributing workers over `threads` OS
-/// threads (round-robin). Returns per-worker durations (seconds) in worker
-/// order. This is the "distributed simulators" phase of the paper — each
-/// worker owns its IALS, AIP, and policy, so no state is shared.
+/// Run `task` once per worker over a transient work-stealing pool and
+/// return the closure outputs in worker order. This is the one-shot
+/// compatibility surface over `crate::exec::WorkerPool`; `run_ckpt` holds
+/// a persistent pool for the whole run instead of building one per phase.
+/// Errors name the failing agent index instead of unwinding.
 pub fn run_parallel<F>(workers: &mut [AgentWorker], threads: usize, task: F) -> Result<Vec<f64>>
 where
     F: Fn(&mut AgentWorker) -> Result<f64> + Sync,
 {
-    let n = workers.len();
-    if threads <= 1 || n <= 1 {
-        let mut out = Vec::with_capacity(n);
-        for w in workers.iter_mut() {
-            out.push(task(w)?);
-        }
-        return Ok(out);
-    }
-    let results: Mutex<Vec<Option<Result<f64>>>> =
-        Mutex::new((0..n).map(|_| None).collect());
-    let task_ref = &task;
-    let results_ref = &results;
-    std::thread::scope(|scope| {
-        let mut chunks: Vec<Vec<(usize, &mut AgentWorker)>> = (0..threads).map(|_| Vec::new()).collect();
-        for (i, w) in workers.iter_mut().enumerate() {
-            chunks[i % threads].push((i, w));
-        }
-        for chunk in chunks {
-            scope.spawn(move || {
-                for (i, w) in chunk {
-                    let r = task_ref(w);
-                    results_ref.lock().unwrap()[i] = Some(r);
-                }
-            });
-        }
-    });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.unwrap())
-        .collect()
+    let pool = WorkerPool::new(effective_threads(threads, workers.len().max(1)));
+    Ok(pool.run_map(workers, |_i, w| task(w))?.outputs)
 }
 
 #[cfg(test)]

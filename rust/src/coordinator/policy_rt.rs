@@ -1,14 +1,20 @@
 //! Streaming policy runtime: drives the `policy_step` artifact for one
 //! agent (B = 1), carrying the recurrent hidden state across an episode.
 //!
-//! Hot-path optimisation (§Perf): the flat parameter vector is uploaded to
-//! the device ONCE per policy version and reused across forwards via
-//! `run_b`; only the tiny obs/h tensors move per step. This cut the
-//! per-forward cost ~2-3× (EXPERIMENTS.md §Perf).
+//! Hot-path optimisations (§Perf):
+//! * the flat parameter vector is uploaded to the device ONCE per policy
+//!   version and reused across forwards via `run_b`; only the tiny obs/h
+//!   tensors move per step (cut the per-forward cost ~2-3×,
+//!   EXPERIMENTS.md §Perf);
+//! * the host side is allocation-free in steady state: the input staging
+//!   tensors, the logits/h scratch, and the sampling buffers are owned by
+//!   the runtime and reused every step (`act_into`). The legacy
+//!   `step`/`act` API clones out of the scratch and stays for tests and
+//!   one-shot callers.
 
 use anyhow::Result;
 
-use crate::nn::{sample_categorical, NetState};
+use crate::nn::{sample_categorical_buf, NetState};
 use crate::runtime::{ArtifactSet, DeviceTensor};
 use crate::util::npk::Tensor;
 use crate::util::rng::Pcg64;
@@ -16,13 +22,26 @@ use crate::util::rng::Pcg64;
 pub struct PolicyRuntime {
     pub net: NetState,
     hstate: Vec<f32>,
+    /// Hidden state BEFORE the most recent forward (what PPO replays).
+    h_before: Vec<f32>,
+    /// Logits of the most recent forward.
+    logits: Vec<f32>,
+    /// Value estimate of the most recent forward.
+    value: f32,
+    /// Staging tensors reused for every upload ([1, obs] / [1, h]).
+    in_obs: Tensor,
+    in_h: Tensor,
+    /// Sampling scratch (log-probs / probs).
+    logp_buf: Vec<f32>,
+    prob_buf: Vec<f32>,
     dev_params: Option<(u64, DeviceTensor)>,
     obs_dim: usize,
     act_dim: usize,
     h_dim: usize,
 }
 
-/// One forward step's outputs.
+/// One forward step's outputs (legacy owned form; `act_into` avoids the
+/// clones on the hot path).
 pub struct StepOut {
     pub logits: Vec<f32>,
     pub value: f32,
@@ -30,11 +49,27 @@ pub struct StepOut {
     pub h_before: Vec<f32>,
 }
 
+/// Compact result of one acting step; the replayed hidden state stays in
+/// the runtime's scratch (`PolicyRuntime::h_before`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActOut {
+    pub action: usize,
+    pub logp: f32,
+    pub value: f32,
+}
+
 impl PolicyRuntime {
     pub fn new(spec: &crate::runtime::NetSpec, net: NetState) -> Self {
         PolicyRuntime {
             net,
             hstate: vec![0.0; spec.policy_hstate],
+            h_before: vec![0.0; spec.policy_hstate],
+            logits: vec![0.0; spec.act_dim],
+            value: 0.0,
+            in_obs: Tensor::zeros(&[1, spec.obs_dim]),
+            in_h: Tensor::zeros(&[1, spec.policy_hstate]),
+            logp_buf: Vec::with_capacity(spec.act_dim),
+            prob_buf: Vec::with_capacity(spec.act_dim),
             dev_params: None,
             obs_dim: spec.obs_dim,
             act_dim: spec.act_dim,
@@ -50,6 +85,16 @@ impl PolicyRuntime {
         self.hstate.fill(0.0);
     }
 
+    /// Hidden state before the most recent forward (for `RolloutBuffer`).
+    pub fn h_before(&self) -> &[f32] {
+        &self.h_before
+    }
+
+    /// Logits of the most recent forward.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
     /// Device-resident params, re-uploaded only when the version changed.
     fn params(&mut self, arts: &ArtifactSet) -> Result<&DeviceTensor> {
         let stale = match &self.dev_params {
@@ -63,47 +108,74 @@ impl PolicyRuntime {
         Ok(&self.dev_params.as_ref().unwrap().1)
     }
 
-    fn forward(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<(Vec<f32>, f32, Vec<f32>)> {
+    /// Forward pass into the runtime-owned scratch (logits / value /
+    /// h_before); advances the hidden state iff `advance`.
+    fn forward_scratch(&mut self, arts: &ArtifactSet, obs: &[f32], advance: bool) -> Result<()> {
         debug_assert_eq!(obs.len(), self.obs_dim);
-        let obs_t = arts.engine.upload(&Tensor::new(vec![1, self.obs_dim], obs.to_vec()))?;
-        let h_t = arts.engine.upload(&Tensor::new(vec![1, self.h_dim], self.hstate.clone()))?;
+        self.in_obs.data.copy_from_slice(obs);
+        self.in_h.data.copy_from_slice(&self.hstate);
+        let obs_t = arts.engine.upload(&self.in_obs)?;
+        let h_t = arts.engine.upload(&self.in_h)?;
         // borrow params after the small uploads to appease the borrow checker
         let p = self.params(arts)?;
         let outs = arts.policy_step.run_b(&[p, &obs_t, &h_t])?;
         // packed output: [logits(A) | value(1) | h'(H)]
         let packed = outs[0].to_tensor()?.data;
         debug_assert_eq!(packed.len(), self.act_dim + 1 + self.h_dim);
-        let logits = packed[..self.act_dim].to_vec();
-        let value = packed[self.act_dim];
-        let h_new = packed[self.act_dim + 1..].to_vec();
-        Ok((logits, value, h_new))
+        self.h_before.copy_from_slice(&self.hstate);
+        self.logits.copy_from_slice(&packed[..self.act_dim]);
+        self.value = packed[self.act_dim];
+        if advance {
+            self.hstate.copy_from_slice(&packed[self.act_dim + 1..]);
+        }
+        Ok(())
     }
 
-    /// Forward the policy on `obs`, advancing the hidden state.
+    /// Forward the policy on `obs`, advancing the hidden state (legacy
+    /// owned-output form; allocates the returned vectors).
     pub fn step(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<StepOut> {
-        let h_before = self.hstate.clone();
-        let (logits, value, h_new) = self.forward(arts, obs)?;
-        self.hstate = h_new;
-        Ok(StepOut { logits, value, h_before })
+        self.forward_scratch(arts, obs, true)?;
+        Ok(StepOut {
+            logits: self.logits.clone(),
+            value: self.value,
+            h_before: self.h_before.clone(),
+        })
     }
 
     /// Forward WITHOUT advancing the hidden state (value bootstrap query).
     pub fn peek_value(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<f32> {
-        let h_save = self.hstate.clone();
-        let (_logits, value, _h) = self.forward(arts, obs)?;
-        self.hstate = h_save;
-        Ok(value)
+        self.forward_scratch(arts, obs, false)?;
+        Ok(self.value)
     }
 
-    /// Sample an action from a forward pass.
+    /// Sample an action from a forward pass (legacy owned-output form).
     pub fn act(
         &mut self,
         arts: &ArtifactSet,
         obs: &[f32],
         rng: &mut Pcg64,
     ) -> Result<(usize, f32, StepOut)> {
-        let out = self.step(arts, obs)?;
-        let (a, logp) = sample_categorical(&out.logits, rng);
-        Ok((a, logp, out))
+        let a = self.act_into(arts, obs, rng)?;
+        let out = StepOut {
+            logits: self.logits.clone(),
+            value: self.value,
+            h_before: self.h_before.clone(),
+        };
+        Ok((a.action, a.logp, out))
+    }
+
+    /// Hot-path acting step: forward + sample with zero host allocations
+    /// in steady state. The pre-step hidden state is readable via
+    /// `h_before()` until the next forward.
+    pub fn act_into(
+        &mut self,
+        arts: &ArtifactSet,
+        obs: &[f32],
+        rng: &mut Pcg64,
+    ) -> Result<ActOut> {
+        self.forward_scratch(arts, obs, true)?;
+        let (action, logp) =
+            sample_categorical_buf(&self.logits, &mut self.logp_buf, &mut self.prob_buf, rng);
+        Ok(ActOut { action, logp, value: self.value })
     }
 }

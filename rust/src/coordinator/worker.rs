@@ -2,9 +2,12 @@
 //! Algorithm 3): roll out the local simulator with influence samples from
 //! the agent's AIP, train the policy with PPO every `rollout_len` steps.
 //!
-//! One worker owns everything for one agent, so workers run embarrassingly
-//! parallel — the paper's key systems claim. The coordinator times each
-//! worker segment to report both serial wall-clock and the critical path.
+//! One worker owns everything for one agent — policy, AIP, local sim,
+//! rollout buffer, dataset, RNG stream, and all per-step scratch — so
+//! workers run embarrassingly parallel on the executor pool (the paper's
+//! key systems claim) and the steady-state step loop performs no host
+//! heap allocation (DESIGN.md §Zero-alloc hot path). Because each worker
+//! owns its RNG, results are invariant to the pool's thread count.
 
 use anyhow::Result;
 
@@ -34,6 +37,10 @@ pub struct AgentWorker {
     pub recent_reward: f32,
     feat_buf: Vec<f32>,
     obs_buf: Vec<f32>,
+    /// AIP head probabilities of the current step (len = spec.u_dim).
+    probs_buf: Vec<f32>,
+    /// Sampled influence realisation (len = spec.aip_heads).
+    u_buf: Vec<f32>,
 }
 
 impl AgentWorker {
@@ -54,10 +61,12 @@ impl AgentWorker {
             dataset: InfluenceDataset::new(spec.aip_feat, spec.aip_heads, dataset_capacity),
             feat_buf: vec![0.0; spec.aip_feat],
             obs_buf: vec![0.0; spec.obs_dim],
+            probs_buf: vec![0.0; spec.u_dim],
+            u_buf: vec![0.0; spec.aip_heads],
             policy,
             aip,
             ls,
-            rng: rng,
+            rng,
             ep_step: 0,
             env_steps: 0,
             recent_reward: 0.0,
@@ -85,23 +94,30 @@ impl AgentWorker {
             self.begin_episode();
         }
         for _ in 0..steps {
-            // observe + policy
+            // observe + policy (buffer-out: no per-step allocation)
             self.ls.observe(&mut self.obs_buf);
-            let (action, logp, out) =
-                self.policy.act(arts, &self.obs_buf, &mut self.rng)?;
+            let act = self.policy.act_into(arts, &self.obs_buf, &mut self.rng)?;
 
             // influence: predict + sample u (Algorithm 3 line 8)
-            encode_alsh(&self.obs_buf, action, arts.spec.act_dim, &mut self.feat_buf);
-            let probs = self.aip.forward(arts, &self.feat_buf)?;
-            let u = self.aip.sample_u(&probs, &mut self.rng);
+            encode_alsh(&self.obs_buf, act.action, arts.spec.act_dim, &mut self.feat_buf);
+            self.aip.forward_into(arts, &self.feat_buf, &mut self.probs_buf)?;
+            self.aip.sample_u_into(&self.probs_buf, &mut self.rng, &mut self.u_buf);
 
             // local transition
-            let reward = self.ls.step(action, &u, &mut self.rng);
+            let reward = self.ls.step(act.action, &self.u_buf, &mut self.rng);
             self.ep_step += 1;
             self.env_steps += 1;
             let done = self.ep_step >= horizon;
 
-            self.buffer.push(&self.obs_buf, &out.h_before, action, logp, reward, out.value, done);
+            self.buffer.push(
+                &self.obs_buf,
+                self.policy.h_before(),
+                act.action,
+                act.logp,
+                reward,
+                act.value,
+                done,
+            );
             self.recent_reward = 0.99 * self.recent_reward + 0.01 * reward;
 
             if done {

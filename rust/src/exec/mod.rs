@@ -1,0 +1,32 @@
+//! The execution substrate: a persistent, work-stealing worker pool.
+//!
+//! Motivation (DESIGN.md §Executor): the paper's systems claim is that
+//! per-agent local simulators run "independently and in parallel", but the
+//! seed coordinator re-spawned OS threads with static round-robin chunking
+//! on *every* segment and retrain phase. Stragglers then serialise the
+//! critical path — the failure mode DARL1N (Wang et al., 2022) addresses
+//! with dynamic work distribution.
+//!
+//! `WorkerPool` is created ONCE per `DialsCoordinator::run` and reused for
+//! every parallel phase of the run:
+//!
+//! * tasks are **chunked agent-index ranges** pushed into a shared
+//!   injector; idle workers steal the next chunk when they finish their
+//!   current one, so a straggling agent no longer pins its round-robin
+//!   siblings behind it;
+//! * the submitting thread participates in the phase (a `threads = 1`
+//!   pool runs fully inline — no helper threads, no synchronisation);
+//! * every task is timed individually; the per-task seconds feed the
+//!   coordinator's `CriticalPath` accounting (DESIGN.md substitution
+//!   table);
+//! * a panicking or erroring task surfaces as `Err` naming the failing
+//!   agent, cancels the not-yet-started remainder of the phase, and does
+//!   NOT poison the pool — the next phase runs normally.
+//!
+//! Determinism: the pool never owns RNG state. Workers (`AgentWorker`)
+//! carry their own streams, so results are bit-identical regardless of the
+//! thread count or the steal order — pinned by `tests/executor.rs`.
+
+mod pool;
+
+pub use pool::{Chunk, PhaseReport, WorkerPool};

@@ -1,0 +1,503 @@
+//! Persistent worker pool with a shared chunked injector queue.
+//!
+//! Threads are spawned once (`WorkerPool::new`) and parked on a condvar
+//! between phases. A phase (`run` / `run_map`) publishes a type-erased
+//! pointer to stack-held phase state; helpers steal chunks from the shared
+//! injector until it drains, then go back to sleep. The submitting thread
+//! participates too and only returns once every in-flight task has
+//! completed, which is what makes the borrowed-slice access sound.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+/// A contiguous range `[start, end)` of task indices handed to one worker
+/// at a time — the unit of stealing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub start: usize,
+    pub end: usize,
+}
+
+/// What one parallel phase returns: the closure outputs plus the measured
+/// wall seconds of every task, both in item order.
+#[derive(Debug)]
+pub struct PhaseReport<R> {
+    pub outputs: Vec<R>,
+    pub seconds: Vec<f64>,
+}
+
+/// Chunk length heuristic: ~4 chunks per thread keeps the injector
+/// fine-grained enough that a straggler cannot hide other agents' work
+/// behind it, without contending on the queue lock every task.
+fn chunk_len(n: usize, threads: usize) -> usize {
+    (n / (threads.max(1) * 4)).max(1)
+}
+
+/// Type-erased handle to the stack-held phase state of the current phase.
+#[derive(Clone, Copy)]
+struct RawPhase {
+    ctx: *const (),
+    drain: unsafe fn(*const ()),
+}
+
+// SAFETY: the pointer is only dereferenced by helper threads between phase
+// publication and teardown; `run_map` blocks until `remaining == 0` and
+// `entered == 0` before invalidating it.
+unsafe impl Send for RawPhase {}
+
+struct Gate {
+    /// Bumped once per phase so a helper never re-enters a phase it has
+    /// already drained.
+    epoch: u64,
+    phase: Option<RawPhase>,
+    /// Helpers currently inside a phase (may still hold the ctx pointer).
+    entered: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    gate: Mutex<Gate>,
+    /// Signals helpers: new phase available, or shutdown.
+    work_cv: Condvar,
+    /// Signals the submitter: a helper left the phase.
+    done_cv: Condvar,
+}
+
+/// All shared, mutable state of one phase. Lives on the submitting
+/// thread's stack for the duration of `run_map`.
+struct PhaseCtx<'a, T, R, F> {
+    /// The shared injector: chunks of task indices, stolen front-to-back.
+    queue: Mutex<VecDeque<Chunk>>,
+    items: *mut T,
+    task: &'a F,
+    /// Disjoint per-index writes; `Option` so a cancelled task is absent.
+    outputs: *mut Option<R>,
+    seconds: *mut f64,
+    /// Tasks not yet completed (or cancelled). Phase is over at 0.
+    remaining: AtomicUsize,
+    /// First failure by LOWEST task index (deterministic error reporting).
+    error: Mutex<Option<(usize, anyhow::Error)>>,
+}
+
+impl<T, R, F> PhaseCtx<'_, T, R, F>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> Result<R> + Sync,
+{
+    fn steal(&self) -> Option<Chunk> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    /// Execute task `i`. SAFETY: every index is popped from the injector
+    /// exactly once, so `&mut items[i]` and the result slots are exclusive.
+    fn run_one(&self, i: usize) {
+        let t0 = Instant::now();
+        let items = self.items;
+        let task = self.task;
+        let out = catch_unwind(AssertUnwindSafe(|| task(i, unsafe { &mut *items.add(i) })));
+        let secs = t0.elapsed().as_secs_f64();
+        unsafe { *self.seconds.add(i) = secs };
+        match out {
+            Ok(Ok(r)) => unsafe { *self.outputs.add(i) = Some(r) },
+            Ok(Err(e)) => self.fail(i, e),
+            Err(p) => self.fail(i, anyhow!("task panicked: {}", panic_msg(p.as_ref()))),
+        }
+        self.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Record a failure and cancel everything not yet started (drain the
+    /// injector) so the phase ends promptly; in-flight tasks on other
+    /// threads finish normally.
+    fn fail(&self, i: usize, e: anyhow::Error) {
+        {
+            let mut slot = self.error.lock().unwrap();
+            match &*slot {
+                Some((j, _)) if *j <= i => {}
+                _ => *slot = Some((i, e)),
+            }
+        }
+        let dropped: usize = {
+            let mut q = self.queue.lock().unwrap();
+            let d = q.iter().map(|c| c.end - c.start).sum();
+            q.clear();
+            d
+        };
+        if dropped > 0 {
+            self.remaining.fetch_sub(dropped, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Monomorphised drain loop invoked through the erased `RawPhase` pointer.
+///
+/// SAFETY: `ctx` must point at a live `PhaseCtx<T, R, F>` whose phase is
+/// still registered at the pool gate (guaranteed by the teardown protocol
+/// in `run_map`).
+unsafe fn drain_phase<T, R, F>(ctx: *const ())
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> Result<R> + Sync,
+{
+    let ctx = &*(ctx as *const PhaseCtx<'_, T, R, F>);
+    while let Some(chunk) = ctx.steal() {
+        for i in chunk.start..chunk.end {
+            ctx.run_one(i);
+        }
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn helper_loop(shared: Arc<Shared>) {
+    let mut last_epoch = 0u64;
+    loop {
+        let raw = {
+            let mut gate = shared.gate.lock().unwrap();
+            loop {
+                if gate.shutdown {
+                    return;
+                }
+                if let Some(raw) = gate.phase {
+                    if gate.epoch != last_epoch {
+                        last_epoch = gate.epoch;
+                        gate.entered += 1;
+                        break raw;
+                    }
+                }
+                gate = shared.work_cv.wait(gate).unwrap();
+            }
+        };
+        // SAFETY: the phase stays registered until `entered` drops back to
+        // zero; we decrement only after the last ctx access.
+        unsafe { (raw.drain)(raw.ctx) };
+        {
+            let mut gate = shared.gate.lock().unwrap();
+            gate.entered -= 1;
+        }
+        shared.done_cv.notify_all();
+    }
+}
+
+/// A persistent pool of `threads` execution slots (the submitting thread
+/// counts as one; `threads - 1` helper OS threads are spawned once and
+/// reused by every phase until the pool is dropped).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serialises phases: the gate holds exactly one phase, so concurrent
+    /// `run_map` calls (e.g. a future async-eval overlapping a training
+    /// segment) must queue rather than clobber each other's registration.
+    submit: Mutex<()>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            gate: Mutex::new(Gate { epoch: 0, phase: None, entered: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|k| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dials-exec-{k}"))
+                    .spawn(move || helper_loop(sh))
+                    .expect("spawn executor thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, threads, submit: Mutex::new(()) }
+    }
+
+    /// Execution slots, including the submitting thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task` once per item, work-stealing over the pool, and return
+    /// the per-task wall seconds in item order (for `CriticalPath`).
+    pub fn run<T, F>(&self, items: &mut [T], task: F) -> Result<Vec<f64>>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) -> Result<()> + Sync,
+    {
+        Ok(self.run_map(items, task)?.seconds)
+    }
+
+    /// Like `run` but also collects each task's output value.
+    pub fn run_map<T, R, F>(&self, items: &mut [T], task: F) -> Result<PhaseReport<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> Result<R> + Sync,
+    {
+        let n = items.len();
+        let mut outputs: Vec<Option<R>> = Vec::with_capacity(n);
+        outputs.resize_with(n, || None);
+        let mut seconds = vec![0.0f64; n];
+        if n == 0 {
+            return Ok(PhaseReport { outputs: Vec::new(), seconds });
+        }
+
+        // Serial fast path: no helpers (threads = 1) or nothing to share.
+        if self.handles.is_empty() || n == 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                let t0 = Instant::now();
+                let out = catch_unwind(AssertUnwindSafe(|| task(i, item)));
+                seconds[i] = t0.elapsed().as_secs_f64();
+                match out {
+                    Ok(Ok(r)) => outputs[i] = Some(r),
+                    Ok(Err(e)) => return Err(e.context(format!("parallel task {i} failed"))),
+                    Err(p) => {
+                        return Err(anyhow!(
+                            "parallel task {i} panicked: {}",
+                            panic_msg(p.as_ref())
+                        ))
+                    }
+                }
+            }
+            let outputs = outputs.into_iter().map(|o| o.expect("serial task skipped")).collect();
+            return Ok(PhaseReport { outputs, seconds });
+        }
+
+        // One phase at a time: later phases queue here instead of
+        // overwriting the gate's single registration slot.
+        let _phase_guard = self.submit.lock().unwrap();
+
+        // Seed the injector with chunked index ranges.
+        let clen = chunk_len(n, self.threads);
+        let mut q = VecDeque::with_capacity(n / clen + 1);
+        let mut s = 0usize;
+        while s < n {
+            let e = (s + clen).min(n);
+            q.push_back(Chunk { start: s, end: e });
+            s = e;
+        }
+
+        let ctx = PhaseCtx {
+            queue: Mutex::new(q),
+            items: items.as_mut_ptr(),
+            task: &task,
+            outputs: outputs.as_mut_ptr(),
+            seconds: seconds.as_mut_ptr(),
+            remaining: AtomicUsize::new(n),
+            error: Mutex::new(None),
+        };
+        let raw = RawPhase {
+            ctx: &ctx as *const PhaseCtx<'_, T, R, F> as *const (),
+            drain: drain_phase::<T, R, F>,
+        };
+
+        // Publish the phase and wake the helpers.
+        {
+            let mut gate = self.shared.gate.lock().unwrap();
+            gate.epoch = gate.epoch.wrapping_add(1);
+            gate.phase = Some(raw);
+        }
+        self.shared.work_cv.notify_all();
+
+        // The submitter steals chunks like any other worker.
+        // SAFETY: ctx is alive and registered.
+        unsafe { drain_phase::<T, R, F>(raw.ctx) };
+
+        // Wait for in-flight helpers, then unregister the phase so no
+        // helper can observe a dangling ctx pointer.
+        {
+            let mut gate = self.shared.gate.lock().unwrap();
+            while ctx.remaining.load(Ordering::Acquire) != 0 || gate.entered != 0 {
+                gate = self.shared.done_cv.wait(gate).unwrap();
+            }
+            gate.phase = None;
+        }
+
+        match ctx.error.into_inner().unwrap() {
+            Some((i, e)) => Err(e.context(format!("parallel task {i} failed"))),
+            None => {
+                let outputs =
+                    outputs.into_iter().map(|o| o.expect("task output missing")).collect();
+                Ok(PhaseReport { outputs, seconds })
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut gate = self.shared.gate.lock().unwrap();
+            gate.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<usize> = vec![0; 100];
+        let report = pool
+            .run_map(&mut items, |i, x| {
+                *x += i + 1;
+                Ok(i)
+            })
+            .unwrap();
+        assert_eq!(report.outputs, (0..100).collect::<Vec<_>>());
+        assert_eq!(report.seconds.len(), 100);
+        for (i, x) in items.iter().enumerate() {
+            assert_eq!(*x, i + 1, "task {i} ran {x} times' worth");
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_phases() {
+        let pool = WorkerPool::new(3);
+        let mut items = vec![0u64; 17];
+        for round in 1..=5u64 {
+            pool.run(&mut items, |_, x| {
+                *x += 1;
+                Ok(())
+            })
+            .unwrap();
+            assert!(items.iter().all(|&x| x == round));
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // Each item owns its RNG stream (the AgentWorker discipline):
+        // outputs must be bit-identical for any pool width.
+        let run = |threads: usize| {
+            let pool = WorkerPool::new(threads);
+            let mut rngs: Vec<Pcg64> = (0..23).map(|i| Pcg64::new(7, i as u64)).collect();
+            pool.run_map(&mut rngs, |_, r| {
+                let mut acc = 0.0f64;
+                for _ in 0..1000 {
+                    acc += r.next_f64();
+                }
+                Ok(acc.to_bits())
+            })
+            .unwrap()
+            .outputs
+        };
+        let serial = run(1);
+        for t in [2, 4, 8] {
+            assert_eq!(serial, run(t), "outputs changed with {t} threads");
+        }
+    }
+
+    #[test]
+    fn erroring_task_reports_its_index_and_does_not_poison() {
+        let pool = WorkerPool::new(4);
+        let mut items = vec![0u32; 32];
+        let err = pool
+            .run(&mut items, |i, _| {
+                if i == 13 {
+                    anyhow::bail!("boom");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("task 13"), "error should name the agent: {msg}");
+        assert!(msg.contains("boom"), "error should keep the cause: {msg}");
+        // The pool stays usable.
+        let secs = pool
+            .run(&mut items, |_, x| {
+                *x += 1;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(secs.len(), 32);
+        assert!(items.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn panicking_task_surfaces_as_err() {
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut items = vec![(); 8];
+            let err = pool
+                .run(&mut items, |i, _| {
+                    if i == 2 {
+                        panic!("kaboom {i}");
+                    }
+                    Ok(())
+                })
+                .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("panicked"), "{msg}");
+            assert!(msg.contains("kaboom"), "{msg}");
+            // Still alive afterwards.
+            assert!(pool.run(&mut items, |_, _| Ok(())).is_ok());
+        }
+    }
+
+    #[test]
+    fn per_task_seconds_are_recorded() {
+        let pool = WorkerPool::new(2);
+        let mut items = vec![(); 6];
+        let secs = pool
+            .run(&mut items, |_, _| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                Ok(())
+            })
+            .unwrap();
+        assert!(secs.iter().all(|&s| s >= 0.001), "timings too small: {secs:?}");
+    }
+
+    #[test]
+    fn empty_and_singleton_phases() {
+        let pool = WorkerPool::new(4);
+        let mut none: Vec<u8> = Vec::new();
+        assert!(pool.run(&mut none, |_, _| Ok(())).unwrap().is_empty());
+        let mut one = vec![41u8];
+        pool.run(&mut one, |_, x| {
+            *x += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(one[0], 42);
+    }
+
+    #[test]
+    fn chunking_covers_all_indices() {
+        for (n, t) in [(1usize, 1usize), (7, 3), (100, 8), (9, 16)] {
+            let c = chunk_len(n, t);
+            assert!(c >= 1);
+            let mut covered = 0;
+            let mut s = 0;
+            while s < n {
+                let e = (s + c).min(n);
+                covered += e - s;
+                s = e;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+}

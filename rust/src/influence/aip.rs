@@ -2,7 +2,12 @@
 //! artifact plus influence-source sampling for the local simulators.
 //!
 //! Like the policy runtime, the AIP keeps its parameter vector
-//! device-resident across forwards (§Perf).
+//! device-resident across forwards (§Perf), and the hot path is buffer-out:
+//! `forward_into` writes the head probabilities into a caller-owned slice
+//! and `sample_u_into` writes the sampled influence realisation into the
+//! caller's `u` scratch, so the steady-state IALS step loop performs no
+//! host heap allocation. The allocating `forward`/`sample_u` wrappers stay
+//! for tests and one-shot callers.
 
 use anyhow::Result;
 
@@ -17,6 +22,9 @@ pub struct AipRuntime {
     pub net: NetState,
     /// GRU hidden state across the current episode (width `aip_hstate`).
     hstate: Vec<f32>,
+    /// Staging tensors reused for every upload ([1, feat] / [1, h]).
+    in_feat: Tensor,
+    in_h: Tensor,
     dev_params: Option<(u64, DeviceTensor)>,
     n_heads: usize,
     n_cls: usize,
@@ -29,12 +37,24 @@ impl AipRuntime {
         AipRuntime {
             net,
             hstate: vec![0.0; spec.aip_hstate],
+            in_feat: Tensor::zeros(&[1, spec.aip_feat]),
+            in_h: Tensor::zeros(&[1, spec.aip_hstate]),
             dev_params: None,
             n_heads: spec.aip_heads,
             n_cls: spec.aip_cls,
             feat_dim: spec.aip_feat,
             h_dim: spec.aip_hstate,
         }
+    }
+
+    /// Width of the probability vector `forward_into` produces.
+    pub fn u_dim(&self) -> usize {
+        self.n_heads * self.n_cls.max(1)
+    }
+
+    /// Number of influence heads = width of the sampled `u`.
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
     }
 
     /// Reset the episode memory (call at episode boundaries).
@@ -54,38 +74,59 @@ impl AipRuntime {
         Ok(&self.dev_params.as_ref().unwrap().1)
     }
 
-    /// Predict influence-source probabilities for the current ALSH step.
-    /// Returns `u_dim` probabilities and advances the hidden state.
-    pub fn forward(&mut self, arts: &ArtifactSet, feat: &[f32]) -> Result<Vec<f32>> {
+    /// Predict influence-source probabilities for the current ALSH step
+    /// into `probs_out` (len = `u_dim()`), advancing the hidden state.
+    pub fn forward_into(
+        &mut self,
+        arts: &ArtifactSet,
+        feat: &[f32],
+        probs_out: &mut [f32],
+    ) -> Result<()> {
         debug_assert_eq!(feat.len(), self.feat_dim);
-        let feat_t = arts.engine.upload(&Tensor::new(vec![1, self.feat_dim], feat.to_vec()))?;
-        let h_t = arts.engine.upload(&Tensor::new(vec![1, self.h_dim], self.hstate.clone()))?;
+        let u_dim = self.u_dim();
+        debug_assert_eq!(probs_out.len(), u_dim);
+        self.in_feat.data.copy_from_slice(feat);
+        self.in_h.data.copy_from_slice(&self.hstate);
+        let feat_t = arts.engine.upload(&self.in_feat)?;
+        let h_t = arts.engine.upload(&self.in_h)?;
         let p = self.params(arts)?;
         let outs = arts.aip_forward.run_b(&[p, &feat_t, &h_t])?;
         // packed output: [probs(U) | h'(H)]
-        let mut packed = outs[0].to_tensor()?.data;
-        let u_dim = self.n_heads * self.n_cls.max(1);
+        let packed = outs[0].to_tensor()?.data;
         debug_assert_eq!(packed.len(), u_dim + self.h_dim);
+        probs_out.copy_from_slice(&packed[..u_dim]);
         self.hstate.copy_from_slice(&packed[u_dim..]);
-        packed.truncate(u_dim);
-        Ok(packed)
+        Ok(())
     }
 
-    /// Sample an influence realisation `u` in the local simulator's input
-    /// format: Bernoulli heads → {0,1} per head; categorical heads → class
-    /// index per head.
-    pub fn sample_u(&self, probs: &[f32], rng: &mut Pcg64) -> Vec<f32> {
-        let mut u = Vec::with_capacity(self.n_heads);
+    /// Allocating wrapper around `forward_into` (tests / one-shot calls).
+    pub fn forward(&mut self, arts: &ArtifactSet, feat: &[f32]) -> Result<Vec<f32>> {
+        let mut probs = vec![0.0; self.u_dim()];
+        self.forward_into(arts, feat, &mut probs)?;
+        Ok(probs)
+    }
+
+    /// Sample an influence realisation `u` into `u_out` (len = `n_heads`),
+    /// in the local simulator's input format: Bernoulli heads → {0,1} per
+    /// head; categorical heads → class index per head.
+    pub fn sample_u_into(&self, probs: &[f32], rng: &mut Pcg64, u_out: &mut [f32]) {
+        debug_assert_eq!(u_out.len(), self.n_heads);
         if self.n_cls <= 1 {
-            for &p in probs.iter().take(self.n_heads) {
-                u.push(if rng.bernoulli(p as f64) { 1.0 } else { 0.0 });
+            for (o, &p) in u_out.iter_mut().zip(probs.iter().take(self.n_heads)) {
+                *o = if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
             }
         } else {
-            for h in 0..self.n_heads {
+            for (h, o) in u_out.iter_mut().enumerate() {
                 let group = &probs[h * self.n_cls..(h + 1) * self.n_cls];
-                u.push(rng.categorical(group) as f32);
+                *o = rng.categorical(group) as f32;
             }
         }
+    }
+
+    /// Allocating wrapper around `sample_u_into` (tests / one-shot calls).
+    pub fn sample_u(&self, probs: &[f32], rng: &mut Pcg64) -> Vec<f32> {
+        let mut u = vec![0.0; self.n_heads];
+        self.sample_u_into(probs, rng, &mut u);
         u
     }
 }
@@ -141,6 +182,25 @@ mod tests {
             probs[h * 4 + h] = 1.0;
         }
         assert_eq!(rt.sample_u(&probs, &mut rng), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn sample_u_into_matches_allocating_form() {
+        let rt = runtime(1);
+        let probs = [1.0f32, 0.0, 1.0, 1.0];
+        let mut rng_a = Pcg64::seed(5);
+        let mut rng_b = Pcg64::seed(5);
+        let owned = rt.sample_u(&probs, &mut rng_a);
+        let mut buf = [9.0f32; 4];
+        rt.sample_u_into(&probs, &mut rng_b, &mut buf);
+        assert_eq!(owned.as_slice(), &buf);
+    }
+
+    #[test]
+    fn u_dim_accounts_for_classes() {
+        assert_eq!(runtime(1).u_dim(), 4);
+        assert_eq!(runtime(4).u_dim(), 16);
+        assert_eq!(runtime(4).n_heads(), 4);
     }
 
     #[test]

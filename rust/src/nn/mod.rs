@@ -91,9 +91,23 @@ pub fn log_softmax(logits: &[f32], out: &mut Vec<f32>) {
 /// Sample an action from logits; returns (action, log-prob of the action).
 pub fn sample_categorical(logits: &[f32], rng: &mut Pcg64) -> (usize, f32) {
     let mut logp = Vec::with_capacity(logits.len());
-    log_softmax(logits, &mut logp);
-    let probs: Vec<f32> = logp.iter().map(|&lp| lp.exp()).collect();
-    let a = rng.categorical(&probs);
+    let mut probs = Vec::with_capacity(logits.len());
+    sample_categorical_buf(logits, &mut logp, &mut probs, rng)
+}
+
+/// Zero-allocation variant of `sample_categorical`: the caller owns the
+/// log-prob / prob scratch vectors, whose capacity is reused across calls
+/// (steady-state step loops allocate nothing). Identical RNG consumption.
+pub fn sample_categorical_buf(
+    logits: &[f32],
+    logp: &mut Vec<f32>,
+    probs: &mut Vec<f32>,
+    rng: &mut Pcg64,
+) -> (usize, f32) {
+    log_softmax(logits, logp);
+    probs.clear();
+    probs.extend(logp.iter().map(|&lp| lp.exp()));
+    let a = rng.categorical(probs);
     (a, logp[a])
 }
 

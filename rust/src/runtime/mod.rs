@@ -1,16 +1,34 @@
-//! Runtime: load and execute the AOT-compiled HLO artifacts via PJRT.
+//! Runtime: load and execute the AOT-compiled HLO artifacts.
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
-//! from_text_file` → `client.compile` → `execute`. The rust binary is
-//! self-contained after `make artifacts`; Python never runs here.
+//! Two interchangeable backends behind one API (`Engine` / `Exec` /
+//! `DeviceTensor`):
+//!
+//! * `exec` (feature `xla`): the real path — wraps the `xla` crate:
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `client.compile` → `execute`. The rust binary is self-contained after
+//!   `make artifacts`; Python never runs here. The offline build vendors
+//!   the binding at `rust/vendor/xla` (a stub by default — drop a real
+//!   xla-rs checkout there to enable execution).
+//! * `native` (default): a dependency-free host backend with the same
+//!   surface. Uploads/downloads round-trip host tensors and artifact
+//!   loading validates file presence, but executing a compiled graph
+//!   reports an error — enough for the full simulator/executor/PPO-buffer
+//!   stack, every unit test, and the alloc benches to build and run
+//!   without the XLA toolchain.
 //!
 //! `Engine`/`Exec` are shared across the coordinator's worker threads —
 //! the underlying XLA PJRT CPU client is thread-safe, the Rust wrapper
 //! types just don't carry the marker traits, hence the scoped
-//! `unsafe impl Send/Sync` below.
+//! `unsafe impl Send/Sync` in the xla backend.
 
 mod artifacts;
+#[cfg(feature = "xla")]
 mod exec;
+#[cfg(not(feature = "xla"))]
+mod native;
 
 pub use artifacts::{ArtifactSet, NetSpec};
+#[cfg(feature = "xla")]
 pub use exec::{DeviceTensor, Engine, Exec};
+#[cfg(not(feature = "xla"))]
+pub use native::{DeviceTensor, Engine, Exec};

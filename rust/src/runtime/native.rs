@@ -1,0 +1,137 @@
+//! Dependency-free host backend (compiled when the `xla` feature is off).
+//!
+//! Mirrors the `exec` backend's API so the rest of the crate is oblivious
+//! to which one is linked. `upload`/`to_tensor` round-trip host tensors
+//! (the zero-alloc runtimes stage into these), and `load_hlo` validates
+//! that the artifact file exists, but actually executing a compiled graph
+//! needs the real PJRT client and returns an explanatory error. Tests that
+//! require artifact execution skip themselves when `make artifacts` has
+//! not run, so the default build stays green end to end.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::npk::Tensor;
+
+/// Host stand-in for the PJRT CPU client. Cheap to clone.
+#[derive(Clone, Default)]
+pub struct Engine;
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine)
+    }
+
+    pub fn platform(&self) -> String {
+        "cpu".to_string()
+    }
+
+    /// "Upload" a host tensor: the device is the host.
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceTensor> {
+        Ok(DeviceTensor { host: t.clone() })
+    }
+
+    /// Load an HLO-text artifact. Presence and readability are checked so
+    /// interface drift still fails loudly at startup; compilation needs
+    /// the `xla` feature.
+    pub fn load_hlo(&self, path: &Path) -> Result<Exec> {
+        std::fs::metadata(path)
+            .with_context(|| format!("read HLO text {}", path.display()))?;
+        Ok(Exec {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A "device"-resident tensor: host memory in this backend.
+pub struct DeviceTensor {
+    host: Tensor,
+}
+
+impl DeviceTensor {
+    /// Download to a host tensor.
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Ok(self.host.clone())
+    }
+}
+
+/// One loaded (but not executable) artifact.
+pub struct Exec {
+    name: String,
+}
+
+impl Exec {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of executions so far. Always 0 in this backend — nothing
+    /// can execute without the `xla` feature (API parity only).
+    pub fn call_count(&self) -> u64 {
+        0
+    }
+
+    /// Execute with host tensors, returning host tensors (simple path).
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!(
+            "cannot execute artifact {:?}: the crate was built without the `xla` \
+             feature (native host backend). Rebuild with `--features xla` and a \
+             real xla-rs checkout under rust/vendor/xla.",
+            self.name
+        )
+    }
+
+    /// Execute with device buffers, returning device buffers (hot path).
+    pub fn run_b(&self, _inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>> {
+        bail!(
+            "cannot execute artifact {:?}: the crate was built without the `xla` \
+             feature (native host backend). Rebuild with `--features xla` and a \
+             real xla-rs checkout under rust/vendor/xla.",
+            self.name
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_boots_cpu_client() {
+        let engine = Engine::cpu().unwrap();
+        assert_eq!(engine.platform(), "cpu");
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let engine = Engine::cpu().unwrap();
+        assert!(engine.load_hlo(Path::new("/nonexistent/foo.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let engine = Engine::cpu().unwrap();
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let d = engine.upload(&t).unwrap();
+        assert_eq!(d.to_tensor().unwrap(), t);
+    }
+
+    #[test]
+    fn execution_reports_missing_feature() {
+        let dir = std::env::temp_dir().join("dials_native_backend_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fake.hlo.txt");
+        std::fs::write(&path, "HloModule fake\n").unwrap();
+        let engine = Engine::cpu().unwrap();
+        let exec = engine.load_hlo(&path).unwrap();
+        assert_eq!(exec.name(), "fake.hlo");
+        assert_eq!(exec.call_count(), 0);
+        let err = exec.run(&[]).unwrap_err();
+        assert!(format!("{err}").contains("xla"), "{err}");
+        assert!(exec.run_b(&[]).is_err());
+    }
+}

@@ -48,8 +48,10 @@ pub trait GlobalSim: Send {
     fn reset(&mut self, rng: &mut Pcg64);
     /// Write agent `i`'s local observation into `out` (len = obs_dim).
     fn observe(&self, agent: usize, out: &mut [f32]);
-    /// Advance one joint step; returns per-agent local rewards.
-    fn step(&mut self, actions: &[usize], rng: &mut Pcg64) -> Vec<f32>;
+    /// Advance one joint step, writing per-agent local rewards into
+    /// `rewards` (len = n_agents). Buffer-out so the steady-state step
+    /// loop performs no heap allocation (DESIGN.md §Zero-alloc hot path).
+    fn step(&mut self, actions: &[usize], rewards: &mut [f32], rng: &mut Pcg64);
     /// Influence label for agent `i` realised during the last `step`.
     /// Traffic: 4 × {0,1}. Warehouse: 4 × one-hot(4) flattened.
     fn influence_label(&self, agent: usize, out: &mut [f32]);
@@ -82,4 +84,13 @@ pub fn observe_vec_local(sim: &dyn LocalSim) -> Vec<f32> {
     let mut v = vec![0.0; sim.obs_dim()];
     sim.observe(&mut v);
     v
+}
+
+/// Convenience for tests and one-shot callers: advance the GS one step and
+/// collect the rewards into a fresh vector. Hot paths should instead reuse
+/// a caller-owned buffer via `GlobalSim::step`.
+pub fn gs_step_vec(sim: &mut dyn GlobalSim, actions: &[usize], rng: &mut Pcg64) -> Vec<f32> {
+    let mut rewards = vec![0.0; sim.n_agents()];
+    sim.step(actions, &mut rewards, rng);
+    rewards
 }

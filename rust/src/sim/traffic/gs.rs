@@ -29,8 +29,10 @@ pub struct TrafficGlobalSim {
     lights: Vec<Light>,
     /// Influence labels realised during the last step: u[agent][lane].
     labels: Vec<[f32; TRAFFIC_U_DIM]>,
-    /// Per-agent (moved, cars) accumulators of the last step.
-    rewards: Vec<f32>,
+    /// Per-agent (moved, cars) scratch accumulators, reused every step so
+    /// the hot loop allocates nothing.
+    moved: Vec<usize>,
+    cars: Vec<usize>,
     inflow: f64,
 }
 
@@ -44,7 +46,8 @@ impl TrafficGlobalSim {
             sinks: (0..n).map(|_| Default::default()).collect(),
             lights: vec![Light::new(); n],
             labels: vec![[0.0; TRAFFIC_U_DIM]; n],
-            rewards: vec![0.0; n],
+            moved: vec![0; n],
+            cars: vec![0; n],
             inflow: BOUNDARY_INFLOW,
         }
     }
@@ -133,9 +136,10 @@ impl GlobalSim for TrafficGlobalSim {
         out[base + 2] = light.time_feature();
     }
 
-    fn step(&mut self, actions: &[usize], rng: &mut Pcg64) -> Vec<f32> {
+    fn step(&mut self, actions: &[usize], rewards: &mut [f32], rng: &mut Pcg64) {
         let n = self.n_agents();
         debug_assert_eq!(actions.len(), n);
+        debug_assert_eq!(rewards.len(), n);
 
         // 1. lights
         for (l, &a) in self.lights.iter_mut().zip(actions) {
@@ -144,8 +148,14 @@ impl GlobalSim for TrafficGlobalSim {
         for lab in self.labels.iter_mut() {
             *lab = [0.0; TRAFFIC_U_DIM];
         }
-        let mut moved = vec![0usize; n];
-        let mut cars = vec![0usize; n];
+        // Scratch accumulators are struct fields; taking them out keeps the
+        // borrow checker happy while the lanes below are mutated.
+        let mut moved = std::mem::take(&mut self.moved);
+        let mut cars = std::mem::take(&mut self.cars);
+        moved.clear();
+        moved.resize(n, 0);
+        cars.clear();
+        cars.resize(n, 0);
         for agent in 0..n {
             cars[agent] = self.incoming[agent].iter().map(|s| s.car_count()).sum();
         }
@@ -210,13 +220,14 @@ impl GlobalSim for TrafficGlobalSim {
 
         // 5. rewards = mean speed over the agent's incoming lanes
         for agent in 0..n {
-            self.rewards[agent] = if cars[agent] == 0 {
+            rewards[agent] = if cars[agent] == 0 {
                 1.0 // free-flowing empty region
             } else {
                 moved[agent] as f32 / cars[agent] as f32
             };
         }
-        self.rewards.clone()
+        self.moved = moved;
+        self.cars = cars;
     }
 
     fn influence_label(&self, agent: usize, out: &mut [f32]) {
@@ -227,7 +238,7 @@ impl GlobalSim for TrafficGlobalSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::observe_vec_global;
+    use crate::sim::{gs_step_vec, observe_vec_global};
 
     fn keep_all(n: usize) -> Vec<usize> {
         vec![0; n]
@@ -239,7 +250,7 @@ mod tests {
         let mut rng = Pcg64::seed(0);
         gs.reset(&mut rng);
         for _ in 0..10 {
-            gs.step(&keep_all(9), &mut rng);
+            gs_step_vec(&mut gs, &keep_all(9), &mut rng);
         }
         assert!(gs.total_cars() > 0);
         gs.reset(&mut rng);
@@ -251,12 +262,12 @@ mod tests {
         let mut gs = TrafficGlobalSim::new(2);
         let mut rng = Pcg64::seed(1);
         gs.reset(&mut rng);
-        gs.step(&keep_all(4), &mut rng);
+        gs_step_vec(&mut gs, &keep_all(4), &mut rng);
         // With inflow 0.25 over 8 boundary lanes (2x2 grid: each corner has
         // 2 boundary incoming lanes) some cars should appear quickly.
         let mut seen = gs.total_cars();
         for _ in 0..20 {
-            gs.step(&keep_all(4), &mut rng);
+            gs_step_vec(&mut gs, &keep_all(4), &mut rng);
             seen = seen.max(gs.total_cars());
         }
         assert!(seen > 0);
@@ -271,7 +282,7 @@ mod tests {
             let mut trace = Vec::new();
             for t in 0..50 {
                 let acts: Vec<usize> = (0..4).map(|i| ((t + i) % 7 == 0) as usize).collect();
-                let r = gs.step(&acts, &mut rng);
+                let r = gs_step_vec(&mut gs, &acts, &mut rng);
                 trace.push((r, gs.total_cars()));
             }
             trace
@@ -286,7 +297,7 @@ mod tests {
         let mut gs = TrafficGlobalSim::with_inflow(1, 1.0);
         let mut rng = Pcg64::seed(2);
         gs.reset(&mut rng);
-        gs.step(&[0], &mut rng);
+        gs_step_vec(&mut gs, &[0], &mut rng);
         let mut u = [0.0f32; 4];
         gs.influence_label(0, &mut u);
         assert_eq!(u, [1.0; 4]); // single intersection: all 4 lanes are boundary
@@ -297,7 +308,7 @@ mod tests {
         let mut gs = TrafficGlobalSim::with_inflow(2, 0.0);
         let mut rng = Pcg64::seed(3);
         gs.reset(&mut rng);
-        gs.step(&keep_all(4), &mut rng);
+        gs_step_vec(&mut gs, &keep_all(4), &mut rng);
         for agent in 0..4 {
             let mut u = [9.0f32; 4];
             gs.influence_label(agent, &mut u);
@@ -324,7 +335,7 @@ mod tests {
         let mut gs = TrafficGlobalSim::with_inflow(1, 0.0);
         let mut rng = Pcg64::seed(5);
         gs.reset(&mut rng);
-        gs.step(&[1], &mut rng);
+        gs_step_vec(&mut gs, &[1], &mut rng);
         let obs = observe_vec_global(&gs, 0);
         assert_eq!(obs[24], 0.0);
         assert_eq!(obs[25], 1.0);
@@ -338,14 +349,14 @@ mod tests {
         gs.reset(&mut rng);
         // seed some traffic
         for _ in 0..30 {
-            gs.step(&keep_all(4), &mut rng);
+            gs_step_vec(&mut gs, &keep_all(4), &mut rng);
         }
         let mut gs_no_inflow = gs;
         gs_no_inflow.inflow = 0.0;
         let mut prev = gs_no_inflow.total_cars();
         for t in 0..60 {
             let acts: Vec<usize> = (0..4).map(|i| ((t + i) % 5 == 0) as usize).collect();
-            gs_no_inflow.step(&acts, &mut rng);
+            gs_step_vec(&mut gs_no_inflow, &acts, &mut rng);
             let now = gs_no_inflow.total_cars();
             assert!(now <= prev, "cars appeared from nowhere: {prev} -> {now}");
             prev = now;
@@ -368,7 +379,7 @@ mod tests {
             let mut total = 0.0;
             for t in 0..10 {
                 let a = if t == 0 { first_action } else { 0 };
-                total += gs.step(&[a], &mut rng)[0];
+                total += gs_step_vec(&mut gs, &[a], &mut rng)[0];
             }
             total
         };
@@ -385,7 +396,7 @@ mod tests {
         gs.reset(&mut rng);
         gs.incoming[0][Dir::W.idx()].occ[SEG_LEN - 1] = true;
         // switch both lights to EW green
-        gs.step(&[1, 1, 1, 1], &mut rng);
+        gs_step_vec(&mut gs, &[1, 1, 1, 1], &mut rng);
         // car from W goes straight (p=0.6), left (exit S) or right (exit N
         // = off-grid sink for row 0). Re-run with several seeds until the
         // straight turn happens; label must appear on agent 1 lane W.
@@ -395,7 +406,7 @@ mod tests {
             let mut rng = Pcg64::seed(seed);
             gs.reset(&mut rng);
             gs.incoming[0][Dir::W.idx()].occ[SEG_LEN - 1] = true;
-            gs.step(&[1, 1, 1, 1], &mut rng); // EW green; crossing may happen
+            gs_step_vec(&mut gs, &[1, 1, 1, 1], &mut rng); // EW green; crossing may happen
             let mut u = [0.0f32; 4];
             gs.influence_label(1, &mut u);
             if u[Dir::W.idx()] == 1.0 {

@@ -16,7 +16,7 @@ use crate::sim::{
 };
 use crate::util::rng::Pcg64;
 
-use super::{age_rank_reward, apply_move, slot_local, CLS_ABSENT, ITEM_SPAWN_P};
+use super::{apply_move, slot_local, CLS_ABSENT, ITEM_SPAWN_P};
 
 pub struct WarehouseGlobalSim {
     side: usize,        // R: robots per grid side
@@ -104,13 +104,6 @@ impl WarehouseGlobalSim {
         }
     }
 
-    /// Ages of all active items in agent's region.
-    fn region_ages(&self, agent: usize) -> Vec<u32> {
-        (0..WAREHOUSE_ITEM_SLOTS)
-            .filter_map(|k| self.items[self.slot_global(agent, k)])
-            .collect()
-    }
-
     pub fn total_items(&self) -> usize {
         self.items.iter().filter(|i| i.is_some()).count()
     }
@@ -176,9 +169,10 @@ impl GlobalSim for WarehouseGlobalSim {
         }
     }
 
-    fn step(&mut self, actions: &[usize], rng: &mut Pcg64) -> Vec<f32> {
+    fn step(&mut self, actions: &[usize], rewards: &mut [f32], rng: &mut Pcg64) {
         let n = self.n_agents();
         debug_assert_eq!(actions.len(), n);
+        debug_assert_eq!(rewards.len(), n);
 
         // 1. simultaneous moves
         for (agent, &a) in actions.iter().enumerate() {
@@ -205,14 +199,25 @@ impl GlobalSim for WarehouseGlobalSim {
             }
         }
 
-        // 3. collection in fixed order
-        let mut rewards = vec![0.0f32; n];
+        // 3. collection in fixed order. The age-rank reward is computed by
+        // counting in place (same maths as `age_rank_reward`) so the hot
+        // loop never materialises the region's age list.
+        rewards.fill(0.0);
         for agent in 0..n {
             let (gr, gc) = self.robot_global(agent);
             let g = self.gidx(gr, gc);
             if let Some(age) = self.items[g] {
-                let ages = self.region_ages(agent);
-                rewards[agent] = age_rank_reward(age, &ages);
+                let mut total = 0usize;
+                let mut younger_or_eq = 0usize;
+                for k in 0..WAREHOUSE_ITEM_SLOTS {
+                    if let Some(a) = self.items[self.slot_global(agent, k)] {
+                        total += 1;
+                        if a <= age {
+                            younger_or_eq += 1;
+                        }
+                    }
+                }
+                rewards[agent] = younger_or_eq as f32 / total as f32;
                 self.items[g] = None;
             }
         }
@@ -228,7 +233,6 @@ impl GlobalSim for WarehouseGlobalSim {
                 self.items[g] = Some(0);
             }
         }
-        rewards
     }
 
     fn influence_label(&self, agent: usize, out: &mut [f32]) {
@@ -243,7 +247,7 @@ impl GlobalSim for WarehouseGlobalSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::observe_vec_global;
+    use crate::sim::{gs_step_vec, observe_vec_global};
 
     #[test]
     fn shared_shelves_coincide() {
@@ -263,7 +267,7 @@ mod tests {
         let mut sim = WarehouseGlobalSim::with_spawn(2, 1.0);
         let mut rng = Pcg64::seed(0);
         sim.reset(&mut rng);
-        sim.step(&[4; 4], &mut rng);
+        gs_step_vec(&mut sim, &[4; 4], &mut rng);
         assert!(sim.total_items() > 30, "spawn_p=1 should fill most slots");
     }
 
@@ -288,7 +292,7 @@ mod tests {
         let g = sim.slot_global(0, 0);
         sim.items[g] = Some(5);
         sim.robots[0] = (0, 0);
-        let r = sim.step(&[3], &mut rng); // move right onto (0,1)
+        let r = gs_step_vec(&mut sim, &[3], &mut rng); // move right onto (0,1)
         assert_eq!(r[0], 1.0); // only item -> full reward
         assert_eq!(sim.total_items(), 0);
     }
@@ -303,7 +307,7 @@ mod tests {
         sim.items[g_old] = Some(50);
         sim.items[g_new] = Some(1);
         sim.robots[0] = (0, 0);
-        let r_old = sim.step(&[3], &mut rng)[0]; // collect at (0,1)
+        let r_old = gs_step_vec(&mut sim, &[3], &mut rng)[0]; // collect at (0,1)
         assert_eq!(r_old, 1.0);
         // remaining item is now the only one -> also pays 1 when collected,
         // so instead test the younger item while the old one is present:
@@ -312,7 +316,7 @@ mod tests {
         sim2.items[g_old] = Some(50);
         sim2.items[g_new] = Some(1);
         sim2.robots[0] = (0, 3);
-        let r_new = sim2.step(&[2], &mut rng)[0]; // move left onto (0,2)
+        let r_new = gs_step_vec(&mut sim2, &[2], &mut rng)[0]; // move left onto (0,2)
         assert!((r_new - 0.5).abs() < 1e-6, "younger of two items pays 1/2, got {r_new}");
     }
 
@@ -327,7 +331,7 @@ mod tests {
         sim.items[g] = Some(3);
         sim.robots[0] = (1, 3); // one step left of the shared cell
         sim.robots[1] = (1, 1); // one step right of it (in its own frame)
-        let r = sim.step(&[3, 2, 4, 4], &mut rng); // both move onto it
+        let r = gs_step_vec(&mut sim, &[3, 2, 4, 4], &mut rng); // both move onto it
         assert_eq!(r[0], 1.0, "lower index collects");
         assert_eq!(r[1], 0.0, "higher index loses the race");
         assert_eq!(sim.items[g], None);
@@ -344,7 +348,7 @@ mod tests {
         sim.robots[0] = (0, 0);
         sim.robots[2] = (0, 0);
         sim.robots[3] = (0, 0);
-        sim.step(&[4, 2, 4, 4], &mut rng); // agent 1 moves left onto edge
+        gs_step_vec(&mut sim, &[4, 2, 4, 4], &mut rng); // agent 1 moves left onto edge
         let mut u = [0.0f32; WAREHOUSE_U_DIM];
         sim.influence_label(0, &mut u);
         // head E (=1), class 1 (middle cell)
@@ -362,7 +366,7 @@ mod tests {
         for r in sim.robots.iter_mut() {
             *r = (2, 2);
         }
-        sim.step(&[4, 4, 4, 4], &mut rng);
+        gs_step_vec(&mut sim, &[4, 4, 4, 4], &mut rng);
         for agent in 0..4 {
             let mut u = [0.0f32; WAREHOUSE_U_DIM];
             sim.influence_label(agent, &mut u);
@@ -381,7 +385,7 @@ mod tests {
             let mut acc = Vec::new();
             for t in 0..80 {
                 let acts: Vec<usize> = (0..4).map(|i| (t + i) % 5).collect();
-                acc.push(sim.step(&acts, &mut rng));
+                acc.push(gs_step_vec(&mut sim, &acts, &mut rng));
             }
             acc
         };
@@ -395,7 +399,7 @@ mod tests {
         sim.reset(&mut rng);
         for t in 0..100 {
             let acts: Vec<usize> = (0..9).map(|i| (t * 3 + i) % 5).collect();
-            for r in sim.step(&acts, &mut rng) {
+            for r in gs_step_vec(&mut sim, &acts, &mut rng) {
                 assert!((0.0..=1.0).contains(&r), "reward {r} out of range");
             }
         }

@@ -13,7 +13,7 @@ use crate::sim::{
 };
 use crate::util::rng::Pcg64;
 
-use super::{age_rank_reward, apply_move, slot_at_local, CLS_ABSENT, ITEM_SPAWN_P};
+use super::{apply_move, slot_at_local, CLS_ABSENT, ITEM_SPAWN_P};
 
 pub struct WarehouseLocalSim {
     /// Item age per slot (None = empty). Slot order: N,E,S,W × 3.
@@ -41,10 +41,6 @@ impl WarehouseLocalSim {
 
     pub fn set_item(&mut self, slot: usize, age: u32) {
         self.items[slot] = Some(age);
-    }
-
-    fn region_ages(&self) -> Vec<u32> {
-        self.items.iter().filter_map(|&a| a).collect()
     }
 }
 
@@ -105,11 +101,15 @@ impl LocalSim for WarehouseLocalSim {
         let (r, c) = self.robot;
         self.robot = apply_move(r, c, action);
 
-        // 3. collect
+        // 3. collect (age-rank reward counted in place — same maths as
+        // `age_rank_reward` without materialising the age list)
         let mut reward = 0.0;
         if let Some(slot) = slot_at_local(self.robot.0, self.robot.1) {
             if let Some(age) = self.items[slot] {
-                reward = age_rank_reward(age, &self.region_ages());
+                let total = self.items.iter().filter(|i| i.is_some()).count();
+                let younger_or_eq =
+                    self.items.iter().flatten().filter(|&&a| a <= age).count();
+                reward = younger_or_eq as f32 / total as f32;
                 self.items[slot] = None;
             }
         }

@@ -89,6 +89,7 @@ impl CsvWriter {
         self.rows.push(cells.to_vec());
     }
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = self.header.join(",");
         s.push('\n');

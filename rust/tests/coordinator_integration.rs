@@ -4,12 +4,16 @@
 use std::path::PathBuf;
 
 use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
-use dials::coordinator::{collect_datasets, make_global_sim, run_parallel, DialsCoordinator};
+use dials::coordinator::{collect_datasets, make_global_sim, run_parallel, DialsCoordinator, GsScratch};
 use dials::baselines::GsTrainer;
 use dials::runtime::Engine;
 use dials::util::rng::Pcg64;
 
 fn artifacts_ready() -> bool {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature (native backend cannot execute artifacts)");
+        return false;
+    }
     let ok = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/traffic.meta").is_file();
     if !ok {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
@@ -111,8 +115,11 @@ fn lemma1_same_policy_same_influence_data() {
         let mut workers = coord.make_workers(seed);
         let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
         let mut rng = Pcg64::new(seed, 5);
-        collect_datasets(coord.artifacts(), gs.as_mut(), &mut workers, 50, cfg.horizon, &mut rng)
-            .unwrap();
+        let mut scratch = GsScratch::new(&coord.artifacts().spec, cfg.n_agents());
+        collect_datasets(
+            coord.artifacts(), gs.as_mut(), &mut workers, 50, cfg.horizon, &mut rng, &mut scratch,
+        )
+        .unwrap();
         let mut probe = Pcg64::seed(99);
         workers
             .iter()

@@ -1,0 +1,155 @@
+//! Executor-level guarantees, pinned at two levels:
+//!
+//! * pool level (no artifacts needed): thread-count invariance for items
+//!   that own their RNG streams, persistent reuse across phases, and
+//!   error/panic containment;
+//! * coordinator level (needs `make artifacts`; skips otherwise): a seeded
+//!   `DialsCoordinator::run` must produce a bit-identical
+//!   `RunLog.eval_curve` whether the persistent pool runs with 1 or 8
+//!   threads — workers own their RNGs, so parallelism may only change
+//!   wall-clock, never results.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::exec::WorkerPool;
+use dials::runtime::Engine;
+use dials::util::rng::Pcg64;
+
+fn artifacts_ready() -> bool {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature (native backend cannot execute artifacts)");
+        return false;
+    }
+    let ok = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/traffic.meta").is_file();
+    if !ok {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+/// A straggler-heavy workload: task durations vary wildly, so static
+/// round-robin chunking would serialise, while outputs must stay exact.
+#[test]
+fn work_stealing_outputs_are_thread_count_invariant() {
+    struct Item {
+        rng: Pcg64,
+        draws: usize,
+    }
+    let make = || -> Vec<Item> {
+        (0..31)
+            .map(|i| Item { rng: Pcg64::new(42, i as u64), draws: 100 + (i % 7) * 4000 })
+            .collect()
+    };
+    let run = |threads: usize| {
+        let pool = WorkerPool::new(threads);
+        let mut items = make();
+        pool.run_map(&mut items, |_, it| {
+            let mut acc = 0u64;
+            for _ in 0..it.draws {
+                acc = acc.wrapping_add(it.rng.next_u64());
+            }
+            Ok(acc)
+        })
+        .unwrap()
+        .outputs
+    };
+    let baseline = run(1);
+    for t in [2, 4, 8] {
+        assert_eq!(baseline, run(t), "{t}-thread pool changed results");
+    }
+}
+
+#[test]
+fn one_pool_many_phases_counts_every_task_once() {
+    static CALLS: AtomicUsize = AtomicUsize::new(0);
+    let pool = WorkerPool::new(4);
+    let mut items = vec![0u8; 57];
+    for _phase in 0..8 {
+        pool.run(&mut items, |_, _| {
+            CALLS.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        })
+        .unwrap();
+    }
+    assert_eq!(CALLS.load(Ordering::Relaxed), 8 * 57);
+}
+
+#[test]
+fn failed_phase_does_not_poison_the_pool() {
+    let pool = WorkerPool::new(4);
+    let mut items: Vec<usize> = (0..40).collect();
+    let err = pool
+        .run(&mut items, |i, _| {
+            if i % 17 == 5 {
+                anyhow::bail!("agent {i} diverged");
+            }
+            Ok(())
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    // lowest failing index is reported deterministically
+    assert!(msg.contains("parallel task 5"), "{msg}");
+    assert!(msg.contains("diverged"), "{msg}");
+    // same pool keeps working, including for panics
+    let err = pool
+        .run(&mut items, |i, _| {
+            if i == 0 {
+                panic!("boom");
+            }
+            Ok(())
+        })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    assert!(pool.run(&mut items, |_, _| Ok(())).is_ok());
+}
+
+fn tiny_cfg(threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        domain: Domain::Traffic,
+        mode: SimMode::Dials,
+        grid_side: 2,
+        total_steps: 256,
+        aip_train_freq: 128,
+        aip_dataset: 60,
+        aip_epochs: 3,
+        eval_every: 128,
+        eval_episodes: 1,
+        horizon: 32,
+        seed: 7,
+        ppo: PpoConfig { rollout_len: 64, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
+        threads,
+    }
+}
+
+/// The acceptance property of the persistent executor: `threads = 1` and
+/// `threads = 8` runs of the same seed produce bit-identical eval curves.
+#[test]
+fn coordinator_runlog_is_thread_count_invariant() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let run = |threads: usize| {
+        let coord = DialsCoordinator::new(&engine, tiny_cfg(threads)).unwrap();
+        coord.run().unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(serial.eval_curve.len(), parallel.eval_curve.len());
+    for (a, b) in serial.eval_curve.iter().zip(parallel.eval_curve.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            a.value.to_bits(),
+            b.value.to_bits(),
+            "eval curve diverged at step {}: {} vs {}",
+            a.step, a.value, b.value
+        );
+    }
+    for (a, b) in serial.ce_curve.iter().zip(parallel.ce_curve.iter()) {
+        assert_eq!(a.value.to_bits(), b.value.to_bits(), "CE curve diverged");
+    }
+}

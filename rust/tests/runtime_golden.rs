@@ -11,6 +11,10 @@ use dials::config::Domain;
 use dials::util::npk::{read_npk, Tensor};
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature (native backend cannot execute artifacts)");
+        return None;
+    }
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("traffic.meta").is_file() {
         Some(dir)

@@ -6,7 +6,7 @@
 
 use dials::sim::traffic::{TrafficGlobalSim, TrafficLocalSim};
 use dials::sim::warehouse::{WarehouseGlobalSim, WarehouseLocalSim, CLS_ABSENT};
-use dials::sim::{GlobalSim, LocalSim};
+use dials::sim::{gs_step_vec, GlobalSim, LocalSim};
 use dials::util::prop::forall_res;
 use dials::util::rng::Pcg64;
 
@@ -24,7 +24,7 @@ fn traffic_labels_are_binary_and_match_entry_occupancy() {
             let mut u = vec![0.0f32; gs.u_dim()];
             for t in 0..40 {
                 let acts: Vec<usize> = (0..n).map(|i| ((t + i) % 4 == 0) as usize).collect();
-                gs.step(&acts, &mut rng);
+                gs_step_vec(&mut gs, &acts, &mut rng);
                 for agent in 0..n {
                     gs.influence_label(agent, &mut u);
                     for &x in &u {
@@ -63,7 +63,7 @@ fn warehouse_labels_are_one_hot_per_head() {
             let mut u = vec![0.0f32; gs.u_dim()];
             for t in 0..30 {
                 let acts: Vec<usize> = (0..n).map(|i| (t * 7 + i) % 5).collect();
-                gs.step(&acts, &mut rng);
+                gs_step_vec(&mut gs, &acts, &mut rng);
                 for agent in 0..n {
                     gs.influence_label(agent, &mut u);
                     for head in 0..4 {
@@ -91,7 +91,7 @@ fn warehouse_boundary_heads_always_absent() {
     let mut u = vec![0.0f32; gs.u_dim()];
     for t in 0..50 {
         let acts: Vec<usize> = (0..9).map(|i| (t + i) % 5).collect();
-        gs.step(&acts, &mut rng);
+        gs_step_vec(&mut gs, &acts, &mut rng);
         // agent 0 = top-left: heads N (0) and W (3) absent
         gs.influence_label(0, &mut u);
         assert_eq!(u[0 * 4 + CLS_ABSENT], 1.0);
@@ -116,7 +116,7 @@ fn traffic_rewards_bounded_and_finite() {
             gs.reset(&mut rng);
             for t in 0..60 {
                 let acts: Vec<usize> = (0..n).map(|i| ((t * 3 + i) % 6 == 0) as usize).collect();
-                for r in gs.step(&acts, &mut rng) {
+                for r in gs_step_vec(&mut gs, &acts, &mut rng) {
                     if !(0.0..=1.0).contains(&r) || !r.is_finite() {
                         return Err(format!("traffic reward out of [0,1]: {r}"));
                     }
@@ -194,7 +194,7 @@ fn observations_are_always_well_formed() {
             let mut obs = vec![0.0f32; gs.obs_dim()];
             for t in 0..40 {
                 let acts: Vec<usize> = (0..4).map(|i| (t + i) % 5).collect();
-                gs.step(&acts, &mut rng);
+                gs_step_vec(&mut gs, &acts, &mut rng);
                 for agent in 0..4 {
                     gs.observe(agent, &mut obs);
                     // exactly one robot-location bit

@@ -1,0 +1,138 @@
+//! Offline API-surface stub of the xla-rs PJRT binding (see README.md).
+//!
+//! Type-checks `rust/src/runtime/exec.rs` without the XLA toolchain;
+//! every operation fails with `Error::Unimplemented` at runtime. Replace
+//! this crate with a real xla-rs checkout to execute compiled artifacts.
+
+use std::fmt;
+
+/// Errors surfaced by the binding.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub cannot perform real PJRT work.
+    Unimplemented(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unimplemented(op) => write!(
+                f,
+                "xla stub: {op} is unimplemented (vendor a real xla-rs checkout \
+                 under rust/vendor/xla)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn todo<T>(op: &'static str) -> Result<T> {
+    Err(Error::Unimplemented(op))
+}
+
+/// Element types accepted by `buffer_from_host_buffer`.
+pub trait ElementType: Copy {}
+impl ElementType for f32 {}
+impl ElementType for f64 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        todo("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: ElementType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        todo("buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        todo("compile")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        todo("to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        todo("execute")
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        todo("execute_b")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        todo("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        todo("Literal::reshape")
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        todo("Literal::shape")
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        todo("Literal::to_vec")
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
