@@ -10,13 +10,18 @@
 //! * the steady-state simulator loops (traffic/warehouse GS + LS with the
 //!   buffer-out `step` API) must allocate ZERO bytes per step — the bench
 //!   fails loudly if they regress;
-//! * the NN-in-the-loop paths report bytes/step so later PRs (batched NN
-//!   stepping, run_b output reuse) have a trajectory to push down.
+//! * the NN-in-the-loop paths report bytes/step AND `run_b` calls per
+//!   joint GS step, so the batch-first trajectory (N B=1 calls → 1
+//!   batched call, ROADMAP) is comparable across PRs;
+//! * the batch-first section runs on the native backend with synthesized
+//!   artifacts (`runtime::synth`) — no `make artifacts` needed — and
+//!   measures `evaluate_on_gs` end-to-end in batched vs per-agent mode.
 //!
 //! Results are printed, saved as `results/hotpath.csv`, and emitted as
-//! machine-readable `BENCH_hotpath.json` in the working directory.
-//! Sections that need compiled artifacts skip with a notice when
-//! `make artifacts` has not run (or the `xla` feature is off).
+//! machine-readable `BENCH_hotpath.json` in the working directory (CI
+//! uploads the JSON as a workflow artifact). Sections that need compiled
+//! artifacts skip with a notice when `make artifacts` has not run (or the
+//! `xla` feature is off).
 //!
 //!     cargo bench --offline --bench hotpath
 
@@ -44,6 +49,8 @@ struct JsonRow {
     min_s: f64,
     bytes_per_step: f64,
     peak_extra_bytes: usize,
+    /// `run_b` executions per joint GS step (NaN = not applicable).
+    calls_per_step: f64,
 }
 
 /// Heap traffic of `steps` iterations of `f` after a warm-up pass:
@@ -65,7 +72,7 @@ fn alloc_per_step(steps: usize, mut f: impl FnMut()) -> (f64, usize) {
 fn main() -> Result<()> {
     let mut table = Table::new(
         "hot path microbenchmarks",
-        &["op", "mean", "min", "per-unit", "B/step", "peak extra"],
+        &["op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step"],
     );
     let mut json: Vec<JsonRow> = Vec::new();
     let reps = 200;
@@ -84,7 +91,7 @@ fn main() -> Result<()> {
             ls.step(0, &[1.0, 0.0, 0.0, 0.0], &mut rng);
         });
         sim_zero_alloc &= bps == 0.0 && peak == 0;
-        push_row(&mut table, &mut json, "traffic LS step", mean, min, "1 step", bps, peak);
+        push_row(&mut table, &mut json, "traffic LS step", mean, min, "1 step", bps, peak, f64::NAN);
 
         let mut wls = WarehouseLocalSim::new();
         wls.reset(&mut rng);
@@ -95,7 +102,7 @@ fn main() -> Result<()> {
             wls.step(1, &[3.0, 3.0, 3.0, 3.0], &mut rng);
         });
         sim_zero_alloc &= bps == 0.0 && peak == 0;
-        push_row(&mut table, &mut json, "warehouse LS step", mean, min, "1 step", bps, peak);
+        push_row(&mut table, &mut json, "warehouse LS step", mean, min, "1 step", bps, peak, f64::NAN);
 
         let mut gs = TrafficGlobalSim::new(5);
         gs.reset(&mut rng);
@@ -108,7 +115,7 @@ fn main() -> Result<()> {
             gs.step(&acts, &mut rewards, &mut rng);
         });
         sim_zero_alloc &= bps == 0.0 && peak == 0;
-        push_row(&mut table, &mut json, "traffic GS step (25 ints)", mean, min, "25 agents", bps, peak);
+        push_row(&mut table, &mut json, "traffic GS step (25 ints)", mean, min, "25 agents", bps, peak, f64::NAN);
 
         let mut wgs = WarehouseGlobalSim::new(5);
         wgs.reset(&mut rng);
@@ -119,7 +126,7 @@ fn main() -> Result<()> {
             wgs.step(&acts, &mut rewards, &mut rng);
         });
         sim_zero_alloc &= bps == 0.0 && peak == 0;
-        push_row(&mut table, &mut json, "warehouse GS step (25 rb)", mean, min, "25 agents", bps, peak);
+        push_row(&mut table, &mut json, "warehouse GS step (25 rb)", mean, min, "25 agents", bps, peak, f64::NAN);
     }
 
     // ---- PJRT executable calls + e2e training step (need artifacts)
@@ -155,7 +162,7 @@ fn main() -> Result<()> {
         let (bps, peak) = alloc_per_step(reps, || {
             arts.policy_step.run(&[params.clone(), obs.clone(), h.clone()]).unwrap();
         });
-        push_row(&mut table, &mut json, &format!("{} policy_step HLO call", domain.name()), mean, min, "1 fwd", bps, peak);
+        push_row(&mut table, &mut json, &format!("{} policy_step HLO call", domain.name()), mean, min, "1 fwd", bps, peak, f64::NAN);
 
         let ap = arts.aip_init.clone();
         let feat = Tensor::zeros(&[1, spec.aip_feat]);
@@ -166,7 +173,7 @@ fn main() -> Result<()> {
         let (bps, peak) = alloc_per_step(reps, || {
             arts.aip_forward.run(&[ap.clone(), feat.clone(), ah.clone()]).unwrap();
         });
-        push_row(&mut table, &mut json, &format!("{} aip_forward HLO call", domain.name()), mean, min, "1 fwd", bps, peak);
+        push_row(&mut table, &mut json, &format!("{} aip_forward HLO call", domain.name()), mean, min, "1 fwd", bps, peak, f64::NAN);
 
         // full PPO update (epochs × minibatches over one rollout)
         let mut workers = coord.make_workers(0);
@@ -187,7 +194,7 @@ fn main() -> Result<()> {
             trainer.update(arts, &mut w.policy.net, &buf, 0.0, &mut rng).unwrap();
         });
         let calls = cfg.ppo.epochs * (cfg.ppo.rollout_len / cfg.ppo.minibatch);
-        push_row(&mut table, &mut json, &format!("{} PPO update (rollout)", domain.name()), mean, min, &format!("{calls} HLO calls"), f64::NAN, 0);
+        push_row(&mut table, &mut json, &format!("{} PPO update (rollout)", domain.name()), mean, min, &format!("{calls} HLO calls"), f64::NAN, 0, f64::NAN);
 
         // end-to-end IALS training step (post-warmup steady state)
         let (mean, min) = time_n(20, || {
@@ -199,8 +206,67 @@ fn main() -> Result<()> {
         push_row(
             &mut table, &mut json,
             &format!("{} IALS train step e2e", domain.name()),
-            mean / 32.0, min / 32.0, "per env step", bytes_32 / 32.0, peak,
+            mean / 32.0, min / 32.0, "per env step", bytes_32 / 32.0, peak, f64::NAN,
         );
+    }
+
+    // ---- batch-first GS stepping (native backend; synthesized artifacts)
+    //
+    // Measures evaluate_on_gs end-to-end in both bank modes and reports
+    // the run_b calls per joint GS step — the headline number of the
+    // batch-first redesign (N B=1 calls → 1 batched call).
+    #[cfg(not(feature = "xla"))]
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        use dials::coordinator::{evaluate_on_gs, make_global_sim, GsScratch};
+        use dials::runtime::synth;
+
+        let dir = std::env::temp_dir().join("dials_hotpath_synth").join(domain.name());
+        let _ = std::fs::remove_dir_all(&dir);
+        synth::write_native_artifacts(&dir, domain, 3)?;
+        let cfg = ExperimentConfig {
+            domain,
+            mode: SimMode::Dials,
+            grid_side: 5,
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        let n = cfg.n_agents();
+        let coord = DialsCoordinator::new(&engine, cfg.clone())?;
+        let arts = coord.artifacts();
+        let horizon = 16usize;
+        for (label, batched) in [("batched", true), ("per-agent", false)] {
+            let mut workers = coord.make_workers(0);
+            let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+            let mut rng = Pcg64::seed(7);
+            let mut scratch = GsScratch::new(&arts.spec, n, batched);
+            let calls_before = arts.policy_step.call_count()
+                + arts.policy_step_b.as_ref().map_or(0, |e| e.call_count());
+            let mut episodes = 0u64;
+            let (mean, min) = time_n(8, || {
+                evaluate_on_gs(
+                    arts, gs.as_mut(), &mut workers, 1, horizon, &mut rng, &mut scratch,
+                )
+                .unwrap();
+                episodes += 1;
+            });
+            let (bytes_ep, peak) = alloc_per_step(8, || {
+                evaluate_on_gs(
+                    arts, gs.as_mut(), &mut workers, 1, horizon, &mut rng, &mut scratch,
+                )
+                .unwrap();
+                episodes += 1;
+            });
+            let calls_after = arts.policy_step.call_count()
+                + arts.policy_step_b.as_ref().map_or(0, |e| e.call_count());
+            let joint_steps = episodes * horizon as u64;
+            let cps = (calls_after - calls_before) as f64 / joint_steps as f64;
+            push_row(
+                &mut table, &mut json,
+                &format!("{} GS eval joint step ({label}, N={n})", domain.name()),
+                mean / horizon as f64, min / horizon as f64,
+                "per joint step", bytes_ep / horizon as f64, peak, cps,
+            );
+        }
     }
 
     table.print();
@@ -226,8 +292,10 @@ fn push_row(
     unit: &str,
     bytes_per_step: f64,
     peak_extra: usize,
+    calls_per_step: f64,
 ) {
     let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
+    let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
     table.row(vec![
         op.to_string(),
         us(mean),
@@ -235,6 +303,7 @@ fn push_row(
         unit.to_string(),
         bps,
         format!("{peak_extra}B"),
+        cps,
     ]);
     json.push(JsonRow {
         op: op.to_string(),
@@ -242,6 +311,7 @@ fn push_row(
         min_s: min,
         bytes_per_step,
         peak_extra_bytes: peak_extra,
+        calls_per_step,
     });
 }
 
@@ -250,9 +320,10 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
     let mut s = String::from("{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n");
     for (k, r) in rows.iter().enumerate() {
         let bps = if r.bytes_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.bytes_per_step) };
+        let cps = if r.calls_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.calls_per_step) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -6,9 +6,12 @@ Run once via ``make artifacts`` (no-op when inputs are unchanged):
 
 Per domain (traffic, warehouse) this emits:
 
-    <dom>_policy_step.hlo.txt   (flat,obs[B,D],h[B,H]) -> (logits,value,h')
+    <dom>_policy_step.hlo.txt   (flat,obs[1,D],h[1,H]) -> packed (B=1)
+    <dom>_policy_step_b.hlo.txt (flats[N,P],obs[N,D],h[N,H]) -> packed[N,·]
+                                (one call per joint step; N = --batch)
     <dom>_ppo_update.hlo.txt    one PPO minibatch Adam step
-    <dom>_aip_forward.hlo.txt   (flat,feat[B,F],h[B,H]) -> (probs,h')
+    <dom>_aip_forward.hlo.txt   (flat,feat[1,F],h[1,H]) -> packed (B=1)
+    <dom>_aip_forward_b.hlo.txt batched joint-step AIP forward
     <dom>_aip_update.hlo.txt    one AIP cross-entropy Adam step
     <dom>_aip_eval.hlo.txt      batch CE loss (Fig. 4 curves)
     <dom>_policy_init.npk       initial flat policy params
@@ -166,7 +169,7 @@ def write_golden(fn, arg_specs, gold_dir, seed, n_cases=2, label_heads=None,
 # Per-domain emission
 # --------------------------------------------------------------------------
 
-def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool):
+def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: int):
     key = jax.random.PRNGKey(seed)
     kp, ka = jax.random.split(key)
     pol_params = M.init_policy(kp, cfg.policy)
@@ -183,10 +186,17 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool):
 
     pdim, adim = pol_flat.shape[0], aip_flat.shape[0]
 
-    # ---- policy step (B=1 streaming; the coordinator steps agents 1-by-1)
+    # ---- policy step (B=1 streaming; drives the per-agent LS segments)
     policy_step = M.make_policy_step(ps, pol_unravel)
     step_args = (_spec(pdim), _spec(1, ps.obs), _spec(1, ps.hstate))
     lower_and_write(policy_step, step_args, os.path.join(out_dir, f"{d}_policy_step.hlo.txt"))
+
+    # ---- batched joint step (one call forwards all `batch` agents, each
+    # with its own parameter row — the runtime::batch bank path)
+    policy_step_b = M.make_policy_step_batched(ps, pol_unravel)
+    step_b_args = (_spec(batch, pdim), _spec(batch, ps.obs), _spec(batch, ps.hstate))
+    lower_and_write(policy_step_b, step_b_args,
+                    os.path.join(out_dir, f"{d}_policy_step_b.hlo.txt"))
 
     # ---- PPO minibatch update (packed state + packed batch)
     ppo_update = M.make_ppo_update(ps, cfg.ppo, pol_unravel, pdim, mb)
@@ -196,10 +206,15 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool):
     )
     lower_and_write(ppo_update, upd_args, os.path.join(out_dir, f"{d}_ppo_update.hlo.txt"))
 
-    # ---- AIP forward (B=1 streaming)
+    # ---- AIP forward (B=1 streaming + batched joint step)
     aip_forward = M.make_aip_forward(asp, aip_unravel)
     af_args = (_spec(adim), _spec(1, asp.feat), _spec(1, asp.hstate))
     lower_and_write(aip_forward, af_args, os.path.join(out_dir, f"{d}_aip_forward.hlo.txt"))
+
+    aip_forward_b = M.make_aip_forward_batched(asp, aip_unravel)
+    af_b_args = (_spec(batch, adim), _spec(batch, asp.feat), _spec(batch, asp.hstate))
+    lower_and_write(aip_forward_b, af_b_args,
+                    os.path.join(out_dir, f"{d}_aip_forward_b.hlo.txt"))
 
     # ---- AIP update + eval (packed state + packed batch)
     adam = M.AdamCfg(lr=cfg.aip_lr)
@@ -241,6 +256,13 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool):
         "aip_batch": cfg.aip_batch,
         "aip_seq": cfg.aip_seq,
         "seed": seed,
+        # batch-first keys: layer widths let the Rust native backend
+        # execute the forward families directly (runtime::layout), and
+        # `batch` records the N the `_b` artifacts were lowered for.
+        "policy_h1": ps.h1,
+        "policy_h2": ps.h2,
+        "aip_hid": asp.hid,
+        "batch": batch,
     }
     with open(os.path.join(out_dir, f"{d}.meta"), "w") as f:
         for k, v in meta.items():
@@ -251,6 +273,10 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool):
         gd = os.path.join(out_dir, "golden")
         write_golden(policy_step, step_args, os.path.join(gd, f"{d}_policy_step"), seed + 1)
         write_golden(aip_forward, af_args, os.path.join(gd, f"{d}_aip_forward"), seed + 2)
+        write_golden(policy_step_b, step_b_args,
+                     os.path.join(gd, f"{d}_policy_step_b"), seed + 1, n_cases=1)
+        write_golden(aip_forward_b, af_b_args,
+                     os.path.join(gd, f"{d}_aip_forward_b"), seed + 2, n_cases=1)
         # packed state arg 0 must be non-negative (its v-slice feeds sqrt);
         # packed batch arg 1 carries the step counter at element 0.
         adam_kinds = {0: "nonneg", 1: "tfirst"}
@@ -272,13 +298,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--domains", default="traffic,warehouse")
     ap.add_argument("--no-goldens", action="store_true")
+    ap.add_argument("--batch", type=int, default=25,
+                    help="agent count N the batched `_b` artifacts are lowered "
+                         "for (= grid_side^2 of the runs you plan; HLO is "
+                         "shape-specialised)")
     args = ap.parse_args()
 
     os.makedirs(args.out_dir, exist_ok=True)
     wanted = set(args.domains.split(","))
     for cfg in domain_cfgs(args.size):
         if cfg.name in wanted:
-            emit_domain(cfg, args.out_dir, args.seed, not args.no_goldens)
+            emit_domain(cfg, args.out_dir, args.seed, not args.no_goldens, args.batch)
     print(f"[aot] artifacts written to {args.out_dir}")
 
 

@@ -127,6 +127,27 @@ def make_policy_step(spec: PolicySpec, unravel):
     return step
 
 
+def make_policy_step_batched(spec: PolicySpec, unravel):
+    """Joint-step variant: every agent has its OWN parameter row, so the
+    whole coordinator-side joint step is ONE executable call (the Rust
+    `runtime::batch::PolicyBank` drives this; one `run_b` instead of N).
+
+    vmap of the B=1 row over the stacked agents — per-row numerics are
+    identical to `make_policy_step` by construction.
+
+    (flats[N,P], obs[N,D], h[N,H]) -> packed[N, A + 1 + H]
+    """
+
+    def row(flat, obs, h):
+        logits, value, h_new = policy_apply(unravel(flat), spec, obs[None, :], h[None, :])
+        return jnp.concatenate([logits[0], value, h_new[0]])
+
+    def step(flats, obs, h):
+        return jax.vmap(row)(flats, obs, h)
+
+    return step
+
+
 # --------------------------------------------------------------------------
 # AIP networks
 # --------------------------------------------------------------------------
@@ -198,6 +219,22 @@ def make_aip_forward(spec: AipSpec, unravel):
     def fwd(flat, feat, h):
         probs, h_new = aip_apply(unravel(flat), spec, feat, h)
         return jnp.concatenate([probs[0], h_new[0]])
+
+    return fwd
+
+
+def make_aip_forward_batched(spec: AipSpec, unravel):
+    """Joint-step AIP variant (see make_policy_step_batched):
+
+    (flats[N,P], feats[N,F], h[N,H]) -> packed[N, U + H]
+    """
+
+    def row(flat, feat, h):
+        probs, h_new = aip_apply(unravel(flat), spec, feat[None, :], h[None, :])
+        return jnp.concatenate([probs[0], h_new[0]])
+
+    def fwd(flats, feats, h):
+        return jax.vmap(row)(flats, feats, h)
 
     return fwd
 

@@ -212,3 +212,70 @@ def test_grad_clip_limits_norm():
     assert abs(float(jnp.sqrt(jnp.sum(clipped**2))) - 0.5) < 1e-4
     g_small = jnp.full((4,), 1e-3)
     np.testing.assert_allclose(M._clip_by_global_norm(g_small, 0.5), g_small, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- batched
+
+
+@pytest.mark.parametrize("spec", [TRAFFIC_POL, WARE_POL], ids=["fnn", "gru"])
+def test_batched_policy_step_matches_b1_rows(spec):
+    """The joint-step artifact is a vmap of the B=1 row: per-row numerics
+    must match make_policy_step exactly (the Rust banks rely on this)."""
+    flat, unravel = _flat_policy(spec)
+    step = M.make_policy_step(spec, unravel)
+    step_b = M.make_policy_step_batched(spec, unravel)
+    n = 3
+    rng = np.random.default_rng(0)
+    flats = jnp.stack([flat * (1.0 + 0.1 * i) for i in range(n)])
+    obs = jnp.asarray(rng.standard_normal((n, spec.obs)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((n, spec.hstate)), jnp.float32)
+    packed_b = step_b(flats, obs, h)
+    assert packed_b.shape == (n, spec.act + 1 + spec.hstate)
+    for i in range(n):
+        row = step(flats[i], obs[i][None, :], h[i][None, :])
+        np.testing.assert_allclose(np.asarray(packed_b[i]), np.asarray(row), atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", [TRAFFIC_AIP, WARE_AIP], ids=["fnn", "gru"])
+def test_batched_aip_forward_matches_b1_rows(spec):
+    flat, unravel = _flat_aip(spec)
+    fwd = M.make_aip_forward(spec, unravel)
+    fwd_b = M.make_aip_forward_batched(spec, unravel)
+    n = 3
+    rng = np.random.default_rng(1)
+    flats = jnp.stack([flat * (1.0 + 0.1 * i) for i in range(n)])
+    feats = jnp.asarray(rng.standard_normal((n, spec.feat)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((n, spec.hstate)), jnp.float32)
+    packed_b = fwd_b(flats, feats, h)
+    assert packed_b.shape == (n, spec.u_dim + spec.hstate)
+    for i in range(n):
+        row = fwd(flats[i], feats[i][None, :], h[i][None, :])
+        np.testing.assert_allclose(np.asarray(packed_b[i]), np.asarray(row), atol=1e-5)
+
+
+def test_flat_layout():
+    """Pin the ravel_pytree flat layout the Rust native backend decodes
+    (rust/src/runtime/layout.rs): top-level layers in sorted name order,
+    dense = b|w (w row-major [in][out]), gru = bh|bx|wh|wx."""
+    spec = M.PolicySpec(2, 1, False, 2, 2)
+    params = {
+        "fc1": {"w": jnp.full((2, 2), 1.0), "b": jnp.full((2,), 2.0)},
+        "fc2": {"w": jnp.full((2, 2), 3.0), "b": jnp.full((2,), 4.0)},
+        "pi": {"w": jnp.full((2, 1), 5.0), "b": jnp.full((1,), 6.0)},
+        "vf": {"w": jnp.full((2, 1), 7.0), "b": jnp.full((1,), 8.0)},
+    }
+    flat, _ = M.flatten_params(params)
+    expect = [2, 2, 1, 1, 1, 1, 4, 4, 3, 3, 3, 3, 6, 5, 5, 8, 7, 7]
+    assert np.asarray(flat).astype(int).tolist() == expect
+    del spec
+
+    gru = {
+        "gru": {
+            "wx": jnp.full((1, 3), 1.0),
+            "wh": jnp.full((1, 3), 2.0),
+            "bx": jnp.full((3,), 3.0),
+            "bh": jnp.full((3,), 4.0),
+        }
+    }
+    flat_g, _ = M.flatten_params(gru)
+    assert np.asarray(flat_g).astype(int).tolist() == [4, 4, 4, 3, 3, 3, 2, 2, 2, 1, 1, 1]

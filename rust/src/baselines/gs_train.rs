@@ -5,16 +5,18 @@
 //! per-agent cost grows with the number of agents — the scaling wall that
 //! motivates DIALS. The sim stepping is inherently sequential; runtime
 //! tables therefore report wall-clock = critical path for this baseline.
-//! Like the DIALS loop, the per-step path is allocation-free: joint
-//! observations/actions/rewards live in a `GsScratch` and the per-agent
-//! acting outputs in a reused `ActOut` row.
+//!
+//! Batch-first: joint acting and the value bootstrap go through the
+//! scratch's `PolicyBank` — ONE `run_b` per joint step / per bootstrap
+//! query instead of N B=1 calls (the bank re-stages only the rows whose
+//! policy version changed after a PPO update). The per-step path stays
+//! allocation-free: joint observations/actions/rewards/acting outputs all
+//! live in `GsScratch`.
 
 use anyhow::Result;
 
 use crate::config::SimMode;
-use crate::coordinator::{
-    evaluate_on_gs, make_global_sim, ActOut, AgentWorker, DialsCoordinator, GsScratch,
-};
+use crate::coordinator::{evaluate_on_gs, make_global_sim, AgentWorker, DialsCoordinator, GsScratch};
 use crate::ppo::PpoTrainer;
 use crate::util::metrics::{CurvePoint, RunLog};
 use crate::util::rng::Pcg64;
@@ -42,7 +44,8 @@ impl GsTrainer {
 
         let mut timers = PhaseTimers::new();
         let mut log = RunLog { label: SimMode::GlobalSim.label().to_string(), ..Default::default() };
-        let mut scratch = GsScratch::new(&arts.spec, n);
+        let batched = crate::coordinator::gs_batch_mode(&arts, cfg);
+        let mut scratch = GsScratch::new(&arts.spec, n, batched);
         let od = arts.spec.obs_dim;
 
         let r0 = timers.time("eval", || {
@@ -50,33 +53,25 @@ impl GsTrainer {
         })?;
         log.eval_curve.push(CurvePoint { step: 0, value: r0 });
 
-        let mut step_outs: Vec<ActOut> = vec![ActOut::default(); n];
         let eval_every = if cfg.eval_every == 0 { cfg.total_steps } else { cfg.eval_every };
 
         let t_train = std::time::Instant::now();
         let mut ep_step = 0usize;
         gs.reset(&mut rng);
-        for w in workers.iter_mut() {
-            w.policy.reset_episode();
-        }
+        scratch.policy_bank.reset_episodes();
         for step in 0..cfg.total_steps {
-            // joint action from all policies
-            for (i, w) in workers.iter_mut().enumerate() {
-                let obs = &mut scratch.obs[i * od..(i + 1) * od];
-                gs.observe(i, obs);
-                let act = w.policy.act_into(&arts, obs, &mut rng)?;
-                scratch.actions[i] = act.action;
-                step_outs[i] = act;
-            }
+            // joint action from all policies: ONE batched run_b (the
+            // bank re-stages only rows whose net version changed)
+            scratch.joint_act(&arts, gs.as_ref(), &workers, &mut rng)?;
             gs.step(&scratch.actions, &mut scratch.rewards, &mut rng);
             ep_step += 1;
             let done = ep_step >= cfg.horizon;
 
             for (i, w) in workers.iter_mut().enumerate() {
-                let act = step_outs[i];
+                let act = scratch.act_outs[i];
                 w.buffer.push(
                     &scratch.obs[i * od..(i + 1) * od],
-                    w.policy.h_before(),
+                    scratch.policy_bank.h_before_row(i),
                     act.action,
                     act.logp,
                     scratch.rewards[i],
@@ -86,23 +81,26 @@ impl GsTrainer {
             }
             if done {
                 gs.reset(&mut rng);
-                for w in workers.iter_mut() {
-                    w.policy.reset_episode();
-                }
+                scratch.policy_bank.reset_episodes();
                 ep_step = 0;
             }
 
             // per-agent PPO updates when rollouts fill (simultaneous learning)
             if workers[0].buffer.is_full() {
-                for (i, w) in workers.iter_mut().enumerate() {
-                    let last_value = if done {
-                        0.0
-                    } else {
-                        let obs = &mut scratch.obs[i * od..(i + 1) * od];
+                if done {
+                    scratch.values.fill(0.0);
+                } else {
+                    // ONE batched value-bootstrap query for all agents
+                    for i in 0..n {
+                        let obs = scratch.obs_row_mut(i);
                         gs.observe(i, obs);
-                        w.policy.peek_value(&arts, obs)?
-                    };
-                    trainer.update(&arts, &mut w.policy.net, &w.buffer, last_value, &mut w.rng)?;
+                    }
+                    scratch
+                        .policy_bank
+                        .peek_values_into(&arts, &scratch.obs, &mut scratch.values)?;
+                }
+                for (i, w) in workers.iter_mut().enumerate() {
+                    trainer.update(&arts, &mut w.policy.net, &w.buffer, scratch.values[i], &mut w.rng)?;
                     w.buffer.clear();
                 }
             }
@@ -116,9 +114,7 @@ impl GsTrainer {
                 log.eval_curve.push(CurvePoint { step: step + 1, value: ret });
                 // training episode state was clobbered by eval; restart episode
                 gs.reset(&mut rng);
-                for w in workers.iter_mut() {
-                    w.policy.reset_episode();
-                }
+                scratch.policy_bank.reset_episodes();
                 ep_step = 0;
             }
         }

@@ -118,6 +118,12 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     /// Worker threads for the parallel phases (0 = one per agent).
     pub threads: usize,
+    /// Batch the GS-phase policy/AIP forwards across agents: ONE `run_b`
+    /// per joint step through `runtime::batch` (default). `false` falls
+    /// back to N per-agent B=1 calls — the bit-identical reference path
+    /// used by the equivalence tests and old artifact sets without the
+    /// `_b` executables.
+    pub gs_batch: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -137,6 +143,7 @@ impl Default for ExperimentConfig {
             ppo: PpoConfig::default(),
             artifacts_dir: "artifacts".to_string(),
             threads: 0,
+            gs_batch: true,
         }
     }
 }
@@ -198,6 +205,9 @@ impl ExperimentConfig {
         if let Some(v) = exp.get("artifacts_dir") {
             cfg.artifacts_dir = v.as_str()?.to_string();
         }
+        if let Some(v) = exp.get("gs_batch") {
+            cfg.gs_batch = v.as_bool()?;
+        }
         let ppo = doc.get("ppo").unwrap_or(&empty);
         get_usize!(ppo, "rollout_len", cfg.ppo.rollout_len);
         get_usize!(ppo, "minibatch", cfg.ppo.minibatch);
@@ -244,6 +254,11 @@ impl ExperimentConfig {
         cfg.threads = args.get_usize("threads", cfg.threads)?;
         if let Some(dir) = args.get("artifacts") {
             cfg.artifacts_dir = dir.to_string();
+        }
+        if let Some(v) = args.get("gs-batch") {
+            cfg.gs_batch = v
+                .parse::<bool>()
+                .with_context(|| format!("--gs-batch wants true|false, got {v:?}"))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -302,6 +317,22 @@ mod tests {
             ["--grid-side", "0"].iter().map(|s| s.to_string()),
         )
         .unwrap();
+        assert!(ExperimentConfig::from_cli(&bad).is_err());
+    }
+
+    #[test]
+    fn gs_batch_defaults_on_and_toggles() {
+        assert!(ExperimentConfig::default().gs_batch);
+        let doc = parse("[experiment]\ngs_batch = false\n").unwrap();
+        assert!(!ExperimentConfig::from_doc(&doc).unwrap().gs_batch);
+        let args = crate::util::cli::Args::parse(
+            ["--gs-batch", "false"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(!ExperimentConfig::from_cli(&args).unwrap().gs_batch);
+        let bad =
+            crate::util::cli::Args::parse(["--gs-batch", "nah"].iter().map(|s| s.to_string()))
+                .unwrap();
         assert!(ExperimentConfig::from_cli(&bad).is_err());
     }
 

@@ -5,6 +5,15 @@
 //! (ALSH features = local state ⊕ one-hot action, influence label u_i^t)
 //! pairs, appended to that agent's dataset. All per-step staging buffers
 //! live in `GsScratch` and are reused across retrain rounds.
+//!
+//! Batch-first: per joint GS step this issues exactly ONE policy `run_b`
+//! (acting) and ONE AIP `run_b` — the batch API's collection contract
+//! (call-count-pinned in `tests/batch_equivalence.rs`). The AIP forward
+//! advances each agent's recurrent state in lock-step with the rows being
+//! recorded (the streaming discipline the IALS loop replays) and leaves
+//! the joint predictions in `scratch.probs`; nothing on the training path
+//! consumes them yet — they are the hook for online CE monitoring and the
+//! ROADMAP's sharded-GS/async work, which is why the call ships now.
 
 use anyhow::Result;
 
@@ -32,36 +41,44 @@ pub fn collect_datasets(
     debug_assert_eq!(scratch.obs.len(), n * arts.spec.obs_dim);
     let spec = &arts.spec;
 
+    for (i, w) in workers.iter().enumerate() {
+        scratch.aip_bank.stage(&arts.engine, i, &w.aip.net)?;
+    }
+
     let mut gs_steps = 0usize;
     let mut collected = 0usize;
 
     while collected < rows_per_agent {
         gs.reset(rng);
+        scratch.policy_bank.reset_episodes();
+        scratch.aip_bank.reset_episodes();
         for w in workers.iter_mut() {
-            w.policy.reset_episode();
             w.dataset.begin_episode();
         }
         for _t in 0..horizon {
-            for (i, w) in workers.iter_mut().enumerate() {
-                let obs = scratch.obs_row_mut(i);
-                gs.observe(i, obs);
-                let act = w.policy.act_into(arts, obs, rng)?;
-                scratch.actions[i] = act.action;
-            }
+            // ONE policy run_b for the whole joint step
+            scratch.joint_act(arts, &*gs, workers, rng)?;
             gs.step(&scratch.actions, &mut scratch.rewards, rng);
             gs_steps += 1;
-            let od = scratch.obs_dim;
-            for (i, w) in workers.iter_mut().enumerate() {
-                // field-precise slices keep the borrows of `scratch` disjoint
+
+            // joint ALSH rows (pre-step obs ⊕ one-hot action) ...
+            let (od, fd) = (scratch.obs_dim, scratch.feat_dim);
+            for i in 0..n {
                 encode_alsh(
                     &scratch.obs[i * od..(i + 1) * od],
                     scratch.actions[i],
                     spec.act_dim,
-                    &mut scratch.feat,
+                    &mut scratch.feats[i * fd..(i + 1) * fd],
                 );
+            }
+            // ... then ONE AIP run_b advancing every agent's stream state
+            scratch
+                .aip_bank
+                .forward_into(arts, &scratch.feats, &mut scratch.probs)?;
+            for (i, w) in workers.iter_mut().enumerate() {
                 gs.influence_label(i, &mut scratch.raw_label);
                 label_to_classes(&scratch.raw_label, spec.aip_heads, spec.aip_cls, &mut scratch.label);
-                w.dataset.push(&scratch.feat, &scratch.label);
+                w.dataset.push(&scratch.feats[i * fd..(i + 1) * fd], &scratch.label);
             }
             collected += 1;
             if collected >= rows_per_agent {

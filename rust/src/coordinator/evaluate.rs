@@ -1,6 +1,14 @@
 //! Periodic evaluation on the global simulator (paper §5.1: "training is
 //! interleaved with periodic evaluations on the GS"; the reported metric is
 //! the mean return of all learning agents).
+//!
+//! Batch-first: the joint policy forward of each GS step goes through the
+//! scratch's [`PolicyBank`](crate::runtime::PolicyBank) — exactly ONE
+//! `run_b` per joint step in batched mode. The bank carries its own
+//! per-agent recurrent state (reset at each episode boundary), so evaluation
+//! no longer touches the workers' LS-segment streaming state; the workers
+//! only contribute their current `NetState`s (staged into the bank, rows
+//! re-uploaded only when a policy version changed).
 
 use anyhow::Result;
 
@@ -31,16 +39,10 @@ pub fn evaluate_on_gs(
 
     for _ep in 0..episodes {
         gs.reset(rng);
-        for w in workers.iter_mut() {
-            w.policy.reset_episode();
-        }
+        scratch.policy_bank.reset_episodes();
         for _t in 0..horizon {
-            for (i, w) in workers.iter_mut().enumerate() {
-                let obs = &mut scratch.obs[i * scratch.obs_dim..(i + 1) * scratch.obs_dim];
-                gs.observe(i, obs);
-                let act = w.policy.act_into(arts, obs, rng)?;
-                scratch.actions[i] = act.action;
-            }
+            // ONE policy run_b for the whole joint step (batched mode)
+            scratch.joint_act(arts, &*gs, workers, rng)?;
             gs.step(&scratch.actions, &mut scratch.rewards, rng);
             total_return += scratch.rewards.iter().map(|&r| r as f64).sum::<f64>();
         }

@@ -20,7 +20,8 @@ mod worker;
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub use collect::collect_datasets;
 pub use evaluate::{evaluate_on_gs, evaluate_scripted};
-pub use policy_rt::{ActOut, PolicyRuntime, StepOut};
+pub use crate::runtime::ActOut;
+pub use policy_rt::PolicyRuntime;
 pub use worker::AgentWorker;
 
 use std::sync::Arc;
@@ -32,42 +33,98 @@ use crate::exec::WorkerPool;
 use crate::influence::AipRuntime;
 use crate::nn::NetState;
 use crate::ppo::PpoTrainer;
-use crate::runtime::{ArtifactSet, Engine, NetSpec};
+use crate::runtime::{AipBank, ArtifactSet, Engine, NetSpec, PolicyBank};
 use crate::sim::{traffic, warehouse, GlobalSim, LocalSim};
 use crate::util::metrics::{CurvePoint, RunLog};
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CriticalPath, PhaseTimers};
 
-/// Reusable buffers for the GS-driving phases (evaluation + influence
-/// data collection). Allocated once per run and threaded through
+/// Reusable state for the GS-driving phases (evaluation + influence data
+/// collection + GS-baseline training): the joint staging buffers AND the
+/// policy/AIP banks that forward a whole joint step with one `run_b`
+/// (`runtime::batch`). Allocated once per run and threaded through
 /// `evaluate_on_gs` / `collect_datasets` so those loops stay
 /// allocation-free after warm-up.
+///
+/// The banks carry their own per-agent recurrent state for the GS phases,
+/// so evaluation no longer clobbers the workers' LS-segment streaming
+/// state (it used to drive the workers' own B=1 runtimes).
 pub struct GsScratch {
     /// Row-major per-agent observations: `[n × obs_dim]`.
     pub(crate) obs: Vec<f32>,
     pub(crate) actions: Vec<usize>,
     pub(crate) rewards: Vec<f32>,
-    pub(crate) feat: Vec<f32>,
+    /// Per-agent acting outputs of the last joint step.
+    pub(crate) act_outs: Vec<ActOut>,
+    /// Joint ALSH features `[n × aip_feat]` (collection phase).
+    pub(crate) feats: Vec<f32>,
+    /// Joint AIP head probabilities `[n × u_dim]` (collection phase).
+    pub(crate) probs: Vec<f32>,
+    /// Joint value estimates `[n]` (GS-baseline bootstrap).
+    pub(crate) values: Vec<f32>,
     pub(crate) raw_label: Vec<f32>,
     pub(crate) label: Vec<f32>,
     pub(crate) obs_dim: usize,
+    pub(crate) feat_dim: usize,
+    /// One `run_b` per joint step (batched) or N B=1 calls (per-agent
+    /// reference path) — see `ExperimentConfig::gs_batch`.
+    pub(crate) policy_bank: PolicyBank,
+    pub(crate) aip_bank: AipBank,
 }
 
 impl GsScratch {
-    pub fn new(spec: &NetSpec, n_agents: usize) -> Self {
+    /// `batched` selects the bank mode for every GS phase: one `run_b`
+    /// per joint step (`true`, default) vs N B=1 calls (`false`; the
+    /// bit-identical reference path).
+    pub fn new(spec: &NetSpec, n_agents: usize, batched: bool) -> Self {
         GsScratch {
             obs: vec![0.0; n_agents * spec.obs_dim],
             actions: vec![0; n_agents],
             rewards: vec![0.0; n_agents],
-            feat: vec![0.0; spec.aip_feat],
+            act_outs: vec![ActOut::default(); n_agents],
+            feats: vec![0.0; n_agents * spec.aip_feat],
+            probs: vec![0.0; n_agents * spec.u_dim],
+            values: vec![0.0; n_agents],
             raw_label: vec![0.0; spec.u_dim],
             label: vec![0.0; spec.aip_heads],
             obs_dim: spec.obs_dim,
+            feat_dim: spec.aip_feat,
+            policy_bank: PolicyBank::new(spec, n_agents, batched),
+            aip_bank: AipBank::new(spec, n_agents, batched),
         }
     }
 
     pub(crate) fn obs_row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+    }
+
+    /// One joint acting step — THE joint-step protocol, shared by
+    /// evaluation, collection, and the GS baseline so it cannot diverge:
+    /// observe every agent into the obs block, stage the current policy
+    /// nets (rows re-copied only on version bumps), forward the policy
+    /// bank (ONE `run_b` in batched mode), and fill `actions` from the
+    /// sampled outputs. Per-agent results stay readable in `act_outs` /
+    /// the bank's `h_before` rows until the next forward.
+    pub(crate) fn joint_act(
+        &mut self,
+        arts: &ArtifactSet,
+        gs: &dyn GlobalSim,
+        workers: &[AgentWorker],
+        rng: &mut Pcg64,
+    ) -> Result<()> {
+        debug_assert_eq!(workers.len(), gs.n_agents());
+        for i in 0..workers.len() {
+            gs.observe(i, self.obs_row_mut(i));
+        }
+        for (i, w) in workers.iter().enumerate() {
+            self.policy_bank.stage(&arts.engine, i, &w.policy.net)?;
+        }
+        self.policy_bank
+            .act_into(arts, &self.obs, rng, &mut self.act_outs)?;
+        for (a, o) in self.actions.iter_mut().zip(self.act_outs.iter()) {
+            *a = o.action;
+        }
+        Ok(())
     }
 }
 
@@ -194,7 +251,8 @@ impl DialsCoordinator {
         // `thread::spawn` inside the segment loop), with chunks of agents
         // stolen dynamically so stragglers never serialise a phase.
         let pool = WorkerPool::new(effective_threads(cfg.threads, cfg.n_agents()));
-        let mut scratch = GsScratch::new(&self.arts.spec, cfg.n_agents());
+        let batched = gs_batch_mode(&self.arts, cfg);
+        let mut scratch = GsScratch::new(&self.arts.spec, cfg.n_agents(), batched);
 
         // initial evaluation point (step 0)
         let r0 = timers.time("eval", || {
@@ -216,7 +274,7 @@ impl DialsCoordinator {
                     )
                 })?;
                 // CE on fresh on-policy data BEFORE retraining (Fig. 4)
-                let ce_pre = mean_ce(&self.arts, &mut workers)?;
+                let ce_pre = mean_ce(&self.arts, &pool, &mut workers)?;
                 if let Some(ce) = ce_pre {
                     log.ce_curve.push(CurvePoint { step: seg.start, value: ce as f64 });
                 }
@@ -230,7 +288,7 @@ impl DialsCoordinator {
                     timers.add("aip_train", *d);
                 }
                 aip_cp_total += cp.with_slots(cfg.n_agents());
-                if let Some(ce) = mean_ce(&self.arts, &mut workers)? {
+                if let Some(ce) = mean_ce(&self.arts, &pool, &mut workers)? {
                     log.ce_curve.push(CurvePoint { step: seg.start + 1, value: ce as f64 });
                 }
             }
@@ -270,6 +328,23 @@ impl DialsCoordinator {
     }
 }
 
+/// Resolve the GS bank mode: the configured `gs_batch` downgraded to the
+/// per-agent B=1 path (with a notice) when the artifact set cannot serve
+/// the batched one — old sets without the `_b` executables, or XLA sets
+/// lowered for a different N.
+pub(crate) fn gs_batch_mode(arts: &ArtifactSet, cfg: &ExperimentConfig) -> bool {
+    let n = cfg.n_agents();
+    let batched = cfg.gs_batch && arts.supports_batched(n);
+    if cfg.gs_batch && !batched {
+        eprintln!(
+            "[dials] batched GS stepping unavailable for this artifact set \
+             (missing `_b` executables or lowered batch != {n}); falling back \
+             to per-agent B=1 calls — re-run `make artifacts --batch {n}`"
+        );
+    }
+    batched
+}
+
 fn effective_threads(requested: usize, n_agents: usize) -> usize {
     let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let t = if requested == 0 { hw } else { requested };
@@ -277,14 +352,20 @@ fn effective_threads(requested: usize, n_agents: usize) -> usize {
 }
 
 /// Mean AIP CE over all agents (on their freshly-collected datasets).
-fn mean_ce(arts: &ArtifactSet, workers: &mut [AgentWorker]) -> Result<Option<f32>> {
+/// Evaluations are independent per agent (each uses its own dataset, net,
+/// and RNG stream), so they fan out over the persistent pool — this runs
+/// twice per retrain (pre/post, Fig. 4) and was a serial loop before.
+fn mean_ce(
+    arts: &ArtifactSet,
+    pool: &WorkerPool,
+    workers: &mut [AgentWorker],
+) -> Result<Option<f32>> {
+    let ces = pool.run_map(workers, |_i, w| w.eval_aip_ce(arts))?.outputs;
     let mut acc = 0.0f32;
     let mut k = 0usize;
-    for w in workers.iter_mut() {
-        if let Some(ce) = w.eval_aip_ce(arts)? {
-            acc += ce;
-            k += 1;
-        }
+    for ce in ces.into_iter().flatten() {
+        acc += ce;
+        k += 1;
     }
     Ok(if k == 0 { None } else { Some(acc / k as f32) })
 }

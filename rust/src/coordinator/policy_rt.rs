@@ -1,167 +1,57 @@
 //! Streaming policy runtime: drives the `policy_step` artifact for one
 //! agent (B = 1), carrying the recurrent hidden state across an episode.
 //!
-//! Hot-path optimisations (§Perf):
-//! * the flat parameter vector is uploaded to the device ONCE per policy
-//!   version and reused across forwards via `run_b`; only the tiny obs/h
-//!   tensors move per step (cut the per-forward cost ~2-3×,
-//!   EXPERIMENTS.md §Perf);
-//! * the host side is allocation-free in steady state: the input staging
-//!   tensors, the logits/h scratch, and the sampling buffers are owned by
-//!   the runtime and reused every step (`act_into`). The legacy
-//!   `step`/`act` API clones out of the scratch and stays for tests and
-//!   one-shot callers.
+//! Since the batch-first redesign this is a thin view over a single-row
+//! [`PolicyBank`] (`runtime::batch`): the bank owns the device-resident
+//! parameter row (re-uploaded only when `NetState::version` changes), the
+//! staging tensors, the logits/value/h scratch, and the sampling buffers,
+//! so one forward implementation serves both the embarrassingly-parallel
+//! B=1 LS segments (`AgentWorker`) and the batched joint GS steps. The
+//! step loop stays allocation-free in steady state; the only remaining
+//! hot-path surface is buffer-out (`act_into` / `peek_value`).
 
 use anyhow::Result;
 
-use crate::nn::{sample_categorical_buf, NetState};
-use crate::runtime::{ArtifactSet, DeviceTensor};
-use crate::util::npk::Tensor;
+use crate::nn::NetState;
+use crate::runtime::{ActOut, ArtifactSet, PolicyBank};
 use crate::util::rng::Pcg64;
 
 pub struct PolicyRuntime {
     pub net: NetState,
-    hstate: Vec<f32>,
-    /// Hidden state BEFORE the most recent forward (what PPO replays).
-    h_before: Vec<f32>,
-    /// Logits of the most recent forward.
-    logits: Vec<f32>,
-    /// Value estimate of the most recent forward.
-    value: f32,
-    /// Staging tensors reused for every upload ([1, obs] / [1, h]).
-    in_obs: Tensor,
-    in_h: Tensor,
-    /// Sampling scratch (log-probs / probs).
-    logp_buf: Vec<f32>,
-    prob_buf: Vec<f32>,
-    dev_params: Option<(u64, DeviceTensor)>,
-    obs_dim: usize,
-    act_dim: usize,
-    h_dim: usize,
-}
-
-/// One forward step's outputs (legacy owned form; `act_into` avoids the
-/// clones on the hot path).
-pub struct StepOut {
-    pub logits: Vec<f32>,
-    pub value: f32,
-    /// Hidden state BEFORE this step (what PPO stores for replay).
-    pub h_before: Vec<f32>,
-}
-
-/// Compact result of one acting step; the replayed hidden state stays in
-/// the runtime's scratch (`PolicyRuntime::h_before`).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ActOut {
-    pub action: usize,
-    pub logp: f32,
-    pub value: f32,
+    bank: PolicyBank,
+    /// Single-row output scratch for the bank calls.
+    out_row: [ActOut; 1],
 }
 
 impl PolicyRuntime {
     pub fn new(spec: &crate::runtime::NetSpec, net: NetState) -> Self {
-        PolicyRuntime {
-            net,
-            hstate: vec![0.0; spec.policy_hstate],
-            h_before: vec![0.0; spec.policy_hstate],
-            logits: vec![0.0; spec.act_dim],
-            value: 0.0,
-            in_obs: Tensor::zeros(&[1, spec.obs_dim]),
-            in_h: Tensor::zeros(&[1, spec.policy_hstate]),
-            logp_buf: Vec::with_capacity(spec.act_dim),
-            prob_buf: Vec::with_capacity(spec.act_dim),
-            dev_params: None,
-            obs_dim: spec.obs_dim,
-            act_dim: spec.act_dim,
-            h_dim: spec.policy_hstate,
-        }
+        PolicyRuntime { net, bank: PolicyBank::new(spec, 1, false), out_row: [ActOut::default()] }
     }
 
     pub fn h_dim(&self) -> usize {
-        self.h_dim
+        self.bank.h_dim()
     }
 
     pub fn reset_episode(&mut self) {
-        self.hstate.fill(0.0);
+        self.bank.reset_episodes();
     }
 
     /// Hidden state before the most recent forward (for `RolloutBuffer`).
     pub fn h_before(&self) -> &[f32] {
-        &self.h_before
+        self.bank.h_before_row(0)
     }
 
     /// Logits of the most recent forward.
     pub fn logits(&self) -> &[f32] {
-        &self.logits
-    }
-
-    /// Device-resident params, re-uploaded only when the version changed.
-    fn params(&mut self, arts: &ArtifactSet) -> Result<&DeviceTensor> {
-        let stale = match &self.dev_params {
-            Some((v, _)) => *v != self.net.version,
-            None => true,
-        };
-        if stale {
-            let buf = arts.engine.upload(&self.net.flat)?;
-            self.dev_params = Some((self.net.version, buf));
-        }
-        Ok(&self.dev_params.as_ref().unwrap().1)
-    }
-
-    /// Forward pass into the runtime-owned scratch (logits / value /
-    /// h_before); advances the hidden state iff `advance`.
-    fn forward_scratch(&mut self, arts: &ArtifactSet, obs: &[f32], advance: bool) -> Result<()> {
-        debug_assert_eq!(obs.len(), self.obs_dim);
-        self.in_obs.data.copy_from_slice(obs);
-        self.in_h.data.copy_from_slice(&self.hstate);
-        let obs_t = arts.engine.upload(&self.in_obs)?;
-        let h_t = arts.engine.upload(&self.in_h)?;
-        // borrow params after the small uploads to appease the borrow checker
-        let p = self.params(arts)?;
-        let outs = arts.policy_step.run_b(&[p, &obs_t, &h_t])?;
-        // packed output: [logits(A) | value(1) | h'(H)]
-        let packed = outs[0].to_tensor()?.data;
-        debug_assert_eq!(packed.len(), self.act_dim + 1 + self.h_dim);
-        self.h_before.copy_from_slice(&self.hstate);
-        self.logits.copy_from_slice(&packed[..self.act_dim]);
-        self.value = packed[self.act_dim];
-        if advance {
-            self.hstate.copy_from_slice(&packed[self.act_dim + 1..]);
-        }
-        Ok(())
-    }
-
-    /// Forward the policy on `obs`, advancing the hidden state (legacy
-    /// owned-output form; allocates the returned vectors).
-    pub fn step(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<StepOut> {
-        self.forward_scratch(arts, obs, true)?;
-        Ok(StepOut {
-            logits: self.logits.clone(),
-            value: self.value,
-            h_before: self.h_before.clone(),
-        })
+        self.bank.logits_row(0)
     }
 
     /// Forward WITHOUT advancing the hidden state (value bootstrap query).
     pub fn peek_value(&mut self, arts: &ArtifactSet, obs: &[f32]) -> Result<f32> {
-        self.forward_scratch(arts, obs, false)?;
-        Ok(self.value)
-    }
-
-    /// Sample an action from a forward pass (legacy owned-output form).
-    pub fn act(
-        &mut self,
-        arts: &ArtifactSet,
-        obs: &[f32],
-        rng: &mut Pcg64,
-    ) -> Result<(usize, f32, StepOut)> {
-        let a = self.act_into(arts, obs, rng)?;
-        let out = StepOut {
-            logits: self.logits.clone(),
-            value: self.value,
-            h_before: self.h_before.clone(),
-        };
-        Ok((a.action, a.logp, out))
+        self.bank.stage(&arts.engine, 0, &self.net)?;
+        let mut v = [0.0f32];
+        self.bank.peek_values_into(arts, obs, &mut v)?;
+        Ok(v[0])
     }
 
     /// Hot-path acting step: forward + sample with zero host allocations
@@ -173,9 +63,8 @@ impl PolicyRuntime {
         obs: &[f32],
         rng: &mut Pcg64,
     ) -> Result<ActOut> {
-        self.forward_scratch(arts, obs, true)?;
-        let (action, logp) =
-            sample_categorical_buf(&self.logits, &mut self.logp_buf, &mut self.prob_buf, rng);
-        Ok(ActOut { action, logp, value: self.value })
+        self.bank.stage(&arts.engine, 0, &self.net)?;
+        self.bank.act_into(arts, obs, rng, &mut self.out_row)?;
+        Ok(self.out_row[0])
     }
 }

@@ -1,77 +1,46 @@
 //! The AIP runtime: streaming forward calls into the `aip_forward`
 //! artifact plus influence-source sampling for the local simulators.
 //!
-//! Like the policy runtime, the AIP keeps its parameter vector
-//! device-resident across forwards (§Perf), and the hot path is buffer-out:
-//! `forward_into` writes the head probabilities into a caller-owned slice
-//! and `sample_u_into` writes the sampled influence realisation into the
-//! caller's `u` scratch, so the steady-state IALS step loop performs no
-//! host heap allocation. The allocating `forward`/`sample_u` wrappers stay
-//! for tests and one-shot callers.
+//! Since the batch-first redesign this is a thin view over a single-row
+//! [`AipBank`] (`runtime::batch`): the bank keeps the parameter row
+//! device-resident across forwards (re-uploaded only on
+//! `NetState::version` bumps) and owns the staging tensors and the GRU
+//! hidden state, so one forward implementation serves both the B=1 IALS
+//! step loop here and the batched joint GS collection phase. The hot path
+//! is buffer-out (`forward_into` / `sample_u_into`); the steady-state
+//! step loop performs no host heap allocation.
 
 use anyhow::Result;
 
 use crate::nn::NetState;
-use crate::runtime::{ArtifactSet, DeviceTensor, NetSpec};
-use crate::util::npk::Tensor;
+use crate::runtime::{AipBank, ArtifactSet, NetSpec};
 use crate::util::rng::Pcg64;
 
 /// One agent's AIP: network state + the streaming hidden state used while
 /// driving its IALS (paper Algorithm 3, line `u ~ I(·|l)`).
 pub struct AipRuntime {
     pub net: NetState,
-    /// GRU hidden state across the current episode (width `aip_hstate`).
-    hstate: Vec<f32>,
-    /// Staging tensors reused for every upload ([1, feat] / [1, h]).
-    in_feat: Tensor,
-    in_h: Tensor,
-    dev_params: Option<(u64, DeviceTensor)>,
-    n_heads: usize,
-    n_cls: usize,
-    feat_dim: usize,
-    h_dim: usize,
+    bank: AipBank,
 }
 
 impl AipRuntime {
     pub fn new(spec: &NetSpec, net: NetState) -> Self {
-        AipRuntime {
-            net,
-            hstate: vec![0.0; spec.aip_hstate],
-            in_feat: Tensor::zeros(&[1, spec.aip_feat]),
-            in_h: Tensor::zeros(&[1, spec.aip_hstate]),
-            dev_params: None,
-            n_heads: spec.aip_heads,
-            n_cls: spec.aip_cls,
-            feat_dim: spec.aip_feat,
-            h_dim: spec.aip_hstate,
-        }
+        AipRuntime { net, bank: AipBank::new(spec, 1, false) }
     }
 
     /// Width of the probability vector `forward_into` produces.
     pub fn u_dim(&self) -> usize {
-        self.n_heads * self.n_cls.max(1)
+        self.bank.u_dim()
     }
 
     /// Number of influence heads = width of the sampled `u`.
     pub fn n_heads(&self) -> usize {
-        self.n_heads
+        self.bank.n_heads()
     }
 
     /// Reset the episode memory (call at episode boundaries).
     pub fn reset_episode(&mut self) {
-        self.hstate.fill(0.0);
-    }
-
-    fn params(&mut self, arts: &ArtifactSet) -> Result<&DeviceTensor> {
-        let stale = match &self.dev_params {
-            Some((v, _)) => *v != self.net.version,
-            None => true,
-        };
-        if stale {
-            let buf = arts.engine.upload(&self.net.flat)?;
-            self.dev_params = Some((self.net.version, buf));
-        }
-        Ok(&self.dev_params.as_ref().unwrap().1)
+        self.bank.reset_episodes();
     }
 
     /// Predict influence-source probabilities for the current ALSH step
@@ -82,24 +51,12 @@ impl AipRuntime {
         feat: &[f32],
         probs_out: &mut [f32],
     ) -> Result<()> {
-        debug_assert_eq!(feat.len(), self.feat_dim);
-        let u_dim = self.u_dim();
-        debug_assert_eq!(probs_out.len(), u_dim);
-        self.in_feat.data.copy_from_slice(feat);
-        self.in_h.data.copy_from_slice(&self.hstate);
-        let feat_t = arts.engine.upload(&self.in_feat)?;
-        let h_t = arts.engine.upload(&self.in_h)?;
-        let p = self.params(arts)?;
-        let outs = arts.aip_forward.run_b(&[p, &feat_t, &h_t])?;
-        // packed output: [probs(U) | h'(H)]
-        let packed = outs[0].to_tensor()?.data;
-        debug_assert_eq!(packed.len(), u_dim + self.h_dim);
-        probs_out.copy_from_slice(&packed[..u_dim]);
-        self.hstate.copy_from_slice(&packed[u_dim..]);
-        Ok(())
+        self.bank.stage(&arts.engine, 0, &self.net)?;
+        self.bank.forward_into(arts, feat, probs_out)
     }
 
     /// Allocating wrapper around `forward_into` (tests / one-shot calls).
+    #[cfg(test)]
     pub fn forward(&mut self, arts: &ArtifactSet, feat: &[f32]) -> Result<Vec<f32>> {
         let mut probs = vec![0.0; self.u_dim()];
         self.forward_into(arts, feat, &mut probs)?;
@@ -110,22 +67,13 @@ impl AipRuntime {
     /// in the local simulator's input format: Bernoulli heads → {0,1} per
     /// head; categorical heads → class index per head.
     pub fn sample_u_into(&self, probs: &[f32], rng: &mut Pcg64, u_out: &mut [f32]) {
-        debug_assert_eq!(u_out.len(), self.n_heads);
-        if self.n_cls <= 1 {
-            for (o, &p) in u_out.iter_mut().zip(probs.iter().take(self.n_heads)) {
-                *o = if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
-            }
-        } else {
-            for (h, o) in u_out.iter_mut().enumerate() {
-                let group = &probs[h * self.n_cls..(h + 1) * self.n_cls];
-                *o = rng.categorical(group) as f32;
-            }
-        }
+        self.bank.sample_u_into(probs, rng, u_out);
     }
 
-    /// Allocating wrapper around `sample_u_into` (tests / one-shot calls).
+    /// Allocating wrapper around `sample_u_into` (tests only).
+    #[cfg(test)]
     pub fn sample_u(&self, probs: &[f32], rng: &mut Pcg64) -> Vec<f32> {
-        let mut u = vec![0.0; self.n_heads];
+        let mut u = vec![0.0; self.n_heads()];
         self.sample_u_into(probs, rng, &mut u);
         u
     }
@@ -134,6 +82,7 @@ impl AipRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::npk::Tensor;
 
     fn dummy_spec(cls: usize) -> NetSpec {
         NetSpec {
@@ -153,6 +102,10 @@ mod tests {
             minibatch: 4,
             aip_batch: 4,
             aip_seq: 2,
+            policy_h1: 0,
+            policy_h2: 0,
+            aip_hid: 0,
+            batch_n: 0,
         }
     }
 
@@ -201,13 +154,5 @@ mod tests {
         assert_eq!(runtime(1).u_dim(), 4);
         assert_eq!(runtime(4).u_dim(), 16);
         assert_eq!(runtime(4).n_heads(), 4);
-    }
-
-    #[test]
-    fn reset_zeroes_hidden_state() {
-        let mut rt = runtime(4);
-        rt.hstate.fill(0.7);
-        rt.reset_episode();
-        assert!(rt.hstate.iter().all(|&x| x == 0.0));
     }
 }

@@ -11,6 +11,7 @@ use crate::config::Domain;
 use crate::sim;
 use crate::util::npk::{read_npk, Tensor};
 
+use super::layout::{AipDims, PolicyDims};
 use super::{Engine, Exec};
 
 /// Parsed `<domain>.meta` — the interface contract emitted by aot.py.
@@ -32,6 +33,15 @@ pub struct NetSpec {
     pub minibatch: usize,
     pub aip_batch: usize,
     pub aip_seq: usize,
+    /// Policy layer widths (0 = absent from an old `.meta`; the native
+    /// backend needs them to execute, XLA artifacts carry them baked-in).
+    pub policy_h1: usize,
+    pub policy_h2: usize,
+    /// AIP trunk width (0 = absent from an old `.meta`).
+    pub aip_hid: usize,
+    /// Joint-step batch N the `_b` artifacts were lowered for
+    /// (0 = shape-polymorphic, i.e. native artifacts).
+    pub batch_n: usize,
 }
 
 impl NetSpec {
@@ -53,7 +63,15 @@ impl NetSpec {
                 .parse::<usize>()
                 .with_context(|| format!("meta key {k} not an integer"))
         };
+        // Keys added by the batch-first redesign; old .meta files omit them.
+        let opt = |k: &str| -> usize {
+            kv.get(k).and_then(|v| v.parse::<usize>().ok()).unwrap_or(0)
+        };
         Ok(NetSpec {
+            policy_h1: opt("policy_h1"),
+            policy_h2: opt("policy_h2"),
+            aip_hid: opt("aip_hid"),
+            batch_n: opt("batch"),
             domain: kv.get("domain").cloned().unwrap_or_default(),
             obs_dim: get("obs_dim")?,
             act_dim: get("act_dim")?,
@@ -90,7 +108,61 @@ impl NetSpec {
         if self.aip_feat != obs + act {
             bail!("aip_feat {} != obs+act {}", self.aip_feat, obs + act);
         }
+        // Layer-dim cross-checks (only when the new keys are present):
+        // the declared widths must reproduce the flat parameter counts.
+        if let Some(pd) = self.policy_dims() {
+            if pd.param_count() != self.policy_params {
+                bail!(
+                    "meta policy dims {pd:?} imply {} params but policy_params={} — \
+                     re-run `make artifacts`",
+                    pd.param_count(), self.policy_params
+                );
+            }
+            if pd.hstate() != self.policy_hstate {
+                bail!("policy_h2 {} inconsistent with policy_hstate {}", self.policy_h2, self.policy_hstate);
+            }
+        }
+        if let Some(ad) = self.aip_dims() {
+            if ad.param_count() != self.aip_params {
+                bail!(
+                    "meta AIP dims {ad:?} imply {} params but aip_params={} — \
+                     re-run `make artifacts`",
+                    ad.param_count(), self.aip_params
+                );
+            }
+            if ad.hstate() != self.aip_hstate {
+                bail!("aip_hid {} inconsistent with aip_hstate {}", self.aip_hid, self.aip_hstate);
+            }
+        }
         Ok(())
+    }
+
+    /// Policy layer dims, when the `.meta` declares them (new artifacts).
+    pub fn policy_dims(&self) -> Option<PolicyDims> {
+        if self.policy_h1 == 0 || self.policy_h2 == 0 {
+            return None;
+        }
+        Some(PolicyDims {
+            obs: self.obs_dim,
+            act: self.act_dim,
+            recurrent: self.policy_recurrent,
+            h1: self.policy_h1,
+            h2: self.policy_h2,
+        })
+    }
+
+    /// AIP layer dims, when the `.meta` declares them (new artifacts).
+    pub fn aip_dims(&self) -> Option<AipDims> {
+        if self.aip_hid == 0 {
+            return None;
+        }
+        Some(AipDims {
+            feat: self.aip_feat,
+            recurrent: self.aip_recurrent,
+            hid: self.aip_hid,
+            heads: self.aip_heads,
+            cls: self.aip_cls,
+        })
     }
 }
 
@@ -105,6 +177,10 @@ pub struct ArtifactSet {
     pub aip_forward: Exec,
     pub aip_update: Exec,
     pub aip_eval: Exec,
+    /// Batched joint-step variants (one `run_b` forwards all N agents).
+    /// Absent from artifact sets emitted before the batch-first redesign.
+    pub policy_step_b: Option<Exec>,
+    pub aip_forward_b: Option<Exec>,
     pub policy_init: Tensor,
     pub aip_init: Tensor,
     pub dir: PathBuf,
@@ -125,18 +201,43 @@ impl ArtifactSet {
         spec.validate_against_sim(domain)?;
 
         let load = |name: &str| engine.load_hlo(&dir.join(format!("{d}_{name}.hlo.txt")));
-        let set = ArtifactSet {
+        let load_opt = |name: &str| -> Result<Option<Exec>> {
+            let path = dir.join(format!("{d}_{name}.hlo.txt"));
+            if path.is_file() {
+                Ok(Some(engine.load_hlo(&path)?))
+            } else {
+                Ok(None)
+            }
+        };
+        let mut set = ArtifactSet {
             engine: engine.clone(),
             policy_step: load("policy_step")?,
             ppo_update: load("ppo_update")?,
             aip_forward: load("aip_forward")?,
             aip_update: load("aip_update")?,
             aip_eval: load("aip_eval")?,
+            policy_step_b: load_opt("policy_step_b")?,
+            aip_forward_b: load_opt("aip_forward_b")?,
             policy_init: read_npk(&dir.join(format!("{d}_policy_init.npk")))?,
             aip_init: read_npk(&dir.join(format!("{d}_aip_init.npk")))?,
             spec,
             dir: dir.to_path_buf(),
         };
+        // Bind the forward artifacts to the native row kernels (no-op in
+        // the xla backend). Requires the layer-dim keys of new .meta
+        // files; without them the native backend errors at call time.
+        if let Some(pd) = set.spec.policy_dims() {
+            set.policy_step.bind_policy(pd, set.spec.policy_params)?;
+            if let Some(e) = set.policy_step_b.as_mut() {
+                e.bind_policy(pd, set.spec.policy_params)?;
+            }
+        }
+        if let Some(ad) = set.spec.aip_dims() {
+            set.aip_forward.bind_aip(ad, set.spec.aip_params)?;
+            if let Some(e) = set.aip_forward_b.as_mut() {
+                e.bind_aip(ad, set.spec.aip_params)?;
+            }
+        }
         if set.policy_init.len() != set.spec.policy_params {
             bail!(
                 "policy_init length {} != meta policy_params {}",
@@ -148,6 +249,39 @@ impl ArtifactSet {
         }
         Ok(Arc::new(set))
     }
+
+    /// Whether the batched bank path can run for `n` agents with this
+    /// set: both `_b` executables are present and, when they were lowered
+    /// for a fixed N (`batch` in `.meta`; 0 = shape-polymorphic native
+    /// artifacts), that N matches. The coordinator falls back to the
+    /// per-agent B=1 path when this is false.
+    pub fn supports_batched(&self, n: usize) -> bool {
+        self.policy_step_b.is_some()
+            && self.aip_forward_b.is_some()
+            && (self.spec.batch_n == 0 || self.spec.batch_n == n)
+    }
+
+    /// The batched policy executable; required by the batched bank path.
+    pub fn policy_step_batched(&self) -> Result<&Exec> {
+        self.policy_step_b.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact set in {} has no policy_step_b — re-run `make artifacts` \
+                 (or disable batched GS stepping)",
+                self.dir.display()
+            )
+        })
+    }
+
+    /// The batched AIP executable; required by the batched bank path.
+    pub fn aip_forward_batched(&self) -> Result<&Exec> {
+        self.aip_forward_b.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact set in {} has no aip_forward_b — re-run `make artifacts` \
+                 (or disable batched GS stepping)",
+                self.dir.display()
+            )
+        })
+    }
 }
 
 #[cfg(test)]
@@ -157,7 +291,8 @@ mod tests {
     const META: &str = "domain=traffic\nobs_dim=27\nact_dim=2\npolicy_recurrent=0\n\
                         policy_hstate=1\npolicy_params=6147\naip_feat=29\naip_recurrent=0\n\
                         aip_hstate=1\naip_params=6340\naip_heads=4\naip_cls=1\nu_dim=4\n\
-                        minibatch=32\naip_batch=128\naip_seq=1\nseed=0\n";
+                        minibatch=32\naip_batch=128\naip_seq=1\nseed=0\n\
+                        policy_h1=64\npolicy_h2=64\naip_hid=64\nbatch=25\n";
 
     #[test]
     fn parses_meta() {
@@ -166,7 +301,36 @@ mod tests {
         assert_eq!(spec.act_dim, 2);
         assert!(!spec.policy_recurrent);
         assert_eq!(spec.minibatch, 32);
+        assert_eq!(spec.policy_h1, 64);
+        assert_eq!(spec.aip_hid, 64);
+        assert_eq!(spec.batch_n, 25);
         spec.validate_against_sim(Domain::Traffic).unwrap();
+        let pd = spec.policy_dims().unwrap();
+        assert_eq!(pd.param_count(), 6147);
+        assert_eq!(spec.aip_dims().unwrap().param_count(), 6340);
+    }
+
+    #[test]
+    fn layer_dim_keys_are_optional_but_cross_checked() {
+        // old meta without the new keys still parses and validates
+        let old = META
+            .lines()
+            .filter(|l| {
+                !l.starts_with("policy_h1=")
+                    && !l.starts_with("policy_h2=")
+                    && !l.starts_with("aip_hid=")
+                    && !l.starts_with("batch=")
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let spec = NetSpec::parse(&old).unwrap();
+        assert!(spec.policy_dims().is_none());
+        assert!(spec.aip_dims().is_none());
+        spec.validate_against_sim(Domain::Traffic).unwrap();
+        // inconsistent widths are rejected
+        let bad = META.replace("policy_h1=64", "policy_h1=32");
+        let spec = NetSpec::parse(&bad).unwrap();
+        assert!(spec.validate_against_sim(Domain::Traffic).is_err());
     }
 
     #[test]

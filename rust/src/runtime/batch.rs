@@ -1,0 +1,588 @@
+//! Batch-first inference: stack all N agents' networks into one bank and
+//! forward the whole joint step with ONE `run_b` call.
+//!
+//! Before this module every GS-driven phase (evaluation, influence data
+//! collection, GS-baseline training) issued N separate B=1 `run_b` calls
+//! per joint step, each with its own obs/h upload and packed-output
+//! download — the XLA boundary was the only per-step allocator left after
+//! the zero-alloc refactor, and call overhead scaled linearly with the
+//! number of agents ("Large Batch Simulation for Deep RL", Shacklett et
+//! al. 2021, is the motivating measurement).
+//!
+//! Three layers:
+//! * [`NetBank`] — N flat parameter vectors stacked into one
+//!   device-resident `[N, P]` tensor. `stage` re-copies only rows whose
+//!   `NetState::version` changed; `params` re-uploads only when some row
+//!   was re-staged. A per-row mode keeps one device buffer per agent
+//!   instead (drives the B=1 artifacts; this is also what makes
+//!   `PolicyRuntime`/`AipRuntime` thin views over a 1-row bank).
+//! * [`PolicyBank`] — `act_into` / `peek_values_into` over the
+//!   `policy_step[_b]` artifacts, carrying the per-agent recurrent state
+//!   and sampling scratch. Exactly one `run_b` per joint step in batched
+//!   mode; N B=1 calls in per-agent mode.
+//! * [`AipBank`] — `forward_into` / `sample_u_into` over
+//!   `aip_forward[_b]`, same contract.
+//!
+//! Determinism: the batched and per-agent modes are **bit-identical** on
+//! the native backend — the batched native entry point loops the same row
+//! kernel over the stacked rows, forwards consume no RNG, and sampling
+//! happens row-by-row in agent order *after* the forward in both modes
+//! (`rust/tests/batch_equivalence.rs` pins this with full-run `RunLog`
+//! comparisons). The per-agent GS loops this module replaces interleaved
+//! forward/sample per agent, which consumed the shared stream in the same
+//! order.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::nn::{sample_categorical_buf, NetState};
+use crate::util::npk::Tensor;
+use crate::util::rng::Pcg64;
+
+use super::{ArtifactSet, DeviceTensor, Engine, Exec, NetSpec};
+
+/// Compact result of one acting step (one row of a joint step).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActOut {
+    pub action: usize,
+    pub logp: f32,
+    pub value: f32,
+}
+
+/// Device-resident stack of N flat parameter vectors.
+pub struct NetBank {
+    /// Stacked mode: one `[N, P]` tensor, one upload per joint step at
+    /// most. Per-row mode: one `[P]` buffer per agent (B=1 artifacts).
+    stacked: bool,
+    n: usize,
+    p: usize,
+    staged: Tensor,
+    versions: Vec<Option<u64>>,
+    dev: Option<DeviceTensor>,
+    dev_rows: Vec<Option<DeviceTensor>>,
+    dirty: bool,
+    rows_recopied: u64,
+    uploads: u64,
+}
+
+impl NetBank {
+    pub fn new(n: usize, p: usize, stacked: bool) -> Self {
+        NetBank {
+            stacked,
+            n,
+            p,
+            staged: if stacked { Tensor::zeros(&[n, p]) } else { Tensor::zeros(&[0]) },
+            versions: vec![None; n],
+            dev: None,
+            dev_rows: (0..n).map(|_| None).collect(),
+            dirty: false,
+            rows_recopied: 0,
+            uploads: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Make row `i` current for `net`. No-op when the bank already holds
+    /// this `NetState::version`; otherwise the row is re-copied (stacked
+    /// mode marks the whole stack for one re-upload, per-row mode uploads
+    /// just this row).
+    pub fn stage(&mut self, engine: &Engine, i: usize, net: &NetState) -> Result<()> {
+        ensure!(i < self.n, "bank row {i} out of range (n = {})", self.n);
+        ensure!(
+            net.flat.len() == self.p,
+            "bank row {i}: param vector has {} entries, bank rows are {}",
+            net.flat.len(), self.p
+        );
+        if self.versions[i] == Some(net.version) {
+            return Ok(());
+        }
+        self.versions[i] = Some(net.version);
+        self.rows_recopied += 1;
+        if self.stacked {
+            self.staged.data[i * self.p..(i + 1) * self.p].copy_from_slice(&net.flat.data);
+            self.dirty = true;
+        } else {
+            self.dev_rows[i] = Some(engine.upload(&net.flat)?);
+            self.uploads += 1;
+        }
+        Ok(())
+    }
+
+    /// The device-resident `[N, P]` stack (stacked mode), re-uploaded only
+    /// if some row was re-staged since the last call.
+    pub fn params(&mut self, engine: &Engine) -> Result<&DeviceTensor> {
+        ensure!(self.stacked, "NetBank::params is only available in stacked mode");
+        if self.dirty || self.dev.is_none() {
+            self.dev = Some(engine.upload(&self.staged)?);
+            self.dirty = false;
+            self.uploads += 1;
+        }
+        Ok(self.dev.as_ref().unwrap())
+    }
+
+    /// Row `i`'s device buffer (per-row mode); `stage` must have run.
+    pub fn row(&self, i: usize) -> Result<&DeviceTensor> {
+        self.dev_rows[i]
+            .as_ref()
+            .ok_or_else(|| anyhow!("bank row {i} not staged — call stage() first"))
+    }
+
+    /// Rows re-copied because their `NetState::version` changed (test +
+    /// bench observability for the partial re-upload contract).
+    pub fn rows_recopied(&self) -> u64 {
+        self.rows_recopied
+    }
+
+    /// Device uploads performed (stacked: whole-stack uploads; per-row:
+    /// row uploads).
+    pub fn uploads(&self) -> u64 {
+        self.uploads
+    }
+}
+
+/// Batched front-end over the `policy_step[_b]` artifacts for N agents.
+pub struct PolicyBank {
+    bank: NetBank,
+    batched: bool,
+    /// Per-agent streaming state, row-major `[n × h]`.
+    hstate: Vec<f32>,
+    /// Hidden state BEFORE the most recent forward (what PPO replays).
+    h_before: Vec<f32>,
+    /// Logits / value of the most recent forward, `[n × act]` / `[n]`.
+    logits: Vec<f32>,
+    values: Vec<f32>,
+    /// Staging tensors reused for every upload.
+    in_obs: Tensor,
+    in_h: Tensor,
+    row_obs: Tensor,
+    row_h: Tensor,
+    /// Sampling scratch (log-probs / probs).
+    logp_buf: Vec<f32>,
+    prob_buf: Vec<f32>,
+    n: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    h_dim: usize,
+}
+
+impl PolicyBank {
+    /// `batched = true`: one `run_b` against `policy_step_b` per joint
+    /// step. `batched = false`: N B=1 calls against `policy_step` (the
+    /// reference path, and the only mode B=1 views use).
+    pub fn new(spec: &NetSpec, n: usize, batched: bool) -> Self {
+        PolicyBank {
+            bank: NetBank::new(n, spec.policy_params, batched),
+            batched,
+            hstate: vec![0.0; n * spec.policy_hstate],
+            h_before: vec![0.0; n * spec.policy_hstate],
+            logits: vec![0.0; n * spec.act_dim],
+            values: vec![0.0; n],
+            in_obs: Tensor::zeros(&[n, spec.obs_dim]),
+            in_h: Tensor::zeros(&[n, spec.policy_hstate]),
+            row_obs: Tensor::zeros(&[1, spec.obs_dim]),
+            row_h: Tensor::zeros(&[1, spec.policy_hstate]),
+            logp_buf: Vec::with_capacity(spec.act_dim),
+            prob_buf: Vec::with_capacity(spec.act_dim),
+            n,
+            obs_dim: spec.obs_dim,
+            act_dim: spec.act_dim,
+            h_dim: spec.policy_hstate,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn h_dim(&self) -> usize {
+        self.h_dim
+    }
+
+    /// Zero every agent's recurrent state (episode boundary).
+    pub fn reset_episodes(&mut self) {
+        self.hstate.fill(0.0);
+    }
+
+    /// Make row `i` current for `net` (re-copies only on version bump).
+    pub fn stage(&mut self, engine: &Engine, i: usize, net: &NetState) -> Result<()> {
+        self.bank.stage(engine, i, net)
+    }
+
+    /// Hidden state of agent `i` before the most recent forward.
+    pub fn h_before_row(&self, i: usize) -> &[f32] {
+        &self.h_before[i * self.h_dim..(i + 1) * self.h_dim]
+    }
+
+    /// Logits of agent `i` from the most recent forward.
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.act_dim..(i + 1) * self.act_dim]
+    }
+
+    /// Value estimate of agent `i` from the most recent forward.
+    pub fn value_row(&self, i: usize) -> f32 {
+        self.values[i]
+    }
+
+    /// Unpack one agent's `[logits | value | h']` row into the bank
+    /// scratch, advancing the recurrent state iff `advance`.
+    fn scatter_row(&mut self, i: usize, packed: &[f32], advance: bool) {
+        let (a, h) = (self.act_dim, self.h_dim);
+        debug_assert_eq!(packed.len(), a + 1 + h);
+        self.h_before[i * h..(i + 1) * h].copy_from_slice(&self.hstate[i * h..(i + 1) * h]);
+        self.logits[i * a..(i + 1) * a].copy_from_slice(&packed[..a]);
+        self.values[i] = packed[a];
+        if advance {
+            self.hstate[i * h..(i + 1) * h].copy_from_slice(&packed[a + 1..]);
+        }
+    }
+
+    /// Forward all N rows: ONE `run_b` in batched mode, N B=1 calls
+    /// otherwise. `obs` is the joint observation block `[n × obs_dim]`.
+    fn forward(&mut self, arts: &ArtifactSet, obs: &[f32], advance: bool) -> Result<()> {
+        ensure!(
+            obs.len() == self.n * self.obs_dim,
+            "joint obs has {} floats, want n×obs_dim = {}",
+            obs.len(), self.n * self.obs_dim
+        );
+        if self.batched {
+            check_lowered_batch(arts.spec.batch_n, self.n)?;
+            self.in_obs.data.copy_from_slice(obs);
+            self.in_h.data.copy_from_slice(&self.hstate);
+            let obs_t = arts.engine.upload(&self.in_obs)?;
+            let h_t = arts.engine.upload(&self.in_h)?;
+            let exec: &Exec = arts.policy_step_batched()?;
+            let p = self.bank.params(&arts.engine)?;
+            let outs = exec.run_b(&[p, &obs_t, &h_t])?;
+            let packed = outs[0].to_tensor()?;
+            let w = self.act_dim + 1 + self.h_dim;
+            ensure!(
+                packed.len() == self.n * w,
+                "batched policy output has {} floats, want n×(A+1+H) = {}",
+                packed.len(), self.n * w
+            );
+            for i in 0..self.n {
+                self.scatter_row(i, &packed.data[i * w..(i + 1) * w], advance);
+            }
+        } else {
+            for i in 0..self.n {
+                self.row_obs
+                    .data
+                    .copy_from_slice(&obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+                self.row_h
+                    .data
+                    .copy_from_slice(&self.hstate[i * self.h_dim..(i + 1) * self.h_dim]);
+                let obs_t = arts.engine.upload(&self.row_obs)?;
+                let h_t = arts.engine.upload(&self.row_h)?;
+                let p = self.bank.row(i)?;
+                let outs = arts.policy_step.run_b(&[p, &obs_t, &h_t])?;
+                let packed = outs[0].to_tensor()?;
+                ensure!(
+                    packed.len() == self.act_dim + 1 + self.h_dim,
+                    "policy output has {} floats, want A+1+H = {}",
+                    packed.len(), self.act_dim + 1 + self.h_dim
+                );
+                self.scatter_row(i, &packed.data, advance);
+            }
+        }
+        Ok(())
+    }
+
+    /// Joint acting step: one batched forward + per-agent sampling, in
+    /// agent order, from the shared `rng` stream (identical consumption
+    /// to the per-agent loop it replaces). `out` receives one `ActOut`
+    /// per agent; per-agent `h_before`/`logits` stay readable until the
+    /// next forward.
+    pub fn act_into(
+        &mut self,
+        arts: &ArtifactSet,
+        obs: &[f32],
+        rng: &mut Pcg64,
+        out: &mut [ActOut],
+    ) -> Result<()> {
+        ensure!(out.len() == self.n, "out has {} slots, want {}", out.len(), self.n);
+        self.forward(arts, obs, true)?;
+        for (i, o) in out.iter_mut().enumerate() {
+            let logits = &self.logits[i * self.act_dim..(i + 1) * self.act_dim];
+            let (action, logp) =
+                sample_categorical_buf(logits, &mut self.logp_buf, &mut self.prob_buf, rng);
+            *o = ActOut { action, logp, value: self.values[i] };
+        }
+        Ok(())
+    }
+
+    /// Joint value query (bootstrap): one batched forward WITHOUT
+    /// advancing the recurrent state; writes one value per agent.
+    pub fn peek_values_into(
+        &mut self,
+        arts: &ArtifactSet,
+        obs: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(out.len() == self.n, "out has {} slots, want {}", out.len(), self.n);
+        self.forward(arts, obs, false)?;
+        out.copy_from_slice(&self.values);
+        Ok(())
+    }
+
+    /// Bank staging stats (tests + benches).
+    pub fn rows_recopied(&self) -> u64 {
+        self.bank.rows_recopied()
+    }
+
+    pub fn uploads(&self) -> u64 {
+        self.bank.uploads()
+    }
+}
+
+/// Batched front-end over the `aip_forward[_b]` artifacts for N agents.
+pub struct AipBank {
+    bank: NetBank,
+    batched: bool,
+    hstate: Vec<f32>,
+    in_feat: Tensor,
+    in_h: Tensor,
+    row_feat: Tensor,
+    row_h: Tensor,
+    n: usize,
+    feat_dim: usize,
+    h_dim: usize,
+    n_heads: usize,
+    n_cls: usize,
+}
+
+impl AipBank {
+    pub fn new(spec: &NetSpec, n: usize, batched: bool) -> Self {
+        AipBank {
+            bank: NetBank::new(n, spec.aip_params, batched),
+            batched,
+            hstate: vec![0.0; n * spec.aip_hstate],
+            in_feat: Tensor::zeros(&[n, spec.aip_feat]),
+            in_h: Tensor::zeros(&[n, spec.aip_hstate]),
+            row_feat: Tensor::zeros(&[1, spec.aip_feat]),
+            row_h: Tensor::zeros(&[1, spec.aip_hstate]),
+            n,
+            feat_dim: spec.aip_feat,
+            h_dim: spec.aip_hstate,
+            n_heads: spec.aip_heads,
+            n_cls: spec.aip_cls,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Width of one agent's probability row.
+    pub fn u_dim(&self) -> usize {
+        self.n_heads * self.n_cls.max(1)
+    }
+
+    /// Number of influence heads = width of one sampled `u` row.
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn reset_episodes(&mut self) {
+        self.hstate.fill(0.0);
+    }
+
+    pub fn stage(&mut self, engine: &Engine, i: usize, net: &NetState) -> Result<()> {
+        self.bank.stage(engine, i, net)
+    }
+
+    /// Predict influence-source probabilities for all N agents' ALSH rows
+    /// (`feats = [n × feat]`) into `probs_out` (`[n × u_dim]`), advancing
+    /// every agent's recurrent state. ONE `run_b` in batched mode.
+    pub fn forward_into(
+        &mut self,
+        arts: &ArtifactSet,
+        feats: &[f32],
+        probs_out: &mut [f32],
+    ) -> Result<()> {
+        let u = self.u_dim();
+        ensure!(
+            feats.len() == self.n * self.feat_dim,
+            "joint feats has {} floats, want n×feat = {}",
+            feats.len(), self.n * self.feat_dim
+        );
+        ensure!(
+            probs_out.len() == self.n * u,
+            "probs_out has {} floats, want n×u_dim = {}",
+            probs_out.len(), self.n * u
+        );
+        if self.batched {
+            check_lowered_batch(arts.spec.batch_n, self.n)?;
+            self.in_feat.data.copy_from_slice(feats);
+            self.in_h.data.copy_from_slice(&self.hstate);
+            let feat_t = arts.engine.upload(&self.in_feat)?;
+            let h_t = arts.engine.upload(&self.in_h)?;
+            let exec = arts.aip_forward_batched()?;
+            let p = self.bank.params(&arts.engine)?;
+            let outs = exec.run_b(&[p, &feat_t, &h_t])?;
+            let packed = outs[0].to_tensor()?;
+            let w = u + self.h_dim;
+            ensure!(
+                packed.len() == self.n * w,
+                "batched AIP output has {} floats, want n×(U+H) = {}",
+                packed.len(), self.n * w
+            );
+            for i in 0..self.n {
+                let row = &packed.data[i * w..(i + 1) * w];
+                probs_out[i * u..(i + 1) * u].copy_from_slice(&row[..u]);
+                self.hstate[i * self.h_dim..(i + 1) * self.h_dim].copy_from_slice(&row[u..]);
+            }
+        } else {
+            for i in 0..self.n {
+                self.row_feat
+                    .data
+                    .copy_from_slice(&feats[i * self.feat_dim..(i + 1) * self.feat_dim]);
+                self.row_h
+                    .data
+                    .copy_from_slice(&self.hstate[i * self.h_dim..(i + 1) * self.h_dim]);
+                let feat_t = arts.engine.upload(&self.row_feat)?;
+                let h_t = arts.engine.upload(&self.row_h)?;
+                let p = self.bank.row(i)?;
+                let outs = arts.aip_forward.run_b(&[p, &feat_t, &h_t])?;
+                let packed = outs[0].to_tensor()?;
+                ensure!(
+                    packed.len() == u + self.h_dim,
+                    "AIP output has {} floats, want U+H = {}",
+                    packed.len(), u + self.h_dim
+                );
+                probs_out[i * u..(i + 1) * u].copy_from_slice(&packed.data[..u]);
+                self.hstate[i * self.h_dim..(i + 1) * self.h_dim]
+                    .copy_from_slice(&packed.data[u..]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample one agent's influence realisation `u` from its probability
+    /// row, in the local simulator's input format: Bernoulli heads →
+    /// {0,1} per head; categorical heads → class index per head.
+    pub fn sample_u_into(&self, probs_row: &[f32], rng: &mut Pcg64, u_out: &mut [f32]) {
+        debug_assert_eq!(u_out.len(), self.n_heads);
+        debug_assert_eq!(probs_row.len(), self.u_dim());
+        if self.n_cls <= 1 {
+            for (o, &p) in u_out.iter_mut().zip(probs_row.iter().take(self.n_heads)) {
+                *o = if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
+            }
+        } else {
+            for (h, o) in u_out.iter_mut().enumerate() {
+                let group = &probs_row[h * self.n_cls..(h + 1) * self.n_cls];
+                *o = rng.categorical(group) as f32;
+            }
+        }
+    }
+
+    pub fn rows_recopied(&self) -> u64 {
+        self.bank.rows_recopied()
+    }
+
+    pub fn uploads(&self) -> u64 {
+        self.bank.uploads()
+    }
+}
+
+/// The `_b` artifacts are lowered for one specific N; 0 means
+/// shape-polymorphic (native backend).
+fn check_lowered_batch(lowered: usize, n: usize) -> Result<()> {
+    ensure!(
+        lowered == 0 || lowered == n,
+        "batched artifacts were lowered for N={lowered} agents but this run has N={n} — \
+         re-run `make artifacts` with --batch {n} (or disable batched GS stepping)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[cfg(not(feature = "xla"))]
+    use crate::util::npk::Tensor;
+
+    // The Engine-backed bank tests run on the native backend only: the
+    // vendored xla stub cannot boot a PJRT client.
+    #[cfg(not(feature = "xla"))]
+    fn net(p: usize, fill: f32) -> NetState {
+        NetState::new(&Tensor::new(vec![p], vec![fill; p]))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stacked_bank_recopies_only_bumped_rows() {
+        let engine = Engine::cpu().unwrap();
+        let mut bank = NetBank::new(3, 4, true);
+        let mut nets = [net(4, 1.0), net(4, 2.0), net(4, 3.0)];
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(&engine, i, n).unwrap();
+        }
+        assert_eq!(bank.rows_recopied(), 3);
+        bank.params(&engine).unwrap();
+        assert_eq!(bank.uploads(), 1);
+
+        // nothing changed → no re-copies, no re-upload
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(&engine, i, n).unwrap();
+        }
+        bank.params(&engine).unwrap();
+        assert_eq!(bank.rows_recopied(), 3);
+        assert_eq!(bank.uploads(), 1);
+
+        // bump ONE net's version → exactly one row re-copied, one upload
+        nets[1].flat.data.fill(9.0);
+        nets[1].version += 1;
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(&engine, i, n).unwrap();
+        }
+        assert_eq!(bank.rows_recopied(), 4);
+        let host = bank.params(&engine).unwrap().to_tensor().unwrap();
+        assert_eq!(bank.uploads(), 2);
+        assert_eq!(host.dims, vec![3, 4]);
+        assert_eq!(&host.data[4..8], &[9.0; 4]);
+        assert_eq!(&host.data[0..4], &[1.0; 4]);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn per_row_bank_reuploads_only_bumped_rows() {
+        let engine = Engine::cpu().unwrap();
+        let mut bank = NetBank::new(2, 3, false);
+        let mut nets = [net(3, 1.0), net(3, 2.0)];
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(&engine, i, n).unwrap();
+        }
+        assert_eq!(bank.uploads(), 2);
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(&engine, i, n).unwrap();
+        }
+        assert_eq!(bank.uploads(), 2, "unchanged versions must not re-upload");
+        nets[0].version += 1;
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(&engine, i, n).unwrap();
+        }
+        assert_eq!(bank.uploads(), 3);
+        assert_eq!(bank.row(0).unwrap().to_tensor().unwrap().data, vec![1.0; 3]);
+        assert!(NetBank::new(2, 3, false).row(0).is_err(), "unstaged row must error");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn bank_rejects_bad_rows() {
+        let engine = Engine::cpu().unwrap();
+        let mut bank = NetBank::new(2, 3, true);
+        assert!(bank.stage(&engine, 2, &net(3, 0.0)).is_err(), "row out of range");
+        assert!(bank.stage(&engine, 0, &net(4, 0.0)).is_err(), "param width mismatch");
+        let mut row_mode = NetBank::new(2, 3, false);
+        assert!(row_mode.params(&engine).is_err(), "params() needs stacked mode");
+    }
+
+    #[test]
+    fn lowered_batch_mismatch_is_caught() {
+        assert!(check_lowered_batch(0, 7).is_ok());
+        assert!(check_lowered_batch(7, 7).is_ok());
+        assert!(check_lowered_batch(25, 7).is_err());
+    }
+}

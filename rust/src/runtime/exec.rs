@@ -137,9 +137,29 @@ impl Exec {
         &self.name
     }
 
-    /// Number of executions so far (profiling).
+    /// Number of executions so far (profiling + the one-`run_b`-per-step
+    /// invariant tests).
     pub fn call_count(&self) -> u64 {
         self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Backend-parity no-op: in this backend the compiled HLO itself is
+    /// the executor; the layer dims were already baked in by aot.py.
+    pub fn bind_policy(
+        &mut self,
+        _dims: crate::runtime::layout::PolicyDims,
+        _expect_params: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Backend-parity no-op (see `bind_policy`).
+    pub fn bind_aip(
+        &mut self,
+        _dims: crate::runtime::layout::AipDims,
+        _expect_params: usize,
+    ) -> Result<()> {
+        Ok(())
     }
 
     /// Execute with host tensors, returning host tensors (simple path).

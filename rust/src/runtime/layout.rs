@@ -1,0 +1,403 @@
+//! Flat-parameter layout + pure-Rust forward passes for the two network
+//! families (policy, AIP).
+//!
+//! The Python side flattens every parameter pytree with `ravel_pytree`,
+//! which serialises dict leaves in **sorted-key order** (verified against
+//! jax in `python/tests/test_model.py::test_flat_layout`). This module
+//! pins that layout on the Rust side:
+//!
+//! * dense layer `{b, w}` → `b[out] | w[in×out]` (row-major `[in][out]`),
+//! * GRU cell `{bh, bx, wh, wx}` → `bh[3H] | bx[3H] | wh[H×3H] | wx[D×3H]`
+//!   with gates ordered `(r, z, n)` (PyTorch convention, =
+//!   `python/compile/kernels/ref.py::gru_cell_ref`),
+//! * top-level layers in sorted name order (`emb|fc1 < fc2 < gru < head <
+//!   pi < vf`).
+//!
+//! Two consumers:
+//! * the `native` runtime backend executes `policy_step` / `aip_forward`
+//!   (and their batched `_b` variants) directly from the flat vectors, so
+//!   the default build runs end-to-end without the XLA toolchain;
+//! * `runtime::synth` sizes and emits native artifact sets, and
+//!   `NetSpec` cross-checks `policy_params` / `aip_params` against the
+//!   layer dims declared in `.meta`.
+//!
+//! Forward math is row-at-a-time on purpose: the batched entry points loop
+//! this exact row kernel over the stacked `[N, P]` parameters, which is
+//! what makes the batched and B=1 paths bit-identical (the golden
+//! equivalence test in `rust/tests/batch_equivalence.rs` relies on it).
+
+/// Dims of one policy network (`policy_step` artifact family).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PolicyDims {
+    pub obs: usize,
+    pub act: usize,
+    pub recurrent: bool,
+    /// Embed width (recurrent) or first hidden width (FNN).
+    pub h1: usize,
+    /// GRU hidden width (recurrent) or second hidden width (FNN).
+    pub h2: usize,
+}
+
+/// Dims of one AIP network (`aip_forward` artifact family).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AipDims {
+    pub feat: usize,
+    pub recurrent: bool,
+    pub hid: usize,
+    pub heads: usize,
+    pub cls: usize,
+}
+
+fn dense_len(i: usize, o: usize) -> usize {
+    o + i * o
+}
+
+fn gru_len(d: usize, h: usize) -> usize {
+    3 * h + 3 * h + h * 3 * h + d * 3 * h
+}
+
+impl PolicyDims {
+    /// Width of the streaming hidden state (1 for the FNN dummy state).
+    pub fn hstate(&self) -> usize {
+        if self.recurrent {
+            self.h2
+        } else {
+            1
+        }
+    }
+
+    /// Total flat parameter count (must equal `.meta policy_params`).
+    pub fn param_count(&self) -> usize {
+        let trunk = if self.recurrent {
+            dense_len(self.obs, self.h1) + gru_len(self.h1, self.h2)
+        } else {
+            dense_len(self.obs, self.h1) + dense_len(self.h1, self.h2)
+        };
+        trunk + dense_len(self.h2, self.act) + dense_len(self.h2, 1)
+    }
+
+    /// Packed output width: `[logits(A) | value(1) | h'(H)]`.
+    pub fn packed_out(&self) -> usize {
+        self.act + 1 + self.hstate()
+    }
+}
+
+impl AipDims {
+    pub fn hstate(&self) -> usize {
+        if self.recurrent {
+            self.hid
+        } else {
+            1
+        }
+    }
+
+    /// Width of the probability vector.
+    pub fn u_dim(&self) -> usize {
+        self.heads * self.cls.max(1)
+    }
+
+    /// Total flat parameter count (must equal `.meta aip_params`).
+    pub fn param_count(&self) -> usize {
+        let out = self.u_dim();
+        if self.recurrent {
+            gru_len(self.feat, self.hid) + dense_len(self.hid, out)
+        } else {
+            dense_len(self.feat, self.hid)
+                + dense_len(self.hid, self.hid)
+                + dense_len(self.hid, out)
+        }
+    }
+
+    /// Packed output width: `[probs(U) | h'(H)]`.
+    pub fn packed_out(&self) -> usize {
+        self.u_dim() + self.hstate()
+    }
+}
+
+/// `out[j] = act(b[j] + Σ_i x[i]·w[i][j])` for one row; `w` row-major
+/// `[in][out]`, sliced off the front of `flat` as `b | w`. Returns the
+/// remainder of `flat`.
+fn dense_row<'a>(flat: &'a [f32], x: &[f32], o: usize, out: &mut [f32], tanh: bool) -> &'a [f32] {
+    let i = x.len();
+    debug_assert_eq!(out.len(), o);
+    let (b, rest) = flat.split_at(o);
+    let (w, rest) = rest.split_at(i * o);
+    out.copy_from_slice(b);
+    for (k, &xk) in x.iter().enumerate() {
+        if xk == 0.0 {
+            continue;
+        }
+        let row = &w[k * o..(k + 1) * o];
+        for (oj, wj) in out.iter_mut().zip(row) {
+            *oj += xk * wj;
+        }
+    }
+    if tanh {
+        for v in out.iter_mut() {
+            *v = v.tanh();
+        }
+    }
+    rest
+}
+
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// One GRU cell step (gates `r, z, n`); writes `h_new`, consumes
+/// `bh | bx | wh | wx` off `flat`, and uses `gx`/`gh` as `[3H]` scratch.
+#[allow(clippy::too_many_arguments)]
+fn gru_row<'a>(
+    flat: &'a [f32],
+    x: &[f32],
+    h: &[f32],
+    h_new: &mut [f32],
+    gx: &mut [f32],
+    gh: &mut [f32],
+) -> &'a [f32] {
+    let d = x.len();
+    let hid = h.len();
+    let g = 3 * hid;
+    debug_assert_eq!(gx.len(), g);
+    debug_assert_eq!(gh.len(), g);
+    let (bh, rest) = flat.split_at(g);
+    let (bx, rest) = rest.split_at(g);
+    let (wh, rest) = rest.split_at(hid * g);
+    let (wx, rest) = rest.split_at(d * g);
+    gx.copy_from_slice(bx);
+    for (k, &xk) in x.iter().enumerate() {
+        if xk == 0.0 {
+            continue;
+        }
+        let row = &wx[k * g..(k + 1) * g];
+        for (oj, wj) in gx.iter_mut().zip(row) {
+            *oj += xk * wj;
+        }
+    }
+    gh.copy_from_slice(bh);
+    for (k, &hk) in h.iter().enumerate() {
+        if hk == 0.0 {
+            continue;
+        }
+        let row = &wh[k * g..(k + 1) * g];
+        for (oj, wj) in gh.iter_mut().zip(row) {
+            *oj += hk * wj;
+        }
+    }
+    for j in 0..hid {
+        let r = sigmoid(gx[j] + gh[j]);
+        let z = sigmoid(gx[hid + j] + gh[hid + j]);
+        let n = (gx[2 * hid + j] + r * gh[2 * hid + j]).tanh();
+        h_new[j] = (1.0 - z) * n + z * h[j];
+    }
+    rest
+}
+
+/// Reused scratch for the row forwards. The native backend keeps one per
+/// thread (thread-local) so concurrent forwards on the worker pool never
+/// contend on a lock; `fit_*` resizes the vectors to a net's exact dims
+/// (cheap once the per-thread capacity has grown to the largest net).
+#[derive(Clone, Debug, Default)]
+pub struct FwdScratch {
+    z1: Vec<f32>,
+    z2: Vec<f32>,
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+}
+
+impl FwdScratch {
+    pub fn for_policy(d: &PolicyDims) -> Self {
+        let mut s = FwdScratch::default();
+        s.fit_policy(d);
+        s
+    }
+
+    pub fn for_aip(d: &AipDims) -> Self {
+        let mut s = FwdScratch::default();
+        s.fit_aip(d);
+        s
+    }
+
+    /// Resize to exactly a policy net's dims (row kernels take full
+    /// slices). Contents need not be preserved — every row overwrites.
+    pub fn fit_policy(&mut self, d: &PolicyDims) {
+        self.z1.resize(d.h1, 0.0);
+        self.z2.resize(d.h2, 0.0);
+        self.gx.resize(3 * d.h2, 0.0);
+        self.gh.resize(3 * d.h2, 0.0);
+    }
+
+    /// Resize to exactly an AIP net's dims.
+    pub fn fit_aip(&mut self, d: &AipDims) {
+        self.z1.resize(d.hid, 0.0);
+        self.z2.resize(d.hid, 0.0);
+        self.gx.resize(3 * d.hid, 0.0);
+        self.gh.resize(3 * d.hid, 0.0);
+    }
+}
+
+/// One policy forward on a single row; writes the packed output
+/// `[logits(A) | value(1) | h'(H)]` into `packed`.
+pub fn policy_forward_row(
+    dims: &PolicyDims,
+    flat: &[f32],
+    obs: &[f32],
+    h: &[f32],
+    packed: &mut [f32],
+    s: &mut FwdScratch,
+) {
+    debug_assert_eq!(flat.len(), dims.param_count());
+    debug_assert_eq!(obs.len(), dims.obs);
+    debug_assert_eq!(h.len(), dims.hstate());
+    debug_assert_eq!(packed.len(), dims.packed_out());
+    let a = dims.act;
+    let (logits, rest) = packed.split_at_mut(a);
+    let (value, h_out) = rest.split_at_mut(1);
+    if dims.recurrent {
+        let rest = dense_row(flat, obs, dims.h1, &mut s.z1, true);
+        let rest = gru_row(rest, &s.z1, h, h_out, &mut s.gx, &mut s.gh);
+        let rest = dense_row(rest, h_out, a, logits, false);
+        dense_row(rest, h_out, 1, value, false);
+    } else {
+        let rest = dense_row(flat, obs, dims.h1, &mut s.z1, true);
+        let rest = dense_row(rest, &s.z1, dims.h2, &mut s.z2, true);
+        let rest = dense_row(rest, &s.z2, a, logits, false);
+        dense_row(rest, &s.z2, 1, value, false);
+        h_out.fill(0.0); // FNN dummy state: h' = 0
+    }
+}
+
+/// One AIP forward on a single row; writes `[probs(U) | h'(H)]`.
+pub fn aip_forward_row(
+    dims: &AipDims,
+    flat: &[f32],
+    feat: &[f32],
+    h: &[f32],
+    packed: &mut [f32],
+    s: &mut FwdScratch,
+) {
+    debug_assert_eq!(flat.len(), dims.param_count());
+    debug_assert_eq!(feat.len(), dims.feat);
+    debug_assert_eq!(h.len(), dims.hstate());
+    debug_assert_eq!(packed.len(), dims.packed_out());
+    let u = dims.u_dim();
+    let (probs, h_out) = packed.split_at_mut(u);
+    if dims.recurrent {
+        let rest = gru_row(flat, feat, h, h_out, &mut s.gx, &mut s.gh);
+        dense_row(rest, h_out, u, probs, false);
+    } else {
+        let rest = dense_row(flat, feat, dims.hid, &mut s.z1, true);
+        let rest = dense_row(rest, &s.z1, dims.hid, &mut s.z2, true);
+        dense_row(rest, &s.z2, u, probs, false);
+        h_out.fill(0.0);
+    }
+    if dims.cls <= 1 {
+        for p in probs.iter_mut() {
+            *p = sigmoid(*p);
+        }
+    } else {
+        for head in probs.chunks_mut(dims.cls) {
+            let max = head.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for v in head.iter_mut() {
+                *v = (*v - max).exp();
+                z += *v;
+            }
+            for v in head.iter_mut() {
+                *v /= z;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The small-config counts printed by `python -m compile.aot` (and
+    // pinned in artifacts.rs's META test string).
+    #[test]
+    fn param_counts_match_aot_small_config() {
+        let tpol = PolicyDims { obs: 27, act: 2, recurrent: false, h1: 64, h2: 64 };
+        assert_eq!(tpol.param_count(), 6147);
+        assert_eq!(tpol.hstate(), 1);
+        assert_eq!(tpol.packed_out(), 2 + 1 + 1);
+        let wpol = PolicyDims { obs: 37, act: 5, recurrent: true, h1: 64, h2: 64 };
+        assert_eq!(wpol.param_count(), 27782);
+        assert_eq!(wpol.hstate(), 64);
+        let taip = AipDims { feat: 29, recurrent: false, hid: 64, heads: 4, cls: 1 };
+        assert_eq!(taip.param_count(), 6340);
+        assert_eq!(taip.u_dim(), 4);
+        let waip = AipDims { feat: 42, recurrent: true, hid: 32, heads: 4, cls: 4 };
+        assert_eq!(waip.param_count(), 7824);
+        assert_eq!(waip.u_dim(), 16);
+    }
+
+    #[test]
+    fn fnn_policy_zero_params_gives_zero_logits_value() {
+        let d = PolicyDims { obs: 3, act: 2, recurrent: false, h1: 4, h2: 4 };
+        let flat = vec![0.0; d.param_count()];
+        let mut packed = vec![9.0; d.packed_out()];
+        let mut s = FwdScratch::for_policy(&d);
+        policy_forward_row(&d, &flat, &[0.5, -0.5, 1.0], &[0.0], &mut packed, &mut s);
+        assert!(packed.iter().all(|&v| v == 0.0), "{packed:?}");
+    }
+
+    #[test]
+    fn fnn_policy_bias_propagates() {
+        // Single-unit net: fc1.b = atanh-friendly value, rest wired so
+        // logits = pi.b + pi.w·tanh(fc2(tanh(fc1))). Hand-check one path.
+        let d = PolicyDims { obs: 1, act: 1, recurrent: false, h1: 1, h2: 1 };
+        // layout: fc1.b[1] fc1.w[1] fc2.b[1] fc2.w[1] pi.b[1] pi.w[1] vf.b[1] vf.w[1]
+        let flat = vec![0.0, 1.0, 0.0, 1.0, 0.25, 2.0, 0.5, 3.0];
+        let mut packed = vec![0.0; d.packed_out()];
+        let mut s = FwdScratch::for_policy(&d);
+        let x = 0.3f32;
+        policy_forward_row(&d, &flat, &[x], &[0.0], &mut packed, &mut s);
+        let z = x.tanh().tanh();
+        assert!((packed[0] - (0.25 + 2.0 * z)).abs() < 1e-6);
+        assert!((packed[1] - (0.5 + 3.0 * z)).abs() < 1e-6);
+        assert_eq!(packed[2], 0.0); // FNN h' stays zero
+    }
+
+    #[test]
+    fn gru_policy_zero_params_halves_hidden_state() {
+        // All-zero params: r = z = σ(0) = 0.5, n = tanh(0) = 0,
+        // h' = 0.5·0 + 0.5·h = h/2.
+        let d = PolicyDims { obs: 2, act: 2, recurrent: true, h1: 3, h2: 4 };
+        let flat = vec![0.0; d.param_count()];
+        let mut packed = vec![0.0; d.packed_out()];
+        let mut s = FwdScratch::for_policy(&d);
+        let h = [0.8f32, -0.4, 0.0, 1.0];
+        policy_forward_row(&d, &flat, &[1.0, 2.0], &h, &mut packed, &mut s);
+        for (j, &hj) in h.iter().enumerate() {
+            assert!((packed[2 + 1 + j] - hj / 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn aip_bernoulli_heads_are_sigmoid() {
+        let d = AipDims { feat: 2, recurrent: false, hid: 3, heads: 2, cls: 1 };
+        let flat = vec![0.0; d.param_count()];
+        let mut packed = vec![0.0; d.packed_out()];
+        let mut s = FwdScratch::for_aip(&d);
+        aip_forward_row(&d, &flat, &[1.0, -1.0], &[0.0], &mut packed, &mut s);
+        assert!((packed[0] - 0.5).abs() < 1e-6);
+        assert!((packed[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aip_categorical_heads_normalise() {
+        let d = AipDims { feat: 2, recurrent: true, hid: 3, heads: 2, cls: 4 };
+        let mut rng = crate::util::rng::Pcg64::seed(3);
+        let flat: Vec<f32> = (0..d.param_count()).map(|_| 0.3 * rng.normal() as f32).collect();
+        let mut packed = vec![0.0; d.packed_out()];
+        let mut s = FwdScratch::for_aip(&d);
+        aip_forward_row(&d, &flat, &[0.7, -0.2], &[0.1, 0.2, -0.3], &mut packed, &mut s);
+        for head in packed[..d.u_dim()].chunks(4) {
+            let sum: f32 = head.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{head:?}");
+            assert!(head.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+}

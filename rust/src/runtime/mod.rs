@@ -10,11 +10,19 @@
 //!   the binding at `rust/vendor/xla` (a stub by default — drop a real
 //!   xla-rs checkout there to enable execution).
 //! * `native` (default): a dependency-free host backend with the same
-//!   surface. Uploads/downloads round-trip host tensors and artifact
-//!   loading validates file presence, but executing a compiled graph
-//!   reports an error — enough for the full simulator/executor/PPO-buffer
-//!   stack, every unit test, and the alloc benches to build and run
-//!   without the XLA toolchain.
+//!   surface. Since the batch-first redesign it **executes the forward
+//!   artifact families for real** through the pure-Rust row kernels in
+//!   [`layout`] (bound from the `.meta` layer dims), so evaluation,
+//!   collection, and the forward-only ablations run end-to-end without
+//!   the XLA toolchain; only the update artifacts still require `xla`.
+//!
+//! On top of the backends sits the batch-first inference surface
+//! ([`batch`]): `NetBank` stacks all N agents' parameters into one
+//! device-resident `[N, P]` tensor and `PolicyBank` / `AipBank` forward a
+//! whole joint step with ONE `run_b` call. The streaming B=1 runtimes
+//! (`coordinator::PolicyRuntime`, `influence::AipRuntime`) are thin views
+//! over single-row banks. [`synth`] emits native artifact sets (meta +
+//! init vectors) so the default build needs neither Python nor XLA.
 //!
 //! `Engine`/`Exec` are shared across the coordinator's worker threads —
 //! the underlying XLA PJRT CPU client is thread-safe, the Rust wrapper
@@ -22,12 +30,16 @@
 //! `unsafe impl Send/Sync` in the xla backend.
 
 mod artifacts;
+pub mod batch;
 #[cfg(feature = "xla")]
 mod exec;
+pub mod layout;
 #[cfg(not(feature = "xla"))]
 mod native;
+pub mod synth;
 
 pub use artifacts::{ArtifactSet, NetSpec};
+pub use batch::{ActOut, AipBank, NetBank, PolicyBank};
 #[cfg(feature = "xla")]
 pub use exec::{DeviceTensor, Engine, Exec};
 #[cfg(not(feature = "xla"))]

@@ -2,17 +2,39 @@
 //!
 //! Mirrors the `exec` backend's API so the rest of the crate is oblivious
 //! to which one is linked. `upload`/`to_tensor` round-trip host tensors
-//! (the zero-alloc runtimes stage into these), and `load_hlo` validates
-//! that the artifact file exists, but actually executing a compiled graph
-//! needs the real PJRT client and returns an explanatory error. Tests that
-//! require artifact execution skip themselves when `make artifacts` has
-//! not run, so the default build stays green end to end.
+//! (the zero-alloc runtimes stage into these) and `load_hlo` validates
+//! that the artifact file exists.
+//!
+//! Since the batch-first redesign this backend **executes the forward
+//! artifacts for real**: `ArtifactSet::load` binds the `policy_step` /
+//! `aip_forward` executables (and their batched `_b` variants) to the
+//! pure-Rust row kernels in `runtime::layout`, driven by the layer dims
+//! declared in `.meta`. The batched entry point runs the *same row kernel*
+//! over every row of the stacked `[N, P]` parameter tensor, so the one
+//! `run_b`-per-joint-step bank path and the per-agent B=1 path are
+//! bit-identical by construction. The update artifacts (`ppo_update`,
+//! `aip_update`, `aip_eval`) still need the real PJRT client and return an
+//! explanatory error.
 
+use std::cell::RefCell;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::npk::Tensor;
+
+use super::layout::{
+    aip_forward_row, policy_forward_row, AipDims, FwdScratch, PolicyDims,
+};
+
+thread_local! {
+    /// Per-thread forward scratch: the worker pool's threads execute
+    /// forwards concurrently (the embarrassingly-parallel LS segments),
+    /// so a per-`Exec` lock would serialise the whole phase. Each thread
+    /// grows one scratch to the largest net it has run.
+    static FWD_SCRATCH: RefCell<FwdScratch> = RefCell::new(FwdScratch::default());
+}
 
 /// Host stand-in for the PJRT CPU client. Cheap to clone.
 #[derive(Clone, Default)]
@@ -33,8 +55,9 @@ impl Engine {
     }
 
     /// Load an HLO-text artifact. Presence and readability are checked so
-    /// interface drift still fails loudly at startup; compilation needs
-    /// the `xla` feature.
+    /// interface drift still fails loudly at startup; execution requires a
+    /// native binding (`Exec::bind_policy` / `bind_aip`) or the `xla`
+    /// feature.
     pub fn load_hlo(&self, path: &Path) -> Result<Exec> {
         std::fs::metadata(path)
             .with_context(|| format!("read HLO text {}", path.display()))?;
@@ -43,6 +66,8 @@ impl Engine {
                 .file_stem()
                 .map(|s| s.to_string_lossy().into_owned())
                 .unwrap_or_default(),
+            calls: AtomicU64::new(0),
+            net: None,
         })
     }
 }
@@ -59,9 +84,18 @@ impl DeviceTensor {
     }
 }
 
-/// One loaded (but not executable) artifact.
+/// The network a forward artifact computes (bound from the `.meta` dims).
+enum NetKind {
+    Policy(PolicyDims),
+    Aip(AipDims),
+}
+
+/// One loaded artifact. Forward artifacts execute through the bound
+/// `runtime::layout` kernels; everything else reports the missing feature.
 pub struct Exec {
     name: String,
+    calls: AtomicU64,
+    net: Option<NetKind>,
 }
 
 impl Exec {
@@ -69,30 +103,111 @@ impl Exec {
         &self.name
     }
 
-    /// Number of executions so far. Always 0 in this backend — nothing
-    /// can execute without the `xla` feature (API parity only).
+    /// Number of executions so far (profiling + the one-`run_b`-per-step
+    /// invariant tests).
     pub fn call_count(&self) -> u64 {
-        0
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Bind this artifact to the native policy forward. Validates the
+    /// declared dims against the `.meta` parameter count.
+    pub fn bind_policy(&mut self, dims: PolicyDims, expect_params: usize) -> Result<()> {
+        ensure!(
+            dims.param_count() == expect_params,
+            "{}: policy layer dims {dims:?} imply {} params but .meta says {} — \
+             re-run `make artifacts`",
+            self.name, dims.param_count(), expect_params
+        );
+        self.net = Some(NetKind::Policy(dims));
+        Ok(())
+    }
+
+    /// Bind this artifact to the native AIP forward.
+    pub fn bind_aip(&mut self, dims: AipDims, expect_params: usize) -> Result<()> {
+        ensure!(
+            dims.param_count() == expect_params,
+            "{}: AIP layer dims {dims:?} imply {} params but .meta says {} — \
+             re-run `make artifacts`",
+            self.name, dims.param_count(), expect_params
+        );
+        self.net = Some(NetKind::Aip(dims));
+        Ok(())
+    }
+
+    /// Shared compute path. Inputs `(params, x, h)`: a rank-1 `[P]`
+    /// parameter tensor selects the B=1 packed output `[W]`; a rank-2
+    /// `[N, P]` stack selects the batched output `[N, W]` (N = 1 stays
+    /// rank-2, mirroring the lowered `_b` artifacts).
+    fn compute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let Some(kind) = &self.net else {
+            bail!(
+                "cannot execute artifact {:?}: no native executor is bound for it \
+                 (only the policy_step / aip_forward families run natively). \
+                 Rebuild with `--features xla` and a real xla-rs checkout under \
+                 rust/vendor/xla to execute the update artifacts.",
+                self.name
+            )
+        };
+        ensure!(
+            inputs.len() == 3,
+            "{}: expected (params, input, h), got {} inputs",
+            self.name, inputs.len()
+        );
+        let (params, x, h) = (inputs[0], inputs[1], inputs[2]);
+        // Rank decides the contract (matches the XLA artifacts): a [N, P]
+        // stack returns [N, W] even for N = 1; flat [P] params return [W].
+        let batched = params.dims.len() == 2;
+        let n = if batched { params.dims[0] } else { 1 };
+        let (p, in_dim, h_dim, out_w) = match kind {
+            NetKind::Policy(d) => (d.param_count(), d.obs, d.hstate(), d.packed_out()),
+            NetKind::Aip(d) => (d.param_count(), d.feat, d.hstate(), d.packed_out()),
+        };
+        ensure!(
+            params.len() == n * p && x.len() == n * in_dim && h.len() == n * h_dim,
+            "{}: shape mismatch — params {:?}, input {:?}, h {:?} for N={n} \
+             (P={p}, in={in_dim}, H={h_dim})",
+            self.name, params.dims, x.dims, h.dims
+        );
+        let mut out = if batched {
+            Tensor::zeros(&[n, out_w])
+        } else {
+            Tensor::zeros(&[out_w])
+        };
+        FWD_SCRATCH.with(|cell| {
+            let mut s = cell.borrow_mut();
+            match kind {
+                NetKind::Policy(d) => s.fit_policy(d),
+                NetKind::Aip(d) => s.fit_aip(d),
+            }
+            for i in 0..n {
+                let flat = &params.data[i * p..(i + 1) * p];
+                let xi = &x.data[i * in_dim..(i + 1) * in_dim];
+                let hi = &h.data[i * h_dim..(i + 1) * h_dim];
+                let oi = &mut out.data[i * out_w..(i + 1) * out_w];
+                match kind {
+                    NetKind::Policy(d) => policy_forward_row(d, flat, xi, hi, oi, &mut s),
+                    NetKind::Aip(d) => aip_forward_row(d, flat, xi, hi, oi, &mut s),
+                }
+            }
+        });
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(vec![out])
     }
 
     /// Execute with host tensors, returning host tensors (simple path).
-    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        bail!(
-            "cannot execute artifact {:?}: the crate was built without the `xla` \
-             feature (native host backend). Rebuild with `--features xla` and a \
-             real xla-rs checkout under rust/vendor/xla.",
-            self.name
-        )
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.compute(&refs)
     }
 
     /// Execute with device buffers, returning device buffers (hot path).
-    pub fn run_b(&self, _inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>> {
-        bail!(
-            "cannot execute artifact {:?}: the crate was built without the `xla` \
-             feature (native host backend). Rebuild with `--features xla` and a \
-             real xla-rs checkout under rust/vendor/xla.",
-            self.name
-        )
+    pub fn run_b(&self, inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().map(|t| &t.host).collect();
+        Ok(self
+            .compute(&refs)?
+            .into_iter()
+            .map(|host| DeviceTensor { host })
+            .collect())
     }
 }
 
@@ -120,18 +235,75 @@ mod tests {
         assert_eq!(d.to_tensor().unwrap(), t);
     }
 
-    #[test]
-    fn execution_reports_missing_feature() {
+    fn fake_exec(name: &str) -> Exec {
         let dir = std::env::temp_dir().join("dials_native_backend_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("fake.hlo.txt");
+        let path = dir.join(format!("{name}.hlo.txt"));
         std::fs::write(&path, "HloModule fake\n").unwrap();
-        let engine = Engine::cpu().unwrap();
-        let exec = engine.load_hlo(&path).unwrap();
+        Engine::cpu().unwrap().load_hlo(&path).unwrap()
+    }
+
+    #[test]
+    fn unbound_execution_reports_missing_feature() {
+        let exec = fake_exec("fake");
         assert_eq!(exec.name(), "fake.hlo");
         assert_eq!(exec.call_count(), 0);
         let err = exec.run(&[]).unwrap_err();
         assert!(format!("{err}").contains("xla"), "{err}");
         assert!(exec.run_b(&[]).is_err());
+    }
+
+    #[test]
+    fn bound_policy_executes_b1_and_batched() {
+        let dims = PolicyDims { obs: 3, act: 2, recurrent: false, h1: 4, h2: 4 };
+        let mut exec = fake_exec("pol");
+        exec.bind_policy(dims, dims.param_count()).unwrap();
+        // wrong param count rejected at bind time
+        assert!(fake_exec("pol2").bind_policy(dims, dims.param_count() + 1).is_err());
+
+        let p = Tensor::zeros(&[dims.param_count()]);
+        let obs = Tensor::new(vec![1, 3], vec![0.1, 0.2, 0.3]);
+        let h = Tensor::zeros(&[1, 1]);
+        let out = exec.run(&[p, obs, h]).unwrap();
+        assert_eq!(out[0].dims, vec![dims.packed_out()]);
+        assert_eq!(exec.call_count(), 1);
+
+        // batched: 2 stacked rows, same zero params → same zero outputs
+        let pb = Tensor::zeros(&[2, dims.param_count()]);
+        let ob = Tensor::new(vec![2, 3], vec![0.1, 0.2, 0.3, -0.1, -0.2, -0.3]);
+        let hb = Tensor::zeros(&[2, 1]);
+        let outb = exec.run(&[pb, ob, hb]).unwrap();
+        assert_eq!(outb[0].dims, vec![2, dims.packed_out()]);
+        assert_eq!(exec.call_count(), 2);
+
+        // N = 1 stacked params keep the batched rank-2 contract
+        let p1 = Tensor::zeros(&[1, dims.param_count()]);
+        let o1 = Tensor::new(vec![1, 3], vec![0.1, 0.2, 0.3]);
+        let h1 = Tensor::zeros(&[1, 1]);
+        let out1 = exec.run(&[p1, o1, h1]).unwrap();
+        assert_eq!(out1[0].dims, vec![1, dims.packed_out()]);
+
+        // shape mismatch is an error, not UB
+        let bad = Tensor::zeros(&[2, 2]);
+        assert!(exec
+            .run(&[Tensor::zeros(&[dims.param_count()]), bad, Tensor::zeros(&[1, 1])])
+            .is_err());
+    }
+
+    #[test]
+    fn bound_aip_executes_and_counts_run_b() {
+        let dims = AipDims { feat: 4, recurrent: false, hid: 3, heads: 2, cls: 1 };
+        let mut exec = fake_exec("aip");
+        exec.bind_aip(dims, dims.param_count()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let p = engine.upload(&Tensor::zeros(&[dims.param_count()])).unwrap();
+        let f = engine.upload(&Tensor::zeros(&[1, 4])).unwrap();
+        let h = engine.upload(&Tensor::zeros(&[1, 1])).unwrap();
+        let out = exec.run_b(&[&p, &f, &h]).unwrap();
+        let t = out[0].to_tensor().unwrap();
+        assert_eq!(t.dims, vec![dims.packed_out()]);
+        // zero logits → sigmoid 0.5 per Bernoulli head
+        assert!((t.data[0] - 0.5).abs() < 1e-6);
+        assert_eq!(exec.call_count(), 1);
     }
 }

@@ -1,0 +1,177 @@
+//! Native artifact synthesis: emit a complete artifact set without
+//! Python or the XLA toolchain.
+//!
+//! The default build's `native` backend executes the forward artifacts
+//! directly from the flat parameter vectors (`runtime::layout`), so the
+//! only things it actually needs from `make artifacts` are the `.meta`
+//! contract and the initial parameter vectors. This module writes both —
+//! plus placeholder `.hlo.txt` files so `ArtifactSet::load`'s presence
+//! checks pass — using the same "small" layer widths as
+//! `python/compile/aot.py` (`domain_cfgs("small")`).
+//!
+//! Used by the batch-equivalence tests, the hotpath bench's NN rows, and
+//! anyone who wants to drive the forward-only phases (evaluation,
+//! collection, untrained-DIALS) on a box without jax. Update artifacts
+//! (`ppo_update` etc.) still require the real toolchain; the placeholders
+//! produce an explanatory error if executed.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::Domain;
+use crate::sim;
+use crate::util::npk::{write_npk, Tensor};
+use crate::util::rng::Pcg64;
+
+use super::layout::{AipDims, PolicyDims};
+
+/// The aot.py "small" configuration for one domain.
+pub fn small_dims(domain: Domain) -> (PolicyDims, AipDims) {
+    match domain {
+        Domain::Traffic => (
+            PolicyDims {
+                obs: sim::TRAFFIC_OBS,
+                act: sim::TRAFFIC_ACT,
+                recurrent: false,
+                h1: 64,
+                h2: 64,
+            },
+            AipDims {
+                feat: sim::TRAFFIC_OBS + sim::TRAFFIC_ACT,
+                recurrent: false,
+                hid: 64,
+                heads: sim::TRAFFIC_U_DIM,
+                cls: 1,
+            },
+        ),
+        Domain::Warehouse => (
+            PolicyDims {
+                obs: sim::WAREHOUSE_OBS,
+                act: sim::WAREHOUSE_ACT,
+                recurrent: true,
+                h1: 64,
+                h2: 64,
+            },
+            AipDims {
+                feat: sim::WAREHOUSE_OBS + sim::WAREHOUSE_ACT,
+                recurrent: true,
+                hid: 32,
+                heads: sim::WAREHOUSE_N_HEADS,
+                cls: sim::WAREHOUSE_N_CLS,
+            },
+        ),
+    }
+}
+
+/// Write a native artifact set for `domain` into `dir` (created if
+/// needed). Deterministic in `seed`.
+pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let (pd, ad) = small_dims(domain);
+    let (minibatch, aip_batch, aip_seq, u_dim) = match domain {
+        Domain::Traffic => (32, 128, 1, sim::TRAFFIC_U_DIM),
+        Domain::Warehouse => (32, 32, 16, sim::WAREHOUSE_U_DIM),
+    };
+    let d = domain.name();
+
+    let meta = format!(
+        "domain={d}\nobs_dim={}\nact_dim={}\npolicy_recurrent={}\npolicy_hstate={}\n\
+         policy_params={}\naip_feat={}\naip_recurrent={}\naip_hstate={}\naip_params={}\n\
+         aip_heads={}\naip_cls={}\nu_dim={u_dim}\nminibatch={minibatch}\n\
+         aip_batch={aip_batch}\naip_seq={aip_seq}\nseed={seed}\n\
+         policy_h1={}\npolicy_h2={}\naip_hid={}\nbatch=0\n",
+        pd.obs,
+        pd.act,
+        pd.recurrent as usize,
+        pd.hstate(),
+        pd.param_count(),
+        ad.feat,
+        ad.recurrent as usize,
+        ad.hstate(),
+        ad.param_count(),
+        ad.heads,
+        ad.cls,
+        pd.h1,
+        pd.h2,
+        ad.hid,
+    );
+    std::fs::write(dir.join(format!("{d}.meta")), meta)?;
+
+    let mut rng = Pcg64::new(seed, 0xD1A15);
+    let init = |rng: &mut Pcg64, n: usize, scale: f32| -> Tensor {
+        Tensor::new(vec![n], (0..n).map(|_| scale * rng.normal() as f32).collect())
+    };
+    write_npk(
+        &dir.join(format!("{d}_policy_init.npk")),
+        &init(&mut rng, pd.param_count(), 0.08),
+    )?;
+    write_npk(
+        &dir.join(format!("{d}_aip_init.npk")),
+        &init(&mut rng, ad.param_count(), 0.08),
+    )?;
+
+    for name in [
+        "policy_step",
+        "policy_step_b",
+        "ppo_update",
+        "aip_forward",
+        "aip_forward_b",
+        "aip_update",
+        "aip_eval",
+    ] {
+        std::fs::write(
+            dir.join(format!("{d}_{name}.hlo.txt")),
+            format!(
+                "HloModule {d}_{name}\n; native artifact placeholder — the forward \
+                 families execute through runtime::layout; update artifacts need \
+                 `make artifacts` + the xla feature.\n"
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dials_synth_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    // The xla backend would try to compile the placeholder HLO text; the
+    // loader round-trip is native-only.
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn synth_artifacts_load_for_both_domains() {
+        use crate::runtime::{ArtifactSet, Engine};
+        for domain in [Domain::Traffic, Domain::Warehouse] {
+            let dir = tmp(domain.name());
+            write_native_artifacts(&dir, domain, 7).unwrap();
+            let engine = Engine::cpu().unwrap();
+            let arts = ArtifactSet::load(&engine, &dir, domain).unwrap();
+            assert_eq!(arts.spec.domain, domain.name());
+            assert!(arts.policy_step_b.is_some());
+            assert!(arts.aip_forward_b.is_some());
+            assert_eq!(arts.policy_init.len(), arts.spec.policy_params);
+            assert_eq!(arts.aip_init.len(), arts.spec.aip_params);
+            assert_eq!(arts.spec.batch_n, 0, "native artifacts are shape-polymorphic");
+        }
+    }
+
+    #[test]
+    fn synth_is_deterministic_in_seed() {
+        let (a, b, c) = (tmp("det_a"), tmp("det_b"), tmp("det_c"));
+        write_native_artifacts(&a, Domain::Traffic, 1).unwrap();
+        write_native_artifacts(&b, Domain::Traffic, 1).unwrap();
+        write_native_artifacts(&c, Domain::Traffic, 2).unwrap();
+        let read = |d: &Path| {
+            crate::util::npk::read_npk(&d.join("traffic_policy_init.npk")).unwrap().data
+        };
+        assert_eq!(read(&a), read(&b));
+        assert_ne!(read(&a), read(&c));
+    }
+}

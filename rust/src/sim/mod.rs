@@ -73,22 +73,36 @@ pub trait LocalSim: Send {
     fn step(&mut self, action: usize, u: &[f32], rng: &mut Pcg64) -> f32;
 }
 
-/// Convenience: allocate and fill an observation vector.
+// ---------------------------------------------------------------------
+// TEST-ONLY convenience wrappers.
+//
+// These allocate a fresh vector per call and exist purely so the sim
+// property/unit tests read cleanly. They are NOT part of the hot-path
+// surface and must not appear in coordinator/bank/baseline code: the
+// zero-alloc entry points (`GlobalSim::observe`/`step` into
+// `GsScratch`-owned buffers, `LocalSim::observe` into `AgentWorker`
+// scratch) are the only step-loop API. They cannot live behind
+// `#[cfg(test)]` because the integration tests in `rust/tests/` link the
+// library without that cfg — treat this comment as the gate.
+// ---------------------------------------------------------------------
+
+/// Test-only: allocate and fill one agent's observation vector.
 pub fn observe_vec_global(sim: &dyn GlobalSim, agent: usize) -> Vec<f32> {
     let mut v = vec![0.0; sim.obs_dim()];
     sim.observe(agent, &mut v);
     v
 }
 
+/// Test-only: allocate and fill a local observation vector.
 pub fn observe_vec_local(sim: &dyn LocalSim) -> Vec<f32> {
     let mut v = vec![0.0; sim.obs_dim()];
     sim.observe(&mut v);
     v
 }
 
-/// Convenience for tests and one-shot callers: advance the GS one step and
-/// collect the rewards into a fresh vector. Hot paths should instead reuse
-/// a caller-owned buffer via `GlobalSim::step`.
+/// Test-only: advance the GS one step and collect the rewards into a
+/// fresh vector. Hot paths reuse a caller-owned buffer via
+/// `GlobalSim::step`.
 pub fn gs_step_vec(sim: &mut dyn GlobalSim, actions: &[usize], rng: &mut Pcg64) -> Vec<f32> {
     let mut rewards = vec![0.0; sim.n_agents()];
     sim.step(actions, &mut rewards, rng);

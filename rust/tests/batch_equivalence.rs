@@ -1,0 +1,190 @@
+//! Golden equivalence + call-count invariants of the batch-first runtime
+//! (`runtime::batch`), on the native backend with synthesized artifacts
+//! (`runtime::synth`) — no Python, no XLA toolchain.
+//!
+//! * The batched bank path (ONE `run_b` per joint GS step) and the
+//!   per-agent B=1 path must produce **bit-identical** `RunLog`s for a
+//!   full small run, in both domains.
+//! * `evaluate_on_gs` / `collect_datasets` must issue **exactly one**
+//!   policy `run_b` (and, during collection, one AIP `run_b`) per joint
+//!   GS step — pinned through `Exec::call_count`.
+//!
+//! Under the `xla` feature the placeholder HLO files cannot compile, so
+//! everything here is native-only.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{collect_datasets, evaluate_on_gs, make_global_sim, DialsCoordinator, GsScratch};
+use dials::runtime::{synth, Engine};
+use dials::util::rng::Pcg64;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_batch_equiv").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 13).unwrap();
+    dir
+}
+
+/// Forward-only config: the rollout buffer never fills (rollout_len >
+/// total_steps) and the mode is untrained-DIALS, so the run exercises
+/// evaluation + LS stepping without the update artifacts (which need XLA).
+fn tiny_cfg(domain: Domain, dir: &std::path::Path, gs_batch: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::UntrainedDials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 64,
+        aip_dataset: 40,
+        aip_epochs: 1,
+        eval_every: 32,
+        eval_episodes: 2,
+        horizon: 16,
+        seed: 9,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 1,
+        gs_batch,
+    }
+}
+
+#[test]
+fn batched_and_per_agent_runs_are_bit_identical() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("runs", domain);
+        let engine = Engine::cpu().unwrap();
+        let run = |gs_batch: bool| {
+            let coord =
+                DialsCoordinator::new(&engine, tiny_cfg(domain, &dir, gs_batch)).unwrap();
+            coord.run().unwrap()
+        };
+        let batched = run(true);
+        let per_agent = run(false);
+        assert_eq!(batched.eval_curve.len(), per_agent.eval_curve.len());
+        assert!(batched.eval_curve.len() >= 3, "expected initial + per-segment evals");
+        for (b, p) in batched.eval_curve.iter().zip(per_agent.eval_curve.iter()) {
+            assert_eq!(b.step, p.step, "{domain:?}");
+            assert_eq!(
+                b.value.to_bits(),
+                p.value.to_bits(),
+                "{domain:?}: eval at step {} diverged: {} vs {}",
+                b.step, b.value, p.value
+            );
+        }
+        assert_eq!(batched.final_return.to_bits(), per_agent.final_return.to_bits());
+    }
+}
+
+#[test]
+fn collected_datasets_are_bit_identical_across_modes() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("collect", domain);
+        let engine = Engine::cpu().unwrap();
+        let collect = |gs_batch: bool| {
+            let cfg = tiny_cfg(domain, &dir, gs_batch);
+            let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+            let mut workers = coord.make_workers(cfg.seed);
+            let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+            let mut rng = Pcg64::new(cfg.seed, 5);
+            let mut scratch =
+                GsScratch::new(&coord.artifacts().spec, cfg.n_agents(), cfg.gs_batch);
+            let steps = collect_datasets(
+                coord.artifacts(), gs.as_mut(), &mut workers, 50, cfg.horizon,
+                &mut rng, &mut scratch,
+            )
+            .unwrap();
+            let probe = Pcg64::seed(99);
+            let rows = workers
+                .iter()
+                .map(|w| w.dataset.sample_flat(8, &mut probe.clone()).unwrap())
+                .collect::<Vec<_>>();
+            (steps, rows)
+        };
+        let (steps_b, rows_b) = collect(true);
+        let (steps_p, rows_p) = collect(false);
+        assert_eq!(steps_b, steps_p, "{domain:?}: GS step counts diverged");
+        for ((fb, lb), (fp, lp)) in rows_b.iter().zip(rows_p.iter()) {
+            assert_eq!(fb.data, fp.data, "{domain:?}: features diverged");
+            assert_eq!(lb.data, lp.data, "{domain:?}: labels diverged");
+        }
+    }
+}
+
+#[test]
+fn evaluate_issues_exactly_one_policy_run_b_per_joint_step() {
+    let domain = Domain::Traffic;
+    let dir = synth_dir("eval_calls", domain);
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(domain, &dir, true);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let arts = coord.artifacts();
+    let mut workers = coord.make_workers(cfg.seed);
+    let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+    let mut rng = Pcg64::new(cfg.seed, 5);
+    let mut scratch = GsScratch::new(&arts.spec, cfg.n_agents(), true);
+
+    let (episodes, horizon) = (2usize, 10usize);
+    evaluate_on_gs(arts, gs.as_mut(), &mut workers, episodes, horizon, &mut rng, &mut scratch)
+        .unwrap();
+    let joint_steps = (episodes * horizon) as u64;
+    assert_eq!(
+        arts.policy_step_b.as_ref().unwrap().call_count(),
+        joint_steps,
+        "batched eval must issue exactly one policy run_b per joint step"
+    );
+    assert_eq!(arts.policy_step.call_count(), 0, "B=1 artifact must stay cold during batched eval");
+    assert_eq!(arts.aip_forward_b.as_ref().unwrap().call_count(), 0);
+}
+
+#[test]
+fn collect_issues_one_policy_and_one_aip_run_b_per_joint_step() {
+    let domain = Domain::Warehouse;
+    let dir = synth_dir("collect_calls", domain);
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(domain, &dir, true);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let arts = coord.artifacts();
+    let mut workers = coord.make_workers(cfg.seed);
+    let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+    let mut rng = Pcg64::new(cfg.seed, 5);
+    let mut scratch = GsScratch::new(&arts.spec, cfg.n_agents(), true);
+
+    let gs_steps = collect_datasets(
+        arts, gs.as_mut(), &mut workers, 37, cfg.horizon, &mut rng, &mut scratch,
+    )
+    .unwrap() as u64;
+    assert!(gs_steps >= 37);
+    assert_eq!(arts.policy_step_b.as_ref().unwrap().call_count(), gs_steps);
+    assert_eq!(arts.aip_forward_b.as_ref().unwrap().call_count(), gs_steps);
+    assert_eq!(arts.policy_step.call_count(), 0);
+    assert_eq!(arts.aip_forward.call_count(), 0);
+}
+
+#[test]
+fn per_agent_mode_issues_n_b1_calls_per_joint_step() {
+    let domain = Domain::Traffic;
+    let dir = synth_dir("per_agent_calls", domain);
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(domain, &dir, false);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let arts = coord.artifacts();
+    let n = cfg.n_agents() as u64;
+    let mut workers = coord.make_workers(cfg.seed);
+    let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+    let mut rng = Pcg64::new(cfg.seed, 5);
+    let mut scratch = GsScratch::new(&arts.spec, cfg.n_agents(), false);
+
+    let (episodes, horizon) = (1usize, 8usize);
+    evaluate_on_gs(arts, gs.as_mut(), &mut workers, episodes, horizon, &mut rng, &mut scratch)
+        .unwrap();
+    let joint_steps = (episodes * horizon) as u64;
+    assert_eq!(
+        arts.policy_step.call_count(),
+        n * joint_steps,
+        "per-agent mode pays N B=1 calls per joint step — the baseline the bank removes"
+    );
+    assert_eq!(arts.policy_step_b.as_ref().unwrap().call_count(), 0);
+}

@@ -37,6 +37,7 @@ fn tiny_cfg(domain: Domain, mode: SimMode) -> ExperimentConfig {
         ppo: PpoConfig { rollout_len: 64, minibatch: 32, epochs: 1, ..Default::default() },
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
         threads: 1,
+        gs_batch: true,
     }
 }
 
@@ -115,7 +116,7 @@ fn lemma1_same_policy_same_influence_data() {
         let mut workers = coord.make_workers(seed);
         let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
         let mut rng = Pcg64::new(seed, 5);
-        let mut scratch = GsScratch::new(&coord.artifacts().spec, cfg.n_agents());
+        let mut scratch = GsScratch::new(&coord.artifacts().spec, cfg.n_agents(), cfg.gs_batch);
         collect_datasets(
             coord.artifacts(), gs.as_mut(), &mut workers, 50, cfg.horizon, &mut rng, &mut scratch,
         )

@@ -122,6 +122,7 @@ fn tiny_cfg(threads: usize) -> ExperimentConfig {
         ppo: PpoConfig { rollout_len: 64, minibatch: 32, epochs: 1, ..Default::default() },
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
         threads,
+        gs_batch: true,
     }
 }
 

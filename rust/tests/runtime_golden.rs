@@ -3,24 +3,67 @@
 //!
 //! This pins the whole AOT bridge — jax lowering → HLO text → PJRT compile
 //! → execute — to the Python-side numerics. Requires `make artifacts`.
+//!
+//! The forward artifact families (`policy_step[_b]`, `aip_forward[_b]`)
+//! ALSO run on the default native backend (through `ArtifactSet::load`,
+//! which binds the `runtime::layout` row kernels from the `.meta` layer
+//! dims), so the pure-Rust forward numerics are pinned to jax too. The
+//! update artifacts still need the `xla` feature.
 
 use std::path::{Path, PathBuf};
 
-use dials::runtime::{ArtifactSet, Engine};
+use dials::runtime::{ArtifactSet, Engine, Exec};
 use dials::config::Domain;
 use dials::util::npk::{read_npk, Tensor};
 
+/// Artifacts dir for update-artifact tests: needs real PJRT execution.
 fn artifacts_dir() -> Option<PathBuf> {
     if !cfg!(feature = "xla") {
-        eprintln!("SKIP: built without the `xla` feature (native backend cannot execute artifacts)");
+        eprintln!("SKIP: built without the `xla` feature (update artifacts cannot execute natively)");
         return None;
     }
+    artifacts_dir_any()
+}
+
+/// Artifacts dir for forward-family tests: both backends execute these.
+fn artifacts_dir_any() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("traffic.meta").is_file() {
         Some(dir)
     } else {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
         None
+    }
+}
+
+/// Load the domain's `ArtifactSet` for a forward-golden test, or skip
+/// when the native backend cannot execute it (old `.meta` without the
+/// layer-dim keys → no native binding).
+fn load_for_forward(engine: &Engine, dir: &Path, domain: Domain) -> Option<std::sync::Arc<ArtifactSet>> {
+    let arts = ArtifactSet::load(engine, dir, domain).unwrap();
+    if !cfg!(feature = "xla") && arts.spec.policy_dims().is_none() {
+        eprintln!(
+            "SKIP {}: artifacts predate the layer-dim meta keys (native execution needs them)",
+            domain.name()
+        );
+        return None;
+    }
+    Some(arts)
+}
+
+/// Run every golden case of `name` through `exec` and compare to jax.
+fn check_exec_golden(exec: &Exec, art_dir: &Path, name: &str, tol: f32) {
+    let gold = art_dir.join("golden").join(name);
+    if !gold.is_dir() {
+        eprintln!("SKIP golden for {name} (not emitted)");
+        return;
+    }
+    for (case, (ins, wants)) in golden_cases(&gold).into_iter().enumerate() {
+        let outs = exec.run(&ins).unwrap();
+        assert_eq!(outs.len(), wants.len(), "{name} case {case}: output arity");
+        for (k, (got, want)) in outs.iter().zip(wants.iter()).enumerate() {
+            assert_close(got, want, tol, &format!("{name} case {case} out {k}"));
+        }
     }
 }
 
@@ -65,34 +108,46 @@ fn assert_close(got: &Tensor, want: &Tensor, tol: f32, ctx: &str) {
 
 fn check_artifact(engine: &Engine, art_dir: &Path, name: &str, tol: f32) {
     let exec = engine.load_hlo(&art_dir.join(format!("{name}.hlo.txt"))).unwrap();
-    let gold = art_dir.join("golden").join(name);
-    if !gold.is_dir() {
-        eprintln!("SKIP golden for {name} (not emitted)");
-        return;
-    }
-    for (case, (ins, wants)) in golden_cases(&gold).into_iter().enumerate() {
-        let outs = exec.run(&ins).unwrap();
-        assert_eq!(outs.len(), wants.len(), "{name} case {case}: output arity");
-        for (k, (got, want)) in outs.iter().zip(wants.iter()).enumerate() {
-            assert_close(got, want, tol, &format!("{name} case {case} out {k}"));
-        }
-    }
+    check_exec_golden(&exec, art_dir, name, tol);
 }
 
 #[test]
 fn policy_step_matches_jax() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_dir_any() else { return };
     let engine = Engine::cpu().unwrap();
-    check_artifact(&engine, &dir, "traffic_policy_step", 1e-4);
-    check_artifact(&engine, &dir, "warehouse_policy_step", 1e-4);
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let Some(arts) = load_for_forward(&engine, &dir, domain) else { continue };
+        check_exec_golden(&arts.policy_step, &dir, &format!("{}_policy_step", domain.name()), 1e-4);
+    }
 }
 
 #[test]
 fn aip_forward_matches_jax() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_dir_any() else { return };
     let engine = Engine::cpu().unwrap();
-    check_artifact(&engine, &dir, "traffic_aip_forward", 1e-4);
-    check_artifact(&engine, &dir, "warehouse_aip_forward", 1e-4);
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let Some(arts) = load_for_forward(&engine, &dir, domain) else { continue };
+        check_exec_golden(&arts.aip_forward, &dir, &format!("{}_aip_forward", domain.name()), 1e-4);
+    }
+}
+
+#[test]
+fn batched_forwards_match_jax() {
+    let Some(dir) = artifacts_dir_any() else { return };
+    let engine = Engine::cpu().unwrap();
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let Some(arts) = load_for_forward(&engine, &dir, domain) else { continue };
+        let d = domain.name();
+        match (&arts.policy_step_b, &arts.aip_forward_b) {
+            (Some(pb), Some(ab)) => {
+                check_exec_golden(pb, &dir, &format!("{d}_policy_step_b"), 1e-4);
+                check_exec_golden(ab, &dir, &format!("{d}_aip_forward_b"), 1e-4);
+            }
+            _ => eprintln!(
+                "SKIP {d} batched goldens (artifacts predate the batch-first redesign — re-run `make artifacts`)"
+            ),
+        }
+    }
 }
 
 #[test]
@@ -114,7 +169,7 @@ fn aip_update_matches_jax() {
 
 #[test]
 fn artifact_sets_load_and_validate() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = artifacts_dir_any() else { return };
     let engine = Engine::cpu().unwrap();
     for domain in [Domain::Traffic, Domain::Warehouse] {
         let arts = ArtifactSet::load(&engine, &dir, domain).unwrap();
