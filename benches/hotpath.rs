@@ -29,6 +29,7 @@ use anyhow::Result;
 
 use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
 use dials::coordinator::DialsCoordinator;
+use dials::exec::WorkerPool;
 use dials::ppo::PpoTrainer;
 use dials::runtime::Engine;
 use dials::sim::traffic::TrafficLocalSim;
@@ -51,6 +52,8 @@ struct JsonRow {
     peak_extra_bytes: usize,
     /// `run_b` executions per joint GS step (NaN = not applicable).
     calls_per_step: f64,
+    /// GS-phase joint steps per second (NaN = not a GS stepping row).
+    steps_per_s: f64,
 }
 
 /// Heap traffic of `steps` iterations of `f` after a warm-up pass:
@@ -72,7 +75,7 @@ fn alloc_per_step(steps: usize, mut f: impl FnMut()) -> (f64, usize) {
 fn main() -> Result<()> {
     let mut table = Table::new(
         "hot path microbenchmarks",
-        &["op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step"],
+        &["op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s"],
     );
     let mut json: Vec<JsonRow> = Vec::new();
     let reps = 200;
@@ -115,7 +118,7 @@ fn main() -> Result<()> {
             gs.step(&acts, &mut rewards, &mut rng);
         });
         sim_zero_alloc &= bps == 0.0 && peak == 0;
-        push_row(&mut table, &mut json, "traffic GS step (25 ints)", mean, min, "25 agents", bps, peak, f64::NAN);
+        push_row_steps(&mut table, &mut json, "traffic GS step (25 ints)", mean, min, "25 agents", bps, peak, f64::NAN, 1.0 / mean);
 
         let mut wgs = WarehouseGlobalSim::new(5);
         wgs.reset(&mut rng);
@@ -126,7 +129,123 @@ fn main() -> Result<()> {
             wgs.step(&acts, &mut rewards, &mut rng);
         });
         sim_zero_alloc &= bps == 0.0 && peak == 0;
-        push_row(&mut table, &mut json, "warehouse GS step (25 rb)", mean, min, "25 agents", bps, peak, f64::NAN);
+        push_row_steps(&mut table, &mut json, "warehouse GS step (25 rb)", mean, min, "25 agents", bps, peak, f64::NAN, 1.0 / mean);
+    }
+
+    // ---- sharded GS stepping (PartitionedGs scatter/merge on the pool)
+    //
+    // The tentpole claim: the GS dynamics step — the last serial phase on
+    // the critical path — now scales with cores. Serial `GlobalSim::step`
+    // vs `ShardPlan::step` at shards = 1/2/8 on a grid large enough that
+    // one joint step dominates the pool's phase overhead. Results are
+    // bit-identical across shard counts (tests/shard_equivalence.rs);
+    // here we measure throughput only.
+    {
+        use dials::sim::ShardPlan;
+
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let pool = WorkerPool::new(threads);
+        let mut speedup_8 = f64::NAN;
+
+        // traffic: the CA advance dominates — the showcase domain
+        let side = 48usize; // 2304 intersections (the bench grid)
+        let n = side * side;
+        let acts: Vec<usize> = (0..n).map(|i| (i % 9 == 0) as usize).collect();
+        let mut rewards = vec![0.0f32; n];
+
+        let serial_mean = {
+            let mut gs = TrafficGlobalSim::new(side);
+            let mut rng = Pcg64::seed(17);
+            gs.reset(&mut rng);
+            for _ in 0..32 {
+                gs.step(&acts, &mut rewards, &mut rng); // warm the grid
+            }
+            let (mean, min) = time_n(reps, || {
+                gs.step(&acts, &mut rewards, &mut rng);
+            });
+            let (bps, peak) = alloc_per_step(64, || {
+                gs.step(&acts, &mut rewards, &mut rng);
+            });
+            push_row_steps(
+                &mut table, &mut json,
+                &format!("traffic GS step serial ({n} ints)"),
+                mean, min, "1 joint step", bps, peak, f64::NAN, 1.0 / mean,
+            );
+            mean
+        };
+        for shards in [1usize, 2, 8] {
+            let mut gs = TrafficGlobalSim::new(side);
+            let mut plan = ShardPlan::new(n, shards);
+            let mut rng = Pcg64::seed(17);
+            gs.reset(&mut rng);
+            plan.reseed(&mut rng);
+            for _ in 0..32 {
+                plan.step(&mut gs, &pool, &acts, &mut rewards).unwrap();
+            }
+            let (mean, min) = time_n(reps, || {
+                plan.step(&mut gs, &pool, &acts, &mut rewards).unwrap();
+            });
+            // bytes/step here is the pool's per-phase bookkeeping (the
+            // sim-layer shard buffers are persistent) — measured, not
+            // asserted zero like the serial sim rows.
+            let (bps, peak) = alloc_per_step(64, || {
+                plan.step(&mut gs, &pool, &acts, &mut rewards).unwrap();
+            });
+            if shards == 8 {
+                speedup_8 = serial_mean / mean;
+            }
+            push_row_steps(
+                &mut table, &mut json,
+                &format!("traffic GS step sharded x{shards} ({n} ints, {threads} thr)"),
+                mean, min, "1 joint step", bps, peak, f64::NAN, 1.0 / mean,
+            );
+        }
+
+        // warehouse: the merge (labels/collection/aging) dominates, so
+        // this row mostly measures the protocol's overhead floor
+        let wside = 16usize; // 256 robots
+        let wn = wside * wside;
+        let wacts: Vec<usize> = (0..wn).map(|i| i % 5).collect();
+        let mut wrewards = vec![0.0f32; wn];
+        {
+            let mut gs = WarehouseGlobalSim::new(wside);
+            let mut rng = Pcg64::seed(19);
+            gs.reset(&mut rng);
+            let (mean, min) = time_n(reps, || {
+                gs.step(&wacts, &mut wrewards, &mut rng);
+            });
+            let (bps, peak) = alloc_per_step(64, || {
+                gs.step(&wacts, &mut wrewards, &mut rng);
+            });
+            push_row_steps(
+                &mut table, &mut json,
+                &format!("warehouse GS step serial ({wn} rb)"),
+                mean, min, "1 joint step", bps, peak, f64::NAN, 1.0 / mean,
+            );
+        }
+        for shards in [1usize, 8] {
+            let mut gs = WarehouseGlobalSim::new(wside);
+            let mut plan = ShardPlan::new(wn, shards);
+            let mut rng = Pcg64::seed(19);
+            gs.reset(&mut rng);
+            plan.reseed(&mut rng);
+            let (mean, min) = time_n(reps, || {
+                plan.step(&mut gs, &pool, &wacts, &mut wrewards).unwrap();
+            });
+            let (bps, peak) = alloc_per_step(64, || {
+                plan.step(&mut gs, &pool, &wacts, &mut wrewards).unwrap();
+            });
+            push_row_steps(
+                &mut table, &mut json,
+                &format!("warehouse GS step sharded x{shards} ({wn} rb, {threads} thr)"),
+                mean, min, "1 joint step", bps, peak, f64::NAN, 1.0 / mean,
+            );
+        }
+
+        println!(
+            "\nsharded GS speedup @ 8 shards (traffic, {n} ints, {threads} threads): \
+             {speedup_8:.2}x over serial"
+        );
     }
 
     // ---- PJRT executable calls + e2e training step (need artifacts)
@@ -239,19 +358,20 @@ fn main() -> Result<()> {
             let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
             let mut rng = Pcg64::seed(7);
             let mut scratch = GsScratch::new(&arts.spec, n, batched);
+            let pool = WorkerPool::new(1);
             let calls_before = arts.policy_step.call_count()
                 + arts.policy_step_b.as_ref().map_or(0, |e| e.call_count());
             let mut episodes = 0u64;
             let (mean, min) = time_n(8, || {
                 evaluate_on_gs(
-                    arts, gs.as_mut(), &mut workers, 1, horizon, &mut rng, &mut scratch,
+                    arts, gs.as_mut(), &mut workers, 1, horizon, &mut rng, &mut scratch, &pool,
                 )
                 .unwrap();
                 episodes += 1;
             });
             let (bytes_ep, peak) = alloc_per_step(8, || {
                 evaluate_on_gs(
-                    arts, gs.as_mut(), &mut workers, 1, horizon, &mut rng, &mut scratch,
+                    arts, gs.as_mut(), &mut workers, 1, horizon, &mut rng, &mut scratch, &pool,
                 )
                 .unwrap();
                 episodes += 1;
@@ -260,11 +380,12 @@ fn main() -> Result<()> {
                 + arts.policy_step_b.as_ref().map_or(0, |e| e.call_count());
             let joint_steps = episodes * horizon as u64;
             let cps = (calls_after - calls_before) as f64 / joint_steps as f64;
-            push_row(
+            push_row_steps(
                 &mut table, &mut json,
                 &format!("{} GS eval joint step ({label}, N={n})", domain.name()),
                 mean / horizon as f64, min / horizon as f64,
                 "per joint step", bytes_ep / horizon as f64, peak, cps,
+                horizon as f64 / mean,
             );
         }
     }
@@ -294,8 +415,26 @@ fn push_row(
     peak_extra: usize,
     calls_per_step: f64,
 ) {
+    push_row_steps(table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step, f64::NAN);
+}
+
+/// `push_row` plus the GS-phase steps/s column (for GS stepping rows).
+#[allow(clippy::too_many_arguments)]
+fn push_row_steps(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    bytes_per_step: f64,
+    peak_extra: usize,
+    calls_per_step: f64,
+    steps_per_s: f64,
+) {
     let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
     let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
+    let sps = if steps_per_s.is_nan() { "-".to_string() } else { format!("{steps_per_s:.0}") };
     table.row(vec![
         op.to_string(),
         us(mean),
@@ -304,6 +443,7 @@ fn push_row(
         bps,
         format!("{peak_extra}B"),
         cps,
+        sps,
     ]);
     json.push(JsonRow {
         op: op.to_string(),
@@ -312,6 +452,7 @@ fn push_row(
         bytes_per_step,
         peak_extra_bytes: peak_extra,
         calls_per_step,
+        steps_per_s,
     });
 }
 
@@ -321,9 +462,10 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
     for (k, r) in rows.iter().enumerate() {
         let bps = if r.bytes_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.bytes_per_step) };
         let cps = if r.calls_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.calls_per_step) };
+        let sps = if r.steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.steps_per_s) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

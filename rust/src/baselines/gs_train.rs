@@ -3,8 +3,11 @@
 //!
 //! Every env step requires simulating the WHOLE networked system, so the
 //! per-agent cost grows with the number of agents — the scaling wall that
-//! motivates DIALS. The sim stepping is inherently sequential; runtime
-//! tables therefore report wall-clock = critical path for this baseline.
+//! motivates DIALS. With `cfg.gs_shards > 0` the dynamics step itself runs
+//! sharded on a worker pool (`sim::PartitionedGs`), which parallelises the
+//! transition while keeping the learning dynamics bit-identical across
+//! shard counts; the runtime tables still report wall-clock = critical
+//! path for this baseline (the phases are synchronous).
 //!
 //! Batch-first: joint acting and the value bootstrap go through the
 //! scratch's `PolicyBank` — ONE `run_b` per joint step / per bootstrap
@@ -17,6 +20,7 @@ use anyhow::Result;
 
 use crate::config::SimMode;
 use crate::coordinator::{evaluate_on_gs, make_global_sim, AgentWorker, DialsCoordinator, GsScratch};
+use crate::exec::WorkerPool;
 use crate::ppo::PpoTrainer;
 use crate::util::metrics::{CurvePoint, RunLog};
 use crate::util::rng::Pcg64;
@@ -45,11 +49,13 @@ impl GsTrainer {
         let mut timers = PhaseTimers::new();
         let mut log = RunLog { label: SimMode::GlobalSim.label().to_string(), ..Default::default() };
         let batched = crate::coordinator::gs_batch_mode(&arts, cfg);
+        let pool = WorkerPool::new(crate::coordinator::effective_threads(cfg.threads, n));
         let mut scratch = GsScratch::new(&arts.spec, n, batched);
+        scratch.enable_shards(crate::coordinator::gs_shard_mode(gs.as_mut(), cfg));
         let od = arts.spec.obs_dim;
 
         let r0 = timers.time("eval", || {
-            evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch)
+            evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool)
         })?;
         log.eval_curve.push(CurvePoint { step: 0, value: r0 });
 
@@ -57,13 +63,13 @@ impl GsTrainer {
 
         let t_train = std::time::Instant::now();
         let mut ep_step = 0usize;
-        gs.reset(&mut rng);
+        scratch.gs_reset(gs.as_mut(), &mut rng);
         scratch.policy_bank.reset_episodes();
         for step in 0..cfg.total_steps {
             // joint action from all policies: ONE batched run_b (the
             // bank re-stages only rows whose net version changed)
             scratch.joint_act(&arts, gs.as_ref(), &workers, &mut rng)?;
-            gs.step(&scratch.actions, &mut scratch.rewards, &mut rng);
+            scratch.gs_step(gs.as_mut(), &pool, &mut rng)?;
             ep_step += 1;
             let done = ep_step >= cfg.horizon;
 
@@ -80,7 +86,7 @@ impl GsTrainer {
                 );
             }
             if done {
-                gs.reset(&mut rng);
+                scratch.gs_reset(gs.as_mut(), &mut rng);
                 scratch.policy_bank.reset_episodes();
                 ep_step = 0;
             }
@@ -108,12 +114,12 @@ impl GsTrainer {
             if (step + 1) % eval_every == 0 || step + 1 == cfg.total_steps {
                 timers.add("agent_train", t_train.elapsed().as_secs_f64() - timers.get("agent_train") - timers.get("eval_gap"));
                 let ret = timers.time("eval", || {
-                    evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch)
+                    evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool)
                 })?;
                 timers.add("eval_gap", timers.get("eval") - timers.get("eval_gap"));
                 log.eval_curve.push(CurvePoint { step: step + 1, value: ret });
                 // training episode state was clobbered by eval; restart episode
-                gs.reset(&mut rng);
+                scratch.gs_reset(gs.as_mut(), &mut rng);
                 scratch.policy_bank.reset_episodes();
                 ep_step = 0;
             }

@@ -6,7 +6,8 @@
 //! agent's region (paper App. — exactly this heuristic).
 
 use crate::config::Domain;
-use crate::coordinator::evaluate_scripted;
+use crate::coordinator::{evaluate_scripted, GsScratch};
+use crate::exec::WorkerPool;
 use crate::sim::traffic::TrafficGlobalSim;
 use crate::sim::warehouse::WarehouseGlobalSim;
 use crate::util::rng::Pcg64;
@@ -48,6 +49,9 @@ pub fn greedy_warehouse() -> impl FnMut(usize, &WarehouseGlobalSim) -> usize {
 }
 
 /// Mean per-agent return of the domain's scripted policy on the GS.
+/// The joint action/reward staging lives in a sim-only `GsScratch` (no
+/// banks), so repeated episodes allocate nothing; the serial reference
+/// stepping path keeps the historical trajectories bit-identical.
 pub fn scripted_return(
     domain: Domain,
     side: usize,
@@ -56,16 +60,23 @@ pub fn scripted_return(
     seed: u64,
 ) -> f64 {
     let mut rng = Pcg64::new(seed, 999);
+    let pool = WorkerPool::new(1);
+    let mut scratch = GsScratch::sim_only(side * side);
     match domain {
         Domain::Traffic => {
             let mut gs = TrafficGlobalSim::new(side);
-            evaluate_scripted(&mut gs, fixed_cycle_traffic(10), episodes, horizon, &mut rng)
+            evaluate_scripted(
+                &mut gs, fixed_cycle_traffic(10), episodes, horizon, &mut rng, &mut scratch, &pool,
+            )
         }
         Domain::Warehouse => {
             let mut gs = WarehouseGlobalSim::new(side);
-            evaluate_scripted(&mut gs, greedy_warehouse(), episodes, horizon, &mut rng)
+            evaluate_scripted(
+                &mut gs, greedy_warehouse(), episodes, horizon, &mut rng, &mut scratch, &pool,
+            )
         }
     }
+    .expect("scripted evaluation on the serial reference path cannot fail")
 }
 
 #[cfg(test)]
@@ -123,10 +134,37 @@ mod tests {
     fn scripted_beats_starvation_traffic() {
         // fixed-cycle must outperform "never switch" (EW lanes starve)
         let mut rng = Pcg64::seed(3);
+        let pool = WorkerPool::new(1);
+        let mut scratch = GsScratch::sim_only(4);
         let mut gs = TrafficGlobalSim::new(2);
-        let fixed = evaluate_scripted(&mut gs, fixed_cycle_traffic(10), 4, 80, &mut rng);
+        let fixed =
+            evaluate_scripted(&mut gs, fixed_cycle_traffic(10), 4, 80, &mut rng, &mut scratch, &pool)
+                .unwrap();
         let mut gs2 = TrafficGlobalSim::new(2);
-        let starve = evaluate_scripted(&mut gs2, |_, _| 0usize, 4, 80, &mut rng);
+        let starve =
+            evaluate_scripted(&mut gs2, |_, _| 0usize, 4, 80, &mut rng, &mut scratch, &pool)
+                .unwrap();
         assert!(fixed > starve, "fixed cycle {fixed} vs starvation {starve}");
+    }
+
+    #[test]
+    fn scripted_eval_matches_sharded_stepping() {
+        // The scripted baselines ride the same GsScratch path as the
+        // learned ones, so enabling shards must keep returns finite and
+        // shard-count-invariant.
+        let run = |shards: usize| {
+            let mut rng = Pcg64::seed(5);
+            let pool = WorkerPool::new(2);
+            let mut scratch = GsScratch::sim_only(4);
+            scratch.enable_shards(shards);
+            let mut gs = TrafficGlobalSim::new(2);
+            evaluate_scripted(&mut gs, fixed_cycle_traffic(7), 3, 40, &mut rng, &mut scratch, &pool)
+                .unwrap()
+        };
+        let one = run(1);
+        assert!(one.is_finite() && one > 0.0);
+        for s in [2usize, 4] {
+            assert_eq!(one.to_bits(), run(s).to_bits(), "shards={s} diverged");
+        }
     }
 }

@@ -124,6 +124,14 @@ pub struct ExperimentConfig {
     /// used by the equivalence tests and old artifact sets without the
     /// `_b` executables.
     pub gs_batch: bool,
+    /// Shard the GS dynamics step over the persistent worker pool
+    /// (`sim::PartitionedGs`): the joint transition runs as `gs_shards`
+    /// parallel shard-local steps plus a deterministic event merge.
+    /// 0 (default) keeps the serial reference `GlobalSim::step`. Values
+    /// above the agent count are clamped; sims without a sharded protocol
+    /// auto-fall back to serial with a notice. Results are bit-identical
+    /// across all shard counts >= 1 (`tests/shard_equivalence.rs`).
+    pub gs_shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -144,6 +152,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".to_string(),
             threads: 0,
             gs_batch: true,
+            gs_shards: 0,
         }
     }
 }
@@ -199,6 +208,7 @@ impl ExperimentConfig {
         get_usize!(exp, "eval_episodes", cfg.eval_episodes);
         get_usize!(exp, "horizon", cfg.horizon);
         get_usize!(exp, "threads", cfg.threads);
+        get_usize!(exp, "gs_shards", cfg.gs_shards);
         if let Some(v) = exp.get("seed") {
             cfg.seed = v.as_int()? as u64;
         }
@@ -252,6 +262,7 @@ impl ExperimentConfig {
         cfg.horizon = args.get_usize("horizon", cfg.horizon)?;
         cfg.seed = args.get_u64("seed", cfg.seed)?;
         cfg.threads = args.get_usize("threads", cfg.threads)?;
+        cfg.gs_shards = args.get_usize("gs-shards", cfg.gs_shards)?;
         if let Some(dir) = args.get("artifacts") {
             cfg.artifacts_dir = dir.to_string();
         }
@@ -334,6 +345,18 @@ mod tests {
             crate::util::cli::Args::parse(["--gs-batch", "nah"].iter().map(|s| s.to_string()))
                 .unwrap();
         assert!(ExperimentConfig::from_cli(&bad).is_err());
+    }
+
+    #[test]
+    fn gs_shards_defaults_off_and_parses() {
+        assert_eq!(ExperimentConfig::default().gs_shards, 0);
+        let doc = parse("[experiment]\ngs_shards = 8\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().gs_shards, 8);
+        let args = crate::util::cli::Args::parse(
+            ["--gs-shards", "4"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().gs_shards, 4);
     }
 
     #[test]

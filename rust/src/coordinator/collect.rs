@@ -17,6 +17,7 @@
 
 use anyhow::Result;
 
+use crate::exec::WorkerPool;
 use crate::influence::{encode_alsh, label_to_classes};
 use crate::runtime::ArtifactSet;
 use crate::sim::GlobalSim;
@@ -27,6 +28,7 @@ use super::GsScratch;
 
 /// Run the GS until each dataset has gained `rows_per_agent` fresh rows.
 /// Returns the number of GS env steps consumed (for the runtime tables).
+#[allow(clippy::too_many_arguments)]
 pub fn collect_datasets(
     arts: &ArtifactSet,
     gs: &mut dyn GlobalSim,
@@ -35,6 +37,7 @@ pub fn collect_datasets(
     horizon: usize,
     rng: &mut Pcg64,
     scratch: &mut GsScratch,
+    pool: &WorkerPool,
 ) -> Result<usize> {
     let n = gs.n_agents();
     debug_assert_eq!(workers.len(), n);
@@ -49,7 +52,7 @@ pub fn collect_datasets(
     let mut collected = 0usize;
 
     while collected < rows_per_agent {
-        gs.reset(rng);
+        scratch.gs_reset(gs, rng);
         scratch.policy_bank.reset_episodes();
         scratch.aip_bank.reset_episodes();
         for w in workers.iter_mut() {
@@ -58,7 +61,7 @@ pub fn collect_datasets(
         for _t in 0..horizon {
             // ONE policy run_b for the whole joint step
             scratch.joint_act(arts, &*gs, workers, rng)?;
-            gs.step(&scratch.actions, &mut scratch.rewards, rng);
+            scratch.gs_step(gs, pool, rng)?;
             gs_steps += 1;
 
             // joint ALSH rows (pre-step obs ⊕ one-hot action) ...

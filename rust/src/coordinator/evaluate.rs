@@ -9,9 +9,14 @@
 //! no longer touches the workers' LS-segment streaming state; the workers
 //! only contribute their current `NetState`s (staged into the bank, rows
 //! re-uploaded only when a policy version changed).
+//!
+//! The GS transition itself goes through `GsScratch::gs_step`: the serial
+//! reference `GlobalSim::step`, or — with `cfg.gs_shards > 0` — the
+//! sharded `PartitionedGs` scatter/merge over the persistent pool.
 
 use anyhow::Result;
 
+use crate::exec::WorkerPool;
 use crate::runtime::ArtifactSet;
 use crate::sim::GlobalSim;
 use crate::util::rng::Pcg64;
@@ -23,6 +28,7 @@ use super::GsScratch;
 /// mean per-agent episodic return (averaged over agents and episodes).
 /// All per-step buffers live in `scratch`, so repeated evaluations
 /// allocate nothing.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate_on_gs(
     arts: &ArtifactSet,
     gs: &mut dyn GlobalSim,
@@ -31,6 +37,7 @@ pub fn evaluate_on_gs(
     horizon: usize,
     rng: &mut Pcg64,
     scratch: &mut GsScratch,
+    pool: &WorkerPool,
 ) -> Result<f64> {
     let n = gs.n_agents();
     debug_assert_eq!(workers.len(), n);
@@ -38,12 +45,12 @@ pub fn evaluate_on_gs(
     let mut total_return = 0.0f64;
 
     for _ep in 0..episodes {
-        gs.reset(rng);
+        scratch.gs_reset(gs, rng);
         scratch.policy_bank.reset_episodes();
         for _t in 0..horizon {
             // ONE policy run_b for the whole joint step (batched mode)
             scratch.joint_act(arts, &*gs, workers, rng)?;
-            gs.step(&scratch.actions, &mut scratch.rewards, rng);
+            scratch.gs_step(gs, pool, rng)?;
             total_return += scratch.rewards.iter().map(|&r| r as f64).sum::<f64>();
         }
     }
@@ -52,26 +59,30 @@ pub fn evaluate_on_gs(
 
 /// Evaluate a scripted joint policy (hand-coded baselines, Fig. 3 dashed
 /// lines). `policy(agent, gs) -> action` may use privileged sim access.
+/// Joint staging lives in `scratch` (`GsScratch::sim_only` suffices), so
+/// the loop allocates nothing and — with shards enabled on the scratch —
+/// the scripted baselines drive the sharded GS too.
 pub fn evaluate_scripted<G: GlobalSim>(
     gs: &mut G,
     mut policy: impl FnMut(usize, &G) -> usize,
     episodes: usize,
     horizon: usize,
     rng: &mut Pcg64,
-) -> f64 {
+    scratch: &mut GsScratch,
+    pool: &WorkerPool,
+) -> Result<f64> {
     let n = gs.n_agents();
-    let mut actions = vec![0usize; n];
-    let mut rewards = vec![0.0f32; n];
+    debug_assert_eq!(scratch.actions.len(), n);
     let mut total = 0.0f64;
     for _ep in 0..episodes {
-        gs.reset(rng);
+        scratch.gs_reset(gs, rng);
         for _t in 0..horizon {
-            for (i, a) in actions.iter_mut().enumerate() {
-                *a = policy(i, gs);
+            for i in 0..n {
+                scratch.actions[i] = policy(i, gs);
             }
-            gs.step(&actions, &mut rewards, rng);
-            total += rewards.iter().map(|&r| r as f64).sum::<f64>();
+            scratch.gs_step(gs, pool, rng)?;
+            total += scratch.rewards.iter().map(|&r| r as f64).sum::<f64>();
         }
     }
-    total / (episodes * n) as f64
+    Ok(total / (episodes * n) as f64)
 }

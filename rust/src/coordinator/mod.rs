@@ -34,7 +34,7 @@ use crate::influence::AipRuntime;
 use crate::nn::NetState;
 use crate::ppo::PpoTrainer;
 use crate::runtime::{AipBank, ArtifactSet, Engine, NetSpec, PolicyBank};
-use crate::sim::{traffic, warehouse, GlobalSim, LocalSim};
+use crate::sim::{traffic, warehouse, GlobalSim, LocalSim, ShardPlan};
 use crate::util::metrics::{CurvePoint, RunLog};
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CriticalPath, PhaseTimers};
@@ -70,6 +70,10 @@ pub struct GsScratch {
     /// reference path) — see `ExperimentConfig::gs_batch`.
     pub(crate) policy_bank: PolicyBank,
     pub(crate) aip_bank: AipBank,
+    /// Sharded GS stepping (`cfg.gs_shards > 0`): the shard partition,
+    /// per-agent RNG streams, and event merge spool. `None` = the serial
+    /// reference `GlobalSim::step`.
+    pub(crate) shard: Option<ShardPlan>,
 }
 
 impl GsScratch {
@@ -91,6 +95,52 @@ impl GsScratch {
             feat_dim: spec.aip_feat,
             policy_bank: PolicyBank::new(spec, n_agents, batched),
             aip_bank: AipBank::new(spec, n_agents, batched),
+            shard: None,
+        }
+    }
+
+    /// Scratch for sim-only drivers (the scripted baselines): the joint
+    /// action/reward staging without real banks. The banks are built over
+    /// a zero-width spec and must never be forwarded.
+    pub fn sim_only(n_agents: usize) -> Self {
+        Self::new(&NetSpec::sim_only(), n_agents, false)
+    }
+
+    /// Enable sharded GS stepping: `gs_step` then drives the
+    /// `PartitionedGs` protocol over the phase pool with `shards` shards
+    /// (clamped to the agent count). `shards = 0` restores the serial
+    /// reference path.
+    pub fn enable_shards(&mut self, shards: usize) {
+        self.shard =
+            if shards == 0 { None } else { Some(ShardPlan::new(self.actions.len(), shards)) };
+    }
+
+    /// Reset the GS for a new episode; in sharded mode this also
+    /// re-derives the per-agent RNG streams from `rng` (in agent order,
+    /// so the derivation is independent of the shard count).
+    pub(crate) fn gs_reset(&mut self, gs: &mut dyn GlobalSim, rng: &mut Pcg64) {
+        gs.reset(rng);
+        if let Some(plan) = self.shard.as_mut() {
+            plan.reseed(rng);
+        }
+    }
+
+    /// One joint GS transition from `self.actions` into `self.rewards`:
+    /// the serial reference `GlobalSim::step` when sharding is off,
+    /// otherwise scatter `step_local` over `pool` + merge the boundary
+    /// events (`sim::ShardPlan::step`).
+    pub(crate) fn gs_step(
+        &mut self,
+        gs: &mut dyn GlobalSim,
+        pool: &WorkerPool,
+        rng: &mut Pcg64,
+    ) -> Result<()> {
+        match self.shard.as_mut() {
+            None => {
+                gs.step(&self.actions, &mut self.rewards, rng);
+                Ok(())
+            }
+            Some(plan) => plan.step(gs, pool, &self.actions, &mut self.rewards),
         }
     }
 
@@ -253,12 +303,13 @@ impl DialsCoordinator {
         let pool = WorkerPool::new(effective_threads(cfg.threads, cfg.n_agents()));
         let batched = gs_batch_mode(&self.arts, cfg);
         let mut scratch = GsScratch::new(&self.arts.spec, cfg.n_agents(), batched);
+        scratch.enable_shards(gs_shard_mode(gs.as_mut(), cfg));
 
         // initial evaluation point (step 0)
         let r0 = timers.time("eval", || {
             evaluate_on_gs(
                 &self.arts, gs.as_mut(), &mut workers,
-                cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch,
+                cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool,
             )
         })?;
         log.eval_curve.push(CurvePoint { step: 0, value: r0 });
@@ -270,7 +321,7 @@ impl DialsCoordinator {
                 timers.time("collect", || {
                     collect_datasets(
                         &self.arts, gs.as_mut(), &mut workers,
-                        cfg.aip_dataset, cfg.horizon, &mut rng, &mut scratch,
+                        cfg.aip_dataset, cfg.horizon, &mut rng, &mut scratch, &pool,
                     )
                 })?;
                 // CE on fresh on-policy data BEFORE retraining (Fig. 4)
@@ -310,7 +361,7 @@ impl DialsCoordinator {
             let ret = timers.time("eval", || {
                 evaluate_on_gs(
                     &self.arts, gs.as_mut(), &mut workers,
-                    cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch,
+                    cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool,
                 )
             })?;
             log.eval_curve.push(CurvePoint { step: seg.start + seg.len, value: ret });
@@ -345,7 +396,26 @@ pub(crate) fn gs_batch_mode(arts: &ArtifactSet, cfg: &ExperimentConfig) -> bool 
     batched
 }
 
-fn effective_threads(requested: usize, n_agents: usize) -> usize {
+/// Resolve the sharded-GS mode: `cfg.gs_shards` clamped to the agent
+/// count, downgraded to 0 (the serial reference path) with a notice when
+/// the simulator does not implement the `PartitionedGs` protocol.
+pub(crate) fn gs_shard_mode(gs: &mut dyn GlobalSim, cfg: &ExperimentConfig) -> usize {
+    if cfg.gs_shards == 0 {
+        return 0;
+    }
+    if gs.as_partitioned().is_none() {
+        eprintln!(
+            "[dials] gs_shards={} requested but the {} global simulator has no \
+             sharded stepping protocol; falling back to serial GS stepping",
+            cfg.gs_shards,
+            cfg.domain.name()
+        );
+        return 0;
+    }
+    cfg.gs_shards.min(cfg.n_agents())
+}
+
+pub(crate) fn effective_threads(requested: usize, n_agents: usize) -> usize {
     let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let t = if requested == 0 { hw } else { requested };
     t.clamp(1, n_agents)

@@ -21,7 +21,10 @@
 //!   table);
 //! * a panicking or erroring task surfaces as `Err` naming the failing
 //!   agent, cancels the not-yet-started remainder of the phase, and does
-//!   NOT poison the pool — the next phase runs normally.
+//!   NOT poison the pool — the next phase runs normally;
+//! * `scatter_merge` composes a parallel scatter with a serial merge
+//!   behind the phase barrier — the shape the sharded GS stepping
+//!   protocol (`sim::ShardPlan`) runs per joint step.
 //!
 //! Determinism: the pool never owns RNG state. Workers (`AgentWorker`)
 //! carry their own streams, so results are bit-identical regardless of the

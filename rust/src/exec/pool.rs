@@ -242,6 +242,22 @@ impl WorkerPool {
         Ok(self.run_map(items, task)?.seconds)
     }
 
+    /// Scatter/merge phase: run `scatter` once per item over the pool,
+    /// then — after the phase barrier, on the submitting thread — run
+    /// `merge` over all items serially and return its output. This is the
+    /// sharded-GS stepping shape (`sim::ShardPlan`): shard-local work fans
+    /// out, the deterministic merge stays serial, and the pool guarantees
+    /// every scatter task finished before `merge` observes the items.
+    pub fn scatter_merge<T, R, F, M>(&self, items: &mut [T], scatter: F, merge: M) -> Result<R>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) -> Result<()> + Sync,
+        M: FnOnce(&mut [T]) -> R,
+    {
+        self.run(items, scatter)?;
+        Ok(merge(items))
+    }
+
     /// Like `run` but also collects each task's output value.
     pub fn run_map<T, R, F>(&self, items: &mut [T], task: F) -> Result<PhaseReport<R>>
     where
@@ -483,6 +499,49 @@ mod tests {
         })
         .unwrap();
         assert_eq!(one[0], 42);
+    }
+
+    #[test]
+    fn scatter_merge_sees_all_scatter_writes() {
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut items: Vec<u64> = (0..37).collect();
+            let total = pool
+                .scatter_merge(
+                    &mut items,
+                    |i, x| {
+                        *x *= 2;
+                        assert_eq!(*x, (i as u64) * 2);
+                        Ok(())
+                    },
+                    |done| done.iter().sum::<u64>(),
+                )
+                .unwrap();
+            assert_eq!(total, (0..37u64).map(|x| x * 2).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn scatter_merge_propagates_scatter_errors() {
+        let pool = WorkerPool::new(2);
+        let mut items = vec![0u8; 16];
+        let mut merged = false;
+        let err = pool
+            .scatter_merge(
+                &mut items,
+                |i, _| {
+                    if i == 3 {
+                        anyhow::bail!("shard down");
+                    }
+                    Ok(())
+                },
+                |_| {
+                    merged = true;
+                },
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("task 3"));
+        assert!(!merged, "merge must not run after a failed scatter");
     }
 
     #[test]

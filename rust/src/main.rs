@@ -132,6 +132,8 @@ train:
   --aip-freq F            AIP retrain period   --aip-dataset N
   --eval-every N          --eval-episodes N    --horizon N
   --seed N  --threads N   --artifacts DIR      --out curve.csv
+  --gs-batch true|false   batched joint-step inference (default true)
+  --gs-shards N           parallel GS dynamics shards (0 = serial)
   --save-ckpt DIR          save nets at end     --load-ckpt DIR resume
 eval:
   --domain D --grid-side N --episodes N --horizon N  (scripted baseline)

@@ -137,6 +137,34 @@ impl NetSpec {
         Ok(())
     }
 
+    /// A zero-width spec for scratches that only drive the simulator
+    /// (the scripted baselines): banks built over it are placeholders
+    /// and must never be forwarded.
+    pub fn sim_only() -> Self {
+        NetSpec {
+            domain: "sim-only".to_string(),
+            obs_dim: 0,
+            act_dim: 0,
+            policy_recurrent: false,
+            policy_hstate: 0,
+            policy_params: 0,
+            aip_feat: 0,
+            aip_recurrent: false,
+            aip_hstate: 0,
+            aip_params: 0,
+            aip_heads: 0,
+            aip_cls: 0,
+            u_dim: 0,
+            minibatch: 0,
+            aip_batch: 0,
+            aip_seq: 0,
+            policy_h1: 0,
+            policy_h2: 0,
+            aip_hid: 0,
+            batch_n: 0,
+        }
+    }
+
     /// Policy layer dims, when the `.meta` declares them (new artifacts).
     pub fn policy_dims(&self) -> Option<PolicyDims> {
         if self.policy_h1 == 0 || self.policy_h2 == 0 {

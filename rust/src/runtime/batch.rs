@@ -158,6 +158,14 @@ pub struct PolicyBank {
     in_h: Tensor,
     row_obs: Tensor,
     row_h: Tensor,
+    /// Device slots reused across joint steps (re-staged in place on the
+    /// native backend) and the persistent packed-output download buffer —
+    /// together they make the steady-state forward allocation-free.
+    dev_obs: Option<DeviceTensor>,
+    dev_h: Option<DeviceTensor>,
+    dev_row_obs: Option<DeviceTensor>,
+    dev_row_h: Option<DeviceTensor>,
+    packed: Tensor,
     /// Sampling scratch (log-probs / probs).
     logp_buf: Vec<f32>,
     prob_buf: Vec<f32>,
@@ -183,6 +191,11 @@ impl PolicyBank {
             in_h: Tensor::zeros(&[n, spec.policy_hstate]),
             row_obs: Tensor::zeros(&[1, spec.obs_dim]),
             row_h: Tensor::zeros(&[1, spec.policy_hstate]),
+            dev_obs: None,
+            dev_h: None,
+            dev_row_obs: None,
+            dev_row_h: None,
+            packed: Tensor::default(),
             logp_buf: Vec::with_capacity(spec.act_dim),
             prob_buf: Vec::with_capacity(spec.act_dim),
             n,
@@ -225,45 +238,56 @@ impl PolicyBank {
         self.values[i]
     }
 
-    /// Unpack one agent's `[logits | value | h']` row into the bank
-    /// scratch, advancing the recurrent state iff `advance`.
-    fn scatter_row(&mut self, i: usize, packed: &[f32], advance: bool) {
+    /// Unpack agent `i`'s `[logits | value | h']` row starting at
+    /// `row_off` in the persistent packed-output buffer, advancing the
+    /// recurrent state iff `advance`.
+    fn scatter_packed_row(&mut self, i: usize, row_off: usize, advance: bool) {
         let (a, h) = (self.act_dim, self.h_dim);
-        debug_assert_eq!(packed.len(), a + 1 + h);
+        debug_assert!(self.packed.len() >= row_off + a + 1 + h);
         self.h_before[i * h..(i + 1) * h].copy_from_slice(&self.hstate[i * h..(i + 1) * h]);
-        self.logits[i * a..(i + 1) * a].copy_from_slice(&packed[..a]);
-        self.values[i] = packed[a];
+        self.logits[i * a..(i + 1) * a]
+            .copy_from_slice(&self.packed.data[row_off..row_off + a]);
+        self.values[i] = self.packed.data[row_off + a];
         if advance {
-            self.hstate[i * h..(i + 1) * h].copy_from_slice(&packed[a + 1..]);
+            self.hstate[i * h..(i + 1) * h]
+                .copy_from_slice(&self.packed.data[row_off + a + 1..row_off + a + 1 + h]);
         }
     }
 
     /// Forward all N rows: ONE `run_b` in batched mode, N B=1 calls
     /// otherwise. `obs` is the joint observation block `[n × obs_dim]`.
+    /// Inputs stage through bank-held device slots and the packed output
+    /// downloads into the bank's persistent buffer (`run_b_into`), so the
+    /// steady-state joint step performs no heap allocation on the native
+    /// backend.
     fn forward(&mut self, arts: &ArtifactSet, obs: &[f32], advance: bool) -> Result<()> {
         ensure!(
             obs.len() == self.n * self.obs_dim,
             "joint obs has {} floats, want n×obs_dim = {}",
             obs.len(), self.n * self.obs_dim
         );
+        let w = self.act_dim + 1 + self.h_dim;
         if self.batched {
             check_lowered_batch(arts.spec.batch_n, self.n)?;
             self.in_obs.data.copy_from_slice(obs);
             self.in_h.data.copy_from_slice(&self.hstate);
-            let obs_t = arts.engine.upload(&self.in_obs)?;
-            let h_t = arts.engine.upload(&self.in_h)?;
-            let exec: &Exec = arts.policy_step_batched()?;
-            let p = self.bank.params(&arts.engine)?;
-            let outs = exec.run_b(&[p, &obs_t, &h_t])?;
-            let packed = outs[0].to_tensor()?;
-            let w = self.act_dim + 1 + self.h_dim;
+            arts.engine.upload_to(&self.in_obs, &mut self.dev_obs)?;
+            arts.engine.upload_to(&self.in_h, &mut self.dev_h)?;
+            {
+                let exec: &Exec = arts.policy_step_batched()?;
+                let p = self.bank.params(&arts.engine)?;
+                exec.run_b_into(
+                    &[p, self.dev_obs.as_ref().expect("staged"), self.dev_h.as_ref().expect("staged")],
+                    &mut self.packed,
+                )?;
+            }
             ensure!(
-                packed.len() == self.n * w,
+                self.packed.len() == self.n * w,
                 "batched policy output has {} floats, want n×(A+1+H) = {}",
-                packed.len(), self.n * w
+                self.packed.len(), self.n * w
             );
             for i in 0..self.n {
-                self.scatter_row(i, &packed.data[i * w..(i + 1) * w], advance);
+                self.scatter_packed_row(i, i * w, advance);
             }
         } else {
             for i in 0..self.n {
@@ -273,17 +297,25 @@ impl PolicyBank {
                 self.row_h
                     .data
                     .copy_from_slice(&self.hstate[i * self.h_dim..(i + 1) * self.h_dim]);
-                let obs_t = arts.engine.upload(&self.row_obs)?;
-                let h_t = arts.engine.upload(&self.row_h)?;
-                let p = self.bank.row(i)?;
-                let outs = arts.policy_step.run_b(&[p, &obs_t, &h_t])?;
-                let packed = outs[0].to_tensor()?;
+                arts.engine.upload_to(&self.row_obs, &mut self.dev_row_obs)?;
+                arts.engine.upload_to(&self.row_h, &mut self.dev_row_h)?;
+                {
+                    let p = self.bank.row(i)?;
+                    arts.policy_step.run_b_into(
+                        &[
+                            p,
+                            self.dev_row_obs.as_ref().expect("staged"),
+                            self.dev_row_h.as_ref().expect("staged"),
+                        ],
+                        &mut self.packed,
+                    )?;
+                }
                 ensure!(
-                    packed.len() == self.act_dim + 1 + self.h_dim,
+                    self.packed.len() == w,
                     "policy output has {} floats, want A+1+H = {}",
-                    packed.len(), self.act_dim + 1 + self.h_dim
+                    self.packed.len(), w
                 );
-                self.scatter_row(i, &packed.data, advance);
+                self.scatter_packed_row(i, 0, advance);
             }
         }
         Ok(())
@@ -345,6 +377,13 @@ pub struct AipBank {
     in_h: Tensor,
     row_feat: Tensor,
     row_h: Tensor,
+    /// Reusable device slots + packed-output download buffer (see
+    /// `PolicyBank`): zero steady-state allocation per joint step.
+    dev_feat: Option<DeviceTensor>,
+    dev_h: Option<DeviceTensor>,
+    dev_row_feat: Option<DeviceTensor>,
+    dev_row_h: Option<DeviceTensor>,
+    packed: Tensor,
     n: usize,
     feat_dim: usize,
     h_dim: usize,
@@ -362,6 +401,11 @@ impl AipBank {
             in_h: Tensor::zeros(&[n, spec.aip_hstate]),
             row_feat: Tensor::zeros(&[1, spec.aip_feat]),
             row_h: Tensor::zeros(&[1, spec.aip_hstate]),
+            dev_feat: None,
+            dev_h: None,
+            dev_row_feat: None,
+            dev_row_h: None,
+            packed: Tensor::default(),
             n,
             feat_dim: spec.aip_feat,
             h_dim: spec.aip_hstate,
@@ -412,26 +456,36 @@ impl AipBank {
             "probs_out has {} floats, want n×u_dim = {}",
             probs_out.len(), self.n * u
         );
+        let w = u + self.h_dim;
         if self.batched {
             check_lowered_batch(arts.spec.batch_n, self.n)?;
             self.in_feat.data.copy_from_slice(feats);
             self.in_h.data.copy_from_slice(&self.hstate);
-            let feat_t = arts.engine.upload(&self.in_feat)?;
-            let h_t = arts.engine.upload(&self.in_h)?;
-            let exec = arts.aip_forward_batched()?;
-            let p = self.bank.params(&arts.engine)?;
-            let outs = exec.run_b(&[p, &feat_t, &h_t])?;
-            let packed = outs[0].to_tensor()?;
-            let w = u + self.h_dim;
+            arts.engine.upload_to(&self.in_feat, &mut self.dev_feat)?;
+            arts.engine.upload_to(&self.in_h, &mut self.dev_h)?;
+            {
+                let exec = arts.aip_forward_batched()?;
+                let p = self.bank.params(&arts.engine)?;
+                exec.run_b_into(
+                    &[
+                        p,
+                        self.dev_feat.as_ref().expect("staged"),
+                        self.dev_h.as_ref().expect("staged"),
+                    ],
+                    &mut self.packed,
+                )?;
+            }
             ensure!(
-                packed.len() == self.n * w,
+                self.packed.len() == self.n * w,
                 "batched AIP output has {} floats, want n×(U+H) = {}",
-                packed.len(), self.n * w
+                self.packed.len(), self.n * w
             );
             for i in 0..self.n {
-                let row = &packed.data[i * w..(i + 1) * w];
-                probs_out[i * u..(i + 1) * u].copy_from_slice(&row[..u]);
-                self.hstate[i * self.h_dim..(i + 1) * self.h_dim].copy_from_slice(&row[u..]);
+                let row = i * w;
+                probs_out[i * u..(i + 1) * u]
+                    .copy_from_slice(&self.packed.data[row..row + u]);
+                self.hstate[i * self.h_dim..(i + 1) * self.h_dim]
+                    .copy_from_slice(&self.packed.data[row + u..row + w]);
             }
         } else {
             for i in 0..self.n {
@@ -441,19 +495,27 @@ impl AipBank {
                 self.row_h
                     .data
                     .copy_from_slice(&self.hstate[i * self.h_dim..(i + 1) * self.h_dim]);
-                let feat_t = arts.engine.upload(&self.row_feat)?;
-                let h_t = arts.engine.upload(&self.row_h)?;
-                let p = self.bank.row(i)?;
-                let outs = arts.aip_forward.run_b(&[p, &feat_t, &h_t])?;
-                let packed = outs[0].to_tensor()?;
+                arts.engine.upload_to(&self.row_feat, &mut self.dev_row_feat)?;
+                arts.engine.upload_to(&self.row_h, &mut self.dev_row_h)?;
+                {
+                    let p = self.bank.row(i)?;
+                    arts.aip_forward.run_b_into(
+                        &[
+                            p,
+                            self.dev_row_feat.as_ref().expect("staged"),
+                            self.dev_row_h.as_ref().expect("staged"),
+                        ],
+                        &mut self.packed,
+                    )?;
+                }
                 ensure!(
-                    packed.len() == u + self.h_dim,
+                    self.packed.len() == w,
                     "AIP output has {} floats, want U+H = {}",
-                    packed.len(), u + self.h_dim
+                    self.packed.len(), w
                 );
-                probs_out[i * u..(i + 1) * u].copy_from_slice(&packed.data[..u]);
+                probs_out[i * u..(i + 1) * u].copy_from_slice(&self.packed.data[..u]);
                 self.hstate[i * self.h_dim..(i + 1) * self.h_dim]
-                    .copy_from_slice(&packed.data[u..]);
+                    .copy_from_slice(&self.packed.data[u..w]);
             }
         }
         Ok(())

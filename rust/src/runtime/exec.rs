@@ -61,6 +61,14 @@ impl Engine {
         Ok(DeviceTensor { buf: ManuallyDrop::new(buf) })
     }
 
+    /// Re-stage `t` into a device slot (API parity with the native
+    /// backend's in-place reuse; PJRT buffers are immutable, so this
+    /// backend re-uploads).
+    pub fn upload_to(&self, t: &Tensor, slot: &mut Option<DeviceTensor>) -> Result<()> {
+        *slot = Some(self.upload(t)?);
+        Ok(())
+    }
+
     /// Load an HLO-text artifact and compile it for this client.
     pub fn load_hlo(&self, path: &Path) -> Result<Exec> {
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
@@ -202,6 +210,20 @@ impl Exec {
             .into_iter()
             .map(|buf| DeviceTensor { buf: ManuallyDrop::new(buf) })
             .collect())
+    }
+
+    /// Execute and download the single packed output into a caller-owned
+    /// host tensor (API parity with the native backend's allocation-free
+    /// path; the PJRT download itself still allocates internally).
+    pub fn run_b_into(&self, inputs: &[&DeviceTensor], out: &mut Tensor) -> Result<()> {
+        let mut outs = self.run_b(inputs)?;
+        anyhow::ensure!(!outs.is_empty(), "{}: executable produced no outputs", self.name);
+        let t = outs.swap_remove(0).to_tensor()?;
+        out.dims.clear();
+        out.dims.extend_from_slice(&t.dims);
+        out.data.clear();
+        out.data.extend_from_slice(&t.data);
+        Ok(())
     }
 }
 

@@ -54,6 +54,22 @@ impl Engine {
         Ok(DeviceTensor { host: t.clone() })
     }
 
+    /// Re-stage `t` into an existing device slot, reusing the slot's
+    /// buffers (the device IS the host here, so this is an in-place copy
+    /// — zero steady-state allocation). Creates the slot on first use.
+    pub fn upload_to(&self, t: &Tensor, slot: &mut Option<DeviceTensor>) -> Result<()> {
+        match slot {
+            Some(d) => {
+                d.host.dims.clear();
+                d.host.dims.extend_from_slice(&t.dims);
+                d.host.data.clear();
+                d.host.data.extend_from_slice(&t.data);
+            }
+            None => *slot = Some(self.upload(t)?),
+        }
+        Ok(())
+    }
+
     /// Load an HLO-text artifact. Presence and readability are checked so
     /// interface drift still fails loudly at startup; execution requires a
     /// native binding (`Exec::bind_policy` / `bind_aip`) or the `xla`
@@ -137,8 +153,11 @@ impl Exec {
     /// Shared compute path. Inputs `(params, x, h)`: a rank-1 `[P]`
     /// parameter tensor selects the B=1 packed output `[W]`; a rank-2
     /// `[N, P]` stack selects the batched output `[N, W]` (N = 1 stays
-    /// rank-2, mirroring the lowered `_b` artifacts).
-    fn compute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    /// rank-2, mirroring the lowered `_b` artifacts). Writes into the
+    /// caller's `out`, reusing its buffers — the hot loops hold one
+    /// packed-output tensor per bank, so steady-state forwards allocate
+    /// nothing on this backend.
+    fn compute_into(&self, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
         let Some(kind) = &self.net else {
             bail!(
                 "cannot execute artifact {:?}: no native executor is bound for it \
@@ -168,11 +187,13 @@ impl Exec {
              (P={p}, in={in_dim}, H={h_dim})",
             self.name, params.dims, x.dims, h.dims
         );
-        let mut out = if batched {
-            Tensor::zeros(&[n, out_w])
-        } else {
-            Tensor::zeros(&[out_w])
-        };
+        out.dims.clear();
+        if batched {
+            out.dims.push(n);
+        }
+        out.dims.push(out_w);
+        out.data.clear();
+        out.data.resize(n * out_w, 0.0);
         FWD_SCRATCH.with(|cell| {
             let mut s = cell.borrow_mut();
             match kind {
@@ -191,23 +212,38 @@ impl Exec {
             }
         });
         self.calls.fetch_add(1, Ordering::Relaxed);
-        Ok(vec![out])
+        Ok(())
     }
 
     /// Execute with host tensors, returning host tensors (simple path).
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let refs: Vec<&Tensor> = inputs.iter().collect();
-        self.compute(&refs)
+        let mut out = Tensor::default();
+        self.compute_into(&refs, &mut out)?;
+        Ok(vec![out])
     }
 
     /// Execute with device buffers, returning device buffers (hot path).
     pub fn run_b(&self, inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>> {
         let refs: Vec<&Tensor> = inputs.iter().map(|t| &t.host).collect();
-        Ok(self
-            .compute(&refs)?
-            .into_iter()
-            .map(|host| DeviceTensor { host })
-            .collect())
+        let mut host = Tensor::default();
+        self.compute_into(&refs, &mut host)?;
+        Ok(vec![DeviceTensor { host }])
+    }
+
+    /// Execute and download the single packed output into a caller-owned
+    /// host tensor, reusing its buffers — the run_b output-reuse lever:
+    /// one bank-held `out` makes the per-joint-step forward allocation-free
+    /// on this backend.
+    pub fn run_b_into(&self, inputs: &[&DeviceTensor], out: &mut Tensor) -> Result<()> {
+        ensure!(
+            inputs.len() == 3,
+            "{}: expected (params, input, h), got {} inputs",
+            self.name,
+            inputs.len()
+        );
+        let refs = [&inputs[0].host, &inputs[1].host, &inputs[2].host];
+        self.compute_into(&refs, out)
     }
 }
 
@@ -288,6 +324,41 @@ mod tests {
         assert!(exec
             .run(&[Tensor::zeros(&[dims.param_count()]), bad, Tensor::zeros(&[1, 1])])
             .is_err());
+    }
+
+    #[test]
+    fn run_b_into_reuses_the_output_buffer_and_counts_calls() {
+        let dims = PolicyDims { obs: 3, act: 2, recurrent: false, h1: 4, h2: 4 };
+        let mut exec = fake_exec("pol_into");
+        exec.bind_policy(dims, dims.param_count()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let p = engine.upload(&Tensor::zeros(&[dims.param_count()])).unwrap();
+        let obs = engine.upload(&Tensor::new(vec![1, 3], vec![0.1, 0.2, 0.3])).unwrap();
+        let h = engine.upload(&Tensor::zeros(&[1, 1])).unwrap();
+        let mut out = Tensor::default();
+        exec.run_b_into(&[&p, &obs, &h], &mut out).unwrap();
+        assert_eq!(out.dims, vec![dims.packed_out()]);
+        let cap = out.data.capacity();
+        let first = out.data.clone();
+        // same inputs -> bit-identical output, no buffer growth
+        exec.run_b_into(&[&p, &obs, &h], &mut out).unwrap();
+        assert_eq!(out.data, first);
+        assert_eq!(out.data.capacity(), cap, "reused buffer must not regrow");
+        assert_eq!(exec.call_count(), 2);
+        // wrong arity is an error
+        assert!(exec.run_b_into(&[&p, &obs], &mut out).is_err());
+    }
+
+    #[test]
+    fn upload_to_reuses_the_slot() {
+        let engine = Engine::cpu().unwrap();
+        let mut slot: Option<DeviceTensor> = None;
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        engine.upload_to(&a, &mut slot).unwrap();
+        assert_eq!(slot.as_ref().unwrap().to_tensor().unwrap(), a);
+        let b = Tensor::new(vec![2, 2], vec![9.0, 8.0, 7.0, 6.0]);
+        engine.upload_to(&b, &mut slot).unwrap();
+        assert_eq!(slot.as_ref().unwrap().to_tensor().unwrap(), b);
     }
 
     #[test]

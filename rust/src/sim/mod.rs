@@ -11,8 +11,11 @@
 //! interface constants mirror `python/compile/envspec.py`; the Rust loader
 //! cross-checks them against each artifact's `.meta` file at startup.
 
+pub mod shard;
 pub mod traffic;
 pub mod warehouse;
+
+pub use shard::{BoundaryEvent, ShardPlan, ShardRange, ShardSlots};
 
 use crate::util::rng::Pcg64;
 
@@ -55,6 +58,51 @@ pub trait GlobalSim: Send {
     /// Influence label for agent `i` realised during the last `step`.
     /// Traffic: 4 × {0,1}. Warehouse: 4 × one-hot(4) flattened.
     fn influence_label(&self, agent: usize, out: &mut [f32]);
+
+    /// The sharded stepping protocol of this simulator, if it implements
+    /// one. The coordinator's `cfg.gs_shards` path auto-falls back to the
+    /// serial `step` when this returns `None`.
+    fn as_partitioned(&mut self) -> Option<&mut dyn PartitionedGs> {
+        None
+    }
+}
+
+/// The sharded global-transition protocol (see [`shard`] module docs):
+/// a parallel shard-local phase plus a cheap deterministic merge. Driven
+/// by [`ShardPlan::step`], which fans `step_local` out on the persistent
+/// worker pool, gathers the emitted [`BoundaryEvent`]s, sorts them by
+/// [`BoundaryEvent::key`], and applies them serially.
+pub trait PartitionedGs: GlobalSim + Sync {
+    /// Advance the shard `[shard.start, shard.end)` one tick using only
+    /// that shard's state: purely local dynamics run to completion, every
+    /// cross-shard effect is appended to `events_out`, and the shard's
+    /// locally-determined reward components land in `rewards_out` (one
+    /// slot per owned agent; both current domains finalise rewards in the
+    /// merge and write zeros here). `rngs` holds the owned agents' PCG64
+    /// streams in range order — draws must come only from the stream of
+    /// the agent they concern, which is what makes the trajectory
+    /// independent of the shard partition.
+    ///
+    /// # Safety
+    ///
+    /// Mutates the shard's per-agent state through `&self`. The caller
+    /// must guarantee that concurrent `step_local` calls hold DISJOINT
+    /// shard ranges and that no other access to the simulator (including
+    /// `observe`/`step`/`apply_boundary`) overlaps the scatter phase.
+    /// [`ShardPlan::step`] upholds this.
+    unsafe fn step_local(
+        &self,
+        shard: ShardRange,
+        actions: &[usize],
+        rewards_out: &mut [f32],
+        events_out: &mut Vec<BoundaryEvent>,
+        rngs: &mut [Pcg64],
+    );
+
+    /// Serially apply the merged boundary events (pre-sorted by
+    /// [`BoundaryEvent::key`]) and finalise the joint `rewards` (len =
+    /// `n_agents`). Runs after every shard's `step_local` completed.
+    fn apply_boundary(&mut self, events: &[BoundaryEvent], rewards: &mut [f32]);
 }
 
 /// A local simulator of one agent's region, driven by sampled influence

@@ -1,0 +1,348 @@
+//! Sharded global-simulator stepping (the `PartitionedGs` protocol).
+//!
+//! The GS-driven phases (evaluation, influence data collection, the GS
+//! baseline) used to advance the global simulator with one serial
+//! `GlobalSim::step` — the last serial phase on the critical path after
+//! batched inference landed. The paper's core structural claim is that
+//! large networked systems decompose into local components coupled only
+//! through their boundaries (and DARL1N, Wang et al. 2022, shows the same
+//! one-hop decomposition makes the *dynamics* step parallelisable), so the
+//! joint transition is split into two phases:
+//!
+//! 1. **scatter** — [`PartitionedGs::step_local`] advances a contiguous
+//!    agent-row shard using only that shard's state, emitting every
+//!    cross-shard effect as a typed [`BoundaryEvent`]. Shards run
+//!    concurrently on the persistent [`WorkerPool`].
+//! 2. **merge** — the events are sorted by [`BoundaryEvent::key`] (a total
+//!    order independent of which shard emitted what, or when) and applied
+//!    serially by [`PartitionedGs::apply_boundary`], which also finalises
+//!    the rewards that depend on boundary outcomes.
+//!
+//! **Determinism.** Randomness is drawn from per-AGENT PCG64 streams,
+//! re-derived from the episode RNG in agent order at every reset
+//! ([`ShardPlan::reseed`]). A shard only ever consumes its own agents'
+//! streams, and the merge order is a pure function of the event set, so
+//! the trajectory is bit-identical for ANY shard count and ANY pool width
+//! or steal order (`tests/shard_equivalence.rs` pins this). The sharded
+//! tick is a *defined variant* of the serial `GlobalSim::step` (same
+//! dynamics, different RNG accounting and entry timing); `gs_shards = 0`
+//! keeps the original serial reference path.
+
+use std::cell::UnsafeCell;
+
+use anyhow::{anyhow, Result};
+
+use crate::exec::WorkerPool;
+use crate::util::rng::Pcg64;
+
+use super::{GlobalSim, PartitionedGs};
+
+/// A contiguous agent-row range `[start, end)` owned by one shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl ShardRange {
+    pub fn len(self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A cross-shard effect of one shard-local step, applied during the merge.
+///
+/// Events carry everything the merge needs; they never hold references
+/// into simulator state, so shards can emit them without synchronisation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundaryEvent {
+    /// Traffic: the car at `src`'s stop line on lane `src_lane` crosses
+    /// toward `agent`'s incoming lane `lane` (applied iff the entry cell
+    /// is free at merge time).
+    TrafficCross { agent: usize, lane: usize, src: usize, src_lane: usize },
+    /// Traffic: the Bernoulli boundary inflow fired for `agent`'s lane.
+    TrafficInflow { agent: usize, lane: usize },
+    /// Warehouse: the item-spawn draw fired for `agent`'s owned shelf
+    /// slot (applied iff the cell is still empty after collection).
+    WarehouseSpawn { agent: usize, slot: usize },
+}
+
+impl BoundaryEvent {
+    /// Total merge order: `(class, agent, lane, seq)`. The leading class
+    /// separates the merge sub-phases (crossings before inflows before
+    /// spawns — the order the serial tick applies them); within a class
+    /// events sort by target `(agent, lane)`, with the source pair as the
+    /// sequence tiebreaker for same-target crossings. The order is a pure
+    /// function of the event itself, never of the emitting shard.
+    pub fn key(&self) -> (u8, usize, usize, usize, usize) {
+        match *self {
+            BoundaryEvent::TrafficCross { agent, lane, src, src_lane } => {
+                (0, agent, lane, src, src_lane)
+            }
+            BoundaryEvent::TrafficInflow { agent, lane } => (1, agent, lane, 0, 0),
+            BoundaryEvent::WarehouseSpawn { agent, slot } => (2, agent, slot, 0, 0),
+        }
+    }
+}
+
+/// Per-agent state slots that shards mutate concurrently during the
+/// scatter phase.
+///
+/// The serial surfaces are entirely safe: `get` hands out shared reads and
+/// `as_mut_slice` requires `&mut self`. The one unsafe entry point is
+/// [`ShardSlots::range_mut`], which the scatter phase uses to carve the
+/// slots into disjoint mutable sub-slices through a shared reference —
+/// the same stack-held-phase discipline `exec::pool` uses.
+pub struct ShardSlots<T> {
+    slots: Vec<UnsafeCell<T>>,
+}
+
+// SAFETY: the cells are plain owned data; cross-thread access is governed
+// by the `range_mut` contract (disjoint ranges, no overlapping reads).
+unsafe impl<T: Send> Sync for ShardSlots<T> {}
+
+impl<T> ShardSlots<T> {
+    pub fn new(v: Vec<T>) -> Self {
+        ShardSlots { slots: v.into_iter().map(UnsafeCell::new).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Shared read of slot `i`. Sound on its own; unsafe `range_mut`
+    /// callers must not overlap it (see the contract there).
+    pub fn get(&self, i: usize) -> &T {
+        // SAFETY: shared reads alias freely; mutation only happens through
+        // `as_mut_slice` (exclusive `&mut self`) or `range_mut`, whose
+        // caller contract forbids concurrent `get` on the same slots.
+        unsafe { &*self.slots[i].get() }
+    }
+
+    /// Exclusive view of every slot (the serial step / reset paths).
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        let n = self.slots.len();
+        let p = self.slots.as_mut_ptr() as *mut T;
+        // SAFETY: `&mut self` guarantees exclusivity; `UnsafeCell<T>` is
+        // `repr(transparent)`, so the buffer of cells IS a buffer of `T`s.
+        unsafe { std::slice::from_raw_parts_mut(p, n) }
+    }
+
+    /// Mutable view of `r` through a SHARED reference — the scatter-phase
+    /// entry point.
+    ///
+    /// # Safety
+    ///
+    /// For the duration of the returned borrow, the caller must guarantee
+    /// that (a) no other `range_mut` view overlaps `r` (concurrent shards
+    /// must hold disjoint ranges) and (b) no `get`/`as_mut_slice` access
+    /// touches slots in `r`. The `ShardPlan` driver provides this: ranges
+    /// partition the agents, and the pool's phase barrier ends every view
+    /// before serial code resumes.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, r: ShardRange) -> &mut [T] {
+        debug_assert!(r.start <= r.end && r.end <= self.slots.len());
+        if r.is_empty() {
+            return &mut [];
+        }
+        let p = UnsafeCell::raw_get(self.slots.as_ptr().add(r.start));
+        std::slice::from_raw_parts_mut(p, r.len())
+    }
+}
+
+/// Per-shard scatter scratch: the shard's range, its slice of the joint
+/// reward buffer, its event spool, and its agents' RNG streams. Fully
+/// owned, so the pool can hand one to each worker with no borrows into
+/// the plan.
+struct ShardScratch {
+    range: ShardRange,
+    rewards: Vec<f32>,
+    events: Vec<BoundaryEvent>,
+    rngs: Vec<Pcg64>,
+}
+
+/// The sharded-stepping driver: owns the shard partition, the per-agent
+/// RNG streams, and the merge spool. One per `GsScratch`; all buffers are
+/// reused across steps, so steady-state sharded stepping allocates nothing
+/// beyond the pool's per-phase bookkeeping.
+pub struct ShardPlan {
+    shards: Vec<ShardScratch>,
+    merged: Vec<BoundaryEvent>,
+    n_agents: usize,
+}
+
+impl ShardPlan {
+    /// Partition `n_agents` into `shards` contiguous near-equal ranges
+    /// (`shards` is clamped to `[1, n_agents]`).
+    pub fn new(n_agents: usize, shards: usize) -> Self {
+        assert!(n_agents > 0, "ShardPlan over zero agents");
+        let s = shards.clamp(1, n_agents);
+        let (base, extra) = (n_agents / s, n_agents % s);
+        let mut out = Vec::with_capacity(s);
+        let mut start = 0usize;
+        for k in 0..s {
+            let len = base + usize::from(k < extra);
+            out.push(ShardScratch {
+                range: ShardRange { start, end: start + len },
+                rewards: vec![0.0; len],
+                events: Vec::new(),
+                rngs: (0..len).map(|_| Pcg64::new(0, 0)).collect(),
+            });
+            start += len;
+        }
+        debug_assert_eq!(start, n_agents);
+        ShardPlan { shards: out, merged: Vec::new(), n_agents }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    /// Re-derive the per-AGENT RNG streams from the episode RNG. Call
+    /// right after `GlobalSim::reset` at every episode boundary. The
+    /// derivation walks agents in global order, so the streams — and hence
+    /// the whole trajectory — are independent of the shard count.
+    pub fn reseed(&mut self, rng: &mut Pcg64) {
+        for sh in self.shards.iter_mut() {
+            for (k, r) in sh.rngs.iter_mut().enumerate() {
+                *r = rng.split((sh.range.start + k) as u64 + 1);
+            }
+        }
+    }
+
+    /// One sharded joint transition: scatter `step_local` over the pool,
+    /// gather + sort the boundary events, then merge serially.
+    pub fn step(
+        &mut self,
+        gs: &mut dyn GlobalSim,
+        pool: &WorkerPool,
+        actions: &[usize],
+        rewards: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(actions.len(), self.n_agents);
+        debug_assert_eq!(rewards.len(), self.n_agents);
+        let part: &mut dyn PartitionedGs = gs.as_partitioned().ok_or_else(|| {
+            anyhow!("this global simulator does not implement the sharded stepping protocol")
+        })?;
+        let shards: &mut [ShardScratch] = self.shards.as_mut_slice();
+        let merged = &mut self.merged;
+        {
+            let shared: &dyn PartitionedGs = &*part;
+            pool.scatter_merge(
+                shards,
+                |_k, sh| {
+                    // Cleared here (not in merge) so events from a step
+                    // whose scatter phase failed mid-way can never leak
+                    // into a later step's merge.
+                    sh.events.clear();
+                    // SAFETY: the plan's ranges partition the agents
+                    // (disjoint by construction), each scratch is handed to
+                    // exactly one pool task, and the phase barrier ends all
+                    // shard views before serial code resumes.
+                    unsafe {
+                        shared.step_local(
+                            sh.range,
+                            actions,
+                            &mut sh.rewards,
+                            &mut sh.events,
+                            &mut sh.rngs,
+                        )
+                    };
+                    Ok(())
+                },
+                |done| {
+                    merged.clear();
+                    for sh in done.iter() {
+                        rewards[sh.range.start..sh.range.end].copy_from_slice(&sh.rewards);
+                        merged.extend_from_slice(&sh.events);
+                    }
+                    merged.sort_unstable_by_key(|e| e.key());
+                },
+            )?;
+        }
+        part.apply_boundary(merged, rewards);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_partitions_agents_contiguously() {
+        for (n, s) in [(9usize, 1usize), (9, 2), (9, 3), (9, 8), (9, 100), (1, 4), (16, 16)] {
+            let plan = ShardPlan::new(n, s);
+            assert!(plan.n_shards() <= n.max(1));
+            assert!(plan.n_shards() >= 1);
+            let mut pos = 0usize;
+            for sh in &plan.shards {
+                assert_eq!(sh.range.start, pos, "n={n} s={s}");
+                assert!(!sh.range.is_empty(), "empty shard for n={n} s={s}");
+                assert_eq!(sh.rewards.len(), sh.range.len());
+                assert_eq!(sh.rngs.len(), sh.range.len());
+                pos = sh.range.end;
+            }
+            assert_eq!(pos, n);
+        }
+    }
+
+    #[test]
+    fn reseed_is_partition_independent() {
+        // The k-th agent's stream must not depend on the shard count.
+        let streams = |shards: usize| {
+            let mut plan = ShardPlan::new(7, shards);
+            let mut rng = Pcg64::seed(42);
+            plan.reseed(&mut rng);
+            plan.shards
+                .iter()
+                .flat_map(|sh| sh.rngs.iter().cloned())
+                .map(|mut r| r.next_u64())
+                .collect::<Vec<_>>()
+        };
+        let one = streams(1);
+        assert_eq!(one.len(), 7);
+        for s in [2usize, 3, 7] {
+            assert_eq!(one, streams(s), "streams changed with {s} shards");
+        }
+    }
+
+    #[test]
+    fn event_key_orders_classes_then_targets() {
+        let cross = BoundaryEvent::TrafficCross { agent: 0, lane: 3, src: 9, src_lane: 2 };
+        let inflow = BoundaryEvent::TrafficInflow { agent: 0, lane: 0 };
+        let spawn = BoundaryEvent::WarehouseSpawn { agent: 0, slot: 0 };
+        assert!(cross.key() < inflow.key(), "crossings merge before inflows");
+        assert!(inflow.key() < spawn.key());
+        let c2 = BoundaryEvent::TrafficCross { agent: 0, lane: 3, src: 4, src_lane: 1 };
+        assert!(c2.key() < cross.key(), "same target: source index breaks the tie");
+    }
+
+    #[test]
+    fn shard_slots_views() {
+        let mut slots = ShardSlots::new(vec![1u32, 2, 3, 4, 5]);
+        assert_eq!(slots.len(), 5);
+        assert!(!slots.is_empty());
+        assert_eq!(*slots.get(2), 3);
+        slots.as_mut_slice()[2] = 30;
+        assert_eq!(*slots.get(2), 30);
+        // SAFETY: no other view exists in this test.
+        let left = unsafe { slots.range_mut(ShardRange { start: 0, end: 2 }) };
+        left[0] = 10;
+        assert_eq!(*slots.get(0), 10);
+        let empty = unsafe { slots.range_mut(ShardRange { start: 3, end: 3 }) };
+        assert!(empty.is_empty());
+    }
+}

@@ -52,6 +52,15 @@ impl Segment {
         self.fresh[0] = true;
     }
 
+    /// Insert a car at cell 0 WITHOUT the fresh mark. Used by the sharded
+    /// merge phase, which runs after this tick's `advance` already
+    /// cleared the fresh flags — a fresh mark here would freeze the car
+    /// through the NEXT tick's advance instead of this one's.
+    pub fn push_entry_merged(&mut self) {
+        debug_assert!(!self.occ[0]);
+        self.occ[0] = true;
+    }
+
     /// Advance non-fresh cars one cell toward the stop line; returns the
     /// number of cars that moved. Call once per tick, after crossings and
     /// entries; clears the fresh marks at the end.

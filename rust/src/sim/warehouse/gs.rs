@@ -9,14 +9,34 @@
 //! neighbour positions projected onto the shared shelf cells, (3) robots
 //! collect in fixed index order (resolves shared-slot contention
 //! deterministically), (4) items age and spawn.
+//!
+//! Sharding ([`PartitionedGs`]): per-robot state lives in one
+//! [`WarehouseCell`] per agent. The scatter phase applies the (purely
+//! local) moves and draws the item-spawn Bernoullis — each shared shelf
+//! cell is OWNED by exactly one agent (the lowest-indexed region touching
+//! it) and drawn from that agent's stream, one draw per owned slot per
+//! tick, so the schedule is independent of the partition. Everything
+//! coupled across regions (labels, collection contention, aging, spawn
+//! application) runs in the cheap serial merge, identical to the serial
+//! tick. The sharded trajectory therefore differs from the serial
+//! reference only in RNG accounting.
 
 use crate::sim::{
-    GlobalSim, WAREHOUSE_ACT, WAREHOUSE_ITEM_SLOTS, WAREHOUSE_N_CLS, WAREHOUSE_N_HEADS,
-    WAREHOUSE_OBS, WAREHOUSE_REGION, WAREHOUSE_U_DIM,
+    BoundaryEvent, GlobalSim, PartitionedGs, ShardRange, ShardSlots, WAREHOUSE_ACT,
+    WAREHOUSE_ITEM_SLOTS, WAREHOUSE_N_CLS, WAREHOUSE_N_HEADS, WAREHOUSE_OBS, WAREHOUSE_REGION,
+    WAREHOUSE_U_DIM,
 };
 use crate::util::rng::Pcg64;
 
 use super::{apply_move, slot_local, CLS_ABSENT, ITEM_SPAWN_P};
+
+/// Per-robot state: local position within the region + the last step's
+/// influence labels (class index per head).
+#[derive(Clone)]
+struct WarehouseCell {
+    robot: (usize, usize),
+    label: [usize; WAREHOUSE_N_HEADS],
+}
 
 pub struct WarehouseGlobalSim {
     side: usize,        // R: robots per grid side
@@ -25,11 +45,53 @@ pub struct WarehouseGlobalSim {
     items: Vec<Option<u32>>,
     /// Is this global cell a shelf slot of at least one region?
     is_slot: Vec<bool>,
-    /// Robot local positions (row, col) within their region.
-    robots: Vec<(usize, usize)>,
-    /// Influence labels of the last step: class index per (agent, head).
-    labels: Vec<[usize; WAREHOUSE_N_HEADS]>,
+    /// Owning agent of each shelf cell (lowest-indexed region touching
+    /// it) — the agent whose RNG stream draws its spawn Bernoulli in
+    /// sharded stepping. `usize::MAX` for non-slot cells.
+    slot_owner: Vec<usize>,
+    cells: ShardSlots<WarehouseCell>,
     spawn_p: f64,
+}
+
+// ---- grid geometry (free functions so the step loops can use them while
+// the cells are mutably borrowed) -----------------------------------------
+
+fn region_origin(side: usize, agent: usize) -> (usize, usize) {
+    (4 * (agent / side), 4 * (agent % side))
+}
+
+fn gidx(global_side: usize, r: usize, c: usize) -> usize {
+    r * global_side + c
+}
+
+/// Global cell index of `agent`'s slot `k`.
+fn slot_global(side: usize, global_side: usize, agent: usize, k: usize) -> usize {
+    let (or, oc) = region_origin(side, agent);
+    let (lr, lc) = slot_local(k);
+    gidx(global_side, or + lr, oc + lc)
+}
+
+/// Global position of a robot at local `pos` within `agent`'s region.
+fn robot_global_at(side: usize, agent: usize, pos: (usize, usize)) -> (usize, usize) {
+    let (or, oc) = region_origin(side, agent);
+    (or + pos.0, oc + pos.1)
+}
+
+/// Neighbour agent id toward head `h` (N,E,S,W order), if any.
+fn head_neighbour(side: usize, agent: usize, head: usize) -> Option<usize> {
+    let gr = (agent / side) as i64;
+    let gc = (agent % side) as i64;
+    let (nr, nc) = match head {
+        0 => (gr - 1, gc),
+        1 => (gr, gc + 1),
+        2 => (gr + 1, gc),
+        _ => (gr, gc - 1),
+    };
+    if nr < 0 || nc < 0 || nr >= side as i64 || nc >= side as i64 {
+        None
+    } else {
+        Some(nr as usize * side + nc as usize)
+    }
 }
 
 impl WarehouseGlobalSim {
@@ -41,67 +103,42 @@ impl WarehouseGlobalSim {
         assert!(side >= 1);
         let global_side = 4 * side + 1;
         let n = side * side;
-        let mut sim = WarehouseGlobalSim {
-            side,
-            global_side,
-            items: vec![None; global_side * global_side],
-            is_slot: vec![false; global_side * global_side],
-            robots: vec![(2, 2); n],
-            labels: vec![[CLS_ABSENT; WAREHOUSE_N_HEADS]; n],
-            spawn_p,
-        };
+        let cells_total = global_side * global_side;
+        let mut is_slot = vec![false; cells_total];
+        let mut slot_owner = vec![usize::MAX; cells_total];
         for agent in 0..n {
             for k in 0..WAREHOUSE_ITEM_SLOTS {
-                let g = sim.slot_global(agent, k);
-                sim.is_slot[g] = true;
+                let g = slot_global(side, global_side, agent, k);
+                is_slot[g] = true;
+                if slot_owner[g] == usize::MAX {
+                    slot_owner[g] = agent;
+                }
             }
         }
-        sim
+        WarehouseGlobalSim {
+            side,
+            global_side,
+            items: vec![None; cells_total],
+            is_slot,
+            slot_owner,
+            cells: ShardSlots::new(vec![
+                WarehouseCell {
+                    robot: (2, 2),
+                    label: [CLS_ABSENT; WAREHOUSE_N_HEADS]
+                };
+                n
+            ]),
+            spawn_p,
+        }
     }
 
     pub fn side(&self) -> usize {
         self.side
     }
 
-    fn region_origin(&self, agent: usize) -> (usize, usize) {
-        let gr = agent / self.side;
-        let gc = agent % self.side;
-        (4 * gr, 4 * gc)
-    }
-
-    fn gidx(&self, r: usize, c: usize) -> usize {
-        r * self.global_side + c
-    }
-
-    /// Global cell index of agent's slot `k`.
-    fn slot_global(&self, agent: usize, k: usize) -> usize {
-        let (or, oc) = self.region_origin(agent);
-        let (lr, lc) = slot_local(k);
-        self.gidx(or + lr, oc + lc)
-    }
-
-    /// Robot's global position.
-    fn robot_global(&self, agent: usize) -> (usize, usize) {
-        let (or, oc) = self.region_origin(agent);
-        let (lr, lc) = self.robots[agent];
-        (or + lr, oc + lc)
-    }
-
-    /// Neighbour agent id toward head `h` (N,E,S,W order), if any.
-    fn neighbour(&self, agent: usize, head: usize) -> Option<usize> {
-        let gr = (agent / self.side) as i64;
-        let gc = (agent % self.side) as i64;
-        let (nr, nc) = match head {
-            0 => (gr - 1, gc),
-            1 => (gr, gc + 1),
-            2 => (gr + 1, gc),
-            _ => (gr, gc - 1),
-        };
-        if nr < 0 || nc < 0 || nr >= self.side as i64 || nc >= self.side as i64 {
-            None
-        } else {
-            Some(nr as usize * self.side + nc as usize)
-        }
+    /// Global cell index of agent's slot `k` (method form for &self paths).
+    fn slot_cell(&self, agent: usize, k: usize) -> usize {
+        slot_global(self.side, self.global_side, agent, k)
     }
 
     pub fn total_items(&self) -> usize {
@@ -112,13 +149,25 @@ impl WarehouseGlobalSim {
     /// oldest active item in agent's region, if any.
     pub fn oldest_item_slot(&self, agent: usize) -> Option<(usize, usize)> {
         (0..WAREHOUSE_ITEM_SLOTS)
-            .filter_map(|k| self.items[self.slot_global(agent, k)].map(|age| (age, k)))
+            .filter_map(|k| self.items[self.slot_cell(agent, k)].map(|age| (age, k)))
             .max_by_key(|&(age, _)| age)
             .map(|(_, k)| slot_local(k))
     }
 
     pub fn robot_local(&self, agent: usize) -> (usize, usize) {
-        self.robots[agent]
+        self.cells.get(agent).robot
+    }
+
+    /// Test support: place `agent`'s robot at local `pos`.
+    pub fn set_robot(&mut self, agent: usize, pos: (usize, usize)) {
+        debug_assert!(pos.0 < WAREHOUSE_REGION && pos.1 < WAREHOUSE_REGION);
+        self.cells.as_mut_slice()[agent].robot = pos;
+    }
+
+    /// Test support: put an item of `age` on `agent`'s shelf slot `k`.
+    pub fn put_item(&mut self, agent: usize, k: usize, age: u32) {
+        let g = self.slot_cell(agent, k);
+        self.items[g] = Some(age);
     }
 }
 
@@ -143,27 +192,24 @@ impl GlobalSim for WarehouseGlobalSim {
         for it in self.items.iter_mut() {
             *it = None;
         }
-        for (agent, robot) in self.robots.iter_mut().enumerate() {
+        for cell in self.cells.as_mut_slice() {
             // deterministic-but-varied start positions
-            let _ = agent;
-            *robot = (
+            cell.robot = (
                 rng.below(WAREHOUSE_REGION as u64) as usize,
                 rng.below(WAREHOUSE_REGION as u64) as usize,
             );
-        }
-        for lab in self.labels.iter_mut() {
-            *lab = [CLS_ABSENT; WAREHOUSE_N_HEADS];
+            cell.label = [CLS_ABSENT; WAREHOUSE_N_HEADS];
         }
     }
 
     fn observe(&self, agent: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), WAREHOUSE_OBS);
         out.fill(0.0);
-        let (lr, lc) = self.robots[agent];
+        let (lr, lc) = self.cells.get(agent).robot;
         out[lr * WAREHOUSE_REGION + lc] = 1.0;
         let base = WAREHOUSE_REGION * WAREHOUSE_REGION;
         for k in 0..WAREHOUSE_ITEM_SLOTS {
-            if self.items[self.slot_global(agent, k)].is_some() {
+            if self.items[self.slot_cell(agent, k)].is_some() {
                 out[base + k] = 1.0;
             }
         }
@@ -173,54 +219,22 @@ impl GlobalSim for WarehouseGlobalSim {
         let n = self.n_agents();
         debug_assert_eq!(actions.len(), n);
         debug_assert_eq!(rewards.len(), n);
+        let (side, gside) = (self.side, self.global_side);
 
         // 1. simultaneous moves
-        for (agent, &a) in actions.iter().enumerate() {
-            let (r, c) = self.robots[agent];
-            self.robots[agent] = apply_move(r, c, a);
+        let cells = self.cells.as_mut_slice();
+        for (cell, &a) in cells.iter_mut().zip(actions) {
+            let (r, c) = cell.robot;
+            cell.robot = apply_move(r, c, a);
         }
 
         // 2. influence labels: neighbour positions on MY shared shelf cells
-        for agent in 0..n {
-            for head in 0..WAREHOUSE_N_HEADS {
-                self.labels[agent][head] = match self.neighbour(agent, head) {
-                    None => CLS_ABSENT,
-                    Some(nb) => {
-                        let npos = self.robot_global(nb);
-                        (0..3)
-                            .find(|&i| {
-                                let k = head * 3 + i;
-                                let g = self.slot_global(agent, k);
-                                self.gidx(npos.0, npos.1) == g
-                            })
-                            .unwrap_or(CLS_ABSENT)
-                    }
-                };
-            }
-        }
+        label_pass(side, gside, cells);
 
         // 3. collection in fixed order. The age-rank reward is computed by
         // counting in place (same maths as `age_rank_reward`) so the hot
         // loop never materialises the region's age list.
-        rewards.fill(0.0);
-        for agent in 0..n {
-            let (gr, gc) = self.robot_global(agent);
-            let g = self.gidx(gr, gc);
-            if let Some(age) = self.items[g] {
-                let mut total = 0usize;
-                let mut younger_or_eq = 0usize;
-                for k in 0..WAREHOUSE_ITEM_SLOTS {
-                    if let Some(a) = self.items[self.slot_global(agent, k)] {
-                        total += 1;
-                        if a <= age {
-                            younger_or_eq += 1;
-                        }
-                    }
-                }
-                rewards[agent] = younger_or_eq as f32 / total as f32;
-                self.items[g] = None;
-            }
-        }
+        collect_pass(side, gside, cells, &mut self.items, rewards);
 
         // 4. aging + spawning
         for it in self.items.iter_mut() {
@@ -238,8 +252,126 @@ impl GlobalSim for WarehouseGlobalSim {
     fn influence_label(&self, agent: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), WAREHOUSE_U_DIM);
         out.fill(0.0);
+        let cell = self.cells.get(agent);
         for head in 0..WAREHOUSE_N_HEADS {
-            out[head * WAREHOUSE_N_CLS + self.labels[agent][head]] = 1.0;
+            out[head * WAREHOUSE_N_CLS + cell.label[head]] = 1.0;
+        }
+    }
+
+    fn as_partitioned(&mut self) -> Option<&mut dyn PartitionedGs> {
+        Some(self)
+    }
+}
+
+/// Shared serial sub-phase: recompute every agent's influence labels from
+/// the post-move robot positions (reads neighbours' cells, so it must not
+/// run during the scatter phase).
+fn label_pass(side: usize, gside: usize, cells: &mut [WarehouseCell]) {
+    for agent in 0..cells.len() {
+        for head in 0..WAREHOUSE_N_HEADS {
+            cells[agent].label[head] = match head_neighbour(side, agent, head) {
+                None => CLS_ABSENT,
+                Some(nb) => {
+                    let npos = robot_global_at(side, nb, cells[nb].robot);
+                    let ng = gidx(gside, npos.0, npos.1);
+                    (0..3)
+                        .find(|&i| slot_global(side, gside, agent, head * 3 + i) == ng)
+                        .unwrap_or(CLS_ABSENT)
+                }
+            };
+        }
+    }
+}
+
+/// Shared serial sub-phase: collection in fixed agent order (resolves
+/// shared-slot contention deterministically) + the age-rank rewards.
+fn collect_pass(
+    side: usize,
+    gside: usize,
+    cells: &[WarehouseCell],
+    items: &mut [Option<u32>],
+    rewards: &mut [f32],
+) {
+    rewards.fill(0.0);
+    for (agent, cell) in cells.iter().enumerate() {
+        let (gr, gc) = robot_global_at(side, agent, cell.robot);
+        let g = gidx(gside, gr, gc);
+        if let Some(age) = items[g] {
+            let mut total = 0usize;
+            let mut younger_or_eq = 0usize;
+            for k in 0..WAREHOUSE_ITEM_SLOTS {
+                if let Some(a) = items[slot_global(side, gside, agent, k)] {
+                    total += 1;
+                    if a <= age {
+                        younger_or_eq += 1;
+                    }
+                }
+            }
+            rewards[agent] = younger_or_eq as f32 / total as f32;
+            items[g] = None;
+        }
+    }
+}
+
+impl PartitionedGs for WarehouseGlobalSim {
+    unsafe fn step_local(
+        &self,
+        shard: ShardRange,
+        actions: &[usize],
+        rewards_out: &mut [f32],
+        events_out: &mut Vec<BoundaryEvent>,
+        rngs: &mut [Pcg64],
+    ) {
+        debug_assert_eq!(rewards_out.len(), shard.len());
+        debug_assert_eq!(rngs.len(), shard.len());
+        let (side, gside) = (self.side, self.global_side);
+        // SAFETY: forwarded from the caller — shard ranges are disjoint
+        // and nothing else touches the cells during the scatter phase.
+        let cells = unsafe { self.cells.range_mut(shard) };
+        for (k, cell) in cells.iter_mut().enumerate() {
+            let agent = shard.start + k;
+            let rng = &mut rngs[k];
+            // purely local: the move
+            let (r, c) = cell.robot;
+            cell.robot = apply_move(r, c, actions[agent]);
+            // spawn draws for OWNED shelf cells, one per slot per tick in
+            // slot order — application (empty-cell check) happens in the
+            // merge, after collection, like the serial tick.
+            for slot in 0..WAREHOUSE_ITEM_SLOTS {
+                let g = slot_global(side, gside, agent, slot);
+                if self.slot_owner[g] == agent && rng.bernoulli(self.spawn_p) {
+                    events_out.push(BoundaryEvent::WarehouseSpawn { agent, slot });
+                }
+            }
+            rewards_out[k] = 0.0; // finalised in apply_boundary
+        }
+    }
+
+    fn apply_boundary(&mut self, events: &[BoundaryEvent], rewards: &mut [f32]) {
+        let n = self.n_agents();
+        debug_assert_eq!(rewards.len(), n);
+        let (side, gside) = (self.side, self.global_side);
+        let cells = self.cells.as_mut_slice();
+        // labels + collection + aging: identical to the serial sub-phases
+        label_pass(side, gside, cells);
+        collect_pass(side, gside, cells, &mut self.items, rewards);
+        for it in self.items.iter_mut() {
+            if let Some(age) = it {
+                *age = age.saturating_add(1);
+            }
+        }
+        // spawn events land on still-empty cells (same distribution as
+        // the serial tick's empty-cell Bernoulli)
+        for ev in events {
+            match *ev {
+                BoundaryEvent::WarehouseSpawn { agent, slot } => {
+                    let g = slot_global(side, gside, agent, slot);
+                    if self.items[g].is_none() {
+                        self.items[g] = Some(0);
+                    }
+                }
+                _ => debug_assert!(false, "foreign boundary event {ev:?} reached the warehouse GS"),
+            }
         }
     }
 }
@@ -254,12 +386,29 @@ mod tests {
         let sim = WarehouseGlobalSim::new(2);
         // agent 0's E slots == agent 1's W slots (same global cells)
         for i in 0..3 {
-            assert_eq!(sim.slot_global(0, 3 + i), sim.slot_global(1, 9 + i));
+            assert_eq!(sim.slot_cell(0, 3 + i), sim.slot_cell(1, 9 + i));
         }
         // agent 0's S slots == agent 2's N slots
         for i in 0..3 {
-            assert_eq!(sim.slot_global(0, 6 + i), sim.slot_global(2, i));
+            assert_eq!(sim.slot_cell(0, 6 + i), sim.slot_cell(2, i));
         }
+    }
+
+    #[test]
+    fn shared_slots_have_one_owner() {
+        let sim = WarehouseGlobalSim::new(3);
+        // every slot cell is owned by exactly one agent, and that agent is
+        // the lowest-indexed region touching it
+        for agent in 0..9 {
+            for k in 0..WAREHOUSE_ITEM_SLOTS {
+                let g = sim.slot_cell(agent, k);
+                assert!(sim.is_slot[g]);
+                assert!(sim.slot_owner[g] <= agent, "owner must be the lowest toucher");
+            }
+        }
+        // agent 0's E shelf is shared with agent 1 but owned by 0
+        let g = sim.slot_cell(1, 9); // agent 1's W slot 0 == agent 0's E slot 0
+        assert_eq!(sim.slot_owner[g], 0);
     }
 
     #[test]
@@ -276,10 +425,10 @@ mod tests {
         let mut sim = WarehouseGlobalSim::with_spawn(2, 0.0);
         let mut rng = Pcg64::seed(1);
         sim.reset(&mut rng);
-        sim.robots[0] = (1, 3);
+        sim.set_robot(0, (1, 3));
         let obs = observe_vec_global(&sim, 0);
         assert_eq!(obs.len(), WAREHOUSE_OBS);
-        assert_eq!(obs[1 * WAREHOUSE_REGION + 3], 1.0);
+        assert_eq!(obs[WAREHOUSE_REGION + 3], 1.0);
         assert_eq!(obs.iter().filter(|&&x| x == 1.0).count(), 1); // no items
     }
 
@@ -289,9 +438,8 @@ mod tests {
         let mut rng = Pcg64::seed(2);
         sim.reset(&mut rng);
         // put an item on slot 0 = local (0,1); robot at (0,0)
-        let g = sim.slot_global(0, 0);
-        sim.items[g] = Some(5);
-        sim.robots[0] = (0, 0);
+        sim.put_item(0, 0, 5);
+        sim.set_robot(0, (0, 0));
         let r = gs_step_vec(&mut sim, &[3], &mut rng); // move right onto (0,1)
         assert_eq!(r[0], 1.0); // only item -> full reward
         assert_eq!(sim.total_items(), 0);
@@ -302,20 +450,18 @@ mod tests {
         let mut sim = WarehouseGlobalSim::with_spawn(1, 0.0);
         let mut rng = Pcg64::seed(3);
         sim.reset(&mut rng);
-        let g_old = sim.slot_global(0, 0); // (0,1)
-        let g_new = sim.slot_global(0, 1); // (0,2)
-        sim.items[g_old] = Some(50);
-        sim.items[g_new] = Some(1);
-        sim.robots[0] = (0, 0);
+        sim.put_item(0, 0, 50); // local (0,1)
+        sim.put_item(0, 1, 1); // local (0,2)
+        sim.set_robot(0, (0, 0));
         let r_old = gs_step_vec(&mut sim, &[3], &mut rng)[0]; // collect at (0,1)
         assert_eq!(r_old, 1.0);
         // remaining item is now the only one -> also pays 1 when collected,
         // so instead test the younger item while the old one is present:
         let mut sim2 = WarehouseGlobalSim::with_spawn(1, 0.0);
         sim2.reset(&mut rng);
-        sim2.items[g_old] = Some(50);
-        sim2.items[g_new] = Some(1);
-        sim2.robots[0] = (0, 3);
+        sim2.put_item(0, 0, 50);
+        sim2.put_item(0, 1, 1);
+        sim2.set_robot(0, (0, 3));
         let r_new = gs_step_vec(&mut sim2, &[2], &mut rng)[0]; // move left onto (0,2)
         assert!((r_new - 0.5).abs() < 1e-6, "younger of two items pays 1/2, got {r_new}");
     }
@@ -327,10 +473,10 @@ mod tests {
         sim.reset(&mut rng);
         // item on the shared E/W shelf between agents 0 and 1 at slot 3 of
         // agent 0 = local (1,4); same cell is agent 1's local (1,0).
-        let g = sim.slot_global(0, 3);
-        sim.items[g] = Some(3);
-        sim.robots[0] = (1, 3); // one step left of the shared cell
-        sim.robots[1] = (1, 1); // one step right of it (in its own frame)
+        let g = sim.slot_cell(0, 3);
+        sim.put_item(0, 3, 3);
+        sim.set_robot(0, (1, 3)); // one step left of the shared cell
+        sim.set_robot(1, (1, 1)); // one step right of it (in its own frame)
         let r = gs_step_vec(&mut sim, &[3, 2, 4, 4], &mut rng); // both move onto it
         assert_eq!(r[0], 1.0, "lower index collects");
         assert_eq!(r[1], 0.0, "higher index loses the race");
@@ -344,17 +490,17 @@ mod tests {
         sim.reset(&mut rng);
         // agent 1 stands on the shared W edge (its local (2,0)) == agent
         // 0's E slot index 1 (local (2,4)).
-        sim.robots[1] = (2, 1);
-        sim.robots[0] = (0, 0);
-        sim.robots[2] = (0, 0);
-        sim.robots[3] = (0, 0);
+        sim.set_robot(1, (2, 1));
+        sim.set_robot(0, (0, 0));
+        sim.set_robot(2, (0, 0));
+        sim.set_robot(3, (0, 0));
         gs_step_vec(&mut sim, &[4, 2, 4, 4], &mut rng); // agent 1 moves left onto edge
         let mut u = [0.0f32; WAREHOUSE_U_DIM];
         sim.influence_label(0, &mut u);
         // head E (=1), class 1 (middle cell)
-        assert_eq!(u[1 * WAREHOUSE_N_CLS + 1], 1.0);
+        assert_eq!(u[WAREHOUSE_N_CLS + 1], 1.0);
         // heads N and W of agent 0 have no neighbour -> absent class
-        assert_eq!(u[0 * WAREHOUSE_N_CLS + CLS_ABSENT], 1.0);
+        assert_eq!(u[CLS_ABSENT], 1.0);
         assert_eq!(u[3 * WAREHOUSE_N_CLS + CLS_ABSENT], 1.0);
     }
 
@@ -363,8 +509,8 @@ mod tests {
         let mut sim = WarehouseGlobalSim::with_spawn(2, 0.0);
         let mut rng = Pcg64::seed(6);
         sim.reset(&mut rng);
-        for r in sim.robots.iter_mut() {
-            *r = (2, 2);
+        for agent in 0..4 {
+            sim.set_robot(agent, (2, 2));
         }
         gs_step_vec(&mut sim, &[4, 4, 4, 4], &mut rng);
         for agent in 0..4 {

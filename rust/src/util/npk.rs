@@ -11,7 +11,9 @@ use anyhow::{bail, Context, Result};
 pub const MAGIC: &[u8; 4] = b"NPK1";
 
 /// A dense f32 tensor with shape. The only tensor type in the system.
-#[derive(Clone, Debug, PartialEq)]
+/// `Default` is the empty tensor (no dims, no data, no allocation) —
+/// the initial state of reusable output staging buffers.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Tensor {
     pub dims: Vec<usize>,
     pub data: Vec<f32>,

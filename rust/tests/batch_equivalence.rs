@@ -18,6 +18,7 @@ use std::path::PathBuf;
 
 use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
 use dials::coordinator::{collect_datasets, evaluate_on_gs, make_global_sim, DialsCoordinator, GsScratch};
+use dials::exec::WorkerPool;
 use dials::runtime::{synth, Engine};
 use dials::util::rng::Pcg64;
 
@@ -48,6 +49,7 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path, gs_batch: bool) -> Experiment
         artifacts_dir: dir.to_string_lossy().into_owned(),
         threads: 1,
         gs_batch,
+        gs_shards: 0,
     }
 }
 
@@ -91,9 +93,10 @@ fn collected_datasets_are_bit_identical_across_modes() {
             let mut rng = Pcg64::new(cfg.seed, 5);
             let mut scratch =
                 GsScratch::new(&coord.artifacts().spec, cfg.n_agents(), cfg.gs_batch);
+            let pool = WorkerPool::new(1);
             let steps = collect_datasets(
                 coord.artifacts(), gs.as_mut(), &mut workers, 50, cfg.horizon,
-                &mut rng, &mut scratch,
+                &mut rng, &mut scratch, &pool,
             )
             .unwrap();
             let probe = Pcg64::seed(99);
@@ -125,10 +128,13 @@ fn evaluate_issues_exactly_one_policy_run_b_per_joint_step() {
     let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
     let mut rng = Pcg64::new(cfg.seed, 5);
     let mut scratch = GsScratch::new(&arts.spec, cfg.n_agents(), true);
+    let pool = WorkerPool::new(1);
 
     let (episodes, horizon) = (2usize, 10usize);
-    evaluate_on_gs(arts, gs.as_mut(), &mut workers, episodes, horizon, &mut rng, &mut scratch)
-        .unwrap();
+    evaluate_on_gs(
+        arts, gs.as_mut(), &mut workers, episodes, horizon, &mut rng, &mut scratch, &pool,
+    )
+    .unwrap();
     let joint_steps = (episodes * horizon) as u64;
     assert_eq!(
         arts.policy_step_b.as_ref().unwrap().call_count(),
@@ -151,9 +157,10 @@ fn collect_issues_one_policy_and_one_aip_run_b_per_joint_step() {
     let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
     let mut rng = Pcg64::new(cfg.seed, 5);
     let mut scratch = GsScratch::new(&arts.spec, cfg.n_agents(), true);
+    let pool = WorkerPool::new(1);
 
     let gs_steps = collect_datasets(
-        arts, gs.as_mut(), &mut workers, 37, cfg.horizon, &mut rng, &mut scratch,
+        arts, gs.as_mut(), &mut workers, 37, cfg.horizon, &mut rng, &mut scratch, &pool,
     )
     .unwrap() as u64;
     assert!(gs_steps >= 37);
@@ -176,10 +183,13 @@ fn per_agent_mode_issues_n_b1_calls_per_joint_step() {
     let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
     let mut rng = Pcg64::new(cfg.seed, 5);
     let mut scratch = GsScratch::new(&arts.spec, cfg.n_agents(), false);
+    let pool = WorkerPool::new(1);
 
     let (episodes, horizon) = (1usize, 8usize);
-    evaluate_on_gs(arts, gs.as_mut(), &mut workers, episodes, horizon, &mut rng, &mut scratch)
-        .unwrap();
+    evaluate_on_gs(
+        arts, gs.as_mut(), &mut workers, episodes, horizon, &mut rng, &mut scratch, &pool,
+    )
+    .unwrap();
     let joint_steps = (episodes * horizon) as u64;
     assert_eq!(
         arts.policy_step.call_count(),

@@ -38,6 +38,7 @@ fn tiny_cfg(domain: Domain, mode: SimMode) -> ExperimentConfig {
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
         threads: 1,
         gs_batch: true,
+        gs_shards: 0,
     }
 }
 
@@ -117,8 +118,10 @@ fn lemma1_same_policy_same_influence_data() {
         let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
         let mut rng = Pcg64::new(seed, 5);
         let mut scratch = GsScratch::new(&coord.artifacts().spec, cfg.n_agents(), cfg.gs_batch);
+        let pool = dials::exec::WorkerPool::new(1);
         collect_datasets(
             coord.artifacts(), gs.as_mut(), &mut workers, 50, cfg.horizon, &mut rng, &mut scratch,
+            &pool,
         )
         .unwrap();
         let mut probe = Pcg64::seed(99);

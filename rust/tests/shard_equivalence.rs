@@ -1,0 +1,351 @@
+//! Shard-count invariance of the sharded GS stepping protocol
+//! (`sim::PartitionedGs` + `sim::ShardPlan`), plus the boundary
+//! conservation laws.
+//!
+//! * **State-level bit-equality**: stepping either domain's GS through
+//!   `ShardPlan::step` produces bit-identical observations, rewards, and
+//!   influence labels for EVERY shard count in {1, 2, 3, n_agents} and
+//!   every pool width — randomness lives in per-agent streams and the
+//!   event merge order is a pure function of the event set.
+//! * **Run-level bit-equality**: full untrained-DIALS runs (native synth
+//!   artifacts) with `gs_shards` 1 vs 8 produce bit-identical `RunLog`s
+//!   in both domains (the ISSUE's headline acceptance criterion).
+//! * **Conservation**: sharded traffic stepping conserves cars across
+//!   shard boundaries (no inflow → total never grows), and sharded
+//!   warehouse stepping conserves item counts (no spawn → total never
+//!   grows; spawn 1.0 → bounded by slot capacity).
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{collect_datasets, make_global_sim, DialsCoordinator, GsScratch};
+use dials::exec::WorkerPool;
+use dials::runtime::{synth, Engine};
+use dials::sim::traffic::{Dir, TrafficGlobalSim};
+use dials::sim::warehouse::WarehouseGlobalSim;
+use dials::sim::{GlobalSim, ShardPlan};
+use dials::util::rng::Pcg64;
+
+/// Fingerprint of one fully-observable GS step: all observations, all
+/// rewards, all influence labels (compared bit-for-bit via Vec<u32>).
+fn fingerprint(gs: &dyn GlobalSim, rewards: &[f32]) -> Vec<u32> {
+    let n = gs.n_agents();
+    let mut obs = vec![0.0f32; gs.obs_dim()];
+    let mut u = vec![0.0f32; gs.u_dim()];
+    let mut out = Vec::with_capacity(n * (gs.obs_dim() + gs.u_dim() + 1));
+    for a in 0..n {
+        gs.observe(a, &mut obs);
+        out.extend(obs.iter().map(|x| x.to_bits()));
+        gs.influence_label(a, &mut u);
+        out.extend(u.iter().map(|x| x.to_bits()));
+        out.push(rewards[a].to_bits());
+    }
+    out
+}
+
+/// Drive `gs` through `steps` sharded joint steps and fingerprint each.
+fn sharded_trace(
+    gs: &mut dyn GlobalSim,
+    shards: usize,
+    threads: usize,
+    steps: usize,
+    actions_of: impl Fn(usize, usize) -> usize,
+) -> Vec<Vec<u32>> {
+    let n = gs.n_agents();
+    let pool = WorkerPool::new(threads);
+    let mut plan = ShardPlan::new(n, shards);
+    let mut rng = Pcg64::seed(1234);
+    gs.reset(&mut rng);
+    plan.reseed(&mut rng);
+    let mut actions = vec![0usize; n];
+    let mut rewards = vec![0.0f32; n];
+    let mut trace = Vec::with_capacity(steps);
+    for t in 0..steps {
+        for (i, a) in actions.iter_mut().enumerate() {
+            *a = actions_of(t, i);
+        }
+        plan.step(gs, &pool, &actions, &mut rewards).unwrap();
+        trace.push(fingerprint(&*gs, &rewards));
+    }
+    trace
+}
+
+#[test]
+fn traffic_sharded_stepping_is_shard_count_invariant() {
+    let side = 3; // 9 agents
+    let n = side * side;
+    let acts = |t: usize, i: usize| ((t + i) % 4 == 0) as usize;
+    let reference = {
+        let mut gs = TrafficGlobalSim::new(side);
+        sharded_trace(&mut gs, 1, 1, 40, acts)
+    };
+    for (shards, threads) in [(2usize, 1usize), (3, 4), (n, 4), (8, 2), (1, 4)] {
+        let mut gs = TrafficGlobalSim::new(side);
+        let trace = sharded_trace(&mut gs, shards, threads, 40, acts);
+        assert_eq!(
+            reference, trace,
+            "traffic trajectory diverged with shards={shards} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn warehouse_sharded_stepping_is_shard_count_invariant() {
+    let side = 3; // 9 robots
+    let n = side * side;
+    let acts = |t: usize, i: usize| (t * 3 + i) % 5;
+    let reference = {
+        let mut gs = WarehouseGlobalSim::new(side);
+        sharded_trace(&mut gs, 1, 1, 40, acts)
+    };
+    for (shards, threads) in [(2usize, 1usize), (3, 4), (n, 4), (8, 2)] {
+        let mut gs = WarehouseGlobalSim::new(side);
+        let trace = sharded_trace(&mut gs, shards, threads, 40, acts);
+        assert_eq!(
+            reference, trace,
+            "warehouse trajectory diverged with shards={shards} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn traffic_sharded_stepping_conserves_cars() {
+    // No inflow: cars only drain (via sinks); a car crossing a shard
+    // boundary must neither duplicate nor vanish, so the total can never
+    // grow — checked for shard counts {1, 2, 3, n_agents}.
+    let side = 3;
+    let n = side * side;
+    for shards in [1usize, 2, 3, n] {
+        let mut gs = TrafficGlobalSim::with_inflow(side, 0.0);
+        let pool = WorkerPool::new(4);
+        let mut plan = ShardPlan::new(n, shards);
+        let mut rng = Pcg64::seed(7);
+        gs.reset(&mut rng);
+        plan.reseed(&mut rng);
+        // stage queues on every boundary + interior N/W lane
+        for agent in 0..n {
+            gs.fill_lane(agent, Dir::N);
+            gs.fill_lane(agent, Dir::W);
+        }
+        let mut prev = gs.total_cars();
+        assert!(prev > 0);
+        let mut rewards = vec![0.0f32; n];
+        for t in 0..60 {
+            let actions: Vec<usize> = (0..n).map(|i| ((t + i) % 5 == 0) as usize).collect();
+            plan.step(&mut gs, &pool, &actions, &mut rewards).unwrap();
+            let now = gs.total_cars();
+            assert!(
+                now <= prev,
+                "shards={shards}: cars appeared from nowhere at t={t}: {prev} -> {now}"
+            );
+            prev = now;
+        }
+    }
+}
+
+#[test]
+fn traffic_car_totals_identical_across_shard_counts_with_inflow() {
+    let side = 3;
+    let n = side * side;
+    let totals = |shards: usize| {
+        let mut gs = TrafficGlobalSim::new(side); // default inflow 0.25
+        let pool = WorkerPool::new(2);
+        let mut plan = ShardPlan::new(n, shards);
+        let mut rng = Pcg64::seed(3);
+        gs.reset(&mut rng);
+        plan.reseed(&mut rng);
+        let mut rewards = vec![0.0f32; n];
+        let mut out = Vec::new();
+        for t in 0..50 {
+            let actions: Vec<usize> = (0..n).map(|i| ((t * 2 + i) % 7 == 0) as usize).collect();
+            plan.step(&mut gs, &pool, &actions, &mut rewards).unwrap();
+            out.push(gs.total_cars());
+        }
+        out
+    };
+    let one = totals(1);
+    assert!(*one.last().unwrap() > 0, "inflow should populate the grid");
+    for s in [2usize, 3, n] {
+        assert_eq!(one, totals(s), "car totals diverged with {s} shards");
+    }
+}
+
+#[test]
+fn warehouse_sharded_stepping_conserves_items() {
+    let side = 3;
+    let n = side * side;
+    for shards in [1usize, 2, 3, n] {
+        // spawn_p = 0: seeded items can only be collected, never created.
+        let mut gs = WarehouseGlobalSim::with_spawn(side, 0.0);
+        let pool = WorkerPool::new(4);
+        let mut plan = ShardPlan::new(n, shards);
+        let mut rng = Pcg64::seed(11);
+        gs.reset(&mut rng);
+        plan.reseed(&mut rng);
+        for agent in 0..n {
+            for k in 0..6 {
+                gs.put_item(agent, k, (agent + k) as u32);
+            }
+        }
+        let mut prev = gs.total_items();
+        assert!(prev > 0);
+        let mut rewards = vec![0.0f32; n];
+        for t in 0..50 {
+            let actions: Vec<usize> = (0..n).map(|i| (t + i) % 5).collect();
+            plan.step(&mut gs, &pool, &actions, &mut rewards).unwrap();
+            let now = gs.total_items();
+            assert!(
+                now <= prev,
+                "shards={shards}: items appeared with spawn_p=0 at t={t}: {prev} -> {now}"
+            );
+            prev = now;
+        }
+    }
+    // spawn_p = 1: shelf cells refill but the total stays bounded by the
+    // number of distinct slot cells, for every shard count, and the
+    // trajectory of totals is shard-count invariant.
+    let totals = |shards: usize| {
+        let mut gs = WarehouseGlobalSim::with_spawn(side, 1.0);
+        let pool = WorkerPool::new(4);
+        let mut plan = ShardPlan::new(n, shards);
+        let mut rng = Pcg64::seed(13);
+        gs.reset(&mut rng);
+        plan.reseed(&mut rng);
+        let mut rewards = vec![0.0f32; n];
+        let mut out = Vec::new();
+        for t in 0..30 {
+            let actions: Vec<usize> = (0..n).map(|i| (t * 7 + i) % 5).collect();
+            plan.step(&mut gs, &pool, &actions, &mut rewards).unwrap();
+            out.push(gs.total_items());
+        }
+        out
+    };
+    let one = totals(1);
+    // 9 regions × 12 slots, shared edges counted once: strictly fewer
+    // than 108 distinct cells.
+    assert!(one.iter().all(|&c| c > 0 && c < 108));
+    for s in [2usize, 3, n] {
+        assert_eq!(one, totals(s), "item totals diverged with {s} shards");
+    }
+}
+
+// ---- full-run RunLog equality (the acceptance criterion) ----------------
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_shard_equiv").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 13).unwrap();
+    dir
+}
+
+fn tiny_cfg(domain: Domain, dir: &std::path::Path, gs_shards: usize, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::UntrainedDials,
+        grid_side: 3, // 9 agents so shards=8 is a real partition
+        total_steps: 48,
+        aip_train_freq: 48,
+        aip_dataset: 30,
+        aip_epochs: 1,
+        eval_every: 24,
+        eval_episodes: 2,
+        horizon: 12,
+        seed: 21,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads,
+        gs_batch: true,
+        gs_shards,
+    }
+}
+
+#[test]
+fn runlogs_bit_identical_shards_1_vs_8_both_domains() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("runs", domain);
+        let engine = Engine::cpu().unwrap();
+        let run = |gs_shards: usize, threads: usize| {
+            let coord =
+                DialsCoordinator::new(&engine, tiny_cfg(domain, &dir, gs_shards, threads))
+                    .unwrap();
+            coord.run().unwrap()
+        };
+        let one = run(1, 1);
+        assert!(one.eval_curve.len() >= 3, "expected initial + per-segment evals");
+        for (shards, threads) in [(2usize, 1usize), (8, 1), (8, 3)] {
+            let other = run(shards, threads);
+            assert_eq!(one.eval_curve.len(), other.eval_curve.len(), "{domain:?}");
+            for (a, b) in one.eval_curve.iter().zip(other.eval_curve.iter()) {
+                assert_eq!(a.step, b.step, "{domain:?} shards={shards}");
+                assert_eq!(
+                    a.value.to_bits(),
+                    b.value.to_bits(),
+                    "{domain:?}: eval at step {} diverged with shards={shards} \
+                     threads={threads}: {} vs {}",
+                    a.step, a.value, b.value
+                );
+            }
+            assert_eq!(one.final_return.to_bits(), other.final_return.to_bits());
+        }
+    }
+}
+
+#[test]
+fn collected_datasets_bit_identical_across_shard_counts() {
+    let domain = Domain::Warehouse;
+    let dir = synth_dir("collect", domain);
+    let engine = Engine::cpu().unwrap();
+    let collect = |gs_shards: usize| {
+        let cfg = tiny_cfg(domain, &dir, gs_shards, 2);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let mut workers = coord.make_workers(cfg.seed);
+        let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+        let mut rng = Pcg64::new(cfg.seed, 5);
+        let mut scratch = GsScratch::new(&coord.artifacts().spec, cfg.n_agents(), cfg.gs_batch);
+        scratch.enable_shards(gs_shards);
+        let pool = WorkerPool::new(2);
+        let steps = collect_datasets(
+            coord.artifacts(), gs.as_mut(), &mut workers, 40, cfg.horizon, &mut rng,
+            &mut scratch, &pool,
+        )
+        .unwrap();
+        let probe = Pcg64::seed(99);
+        let rows = workers
+            .iter()
+            .map(|w| w.dataset.sample_flat(8, &mut probe.clone()).unwrap())
+            .collect::<Vec<_>>();
+        (steps, rows)
+    };
+    let (steps_1, rows_1) = collect(1);
+    for shards in [3usize, 8] {
+        let (steps_s, rows_s) = collect(shards);
+        assert_eq!(steps_1, steps_s, "GS step counts diverged with {shards} shards");
+        for ((f1, l1), (fs, ls)) in rows_1.iter().zip(rows_s.iter()) {
+            assert_eq!(f1.data, fs.data, "features diverged with {shards} shards");
+            assert_eq!(l1.data, ls.data, "labels diverged with {shards} shards");
+        }
+    }
+}
+
+#[test]
+fn serial_reference_path_is_untouched_by_the_refactor() {
+    // gs_shards = 0 must still mean: the plain serial GlobalSim::step,
+    // driven by the shared episode RNG — i.e. a trajectory that differs
+    // from the sharded one (different RNG accounting) but is internally
+    // deterministic.
+    let run = |gs_shards: usize| {
+        let domain = Domain::Traffic;
+        let dir = synth_dir(&format!("serial{gs_shards}"), domain);
+        let engine = Engine::cpu().unwrap();
+        let coord =
+            DialsCoordinator::new(&engine, tiny_cfg(domain, &dir, gs_shards, 1)).unwrap();
+        coord.run().unwrap()
+    };
+    let a = run(0);
+    let b = run(0);
+    for (x, y) in a.eval_curve.iter().zip(b.eval_curve.iter()) {
+        assert_eq!(x.value.to_bits(), y.value.to_bits(), "serial path must stay deterministic");
+    }
+}
