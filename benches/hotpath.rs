@@ -54,6 +54,10 @@ struct JsonRow {
     calls_per_step: f64,
     /// GS-phase joint steps per second (NaN = not a GS stepping row).
     steps_per_s: f64,
+    /// End-to-end wall seconds of a training run whose segments and GS
+    /// evaluations may overlap — the blocking-vs-async eval comparison
+    /// (NaN = not a segment+eval row).
+    seg_eval_wall_s: f64,
 }
 
 /// Heap traffic of `steps` iterations of `f` after a warm-up pass:
@@ -75,7 +79,10 @@ fn alloc_per_step(steps: usize, mut f: impl FnMut()) -> (f64, usize) {
 fn main() -> Result<()> {
     let mut table = Table::new(
         "hot path microbenchmarks",
-        &["op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s"],
+        &[
+            "op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s",
+            "seg+eval wall",
+        ],
     );
     let mut json: Vec<JsonRow> = Vec::new();
     let reps = 200;
@@ -390,6 +397,64 @@ fn main() -> Result<()> {
         }
     }
 
+    // ---- async GS evaluation overlapped with training segments
+    //
+    // The tentpole comparison: the same coordinator run (untrained-DIALS,
+    // forward-only so the native backend runs it end-to-end) with blocking
+    // evaluation at every boundary vs evaluation deferred onto the pool
+    // (`cfg.async_eval = 2`, the double buffer). The row's wall column is
+    // the full segments+eval wall clock — overlap shows up as the async
+    // row undercutting the blocking one. Curves are bit-identical either
+    // way (tests/async_eval_equivalence.rs); this measures time only.
+    #[cfg(not(feature = "xla"))]
+    {
+        use dials::runtime::synth;
+
+        let domain = Domain::Traffic;
+        let dir = std::env::temp_dir().join("dials_hotpath_synth").join("async_eval");
+        let _ = std::fs::remove_dir_all(&dir);
+        synth::write_native_artifacts(&dir, domain, 3)?;
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let mk_cfg = |async_eval: usize| ExperimentConfig {
+            domain,
+            mode: SimMode::UntrainedDials,
+            grid_side: 4,
+            total_steps: 240,
+            aip_train_freq: 240,
+            eval_every: 60,
+            eval_episodes: 4,
+            horizon: 60,
+            seed: 11,
+            // rollout never fills: segments are pure forward+LS stepping,
+            // which the native backend executes for real
+            ppo: PpoConfig { rollout_len: 512, minibatch: 32, epochs: 1, ..Default::default() },
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            async_eval,
+            ..Default::default()
+        };
+        let mut walls = [f64::NAN; 2];
+        for (k, (label, depth)) in [("blocking eval", 0usize), ("async eval x2", 2)]
+            .into_iter()
+            .enumerate()
+        {
+            let coord = DialsCoordinator::new(&engine, mk_cfg(depth))?;
+            let (mean, min) = time_n(3, || {
+                coord.run().unwrap();
+            });
+            walls[k] = mean;
+            push_row_full(
+                &mut table, &mut json,
+                &format!("coordinator run, {label} (16 agents)"),
+                mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, mean,
+            );
+        }
+        println!(
+            "\nsegment+eval overlap (traffic, 16 agents, {threads} threads): blocking \
+             {:.3}s vs async {:.3}s -> {:.2}x",
+            walls[0], walls[1], walls[0] / walls[1]
+        );
+    }
+
     table.print();
     table.save_csv("hotpath");
     write_json(&json, sim_zero_alloc)?;
@@ -432,9 +497,32 @@ fn push_row_steps(
     calls_per_step: f64,
     steps_per_s: f64,
 ) {
+    push_row_full(
+        table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step,
+        steps_per_s, f64::NAN,
+    );
+}
+
+/// The full row shape, including the segment+eval wall-clock column the
+/// blocking-vs-async eval rows report.
+#[allow(clippy::too_many_arguments)]
+fn push_row_full(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    bytes_per_step: f64,
+    peak_extra: usize,
+    calls_per_step: f64,
+    steps_per_s: f64,
+    seg_eval_wall_s: f64,
+) {
     let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
     let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
     let sps = if steps_per_s.is_nan() { "-".to_string() } else { format!("{steps_per_s:.0}") };
+    let wall = if seg_eval_wall_s.is_nan() { "-".to_string() } else { format!("{seg_eval_wall_s:.3}s") };
     table.row(vec![
         op.to_string(),
         us(mean),
@@ -444,6 +532,7 @@ fn push_row_steps(
         format!("{peak_extra}B"),
         cps,
         sps,
+        wall,
     ]);
     json.push(JsonRow {
         op: op.to_string(),
@@ -453,6 +542,7 @@ fn push_row_steps(
         peak_extra_bytes: peak_extra,
         calls_per_step,
         steps_per_s,
+        seg_eval_wall_s,
     });
 }
 
@@ -463,9 +553,10 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
         let bps = if r.bytes_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.bytes_per_step) };
         let cps = if r.calls_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.calls_per_step) };
         let sps = if r.steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.steps_per_s) };
+        let wall = if r.seg_eval_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.seg_eval_wall_s) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"seg_eval_wall_s\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, wall,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -19,7 +19,7 @@
 use anyhow::Result;
 
 use crate::config::SimMode;
-use crate::coordinator::{evaluate_on_gs, make_global_sim, AgentWorker, DialsCoordinator, GsScratch};
+use crate::coordinator::{evaluate_staged, make_global_sim, AgentWorker, DialsCoordinator, GsScratch};
 use crate::exec::WorkerPool;
 use crate::ppo::PpoTrainer;
 use crate::util::metrics::{CurvePoint, RunLog};
@@ -54,8 +54,9 @@ impl GsTrainer {
         scratch.enable_shards(crate::coordinator::gs_shard_mode(gs.as_mut(), cfg));
         let od = arts.spec.obs_dim;
 
-        let r0 = timers.time("eval", || {
-            evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool)
+        timers.time("eval_snapshot", || scratch.stage_policies(&arts, &workers))?;
+        let r0 = timers.time("eval_compute", || {
+            evaluate_staged(&arts, gs.as_mut(), cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool)
         })?;
         log.eval_curve.push(CurvePoint { step: 0, value: r0 });
 
@@ -67,8 +68,11 @@ impl GsTrainer {
         scratch.policy_bank.reset_episodes();
         for step in 0..cfg.total_steps {
             // joint action from all policies: ONE batched run_b (the
-            // bank re-stages only rows whose net version changed)
-            scratch.joint_act(&arts, gs.as_ref(), &workers, &mut rng)?;
+            // bank re-stages only rows whose net version changed after a
+            // PPO update — policies train mid-rollout here, so staging
+            // happens per step, unlike the snapshot-once eval path)
+            scratch.stage_policies(&arts, &workers)?;
+            scratch.joint_act(&arts, gs.as_ref(), &mut rng)?;
             scratch.gs_step(gs.as_mut(), &pool, &mut rng)?;
             ep_step += 1;
             let done = ep_step >= cfg.horizon;
@@ -112,11 +116,22 @@ impl GsTrainer {
             }
 
             if (step + 1) % eval_every == 0 || step + 1 == cfg.total_steps {
-                timers.add("agent_train", t_train.elapsed().as_secs_f64() - timers.get("agent_train") - timers.get("eval_gap"));
-                let ret = timers.time("eval", || {
-                    evaluate_on_gs(&arts, gs.as_mut(), &mut workers, cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool)
+                // `eval_gap` tracks the cumulative eval seconds already
+                // subtracted from the rolling train-time estimate; eval is
+                // split into snapshot (staging) + compute (the loop), the
+                // same accounting the DIALS coordinator reports.
+                timers.add(
+                    "agent_train",
+                    t_train.elapsed().as_secs_f64()
+                        - timers.get("agent_train")
+                        - timers.get("eval_gap"),
+                );
+                timers.time("eval_snapshot", || scratch.stage_policies(&arts, &workers))?;
+                let ret = timers.time("eval_compute", || {
+                    evaluate_staged(&arts, gs.as_mut(), cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool)
                 })?;
-                timers.add("eval_gap", timers.get("eval") - timers.get("eval_gap"));
+                let eval_total = timers.get("eval_snapshot") + timers.get("eval_compute");
+                timers.add("eval_gap", eval_total - timers.get("eval_gap"));
                 log.eval_curve.push(CurvePoint { step: step + 1, value: ret });
                 // training episode state was clobbered by eval; restart episode
                 scratch.gs_reset(gs.as_mut(), &mut rng);
@@ -128,8 +143,12 @@ impl GsTrainer {
         log.final_return = log.eval_curve.last().map(|p| p.value).unwrap_or(0.0);
         log.agent_train_seconds = timers.get("agent_train");
         log.influence_seconds = 0.0;
-        log.wall_seconds = timers.get("agent_train");
-        // the GS rollout is a single sequential process: CP == wall
+        log.eval_snapshot_seconds = timers.get("eval_snapshot");
+        log.eval_compute_seconds = timers.get("eval_compute");
+        // The GS baseline evaluates inline (there is nothing to overlap
+        // with — the rollout is one sequential process), so the snapshot
+        // cost is on its wall clock like the coordinator's; CP == wall.
+        log.wall_seconds = timers.get("agent_train") + timers.get("eval_snapshot");
         log.critical_path_seconds = log.wall_seconds;
         Ok(log)
     }

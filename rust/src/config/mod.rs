@@ -132,6 +132,16 @@ pub struct ExperimentConfig {
     /// auto-fall back to serial with a notice. Results are bit-identical
     /// across all shard counts >= 1 (`tests/shard_equivalence.rs`).
     pub gs_shards: usize,
+    /// Overlap periodic GS evaluation with the following training
+    /// segments (`coordinator::async_eval`): the value is the number of
+    /// evaluation slots that may be in flight at once (2 = double
+    /// buffer). Each boundary snapshots the policies into a dedicated
+    /// eval bank and the evaluation runs as a deferred job on the worker
+    /// pool. 0 (default) = the blocking reference path; values above
+    /// `AsyncEval::MAX_SLOTS` (8) clamp with a notice. Eval curves are
+    /// bit-identical between 0 and any N >= 1 for the same seed
+    /// (`tests/async_eval_equivalence.rs`).
+    pub async_eval: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -153,6 +163,7 @@ impl Default for ExperimentConfig {
             threads: 0,
             gs_batch: true,
             gs_shards: 0,
+            async_eval: 0,
         }
     }
 }
@@ -209,6 +220,7 @@ impl ExperimentConfig {
         get_usize!(exp, "horizon", cfg.horizon);
         get_usize!(exp, "threads", cfg.threads);
         get_usize!(exp, "gs_shards", cfg.gs_shards);
+        get_usize!(exp, "async_eval", cfg.async_eval);
         if let Some(v) = exp.get("seed") {
             cfg.seed = v.as_int()? as u64;
         }
@@ -263,6 +275,7 @@ impl ExperimentConfig {
         cfg.seed = args.get_u64("seed", cfg.seed)?;
         cfg.threads = args.get_usize("threads", cfg.threads)?;
         cfg.gs_shards = args.get_usize("gs-shards", cfg.gs_shards)?;
+        cfg.async_eval = args.get_usize("async-eval", cfg.async_eval)?;
         if let Some(dir) = args.get("artifacts") {
             cfg.artifacts_dir = dir.to_string();
         }
@@ -357,6 +370,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ExperimentConfig::from_cli(&args).unwrap().gs_shards, 4);
+    }
+
+    #[test]
+    fn async_eval_defaults_off_and_parses() {
+        assert_eq!(ExperimentConfig::default().async_eval, 0);
+        let doc = parse("[experiment]\nasync_eval = 2\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().async_eval, 2);
+        let args = crate::util::cli::Args::parse(
+            ["--async-eval", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().async_eval, 2);
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Async GS evaluation: overlap periodic evaluation with the next
+//! training segments (DESIGN.md §8).
+//!
+//! Periodic evaluation only *reads* a snapshot of the joint policy, so it
+//! has no business on the training critical path (the paper keeps it off
+//! by construction; Large Batch Simulation for Deep RL makes the same
+//! throughput argument). With `cfg.async_eval > 0` the coordinator stops
+//! blocking on `evaluate_on_gs` at each boundary and instead:
+//!
+//! 1. **snapshots** — stages every worker's `NetState` row into one of
+//!    `async_eval` dedicated eval slots (each slot owns a `GsScratch`
+//!    with its own policy/AIP banks, its own GS instance, and receives
+//!    its own RNG stream split from the episode RNG *at the snapshot
+//!    step*). Staging reuses the version-tracked partial re-copy of
+//!    `runtime::NetBank`, so a snapshot costs only the rows that
+//!    actually changed since that slot's previous snapshot;
+//! 2. **defers** — submits the whole `evaluate_staged` loop as ONE
+//!    deferred pool job (`WorkerPool::submit_deferred`): a helper thread
+//!    runs it to completion while the coordinator's segment phases keep
+//!    flowing on the remaining slots. With `gs_shards > 0` the eval
+//!    slot's sharded GS steps are themselves pool phases and interleave
+//!    with segment phases through the pool's single-phase gate — no
+//!    second thread pool, no blocking join;
+//! 3. **drains** — harvests finished evaluations after each segment
+//!    (non-blocking, FIFO), *blocking* only (a) when every slot is in
+//!    flight and a new boundary needs one (backpressure), (b) before an
+//!    AIP retrain (a pending eval never crosses a retrain boundary), and
+//!    (c) at the end of the run, before `final_return` is computed.
+//!    Drained curve points carry the SNAPSHOT step, however many
+//!    segments later the result lands.
+//!
+//! Determinism contract: because the eval RNG is split from the episode
+//! RNG at the snapshot step (not at drain time), the eval slot resets a
+//! fresh GS identically to how the blocking path resets the shared one,
+//! and the staged rows are frozen copies of the boundary policies, the
+//! async eval curve is **bit-identical** to the blocking reference path
+//! (`cfg.async_eval = 0`) for the same seed — pinned, both domains and
+//! multiple seeds, by `rust/tests/async_eval_equivalence.rs`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::exec::{DeferredHandle, WorkerPool};
+use crate::runtime::ArtifactSet;
+use crate::sim::GlobalSim;
+use crate::util::metrics::{CurvePoint, RunLog};
+use crate::util::rng::Pcg64;
+
+use super::evaluate::evaluate_staged;
+use super::worker::AgentWorker;
+use super::{make_global_sim, GsScratch};
+
+/// One double-buffer slot: everything an in-flight evaluation owns, so it
+/// shares nothing with the training path but the worker pool.
+struct EvalSlot {
+    gs: Box<dyn GlobalSim>,
+    scratch: GsScratch,
+}
+
+/// What a finished deferred evaluation hands back: the mean return, the
+/// overlapped compute seconds, and the slot for reuse.
+struct EvalDone {
+    ret: f64,
+    secs: f64,
+    slot: EvalSlot,
+}
+
+struct Pending {
+    /// Step the snapshot was taken at — the step the curve point carries.
+    step: usize,
+    handle: DeferredHandle<EvalDone>,
+}
+
+/// The double-buffered async evaluation subsystem. Built once per run
+/// when `cfg.async_eval > 0`; `cfg.async_eval` is the slot count (2 = the
+/// classic double buffer: one eval in flight while the next boundary
+/// snapshots into the other slot).
+pub struct AsyncEval {
+    arts: Arc<ArtifactSet>,
+    pool: Arc<WorkerPool>,
+    episodes: usize,
+    horizon: usize,
+    free: Vec<EvalSlot>,
+    pending: VecDeque<Pending>,
+    /// Snapshot steps in submission order (test observability).
+    history: Vec<usize>,
+    /// Sum of overlapped eval seconds, measured inside the deferred jobs.
+    compute_seconds: f64,
+    /// High-water mark of in-flight evaluations (test observability).
+    max_in_flight: usize,
+}
+
+impl AsyncEval {
+    /// Hard cap on eval slots: each slot eagerly owns a GS instance plus
+    /// a policy bank, and useful depth is bounded by how many boundaries
+    /// can realistically be in flight at once. Values above the cap clamp
+    /// with a notice (the `gs_shards` treatment).
+    pub const MAX_SLOTS: usize = 8;
+
+    /// Build `cfg.async_eval` slots (clamped to `[1, MAX_SLOTS]`).
+    /// `batched`/`shards` must be the resolved modes of the main scratch
+    /// (`gs_batch_mode`, `gs_shard_mode`) — the slot scratches must match
+    /// them, because serial and sharded stepping are distinct
+    /// deterministic families.
+    pub fn new(
+        arts: &Arc<ArtifactSet>,
+        pool: &Arc<WorkerPool>,
+        cfg: &ExperimentConfig,
+        batched: bool,
+        shards: usize,
+    ) -> Self {
+        let n = cfg.n_agents();
+        let slots = cfg.async_eval.clamp(1, Self::MAX_SLOTS);
+        if cfg.async_eval > Self::MAX_SLOTS {
+            eprintln!(
+                "[dials] async_eval={} clamped to {} eval slots (each slot owns a full \
+                 GS + policy bank; deeper queues buy no extra overlap)",
+                cfg.async_eval,
+                Self::MAX_SLOTS
+            );
+        }
+        let free = (0..slots)
+            .map(|_| {
+                // policy_only: evaluation never forwards the AIP, so the
+                // slot skips the AIP bank/feature buffers entirely.
+                let mut scratch = GsScratch::policy_only(&arts.spec, n, batched);
+                scratch.enable_shards(shards);
+                EvalSlot { gs: make_global_sim(cfg.domain, cfg.grid_side), scratch }
+            })
+            .collect();
+        AsyncEval {
+            arts: Arc::clone(arts),
+            pool: Arc::clone(pool),
+            episodes: cfg.eval_episodes,
+            horizon: cfg.horizon,
+            free,
+            pending: VecDeque::new(),
+            history: Vec::new(),
+            compute_seconds: 0.0,
+            max_in_flight: 0,
+        }
+    }
+
+    /// Snapshot the joint policy at `step` and queue its evaluation.
+    ///
+    /// Splits the eval RNG off `rng` FIRST (one `next_u64`, exactly what
+    /// the blocking path consumes), so the training stream is independent
+    /// of when — or whether — the eval actually runs. If every slot is in
+    /// flight, blocks on the OLDEST pending eval (backpressure) before
+    /// staging into its slot.
+    pub fn snapshot(
+        &mut self,
+        workers: &[AgentWorker],
+        rng: &mut Pcg64,
+        step: usize,
+        log: &mut RunLog,
+    ) -> Result<()> {
+        let mut eval_rng = rng.split(step as u64);
+        let mut slot = match self.free.pop() {
+            Some(slot) => slot,
+            None => {
+                // Backpressure: all slots in flight — the oldest eval must
+                // land before this boundary can snapshot.
+                self.drain_one(log)?;
+                self.free.pop().expect("drain_one recycles a slot")
+            }
+        };
+        slot.scratch.stage_policies(&self.arts, workers)?;
+        self.history.push(step);
+
+        let arts = Arc::clone(&self.arts);
+        let pool = Arc::clone(&self.pool);
+        let (episodes, horizon) = (self.episodes, self.horizon);
+        let handle = self.pool.submit_deferred(move || {
+            let t0 = Instant::now();
+            let EvalSlot { mut gs, mut scratch } = slot;
+            let ret = evaluate_staged(
+                &arts, gs.as_mut(), episodes, horizon, &mut eval_rng, &mut scratch, &pool,
+            )?;
+            Ok(EvalDone { ret, secs: t0.elapsed().as_secs_f64(), slot: EvalSlot { gs, scratch } })
+        });
+        self.pending.push_back(Pending { step, handle });
+        self.max_in_flight = self.max_in_flight.max(self.pending.len());
+        Ok(())
+    }
+
+    /// Block until a slot is free (draining the oldest pending eval if
+    /// needed). `run_ckpt` calls this BEFORE timing the snapshot, so a
+    /// backpressure stall is never charged to `eval_snapshot` — it is the
+    /// previous eval's compute showing through, which the runtime totals
+    /// exclude in both modes. `snapshot` still self-drains as a fallback
+    /// for direct callers.
+    pub fn ensure_free_slot(&mut self, log: &mut RunLog) -> Result<()> {
+        if self.free.is_empty() {
+            self.drain_one(log)?;
+        }
+        Ok(())
+    }
+
+    /// Harvest every evaluation that has already finished, in snapshot
+    /// order, without blocking. Called after each training segment so
+    /// curve points land as early as possible.
+    pub fn drain_ready(&mut self, log: &mut RunLog) -> Result<()> {
+        while self.pending.front().is_some_and(|p| p.handle.is_done()) {
+            self.drain_one(log)?;
+        }
+        Ok(())
+    }
+
+    /// Block until every pending evaluation has landed. Drain points: AIP
+    /// retrain boundaries and the end of the run (before `final_return`).
+    pub fn drain_all(&mut self, log: &mut RunLog) -> Result<()> {
+        while !self.pending.is_empty() {
+            self.drain_one(log)?;
+        }
+        Ok(())
+    }
+
+    /// Wait for the oldest pending eval, log its curve point under its
+    /// snapshot step, and recycle its slot onto the free list.
+    fn drain_one(&mut self, log: &mut RunLog) -> Result<()> {
+        let p = self.pending.pop_front().expect("drain_one on empty pending queue");
+        let done = p
+            .handle
+            .wait()
+            .with_context(|| format!("async GS evaluation (snapshot step {}) failed", p.step))?;
+        log.eval_curve.push(CurvePoint { step: p.step, value: done.ret });
+        self.compute_seconds += done.secs;
+        self.free.push(done.slot);
+        Ok(())
+    }
+
+    /// Evaluations currently in flight.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Snapshot steps taken so far, in submission order.
+    pub fn snapshot_steps(&self) -> &[usize] {
+        &self.history
+    }
+
+    /// High-water mark of concurrently pending evaluations.
+    pub fn max_in_flight(&self) -> usize {
+        self.max_in_flight
+    }
+
+    /// Total overlapped eval seconds measured inside the deferred jobs —
+    /// the `eval_compute` side of the timer split; the snapshot side is
+    /// timed by the coordinator on the critical path.
+    pub fn compute_seconds(&self) -> f64 {
+        self.compute_seconds
+    }
+}

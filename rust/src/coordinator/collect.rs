@@ -44,6 +44,9 @@ pub fn collect_datasets(
     debug_assert_eq!(scratch.obs.len(), n * arts.spec.obs_dim);
     let spec = &arts.spec;
 
+    // Policies and AIPs are fixed for the whole collection phase: stage
+    // both banks once (rows re-copied only on version bumps).
+    scratch.stage_policies(arts, workers)?;
     for (i, w) in workers.iter().enumerate() {
         scratch.aip_bank.stage(&arts.engine, i, &w.aip.net)?;
     }
@@ -60,7 +63,7 @@ pub fn collect_datasets(
         }
         for _t in 0..horizon {
             // ONE policy run_b for the whole joint step
-            scratch.joint_act(arts, &*gs, workers, rng)?;
+            scratch.joint_act(arts, &*gs, rng)?;
             scratch.gs_step(gs, pool, rng)?;
             gs_steps += 1;
 

@@ -28,11 +28,35 @@ use super::GsScratch;
 /// mean per-agent episodic return (averaged over agents and episodes).
 /// All per-step buffers live in `scratch`, so repeated evaluations
 /// allocate nothing.
+///
+/// Stages every worker's current policy into the scratch bank once, then
+/// runs [`evaluate_staged`] — the same inner loop the async-eval subsystem
+/// drains later from a snapshot (`coordinator::async_eval`), so the
+/// blocking and async paths cannot diverge.
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_on_gs(
     arts: &ArtifactSet,
     gs: &mut dyn GlobalSim,
-    workers: &mut [AgentWorker],
+    workers: &[AgentWorker],
+    episodes: usize,
+    horizon: usize,
+    rng: &mut Pcg64,
+    scratch: &mut GsScratch,
+    pool: &WorkerPool,
+) -> Result<f64> {
+    debug_assert_eq!(workers.len(), gs.n_agents());
+    scratch.stage_policies(arts, workers)?;
+    evaluate_staged(arts, gs, episodes, horizon, rng, scratch, pool)
+}
+
+/// The evaluation loop proper: the scratch's policy bank must already hold
+/// the joint policy to evaluate (`GsScratch::stage_policies`). Policies
+/// are NOT re-staged per step — an evaluation always runs one fixed
+/// snapshot, which is exactly what lets the async path evaluate rows
+/// captured segments ago.
+pub(crate) fn evaluate_staged(
+    arts: &ArtifactSet,
+    gs: &mut dyn GlobalSim,
     episodes: usize,
     horizon: usize,
     rng: &mut Pcg64,
@@ -40,7 +64,6 @@ pub fn evaluate_on_gs(
     pool: &WorkerPool,
 ) -> Result<f64> {
     let n = gs.n_agents();
-    debug_assert_eq!(workers.len(), n);
     debug_assert_eq!(scratch.obs.len(), n * arts.spec.obs_dim);
     let mut total_return = 0.0f64;
 
@@ -49,7 +72,7 @@ pub fn evaluate_on_gs(
         scratch.policy_bank.reset_episodes();
         for _t in 0..horizon {
             // ONE policy run_b for the whole joint step (batched mode)
-            scratch.joint_act(arts, &*gs, workers, rng)?;
+            scratch.joint_act(arts, &*gs, rng)?;
             scratch.gs_step(gs, pool, rng)?;
             total_return += scratch.rewards.iter().map(|&r| r as f64).sum::<f64>();
         }

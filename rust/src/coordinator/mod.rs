@@ -11,14 +11,17 @@
 //! path* — the wall-clock a ≥N-core machine (the paper's cluster) would
 //! measure. See DESIGN.md's substitution table.
 
+mod async_eval;
 mod checkpoint;
 mod collect;
 mod evaluate;
 mod policy_rt;
 mod worker;
 
+pub use async_eval::AsyncEval;
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub use collect::collect_datasets;
+pub(crate) use evaluate::evaluate_staged;
 pub use evaluate::{evaluate_on_gs, evaluate_scripted};
 pub use crate::runtime::ActOut;
 pub use policy_rt::PolicyRuntime;
@@ -81,20 +84,32 @@ impl GsScratch {
     /// per joint step (`true`, default) vs N B=1 calls (`false`; the
     /// bit-identical reference path).
     pub fn new(spec: &NetSpec, n_agents: usize, batched: bool) -> Self {
+        Self::with_aip_rows(spec, n_agents, batched, n_agents)
+    }
+
+    /// Scratch for phases that only drive the policy bank (the async-eval
+    /// slots): the AIP bank and the ALSH feature/probability buffers are
+    /// built empty — evaluation never forwards the AIP, and N slots would
+    /// otherwise duplicate the whole AIP parameter bank N times.
+    pub fn policy_only(spec: &NetSpec, n_agents: usize, batched: bool) -> Self {
+        Self::with_aip_rows(spec, n_agents, batched, 0)
+    }
+
+    fn with_aip_rows(spec: &NetSpec, n_agents: usize, batched: bool, aip_rows: usize) -> Self {
         GsScratch {
             obs: vec![0.0; n_agents * spec.obs_dim],
             actions: vec![0; n_agents],
             rewards: vec![0.0; n_agents],
             act_outs: vec![ActOut::default(); n_agents],
-            feats: vec![0.0; n_agents * spec.aip_feat],
-            probs: vec![0.0; n_agents * spec.u_dim],
+            feats: vec![0.0; aip_rows * spec.aip_feat],
+            probs: vec![0.0; aip_rows * spec.u_dim],
             values: vec![0.0; n_agents],
             raw_label: vec![0.0; spec.u_dim],
             label: vec![0.0; spec.aip_heads],
             obs_dim: spec.obs_dim,
             feat_dim: spec.aip_feat,
             policy_bank: PolicyBank::new(spec, n_agents, batched),
-            aip_bank: AipBank::new(spec, n_agents, batched),
+            aip_bank: AipBank::new(spec, aip_rows, batched),
             shard: None,
         }
     }
@@ -148,26 +163,40 @@ impl GsScratch {
         &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
     }
 
+    /// Stage every worker's current policy into the bank (rows re-copied
+    /// only on version bumps — the partial re-upload contract). This is
+    /// the SNAPSHOT point of the joint-step protocol: callers whose
+    /// policies change mid-phase (the GS baseline) re-stage per step,
+    /// while evaluation/collection stage once per phase and the async
+    /// evaluator stages once into a dedicated slot bank at the boundary
+    /// step, then forwards that frozen snapshot segments later.
+    pub(crate) fn stage_policies(
+        &mut self,
+        arts: &ArtifactSet,
+        workers: &[AgentWorker],
+    ) -> Result<()> {
+        for (i, w) in workers.iter().enumerate() {
+            self.policy_bank.stage(&arts.engine, i, &w.policy.net)?;
+        }
+        Ok(())
+    }
+
     /// One joint acting step — THE joint-step protocol, shared by
     /// evaluation, collection, and the GS baseline so it cannot diverge:
-    /// observe every agent into the obs block, stage the current policy
-    /// nets (rows re-copied only on version bumps), forward the policy
-    /// bank (ONE `run_b` in batched mode), and fill `actions` from the
-    /// sampled outputs. Per-agent results stay readable in `act_outs` /
-    /// the bank's `h_before` rows until the next forward.
+    /// observe every agent into the obs block, forward the policy bank
+    /// (ONE `run_b` in batched mode) over the currently-staged policy
+    /// rows (`stage_policies`), and fill `actions` from the sampled
+    /// outputs. Per-agent results stay readable in `act_outs` / the
+    /// bank's `h_before` rows until the next forward.
     pub(crate) fn joint_act(
         &mut self,
         arts: &ArtifactSet,
         gs: &dyn GlobalSim,
-        workers: &[AgentWorker],
         rng: &mut Pcg64,
     ) -> Result<()> {
-        debug_assert_eq!(workers.len(), gs.n_agents());
-        for i in 0..workers.len() {
+        debug_assert_eq!(self.actions.len(), gs.n_agents());
+        for i in 0..self.actions.len() {
             gs.observe(i, self.obs_row_mut(i));
-        }
-        for (i, w) in workers.iter().enumerate() {
-            self.policy_bank.stage(&arts.engine, i, &w.policy.net)?;
         }
         self.policy_bank
             .act_into(arts, &self.obs, rng, &mut self.act_outs)?;
@@ -299,25 +328,43 @@ impl DialsCoordinator {
         // ONE persistent pool for the whole run: threads are spawned here
         // and reused by every retrain + training segment below (no
         // `thread::spawn` inside the segment loop), with chunks of agents
-        // stolen dynamically so stragglers never serialise a phase.
-        let pool = WorkerPool::new(effective_threads(cfg.threads, cfg.n_agents()));
+        // stolen dynamically so stragglers never serialise a phase. The
+        // Arc lets the async-eval subsystem's deferred jobs share it.
+        let pool = Arc::new(WorkerPool::new(effective_threads(cfg.threads, cfg.n_agents())));
         let batched = gs_batch_mode(&self.arts, cfg);
+        let shards = gs_shard_mode(gs.as_mut(), cfg);
         let mut scratch = GsScratch::new(&self.arts.spec, cfg.n_agents(), batched);
-        scratch.enable_shards(gs_shard_mode(gs.as_mut(), cfg));
+        scratch.enable_shards(shards);
+
+        // cfg.async_eval > 0: evaluation overlaps the following training
+        // segments as deferred pool jobs (coordinator::async_eval);
+        // 0 = the blocking reference path. Both paths split the eval RNG
+        // off the episode RNG at the boundary step, so their curves are
+        // bit-identical (tests/async_eval_equivalence.rs).
+        let mut async_eval = (cfg.async_eval > 0)
+            .then(|| AsyncEval::new(&self.arts, &pool, cfg, batched, shards));
 
         // initial evaluation point (step 0)
-        let r0 = timers.time("eval", || {
-            evaluate_on_gs(
-                &self.arts, gs.as_mut(), &mut workers,
-                cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool,
-            )
-        })?;
-        log.eval_curve.push(CurvePoint { step: 0, value: r0 });
+        match async_eval.as_mut() {
+            Some(ae) => {
+                timers.time("eval_snapshot", || ae.snapshot(&workers, &mut rng, 0, &mut log))?
+            }
+            None => blocking_eval_point(
+                &self.arts, cfg, gs.as_mut(), &workers, &mut scratch, &pool,
+                &mut timers, &mut rng, 0, &mut log,
+            )?,
+        }
 
         let segments = plan_segments(cfg.total_steps, cfg.aip_train_freq, cfg.eval_every);
         for seg in &segments {
             // ---- influence phase (DIALS only; Algorithm 1 lines 3-6)
             if seg.retrain_before && cfg.mode == SimMode::Dials {
+                // Drain point: a pending eval never crosses an AIP retrain
+                // boundary — eval pool jobs from the pre-retrain era land
+                // before the influence phase claims the pool.
+                if let Some(ae) = async_eval.as_mut() {
+                    ae.drain_all(&mut log)?;
+                }
                 timers.time("collect", || {
                     collect_datasets(
                         &self.arts, gs.as_mut(), &mut workers,
@@ -357,14 +404,35 @@ impl DialsCoordinator {
             }
             train_cp_total += cp.with_slots(cfg.n_agents());
 
-            // ---- periodic evaluation (excluded from runtime totals)
-            let ret = timers.time("eval", || {
-                evaluate_on_gs(
-                    &self.arts, gs.as_mut(), &mut workers,
-                    cfg.eval_episodes, cfg.horizon, &mut rng, &mut scratch, &pool,
-                )
-            })?;
-            log.eval_curve.push(CurvePoint { step: seg.start + seg.len, value: ret });
+            // ---- periodic evaluation at the segment boundary. Only the
+            // snapshot is on the critical path; the compute either runs
+            // here (blocking reference) or overlaps the next segments as
+            // a deferred pool job (async), landing with its snapshot step.
+            let boundary = seg.start + seg.len;
+            match async_eval.as_mut() {
+                Some(ae) => {
+                    ae.drain_ready(&mut log)?;
+                    // A backpressure stall here is the previous eval's
+                    // compute showing through — wait for the slot BEFORE
+                    // the timer so eval_snapshot stays pure staging cost
+                    // (the totals exclude eval compute in both modes).
+                    ae.ensure_free_slot(&mut log)?;
+                    timers.time("eval_snapshot", || {
+                        ae.snapshot(&workers, &mut rng, boundary, &mut log)
+                    })?;
+                }
+                None => blocking_eval_point(
+                    &self.arts, cfg, gs.as_mut(), &workers, &mut scratch, &pool,
+                    &mut timers, &mut rng, boundary, &mut log,
+                )?,
+            }
+        }
+
+        // Final drain point: every pending eval lands before final_return
+        // is computed.
+        if let Some(ae) = async_eval.as_mut() {
+            ae.drain_all(&mut log)?;
+            timers.add("eval_compute", ae.compute_seconds());
         }
 
         if let Some(dir) = save {
@@ -373,10 +441,50 @@ impl DialsCoordinator {
         log.final_return = log.eval_curve.last().map(|p| p.value).unwrap_or(0.0);
         log.agent_train_seconds = train_cp_total;
         log.influence_seconds = timers.get("collect") + aip_cp_total;
-        log.wall_seconds = timers.get("collect") + timers.get("aip_train") + timers.get("agent_train");
-        log.critical_path_seconds = timers.get("collect") + aip_cp_total + train_cp_total;
+        // Runtime totals stay honest under async eval: the snapshot cost
+        // stalls training in both modes and is charged to the critical
+        // path; the eval compute is overlapped (async) or off-path by
+        // convention (blocking) and reported separately.
+        log.eval_snapshot_seconds = timers.get("eval_snapshot");
+        log.eval_compute_seconds = timers.get("eval_compute");
+        log.wall_seconds = timers.get("collect")
+            + timers.get("aip_train")
+            + timers.get("agent_train")
+            + timers.get("eval_snapshot");
+        log.critical_path_seconds =
+            timers.get("collect") + aip_cp_total + train_cp_total + timers.get("eval_snapshot");
         Ok(log)
     }
+}
+
+/// One blocking evaluation point of `run_ckpt` (the `async_eval = 0`
+/// reference path): split the eval RNG off the episode RNG at `step`,
+/// stage the policies (timed `eval_snapshot`, on the critical path), run
+/// the eval loop (timed `eval_compute`, off-path by convention), and log
+/// the curve point. One function for the step-0 and per-boundary sites so
+/// the RNG/timer discipline the async path mirrors cannot fork.
+#[allow(clippy::too_many_arguments)]
+fn blocking_eval_point(
+    arts: &ArtifactSet,
+    cfg: &ExperimentConfig,
+    gs: &mut dyn GlobalSim,
+    workers: &[AgentWorker],
+    scratch: &mut GsScratch,
+    pool: &WorkerPool,
+    timers: &mut PhaseTimers,
+    rng: &mut Pcg64,
+    step: usize,
+    log: &mut RunLog,
+) -> Result<()> {
+    let mut eval_rng = rng.split(step as u64);
+    timers.time("eval_snapshot", || scratch.stage_policies(arts, workers))?;
+    let ret = timers.time("eval_compute", || {
+        evaluate_staged(
+            arts, gs, cfg.eval_episodes, cfg.horizon, &mut eval_rng, scratch, pool,
+        )
+    })?;
+    log.eval_curve.push(CurvePoint { step, value: ret });
+    Ok(())
 }
 
 /// Resolve the GS bank mode: the configured `gs_batch` downgraded to the

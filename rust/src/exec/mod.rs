@@ -24,7 +24,11 @@
 //!   NOT poison the pool — the next phase runs normally;
 //! * `scatter_merge` composes a parallel scatter with a serial merge
 //!   behind the phase barrier — the shape the sharded GS stepping
-//!   protocol (`sim::ShardPlan`) runs per joint step.
+//!   protocol (`sim::ShardPlan`) runs per joint step;
+//! * `submit_deferred` is the background lane: an owned job some helper
+//!   runs to completion while foreground phases keep flowing on the other
+//!   slots — the substrate of the coordinator's async GS evaluation
+//!   (`coordinator::async_eval`, DESIGN.md §8).
 //!
 //! Determinism: the pool never owns RNG state. Workers (`AgentWorker`)
 //! carry their own streams, so results are bit-identical regardless of the
@@ -32,4 +36,4 @@
 
 mod pool;
 
-pub use pool::{Chunk, PhaseReport, WorkerPool};
+pub use pool::{Chunk, DeferredHandle, PhaseReport, WorkerPool};

@@ -6,6 +6,19 @@
 //! injector until it drains, then go back to sleep. The submitting thread
 //! participates too and only returns once every in-flight task has
 //! completed, which is what makes the borrowed-slice access sound.
+//!
+//! Besides foreground phases the pool carries a **deferred-job lane**
+//! (`submit_deferred`): a FIFO of owned, long-running jobs that helpers
+//! pick up whenever no new foreground phase wants them. A helper running a
+//! deferred job simply drops out of the phase workforce until the job
+//! finishes — foreground phases keep completing on the remaining slots, so
+//! a deferred job overlaps them instead of blocking them. This is what the
+//! coordinator's async GS evaluation rides on: the whole `evaluate_on_gs`
+//! loop becomes one deferred job, and any pool phases it submits itself
+//! (sharded GS steps) interleave with segment phases through the same
+//! single-phase gate. `DeferredHandle::wait` never hangs: a job still
+//! queued at wait time (1-thread pool, or a pool shutting down) is stolen
+//! and run inline by the waiter.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -61,12 +74,106 @@ struct Gate {
     shutdown: bool,
 }
 
+/// An enqueued background job: a token that runs its `DeferredState` to
+/// completion. The token is inert if the waiter already stole the job.
+type DeferredJob = Box<dyn FnOnce() + Send + 'static>;
+
 struct Shared {
     gate: Mutex<Gate>,
-    /// Signals helpers: new phase available, or shutdown.
+    /// Background jobs helpers run when no foreground phase wants them
+    /// (lock order: `gate` before `deferred`, never the reverse).
+    deferred: Mutex<VecDeque<DeferredJob>>,
+    /// Signals helpers: new phase available, deferred job queued, or
+    /// shutdown.
     work_cv: Condvar,
     /// Signals the submitter: a helper left the phase.
     done_cv: Condvar,
+}
+
+/// Lifecycle of one deferred job, shared by the queue token, the running
+/// thread, and the waiting handle.
+enum DeferredSlot<R> {
+    /// Not started; holds the job so the waiter can steal and run it
+    /// inline (the no-hang guarantee).
+    Queued(Box<dyn FnOnce() -> Result<R> + Send + 'static>),
+    Running,
+    Done(Result<R>),
+    /// Result already taken by `wait`.
+    Taken,
+}
+
+struct DeferredState<R> {
+    slot: Mutex<DeferredSlot<R>>,
+    cv: Condvar,
+}
+
+impl<R: Send + 'static> DeferredState<R> {
+    /// Claim the job if still queued and run it to completion, storing the
+    /// outcome (panics captured as errors). No-op if someone else claimed.
+    fn run(&self) {
+        let job = {
+            let mut slot = self.slot.lock().unwrap();
+            match std::mem::replace(&mut *slot, DeferredSlot::Running) {
+                DeferredSlot::Queued(job) => job,
+                other => {
+                    // Not ours to run: restore whatever state it was in.
+                    *slot = other;
+                    return;
+                }
+            }
+        };
+        let out = match catch_unwind(AssertUnwindSafe(job)) {
+            Ok(r) => r,
+            Err(p) => Err(anyhow!("deferred task panicked: {}", panic_msg(p.as_ref()))),
+        };
+        *self.slot.lock().unwrap() = DeferredSlot::Done(out);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to one deferred job. `wait` blocks until the result is ready,
+/// stealing the job inline if no helper has started it yet; `is_done`
+/// polls without blocking.
+pub struct DeferredHandle<R> {
+    state: Arc<DeferredState<R>>,
+}
+
+impl<R: Send + 'static> DeferredHandle<R> {
+    /// True once the job has finished (successfully or not).
+    pub fn is_done(&self) -> bool {
+        matches!(*self.state.slot.lock().unwrap(), DeferredSlot::Done(_))
+    }
+
+    /// Block until the job completes and take its result. If the job is
+    /// still queued (1-thread pool, busy or shut-down helpers) it runs
+    /// inline on this thread, so `wait` can never deadlock.
+    pub fn wait(self) -> Result<R> {
+        loop {
+            let steal = {
+                let slot = self.state.slot.lock().unwrap();
+                // Sleep through the Running state; wake-ups re-check.
+                let mut slot = self
+                    .state
+                    .cv
+                    .wait_while(slot, |s| matches!(s, DeferredSlot::Running))
+                    .unwrap();
+                if matches!(&*slot, DeferredSlot::Queued(_)) {
+                    true
+                } else {
+                    match std::mem::replace(&mut *slot, DeferredSlot::Taken) {
+                        DeferredSlot::Done(r) => return r,
+                        DeferredSlot::Taken => unreachable!("deferred result taken twice"),
+                        _ => unreachable!("wait_while left a non-terminal state"),
+                    }
+                }
+            };
+            if steal {
+                // Runs only if the queue token has not claimed it first;
+                // either way the next loop iteration observes Done/Running.
+                self.state.run();
+            }
+        }
+    }
 }
 
 /// All shared, mutable state of one phase. Lives on the submitting
@@ -164,10 +271,16 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// What one wake-up of a helper resolved to.
+enum HelperWork {
+    Phase(RawPhase),
+    Deferred(DeferredJob),
+}
+
 fn helper_loop(shared: Arc<Shared>) {
     let mut last_epoch = 0u64;
     loop {
-        let raw = {
+        let work = {
             let mut gate = shared.gate.lock().unwrap();
             loop {
                 if gate.shutdown {
@@ -177,20 +290,34 @@ fn helper_loop(shared: Arc<Shared>) {
                     if gate.epoch != last_epoch {
                         last_epoch = gate.epoch;
                         gate.entered += 1;
-                        break raw;
+                        break HelperWork::Phase(raw);
                     }
+                }
+                // No (new) foreground phase: pick up background work.
+                // Checked under the gate lock so a notify cannot slip
+                // between this check and the wait below.
+                if let Some(job) = shared.deferred.lock().unwrap().pop_front() {
+                    break HelperWork::Deferred(job);
                 }
                 gate = shared.work_cv.wait(gate).unwrap();
             }
         };
-        // SAFETY: the phase stays registered until `entered` drops back to
-        // zero; we decrement only after the last ctx access.
-        unsafe { (raw.drain)(raw.ctx) };
-        {
-            let mut gate = shared.gate.lock().unwrap();
-            gate.entered -= 1;
+        match work {
+            HelperWork::Phase(raw) => {
+                // SAFETY: the phase stays registered until `entered` drops
+                // back to zero; we decrement only after the last ctx access.
+                unsafe { (raw.drain)(raw.ctx) };
+                {
+                    let mut gate = shared.gate.lock().unwrap();
+                    gate.entered -= 1;
+                }
+                shared.done_cv.notify_all();
+            }
+            // The job owns all its state and synchronises through its
+            // `DeferredState`; this helper is simply out of the phase
+            // workforce until it returns.
+            HelperWork::Deferred(job) => job(),
         }
-        shared.done_cv.notify_all();
     }
 }
 
@@ -212,6 +339,7 @@ impl WorkerPool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
             gate: Mutex::new(Gate { epoch: 0, phase: None, entered: 0, shutdown: false }),
+            deferred: Mutex::new(VecDeque::new()),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
@@ -230,6 +358,36 @@ impl WorkerPool {
     /// Execution slots, including the submitting thread.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Enqueue `job` on the deferred-job lane: some helper thread runs it
+    /// to completion while foreground phases continue on the remaining
+    /// slots. Jobs are picked up in FIFO order whenever a helper has no
+    /// new foreground phase to join; on a 1-thread pool (or if every
+    /// helper stays busy) the job runs inline in `DeferredHandle::wait`.
+    ///
+    /// A deferred job MAY submit foreground phases itself (they interleave
+    /// with other submitters through the single-phase gate), but doing so
+    /// parks the job until the gate frees up — keep gate-hungry work out
+    /// of deferred jobs that must make progress during long phases.
+    pub fn submit_deferred<R, F>(&self, job: F) -> DeferredHandle<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> Result<R> + Send + 'static,
+    {
+        let state = Arc::new(DeferredState {
+            slot: Mutex::new(DeferredSlot::Queued(Box::new(job))),
+            cv: Condvar::new(),
+        });
+        let token = Arc::clone(&state);
+        {
+            // Push + notify under the gate lock so a helper between its
+            // queue check and its condvar wait cannot miss the wake-up.
+            let _gate = self.shared.gate.lock().unwrap();
+            self.shared.deferred.lock().unwrap().push_back(Box::new(move || token.run()));
+            self.shared.work_cv.notify_all();
+        }
+        DeferredHandle { state }
     }
 
     /// Run `task` once per item, work-stealing over the pool, and return
@@ -542,6 +700,90 @@ mod tests {
             .unwrap_err();
         assert!(format!("{err:#}").contains("task 3"));
         assert!(!merged, "merge must not run after a failed scatter");
+    }
+
+    #[test]
+    fn deferred_job_runs_and_wait_returns_result() {
+        let pool = WorkerPool::new(4);
+        let h = pool.submit_deferred(|| Ok(6 * 7));
+        assert_eq!(h.wait().unwrap(), 42);
+    }
+
+    #[test]
+    fn deferred_overlaps_foreground_phases() {
+        use std::sync::atomic::AtomicBool;
+        let pool = WorkerPool::new(4);
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&flag);
+        let h = pool.submit_deferred(move || {
+            // Runs on a helper; foreground phases below must complete
+            // while this job is still in flight.
+            while !f2.load(Ordering::Acquire) {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            Ok(7u32)
+        });
+        let mut items = vec![0u64; 16];
+        for round in 1..=3u64 {
+            pool.run(&mut items, |_, x| {
+                *x += 1;
+                Ok(())
+            })
+            .unwrap();
+            assert!(items.iter().all(|&x| x == round));
+        }
+        assert!(!h.is_done(), "job must still be pending while phases ran");
+        flag.store(true, Ordering::Release);
+        assert_eq!(h.wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn deferred_on_single_thread_pool_runs_inline_at_wait() {
+        let pool = WorkerPool::new(1);
+        let h = pool.submit_deferred(|| Ok("inline".to_string()));
+        // No helpers exist; wait() must steal and run the job itself.
+        assert_eq!(h.wait().unwrap(), "inline");
+    }
+
+    #[test]
+    fn deferred_panic_surfaces_as_err() {
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let h = pool.submit_deferred(|| -> Result<()> { panic!("deferred kaboom") });
+            let msg = format!("{:#}", h.wait().unwrap_err());
+            assert!(msg.contains("panicked"), "{msg}");
+            assert!(msg.contains("deferred kaboom"), "{msg}");
+            // The pool stays usable for phases afterwards.
+            let mut items = vec![0u8; 8];
+            assert!(pool.run(&mut items, |_, _| Ok(())).is_ok());
+        }
+    }
+
+    #[test]
+    fn deferred_jobs_complete_in_any_interleaving() {
+        let pool = WorkerPool::new(3);
+        let handles: Vec<_> =
+            (0..8u64).map(|k| pool.submit_deferred(move || Ok(k * k))).collect();
+        let mut items = vec![(); 32];
+        pool.run(&mut items, |_, _| Ok(())).unwrap();
+        for (k, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.wait().unwrap(), (k * k) as u64);
+        }
+    }
+
+    #[test]
+    fn deferred_is_done_polls_without_blocking() {
+        let pool = WorkerPool::new(2);
+        let h = pool.submit_deferred(|| Ok(1u8));
+        // Eventually a helper picks it up; poll until done.
+        for _ in 0..2000 {
+            if h.is_done() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(h.is_done(), "helper never ran the deferred job");
+        assert_eq!(h.wait().unwrap(), 1);
     }
 
     #[test]

@@ -60,6 +60,13 @@ pub struct RunLog {
     pub agent_train_seconds: f64,
     /// Seconds spent in GS data collection + AIP training.
     pub influence_seconds: f64,
+    /// Seconds spent snapshotting policies for evaluation — always on the
+    /// critical path (included in `wall_seconds`), async eval or not.
+    pub eval_snapshot_seconds: f64,
+    /// Seconds spent inside the evaluation loops. Under async eval these
+    /// overlap training segments on the pool (never added to the wall
+    /// clock); the blocking path reports the same number for comparison.
+    pub eval_compute_seconds: f64,
     pub final_return: f64,
 }
 

@@ -1,0 +1,213 @@
+//! Determinism contract of async GS evaluation (`coordinator::async_eval`,
+//! DESIGN.md §8), on the native backend with synthesized artifacts:
+//!
+//! * the async eval curve (`cfg.async_eval > 0`) is **bit-identical** to
+//!   the blocking reference path (`cfg.async_eval = 0`) — both domains,
+//!   multiple seeds, any slot depth, any thread count, serial AND sharded
+//!   GS stepping. The eval RNG is split from the episode RNG at the
+//!   snapshot step, so when (or whether) the deferred job actually runs
+//!   cannot change what it computes;
+//! * curve points carry the SNAPSHOT step even when results drain
+//!   segments later, and the final pending eval lands before
+//!   `final_return`;
+//! * `plan_segments` × async eval property: every `eval_every` boundary
+//!   gets exactly one snapshot regardless of the segment split, and a
+//!   pending eval never crosses an AIP retrain boundary.
+//!
+//! Under the `xla` feature the placeholder HLO files cannot compile, so
+//! everything here is native-only.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{plan_segments, AsyncEval, DialsCoordinator};
+use dials::exec::WorkerPool;
+use dials::runtime::{synth, Engine};
+use dials::util::metrics::RunLog;
+use dials::util::rng::Pcg64;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_async_eval").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 29).unwrap();
+    dir
+}
+
+/// Forward-only config (rollout never fills, untrained-DIALS mode), so the
+/// run exercises segments + evaluation without the XLA update artifacts.
+fn tiny_cfg(domain: Domain, dir: &std::path::Path, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::UntrainedDials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 32,
+        aip_dataset: 20,
+        aip_epochs: 1,
+        eval_every: 16,
+        eval_episodes: 2,
+        horizon: 12,
+        seed,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 2,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+    }
+}
+
+fn assert_logs_identical(blocking: &RunLog, async_log: &RunLog, what: &str) {
+    assert_eq!(
+        blocking.eval_curve.len(),
+        async_log.eval_curve.len(),
+        "{what}: eval curve lengths diverged"
+    );
+    assert!(blocking.eval_curve.len() >= 4, "{what}: expected step-0 + per-segment evals");
+    for (b, a) in blocking.eval_curve.iter().zip(async_log.eval_curve.iter()) {
+        assert_eq!(b.step, a.step, "{what}: curve point steps diverged");
+        assert_eq!(
+            b.value.to_bits(),
+            a.value.to_bits(),
+            "{what}: eval at step {} diverged: {} vs {}",
+            b.step, b.value, a.value
+        );
+    }
+    assert_eq!(blocking.final_return.to_bits(), async_log.final_return.to_bits(), "{what}");
+    assert_eq!(blocking.ce_curve.len(), async_log.ce_curve.len(), "{what}");
+}
+
+#[test]
+fn async_eval_curves_bit_identical_both_domains_two_seeds() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("runs", domain);
+        let engine = Engine::cpu().unwrap();
+        for seed in [3u64, 11] {
+            let run = |async_eval: usize| {
+                let mut cfg = tiny_cfg(domain, &dir, seed);
+                cfg.async_eval = async_eval;
+                DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+            };
+            let blocking = run(0);
+            for depth in [1usize, 2] {
+                let overlapped = run(depth);
+                assert_logs_identical(
+                    &blocking,
+                    &overlapped,
+                    &format!("{domain:?} seed {seed} depth {depth}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn async_eval_invariant_to_thread_count() {
+    let domain = Domain::Traffic;
+    let dir = synth_dir("threads", domain);
+    let engine = Engine::cpu().unwrap();
+    let run = |threads: usize| {
+        let mut cfg = tiny_cfg(domain, &dir, 5);
+        cfg.async_eval = 2;
+        cfg.threads = threads;
+        DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+    };
+    // threads = 1: no helpers exist, deferred evals run inline at the
+    // drain points — the degenerate-but-correct fallback.
+    let serial = run(1);
+    for threads in [2usize, 4] {
+        assert_logs_identical(&serial, &run(threads), &format!("threads {threads}"));
+    }
+}
+
+#[test]
+fn async_eval_matches_blocking_under_sharded_gs() {
+    // With gs_shards > 0 the deferred eval job submits its shard-step
+    // phases through the pool's single-phase gate, interleaved with the
+    // coordinator's segment phases — results must not care.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("shards", domain);
+        let engine = Engine::cpu().unwrap();
+        let run = |async_eval: usize| {
+            let mut cfg = tiny_cfg(domain, &dir, 7);
+            cfg.gs_shards = 2;
+            cfg.async_eval = async_eval;
+            cfg.threads = 3;
+            DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+        };
+        assert_logs_identical(&run(0), &run(2), &format!("{domain:?} sharded"));
+    }
+}
+
+/// Drive the real subsystem over randomized `plan_segments` schedules the
+/// way `run_ckpt` does: snapshot at step 0 and every segment end, drain
+/// fully at every retrain boundary and at the end.
+#[test]
+fn every_eval_boundary_snapshots_once_and_none_crosses_a_retrain() {
+    let domain = Domain::Traffic;
+    let dir = synth_dir("prop", domain);
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = tiny_cfg(domain, &dir, 13);
+    cfg.eval_episodes = 1;
+    cfg.horizon = 2;
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let workers = coord.make_workers(cfg.seed);
+    let pool = Arc::new(WorkerPool::new(2));
+
+    let mut gen = Pcg64::seed(4242);
+    for case in 0..25 {
+        let total = (gen.below(40) + 1) as usize;
+        let f = (gen.below(12) + 1) as usize;
+        let eval_every = gen.below(12) as usize;
+        let depth = (gen.below(3) + 1) as usize;
+        cfg.async_eval = depth;
+        let segs = plan_segments(total, f, eval_every);
+
+        let mut ae = AsyncEval::new(coord.artifacts(), &pool, &cfg, true, 0);
+        let mut log = RunLog::default();
+        let mut rng = Pcg64::new(cfg.seed, 1234);
+        ae.snapshot(&workers, &mut rng, 0, &mut log).unwrap();
+        for seg in &segs {
+            if seg.retrain_before {
+                ae.drain_all(&mut log).unwrap();
+                assert_eq!(
+                    ae.pending_len(),
+                    0,
+                    "case {case}: pending eval crossed the retrain boundary at {}",
+                    seg.start
+                );
+            }
+            ae.drain_ready(&mut log).unwrap();
+            ae.snapshot(&workers, &mut rng, seg.start + seg.len, &mut log).unwrap();
+        }
+        ae.drain_all(&mut log).unwrap();
+
+        // Exactly one snapshot at step 0 and at every segment end — in
+        // particular at every eval_every boundary, however the F-grid
+        // splits the segments.
+        let mut want = vec![0usize];
+        want.extend(segs.iter().map(|s| s.start + s.len));
+        assert_eq!(ae.snapshot_steps(), &want[..], "case {case}: snapshot steps");
+        let e = if eval_every == 0 { total } else { eval_every };
+        for boundary in (1..=total).filter(|b| b % e == 0) {
+            assert_eq!(
+                ae.snapshot_steps().iter().filter(|&&s| s == boundary).count(),
+                1,
+                "case {case}: eval boundary {boundary} (eval_every {e}) not snapshotted once"
+            );
+        }
+        // Every snapshot drained exactly once, in snapshot order, carrying
+        // its snapshot step; never more in flight than slots.
+        let drained: Vec<usize> = log.eval_curve.iter().map(|p| p.step).collect();
+        assert_eq!(drained, want, "case {case}: drained curve steps");
+        assert!(log.eval_curve.iter().all(|p| p.value.is_finite()));
+        assert!(
+            ae.max_in_flight() <= depth,
+            "case {case}: {} evals in flight with {depth} slots",
+            ae.max_in_flight()
+        );
+    }
+}

@@ -50,6 +50,7 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path, gs_batch: bool) -> Experiment
         threads: 1,
         gs_batch,
         gs_shards: 0,
+        async_eval: 0,
     }
 }
 

@@ -39,6 +39,7 @@ fn tiny_cfg(domain: Domain, mode: SimMode) -> ExperimentConfig {
         threads: 1,
         gs_batch: true,
         gs_shards: 0,
+        async_eval: 0,
     }
 }
 

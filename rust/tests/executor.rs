@@ -123,6 +123,8 @@ fn tiny_cfg(threads: usize) -> ExperimentConfig {
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
         threads,
         gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
     }
 }
 

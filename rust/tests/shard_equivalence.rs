@@ -258,6 +258,7 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path, gs_shards: usize, threads: us
         threads,
         gs_batch: true,
         gs_shards,
+        async_eval: 0,
     }
 }
 

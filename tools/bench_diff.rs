@@ -1,0 +1,516 @@
+//! `bench_diff` — the CI bench-regression gate.
+//!
+//! Diffs a freshly produced `BENCH_hotpath.json` against the committed
+//! baseline (`benches/BENCH_baseline.json`) and exits non-zero when the
+//! hot path regressed:
+//!
+//! * `calls_per_step` — the batch-first contract (`run_b` executions per
+//!   joint GS step) may NEVER grow: any increase fails the gate;
+//! * `bytes_per_step` — heap traffic per step may never grow either (the
+//!   zero-alloc rows gate at exactly 0);
+//! * `steps_per_s` — throughput may drop at most 20% below the baseline
+//!   (timing noise tolerance; the structural metrics above are exact);
+//! * `sim_zero_alloc` — the bench's own hard gate must still be true.
+//!
+//! Rows are matched by their `op` string. A baseline metric of `null`
+//! means "not gated yet" (machine-dependent until a baseline refresh);
+//! baseline rows missing from the fresh run only warn, because some rows
+//! embed machine facts (thread counts) in their names. At least
+//! `MIN_MATCHED` rows must match so a renamed bench cannot silently
+//! disable the gate.
+//!
+//! Refreshing the baseline (see DESIGN.md §9): download the
+//! `BENCH_hotpath` artifact from a green CI run on main and commit it as
+//! `benches/BENCH_baseline.json` — never regenerate it on a laptop, the
+//! throughput floors are only meaningful on the CI machine class.
+//!
+//!     cargo run --release --bin bench_diff -- BENCH_hotpath.json benches/BENCH_baseline.json
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+/// Minimum matched rows for the gate to count as armed.
+const MIN_MATCHED: usize = 5;
+/// Allowed fractional drop in `steps_per_s` (0.20 = 20%).
+const STEPS_DROP_TOL: f64 = 0.20;
+/// Slack for the "may never grow" metrics (float formatting noise only).
+const EPS: f64 = 1e-6;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (fresh, baseline) = match args.as_slice() {
+        [f, b] => (f.clone(), b.clone()),
+        _ => {
+            eprintln!("usage: bench_diff <fresh BENCH_hotpath.json> <baseline json>");
+            return ExitCode::from(2);
+        }
+    };
+    match run_diff(&fresh, &baseline) {
+        Ok(regressions) if regressions.is_empty() => {
+            println!("bench gate: PASS");
+            ExitCode::SUCCESS
+        }
+        Ok(regressions) => {
+            for r in &regressions {
+                eprintln!("REGRESSION: {r}");
+            }
+            eprintln!("bench gate: FAIL ({} regression(s))", regressions.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("bench gate error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_diff(fresh_path: &str, baseline_path: &str) -> Result<Vec<String>> {
+    let fresh = std::fs::read_to_string(fresh_path)
+        .with_context(|| format!("read fresh bench json {fresh_path}"))?;
+    let baseline = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("read baseline json {baseline_path}"))?;
+    diff(&fresh, &baseline)
+}
+
+/// Compare two bench JSON documents; returns the list of regressions.
+fn diff(fresh: &str, baseline: &str) -> Result<Vec<String>> {
+    let fresh = Bench::parse(fresh).context("parse fresh bench json")?;
+    let base = Bench::parse(baseline).context("parse baseline json")?;
+    let mut regressions = Vec::new();
+
+    if !fresh.sim_zero_alloc {
+        regressions.push("sim_zero_alloc is false: a simulator step loop allocates".to_string());
+    }
+
+    let mut matched = 0usize;
+    for (op, b) in &base.rows {
+        let Some(f) = fresh.rows.get(op) else {
+            eprintln!("warn: baseline row {op:?} missing from fresh run (machine-dependent?)");
+            continue;
+        };
+        matched += 1;
+        // Fail closed: a metric the baseline gates must exist in the fresh
+        // run — a row that stops reporting it would otherwise disarm the
+        // gate as effectively as a regression.
+        if let Some(bv) = b.calls_per_step {
+            match f.calls_per_step {
+                Some(fv) if fv > bv + EPS => regressions.push(format!(
+                    "{op}: calls_per_step grew {bv:.3} -> {fv:.3} (must never grow)"
+                )),
+                Some(_) => {}
+                None => regressions.push(format!(
+                    "{op}: gated calls_per_step missing (null) in fresh run"
+                )),
+            }
+        }
+        if let Some(bv) = b.bytes_per_step {
+            match f.bytes_per_step {
+                Some(fv) if fv > bv + EPS => regressions.push(format!(
+                    "{op}: bytes_per_step grew {bv:.3} -> {fv:.3} (must never grow)"
+                )),
+                Some(_) => {}
+                None => regressions.push(format!(
+                    "{op}: gated bytes_per_step missing (null) in fresh run"
+                )),
+            }
+        }
+        if let Some(bv) = b.steps_per_s {
+            match f.steps_per_s {
+                Some(fv) if fv < bv * (1.0 - STEPS_DROP_TOL) => regressions.push(format!(
+                    "{op}: steps_per_s dropped {bv:.1} -> {fv:.1} (>{:.0}% below baseline)",
+                    STEPS_DROP_TOL * 100.0
+                )),
+                Some(_) => {}
+                None => regressions.push(format!(
+                    "{op}: gated steps_per_s missing (null) in fresh run"
+                )),
+            }
+        }
+    }
+    if matched < MIN_MATCHED {
+        regressions.push(format!(
+            "only {matched} baseline row(s) matched the fresh run (need >= {MIN_MATCHED}) — \
+             renamed bench ops require a baseline refresh"
+        ));
+    }
+    println!("bench gate: {matched} row(s) compared against {}", baselines_label(&base));
+    Ok(regressions)
+}
+
+fn baselines_label(b: &Bench) -> String {
+    format!("baseline with {} row(s)", b.rows.len())
+}
+
+/// One gated row: `None` = null in the JSON = not gated.
+#[derive(Debug, Default, Clone, PartialEq)]
+struct Row {
+    bytes_per_step: Option<f64>,
+    calls_per_step: Option<f64>,
+    steps_per_s: Option<f64>,
+}
+
+struct Bench {
+    rows: BTreeMap<String, Row>,
+    sim_zero_alloc: bool,
+}
+
+impl Bench {
+    fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let obj = v.as_object().context("top level is not an object")?;
+        let sim_zero_alloc = match obj.get("sim_zero_alloc") {
+            Some(json::Value::Bool(b)) => *b,
+            _ => bail!("missing boolean sim_zero_alloc"),
+        };
+        let rows_v = obj.get("rows").context("missing rows")?;
+        let mut rows = BTreeMap::new();
+        for r in rows_v.as_array().context("rows is not an array")? {
+            let r = r.as_object().context("row is not an object")?;
+            let op = match r.get("op") {
+                Some(json::Value::Str(s)) => s.clone(),
+                _ => bail!("row missing string op"),
+            };
+            rows.insert(
+                op,
+                Row {
+                    bytes_per_step: num(r.get("bytes_per_step")),
+                    calls_per_step: num(r.get("calls_per_step")),
+                    steps_per_s: num(r.get("steps_per_s")),
+                },
+            );
+        }
+        Ok(Bench { rows, sim_zero_alloc })
+    }
+}
+
+fn num(v: Option<&json::Value>) -> Option<f64> {
+    match v {
+        Some(json::Value::Num(x)) => Some(*x),
+        _ => None,
+    }
+}
+
+/// Minimal JSON reader (the offline vendor ships no serde): objects,
+/// arrays, strings with escapes, numbers, booleans, null. Enough for the
+/// bench documents this binary consumes — it rejects anything malformed.
+mod json {
+    use anyhow::{bail, Result};
+    use std::collections::BTreeMap;
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(BTreeMap<String, Value>),
+    }
+
+    impl Value {
+        pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+            match self {
+                Value::Obj(m) => Some(m),
+                _ => None,
+            }
+        }
+
+        pub fn as_array(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing garbage at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+            *pos += 1;
+        }
+    }
+
+    fn value(b: &[u8], pos: &mut usize) -> Result<Value> {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            None => bail!("unexpected end of input"),
+            Some(b'{') => object(b, pos),
+            Some(b'[') => array(b, pos),
+            Some(b'"') => Ok(Value::Str(string(b, pos)?)),
+            Some(b't') => lit(b, pos, "true", Value::Bool(true)),
+            Some(b'f') => lit(b, pos, "false", Value::Bool(false)),
+            Some(b'n') => lit(b, pos, "null", Value::Null),
+            Some(_) => number(b, pos),
+        }
+    }
+
+    fn lit(b: &[u8], pos: &mut usize, word: &str, v: Value) -> Result<Value> {
+        if b[*pos..].starts_with(word.as_bytes()) {
+            *pos += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {pos}")
+        }
+    }
+
+    fn number(b: &[u8], pos: &mut usize) -> Result<Value> {
+        let start = *pos;
+        while *pos < b.len()
+            && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            *pos += 1;
+        }
+        let s = std::str::from_utf8(&b[start..*pos])?;
+        match s.parse::<f64>() {
+            Ok(x) => Ok(Value::Num(x)),
+            Err(_) => bail!("bad number {s:?} at byte {start}"),
+        }
+    }
+
+    fn string(b: &[u8], pos: &mut usize) -> Result<String> {
+        if b.get(*pos) != Some(&b'"') {
+            bail!("expected string at byte {pos}");
+        }
+        *pos += 1;
+        let mut out = String::new();
+        loop {
+            match b.get(*pos) {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    *pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    *pos += 1;
+                    match b.get(*pos) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = b
+                                .get(*pos + 1..*pos + 5)
+                                .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            *pos += 4;
+                        }
+                        _ => bail!("bad escape at byte {pos}"),
+                    }
+                    *pos += 1;
+                }
+                Some(&c) => {
+                    // Multi-byte UTF-8 sequences pass through untouched.
+                    let ch_len = utf8_len(c);
+                    let chunk = b
+                        .get(*pos..*pos + ch_len)
+                        .ok_or_else(|| anyhow::anyhow!("truncated utf-8"))?;
+                    out.push_str(std::str::from_utf8(chunk)?);
+                    *pos += ch_len;
+                }
+            }
+        }
+    }
+
+    fn utf8_len(first: u8) -> usize {
+        match first {
+            0x00..=0x7f => 1,
+            0xc0..=0xdf => 2,
+            0xe0..=0xef => 3,
+            _ => 4,
+        }
+    }
+
+    fn array(b: &[u8], pos: &mut usize) -> Result<Value> {
+        *pos += 1; // [
+        let mut out = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b']') {
+            *pos += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            out.push(value(b, pos)?);
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b']') => {
+                    *pos += 1;
+                    return Ok(Value::Arr(out));
+                }
+                _ => bail!("expected , or ] at byte {pos}"),
+            }
+        }
+    }
+
+    fn object(b: &[u8], pos: &mut usize) -> Result<Value> {
+        *pos += 1; // {
+        let mut out = BTreeMap::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b'}') {
+            *pos += 1;
+            return Ok(Value::Obj(out));
+        }
+        loop {
+            skip_ws(b, pos);
+            let key = string(b, pos)?;
+            skip_ws(b, pos);
+            if b.get(*pos) != Some(&b':') {
+                bail!("expected : at byte {pos}");
+            }
+            *pos += 1;
+            out.insert(key, value(b, pos)?);
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b'}') => {
+                    *pos += 1;
+                    return Ok(Value::Obj(out));
+                }
+                _ => bail!("expected , or }} at byte {pos}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A bench document with every metric populated.
+    fn doc(calls: f64, bytes: f64, sps: f64, zero_alloc: bool) -> String {
+        format!(
+            "{{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n\
+             {{\"op\": \"traffic LS step\", \"mean_s\": 0.000001, \"min_s\": 0.000001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
+             {{\"op\": \"warehouse LS step\", \"mean_s\": 0.000001, \"min_s\": 0.000001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
+             {{\"op\": \"traffic GS step (25 ints)\", \"mean_s\": 0.00001, \"min_s\": 0.00001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": {sps}, \"seg_eval_wall_s\": null}},\n\
+             {{\"op\": \"warehouse GS step (25 rb)\", \"mean_s\": 0.00001, \"min_s\": 0.00001, \"bytes_per_step\": {bytes}, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
+             {{\"op\": \"traffic GS eval joint step (batched, N=25)\", \"mean_s\": 0.0001, \"min_s\": 0.0001, \"bytes_per_step\": null, \"peak_extra_bytes\": 64, \"calls_per_step\": {calls}, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
+             {{\"op\": \"coordinator run, async eval x2 (16 agents)\", \"mean_s\": 0.5, \"min_s\": 0.4, \"bytes_per_step\": null, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": 0.5}}\n\
+             ],\n  \"sim_zero_alloc\": {zero_alloc}\n}}\n"
+        )
+    }
+
+    #[test]
+    fn identical_docs_pass() {
+        let d = doc(1.0, 0.0, 50_000.0, true);
+        assert!(diff(&d, &d).unwrap().is_empty());
+    }
+
+    #[test]
+    fn calls_per_step_regression_fails() {
+        let base = doc(1.0, 0.0, 50_000.0, true);
+        let fresh = doc(25.0, 0.0, 50_000.0, true);
+        let regs = diff(&fresh, &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("calls_per_step"), "{regs:?}");
+    }
+
+    #[test]
+    fn bytes_per_step_regression_fails() {
+        let base = doc(1.0, 0.0, 50_000.0, true);
+        let fresh = doc(1.0, 64.0, 50_000.0, true);
+        let regs = diff(&fresh, &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("bytes_per_step"), "{regs:?}");
+    }
+
+    #[test]
+    fn steps_per_s_gets_20_percent_tolerance() {
+        let base = doc(1.0, 0.0, 50_000.0, true);
+        // 10% slower: inside tolerance
+        assert!(diff(&doc(1.0, 0.0, 45_000.0, true), &base).unwrap().is_empty());
+        // 25% slower: regression
+        let regs = diff(&doc(1.0, 0.0, 37_000.0, true), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("steps_per_s"), "{regs:?}");
+    }
+
+    #[test]
+    fn improvements_pass() {
+        let base = doc(25.0, 64.0, 50_000.0, true);
+        assert!(diff(&doc(1.0, 0.0, 90_000.0, true), &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn zero_alloc_gate_must_hold() {
+        let base = doc(1.0, 0.0, 50_000.0, true);
+        let regs = diff(&doc(1.0, 0.0, 50_000.0, false), &base).unwrap();
+        assert!(regs.iter().any(|r| r.contains("sim_zero_alloc")), "{regs:?}");
+    }
+
+    #[test]
+    fn gated_metric_going_null_in_fresh_run_fails() {
+        let base = doc(1.0, 0.0, 50_000.0, true);
+        // the fresh run stops reporting the gated steps_per_s → fail closed
+        let fresh = doc(1.0, 0.0, 50_000.0, true)
+            .replace("\"steps_per_s\": 50000", "\"steps_per_s\": null");
+        let regs = diff(&fresh, &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("missing (null)"), "{regs:?}");
+    }
+
+    #[test]
+    fn null_baseline_metrics_are_not_gated() {
+        let base = doc(1.0, 0.0, 50_000.0, true)
+            .replace("\"steps_per_s\": 50000", "\"steps_per_s\": null");
+        // fresh is 90% slower on that row but the baseline says "ungated"
+        assert!(diff(&doc(1.0, 0.0, 5_000.0, true), &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn missing_fresh_row_warns_but_does_not_fail() {
+        let base = doc(1.0, 0.0, 50_000.0, true);
+        // drop one baseline-matched row from the fresh doc (still >= MIN_MATCHED)
+        let fresh = base.replace("traffic GS eval joint step (batched, N=25)", "renamed op");
+        assert!(diff(&fresh, &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn too_few_matched_rows_fails() {
+        let base = doc(1.0, 0.0, 50_000.0, true);
+        let fresh = doc(1.0, 0.0, 50_000.0, true).replace("\"op\": \"", "\"op\": \"renamed ");
+        let regs = diff(&fresh, &base).unwrap();
+        assert!(regs.iter().any(|r| r.contains("baseline row")), "{regs:?}");
+    }
+
+    #[test]
+    fn real_generator_format_parses() {
+        // Mirrors write_json in benches/hotpath.rs, including nulls & NaN-free floats.
+        let text = "{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n    {\"op\": \"x\", \
+                    \"mean_s\": 0.000001234, \"min_s\": 0.000001000, \"bytes_per_step\": null, \
+                    \"peak_extra_bytes\": 128, \"calls_per_step\": 1.000, \"steps_per_s\": 123.4, \
+                    \"seg_eval_wall_s\": null}\n  ],\n  \"sim_zero_alloc\": true\n}\n";
+        let b = Bench::parse(text).unwrap();
+        assert_eq!(b.rows.len(), 1);
+        assert!(b.sim_zero_alloc);
+        let row = &b.rows["x"];
+        assert_eq!(row.calls_per_step, Some(1.0));
+        assert_eq!(row.bytes_per_step, None);
+        assert_eq!(row.steps_per_s, Some(123.4));
+    }
+
+    #[test]
+    fn old_schema_without_seg_eval_wall_parses() {
+        let text = "{\"bench\": \"hotpath\", \"rows\": [{\"op\": \"y\", \"mean_s\": 1.0, \
+                    \"min_s\": 1.0, \"bytes_per_step\": 0.0, \"peak_extra_bytes\": 0, \
+                    \"calls_per_step\": null, \"steps_per_s\": null}], \"sim_zero_alloc\": true}";
+        assert!(Bench::parse(text).is_ok());
+    }
+}
