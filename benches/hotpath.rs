@@ -58,6 +58,10 @@ struct JsonRow {
     /// evaluations may overlap — the blocking-vs-async eval comparison
     /// (NaN = not a segment+eval row).
     seg_eval_wall_s: f64,
+    /// On-critical-path influence-collection seconds of a coordinator run
+    /// (`RunLog::influence_seconds` with `aip_epochs = 0`) — the
+    /// blocking-vs-async collect comparison (NaN = not a collect row).
+    collect_wall_s: f64,
 }
 
 /// Heap traffic of `steps` iterations of `f` after a warm-up pass:
@@ -81,7 +85,7 @@ fn main() -> Result<()> {
         "hot path microbenchmarks",
         &[
             "op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s",
-            "seg+eval wall",
+            "seg+eval wall", "collect wall",
         ],
     );
     let mut json: Vec<JsonRow> = Vec::new();
@@ -445,13 +449,81 @@ fn main() -> Result<()> {
             push_row_full(
                 &mut table, &mut json,
                 &format!("coordinator run, {label} (16 agents)"),
-                mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, mean,
+                mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, mean, f64::NAN,
             );
         }
         println!(
             "\nsegment+eval overlap (traffic, 16 agents, {threads} threads): blocking \
              {:.3}s vs async {:.3}s -> {:.2}x",
             walls[0], walls[1], walls[0] / walls[1]
+        );
+    }
+
+    // ---- pipelined influence collection overlapped with a segment
+    //
+    // The DIALS-mode twin of the eval comparison (native aip_eval makes
+    // the CE probes run without XLA; aip_epochs = 0 keeps the update
+    // artifacts out). Two retrains: step 0 (degenerate — nothing precedes
+    // it) and step 120, whose Algorithm-2 collection is snapshotted at
+    // the preceding boundary (step 60) and overlaps the [60, 120)
+    // training segment under `--async-collect 1`. The row's collect-wall
+    // column is the run's ON-PATH influence time (collect snapshot +
+    // inline loop or residual drain stall; AIP retrain cost is ~0 at 0
+    // epochs) — the async row undercutting the blocking one is the
+    // overlap win. Datasets/curves are bit-identical either way
+    // (tests/async_collect_equivalence.rs); this measures time only.
+    #[cfg(not(feature = "xla"))]
+    {
+        use dials::runtime::synth;
+
+        let domain = Domain::Traffic;
+        let dir = std::env::temp_dir().join("dials_hotpath_synth").join("async_collect");
+        let _ = std::fs::remove_dir_all(&dir);
+        synth::write_native_artifacts(&dir, domain, 3)?;
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let mk_cfg = |async_collect: usize| ExperimentConfig {
+            domain,
+            mode: SimMode::Dials,
+            grid_side: 4,
+            total_steps: 240,
+            aip_train_freq: 120,
+            aip_dataset: 400,
+            aip_epochs: 0,
+            eval_every: 60,
+            eval_episodes: 2,
+            horizon: 60,
+            seed: 13,
+            // rollout never fills: segments are pure forward+LS stepping,
+            // which the native backend executes for real
+            ppo: PpoConfig { rollout_len: 512, minibatch: 32, epochs: 1, ..Default::default() },
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            async_collect,
+            ..Default::default()
+        };
+        let mut collect_walls = [f64::NAN; 2];
+        for (k, (label, mode)) in [("blocking collect", 0usize), ("async collect", 1)]
+            .into_iter()
+            .enumerate()
+        {
+            let coord = DialsCoordinator::new(&engine, mk_cfg(mode))?;
+            let mut influence = 0.0f64;
+            let mut runs = 0u32;
+            let (mean, min) = time_n(3, || {
+                let log = coord.run().unwrap();
+                influence += log.influence_seconds;
+                runs += 1;
+            });
+            collect_walls[k] = influence / runs as f64;
+            push_row_collect(
+                &mut table, &mut json,
+                &format!("coordinator run, {label} (16 agents)"),
+                mean, min, "2 retrains + 5 evals", collect_walls[k],
+            );
+        }
+        println!(
+            "\nsegment+collect overlap (traffic, 16 agents, {threads} threads): blocking \
+             {:.3}s vs async {:.3}s on-path collect -> {:.2}x",
+            collect_walls[0], collect_walls[1], collect_walls[0] / collect_walls[1]
         );
     }
 
@@ -499,12 +571,29 @@ fn push_row_steps(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step,
-        steps_per_s, f64::NAN,
+        steps_per_s, f64::NAN, f64::NAN,
     );
 }
 
-/// The full row shape, including the segment+eval wall-clock column the
-/// blocking-vs-async eval rows report.
+/// `push_row` for the blocking-vs-async collect coordinator rows: the
+/// collect-wall column carries the run's on-path influence seconds.
+fn push_row_collect(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    collect_wall_s: f64,
+) {
+    push_row_full(
+        table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN,
+        collect_wall_s,
+    );
+}
+
+/// The full row shape, including the segment+eval and collect wall-clock
+/// columns the blocking-vs-async coordinator rows report.
 #[allow(clippy::too_many_arguments)]
 fn push_row_full(
     table: &mut Table,
@@ -518,11 +607,13 @@ fn push_row_full(
     calls_per_step: f64,
     steps_per_s: f64,
     seg_eval_wall_s: f64,
+    collect_wall_s: f64,
 ) {
     let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
     let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
     let sps = if steps_per_s.is_nan() { "-".to_string() } else { format!("{steps_per_s:.0}") };
     let wall = if seg_eval_wall_s.is_nan() { "-".to_string() } else { format!("{seg_eval_wall_s:.3}s") };
+    let cwall = if collect_wall_s.is_nan() { "-".to_string() } else { format!("{collect_wall_s:.3}s") };
     table.row(vec![
         op.to_string(),
         us(mean),
@@ -533,6 +624,7 @@ fn push_row_full(
         cps,
         sps,
         wall,
+        cwall,
     ]);
     json.push(JsonRow {
         op: op.to_string(),
@@ -543,6 +635,7 @@ fn push_row_full(
         calls_per_step,
         steps_per_s,
         seg_eval_wall_s,
+        collect_wall_s,
     });
 }
 
@@ -554,9 +647,10 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
         let cps = if r.calls_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.calls_per_step) };
         let sps = if r.steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.steps_per_s) };
         let wall = if r.seg_eval_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.seg_eval_wall_s) };
+        let cwall = if r.collect_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.collect_wall_s) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"seg_eval_wall_s\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, wall,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, wall, cwall,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

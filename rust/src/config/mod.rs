@@ -142,6 +142,19 @@ pub struct ExperimentConfig {
     /// bit-identical between 0 and any N >= 1 for the same seed
     /// (`tests/async_eval_equivalence.rs`).
     pub async_eval: usize,
+    /// Overlap the Algorithm-2 influence collection with the training
+    /// segment preceding each AIP retrain
+    /// (`coordinator::async_collect`): at the boundary preceding a
+    /// retrain the joint policy + AIPs snapshot into a dedicated collect
+    /// slot and the whole collection loop runs as a deferred job on the
+    /// worker pool, merging into the worker datasets right before the
+    /// retrain. 0 (default) = the blocking reference path, which runs
+    /// the identical schedule inline; any value >= 1 enables the single
+    /// pipelined slot (a collection never outlives its retrain, so
+    /// deeper queues cannot exist). Per-agent datasets, CE curves, and
+    /// eval curves are bit-identical between 0 and 1 for the same seed
+    /// (`tests/async_collect_equivalence.rs`).
+    pub async_collect: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -164,6 +177,7 @@ impl Default for ExperimentConfig {
             gs_batch: true,
             gs_shards: 0,
             async_eval: 0,
+            async_collect: 0,
         }
     }
 }
@@ -221,6 +235,7 @@ impl ExperimentConfig {
         get_usize!(exp, "threads", cfg.threads);
         get_usize!(exp, "gs_shards", cfg.gs_shards);
         get_usize!(exp, "async_eval", cfg.async_eval);
+        get_usize!(exp, "async_collect", cfg.async_collect);
         if let Some(v) = exp.get("seed") {
             cfg.seed = v.as_int()? as u64;
         }
@@ -276,6 +291,7 @@ impl ExperimentConfig {
         cfg.threads = args.get_usize("threads", cfg.threads)?;
         cfg.gs_shards = args.get_usize("gs-shards", cfg.gs_shards)?;
         cfg.async_eval = args.get_usize("async-eval", cfg.async_eval)?;
+        cfg.async_collect = args.get_usize("async-collect", cfg.async_collect)?;
         if let Some(dir) = args.get("artifacts") {
             cfg.artifacts_dir = dir.to_string();
         }
@@ -382,6 +398,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ExperimentConfig::from_cli(&args).unwrap().async_eval, 2);
+    }
+
+    #[test]
+    fn async_collect_defaults_off_and_parses() {
+        assert_eq!(ExperimentConfig::default().async_collect, 0);
+        let doc = parse("[experiment]\nasync_collect = 1\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().async_collect, 1);
+        let args = crate::util::cli::Args::parse(
+            ["--async-collect", "1"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().async_collect, 1);
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Pipelined influence collection: overlap the Algorithm-2 GS collection
+//! loop with the training segment that precedes its AIP retrain
+//! (DESIGN.md §10).
+//!
+//! After async eval (PR 4, DESIGN.md §8) the GS data-collection phase was
+//! the largest remaining serial block on the critical path: every retrain
+//! boundary stalled all agents while the coordinator stepped the GS for
+//! `aip_dataset` joint steps. The paper's own thesis — keep the slow GS
+//! off the training loop by periodically syncing learned influence models
+//! (Suau et al., NeurIPS 2022) — tolerates boundedly-stale influence
+//! data, so collection has no business serializing segments either.
+//!
+//! With `cfg.async_collect > 0` the coordinator, **at the boundary
+//! preceding an AIP retrain** (the start of the segment whose end is the
+//! retrain step):
+//!
+//! 1. **snapshots** — splits a collect RNG off the episode RNG (one
+//!    `next_u64`, consumed identically by the blocking path) and stages
+//!    every worker's policy AND AIP `NetState` rows into the dedicated
+//!    collect slot (a `GsScratch::collect_slot` with its own policy/AIP
+//!    banks + its own GS instance — `policy_only` shows the shape for
+//!    eval; collection additionally forwards the AIP, so the slot carries
+//!    a full `AipBank`). Staging reuses the version-tracked partial
+//!    re-copy of `runtime::NetBank`;
+//! 2. **defers** — submits the whole Algorithm-2 loop
+//!    (`collect::collect_staged`) as ONE deferred pool job
+//!    (`WorkerPool::submit_deferred`). The job writes rows into
+//!    slot-owned per-agent **staging** `InfluenceDataset`s, so worker
+//!    datasets are never touched off-thread. With `gs_shards > 0` the
+//!    slot's sharded GS steps interleave with segment phases through the
+//!    pool's single-phase gate (same caveat as async eval: they park at
+//!    the gate while a segment phase runs);
+//! 3. **drains** — blocks at the retrain site, BEFORE the retrain (or the
+//!    pre-retrain CE probe) consumes the data, then merges the staging
+//!    datasets into the workers' datasets **in agent order** via
+//!    `InfluenceDataset::append_from` — bit-identical final contents to
+//!    pushing the rows directly (the merge replays whole episodes through
+//!    the same capacity-eviction rule). The coordinator also drains
+//!    before a checkpoint save and before `final_return`, so no job ever
+//!    outlives the run.
+//!
+//! At most ONE collection is ever in flight: a snapshot is only taken for
+//! the immediately-next retrain, which drains it. On a 1-thread pool no
+//! helpers exist and the job runs inline at the drain point
+//! (`DeferredHandle::wait` steals queued jobs), degenerating to blocking.
+//!
+//! Determinism contract: the collect RNG splits at the snapshot step, the
+//! slot GS resets from that stream exactly like the blocking path's GS
+//! does, and the staged bank rows are frozen copies — so per-agent
+//! datasets, CE curves, and eval curves are **bit-identical** between
+//! `async_collect = 0` and `1` for the same seed, both domains, any
+//! thread/shard/batch mode (`rust/tests/async_collect_equivalence.rs`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::exec::{DeferredHandle, WorkerPool};
+use crate::influence::InfluenceDataset;
+use crate::runtime::ArtifactSet;
+use crate::util::rng::Pcg64;
+
+use super::collect::{collect_staged, stage_collect_banks};
+use super::worker::AgentWorker;
+use super::GsSlot;
+
+/// The collect slot: a [`GsSlot`] (own GS + full scratch) plus the
+/// per-agent staging datasets the deferred job writes into.
+struct CollectSlot {
+    slot: GsSlot,
+    staging: Vec<InfluenceDataset>,
+}
+
+/// What a finished deferred collection hands back.
+struct CollectDone {
+    slot: CollectSlot,
+    /// Overlapped loop seconds, measured inside the job.
+    secs: f64,
+    /// GS env steps the loop consumed.
+    gs_steps: usize,
+}
+
+struct Pending {
+    /// Step the snapshot was taken at (the boundary preceding the
+    /// retrain the data is for).
+    step: usize,
+    handle: DeferredHandle<CollectDone>,
+}
+
+/// The single-slot async collection subsystem. Built once per run when
+/// `cfg.async_collect > 0` and the mode retrains AIPs.
+pub struct AsyncCollect {
+    arts: Arc<ArtifactSet>,
+    pool: Arc<WorkerPool>,
+    rows_per_agent: usize,
+    horizon: usize,
+    /// The slot, parked here whenever no collection is in flight.
+    slot: Option<CollectSlot>,
+    pending: Option<Pending>,
+    /// Snapshot steps in submission order (test observability).
+    history: Vec<usize>,
+    /// Sum of overlapped collect seconds, measured inside the jobs.
+    compute_seconds: f64,
+    /// Total GS env steps consumed by drained collections.
+    gs_steps: usize,
+}
+
+impl AsyncCollect {
+    /// `batched`/`shards` must be the resolved modes of the main scratch
+    /// (`gs_batch_mode`, `gs_shard_mode`) — serial and sharded stepping
+    /// are distinct deterministic families.
+    pub fn new(
+        arts: &Arc<ArtifactSet>,
+        pool: &Arc<WorkerPool>,
+        cfg: &ExperimentConfig,
+        batched: bool,
+        shards: usize,
+    ) -> Self {
+        let n = cfg.n_agents();
+        let spec = &arts.spec;
+        let staging = (0..n)
+            .map(|_| InfluenceDataset::staging(spec.aip_feat, spec.aip_heads))
+            .collect();
+        AsyncCollect {
+            arts: Arc::clone(arts),
+            pool: Arc::clone(pool),
+            rows_per_agent: cfg.aip_dataset,
+            horizon: cfg.horizon,
+            slot: Some(CollectSlot {
+                slot: GsSlot::collect(arts, cfg, batched, shards),
+                staging,
+            }),
+            pending: None,
+            history: Vec::new(),
+            compute_seconds: 0.0,
+            gs_steps: 0,
+        }
+    }
+
+    /// Snapshot the joint policy + AIPs at `step` and queue the
+    /// Algorithm-2 loop as a deferred pool job.
+    ///
+    /// Splits the collect RNG off `rng` FIRST (one `next_u64`, exactly
+    /// what the blocking path consumes at the same point), so the
+    /// training stream is independent of when the collection runs. The
+    /// drain discipline guarantees the slot is free here — a pending
+    /// collection never survives past its retrain.
+    pub fn snapshot(&mut self, workers: &[AgentWorker], rng: &mut Pcg64, step: usize) -> Result<()> {
+        let mut collect_rng = rng.split(step as u64);
+        if self.pending.is_some() {
+            bail!(
+                "collect snapshot at step {step} while a collection from step {} is \
+                 still pending — the drain-before-retrain discipline was violated",
+                self.history.last().copied().unwrap_or(0)
+            );
+        }
+        let mut cslot = self.slot.take().expect("collect slot parked when nothing pending");
+        stage_collect_banks(&self.arts, &mut cslot.slot.scratch, workers)?;
+        self.history.push(step);
+
+        let arts = Arc::clone(&self.arts);
+        let pool = Arc::clone(&self.pool);
+        let (rows, horizon) = (self.rows_per_agent, self.horizon);
+        let handle = self.pool.submit_deferred(move || {
+            let t0 = Instant::now();
+            let CollectSlot { mut slot, mut staging } = cslot;
+            let gs_steps = {
+                let mut sinks: Vec<&mut InfluenceDataset> = staging.iter_mut().collect();
+                collect_staged(
+                    &arts, slot.gs.as_mut(), &mut sinks, rows, horizon,
+                    &mut collect_rng, &mut slot.scratch, &pool,
+                )?
+            };
+            Ok(CollectDone {
+                slot: CollectSlot { slot, staging },
+                secs: t0.elapsed().as_secs_f64(),
+                gs_steps,
+            })
+        });
+        self.pending = Some(Pending { step, handle });
+        Ok(())
+    }
+
+    /// Block until the pending collection (if any) has landed, then merge
+    /// its staging datasets into the workers' datasets in agent order.
+    /// Called at the retrain site before anything reads the datasets, and
+    /// as a safety net before checkpoint save / `final_return`. Returns
+    /// whether a collection actually drained.
+    pub fn drain_into(&mut self, workers: &mut [AgentWorker]) -> Result<bool> {
+        let Some(p) = self.pending.take() else {
+            return Ok(false);
+        };
+        let mut done = p
+            .handle
+            .wait()
+            .with_context(|| format!("async GS collection (snapshot step {}) failed", p.step))?;
+        debug_assert_eq!(done.slot.staging.len(), workers.len());
+        for (w, staged) in workers.iter_mut().zip(done.slot.staging.iter_mut()) {
+            w.dataset.append_from(staged);
+        }
+        self.compute_seconds += done.secs;
+        self.gs_steps += done.gs_steps;
+        self.slot = Some(done.slot);
+        Ok(true)
+    }
+
+    /// Whether a collection is currently in flight.
+    pub fn pending_len(&self) -> usize {
+        usize::from(self.pending.is_some())
+    }
+
+    /// Snapshot steps taken so far, in submission order.
+    pub fn snapshot_steps(&self) -> &[usize] {
+        &self.history
+    }
+
+    /// Total overlapped collect seconds measured inside the deferred jobs
+    /// — the `collect_compute` side of the timer split; the snapshot side
+    /// is timed by the coordinator on the critical path.
+    pub fn compute_seconds(&self) -> f64 {
+        self.compute_seconds
+    }
+
+    /// GS env steps consumed by drained collections.
+    pub fn gs_steps(&self) -> usize {
+        self.gs_steps
+    }
+}

@@ -46,27 +46,19 @@ use anyhow::{Context, Result};
 use crate::config::ExperimentConfig;
 use crate::exec::{DeferredHandle, WorkerPool};
 use crate::runtime::ArtifactSet;
-use crate::sim::GlobalSim;
 use crate::util::metrics::{CurvePoint, RunLog};
 use crate::util::rng::Pcg64;
 
 use super::evaluate::evaluate_staged;
 use super::worker::AgentWorker;
-use super::{make_global_sim, GsScratch};
-
-/// One double-buffer slot: everything an in-flight evaluation owns, so it
-/// shares nothing with the training path but the worker pool.
-struct EvalSlot {
-    gs: Box<dyn GlobalSim>,
-    scratch: GsScratch,
-}
+use super::GsSlot;
 
 /// What a finished deferred evaluation hands back: the mean return, the
 /// overlapped compute seconds, and the slot for reuse.
 struct EvalDone {
     ret: f64,
     secs: f64,
-    slot: EvalSlot,
+    slot: GsSlot,
 }
 
 struct Pending {
@@ -84,7 +76,7 @@ pub struct AsyncEval {
     pool: Arc<WorkerPool>,
     episodes: usize,
     horizon: usize,
-    free: Vec<EvalSlot>,
+    free: Vec<GsSlot>,
     pending: VecDeque<Pending>,
     /// Snapshot steps in submission order (test observability).
     history: Vec<usize>,
@@ -113,7 +105,6 @@ impl AsyncEval {
         batched: bool,
         shards: usize,
     ) -> Self {
-        let n = cfg.n_agents();
         let slots = cfg.async_eval.clamp(1, Self::MAX_SLOTS);
         if cfg.async_eval > Self::MAX_SLOTS {
             eprintln!(
@@ -123,15 +114,9 @@ impl AsyncEval {
                 Self::MAX_SLOTS
             );
         }
-        let free = (0..slots)
-            .map(|_| {
-                // policy_only: evaluation never forwards the AIP, so the
-                // slot skips the AIP bank/feature buffers entirely.
-                let mut scratch = GsScratch::policy_only(&arts.spec, n, batched);
-                scratch.enable_shards(shards);
-                EvalSlot { gs: make_global_sim(cfg.domain, cfg.grid_side), scratch }
-            })
-            .collect();
+        // GsSlot::eval is policy_only: evaluation never forwards the AIP,
+        // so the slots skip the AIP bank/feature buffers entirely.
+        let free = (0..slots).map(|_| GsSlot::eval(arts, cfg, batched, shards)).collect();
         AsyncEval {
             arts: Arc::clone(arts),
             pool: Arc::clone(pool),
@@ -177,11 +162,11 @@ impl AsyncEval {
         let (episodes, horizon) = (self.episodes, self.horizon);
         let handle = self.pool.submit_deferred(move || {
             let t0 = Instant::now();
-            let EvalSlot { mut gs, mut scratch } = slot;
+            let GsSlot { mut gs, mut scratch } = slot;
             let ret = evaluate_staged(
                 &arts, gs.as_mut(), episodes, horizon, &mut eval_rng, &mut scratch, &pool,
             )?;
-            Ok(EvalDone { ret, secs: t0.elapsed().as_secs_f64(), slot: EvalSlot { gs, scratch } })
+            Ok(EvalDone { ret, secs: t0.elapsed().as_secs_f64(), slot: GsSlot { gs, scratch } })
         });
         self.pending.push_back(Pending { step, handle });
         self.max_in_flight = self.max_in_flight.max(self.pending.len());

@@ -1,9 +1,19 @@
 //! Checkpointing: persist / restore every agent's policy and AIP state.
 //!
 //! Layout: `<dir>/agent_<i>_{policy,aip}_{flat,m,v}.npk` plus a
-//! `checkpoint.meta` (key=value) with the interface fingerprint, so
-//! restoring against mismatched artifacts fails loudly instead of
-//! silently mis-slicing parameter vectors.
+//! `checkpoint.meta` (key=value) with the interface fingerprint AND each
+//! net's Adam step counter, so restoring against mismatched artifacts
+//! fails loudly instead of silently mis-slicing parameter vectors.
+//!
+//! The step counters matter: the update artifacts fold Adam's
+//! bias-correction `1 - β^t` into the graph, keyed on `NetState::step`.
+//! A restore that kept the warm moment vectors but reset `step` to 0
+//! would re-run the correction from t = 1 — the first post-restore
+//! updates would be over-scaled by up to 1/(1-β), silently bending the
+//! learning curve. Steps are therefore saved per net and required at
+//! load time; `coordinator_integration.rs` pins that a save → load →
+//! train sequence takes bit-identical update steps to an uninterrupted
+//! run.
 
 use std::path::Path;
 
@@ -16,13 +26,21 @@ use super::worker::AgentWorker;
 
 pub fn save_checkpoint(dir: &Path, spec: &NetSpec, workers: &[AgentWorker]) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
-    let meta = format!(
+    let mut meta = format!(
         "domain={}\nn_agents={}\npolicy_params={}\naip_params={}\n",
         spec.domain,
         workers.len(),
         spec.policy_params,
         spec.aip_params
     );
+    for w in workers {
+        meta.push_str(&format!(
+            "agent_{i}_policy_step={}\nagent_{i}_aip_step={}\n",
+            w.policy.net.step,
+            w.aip.net.step,
+            i = w.id
+        ));
+    }
     std::fs::write(dir.join("checkpoint.meta"), meta)?;
     for w in workers {
         let i = w.id;
@@ -53,16 +71,40 @@ pub fn load_checkpoint(dir: &Path, spec: &NetSpec, workers: &mut [AgentWorker]) 
     if pp != spec.policy_params {
         bail!("checkpoint policy_params {pp} != artifact {}", spec.policy_params);
     }
+    let ap: usize = get("aip_params").unwrap_or("0").parse().unwrap_or(0);
+    if ap != spec.aip_params {
+        bail!("checkpoint aip_params {ap} != artifact {}", spec.aip_params);
+    }
+    // Adam step counters: required, not defaulted — a silent step=0
+    // restore would over-scale the first post-restore updates (warm
+    // moments, cold bias correction).
+    let get_step = |key: &str| -> Result<u64> {
+        get(key)
+            .with_context(|| {
+                format!(
+                    "checkpoint in {} is missing {key} — it predates Adam-step \
+                     persistence and cannot be restored without re-doing bias \
+                     correction from t=0; re-save it with this version",
+                    dir.display()
+                )
+            })?
+            .parse::<u64>()
+            .with_context(|| format!("checkpoint key {key} is not an integer"))
+    };
     for w in workers.iter_mut() {
         let i = w.id;
+        let policy_step = get_step(&format!("agent_{i}_policy_step"))?;
+        let aip_step = get_step(&format!("agent_{i}_aip_step"))?;
         let flat = read_npk(&dir.join(format!("agent_{i}_policy_flat.npk")))?;
         let m = read_npk(&dir.join(format!("agent_{i}_policy_m.npk")))?;
         let v = read_npk(&dir.join(format!("agent_{i}_policy_v.npk")))?;
         w.policy.net.absorb(flat, m, v);
+        w.policy.net.step = policy_step;
         let flat = read_npk(&dir.join(format!("agent_{i}_aip_flat.npk")))?;
         let m = read_npk(&dir.join(format!("agent_{i}_aip_m.npk")))?;
         let v = read_npk(&dir.join(format!("agent_{i}_aip_v.npk")))?;
         w.aip.net.absorb(flat, m, v);
+        w.aip.net.step = aip_step;
     }
     Ok(())
 }

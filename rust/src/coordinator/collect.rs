@@ -12,13 +12,22 @@
 //! advances each agent's recurrent state in lock-step with the rows being
 //! recorded (the streaming discipline the IALS loop replays) and leaves
 //! the joint predictions in `scratch.probs`; nothing on the training path
-//! consumes them yet — they are the hook for online CE monitoring and the
-//! ROADMAP's sharded-GS/async work, which is why the call ships now.
+//! consumes them yet — they are the hook for online CE monitoring.
+//!
+//! Two entry points since the pipelined-collection redesign:
+//! * [`collect_datasets`] — stage the workers' policies + AIPs into the
+//!   scratch banks, then run the loop straight into the workers' datasets
+//!   (the blocking shape used by tests, benches, and direct callers);
+//! * [`collect_staged`] — the loop proper over caller-provided dataset
+//!   sinks, banks already staged. The async-collect slot points the sinks
+//!   at its own staging datasets so worker datasets are never touched
+//!   off-thread (`coordinator::async_collect`), exactly like
+//!   `evaluate_staged` runs a frozen snapshot for async eval.
 
 use anyhow::Result;
 
 use crate::exec::WorkerPool;
-use crate::influence::{encode_alsh, label_to_classes};
+use crate::influence::{encode_alsh, label_to_classes, InfluenceDataset};
 use crate::runtime::ArtifactSet;
 use crate::sim::GlobalSim;
 use crate::util::rng::Pcg64;
@@ -39,17 +48,51 @@ pub fn collect_datasets(
     scratch: &mut GsScratch,
     pool: &WorkerPool,
 ) -> Result<usize> {
-    let n = gs.n_agents();
-    debug_assert_eq!(workers.len(), n);
-    debug_assert_eq!(scratch.obs.len(), n * arts.spec.obs_dim);
-    let spec = &arts.spec;
-
     // Policies and AIPs are fixed for the whole collection phase: stage
     // both banks once (rows re-copied only on version bumps).
+    stage_collect_banks(arts, scratch, workers)?;
+    let mut sinks: Vec<&mut InfluenceDataset> =
+        workers.iter_mut().map(|w| &mut w.dataset).collect();
+    collect_staged(arts, gs, &mut sinks, rows_per_agent, horizon, rng, scratch, pool)
+}
+
+/// Stage every worker's policy AND AIP into `scratch`'s banks — the
+/// snapshot half of a collection phase (timed as `collect_snapshot` by the
+/// coordinator; the async path stages into a dedicated slot scratch).
+pub(crate) fn stage_collect_banks(
+    arts: &ArtifactSet,
+    scratch: &mut GsScratch,
+    workers: &[AgentWorker],
+) -> Result<()> {
     scratch.stage_policies(arts, workers)?;
     for (i, w) in workers.iter().enumerate() {
         scratch.aip_bank.stage(&arts.engine, i, &w.aip.net)?;
     }
+    Ok(())
+}
+
+/// The Algorithm-2 loop proper: the scratch's policy AND AIP banks must
+/// already hold the joint snapshot to collect under
+/// (`stage_collect_banks`), and rows land in `datasets[i]` for agent `i` —
+/// the workers' own datasets on the blocking path, the async slot's
+/// staging datasets on the deferred path. Banks are NOT re-staged per
+/// step: a collection always runs one fixed snapshot, which is what lets
+/// the async path collect rows captured at an earlier boundary.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn collect_staged(
+    arts: &ArtifactSet,
+    gs: &mut dyn GlobalSim,
+    datasets: &mut [&mut InfluenceDataset],
+    rows_per_agent: usize,
+    horizon: usize,
+    rng: &mut Pcg64,
+    scratch: &mut GsScratch,
+    pool: &WorkerPool,
+) -> Result<usize> {
+    let n = gs.n_agents();
+    debug_assert_eq!(datasets.len(), n);
+    debug_assert_eq!(scratch.obs.len(), n * arts.spec.obs_dim);
+    let spec = &arts.spec;
 
     let mut gs_steps = 0usize;
     let mut collected = 0usize;
@@ -58,8 +101,8 @@ pub fn collect_datasets(
         scratch.gs_reset(gs, rng);
         scratch.policy_bank.reset_episodes();
         scratch.aip_bank.reset_episodes();
-        for w in workers.iter_mut() {
-            w.dataset.begin_episode();
+        for d in datasets.iter_mut() {
+            d.begin_episode();
         }
         for _t in 0..horizon {
             // ONE policy run_b for the whole joint step
@@ -81,10 +124,10 @@ pub fn collect_datasets(
             scratch
                 .aip_bank
                 .forward_into(arts, &scratch.feats, &mut scratch.probs)?;
-            for (i, w) in workers.iter_mut().enumerate() {
+            for (i, d) in datasets.iter_mut().enumerate() {
                 gs.influence_label(i, &mut scratch.raw_label);
                 label_to_classes(&scratch.raw_label, spec.aip_heads, spec.aip_cls, &mut scratch.label);
-                w.dataset.push(&scratch.feats[i * fd..(i + 1) * fd], &scratch.label);
+                d.push(&scratch.feats[i * fd..(i + 1) * fd], &scratch.label);
             }
             collected += 1;
             if collected >= rows_per_agent {

@@ -11,6 +11,7 @@
 //! path* — the wall-clock a ≥N-core machine (the paper's cluster) would
 //! measure. See DESIGN.md's substitution table.
 
+mod async_collect;
 mod async_eval;
 mod checkpoint;
 mod collect;
@@ -18,9 +19,11 @@ mod evaluate;
 mod policy_rt;
 mod worker;
 
+pub use async_collect::AsyncCollect;
 pub use async_eval::AsyncEval;
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub use collect::collect_datasets;
+pub(crate) use collect::{collect_staged, stage_collect_banks};
 pub(crate) use evaluate::evaluate_staged;
 pub use evaluate::{evaluate_on_gs, evaluate_scripted};
 pub use crate::runtime::ActOut;
@@ -28,12 +31,13 @@ pub use policy_rt::PolicyRuntime;
 pub use worker::AgentWorker;
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::{Domain, ExperimentConfig, SimMode};
 use crate::exec::WorkerPool;
-use crate::influence::AipRuntime;
+use crate::influence::{AipRuntime, InfluenceDataset};
 use crate::nn::NetState;
 use crate::ppo::PpoTrainer;
 use crate::runtime::{AipBank, ArtifactSet, Engine, NetSpec, PolicyBank};
@@ -93,6 +97,17 @@ impl GsScratch {
     /// otherwise duplicate the whole AIP parameter bank N times.
     pub fn policy_only(spec: &NetSpec, n_agents: usize, batched: bool) -> Self {
         Self::with_aip_rows(spec, n_agents, batched, 0)
+    }
+
+    /// Scratch for the async-collect slot: full policy AND AIP banks plus
+    /// the ALSH staging buffers — collection forwards both families every
+    /// joint step (`policy_only` shows the shape for the eval slots,
+    /// which skip the AIP side). Structurally identical to the main
+    /// scratch; the dedicated constructor documents the slot contract:
+    /// the deferred job owns this scratch outright and shares nothing
+    /// with the training path but the worker pool.
+    pub fn collect_slot(spec: &NetSpec, n_agents: usize, batched: bool) -> Self {
+        Self::with_aip_rows(spec, n_agents, batched, n_agents)
     }
 
     fn with_aip_rows(spec: &NetSpec, n_agents: usize, batched: bool, aip_rows: usize) -> Self {
@@ -204,6 +219,46 @@ impl GsScratch {
             *a = o.action;
         }
         Ok(())
+    }
+}
+
+/// One deferred-GS-phase slot: everything an in-flight background GS
+/// phase owns — its own GS instance plus a `GsScratch` — so it shares
+/// nothing with the training path but the worker pool. The async-eval
+/// slots (`AsyncEval`) and the async-collect slot (`AsyncCollect`) are
+/// both built from this; they differ only in which banks the scratch
+/// carries.
+pub(crate) struct GsSlot {
+    pub(crate) gs: Box<dyn GlobalSim>,
+    pub(crate) scratch: GsScratch,
+}
+
+impl GsSlot {
+    /// An eval slot: policy bank only (evaluation never forwards the
+    /// AIP, and N slots would duplicate the AIP parameter bank N times).
+    pub(crate) fn eval(
+        arts: &ArtifactSet,
+        cfg: &ExperimentConfig,
+        batched: bool,
+        shards: usize,
+    ) -> Self {
+        Self::build(GsScratch::policy_only(&arts.spec, cfg.n_agents(), batched), cfg, shards)
+    }
+
+    /// The collect slot: full policy + AIP banks (Algorithm 2 forwards
+    /// both families every joint step).
+    pub(crate) fn collect(
+        arts: &ArtifactSet,
+        cfg: &ExperimentConfig,
+        batched: bool,
+        shards: usize,
+    ) -> Self {
+        Self::build(GsScratch::collect_slot(&arts.spec, cfg.n_agents(), batched), cfg, shards)
+    }
+
+    fn build(mut scratch: GsScratch, cfg: &ExperimentConfig, shards: usize) -> Self {
+        scratch.enable_shards(shards);
+        GsSlot { gs: make_global_sim(cfg.domain, cfg.grid_side), scratch }
     }
 }
 
@@ -344,6 +399,17 @@ impl DialsCoordinator {
         let mut async_eval = (cfg.async_eval > 0)
             .then(|| AsyncEval::new(&self.arts, &pool, cfg, batched, shards));
 
+        // cfg.async_collect > 0: the Algorithm-2 collection loop overlaps
+        // the training segment preceding each AIP retrain as a deferred
+        // pool job (coordinator::async_collect); 0 = the blocking
+        // reference path. Both paths snapshot at the boundary preceding
+        // the retrain and split the collect RNG there, so datasets, CE
+        // curves, and eval curves are bit-identical
+        // (tests/async_collect_equivalence.rs).
+        let retrains = cfg.mode == SimMode::Dials;
+        let mut async_collect = (retrains && cfg.async_collect > 0)
+            .then(|| AsyncCollect::new(&self.arts, &pool, cfg, batched, shards));
+
         // initial evaluation point (step 0)
         match async_eval.as_mut() {
             Some(ae) => {
@@ -356,22 +422,39 @@ impl DialsCoordinator {
         }
 
         let segments = plan_segments(cfg.total_steps, cfg.aip_train_freq, cfg.eval_every);
-        for seg in &segments {
+
+        // Collect point for the FIRST retrain (always at step 0): no
+        // preceding segment exists, so the async path degenerates to
+        // blocking — the snapshot is taken and drained back-to-back.
+        if retrains && segments.first().is_some_and(|s| s.retrain_before) {
+            collect_point(
+                &self.arts, cfg, gs.as_mut(), &mut workers, &mut scratch, &pool,
+                &mut timers, &mut rng, 0, async_collect.as_mut(),
+            )?;
+        }
+
+        for (k, seg) in segments.iter().enumerate() {
             // ---- influence phase (DIALS only; Algorithm 1 lines 3-6)
-            if seg.retrain_before && cfg.mode == SimMode::Dials {
+            if seg.retrain_before && retrains {
                 // Drain point: a pending eval never crosses an AIP retrain
                 // boundary — eval pool jobs from the pre-retrain era land
                 // before the influence phase claims the pool.
                 if let Some(ae) = async_eval.as_mut() {
                     ae.drain_all(&mut log)?;
                 }
-                timers.time("collect", || {
-                    collect_datasets(
-                        &self.arts, gs.as_mut(), &mut workers,
-                        cfg.aip_dataset, cfg.horizon, &mut rng, &mut scratch, &pool,
-                    )
-                })?;
-                // CE on fresh on-policy data BEFORE retraining (Fig. 4)
+                // Drain point: the pipelined collection lands — and its
+                // staging datasets merge into the workers' datasets in
+                // agent order — before the CE probe or the retrain reads
+                // them. The stall is the residual collect time the
+                // preceding segment could not hide; blocking mode paid
+                // the whole loop under this timer at the snapshot point.
+                if let Some(ac) = async_collect.as_mut() {
+                    timers.time("collect", || ac.drain_into(&mut workers))?;
+                }
+                // CE BEFORE retraining (Fig. 4), on the data this retrain
+                // consumes — collected at the preceding boundary under
+                // one-segment-stale policies (the pipelined schedule,
+                // DESIGN.md §10; identical in both modes).
                 let ce_pre = mean_ce(&self.arts, &pool, &mut workers)?;
                 if let Some(ce) = ce_pre {
                     log.ce_curve.push(CurvePoint { step: seg.start, value: ce as f64 });
@@ -389,6 +472,19 @@ impl DialsCoordinator {
                 if let Some(ce) = mean_ce(&self.arts, &pool, &mut workers)? {
                     log.ce_curve.push(CurvePoint { step: seg.start + 1, value: ce as f64 });
                 }
+            }
+
+            // ---- collect point for the NEXT retrain (the boundary
+            // preceding it): snapshot the joint policy + AIPs here so the
+            // Algorithm-2 loop overlaps this segment's training instead
+            // of stalling the retrain. Data semantics are identical in
+            // both modes — the paper's influence-sync thesis tolerates
+            // this boundedly-stale collection schedule (DESIGN.md §10).
+            if retrains && segments.get(k + 1).is_some_and(|s| s.retrain_before) {
+                collect_point(
+                    &self.arts, cfg, gs.as_mut(), &mut workers, &mut scratch, &pool,
+                    &mut timers, &mut rng, seg.start, async_collect.as_mut(),
+                )?;
             }
 
             // ---- parallel IALS training segment (Algorithm 1 lines 7-12)
@@ -428,32 +524,90 @@ impl DialsCoordinator {
             }
         }
 
-        // Final drain point: every pending eval lands before final_return
-        // is computed.
+        // Final drain points: every pending eval lands before final_return
+        // is computed, and any pending collection lands before the
+        // checkpoint save (a snapshot is only ever taken for the NEXT
+        // retrain, which drains it, so this is a safety net — it matters
+        // only if a schedule change ever leaves a tail snapshot).
         if let Some(ae) = async_eval.as_mut() {
             ae.drain_all(&mut log)?;
             timers.add("eval_compute", ae.compute_seconds());
+        }
+        if let Some(ac) = async_collect.as_mut() {
+            timers.time("collect", || ac.drain_into(&mut workers))?;
+            timers.add("collect_compute", ac.compute_seconds());
         }
 
         if let Some(dir) = save {
             save_checkpoint(dir, &self.arts.spec, &workers)?;
         }
         log.final_return = log.eval_curve.last().map(|p| p.value).unwrap_or(0.0);
+        log.dataset_fingerprints = workers.iter().map(|w| w.dataset.fingerprint()).collect();
         log.agent_train_seconds = train_cp_total;
-        log.influence_seconds = timers.get("collect") + aip_cp_total;
+        // On-path influence cost: the snapshot staging plus the inline
+        // loop (blocking) or the residual drain stall (async), plus the
+        // AIP retrain critical path. The overlapped loop seconds are
+        // reported separately as collect_compute (like eval_compute).
+        let collect_on_path = timers.get("collect_snapshot") + timers.get("collect");
+        log.influence_seconds = collect_on_path + aip_cp_total;
         // Runtime totals stay honest under async eval: the snapshot cost
         // stalls training in both modes and is charged to the critical
         // path; the eval compute is overlapped (async) or off-path by
         // convention (blocking) and reported separately.
         log.eval_snapshot_seconds = timers.get("eval_snapshot");
         log.eval_compute_seconds = timers.get("eval_compute");
-        log.wall_seconds = timers.get("collect")
+        log.collect_snapshot_seconds = timers.get("collect_snapshot");
+        log.collect_compute_seconds = timers.get("collect_compute");
+        log.wall_seconds = collect_on_path
             + timers.get("aip_train")
             + timers.get("agent_train")
             + timers.get("eval_snapshot");
         log.critical_path_seconds =
-            timers.get("collect") + aip_cp_total + train_cp_total + timers.get("eval_snapshot");
+            collect_on_path + aip_cp_total + train_cp_total + timers.get("eval_snapshot");
         Ok(log)
+    }
+}
+
+/// One collection point of `run_ckpt`, at the boundary preceding an AIP
+/// retrain (the start of the segment whose end is the retrain step; step 0
+/// for the first retrain). Both modes split the collect RNG off the
+/// episode RNG here and stage the joint policy + AIP snapshot (timed
+/// `collect_snapshot`, on the critical path). The blocking reference path
+/// then runs the Algorithm-2 loop inline into the workers' datasets
+/// (timed `collect` = on-path + `collect_compute`); the async path defers
+/// the identical loop onto the pool (`AsyncCollect::snapshot`) and pays
+/// only the residual drain stall at the retrain. One function for both
+/// modes so the RNG/timer discipline cannot fork.
+#[allow(clippy::too_many_arguments)]
+fn collect_point(
+    arts: &Arc<ArtifactSet>,
+    cfg: &ExperimentConfig,
+    gs: &mut dyn GlobalSim,
+    workers: &mut [AgentWorker],
+    scratch: &mut GsScratch,
+    pool: &WorkerPool,
+    timers: &mut PhaseTimers,
+    rng: &mut Pcg64,
+    step: usize,
+    async_collect: Option<&mut AsyncCollect>,
+) -> Result<()> {
+    match async_collect {
+        Some(ac) => timers.time("collect_snapshot", || ac.snapshot(workers, rng, step)),
+        None => {
+            let mut collect_rng = rng.split(step as u64);
+            timers.time("collect_snapshot", || stage_collect_banks(arts, scratch, workers))?;
+            let t0 = Instant::now();
+            let mut sinks: Vec<&mut InfluenceDataset> =
+                workers.iter_mut().map(|w| &mut w.dataset).collect();
+            collect_staged(
+                arts, gs, &mut sinks, cfg.aip_dataset, cfg.horizon,
+                &mut collect_rng, scratch, pool,
+            )?;
+            let secs = t0.elapsed().as_secs_f64();
+            timers.add("collect", secs);
+            timers.add("collect_compute", secs);
+            Ok(())
+        }
     }
 }
 

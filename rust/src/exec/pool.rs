@@ -746,6 +746,20 @@ mod tests {
     }
 
     #[test]
+    fn waiting_out_of_queue_order_steals_only_the_waited_job() {
+        // The coordinator's drain shape with async eval AND async collect
+        // pending: two jobs queued, drained in an order the FIFO queue
+        // does not control. Waiting on the second job while the first is
+        // still queued must steal exactly that job (the queue token for a
+        // stolen job is inert), and the first must still complete.
+        let pool = WorkerPool::new(1); // no helpers: everything steals
+        let h_eval = pool.submit_deferred(|| Ok("eval"));
+        let h_collect = pool.submit_deferred(|| Ok("collect"));
+        assert_eq!(h_collect.wait().unwrap(), "collect");
+        assert_eq!(h_eval.wait().unwrap(), "eval");
+    }
+
+    #[test]
     fn deferred_panic_surfaces_as_err() {
         for threads in [1usize, 4] {
             let pool = WorkerPool::new(threads);

@@ -2,6 +2,8 @@
 //! pairs collected from the GS (paper Algorithm 2), plus batch assembly
 //! for the `aip_update` / `aip_eval` artifacts and the training loop.
 
+use std::collections::VecDeque;
+
 use anyhow::{ensure, Result};
 
 use crate::nn::NetState;
@@ -19,11 +21,16 @@ struct Episode {
 }
 
 /// Agent i's dataset D_i.
+///
+/// Episodes live in a `VecDeque` so capacity eviction pops the oldest
+/// episode in O(1); the old `Vec` + `remove(0)` shifted every surviving
+/// episode per eviction — quadratic churn on the hot collection path once
+/// a dataset reached capacity.
 #[derive(Clone, Debug)]
 pub struct InfluenceDataset {
     feat_dim: usize,
     n_heads: usize,
-    episodes: Vec<Episode>,
+    episodes: VecDeque<Episode>,
     total_rows: usize,
     /// Rows to keep (oldest episodes evicted beyond this).
     capacity_rows: usize,
@@ -34,10 +41,23 @@ impl InfluenceDataset {
         InfluenceDataset {
             feat_dim,
             n_heads,
-            episodes: Vec::new(),
+            episodes: VecDeque::new(),
             total_rows: 0,
             capacity_rows,
         }
+    }
+
+    /// An unbounded staging dataset: rows accumulate (in the async-collect
+    /// slot, off-thread) without ever evicting, and `append_from` replays
+    /// them into the real dataset — with its real capacity — at the drain
+    /// point.
+    pub fn staging(feat_dim: usize, n_heads: usize) -> Self {
+        InfluenceDataset::new(feat_dim, n_heads, usize::MAX)
+    }
+
+    /// [`staging`](Self::staging) with this dataset's row shape.
+    pub fn staging_like(&self) -> Self {
+        Self::staging(self.feat_dim, self.n_heads)
     }
 
     pub fn len(&self) -> usize {
@@ -54,7 +74,7 @@ impl InfluenceDataset {
     }
 
     pub fn begin_episode(&mut self) {
-        self.episodes.push(Episode::default());
+        self.episodes.push_back(Episode::default());
     }
 
     pub fn push(&mut self, feat: &[f32], label: &[f32]) {
@@ -63,16 +83,65 @@ impl InfluenceDataset {
         if self.episodes.is_empty() {
             self.begin_episode();
         }
-        let ep = self.episodes.last_mut().unwrap();
+        let ep = self.episodes.back_mut().unwrap();
         ep.feats.extend_from_slice(feat);
         ep.labels.extend_from_slice(label);
         ep.len += 1;
         self.total_rows += 1;
-        // Evict the oldest full episodes beyond capacity.
+        self.evict_over_capacity();
+    }
+
+    /// Evict the oldest full episodes beyond capacity. The newest episode
+    /// is never evicted, even when it alone exceeds the capacity.
+    fn evict_over_capacity(&mut self) {
         while self.total_rows > self.capacity_rows && self.episodes.len() > 1 {
-            let old = self.episodes.remove(0);
+            let old = self.episodes.pop_front().expect("len > 1");
             self.total_rows -= old.len;
         }
+    }
+
+    /// Merge every episode of `staged` into `self`, in collection order,
+    /// draining `staged` (it is left empty, ready for reuse as a staging
+    /// buffer). The final state is bit-identical to having pushed the
+    /// staged rows directly: each episode is appended whole and then the
+    /// same oldest-episode eviction runs — eviction is monotone front
+    /// removal driven by the running total, so batching it per episode
+    /// cannot change which episodes survive.
+    pub fn append_from(&mut self, staged: &mut InfluenceDataset) {
+        debug_assert_eq!(staged.feat_dim, self.feat_dim);
+        debug_assert_eq!(staged.n_heads, self.n_heads);
+        for ep in staged.episodes.drain(..) {
+            self.total_rows += ep.len;
+            self.episodes.push_back(ep);
+            self.evict_over_capacity();
+        }
+        staged.total_rows = 0;
+    }
+
+    /// Order-sensitive FNV-1a digest of the full dataset content (episode
+    /// structure + f32 bit patterns). Two datasets with equal fingerprints
+    /// hold byte-identical rows in the same episode layout — the
+    /// determinism contract the collection tests pin.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        eat(self.feat_dim as u64);
+        eat(self.n_heads as u64);
+        eat(self.episodes.len() as u64);
+        for ep in &self.episodes {
+            eat(ep.len as u64);
+            for &f in ep.feats.iter().chain(ep.labels.iter()) {
+                eat(f.to_bits() as u64);
+            }
+        }
+        h
     }
 
     /// Assemble a flat minibatch for the FNN AIP update:
@@ -97,21 +166,41 @@ impl InfluenceDataset {
     /// feats [B, T, F], labels [B, T, H]. Windows are contiguous in-episode
     /// spans starting from a random offset (truncated BPTT with h0 = 0;
     /// the update artifact unrolls exactly `seq` steps).
+    ///
+    /// Each of the dataset's `len - seq + 1` windows is equally likely:
+    /// one draw over the window total, walked through the episodes. The
+    /// old two-draw scheme (uniform episode, then uniform offset)
+    /// over-weighted windows from short episodes — an episode with 2
+    /// windows was sampled as often as one with 200.
     pub fn sample_windows(
         &self,
         batch: usize,
         seq: usize,
         rng: &mut Pcg64,
     ) -> Option<(Tensor, Tensor)> {
-        let eligible: Vec<&Episode> = self.episodes.iter().filter(|e| e.len >= seq).collect();
+        debug_assert!(seq > 0);
+        let mut total_windows = 0u64;
+        let mut eligible: Vec<(&Episode, u64)> = Vec::new();
+        for e in self.episodes.iter().filter(|e| e.len >= seq) {
+            let w = (e.len - seq + 1) as u64;
+            total_windows += w;
+            eligible.push((e, w));
+        }
         if eligible.is_empty() {
             return None;
         }
         let mut feats = Tensor::zeros(&[batch, seq, self.feat_dim]);
         let mut labels = Tensor::zeros(&[batch, seq, self.n_heads]);
         for b in 0..batch {
-            let ep = eligible[rng.below(eligible.len() as u64) as usize];
-            let start = rng.below((ep.len - seq + 1) as u64) as usize;
+            let mut w = rng.below(total_windows);
+            let mut it = eligible.iter();
+            let (ep, start) = loop {
+                let (ep, wins) = it.next().expect("window index within total");
+                if w < *wins {
+                    break (*ep, w as usize);
+                }
+                w -= wins;
+            };
             for t in 0..seq {
                 let src = start + t;
                 let fdst = (b * seq + t) * self.feat_dim;
@@ -307,5 +396,125 @@ mod tests {
         let mut d = InfluenceDataset::new(1, 1, 100);
         d.push(&[1.0], &[1.0]);
         assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn eviction_removes_episodes_in_age_order() {
+        // capacity 6, episodes of 3 rows tagged by their index: after five
+        // episodes only the two newest (tags 3, 4) survive.
+        let mut d = InfluenceDataset::new(1, 1, 6);
+        for e in 0..5 {
+            d.begin_episode();
+            for _ in 0..3 {
+                d.push(&[e as f32], &[0.0]);
+            }
+        }
+        assert_eq!(d.len(), 6);
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..100 {
+            let (f, _) = d.sample_flat(1, &mut rng).unwrap();
+            assert!(f.data[0] >= 3.0, "evicted episode {} still sampled", f.data[0]);
+        }
+    }
+
+    #[test]
+    fn single_over_capacity_episode_is_kept() {
+        // One episode larger than the whole capacity: the newest episode
+        // is never evicted, so the dataset holds all of it.
+        let mut d = InfluenceDataset::new(1, 1, 10);
+        d.begin_episode();
+        for t in 0..15 {
+            d.push(&[t as f32], &[1.0]);
+        }
+        assert_eq!(d.len(), 15, "growing episode must survive its own overflow");
+        // The next episode's rows evict the oversized one as usual.
+        d.begin_episode();
+        d.push(&[99.0], &[1.0]);
+        assert_eq!(d.len(), 1);
+        let mut rng = Pcg64::seed(8);
+        let (f, _) = d.sample_flat(1, &mut rng).unwrap();
+        assert_eq!(f.data[0], 99.0);
+    }
+
+    #[test]
+    fn append_from_matches_direct_pushes_including_eviction() {
+        // Reference: rows pushed straight into a capacity-bounded dataset.
+        // Candidate: same rows collected into an unbounded staging dataset,
+        // merged via append_from. Final contents must be bit-identical.
+        let rows: &[(usize, usize)] = &[(0, 4), (1, 7), (2, 3), (3, 9), (4, 2)];
+        let mut direct = InfluenceDataset::new(2, 1, 12);
+        // pre-existing content the merge must evict exactly like pushes do
+        direct.begin_episode();
+        for t in 0..5 {
+            direct.push(&[-1.0, t as f32], &[0.5]);
+        }
+        let mut merged = direct.clone();
+        let mut staging = merged.staging_like();
+        assert_eq!(staging.len(), 0);
+        for &(e, n) in rows {
+            direct.begin_episode();
+            staging.begin_episode();
+            for t in 0..n {
+                let f = [e as f32, t as f32];
+                let l = [(e + t) as f32];
+                direct.push(&f, &l);
+                staging.push(&f, &l);
+            }
+        }
+        merged.append_from(&mut staging);
+        assert!(staging.is_empty(), "append_from must drain the staging dataset");
+        assert_eq!(merged.len(), direct.len());
+        assert_eq!(merged.fingerprint(), direct.fingerprint());
+    }
+
+    #[test]
+    fn window_sampling_is_proportional_to_window_count() {
+        // Episode A: 3 rows -> 1 window of seq 3; episode B: 12 rows ->
+        // 10 windows. A must be drawn ~1/11 of the time, not ~1/2.
+        let mut d = InfluenceDataset::new(1, 1, 10_000);
+        d.begin_episode();
+        for _ in 0..3 {
+            d.push(&[0.0], &[0.0]); // episode A marker: feat 0
+        }
+        d.begin_episode();
+        for _ in 0..12 {
+            d.push(&[1.0], &[0.0]); // episode B marker: feat 1
+        }
+        let mut rng = Pcg64::seed(11);
+        let draws = 20_000usize;
+        let mut from_a = 0usize;
+        for _ in 0..draws {
+            let (f, _) = d.sample_windows(1, 3, &mut rng).unwrap();
+            if f.data[0] == 0.0 {
+                from_a += 1;
+            }
+        }
+        let frac = from_a as f64 / draws as f64;
+        let want = 1.0 / 11.0;
+        assert!(
+            (frac - want).abs() < 0.02,
+            "episode A drawn {frac:.3} of the time, want ~{want:.3}"
+        );
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_content_and_structure() {
+        let a = make_dataset(2, 4);
+        let b = make_dataset(2, 4);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // different row content
+        let mut c = make_dataset(2, 4);
+        c.push(&[9.0, 9.0, 9.0], &[1.0, 1.0]);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // same rows, different episode structure
+        let mut flat = InfluenceDataset::new(3, 2, 10_000);
+        flat.begin_episode();
+        for e in 0..2 {
+            for t in 0..4 {
+                flat.push(&[e as f32, t as f32, 0.5], &[(t % 2) as f32, ((t + e) % 2) as f32]);
+            }
+        }
+        assert_eq!(flat.len(), a.len());
+        assert_ne!(a.fingerprint(), flat.fingerprint());
     }
 }

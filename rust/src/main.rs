@@ -75,11 +75,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     eprintln!(
         "[dials] final_return={:.4} wall={:.2}s critical_path={:.2}s (agents={:.2}s \
-         influence={:.2}s eval_snapshot={:.3}s eval_compute={:.2}s{})",
+         influence={:.2}s eval_snapshot={:.3}s eval_compute={:.2}s{} \
+         collect_snapshot={:.3}s collect_compute={:.2}s{})",
         log.final_return, log.wall_seconds, log.critical_path_seconds,
         log.agent_train_seconds, log.influence_seconds,
         log.eval_snapshot_seconds, log.eval_compute_seconds,
-        if cfg.async_eval > 0 { " [overlapped]" } else { "" }
+        if cfg.async_eval > 0 { " [overlapped]" } else { "" },
+        log.collect_snapshot_seconds, log.collect_compute_seconds,
+        if cfg.async_collect > 0 { " [overlapped]" } else { "" }
     );
     if let Some(out) = args.get("out") {
         if let Some(parent) = Path::new(out).parent() {
@@ -139,6 +142,9 @@ train:
   --gs-shards N           parallel GS dynamics shards (0 = serial)
   --async-eval N          overlap GS eval with training: N in-flight
                           eval slots (2 = double buffer, 0 = blocking)
+  --async-collect N       pipeline Algorithm-2 influence collection over
+                          the segment before each AIP retrain (1 = on,
+                          0 = blocking reference; DIALS mode only)
   --save-ckpt DIR          save nets at end     --load-ckpt DIR resume
 eval:
   --domain D --grid-side N --episodes N --horizon N  (scripted baseline)

@@ -265,6 +265,9 @@ impl ArtifactSet {
             if let Some(e) = set.aip_forward_b.as_mut() {
                 e.bind_aip(ad, set.spec.aip_params)?;
             }
+            // The CE evaluator shares the AIP trunk dims; binding it lets
+            // DIALS-mode CE monitoring (Fig. 4) run on the native backend.
+            set.aip_eval.bind_aip_eval(ad, set.spec.aip_params)?;
         }
         if set.policy_init.len() != set.spec.policy_params {
             bail!(

@@ -170,6 +170,16 @@ impl Exec {
         Ok(())
     }
 
+    /// Backend-parity no-op (see `bind_policy`): the compiled `aip_eval`
+    /// HLO computes the CE itself.
+    pub fn bind_aip_eval(
+        &mut self,
+        _dims: crate::runtime::layout::AipDims,
+        _expect_params: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+
     /// Execute with host tensors, returning host tensors (simple path).
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> = inputs

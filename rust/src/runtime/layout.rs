@@ -267,6 +267,35 @@ pub fn policy_forward_row(
     }
 }
 
+/// One AIP trunk + head forward on a single row WITHOUT the output
+/// activation: writes the raw logits `[U]` and `h'` `[H]`. Shared by the
+/// probability forward (`aip_forward_row`) and the native CE evaluators,
+/// so the two cannot drift.
+pub fn aip_logits_row(
+    dims: &AipDims,
+    flat: &[f32],
+    feat: &[f32],
+    h: &[f32],
+    logits: &mut [f32],
+    h_out: &mut [f32],
+    s: &mut FwdScratch,
+) {
+    debug_assert_eq!(flat.len(), dims.param_count());
+    debug_assert_eq!(feat.len(), dims.feat);
+    debug_assert_eq!(h.len(), dims.hstate());
+    debug_assert_eq!(logits.len(), dims.u_dim());
+    debug_assert_eq!(h_out.len(), dims.hstate());
+    if dims.recurrent {
+        let rest = gru_row(flat, feat, h, h_out, &mut s.gx, &mut s.gh);
+        dense_row(rest, h_out, dims.u_dim(), logits, false);
+    } else {
+        let rest = dense_row(flat, feat, dims.hid, &mut s.z1, true);
+        let rest = dense_row(rest, &s.z1, dims.hid, &mut s.z2, true);
+        dense_row(rest, &s.z2, dims.u_dim(), logits, false);
+        h_out.fill(0.0);
+    }
+}
+
 /// One AIP forward on a single row; writes `[probs(U) | h'(H)]`.
 pub fn aip_forward_row(
     dims: &AipDims,
@@ -276,21 +305,10 @@ pub fn aip_forward_row(
     packed: &mut [f32],
     s: &mut FwdScratch,
 ) {
-    debug_assert_eq!(flat.len(), dims.param_count());
-    debug_assert_eq!(feat.len(), dims.feat);
-    debug_assert_eq!(h.len(), dims.hstate());
     debug_assert_eq!(packed.len(), dims.packed_out());
     let u = dims.u_dim();
     let (probs, h_out) = packed.split_at_mut(u);
-    if dims.recurrent {
-        let rest = gru_row(flat, feat, h, h_out, &mut s.gx, &mut s.gh);
-        dense_row(rest, h_out, u, probs, false);
-    } else {
-        let rest = dense_row(flat, feat, dims.hid, &mut s.z1, true);
-        let rest = dense_row(rest, &s.z1, dims.hid, &mut s.z2, true);
-        dense_row(rest, &s.z2, u, probs, false);
-        h_out.fill(0.0);
-    }
+    aip_logits_row(dims, flat, feat, h, probs, h_out, s);
     if dims.cls <= 1 {
         for p in probs.iter_mut() {
             *p = sigmoid(*p);
@@ -308,6 +326,115 @@ pub fn aip_forward_row(
             }
         }
     }
+}
+
+/// Scratch for the native CE evaluators: the logits row and the two
+/// hidden-state ping-pong buffers, reused across every row/window of one
+/// batch. Callers may allocate one per call — CE evaluation is a cold
+/// path (twice per AIP retrain), so only the per-row reuse matters.
+#[derive(Clone, Debug, Default)]
+pub struct CeScratch {
+    logits: Vec<f32>,
+    h: Vec<f32>,
+    h_next: Vec<f32>,
+}
+
+impl CeScratch {
+    fn fit(&mut self, d: &AipDims) {
+        self.logits.resize(d.u_dim(), 0.0);
+        self.h.resize(d.hstate(), 0.0);
+        self.h_next.resize(d.hstate(), 0.0);
+    }
+}
+
+/// Mean cross-entropy of the FNN AIP on a flat batch — the native
+/// `aip_eval` for non-recurrent sets. Mirrors `model.py::aip_ce_loss`'s
+/// non-recurrent branch: numerically-stable BCE with logits,
+/// `max(l,0) - l·y + ln(1 + e^{-|l|})`, averaged over B × heads.
+/// `feats = [B × F]`, `labels = [B × heads]` in {0, 1}; Bernoulli heads
+/// only (`cls <= 1`, like the Python branch).
+pub fn aip_ce_flat(
+    dims: &AipDims,
+    flat: &[f32],
+    feats: &[f32],
+    labels: &[f32],
+    s: &mut FwdScratch,
+    ce: &mut CeScratch,
+) -> f32 {
+    debug_assert!(!dims.recurrent);
+    debug_assert!(dims.cls <= 1);
+    debug_assert_eq!(feats.len() % dims.feat, 0);
+    let b = feats.len() / dims.feat;
+    let u = dims.u_dim();
+    debug_assert_eq!(labels.len(), b * u);
+    ce.fit(dims);
+    ce.h.fill(0.0);
+    let mut acc = 0.0f64;
+    for i in 0..b {
+        aip_logits_row(
+            dims,
+            flat,
+            &feats[i * dims.feat..(i + 1) * dims.feat],
+            &ce.h,
+            &mut ce.logits,
+            &mut ce.h_next,
+            s,
+        );
+        for (j, &l) in ce.logits.iter().enumerate() {
+            let y = labels[i * u + j];
+            acc += (l.max(0.0) - l * y + (-l.abs()).exp().ln_1p()) as f64;
+        }
+    }
+    (acc / (b * u) as f64) as f32
+}
+
+/// Mean cross-entropy of the GRU AIP on a windowed batch — the native
+/// `aip_eval` for recurrent sets. Mirrors `aip_ce_loss`'s recurrent
+/// branch: unroll the GRU over `t` steps from `h0 = 0` per window,
+/// per-head log-softmax over the class logits, pick the labelled class,
+/// `-mean` over B × T × heads. `feats = [B × T × F]`,
+/// `labels = [B × T × heads]` class indices stored as f32.
+#[allow(clippy::too_many_arguments)]
+pub fn aip_ce_windows(
+    dims: &AipDims,
+    flat: &[f32],
+    feats: &[f32],
+    labels: &[f32],
+    b: usize,
+    t: usize,
+    s: &mut FwdScratch,
+    ce: &mut CeScratch,
+) -> f32 {
+    debug_assert!(dims.recurrent);
+    debug_assert_eq!(feats.len(), b * t * dims.feat);
+    debug_assert_eq!(labels.len(), b * t * dims.heads);
+    let cls = dims.cls.max(1);
+    ce.fit(dims);
+    let mut acc = 0.0f64;
+    for i in 0..b {
+        ce.h.fill(0.0);
+        for step in 0..t {
+            let row = (i * t + step) * dims.feat;
+            aip_logits_row(
+                dims,
+                flat,
+                &feats[row..row + dims.feat],
+                &ce.h,
+                &mut ce.logits,
+                &mut ce.h_next,
+                s,
+            );
+            std::mem::swap(&mut ce.h, &mut ce.h_next);
+            for head in 0..dims.heads {
+                let group = &ce.logits[head * cls..(head + 1) * cls];
+                let max = group.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let log_z = group.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+                let idx = (labels[(i * t + step) * dims.heads + head] as usize).min(cls - 1);
+                acc += (log_z - group[idx]) as f64;
+            }
+        }
+    }
+    (acc / (b * t * dims.heads) as f64) as f32
 }
 
 #[cfg(test)]
@@ -384,6 +511,69 @@ mod tests {
         aip_forward_row(&d, &flat, &[1.0, -1.0], &[0.0], &mut packed, &mut s);
         assert!((packed[0] - 0.5).abs() < 1e-6);
         assert!((packed[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ce_flat_zero_params_is_ln2() {
+        // Zero params → logits 0 → BCE = ln 2 per element, any labels.
+        let d = AipDims { feat: 3, recurrent: false, hid: 4, heads: 2, cls: 1 };
+        let flat = vec![0.0; d.param_count()];
+        let feats = vec![0.3; 5 * 3];
+        let labels = vec![1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0];
+        let mut s = FwdScratch::for_aip(&d);
+        let mut ce = CeScratch::default();
+        let got = aip_ce_flat(&d, &flat, &feats, &labels, &mut s, &mut ce);
+        assert!((got - std::f32::consts::LN_2).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn ce_flat_matches_hand_computed_bce() {
+        // 1-feature, 1-head net with a pure-bias head so the logit is a
+        // known constant; check the stable BCE formula end-to-end.
+        let d = AipDims { feat: 1, recurrent: false, hid: 1, heads: 1, cls: 1 };
+        // layout: fc1.b fc1.w | fc2.b fc2.w | head.b head.w
+        let flat = vec![0.0, 0.0, 0.0, 0.0, 1.5, 0.0];
+        let mut s = FwdScratch::for_aip(&d);
+        let mut ce = CeScratch::default();
+        let l = 1.5f32;
+        let want_y1 = l.max(0.0) - l * 1.0 + (-l.abs()).exp().ln_1p();
+        let want_y0 = l.max(0.0) + (-l.abs()).exp().ln_1p();
+        let got = aip_ce_flat(&d, &flat, &[0.7, 0.1], &[1.0, 0.0], &mut s, &mut ce);
+        assert!((got - (want_y1 + want_y0) / 2.0).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn ce_windows_zero_params_is_ln_cls() {
+        // Zero params → uniform softmax per head → CE = ln(cls) whatever
+        // class the labels pick.
+        let d = AipDims { feat: 2, recurrent: true, hid: 3, heads: 2, cls: 4 };
+        let flat = vec![0.0; d.param_count()];
+        let (b, t) = (3usize, 5usize);
+        let feats = vec![0.2; b * t * 2];
+        let labels: Vec<f32> = (0..b * t * 2).map(|k| (k % 4) as f32).collect();
+        let mut s = FwdScratch::for_aip(&d);
+        let mut ce = CeScratch::default();
+        let got = aip_ce_windows(&d, &flat, &feats, &labels, b, t, &mut s, &mut ce);
+        assert!((got - (4.0f32).ln()).abs() < 1e-5, "{got}");
+    }
+
+    #[test]
+    fn ce_windows_unrolls_the_recurrent_state() {
+        // With random params, shuffling a window's time order must change
+        // the CE — i.e. the GRU state genuinely threads through the steps.
+        let d = AipDims { feat: 2, recurrent: true, hid: 3, heads: 1, cls: 3 };
+        let mut rng = crate::util::rng::Pcg64::seed(5);
+        let flat: Vec<f32> = (0..d.param_count()).map(|_| 0.4 * rng.normal() as f32).collect();
+        let (b, t) = (1usize, 4usize);
+        let feats: Vec<f32> = (0..b * t * 2).map(|_| rng.normal() as f32).collect();
+        let labels = vec![1.0; b * t];
+        let mut rev = feats.clone();
+        rev.chunks_mut(2).rev().zip(feats.chunks(2)).for_each(|(o, i)| o.copy_from_slice(i));
+        let mut s = FwdScratch::for_aip(&d);
+        let mut ce = CeScratch::default();
+        let a = aip_ce_windows(&d, &flat, &feats, &labels, b, t, &mut s, &mut ce);
+        let bb = aip_ce_windows(&d, &flat, &rev, &labels, b, t, &mut s, &mut ce);
+        assert!((a - bb).abs() > 1e-7, "time order ignored: {a} vs {bb}");
     }
 
     #[test]

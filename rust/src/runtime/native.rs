@@ -25,7 +25,8 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::util::npk::Tensor;
 
 use super::layout::{
-    aip_forward_row, policy_forward_row, AipDims, FwdScratch, PolicyDims,
+    aip_ce_flat, aip_ce_windows, aip_forward_row, policy_forward_row, AipDims, CeScratch,
+    FwdScratch, PolicyDims,
 };
 
 thread_local! {
@@ -104,6 +105,12 @@ impl DeviceTensor {
 enum NetKind {
     Policy(PolicyDims),
     Aip(AipDims),
+    /// The batch CE-loss evaluator (`aip_eval`): same trunk as `Aip`, but
+    /// a `(flat, feats, labels) -> ce[1]` contract instead of a packed
+    /// forward. Executing it natively is what lets DIALS-mode runs (and
+    /// their Fig. 4 CE curves) go end-to-end without the XLA toolchain;
+    /// only the update artifacts still need PJRT.
+    AipEval(AipDims),
 }
 
 /// One loaded artifact. Forward artifacts execute through the bound
@@ -150,6 +157,75 @@ impl Exec {
         Ok(())
     }
 
+    /// Bind this artifact to the native AIP CE evaluator
+    /// (`model.py::aip_ce_loss` semantics — see `layout::aip_ce_flat` /
+    /// `aip_ce_windows`).
+    pub fn bind_aip_eval(&mut self, dims: AipDims, expect_params: usize) -> Result<()> {
+        ensure!(
+            dims.param_count() == expect_params,
+            "{}: AIP layer dims {dims:?} imply {} params but .meta says {} — \
+             re-run `make artifacts`",
+            self.name, dims.param_count(), expect_params
+        );
+        self.net = Some(NetKind::AipEval(dims));
+        Ok(())
+    }
+
+    /// The `aip_eval` contract: `(flat[P], feats, labels) -> ce[1]`.
+    /// FNN sets take `feats [B, F]` + `labels [B, heads]`; recurrent sets
+    /// take `feats [B, T, F]` + `labels [B, T, heads]` (class indices).
+    fn compute_ce_into(&self, dims: &AipDims, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
+        ensure!(
+            inputs.len() == 3,
+            "{}: expected (params, feats, labels), got {} inputs",
+            self.name, inputs.len()
+        );
+        let (flat, feats, labels) = (inputs[0], inputs[1], inputs[2]);
+        ensure!(
+            flat.len() == dims.param_count(),
+            "{}: flat params have {} entries, want {}",
+            self.name, flat.len(), dims.param_count()
+        );
+        let ce = FWD_SCRATCH.with(|cell| -> Result<f32> {
+            let mut s = cell.borrow_mut();
+            s.fit_aip(dims);
+            let mut ces = CeScratch::default();
+            if dims.recurrent {
+                ensure!(
+                    feats.dims.len() == 3 && feats.dims[2] == dims.feat,
+                    "{}: recurrent eval wants feats [B, T, F={}], got {:?}",
+                    self.name, dims.feat, feats.dims
+                );
+                let (b, t) = (feats.dims[0], feats.dims[1]);
+                ensure!(
+                    labels.len() == b * t * dims.heads,
+                    "{}: labels have {} floats, want B×T×heads = {}",
+                    self.name, labels.len(), b * t * dims.heads
+                );
+                Ok(aip_ce_windows(dims, &flat.data, &feats.data, &labels.data, b, t, &mut s, &mut ces))
+            } else {
+                ensure!(
+                    feats.dims.len() == 2 && feats.dims[1] == dims.feat,
+                    "{}: flat eval wants feats [B, F={}], got {:?}",
+                    self.name, dims.feat, feats.dims
+                );
+                let b = feats.dims[0];
+                ensure!(
+                    labels.len() == b * dims.u_dim(),
+                    "{}: labels have {} floats, want B×heads = {}",
+                    self.name, labels.len(), b * dims.u_dim()
+                );
+                Ok(aip_ce_flat(dims, &flat.data, &feats.data, &labels.data, &mut s, &mut ces))
+            }
+        })?;
+        out.dims.clear();
+        out.dims.push(1);
+        out.data.clear();
+        out.data.push(ce);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Shared compute path. Inputs `(params, x, h)`: a rank-1 `[P]`
     /// parameter tensor selects the B=1 packed output `[W]`; a rank-2
     /// `[N, P]` stack selects the batched output `[N, W]` (N = 1 stays
@@ -161,12 +237,16 @@ impl Exec {
         let Some(kind) = &self.net else {
             bail!(
                 "cannot execute artifact {:?}: no native executor is bound for it \
-                 (only the policy_step / aip_forward families run natively). \
-                 Rebuild with `--features xla` and a real xla-rs checkout under \
-                 rust/vendor/xla to execute the update artifacts.",
+                 (only the policy_step / aip_forward / aip_eval families run \
+                 natively). Rebuild with `--features xla` and a real xla-rs \
+                 checkout under rust/vendor/xla to execute the update artifacts.",
                 self.name
             )
         };
+        if let NetKind::AipEval(dims) = kind {
+            let dims = *dims;
+            return self.compute_ce_into(&dims, inputs, out);
+        }
         ensure!(
             inputs.len() == 3,
             "{}: expected (params, input, h), got {} inputs",
@@ -180,6 +260,7 @@ impl Exec {
         let (p, in_dim, h_dim, out_w) = match kind {
             NetKind::Policy(d) => (d.param_count(), d.obs, d.hstate(), d.packed_out()),
             NetKind::Aip(d) => (d.param_count(), d.feat, d.hstate(), d.packed_out()),
+            NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
         };
         ensure!(
             params.len() == n * p && x.len() == n * in_dim && h.len() == n * h_dim,
@@ -199,6 +280,7 @@ impl Exec {
             match kind {
                 NetKind::Policy(d) => s.fit_policy(d),
                 NetKind::Aip(d) => s.fit_aip(d),
+                NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
             }
             for i in 0..n {
                 let flat = &params.data[i * p..(i + 1) * p];
@@ -208,6 +290,7 @@ impl Exec {
                 match kind {
                     NetKind::Policy(d) => policy_forward_row(d, flat, xi, hi, oi, &mut s),
                     NetKind::Aip(d) => aip_forward_row(d, flat, xi, hi, oi, &mut s),
+                    NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
                 }
             }
         });
@@ -359,6 +442,35 @@ mod tests {
         let b = Tensor::new(vec![2, 2], vec![9.0, 8.0, 7.0, 6.0]);
         engine.upload_to(&b, &mut slot).unwrap();
         assert_eq!(slot.as_ref().unwrap().to_tensor().unwrap(), b);
+    }
+
+    #[test]
+    fn bound_aip_eval_computes_ce() {
+        // FNN eval: zero params → logits 0 → BCE = ln 2.
+        let dims = AipDims { feat: 4, recurrent: false, hid: 3, heads: 2, cls: 1 };
+        let mut exec = fake_exec("aip_eval");
+        exec.bind_aip_eval(dims, dims.param_count()).unwrap();
+        let flat = Tensor::zeros(&[dims.param_count()]);
+        let feats = Tensor::new(vec![3, 4], vec![0.1; 12]);
+        let labels = Tensor::new(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let out = exec.run(&[flat.clone(), feats, labels]).unwrap();
+        assert_eq!(out[0].dims, vec![1]);
+        assert!((out[0].data[0] - std::f32::consts::LN_2).abs() < 1e-6);
+        assert_eq!(exec.call_count(), 1);
+
+        // recurrent eval: zero params → uniform softmax → CE = ln cls
+        let rdims = AipDims { feat: 2, recurrent: true, hid: 3, heads: 2, cls: 4 };
+        let mut rexec = fake_exec("aip_eval_gru");
+        rexec.bind_aip_eval(rdims, rdims.param_count()).unwrap();
+        let rflat = Tensor::zeros(&[rdims.param_count()]);
+        let rfeats = Tensor::new(vec![2, 3, 2], vec![0.5; 12]);
+        let rlabels = Tensor::new(vec![2, 3, 2], vec![2.0; 12]);
+        let rout = rexec.run(&[rflat, rfeats, rlabels]).unwrap();
+        assert!((rout[0].data[0] - (4.0f32).ln()).abs() < 1e-5);
+
+        // malformed shapes are errors, not UB
+        let bad = Tensor::zeros(&[12]);
+        assert!(exec.run(&[flat, bad.clone(), bad]).is_err());
     }
 
     #[test]

@@ -67,7 +67,22 @@ pub struct RunLog {
     /// overlap training segments on the pool (never added to the wall
     /// clock); the blocking path reports the same number for comparison.
     pub eval_compute_seconds: f64,
+    /// Seconds spent snapshotting policies + AIPs for influence
+    /// collection — on the critical path in both modes (the collect-side
+    /// twin of `eval_snapshot_seconds`).
+    pub collect_snapshot_seconds: f64,
+    /// Seconds spent inside the Algorithm-2 collection loops. Under async
+    /// collect these overlap the training segment preceding the retrain
+    /// (only the residual drain stall stays on the critical path, inside
+    /// `influence_seconds`); the blocking path reports the same number
+    /// for comparison.
+    pub collect_compute_seconds: f64,
     pub final_return: f64,
+    /// Per-agent `InfluenceDataset::fingerprint` at the end of the run —
+    /// the dataset half of the async-collect determinism contract
+    /// (`tests/async_collect_equivalence.rs` diffs these against the
+    /// blocking reference).
+    pub dataset_fingerprints: Vec<u64>,
 }
 
 impl RunLog {
@@ -125,6 +140,14 @@ fn escape(cell: &str) -> String {
 }
 
 /// Average several curves point-wise (aligning by index) and report SEM.
+///
+/// Truncation rule: curves are cut to the SHORTEST input (trailing points
+/// other runs never reached carry no cross-seed statistics), and within
+/// the truncated range every curve must report the same step at the same
+/// index — aggregation across mismatched steps (e.g. a blocking and an
+/// async run whose drain timing diverged) would silently average
+/// unrelated points under `curves[0]`'s label. Step agreement is a
+/// debug-asserted precondition, not a repair the function performs.
 pub fn aggregate_curves(curves: &[Vec<CurvePoint>]) -> Vec<(usize, f64, f64)> {
     if curves.is_empty() {
         return Vec::new();
@@ -132,6 +155,11 @@ pub fn aggregate_curves(curves: &[Vec<CurvePoint>]) -> Vec<(usize, f64, f64)> {
     let n_points = curves.iter().map(|c| c.len()).min().unwrap_or(0);
     (0..n_points)
         .map(|i| {
+            debug_assert!(
+                curves.iter().all(|c| c[i].step == curves[0][i].step),
+                "aggregate_curves: step mismatch at index {i}: {:?}",
+                curves.iter().map(|c| c[i].step).collect::<Vec<_>>()
+            );
             let vals: Vec<f64> = curves.iter().map(|c| c[i].value).collect();
             (curves[0][i].step, mean(&vals), sem(&vals))
         })
@@ -177,6 +205,32 @@ mod tests {
         assert_eq!(agg[0].0, 0);
         assert_eq!(agg[0].1, 2.0);
         assert_eq!(agg[1].1, 3.0);
+    }
+
+    #[test]
+    fn curve_aggregation_truncates_to_shortest() {
+        // The longer curve's trailing point is dropped, not mis-averaged.
+        let c1 = vec![
+            CurvePoint { step: 0, value: 1.0 },
+            CurvePoint { step: 10, value: 2.0 },
+            CurvePoint { step: 20, value: 9.0 },
+        ];
+        let c2 = vec![CurvePoint { step: 0, value: 3.0 }, CurvePoint { step: 10, value: 4.0 }];
+        let agg = aggregate_curves(&[c1, c2]);
+        assert_eq!(agg.len(), 2);
+        assert_eq!(agg[1].0, 10);
+        assert_eq!(agg[1].1, 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "step mismatch")]
+    #[cfg(debug_assertions)]
+    fn curve_aggregation_rejects_mismatched_steps() {
+        // Same lengths, different steps: index-aligned averaging would
+        // silently combine unrelated points — debug builds refuse.
+        let c1 = vec![CurvePoint { step: 0, value: 1.0 }, CurvePoint { step: 10, value: 2.0 }];
+        let c2 = vec![CurvePoint { step: 0, value: 3.0 }, CurvePoint { step: 16, value: 4.0 }];
+        let _ = aggregate_curves(&[c1, c2]);
     }
 
     #[test]

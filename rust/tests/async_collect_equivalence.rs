@@ -1,0 +1,354 @@
+//! Determinism contract of pipelined influence collection
+//! (`coordinator::async_collect`, DESIGN.md §10), on the native backend
+//! with synthesized artifacts (the native `aip_eval` binding lets full
+//! DIALS-mode runs — including their Fig. 4 CE curves — execute without
+//! XLA; `aip_epochs = 0` keeps the update artifacts out of the loop):
+//!
+//! * with `cfg.async_collect = 1` the per-agent influence datasets, the
+//!   CE curve, and the eval curve are **bit-identical** to the blocking
+//!   reference path (`async_collect = 0`) — both domains, multiple
+//!   seeds, any thread count, serial AND sharded GS stepping, batched
+//!   AND per-agent bank mode, alone or combined with async eval. The
+//!   collect RNG is split from the episode RNG at the snapshot boundary,
+//!   so when (or where) the deferred loop actually runs cannot change
+//!   what it collects;
+//! * `collect_datasets` itself is a pinned deterministic oracle: same
+//!   seed → identical per-agent dataset bytes for any thread count, and
+//!   for any shard count within a shard family (serial `0` and sharded
+//!   `>= 1` are distinct deterministic families, DESIGN.md §7);
+//! * drain ordering over randomized `plan_segments` schedules: every
+//!   retrain is preceded by exactly one snapshot (at the boundary
+//!   preceding it), the pending collection never crosses its retrain,
+//!   and the staged-then-merged datasets equal the blocking oracle's.
+//!
+//! Under the `xla` feature the placeholder HLO files cannot compile, so
+//! everything here is native-only.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{
+    collect_datasets, make_global_sim, plan_segments, AgentWorker, AsyncCollect,
+    DialsCoordinator, GsScratch,
+};
+use dials::exec::WorkerPool;
+use dials::runtime::{synth, Engine};
+use dials::sim::GlobalSim;
+use dials::util::metrics::RunLog;
+use dials::util::rng::Pcg64;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_async_collect").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 31).unwrap();
+    dir
+}
+
+/// DIALS-mode config the native backend runs end-to-end: `aip_epochs = 0`
+/// keeps the XLA-only `aip_update` out of the retrain (the CE probes run
+/// through the native `aip_eval` binding), and the rollout never fills so
+/// `ppo_update` is never invoked. Three retrains (steps 0/48/96) with
+/// eval boundaries between them, so two collections really overlap a
+/// training segment; `aip_dataset * 3 > capacity` so the merge path
+/// exercises episode eviction; horizon >= the warehouse `aip_seq` (16)
+/// so the recurrent CE probe always finds an eligible window.
+fn tiny_cfg(domain: Domain, dir: &std::path::Path, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::Dials,
+        grid_side: 2,
+        total_steps: 144,
+        aip_train_freq: 48,
+        aip_dataset: 20,
+        aip_epochs: 0,
+        eval_every: 16,
+        eval_episodes: 2,
+        horizon: 18,
+        seed,
+        ppo: PpoConfig { rollout_len: 512, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 2,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+    }
+}
+
+fn assert_logs_identical(blocking: &RunLog, pipelined: &RunLog, what: &str) {
+    assert_eq!(
+        blocking.eval_curve.len(),
+        pipelined.eval_curve.len(),
+        "{what}: eval curve lengths diverged"
+    );
+    for (b, a) in blocking.eval_curve.iter().zip(pipelined.eval_curve.iter()) {
+        assert_eq!(b.step, a.step, "{what}: eval curve steps diverged");
+        assert_eq!(
+            b.value.to_bits(),
+            a.value.to_bits(),
+            "{what}: eval at step {} diverged: {} vs {}",
+            b.step, b.value, a.value
+        );
+    }
+    assert_eq!(
+        blocking.ce_curve.len(),
+        pipelined.ce_curve.len(),
+        "{what}: CE curve lengths diverged"
+    );
+    assert!(
+        blocking.ce_curve.len() >= 6,
+        "{what}: expected pre+post CE points for all three retrains, got {}",
+        blocking.ce_curve.len()
+    );
+    for (b, a) in blocking.ce_curve.iter().zip(pipelined.ce_curve.iter()) {
+        assert_eq!(b.step, a.step, "{what}: CE curve steps diverged");
+        assert_eq!(
+            b.value.to_bits(),
+            a.value.to_bits(),
+            "{what}: CE at step {} diverged: {} vs {}",
+            b.step, b.value, a.value
+        );
+        assert!(b.value.is_finite(), "{what}: CE at step {} not finite", b.step);
+    }
+    assert_eq!(blocking.final_return.to_bits(), pipelined.final_return.to_bits(), "{what}");
+    assert_eq!(
+        blocking.dataset_fingerprints, pipelined.dataset_fingerprints,
+        "{what}: per-agent dataset contents diverged"
+    );
+    assert!(!blocking.dataset_fingerprints.is_empty(), "{what}: no dataset fingerprints");
+}
+
+#[test]
+fn async_collect_bit_identical_both_domains_two_seeds() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("runs", domain);
+        let engine = Engine::cpu().unwrap();
+        for seed in [3u64, 11] {
+            let run = |async_collect: usize| {
+                let mut cfg = tiny_cfg(domain, &dir, seed);
+                cfg.async_collect = async_collect;
+                DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+            };
+            let blocking = run(0);
+            let pipelined = run(1);
+            assert_logs_identical(&blocking, &pipelined, &format!("{domain:?} seed {seed}"));
+            // The collect compute really happened and was measured.
+            assert!(pipelined.collect_compute_seconds > 0.0);
+            assert!(blocking.collect_compute_seconds > 0.0);
+        }
+    }
+}
+
+#[test]
+fn async_collect_invariant_to_thread_count() {
+    let domain = Domain::Traffic;
+    let dir = synth_dir("threads", domain);
+    let engine = Engine::cpu().unwrap();
+    let run = |threads: usize| {
+        let mut cfg = tiny_cfg(domain, &dir, 5);
+        cfg.async_collect = 1;
+        cfg.threads = threads;
+        DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+    };
+    // threads = 1: no helpers exist, the deferred collection runs inline
+    // at the drain point — the degenerate-but-correct blocking fallback.
+    let serial = run(1);
+    for threads in [2usize, 4] {
+        assert_logs_identical(&serial, &run(threads), &format!("threads {threads}"));
+    }
+}
+
+#[test]
+fn async_collect_matches_blocking_under_sharded_gs_and_per_agent_banks() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("modes", domain);
+        let engine = Engine::cpu().unwrap();
+        for (gs_shards, gs_batch) in [(2usize, true), (0, false)] {
+            let run = |async_collect: usize| {
+                let mut cfg = tiny_cfg(domain, &dir, 7);
+                cfg.gs_shards = gs_shards;
+                cfg.gs_batch = gs_batch;
+                cfg.async_collect = async_collect;
+                cfg.threads = 3;
+                DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+            };
+            assert_logs_identical(
+                &run(0),
+                &run(1),
+                &format!("{domain:?} shards={gs_shards} batch={gs_batch}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn async_collect_composes_with_async_eval() {
+    // Both overlap subsystems live on the same deferred lane; their drain
+    // points interleave at every retrain. Results must not care.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("composed", domain);
+        let engine = Engine::cpu().unwrap();
+        let run = |async_eval: usize, async_collect: usize| {
+            let mut cfg = tiny_cfg(domain, &dir, 13);
+            cfg.async_eval = async_eval;
+            cfg.async_collect = async_collect;
+            cfg.threads = 3;
+            DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+        };
+        assert_logs_identical(&run(0, 0), &run(2, 1), &format!("{domain:?} composed"));
+    }
+}
+
+/// `collect_datasets` as its own pinned contract: same seed → identical
+/// per-agent dataset bytes across thread counts (any shard mode) and
+/// across shard counts >= 1. The serial path (shards = 0) is its own
+/// deterministic family (per-agent RNG accounting differs, DESIGN.md §7)
+/// and is pinned for thread invariance only.
+#[test]
+fn collect_datasets_deterministic_across_threads_and_shards() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("oracle", domain);
+        let engine = Engine::cpu().unwrap();
+        let cfg = tiny_cfg(domain, &dir, 9);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let n = cfg.n_agents();
+        let fingerprints = |threads: usize, shards: usize| -> Vec<u64> {
+            let mut workers = coord.make_workers(cfg.seed);
+            let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+            let mut scratch = GsScratch::new(&coord.artifacts().spec, n, true);
+            scratch.enable_shards(shards);
+            let pool = WorkerPool::new(threads);
+            let mut rng = Pcg64::new(cfg.seed, 77_001);
+            collect_datasets(
+                coord.artifacts(), gs.as_mut(), &mut workers, cfg.aip_dataset, cfg.horizon,
+                &mut rng, &mut scratch, &pool,
+            )
+            .unwrap();
+            workers.iter().map(|w| w.dataset.fingerprint()).collect()
+        };
+        for shards in [0usize, 1, 2, n] {
+            let one = fingerprints(1, shards);
+            for threads in [2usize, 4] {
+                assert_eq!(
+                    one,
+                    fingerprints(threads, shards),
+                    "{domain:?}: datasets changed with {threads} threads (shards {shards})"
+                );
+            }
+            assert_eq!(one.len(), n);
+        }
+        let sharded = fingerprints(2, 1);
+        for shards in [2usize, n] {
+            assert_eq!(
+                sharded,
+                fingerprints(2, shards),
+                "{domain:?}: datasets changed with {shards} shards"
+            );
+        }
+    }
+}
+
+/// Drive the real subsystem over randomized `plan_segments` schedules the
+/// way `run_ckpt` does: snapshot at the boundary preceding each retrain
+/// (step 0 for the first), drain at the retrain. A blocking oracle runs
+/// the identical schedule inline; the merged datasets must match its
+/// datasets bit-for-bit, and a pending collection must never survive its
+/// retrain.
+#[test]
+fn drain_ordering_property_over_plan_segments_schedules() {
+    let domain = Domain::Traffic;
+    let dir = synth_dir("prop", domain);
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = tiny_cfg(domain, &dir, 17);
+    cfg.aip_dataset = 6;
+    cfg.horizon = 4;
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let pool = Arc::new(WorkerPool::new(2));
+
+    let mut gen = Pcg64::seed(8181);
+    for case in 0..20 {
+        let total = (gen.below(60) + 1) as usize;
+        let f = (gen.below(16) + 1) as usize;
+        let eval_every = gen.below(16) as usize;
+        let segs = plan_segments(total, f, eval_every);
+
+        // Async side: snapshots + deferred collections + merges.
+        let mut workers_async = coord.make_workers(cfg.seed);
+        let mut ac = AsyncCollect::new(coord.artifacts(), &pool, &cfg, true, 0);
+        let mut rng_async = Pcg64::new(cfg.seed, 4321);
+        // Blocking oracle: the same schedule, collected inline.
+        let mut workers_block = coord.make_workers(cfg.seed);
+        let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+        let mut scratch = GsScratch::new(&coord.artifacts().spec, cfg.n_agents(), true);
+        let mut rng_block = Pcg64::new(cfg.seed, 4321);
+
+        let mut expected_snapshots = Vec::new();
+
+        #[allow(clippy::too_many_arguments)]
+        fn both_collect_points(
+            coord: &DialsCoordinator,
+            step: usize,
+            ac: &mut AsyncCollect,
+            workers_async: &[AgentWorker],
+            workers_block: &mut [AgentWorker],
+            gs: &mut dyn GlobalSim,
+            scratch: &mut GsScratch,
+            pool: &WorkerPool,
+            rng_async: &mut Pcg64,
+            rng_block: &mut Pcg64,
+            expected: &mut Vec<usize>,
+        ) {
+            ac.snapshot(workers_async, rng_async, step).unwrap();
+            let mut collect_rng = rng_block.split(step as u64);
+            collect_datasets(
+                coord.artifacts(), gs, workers_block, coord.cfg.aip_dataset, coord.cfg.horizon,
+                &mut collect_rng, scratch, pool,
+            )
+            .unwrap();
+            expected.push(step);
+        }
+
+        if segs.first().is_some_and(|s| s.retrain_before) {
+            both_collect_points(
+                &coord, 0, &mut ac, &workers_async, &mut workers_block, gs.as_mut(),
+                &mut scratch, &pool, &mut rng_async, &mut rng_block, &mut expected_snapshots,
+            );
+        }
+        for (k, seg) in segs.iter().enumerate() {
+            if seg.retrain_before {
+                let drained = ac.drain_into(&mut workers_async).unwrap();
+                assert!(drained, "case {case}: retrain at {} found no collection", seg.start);
+                assert_eq!(
+                    ac.pending_len(),
+                    0,
+                    "case {case}: a collection crossed the retrain at {}",
+                    seg.start
+                );
+            }
+            if segs.get(k + 1).is_some_and(|s| s.retrain_before) {
+                both_collect_points(
+                    &coord, seg.start, &mut ac, &workers_async, &mut workers_block, gs.as_mut(),
+                    &mut scratch, &pool, &mut rng_async, &mut rng_block, &mut expected_snapshots,
+                );
+            }
+        }
+        assert!(!ac.drain_into(&mut workers_async).unwrap(), "case {case}: tail snapshot");
+        assert_eq!(ac.snapshot_steps(), &expected_snapshots[..], "case {case}: snapshot steps");
+        assert_eq!(
+            expected_snapshots.len(),
+            segs.iter().filter(|s| s.retrain_before).count(),
+            "case {case}: exactly one snapshot per retrain"
+        );
+        assert!(ac.gs_steps() > 0, "case {case}: no GS steps recorded");
+        for (i, (a, b)) in workers_async.iter().zip(workers_block.iter()).enumerate() {
+            assert_eq!(
+                a.dataset.fingerprint(),
+                b.dataset.fingerprint(),
+                "case {case}: agent {i} datasets diverged from the blocking oracle"
+            );
+        }
+    }
+}

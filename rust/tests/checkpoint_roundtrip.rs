@@ -1,0 +1,143 @@
+//! Checkpoint persistence contract, on the native backend with
+//! synthesized artifacts: a save → load round trip restores every net's
+//! flat params, Adam moments, AND Adam step counter bit-for-bit, and the
+//! meta fingerprint (including the previously-unchecked `aip_params`)
+//! rejects mismatched artifact sets. The update-level half of the
+//! contract — a restored run takes bit-identical gradient steps to an
+//! uninterrupted one — lives in `coordinator_integration.rs`
+//! (`restored_adam_step_takes_identical_updates`), which needs the XLA
+//! update artifacts.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{load_checkpoint, save_checkpoint, DialsCoordinator};
+use dials::runtime::{synth, Engine};
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_ckpt_native").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 23).unwrap();
+    dir
+}
+
+fn tiny_cfg(domain: Domain, dir: &std::path::Path) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::Dials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 32,
+        aip_dataset: 20,
+        aip_epochs: 0,
+        eval_every: 32,
+        eval_episodes: 1,
+        horizon: 12,
+        seed: 3,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 1,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+    }
+}
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_ckpt_native_out").join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn roundtrip_restores_params_moments_and_steps() {
+    let domain = Domain::Warehouse;
+    let adir = synth_dir("rt", domain);
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(domain, &adir);
+    let coord = DialsCoordinator::new(&engine, cfg).unwrap();
+
+    let mut workers = coord.make_workers(5);
+    // Non-trivial state: distinct per-agent step counters + moment blobs.
+    for (i, w) in workers.iter_mut().enumerate() {
+        w.policy.net.step = 100 + i as u64;
+        w.aip.net.step = 7 * (i as u64 + 1);
+        w.policy.net.m.data.iter_mut().for_each(|x| *x = 0.25 + i as f32);
+        w.aip.net.v.data.iter_mut().for_each(|x| *x = 0.5 * (i as f32 + 1.0));
+    }
+    let dir = ckpt_dir("rt");
+    save_checkpoint(&dir, &coord.artifacts().spec, &workers).unwrap();
+
+    let mut fresh = coord.make_workers(999);
+    load_checkpoint(&dir, &coord.artifacts().spec, &mut fresh).unwrap();
+    for (a, b) in workers.iter().zip(fresh.iter()) {
+        assert_eq!(a.policy.net.flat.data, b.policy.net.flat.data);
+        assert_eq!(a.policy.net.m.data, b.policy.net.m.data);
+        assert_eq!(a.policy.net.v.data, b.policy.net.v.data);
+        assert_eq!(a.policy.net.step, b.policy.net.step, "policy Adam step lost");
+        assert_eq!(a.aip.net.flat.data, b.aip.net.flat.data);
+        assert_eq!(a.aip.net.m.data, b.aip.net.m.data);
+        assert_eq!(a.aip.net.v.data, b.aip.net.v.data);
+        assert_eq!(a.aip.net.step, b.aip.net.step, "AIP Adam step lost");
+    }
+}
+
+#[test]
+fn aip_params_mismatch_is_rejected() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("apmm", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let workers = coord.make_workers(1);
+    let dir = ckpt_dir("apmm");
+    save_checkpoint(&dir, &coord.artifacts().spec, &workers).unwrap();
+
+    // Tamper with the recorded aip_params: load must refuse instead of
+    // silently mis-slicing the AIP vectors.
+    let meta_path = dir.join("checkpoint.meta");
+    let meta = std::fs::read_to_string(&meta_path).unwrap();
+    let spec = &coord.artifacts().spec;
+    let tampered = meta.replace(
+        &format!("aip_params={}", spec.aip_params),
+        &format!("aip_params={}", spec.aip_params + 1),
+    );
+    assert_ne!(meta, tampered, "test setup: aip_params line not found");
+    std::fs::write(&meta_path, tampered).unwrap();
+    let mut fresh = coord.make_workers(2);
+    let err = load_checkpoint(&dir, spec, &mut fresh).unwrap_err();
+    assert!(format!("{err:#}").contains("aip_params"), "{err:#}");
+}
+
+#[test]
+fn pre_step_persistence_checkpoints_are_refused() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("nostep", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let workers = coord.make_workers(1);
+    let dir = ckpt_dir("nostep");
+    save_checkpoint(&dir, &coord.artifacts().spec, &workers).unwrap();
+
+    // Strip the step lines, simulating a checkpoint written before Adam
+    // steps were persisted: restoring it would warm-start the moments
+    // while re-doing bias correction from t = 0 (over-scaled updates),
+    // so the loader must fail loudly.
+    let meta_path = dir.join("checkpoint.meta");
+    let meta = std::fs::read_to_string(&meta_path).unwrap();
+    let stripped: String = meta.lines().filter(|l| !l.contains("_step=")).fold(
+        String::new(),
+        |mut acc, l| {
+            acc.push_str(l);
+            acc.push('\n');
+            acc
+        },
+    );
+    std::fs::write(&meta_path, stripped).unwrap();
+    let mut fresh = coord.make_workers(2);
+    let err = load_checkpoint(&dir, &coord.artifacts().spec, &mut fresh).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("policy_step") || msg.contains("aip_step"), "{msg}");
+}

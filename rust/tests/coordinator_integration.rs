@@ -40,6 +40,7 @@ fn tiny_cfg(domain: Domain, mode: SimMode) -> ExperimentConfig {
         gs_batch: true,
         gs_shards: 0,
         async_eval: 0,
+        async_collect: 0,
     }
 }
 
@@ -178,6 +179,74 @@ fn checkpoint_roundtrip_restores_exact_state() {
     let mut wrong = coord.make_workers(1);
     wrong.truncate(2);
     assert!(load_checkpoint(&dir, &coord.artifacts().spec, &mut wrong).is_err());
+}
+
+/// The checkpoint bugfix contract: a save → load → train sequence takes
+/// BIT-IDENTICAL Adam updates to an uninterrupted run. Before steps were
+/// persisted, a restore kept the warm moment vectors but re-ran the
+/// bias correction from t = 1, over-scaling the first post-restore
+/// updates — the negative control below reproduces exactly that.
+#[test]
+fn restored_adam_step_takes_identical_updates() {
+    if !artifacts_ready() {
+        return;
+    }
+    use dials::coordinator::{load_checkpoint, save_checkpoint};
+    let engine = Engine::cpu().unwrap();
+    let cfg = tiny_cfg(Domain::Traffic, SimMode::Dials);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let arts = coord.artifacts();
+
+    // Fill the datasets deterministically so AIP training has real data.
+    let mut workers = coord.make_workers(5);
+    {
+        let mut gs = make_global_sim(cfg.domain, cfg.grid_side);
+        let mut rng = Pcg64::new(5, 55);
+        let mut scratch = GsScratch::new(&arts.spec, cfg.n_agents(), cfg.gs_batch);
+        let pool = dials::exec::WorkerPool::new(1);
+        collect_datasets(
+            arts, gs.as_mut(), &mut workers, 60, cfg.horizon, &mut rng, &mut scratch, &pool,
+        )
+        .unwrap();
+    }
+    let dataset = workers[0].dataset.clone();
+    let init = workers[0].aip.net.clone();
+
+    // A: uninterrupted 3 + 2 epochs.
+    let mut rng_a = Pcg64::seed(1212);
+    let mut net_a = init.clone();
+    dataset.train(arts, &mut net_a, 3, &mut rng_a).unwrap();
+    dataset.train(arts, &mut net_a, 2, &mut rng_a).unwrap();
+
+    // B: 3 epochs, checkpoint round trip, 2 epochs.
+    let mut rng_b = Pcg64::seed(1212);
+    let mut net_b = init.clone();
+    dataset.train(arts, &mut net_b, 3, &mut rng_b).unwrap();
+    assert_eq!(net_b.step, 3, "one Adam step per epoch");
+    workers[0].aip.net = net_b;
+    let dir = std::env::temp_dir().join("dials_ckpt_adam_step");
+    let _ = std::fs::remove_dir_all(&dir);
+    save_checkpoint(&dir, &arts.spec, &workers).unwrap();
+    let mut fresh = coord.make_workers(999);
+    load_checkpoint(&dir, &arts.spec, &mut fresh).unwrap();
+    let mut net_b2 = fresh[0].aip.net.clone();
+    assert_eq!(net_b2.step, 3, "restore must keep the Adam step counter");
+    dataset.train(arts, &mut net_b2, 2, &mut rng_b).unwrap();
+    assert_eq!(net_a.flat.data, net_b2.flat.data, "params diverged after restore");
+    assert_eq!(net_a.m.data, net_b2.m.data, "Adam m diverged after restore");
+    assert_eq!(net_a.v.data, net_b2.v.data, "Adam v diverged after restore");
+
+    // Negative control: the pre-fix behavior (step reset to 0 with warm
+    // moments) takes DIFFERENT, over-scaled steps.
+    let mut rng_c = Pcg64::seed(1212);
+    let mut net_c = init.clone();
+    dataset.train(arts, &mut net_c, 3, &mut rng_c).unwrap();
+    net_c.step = 0;
+    dataset.train(arts, &mut net_c, 2, &mut rng_c).unwrap();
+    assert_ne!(
+        net_a.flat.data, net_c.flat.data,
+        "resetting the Adam step should have changed the updates"
+    );
 }
 
 /// The thread pool must not change results, only wall-clock: training the

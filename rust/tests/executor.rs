@@ -125,6 +125,7 @@ fn tiny_cfg(threads: usize) -> ExperimentConfig {
         gs_batch: true,
         gs_shards: 0,
         async_eval: 0,
+        async_collect: 0,
     }
 }
 

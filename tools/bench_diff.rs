@@ -10,6 +10,10 @@
 //!   zero-alloc rows gate at exactly 0);
 //! * `steps_per_s` — throughput may drop at most 20% below the baseline
 //!   (timing noise tolerance; the structural metrics above are exact);
+//! * `seg_eval_wall_s` / `collect_wall_s` — the overlap wall-clock of the
+//!   blocking-vs-async coordinator rows may grow at most 25% above the
+//!   baseline, so the segment+eval and segment+collect overlaps stay
+//!   regression-gated once the baseline records CI-measured values;
 //! * `sim_zero_alloc` — the bench's own hard gate must still be true.
 //!
 //! Rows are matched by their `op` string. A baseline metric of `null`
@@ -35,6 +39,9 @@ use anyhow::{bail, Context, Result};
 const MIN_MATCHED: usize = 5;
 /// Allowed fractional drop in `steps_per_s` (0.20 = 20%).
 const STEPS_DROP_TOL: f64 = 0.20;
+/// Allowed fractional growth of the overlap wall-clock columns
+/// (`seg_eval_wall_s`, `collect_wall_s`).
+const WALL_GROW_TOL: f64 = 0.25;
 /// Slack for the "may never grow" metrics (float formatting noise only).
 const EPS: f64 = 1e-6;
 
@@ -128,6 +135,22 @@ fn diff(fresh: &str, baseline: &str) -> Result<Vec<String>> {
                 )),
             }
         }
+        for (metric, bval, fval) in [
+            ("seg_eval_wall_s", b.seg_eval_wall_s, f.seg_eval_wall_s),
+            ("collect_wall_s", b.collect_wall_s, f.collect_wall_s),
+        ] {
+            let Some(bv) = bval else { continue };
+            match fval {
+                Some(fv) if fv > bv * (1.0 + WALL_GROW_TOL) => regressions.push(format!(
+                    "{op}: {metric} grew {bv:.3}s -> {fv:.3}s (>{:.0}% above baseline)",
+                    WALL_GROW_TOL * 100.0
+                )),
+                Some(_) => {}
+                None => regressions.push(format!(
+                    "{op}: gated {metric} missing (null) in fresh run"
+                )),
+            }
+        }
     }
     if matched < MIN_MATCHED {
         regressions.push(format!(
@@ -149,6 +172,8 @@ struct Row {
     bytes_per_step: Option<f64>,
     calls_per_step: Option<f64>,
     steps_per_s: Option<f64>,
+    seg_eval_wall_s: Option<f64>,
+    collect_wall_s: Option<f64>,
 }
 
 struct Bench {
@@ -178,6 +203,8 @@ impl Bench {
                     bytes_per_step: num(r.get("bytes_per_step")),
                     calls_per_step: num(r.get("calls_per_step")),
                     steps_per_s: num(r.get("steps_per_s")),
+                    seg_eval_wall_s: num(r.get("seg_eval_wall_s")),
+                    collect_wall_s: num(r.get("collect_wall_s")),
                 },
             );
         }
@@ -395,14 +422,26 @@ mod tests {
 
     /// A bench document with every metric populated.
     fn doc(calls: f64, bytes: f64, sps: f64, zero_alloc: bool) -> String {
+        doc_with_walls(calls, bytes, sps, zero_alloc, 0.5, 0.3)
+    }
+
+    fn doc_with_walls(
+        calls: f64,
+        bytes: f64,
+        sps: f64,
+        zero_alloc: bool,
+        eval_wall: f64,
+        collect_wall: f64,
+    ) -> String {
         format!(
             "{{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n\
-             {{\"op\": \"traffic LS step\", \"mean_s\": 0.000001, \"min_s\": 0.000001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
-             {{\"op\": \"warehouse LS step\", \"mean_s\": 0.000001, \"min_s\": 0.000001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
-             {{\"op\": \"traffic GS step (25 ints)\", \"mean_s\": 0.00001, \"min_s\": 0.00001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": {sps}, \"seg_eval_wall_s\": null}},\n\
-             {{\"op\": \"warehouse GS step (25 rb)\", \"mean_s\": 0.00001, \"min_s\": 0.00001, \"bytes_per_step\": {bytes}, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
-             {{\"op\": \"traffic GS eval joint step (batched, N=25)\", \"mean_s\": 0.0001, \"min_s\": 0.0001, \"bytes_per_step\": null, \"peak_extra_bytes\": 64, \"calls_per_step\": {calls}, \"steps_per_s\": null, \"seg_eval_wall_s\": null}},\n\
-             {{\"op\": \"coordinator run, async eval x2 (16 agents)\", \"mean_s\": 0.5, \"min_s\": 0.4, \"bytes_per_step\": null, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": 0.5}}\n\
+             {{\"op\": \"traffic LS step\", \"mean_s\": 0.000001, \"min_s\": 0.000001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null, \"collect_wall_s\": null}},\n\
+             {{\"op\": \"warehouse LS step\", \"mean_s\": 0.000001, \"min_s\": 0.000001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null, \"collect_wall_s\": null}},\n\
+             {{\"op\": \"traffic GS step (25 ints)\", \"mean_s\": 0.00001, \"min_s\": 0.00001, \"bytes_per_step\": 0.000, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": {sps}, \"seg_eval_wall_s\": null, \"collect_wall_s\": null}},\n\
+             {{\"op\": \"warehouse GS step (25 rb)\", \"mean_s\": 0.00001, \"min_s\": 0.00001, \"bytes_per_step\": {bytes}, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null, \"collect_wall_s\": null}},\n\
+             {{\"op\": \"traffic GS eval joint step (batched, N=25)\", \"mean_s\": 0.0001, \"min_s\": 0.0001, \"bytes_per_step\": null, \"peak_extra_bytes\": 64, \"calls_per_step\": {calls}, \"steps_per_s\": null, \"seg_eval_wall_s\": null, \"collect_wall_s\": null}},\n\
+             {{\"op\": \"coordinator run, async eval x2 (16 agents)\", \"mean_s\": 0.5, \"min_s\": 0.4, \"bytes_per_step\": null, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": {eval_wall}, \"collect_wall_s\": null}},\n\
+             {{\"op\": \"coordinator run, async collect (16 agents)\", \"mean_s\": 0.5, \"min_s\": 0.4, \"bytes_per_step\": null, \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null, \"collect_wall_s\": {collect_wall}}}\n\
              ],\n  \"sim_zero_alloc\": {zero_alloc}\n}}\n"
         )
     }
@@ -446,6 +485,48 @@ mod tests {
     fn improvements_pass() {
         let base = doc(25.0, 64.0, 50_000.0, true);
         assert!(diff(&doc(1.0, 0.0, 90_000.0, true), &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn overlap_wall_growth_beyond_tolerance_fails() {
+        let base = doc_with_walls(1.0, 0.0, 50_000.0, true, 0.5, 0.3);
+        // +20% on both walls: inside the 25% tolerance
+        let ok = doc_with_walls(1.0, 0.0, 50_000.0, true, 0.6, 0.36);
+        assert!(diff(&ok, &base).unwrap().is_empty());
+        // +50% seg_eval wall: regression
+        let regs =
+            diff(&doc_with_walls(1.0, 0.0, 50_000.0, true, 0.75, 0.3), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("seg_eval_wall_s"), "{regs:?}");
+        // +50% collect wall: regression
+        let regs =
+            diff(&doc_with_walls(1.0, 0.0, 50_000.0, true, 0.5, 0.45), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("collect_wall_s"), "{regs:?}");
+        // improvements always pass
+        assert!(
+            diff(&doc_with_walls(1.0, 0.0, 50_000.0, true, 0.2, 0.1), &base).unwrap().is_empty()
+        );
+    }
+
+    #[test]
+    fn null_baseline_walls_are_not_gated() {
+        let base = doc_with_walls(1.0, 0.0, 50_000.0, true, 0.5, 0.3)
+            .replace("\"collect_wall_s\": 0.3", "\"collect_wall_s\": null");
+        // fresh collect wall is 10x worse but the baseline says ungated
+        assert!(
+            diff(&doc_with_walls(1.0, 0.0, 50_000.0, true, 0.5, 3.0), &base).unwrap().is_empty()
+        );
+    }
+
+    #[test]
+    fn gated_wall_going_null_in_fresh_run_fails() {
+        let base = doc_with_walls(1.0, 0.0, 50_000.0, true, 0.5, 0.3);
+        let fresh = doc_with_walls(1.0, 0.0, 50_000.0, true, 0.5, 0.3)
+            .replace("\"collect_wall_s\": 0.3", "\"collect_wall_s\": null");
+        let regs = diff(&fresh, &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("collect_wall_s") && regs[0].contains("missing"), "{regs:?}");
     }
 
     #[test]
