@@ -15,7 +15,12 @@
 //!   batched call, ROADMAP) is comparable across PRs;
 //! * the batch-first section runs on the native backend with synthesized
 //!   artifacts (`runtime::synth`) — no `make artifacts` needed — and
-//!   measures `evaluate_on_gs` end-to-end in batched vs per-agent mode.
+//!   measures `evaluate_on_gs` end-to-end in batched vs per-agent mode;
+//! * the megabatch section runs LS training with R vectorized replicas
+//!   per agent (R ∈ {1, 8, 64}, both domains) behind one `[N*R]`-row
+//!   forward and reports `ls_steps_per_s` — trained env steps per second
+//!   across ALL replicas, the headline scaling number of the megabatch
+//!   redesign — plus the two-batched-calls-per-tick invariant.
 //!
 //! Results are printed, saved as `results/hotpath.csv`, and emitted as
 //! machine-readable `BENCH_hotpath.json` in the working directory (CI
@@ -54,6 +59,9 @@ struct JsonRow {
     calls_per_step: f64,
     /// GS-phase joint steps per second (NaN = not a GS stepping row).
     steps_per_s: f64,
+    /// Megabatch LS training throughput: trained env steps per second
+    /// summed across all N*R replicas (NaN = not a megabatch row).
+    ls_steps_per_s: f64,
     /// End-to-end wall seconds of a training run whose segments and GS
     /// evaluations may overlap — the blocking-vs-async eval comparison
     /// (NaN = not a segment+eval row).
@@ -85,7 +93,7 @@ fn main() -> Result<()> {
         "hot path microbenchmarks",
         &[
             "op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s",
-            "seg+eval wall", "collect wall",
+            "ls steps/s", "seg+eval wall", "collect wall",
         ],
     );
     let mut json: Vec<JsonRow> = Vec::new();
@@ -401,6 +409,71 @@ fn main() -> Result<()> {
         }
     }
 
+    // ---- megabatch LS training (native backend; synthesized artifacts)
+    //
+    // R vectorized LS replicas per agent behind one [N*R]-row forward —
+    // exactly two batched run calls per joint tick, call-count-pinned by
+    // tests/megabatch_equivalence.rs and reported as calls/step here.
+    // `ls_steps_per_s` counts trained env steps summed across ALL N*R
+    // replicas: scaling with R is the megabatch win (the per-tick wall
+    // barely grows while the trained-step volume multiplies).
+    #[cfg(not(feature = "xla"))]
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        use dials::coordinator::LsMegabatch;
+        use dials::runtime::synth;
+
+        let dir = std::env::temp_dir()
+            .join("dials_hotpath_synth")
+            .join(format!("mega_{}", domain.name()));
+        let _ = std::fs::remove_dir_all(&dir);
+        synth::write_native_artifacts(&dir, domain, 3)?;
+        let horizon = 32usize;
+        for reps_per_agent in [1usize, 8, 64] {
+            let cfg = ExperimentConfig {
+                domain,
+                mode: SimMode::UntrainedDials,
+                grid_side: 2,
+                horizon,
+                // rollout never fills inside the measured window: the rows
+                // isolate the batched tick path (PPO updates are costed by
+                // their own row above)
+                ppo: PpoConfig { rollout_len: 1024, minibatch: 32, epochs: 1, ..Default::default() },
+                artifacts_dir: dir.to_string_lossy().into_owned(),
+                ls_replicas: reps_per_agent,
+                ..Default::default()
+            };
+            let n = cfg.n_agents();
+            let coord = DialsCoordinator::new(&engine, cfg.clone())?;
+            let arts = coord.artifacts();
+            let trainer = PpoTrainer::new(cfg.ppo.clone());
+            let mut workers = coord.make_workers(cfg.seed);
+            let mut mega = LsMegabatch::new(arts, &cfg, &workers, reps_per_agent);
+            let pool = WorkerPool::new(1);
+            // warm-up: first-tick resets, device slots, scratch capacity
+            mega.train_segment(arts, &trainer, &mut workers, &pool, 16, horizon)?;
+            let calls_before = arts.policy_step_b.as_ref().map_or(0, |e| e.call_count())
+                + arts.aip_forward_b.as_ref().map_or(0, |e| e.call_count());
+            let ticks_per_iter = 64usize;
+            let mut iters = 0u64;
+            let (mean, min) = time_n(3, || {
+                mega.train_segment(arts, &trainer, &mut workers, &pool, ticks_per_iter, horizon)
+                    .unwrap();
+                iters += 1;
+            });
+            let calls_after = arts.policy_step_b.as_ref().map_or(0, |e| e.call_count())
+                + arts.aip_forward_b.as_ref().map_or(0, |e| e.call_count());
+            let ticks = iters * ticks_per_iter as u64;
+            let cps = (calls_after - calls_before) as f64 / ticks as f64;
+            let ls_sps = (n * reps_per_agent * ticks_per_iter) as f64 / mean;
+            push_row_ls(
+                &mut table, &mut json,
+                &format!("{} megabatch LS train x{reps_per_agent} (N={n})", domain.name()),
+                mean / ticks_per_iter as f64, min / ticks_per_iter as f64,
+                "per joint tick", cps, ls_sps,
+            );
+        }
+    }
+
     // ---- async GS evaluation overlapped with training segments
     //
     // The tentpole comparison: the same coordinator run (untrained-DIALS,
@@ -449,7 +522,8 @@ fn main() -> Result<()> {
             push_row_full(
                 &mut table, &mut json,
                 &format!("coordinator run, {label} (16 agents)"),
-                mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, mean, f64::NAN,
+                mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, mean,
+                f64::NAN,
             );
         }
         println!(
@@ -571,7 +645,26 @@ fn push_row_steps(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step,
-        steps_per_s, f64::NAN, f64::NAN,
+        steps_per_s, f64::NAN, f64::NAN, f64::NAN,
+    );
+}
+
+/// `push_row` for the megabatch LS training rows: per-tick timing plus
+/// the replica-summed `ls_steps_per_s` throughput column.
+#[allow(clippy::too_many_arguments)]
+fn push_row_ls(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    calls_per_step: f64,
+    ls_steps_per_s: f64,
+) {
+    push_row_full(
+        table, json, op, mean, min, unit, f64::NAN, 0, calls_per_step, f64::NAN,
+        ls_steps_per_s, f64::NAN, f64::NAN,
     );
 }
 
@@ -587,7 +680,7 @@ fn push_row_collect(
     collect_wall_s: f64,
 ) {
     push_row_full(
-        table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN,
+        table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
         collect_wall_s,
     );
 }
@@ -606,12 +699,14 @@ fn push_row_full(
     peak_extra: usize,
     calls_per_step: f64,
     steps_per_s: f64,
+    ls_steps_per_s: f64,
     seg_eval_wall_s: f64,
     collect_wall_s: f64,
 ) {
     let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
     let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
     let sps = if steps_per_s.is_nan() { "-".to_string() } else { format!("{steps_per_s:.0}") };
+    let lsps = if ls_steps_per_s.is_nan() { "-".to_string() } else { format!("{ls_steps_per_s:.0}") };
     let wall = if seg_eval_wall_s.is_nan() { "-".to_string() } else { format!("{seg_eval_wall_s:.3}s") };
     let cwall = if collect_wall_s.is_nan() { "-".to_string() } else { format!("{collect_wall_s:.3}s") };
     table.row(vec![
@@ -623,6 +718,7 @@ fn push_row_full(
         format!("{peak_extra}B"),
         cps,
         sps,
+        lsps,
         wall,
         cwall,
     ]);
@@ -634,6 +730,7 @@ fn push_row_full(
         peak_extra_bytes: peak_extra,
         calls_per_step,
         steps_per_s,
+        ls_steps_per_s,
         seg_eval_wall_s,
         collect_wall_s,
     });
@@ -646,11 +743,12 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
         let bps = if r.bytes_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.bytes_per_step) };
         let cps = if r.calls_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.calls_per_step) };
         let sps = if r.steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.steps_per_s) };
+        let lsps = if r.ls_steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.ls_steps_per_s) };
         let wall = if r.seg_eval_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.seg_eval_wall_s) };
         let cwall = if r.collect_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.collect_wall_s) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, wall, cwall,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, wall, cwall,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

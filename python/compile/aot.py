@@ -169,7 +169,8 @@ def write_golden(fn, arg_specs, gold_dir, seed, n_cases=2, label_heads=None,
 # Per-domain emission
 # --------------------------------------------------------------------------
 
-def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: int):
+def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: int,
+                replicas: int = 1):
     key = jax.random.PRNGKey(seed)
     kp, ka = jax.random.split(key)
     pol_params = M.init_policy(kp, cfg.policy)
@@ -193,8 +194,11 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
 
     # ---- batched joint step (one call forwards all `batch` agents, each
     # with its own parameter row — the runtime::batch bank path)
-    policy_step_b = M.make_policy_step_batched(ps, pol_unravel)
-    step_b_args = (_spec(batch, pdim), _spec(batch, ps.obs), _spec(batch, ps.hstate))
+    # `replicas` > 1 lowers the megabatch shape: [batch*R] data rows over
+    # [batch] parameter rows (replica->agent indirection in-graph).
+    rows = batch * replicas
+    policy_step_b = M.make_policy_step_batched(ps, pol_unravel, replicas)
+    step_b_args = (_spec(batch, pdim), _spec(rows, ps.obs), _spec(rows, ps.hstate))
     lower_and_write(policy_step_b, step_b_args,
                     os.path.join(out_dir, f"{d}_policy_step_b.hlo.txt"))
 
@@ -211,8 +215,8 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
     af_args = (_spec(adim), _spec(1, asp.feat), _spec(1, asp.hstate))
     lower_and_write(aip_forward, af_args, os.path.join(out_dir, f"{d}_aip_forward.hlo.txt"))
 
-    aip_forward_b = M.make_aip_forward_batched(asp, aip_unravel)
-    af_b_args = (_spec(batch, adim), _spec(batch, asp.feat), _spec(batch, asp.hstate))
+    aip_forward_b = M.make_aip_forward_batched(asp, aip_unravel, replicas)
+    af_b_args = (_spec(batch, adim), _spec(rows, asp.feat), _spec(rows, asp.hstate))
     lower_and_write(aip_forward_b, af_b_args,
                     os.path.join(out_dir, f"{d}_aip_forward_b.hlo.txt"))
 
@@ -263,6 +267,9 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
         "policy_h2": ps.h2,
         "aip_hid": asp.hid,
         "batch": batch,
+        # replica rows per agent the `_b` artifacts were lowered for (the
+        # megabatch LS-training shape; 1 = plain joint step).
+        "replicas": replicas,
     }
     with open(os.path.join(out_dir, f"{d}.meta"), "w") as f:
         for k, v in meta.items():
@@ -302,13 +309,18 @@ def main() -> None:
                     help="agent count N the batched `_b` artifacts are lowered "
                          "for (= grid_side^2 of the runs you plan; HLO is "
                          "shape-specialised)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="LS replicas R per agent the `_b` artifacts are "
+                         "lowered for (megabatch training: [N*R] data rows "
+                         "over N parameter rows; 1 = plain joint step)")
     args = ap.parse_args()
 
     os.makedirs(args.out_dir, exist_ok=True)
     wanted = set(args.domains.split(","))
     for cfg in domain_cfgs(args.size):
         if cfg.name in wanted:
-            emit_domain(cfg, args.out_dir, args.seed, not args.no_goldens, args.batch)
+            emit_domain(cfg, args.out_dir, args.seed, not args.no_goldens, args.batch,
+                        args.replicas)
     print(f"[aot] artifacts written to {args.out_dir}")
 
 

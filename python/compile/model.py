@@ -127,7 +127,7 @@ def make_policy_step(spec: PolicySpec, unravel):
     return step
 
 
-def make_policy_step_batched(spec: PolicySpec, unravel):
+def make_policy_step_batched(spec: PolicySpec, unravel, replicas: int = 1):
     """Joint-step variant: every agent has its OWN parameter row, so the
     whole coordinator-side joint step is ONE executable call (the Rust
     `runtime::batch::PolicyBank` drives this; one `run_b` instead of N).
@@ -136,6 +136,14 @@ def make_policy_step_batched(spec: PolicySpec, unravel):
     identical to `make_policy_step` by construction.
 
     (flats[N,P], obs[N,D], h[N,H]) -> packed[N, A + 1 + H]
+
+    With `replicas = R > 1` (the megabatch LS-training path) the data rows
+    carry R replicas per agent, agent-major, while the parameter stack
+    stays [N, P]: the replica->agent row indirection is an in-graph
+    `jnp.repeat` (row i reads param row i // R), so parameters are never
+    duplicated host-side.
+
+    (flats[N,P], obs[N*R,D], h[N*R,H]) -> packed[N*R, A + 1 + H]
     """
 
     def row(flat, obs, h):
@@ -143,6 +151,8 @@ def make_policy_step_batched(spec: PolicySpec, unravel):
         return jnp.concatenate([logits[0], value, h_new[0]])
 
     def step(flats, obs, h):
+        if replicas > 1:
+            flats = jnp.repeat(flats, replicas, axis=0)
         return jax.vmap(row)(flats, obs, h)
 
     return step
@@ -223,10 +233,11 @@ def make_aip_forward(spec: AipSpec, unravel):
     return fwd
 
 
-def make_aip_forward_batched(spec: AipSpec, unravel):
-    """Joint-step AIP variant (see make_policy_step_batched):
+def make_aip_forward_batched(spec: AipSpec, unravel, replicas: int = 1):
+    """Joint-step AIP variant (see make_policy_step_batched; `replicas`
+    adds the same agent-major R-replica row indirection):
 
-    (flats[N,P], feats[N,F], h[N,H]) -> packed[N, U + H]
+    (flats[N,P], feats[N*R,F], h[N*R,H]) -> packed[N*R, U + H]
     """
 
     def row(flat, feat, h):
@@ -234,6 +245,8 @@ def make_aip_forward_batched(spec: AipSpec, unravel):
         return jnp.concatenate([probs[0], h_new[0]])
 
     def fwd(flats, feats, h):
+        if replicas > 1:
+            flats = jnp.repeat(flats, replicas, axis=0)
         return jax.vmap(row)(flats, feats, h)
 
     return fwd

@@ -155,6 +155,17 @@ pub struct ExperimentConfig {
     /// eval curves are bit-identical between 0 and 1 for the same seed
     /// (`tests/async_collect_equivalence.rs`).
     pub async_collect: usize,
+    /// Megabatch LS training (`coordinator::megabatch`): run this many
+    /// local-simulator replicas per agent, stepped SoA-style behind
+    /// exactly TWO batched run calls per joint LS tick — one `[N*R]`-row
+    /// policy forward and one `[N*R]`-row AIP forward, with each agent's
+    /// single parameter row serving all R of its replica rows. PPO then
+    /// consumes the R rollout buffers as one megabatch. 0 (default) keeps
+    /// the per-agent B=1 reference path (`AgentWorker::train_segment`);
+    /// `R = 1` is bit-identical to it — same curves, same RNG consumption
+    /// (`tests/megabatch_equivalence.rs`). Artifact sets that cannot
+    /// serve `[N*R]` rows fall back to the reference path with a notice.
+    pub ls_replicas: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -178,6 +189,7 @@ impl Default for ExperimentConfig {
             gs_shards: 0,
             async_eval: 0,
             async_collect: 0,
+            ls_replicas: 0,
         }
     }
 }
@@ -236,6 +248,7 @@ impl ExperimentConfig {
         get_usize!(exp, "gs_shards", cfg.gs_shards);
         get_usize!(exp, "async_eval", cfg.async_eval);
         get_usize!(exp, "async_collect", cfg.async_collect);
+        get_usize!(exp, "ls_replicas", cfg.ls_replicas);
         if let Some(v) = exp.get("seed") {
             cfg.seed = v.as_int()? as u64;
         }
@@ -292,6 +305,7 @@ impl ExperimentConfig {
         cfg.gs_shards = args.get_usize("gs-shards", cfg.gs_shards)?;
         cfg.async_eval = args.get_usize("async-eval", cfg.async_eval)?;
         cfg.async_collect = args.get_usize("async-collect", cfg.async_collect)?;
+        cfg.ls_replicas = args.get_usize("ls-replicas", cfg.ls_replicas)?;
         if let Some(dir) = args.get("artifacts") {
             cfg.artifacts_dir = dir.to_string();
         }
@@ -410,6 +424,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ExperimentConfig::from_cli(&args).unwrap().async_collect, 1);
+    }
+
+    #[test]
+    fn ls_replicas_defaults_off_and_parses() {
+        assert_eq!(ExperimentConfig::default().ls_replicas, 0);
+        let doc = parse("[experiment]\nls_replicas = 8\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().ls_replicas, 8);
+        let args = crate::util::cli::Args::parse(
+            ["--ls-replicas", "4"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().ls_replicas, 4);
     }
 
     #[test]

@@ -1,0 +1,503 @@
+//! Megabatch LS training: R vectorized local-simulator replicas per agent
+//! behind one `[N*R]`-row forward (`cfg.ls_replicas`).
+//!
+//! The per-agent reference path (`AgentWorker::train_segment`) issues two
+//! B=1 run calls per agent per env step — one `policy_step`, one
+//! `aip_forward` — so a joint LS tick costs 2·N calls and the run-call
+//! overhead dominates the tiny per-row kernels. This driver flips the
+//! loop inside-out: every agent runs `R` replicas of its IALS stepped
+//! SoA-style in lockstep, and one joint tick issues exactly TWO batched
+//! run calls — one `[N*R]`-row `PolicyBank::forward_batched` and one
+//! `[N*R]`-row `AipBank::forward_into` — with the replica→agent parameter
+//! row indirection (`row i → param row i / R`) resolved inside the `_b`
+//! artifacts, so the N parameter rows are never duplicated.
+//!
+//! Tick anatomy (the scatter phases parallelize across agents on the
+//! persistent pool; the two forwards stay single-call):
+//!
+//! 1. serial: stage nets (version-gated no-op in steady state) + zero the
+//!    bank hstate rows of replicas that finished an episode last tick.
+//! 2. scatter: observe every replica into its staging row (first tick
+//!    also resets every replica's LS from its own stream).
+//! 3. serial: gather rows, ONE batched policy forward, advance hstates.
+//! 4. scatter: sample an action per replica from its own RNG stream +
+//!    `encode_alsh` the ALSH features.
+//! 5. serial: gather features, ONE batched AIP forward.
+//! 6. scatter: sample `u`, step the LS, push into the replica's rollout
+//!    buffer, handle episode ends (LS reset consumes the replica stream
+//!    inline, exactly where the reference path consumes it; the RNG-free
+//!    bank-row zeroing defers to the next tick's serial phase).
+//! 7. on buffer-fill ticks only: one extra batched peek forward
+//!    (`advance = false`) bootstraps truncated episodes — the megabatch
+//!    analogue of the reference path's `peek_value` B=1 call — then each
+//!    agent consumes its R buffers as ONE `PpoTrainer::update_megabatch`.
+//!
+//! Determinism contract (`tests/megabatch_equivalence.rs`):
+//! * Replica 0 IS the worker: it steps the worker's own `ls`, `buffer`,
+//!   and `rng`, consuming the stream in exactly the reference order, so
+//!   `R = 1` is bit-identical to the reference path.
+//! * Replica `r ≥ 1` owns a PCG64 stream split from a CLONE of the agent
+//!   RNG (`w.rng.clone().split(r)`), derived in (agent, replica) order at
+//!   construction — each replica's stream depends only on the agent seed
+//!   and `r`, never on `R`, so raising `R` never reorders existing
+//!   replicas' trajectories.
+//! * Every replica owns its LS + rollout buffer, so results are invariant
+//!   to the pool's thread count (the `AgentWorker` discipline).
+//!
+//! Zero-alloc: all staging rows, blocks, and scratch live in
+//! [`LsMegabatch`] / [`ReplicaSet`] and persist across segments; with a
+//! 1-thread pool the scatter phases run as inline loops (no per-phase
+//! `Vec` of task handles), so the steady-state tick performs no host heap
+//! allocation (PPO updates, like the reference path's, allocate).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::ExperimentConfig;
+use crate::exec::WorkerPool;
+use crate::influence::encode_alsh;
+use crate::nn::sample_categorical_buf;
+use crate::ppo::{PpoTrainer, RolloutBuffer};
+use crate::runtime::{sample_u, AipBank, ArtifactSet, PolicyBank};
+use crate::sim::LocalSim;
+use crate::util::rng::Pcg64;
+
+use super::{make_local_sim, AgentWorker};
+
+/// Per-agent replica state. Replica 0 lives in the `AgentWorker` itself
+/// (its `ls`/`buffer`/`rng` — the R=1 bit-identity anchor); replicas
+/// `1..R` live in the `extra_*` vectors at index `r - 1`.
+struct ReplicaSet {
+    extra_ls: Vec<Box<dyn LocalSim>>,
+    extra_bufs: Vec<RolloutBuffer>,
+    extra_rngs: Vec<Pcg64>,
+    /// Per-replica step count within the current episode (replica 0's
+    /// lives here too: the worker's own counter is private to the
+    /// reference loop, which never runs in megabatch mode).
+    ep_steps: Vec<usize>,
+    /// Replica finished an episode this tick → zero its policy/AIP bank
+    /// hstate rows before the next forward (serial phase; the zeroing is
+    /// RNG-free so deferring it cannot perturb any stream).
+    pending_reset: Vec<bool>,
+    /// Replica hit a buffer-fill mid-episode → its bootstrap value comes
+    /// from the batched peek forward.
+    boot_pending: Vec<bool>,
+    /// Staging rows for this agent's replicas, row-major `[R × dim]`.
+    obs: Vec<f32>,
+    feats: Vec<f32>,
+    /// Sampled influence realisation scratch (one head row).
+    u_buf: Vec<f32>,
+    /// Per-replica outputs of the current tick.
+    actions: Vec<usize>,
+    logps: Vec<f32>,
+    values: Vec<f32>,
+    /// Per-replica PPO bootstrap values for the pending update.
+    last_values: Vec<f32>,
+    /// Categorical-sampling scratch.
+    logp_buf: Vec<f32>,
+    prob_buf: Vec<f32>,
+}
+
+/// One (worker, replica-set) pool task of a scatter phase.
+struct Pair<'a> {
+    w: &'a mut AgentWorker,
+    s: &'a mut ReplicaSet,
+}
+
+/// The megabatch LS training driver: shared `[N*R]`-row policy/AIP banks
+/// plus per-agent replica state, persistent across segments.
+pub struct LsMegabatch {
+    reps: usize,
+    n: usize,
+    obs_dim: usize,
+    feat_dim: usize,
+    act_dim: usize,
+    u_dim: usize,
+    n_heads: usize,
+    n_cls: usize,
+    h_dim: usize,
+    policy: PolicyBank,
+    aip: AipBank,
+    sets: Vec<ReplicaSet>,
+    /// Joint blocks, agent-major: row `i*R + r` is agent i's replica r.
+    obs_block: Vec<f32>,
+    feats_block: Vec<f32>,
+    probs_block: Vec<f32>,
+    /// First tick resets every replica's LS (the reference path's
+    /// first-step `begin_episode`).
+    started: bool,
+}
+
+impl LsMegabatch {
+    /// Build the driver for `workers` with `reps` replicas per agent.
+    /// Replica streams are derived here, in (agent, replica) order, from
+    /// CLONES of each worker's RNG — the workers' own streams are not
+    /// consumed, so R=1 runs stay bit-identical to the reference path.
+    pub fn new(
+        arts: &ArtifactSet,
+        cfg: &ExperimentConfig,
+        workers: &[AgentWorker],
+        reps: usize,
+    ) -> Self {
+        let spec = &arts.spec;
+        let reps = reps.max(1);
+        let n = workers.len();
+        let sets = workers
+            .iter()
+            .map(|w| ReplicaSet {
+                extra_ls: (1..reps).map(|_| make_local_sim(cfg.domain)).collect(),
+                extra_bufs: (1..reps)
+                    .map(|_| {
+                        RolloutBuffer::new(cfg.ppo.rollout_len, spec.obs_dim, spec.policy_hstate)
+                    })
+                    .collect(),
+                extra_rngs: (1..reps)
+                    .map(|r| {
+                        let mut parent = w.rng.clone();
+                        parent.split(r as u64)
+                    })
+                    .collect(),
+                ep_steps: vec![0; reps],
+                pending_reset: vec![false; reps],
+                boot_pending: vec![false; reps],
+                obs: vec![0.0; reps * spec.obs_dim],
+                feats: vec![0.0; reps * spec.aip_feat],
+                u_buf: vec![0.0; spec.aip_heads],
+                actions: vec![0; reps],
+                logps: vec![0.0; reps],
+                values: vec![0.0; reps],
+                last_values: vec![0.0; reps],
+                logp_buf: Vec::with_capacity(spec.act_dim),
+                prob_buf: Vec::with_capacity(spec.act_dim),
+            })
+            .collect();
+        LsMegabatch {
+            reps,
+            n,
+            obs_dim: spec.obs_dim,
+            feat_dim: spec.aip_feat,
+            act_dim: spec.act_dim,
+            u_dim: spec.u_dim,
+            n_heads: spec.aip_heads,
+            n_cls: spec.aip_cls,
+            h_dim: spec.policy_hstate,
+            policy: PolicyBank::with_replicas(spec, n, reps),
+            aip: AipBank::with_replicas(spec, n, reps),
+            sets,
+            obs_block: vec![0.0; n * reps * spec.obs_dim],
+            feats_block: vec![0.0; n * reps * spec.aip_feat],
+            probs_block: vec![0.0; n * reps * spec.u_dim],
+            started: false,
+        }
+    }
+
+    /// Replicas per agent.
+    pub fn reps(&self) -> usize {
+        self.reps
+    }
+
+    /// Replica `r`'s rollout buffer for `agent`, `1 ≤ r < R` (replica 0's
+    /// is the worker's own `buffer`) — observability for the determinism
+    /// tests: raising R must not reorder existing replicas' trajectories.
+    pub fn extra_buffer(&self, agent: usize, r: usize) -> &RolloutBuffer {
+        &self.sets[agent].extra_bufs[r - 1]
+    }
+
+    /// Train all agents' IALS replicas for `steps` joint ticks (one
+    /// megabatch segment); returns the phase wall seconds. The segment is
+    /// one globally-synchronised phase, so its wall time IS its critical
+    /// path (unlike the embarrassingly-parallel reference segments).
+    pub fn train_segment(
+        &mut self,
+        arts: &ArtifactSet,
+        trainer: &PpoTrainer,
+        workers: &mut [AgentWorker],
+        pool: &WorkerPool,
+        steps: usize,
+        horizon: usize,
+    ) -> Result<f64> {
+        ensure!(
+            workers.len() == self.n,
+            "megabatch built for {} agents, got {}",
+            self.n,
+            workers.len()
+        );
+        let t0 = Instant::now();
+        // Inline serial loops on a 1-thread pool: `pool.run` allocates its
+        // per-task timing vector even on the serial fast path, which would
+        // break the zero-alloc steady-state contract.
+        let serial = pool.threads() == 1;
+        let (reps, od, fd) = (self.reps, self.obs_dim, self.feat_dim);
+        let (ad, hd, ud) = (self.act_dim, self.h_dim, self.u_dim);
+        let (nh, nc) = (self.n_heads, self.n_cls);
+
+        for _ in 0..steps {
+            // -- serial pre-tick: snapshot nets + episode-boundary rows
+            for (i, w) in workers.iter().enumerate() {
+                self.policy.stage(&arts.engine, i, &w.policy.net)?;
+                self.aip.stage(&arts.engine, i, &w.aip.net)?;
+            }
+            for (i, s) in self.sets.iter_mut().enumerate() {
+                for r in 0..reps {
+                    if s.pending_reset[r] {
+                        s.pending_reset[r] = false;
+                        self.policy.reset_episode_row(i * reps + r);
+                        self.aip.reset_episode_row(i * reps + r);
+                    }
+                }
+            }
+
+            // -- scatter: observe (+ first-tick LS resets)
+            let first = !self.started;
+            if serial {
+                for (w, s) in workers.iter_mut().zip(self.sets.iter_mut()) {
+                    tick_start(w, s, reps, od, first);
+                }
+            } else {
+                let mut ps = pairs(workers, &mut self.sets);
+                pool.run(&mut ps, |_i, p| {
+                    tick_start(p.w, p.s, reps, od, first);
+                    Ok(())
+                })?;
+            }
+            self.started = true;
+
+            // -- ONE batched policy forward over all N*R rows
+            for (i, s) in self.sets.iter().enumerate() {
+                self.obs_block[i * reps * od..(i + 1) * reps * od].copy_from_slice(&s.obs);
+            }
+            self.policy.forward_batched(arts, &self.obs_block, true)?;
+
+            // -- scatter: sample actions + encode ALSH features
+            {
+                let logits = self.policy.logits_all();
+                let values = self.policy.values_all();
+                if serial {
+                    for (i, (w, s)) in
+                        workers.iter_mut().zip(self.sets.iter_mut()).enumerate()
+                    {
+                        sample_and_encode(i, w, s, reps, od, fd, ad, logits, values);
+                    }
+                } else {
+                    let mut ps = pairs(workers, &mut self.sets);
+                    pool.run(&mut ps, |i, p| {
+                        sample_and_encode(i, p.w, p.s, reps, od, fd, ad, logits, values);
+                        Ok(())
+                    })?;
+                }
+            }
+
+            // -- ONE batched AIP forward over all N*R rows
+            for (i, s) in self.sets.iter().enumerate() {
+                self.feats_block[i * reps * fd..(i + 1) * reps * fd]
+                    .copy_from_slice(&s.feats);
+            }
+            self.aip.forward_into(arts, &self.feats_block, &mut self.probs_block)?;
+
+            // -- scatter: sample u, step the LS, push, episode boundaries
+            {
+                let h_before = self.policy.h_before_all();
+                let probs = self.probs_block.as_slice();
+                if serial {
+                    for (i, (w, s)) in
+                        workers.iter_mut().zip(self.sets.iter_mut()).enumerate()
+                    {
+                        step_and_push(
+                            i, w, s, reps, od, hd, ud, nh, nc, horizon, probs, h_before,
+                        );
+                    }
+                } else {
+                    let mut ps = pairs(workers, &mut self.sets);
+                    pool.run(&mut ps, |i, p| {
+                        step_and_push(
+                            i, p.w, p.s, reps, od, hd, ud, nh, nc, horizon, probs, h_before,
+                        );
+                        Ok(())
+                    })?;
+                }
+            }
+
+            // -- PPO megabatch updates. Every replica pushes exactly once
+            // per tick and all buffers share one capacity, so they fill in
+            // lockstep: replica 0 of agent 0 being full means all are.
+            if workers[0].buffer.is_full() {
+                if self.sets.iter().any(|s| s.boot_pending.iter().any(|&b| b)) {
+                    // One extra batched peek (advance = false) bootstraps
+                    // every truncated episode — the megabatch analogue of
+                    // the reference `peek_value` call, with the same
+                    // don't-touch-the-stream/hstate contract.
+                    for (i, s) in self.sets.iter().enumerate() {
+                        self.obs_block[i * reps * od..(i + 1) * reps * od]
+                            .copy_from_slice(&s.obs);
+                    }
+                    self.policy.forward_batched(arts, &self.obs_block, false)?;
+                    let values = self.policy.values_all();
+                    for (i, s) in self.sets.iter_mut().enumerate() {
+                        for r in 0..reps {
+                            if s.boot_pending[r] {
+                                s.boot_pending[r] = false;
+                                s.last_values[r] = values[i * reps + r];
+                            }
+                        }
+                    }
+                }
+                if serial {
+                    for (w, s) in workers.iter_mut().zip(self.sets.iter_mut()) {
+                        update_agent(arts, trainer, w, s)?;
+                    }
+                } else {
+                    let mut ps = pairs(workers, &mut self.sets);
+                    pool.run(&mut ps, |_i, p| update_agent(arts, trainer, p.w, p.s))?;
+                }
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+fn pairs<'a>(workers: &'a mut [AgentWorker], sets: &'a mut [ReplicaSet]) -> Vec<Pair<'a>> {
+    workers.iter_mut().zip(sets.iter_mut()).map(|(w, s)| Pair { w, s }).collect()
+}
+
+/// Tick phase 1 for one agent: first-tick LS resets (each replica from
+/// its own stream, replica order — the reference `begin_episode`) then
+/// observe every replica into its staging row.
+fn tick_start(w: &mut AgentWorker, s: &mut ReplicaSet, reps: usize, obs_dim: usize, first: bool) {
+    if first {
+        for r in 0..reps {
+            let (ls, rng) = if r == 0 {
+                (w.ls.as_mut(), &mut w.rng)
+            } else {
+                (s.extra_ls[r - 1].as_mut(), &mut s.extra_rngs[r - 1])
+            };
+            ls.reset(rng);
+            s.ep_steps[r] = 0;
+        }
+    }
+    for r in 0..reps {
+        let ls = if r == 0 { w.ls.as_ref() } else { s.extra_ls[r - 1].as_ref() };
+        ls.observe(&mut s.obs[r * obs_dim..(r + 1) * obs_dim]);
+    }
+}
+
+/// Tick phase 2 for one agent: sample each replica's action from its own
+/// stream (replica order) out of the shared logits block, record the
+/// value estimate, and encode the ALSH feature row.
+#[allow(clippy::too_many_arguments)]
+fn sample_and_encode(
+    i: usize,
+    w: &mut AgentWorker,
+    s: &mut ReplicaSet,
+    reps: usize,
+    obs_dim: usize,
+    feat_dim: usize,
+    act_dim: usize,
+    logits: &[f32],
+    values: &[f32],
+) {
+    for r in 0..reps {
+        let row = i * reps + r;
+        let l = &logits[row * act_dim..(row + 1) * act_dim];
+        let rng = if r == 0 { &mut w.rng } else { &mut s.extra_rngs[r - 1] };
+        let (action, logp) = sample_categorical_buf(l, &mut s.logp_buf, &mut s.prob_buf, rng);
+        s.actions[r] = action;
+        s.logps[r] = logp;
+        s.values[r] = values[row];
+        encode_alsh(
+            &s.obs[r * obs_dim..(r + 1) * obs_dim],
+            action,
+            act_dim,
+            &mut s.feats[r * feat_dim..(r + 1) * feat_dim],
+        );
+    }
+}
+
+/// Tick phase 3 for one agent: per replica (replica order, own stream) —
+/// sample `u`, step the LS, push the transition, fold the reward EMA,
+/// reset finished episodes inline (the RNG-consuming part of the
+/// reference `begin_episode`; bank rows zero next tick), and stage the
+/// bootstrap observation when the rollout buffer just filled mid-episode.
+#[allow(clippy::too_many_arguments)]
+fn step_and_push(
+    i: usize,
+    w: &mut AgentWorker,
+    s: &mut ReplicaSet,
+    reps: usize,
+    obs_dim: usize,
+    h_dim: usize,
+    u_dim: usize,
+    n_heads: usize,
+    n_cls: usize,
+    horizon: usize,
+    probs: &[f32],
+    h_before: &[f32],
+) {
+    for r in 0..reps {
+        let row = i * reps + r;
+        let (ls, rng) = if r == 0 {
+            (w.ls.as_mut(), &mut w.rng)
+        } else {
+            (s.extra_ls[r - 1].as_mut(), &mut s.extra_rngs[r - 1])
+        };
+        sample_u(&probs[row * u_dim..(row + 1) * u_dim], n_heads, n_cls, rng, &mut s.u_buf);
+        let reward = ls.step(s.actions[r], &s.u_buf, rng);
+        s.ep_steps[r] += 1;
+        let done = s.ep_steps[r] >= horizon;
+        {
+            let buf = if r == 0 { &mut w.buffer } else { &mut s.extra_bufs[r - 1] };
+            buf.push(
+                &s.obs[r * obs_dim..(r + 1) * obs_dim],
+                &h_before[row * h_dim..(row + 1) * h_dim],
+                s.actions[r],
+                s.logps[r],
+                reward,
+                s.values[r],
+                done,
+            );
+        }
+        // Replica contributions fold in replica order; replica 0 keeps the
+        // worker's env-step counter on reference parity.
+        w.recent_reward = 0.99 * w.recent_reward + 0.01 * reward;
+        if r == 0 {
+            w.env_steps += 1;
+        }
+        if done {
+            ls.reset(rng);
+            s.ep_steps[r] = 0;
+            s.pending_reset[r] = true;
+        }
+        let full = if r == 0 { w.buffer.is_full() } else { s.extra_bufs[r - 1].is_full() };
+        if full {
+            if done {
+                s.last_values[r] = 0.0;
+                s.boot_pending[r] = false;
+            } else {
+                // Stage the post-step observation for the batched peek;
+                // next tick's observe overwrites it either way.
+                ls.observe(&mut s.obs[r * obs_dim..(r + 1) * obs_dim]);
+                s.boot_pending[r] = true;
+            }
+        }
+    }
+}
+
+/// Tick phase 4 for one agent: consume the R full rollout buffers as one
+/// PPO megabatch (minibatches draw across replicas; the update shuffles
+/// from the worker's own stream, exactly like the reference path).
+fn update_agent(
+    arts: &ArtifactSet,
+    trainer: &PpoTrainer,
+    w: &mut AgentWorker,
+    s: &mut ReplicaSet,
+) -> Result<()> {
+    let mut bufs: Vec<&RolloutBuffer> = Vec::with_capacity(1 + s.extra_bufs.len());
+    bufs.push(&w.buffer);
+    bufs.extend(s.extra_bufs.iter());
+    trainer.update_megabatch(arts, &mut w.policy.net, &bufs, &s.last_values, &mut w.rng)?;
+    w.buffer.clear();
+    for b in &mut s.extra_bufs {
+        b.clear();
+    }
+    Ok(())
+}

@@ -16,6 +16,7 @@ mod async_eval;
 mod checkpoint;
 mod collect;
 mod evaluate;
+mod megabatch;
 mod policy_rt;
 mod worker;
 
@@ -27,6 +28,7 @@ pub(crate) use collect::{collect_staged, stage_collect_banks};
 pub(crate) use evaluate::evaluate_staged;
 pub use evaluate::{evaluate_on_gs, evaluate_scripted};
 pub use crate::runtime::ActOut;
+pub use megabatch::LsMegabatch;
 pub use policy_rt::PolicyRuntime;
 pub use worker::AgentWorker;
 
@@ -406,6 +408,15 @@ impl DialsCoordinator {
         // the retrain and split the collect RNG there, so datasets, CE
         // curves, and eval curves are bit-identical
         // (tests/async_collect_equivalence.rs).
+        // cfg.ls_replicas > 0: megabatch LS training — R replicas per
+        // agent behind one [N*R]-row forward per bank per tick
+        // (coordinator::megabatch); 0 = the per-agent B=1 reference path.
+        // R = 1 is bit-identical to the reference path
+        // (tests/megabatch_equivalence.rs).
+        let ls_reps = ls_replica_mode(&self.arts, cfg);
+        let mut mega =
+            (ls_reps > 0).then(|| LsMegabatch::new(&self.arts, cfg, &workers, ls_reps));
+
         let retrains = cfg.mode == SimMode::Dials;
         let mut async_collect = (retrains && cfg.async_collect > 0)
             .then(|| AsyncCollect::new(&self.arts, &pool, cfg, batched, shards));
@@ -490,15 +501,30 @@ impl DialsCoordinator {
             // ---- parallel IALS training segment (Algorithm 1 lines 7-12)
             let horizon = cfg.horizon;
             let seg_len = seg.len;
-            let durations = pool.run(&mut workers, |_i, w| {
-                w.train_segment(&self.arts, &trainer, seg_len, horizon)
-            })?;
-            let mut cp = CriticalPath::new();
-            for d in &durations {
-                cp.record(*d);
-                timers.add("agent_train", *d);
+            match mega.as_mut() {
+                // Megabatch path: the segment is one globally-synchronised
+                // joint phase (two batched forwards per tick; agent work
+                // scattered over the pool inside), so its wall time IS the
+                // critical path — no per-agent slot packing applies.
+                Some(m) => {
+                    let wall = m.train_segment(
+                        &self.arts, &trainer, &mut workers, &pool, seg_len, horizon,
+                    )?;
+                    timers.add("agent_train", wall);
+                    train_cp_total += wall;
+                }
+                None => {
+                    let durations = pool.run(&mut workers, |_i, w| {
+                        w.train_segment(&self.arts, &trainer, seg_len, horizon)
+                    })?;
+                    let mut cp = CriticalPath::new();
+                    for d in &durations {
+                        cp.record(*d);
+                        timers.add("agent_train", *d);
+                    }
+                    train_cp_total += cp.with_slots(cfg.n_agents());
+                }
             }
-            train_cp_total += cp.with_slots(cfg.n_agents());
 
             // ---- periodic evaluation at the segment boundary. Only the
             // snapshot is on the critical path; the compute either runs
@@ -656,6 +682,29 @@ pub(crate) fn gs_batch_mode(arts: &ArtifactSet, cfg: &ExperimentConfig) -> bool 
         );
     }
     batched
+}
+
+/// Resolve the megabatch LS-training mode: `cfg.ls_replicas` (0 = the
+/// per-agent B=1 reference path) downgraded to 0 with a notice when the
+/// artifact set cannot serve the `[N × R]`-row batched forwards — old
+/// sets without the `_b` executables, or XLA sets lowered for a
+/// different `N × R` shape.
+pub(crate) fn ls_replica_mode(arts: &ArtifactSet, cfg: &ExperimentConfig) -> usize {
+    if cfg.ls_replicas == 0 {
+        return 0;
+    }
+    let n = cfg.n_agents();
+    if !arts.supports_megabatch(n, cfg.ls_replicas) {
+        eprintln!(
+            "[dials] megabatch LS training unavailable for this artifact set \
+             (missing `_b` executables or lowered shape != {n}x{r}); falling \
+             back to per-agent B=1 training — re-run `make artifacts` with \
+             --batch {n} --replicas {r}",
+            r = cfg.ls_replicas
+        );
+        return 0;
+    }
+    cfg.ls_replicas
 }
 
 /// Resolve the sharded-GS mode: `cfg.gs_shards` clamped to the agent

@@ -106,6 +106,7 @@ mod tests {
             policy_h2: 0,
             aip_hid: 0,
             batch_n: 0,
+            batch_replicas: 1,
         }
     }
 

@@ -51,9 +51,9 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_cli(args)?;
     eprintln!(
-        "[dials] {} / {} / {} agents / {} steps (F={}, seed={})",
+        "[dials] {} / {} / {} agents / {} steps (F={}, seed={}, ls_replicas={})",
         cfg.domain.name(), cfg.mode.label(), cfg.n_agents(), cfg.total_steps,
-        cfg.aip_train_freq, cfg.seed
+        cfg.aip_train_freq, cfg.seed, cfg.ls_replicas
     );
     let engine = Engine::cpu()?;
     let coord = DialsCoordinator::new(&engine, cfg.clone())?;
@@ -84,6 +84,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         log.collect_snapshot_seconds, log.collect_compute_seconds,
         if cfg.async_collect > 0 { " [overlapped]" } else { "" }
     );
+    // LS training throughput: every agent advances one env step per
+    // joint tick per replica, so the trained-experience rate is
+    // N × R × total_steps over the training critical path.
+    if log.agent_train_seconds > 0.0 {
+        let ls_steps = (cfg.n_agents() * cfg.ls_replicas.max(1) * cfg.total_steps) as f64;
+        eprintln!(
+            "[dials] ls_steps_per_s={:.0} (replicas={}, {} LS env steps / {:.2}s)",
+            ls_steps / log.agent_train_seconds,
+            cfg.ls_replicas.max(1),
+            ls_steps,
+            log.agent_train_seconds
+        );
+    }
     if let Some(out) = args.get("out") {
         if let Some(parent) = Path::new(out).parent() {
             if !parent.as_os_str().is_empty() {
@@ -145,6 +158,10 @@ train:
   --async-collect N       pipeline Algorithm-2 influence collection over
                           the segment before each AIP retrain (1 = on,
                           0 = blocking reference; DIALS mode only)
+  --ls-replicas R         megabatch LS training: R vectorized IALS
+                          replicas per agent behind one [N*R]-row forward
+                          (0 = per-agent reference path; R=1 is
+                          bit-identical to it)
   --save-ckpt DIR          save nets at end     --load-ckpt DIR resume
 eval:
   --domain D --grid-side N --episodes N --horizon N  (scripted baseline)

@@ -63,8 +63,12 @@ impl RolloutBuffer {
         done: bool,
     ) {
         assert!(self.len < self.capacity, "rollout buffer overflow");
-        debug_assert_eq!(obs.len(), self.obs_dim);
-        debug_assert_eq!(hstate.len(), self.h_dim);
+        // Hard asserts (not debug): a megabatch row-slicing bug feeding a
+        // wrong-width slice must fail loudly in release builds too — the
+        // copy_from_slice below would panic anyway, but with a length
+        // message that doesn't name the buffer contract.
+        assert_eq!(obs.len(), self.obs_dim, "obs row width mismatch on push");
+        assert_eq!(hstate.len(), self.h_dim, "hstate row width mismatch on push");
         let i = self.len;
         self.obs[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(obs);
         self.hstates[i * self.h_dim..(i + 1) * self.h_dim].copy_from_slice(hstate);
@@ -124,6 +128,20 @@ mod tests {
     fn overflow_panics() {
         let mut b = RolloutBuffer::new(1, 1, 1);
         b.push(&[0.0], &[0.0], 0, 0.0, 0.0, 0.0, false);
+        b.push(&[0.0], &[0.0], 0, 0.0, 0.0, 0.0, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "obs row width mismatch")]
+    fn wrong_obs_width_panics_in_release_too() {
+        let mut b = RolloutBuffer::new(2, 3, 1);
+        b.push(&[0.0, 0.0], &[0.0], 0, 0.0, 0.0, 0.0, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "hstate row width mismatch")]
+    fn wrong_hstate_width_panics_in_release_too() {
+        let mut b = RolloutBuffer::new(2, 1, 2);
         b.push(&[0.0], &[0.0], 0, 0.0, 0.0, 0.0, false);
     }
 }

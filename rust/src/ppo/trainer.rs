@@ -45,22 +45,60 @@ impl PpoTrainer {
         last_value: f32,
         rng: &mut Pcg64,
     ) -> Result<UpdateMetrics> {
-        let n = buf.len();
+        self.update_megabatch(arts, net, &[buf], &[last_value], rng)
+    }
+
+    /// Run the full PPO update over R replica rollouts of ONE agent as a
+    /// single megabatch: GAE runs per replica (each with its own
+    /// bootstrap), advantages normalise over all R×n rows, and every
+    /// epoch shuffles one index set spanning all replicas so minibatches
+    /// draw across them. With R = 1 this IS the reference `update` — same
+    /// arithmetic, same RNG consumption (one shuffle of an n-index vector
+    /// per epoch).
+    pub fn update_megabatch(
+        &self,
+        arts: &ArtifactSet,
+        net: &mut NetState,
+        bufs: &[&RolloutBuffer],
+        last_values: &[f32],
+        rng: &mut Pcg64,
+    ) -> Result<UpdateMetrics> {
+        ensure!(!bufs.is_empty(), "no rollout buffers");
+        ensure!(
+            bufs.len() == last_values.len(),
+            "{} buffers but {} bootstrap values",
+            bufs.len(), last_values.len()
+        );
+        let n = bufs[0].len();
         let mb = self.cfg.minibatch;
         ensure!(n > 0, "empty rollout");
         ensure!(n % mb == 0, "rollout length {n} not a multiple of minibatch {mb}");
+        for b in bufs {
+            ensure!(
+                b.len() == n && b.obs_dim == bufs[0].obs_dim && b.h_dim == bufs[0].h_dim,
+                "replica rollout shape mismatch: len {} vs {n}", b.len()
+            );
+        }
+        let total = bufs.len() * n;
 
-        let (mut adv, ret) = gae(
-            &buf.rewards[..n],
-            &buf.values[..n],
-            &buf.dones[..n],
-            last_value,
-            self.cfg.gamma,
-            self.cfg.gae_lambda,
-        );
+        // Replica-major advantage/return rows: global row r*n + t.
+        let mut adv = Vec::with_capacity(total);
+        let mut ret = Vec::with_capacity(total);
+        for (buf, &lv) in bufs.iter().zip(last_values) {
+            let (a, r) = gae(
+                &buf.rewards[..n],
+                &buf.values[..n],
+                &buf.dones[..n],
+                lv,
+                self.cfg.gamma,
+                self.cfg.gae_lambda,
+            );
+            adv.extend_from_slice(&a);
+            ret.extend_from_slice(&r);
+        }
         normalise(&mut adv);
 
-        let mut indices: Vec<usize> = (0..n).collect();
+        let mut indices: Vec<usize> = (0..total).collect();
         let mut metrics = UpdateMetrics::default();
         let engine = &arts.engine;
 
@@ -76,7 +114,7 @@ impl PpoTrainer {
 
         // Single packed staging tensor per minibatch (one upload):
         // [t | obs | h | act | old_logp | adv | ret]
-        let (od, hd) = (buf.obs_dim, buf.h_dim);
+        let (od, hd) = (bufs[0].obs_dim, bufs[0].h_dim);
         let batch_len = 1 + mb * (od + hd + 4);
         let mut t_batch = Tensor::zeros(&[batch_len]);
         let (o_obs, o_h) = (1, 1 + mb * od);
@@ -87,12 +125,13 @@ impl PpoTrainer {
             rng.shuffle(&mut indices);
             for chunk in indices.chunks_exact(mb) {
                 for (row, &i) in chunk.iter().enumerate() {
+                    let (buf, t) = (bufs[i / n], i % n);
                     t_batch.data[o_obs + row * od..o_obs + (row + 1) * od]
-                        .copy_from_slice(buf.obs_row(i));
+                        .copy_from_slice(buf.obs_row(t));
                     t_batch.data[o_h + row * hd..o_h + (row + 1) * hd]
-                        .copy_from_slice(buf.hstate_row(i));
-                    t_batch.data[o_act + row] = buf.actions[i];
-                    t_batch.data[o_logp + row] = buf.logps[i];
+                        .copy_from_slice(buf.hstate_row(t));
+                    t_batch.data[o_act + row] = buf.actions[t];
+                    t_batch.data[o_logp + row] = buf.logps[t];
                     t_batch.data[o_adv + row] = adv[i];
                     t_batch.data[o_ret + row] = ret[i];
                 }

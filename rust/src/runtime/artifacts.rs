@@ -42,6 +42,12 @@ pub struct NetSpec {
     /// Joint-step batch N the `_b` artifacts were lowered for
     /// (0 = shape-polymorphic, i.e. native artifacts).
     pub batch_n: usize,
+    /// Replica count R the `_b` artifacts were lowered for (`replicas` in
+    /// `.meta`): their input rank is `[batch * replicas]` with each param
+    /// row serving R consecutive input rows. 1 when the key is absent
+    /// (pre-megabatch artifacts) and irrelevant when `batch_n = 0`
+    /// (shape-polymorphic native artifacts accept any row multiple).
+    pub batch_replicas: usize,
 }
 
 impl NetSpec {
@@ -72,6 +78,13 @@ impl NetSpec {
             policy_h2: opt("policy_h2"),
             aip_hid: opt("aip_hid"),
             batch_n: opt("batch"),
+            // Semantic default is 1 (one row per param row), not 0: old
+            // `.meta` files predate the megabatch key entirely.
+            batch_replicas: kv
+                .get("replicas")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(1)
+                .max(1),
             domain: kv.get("domain").cloned().unwrap_or_default(),
             obs_dim: get("obs_dim")?,
             act_dim: get("act_dim")?,
@@ -162,6 +175,7 @@ impl NetSpec {
             policy_h2: 0,
             aip_hid: 0,
             batch_n: 0,
+            batch_replicas: 1,
         }
     }
 
@@ -289,7 +303,23 @@ impl ArtifactSet {
     pub fn supports_batched(&self, n: usize) -> bool {
         self.policy_step_b.is_some()
             && self.aip_forward_b.is_some()
-            && (self.spec.batch_n == 0 || self.spec.batch_n == n)
+            && (self.spec.batch_n == 0
+                || (self.spec.batch_n == n && self.spec.batch_replicas <= 1))
+    }
+
+    /// Whether the megabatch LS path can run `reps` replicas of each of
+    /// `n` agents through one `[n*reps]`-row forward: both `_b`
+    /// executables are present and, when they were lowered for fixed
+    /// shapes (`batch` ≠ 0 in `.meta`), both the batch N and the replica
+    /// count match exactly. Shape-polymorphic native artifacts
+    /// (`batch = 0`) accept any row multiple. The coordinator falls back
+    /// to the per-agent reference path when this is false.
+    pub fn supports_megabatch(&self, n: usize, reps: usize) -> bool {
+        self.policy_step_b.is_some()
+            && self.aip_forward_b.is_some()
+            && reps >= 1
+            && (self.spec.batch_n == 0
+                || (self.spec.batch_n == n && self.spec.batch_replicas == reps))
     }
 
     /// The batched policy executable; required by the batched bank path.
@@ -335,7 +365,10 @@ mod tests {
         assert_eq!(spec.policy_h1, 64);
         assert_eq!(spec.aip_hid, 64);
         assert_eq!(spec.batch_n, 25);
+        assert_eq!(spec.batch_replicas, 1, "absent replicas key defaults to 1");
         spec.validate_against_sim(Domain::Traffic).unwrap();
+        let mega = format!("{META}replicas=8\n");
+        assert_eq!(NetSpec::parse(&mega).unwrap().batch_replicas, 8);
         let pd = spec.policy_dims().unwrap();
         assert_eq!(pd.param_count(), 6147);
         assert_eq!(spec.aip_dims().unwrap().param_count(), 6340);

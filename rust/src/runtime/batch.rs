@@ -143,9 +143,17 @@ impl NetBank {
 }
 
 /// Batched front-end over the `policy_step[_b]` artifacts for N agents.
+///
+/// A bank may carry `reps` replica rows per agent (the megabatch LS
+/// training path): the parameter stack stays `[N, P]` while every
+/// per-row buffer (hstate, logits, values, staging) holds `N * reps`
+/// agent-major rows — input row `i` maps to param row `i / reps`, the
+/// replica→agent indirection implemented by the `_b` artifacts.
 pub struct PolicyBank {
     bank: NetBank,
     batched: bool,
+    /// Replica rows per param row (1 = plain per-agent bank).
+    reps: usize,
     /// Per-agent streaming state, row-major `[n × h]`.
     hstate: Vec<f32>,
     /// Hidden state BEFORE the most recent forward (what PPO replays).
@@ -180,15 +188,28 @@ impl PolicyBank {
     /// step. `batched = false`: N B=1 calls against `policy_step` (the
     /// reference path, and the only mode B=1 views use).
     pub fn new(spec: &NetSpec, n: usize, batched: bool) -> Self {
+        Self::build(spec, n, 1, batched)
+    }
+
+    /// Megabatch constructor: `reps` replica rows per agent over the same
+    /// `[n, P]` parameter stack, always batched (one `[n*reps]`-row run
+    /// call per forward is the point).
+    pub fn with_replicas(spec: &NetSpec, n: usize, reps: usize) -> Self {
+        Self::build(spec, n, reps.max(1), true)
+    }
+
+    fn build(spec: &NetSpec, n: usize, reps: usize, batched: bool) -> Self {
+        let rows = n * reps;
         PolicyBank {
             bank: NetBank::new(n, spec.policy_params, batched),
             batched,
-            hstate: vec![0.0; n * spec.policy_hstate],
-            h_before: vec![0.0; n * spec.policy_hstate],
-            logits: vec![0.0; n * spec.act_dim],
-            values: vec![0.0; n],
-            in_obs: Tensor::zeros(&[n, spec.obs_dim]),
-            in_h: Tensor::zeros(&[n, spec.policy_hstate]),
+            reps,
+            hstate: vec![0.0; rows * spec.policy_hstate],
+            h_before: vec![0.0; rows * spec.policy_hstate],
+            logits: vec![0.0; rows * spec.act_dim],
+            values: vec![0.0; rows],
+            in_obs: Tensor::zeros(&[rows, spec.obs_dim]),
+            in_h: Tensor::zeros(&[rows, spec.policy_hstate]),
             row_obs: Tensor::zeros(&[1, spec.obs_dim]),
             row_h: Tensor::zeros(&[1, spec.policy_hstate]),
             dev_obs: None,
@@ -198,13 +219,14 @@ impl PolicyBank {
             packed: Tensor::default(),
             logp_buf: Vec::with_capacity(spec.act_dim),
             prob_buf: Vec::with_capacity(spec.act_dim),
-            n,
+            n: rows,
             obs_dim: spec.obs_dim,
             act_dim: spec.act_dim,
             h_dim: spec.policy_hstate,
         }
     }
 
+    /// Total rows this bank forwards per call (`agents * reps`).
     pub fn n(&self) -> usize {
         self.n
     }
@@ -216,6 +238,12 @@ impl PolicyBank {
     /// Zero every agent's recurrent state (episode boundary).
     pub fn reset_episodes(&mut self) {
         self.hstate.fill(0.0);
+    }
+
+    /// Zero one row's recurrent state (per-replica episode boundary in
+    /// the megabatch path — replicas finish episodes independently).
+    pub fn reset_episode_row(&mut self, row: usize) {
+        self.hstate[row * self.h_dim..(row + 1) * self.h_dim].fill(0.0);
     }
 
     /// Make row `i` current for `net` (re-copies only on version bump).
@@ -236,6 +264,27 @@ impl PolicyBank {
     /// Value estimate of agent `i` from the most recent forward.
     pub fn value_row(&self, i: usize) -> f32 {
         self.values[i]
+    }
+
+    /// All logits rows `[rows × act]` of the most recent forward. Plain
+    /// slice (not `&self`-tied per-row views) so megabatch scatter
+    /// closures can capture data without capturing the bank.
+    pub fn logits_all(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// All value rows `[rows]` of the most recent forward.
+    pub fn values_all(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// All pre-forward hidden-state rows `[rows × h]` (what PPO replays).
+    pub fn h_before_all(&self) -> &[f32] {
+        &self.h_before
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
     }
 
     /// Unpack agent `i`'s `[logits | value | h']` row starting at
@@ -268,7 +317,12 @@ impl PolicyBank {
         );
         let w = self.act_dim + 1 + self.h_dim;
         if self.batched {
-            check_lowered_batch(arts.spec.batch_n, self.n)?;
+            check_lowered_batch(
+                arts.spec.batch_n,
+                arts.spec.batch_replicas,
+                self.bank.n(),
+                self.reps,
+            )?;
             self.in_obs.data.copy_from_slice(obs);
             self.in_h.data.copy_from_slice(&self.hstate);
             arts.engine.upload_to(&self.in_obs, &mut self.dev_obs)?;
@@ -321,6 +375,20 @@ impl PolicyBank {
         Ok(())
     }
 
+    /// Forward all rows without sampling: ONE run call in batched mode,
+    /// advancing the recurrent state iff `advance`. The megabatch driver
+    /// uses this directly and samples per replica from `logits_all`
+    /// (each replica from its own RNG stream), keeping the bank out of
+    /// the parallel scatter phase.
+    pub fn forward_batched(
+        &mut self,
+        arts: &ArtifactSet,
+        obs: &[f32],
+        advance: bool,
+    ) -> Result<()> {
+        self.forward(arts, obs, advance)
+    }
+
     /// Joint acting step: one batched forward + per-agent sampling, in
     /// agent order, from the shared `rng` stream (identical consumption
     /// to the per-agent loop it replaces). `out` receives one `ActOut`
@@ -369,9 +437,11 @@ impl PolicyBank {
 }
 
 /// Batched front-end over the `aip_forward[_b]` artifacts for N agents.
+/// Like [`PolicyBank`], may carry `reps` replica rows per param row.
 pub struct AipBank {
     bank: NetBank,
     batched: bool,
+    reps: usize,
     hstate: Vec<f32>,
     in_feat: Tensor,
     in_h: Tensor,
@@ -393,12 +463,24 @@ pub struct AipBank {
 
 impl AipBank {
     pub fn new(spec: &NetSpec, n: usize, batched: bool) -> Self {
+        Self::build(spec, n, 1, batched)
+    }
+
+    /// Megabatch constructor: `reps` replica rows per agent (see
+    /// [`PolicyBank::with_replicas`]).
+    pub fn with_replicas(spec: &NetSpec, n: usize, reps: usize) -> Self {
+        Self::build(spec, n, reps.max(1), true)
+    }
+
+    fn build(spec: &NetSpec, n: usize, reps: usize, batched: bool) -> Self {
+        let rows = n * reps;
         AipBank {
             bank: NetBank::new(n, spec.aip_params, batched),
             batched,
-            hstate: vec![0.0; n * spec.aip_hstate],
-            in_feat: Tensor::zeros(&[n, spec.aip_feat]),
-            in_h: Tensor::zeros(&[n, spec.aip_hstate]),
+            reps,
+            hstate: vec![0.0; rows * spec.aip_hstate],
+            in_feat: Tensor::zeros(&[rows, spec.aip_feat]),
+            in_h: Tensor::zeros(&[rows, spec.aip_hstate]),
             row_feat: Tensor::zeros(&[1, spec.aip_feat]),
             row_h: Tensor::zeros(&[1, spec.aip_hstate]),
             dev_feat: None,
@@ -406,7 +488,7 @@ impl AipBank {
             dev_row_feat: None,
             dev_row_h: None,
             packed: Tensor::default(),
-            n,
+            n: rows,
             feat_dim: spec.aip_feat,
             h_dim: spec.aip_hstate,
             n_heads: spec.aip_heads,
@@ -414,6 +496,7 @@ impl AipBank {
         }
     }
 
+    /// Total rows this bank forwards per call (`agents * reps`).
     pub fn n(&self) -> usize {
         self.n
     }
@@ -430,6 +513,11 @@ impl AipBank {
 
     pub fn reset_episodes(&mut self) {
         self.hstate.fill(0.0);
+    }
+
+    /// Zero one row's recurrent state (per-replica episode boundary).
+    pub fn reset_episode_row(&mut self, row: usize) {
+        self.hstate[row * self.h_dim..(row + 1) * self.h_dim].fill(0.0);
     }
 
     pub fn stage(&mut self, engine: &Engine, i: usize, net: &NetState) -> Result<()> {
@@ -458,7 +546,12 @@ impl AipBank {
         );
         let w = u + self.h_dim;
         if self.batched {
-            check_lowered_batch(arts.spec.batch_n, self.n)?;
+            check_lowered_batch(
+                arts.spec.batch_n,
+                arts.spec.batch_replicas,
+                self.bank.n(),
+                self.reps,
+            )?;
             self.in_feat.data.copy_from_slice(feats);
             self.in_h.data.copy_from_slice(&self.hstate);
             arts.engine.upload_to(&self.in_feat, &mut self.dev_feat)?;
@@ -525,18 +618,7 @@ impl AipBank {
     /// row, in the local simulator's input format: Bernoulli heads →
     /// {0,1} per head; categorical heads → class index per head.
     pub fn sample_u_into(&self, probs_row: &[f32], rng: &mut Pcg64, u_out: &mut [f32]) {
-        debug_assert_eq!(u_out.len(), self.n_heads);
-        debug_assert_eq!(probs_row.len(), self.u_dim());
-        if self.n_cls <= 1 {
-            for (o, &p) in u_out.iter_mut().zip(probs_row.iter().take(self.n_heads)) {
-                *o = if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
-            }
-        } else {
-            for (h, o) in u_out.iter_mut().enumerate() {
-                let group = &probs_row[h * self.n_cls..(h + 1) * self.n_cls];
-                *o = rng.categorical(group) as f32;
-            }
-        }
+        sample_u(probs_row, self.n_heads, self.n_cls, rng, u_out);
     }
 
     pub fn rows_recopied(&self) -> u64 {
@@ -548,13 +630,46 @@ impl AipBank {
     }
 }
 
-/// The `_b` artifacts are lowered for one specific N; 0 means
-/// shape-polymorphic (native backend).
-fn check_lowered_batch(lowered: usize, n: usize) -> Result<()> {
+/// Sample one influence realisation `u` from one probability row:
+/// Bernoulli heads (`n_cls <= 1`) → {0,1} per head; categorical heads →
+/// class index per head. A free function (not a bank method) so the
+/// megabatch scatter phase can sample from plain `&[f32]` probability
+/// slices without capturing a bank in the parallel closure.
+pub fn sample_u(
+    probs_row: &[f32],
+    n_heads: usize,
+    n_cls: usize,
+    rng: &mut Pcg64,
+    u_out: &mut [f32],
+) {
+    debug_assert_eq!(u_out.len(), n_heads);
+    debug_assert_eq!(probs_row.len(), n_heads * n_cls.max(1));
+    if n_cls <= 1 {
+        for (o, &p) in u_out.iter_mut().zip(probs_row.iter().take(n_heads)) {
+            *o = if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
+        }
+    } else {
+        for (h, o) in u_out.iter_mut().enumerate() {
+            let group = &probs_row[h * n_cls..(h + 1) * n_cls];
+            *o = rng.categorical(group) as f32;
+        }
+    }
+}
+
+/// The `_b` artifacts are lowered for one specific `[N × R]` shape; a
+/// lowered N of 0 means shape-polymorphic (native backend, any row
+/// multiple accepted).
+fn check_lowered_batch(
+    lowered_n: usize,
+    lowered_reps: usize,
+    n: usize,
+    reps: usize,
+) -> Result<()> {
     ensure!(
-        lowered == 0 || lowered == n,
-        "batched artifacts were lowered for N={lowered} agents but this run has N={n} — \
-         re-run `make artifacts` with --batch {n} (or disable batched GS stepping)"
+        lowered_n == 0 || (lowered_n == n && lowered_reps.max(1) == reps),
+        "batched artifacts were lowered for N={lowered_n}×R={} but this run has N={n}×R={reps} — \
+         re-run `make artifacts` with --batch {n} --replicas {reps} (or disable batched stepping)",
+        lowered_reps.max(1)
     );
     Ok(())
 }
@@ -643,8 +758,38 @@ mod tests {
 
     #[test]
     fn lowered_batch_mismatch_is_caught() {
-        assert!(check_lowered_batch(0, 7).is_ok());
-        assert!(check_lowered_batch(7, 7).is_ok());
-        assert!(check_lowered_batch(25, 7).is_err());
+        assert!(check_lowered_batch(0, 1, 7, 1).is_ok());
+        assert!(check_lowered_batch(7, 1, 7, 1).is_ok());
+        assert!(check_lowered_batch(25, 1, 7, 1).is_err());
+        // megabatch shapes: polymorphic accepts any R; lowered R must match
+        assert!(check_lowered_batch(0, 1, 7, 8).is_ok());
+        assert!(check_lowered_batch(7, 8, 7, 8).is_ok());
+        assert!(check_lowered_batch(7, 8, 7, 4).is_err());
+        assert!(check_lowered_batch(7, 1, 7, 8).is_err());
+        // absent replicas key (0) normalises to 1
+        assert!(check_lowered_batch(7, 0, 7, 1).is_ok());
+    }
+
+    #[test]
+    fn free_sample_u_matches_bank_method() {
+        // Bernoulli heads
+        let probs = [1.0f32, 0.0, 1.0, 0.3];
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        let mut ua = [9.0f32; 4];
+        let mut ub = [9.0f32; 4];
+        sample_u(&probs, 4, 1, &mut a, &mut ua);
+        sample_u(&probs, 4, 1, &mut b, &mut ub);
+        assert_eq!(ua, ub, "same stream, same draws");
+        assert_eq!(ua[0], 1.0);
+        assert_eq!(ua[1], 0.0);
+        // categorical heads: head h always class h
+        let mut probs = vec![0.0f32; 9];
+        for h in 0..3 {
+            probs[h * 3 + h] = 1.0;
+        }
+        let mut u = [0.0f32; 3];
+        sample_u(&probs, 3, 3, &mut Pcg64::seed(7), &mut u);
+        assert_eq!(u, [0.0, 1.0, 2.0]);
     }
 }

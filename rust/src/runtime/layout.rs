@@ -25,6 +25,10 @@
 //! this exact row kernel over the stacked `[N, P]` parameters, which is
 //! what makes the batched and B=1 paths bit-identical (the golden
 //! equivalence test in `rust/tests/batch_equivalence.rs` relies on it).
+//! The megabatch `[N*R]`-row shape reuses the same kernels: the native
+//! dispatcher (`native::compute_into`) maps data row `i` to parameter row
+//! `i / R` (agent-major replica rows), so R replicas of an agent run the
+//! identical per-row math over one shared parameter row.
 
 /// Dims of one policy network (`policy_step` artifact family).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

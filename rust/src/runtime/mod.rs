@@ -39,7 +39,7 @@ mod native;
 pub mod synth;
 
 pub use artifacts::{ArtifactSet, NetSpec};
-pub use batch::{ActOut, AipBank, NetBank, PolicyBank};
+pub use batch::{sample_u, ActOut, AipBank, NetBank, PolicyBank};
 #[cfg(feature = "xla")]
 pub use exec::{DeviceTensor, Engine, Exec};
 #[cfg(not(feature = "xla"))]

@@ -10,9 +10,10 @@
 //! `aip_forward` executables (and their batched `_b` variants) to the
 //! pure-Rust row kernels in `runtime::layout`, driven by the layer dims
 //! declared in `.meta`. The batched entry point runs the *same row kernel*
-//! over every row of the stacked `[N, P]` parameter tensor, so the one
-//! `run_b`-per-joint-step bank path and the per-agent B=1 path are
-//! bit-identical by construction. The update artifacts (`ppo_update`,
+//! over every input row, mapping `[N*R]` input rows onto the stacked
+//! `[N, P]` parameter tensor by `row / R` (megabatch replica indirection;
+//! `R = 1` is the plain batched case), so the one `run_b`-per-joint-step
+//! bank path and the per-agent B=1 path are bit-identical by construction. The update artifacts (`ppo_update`,
 //! `aip_update`, `aip_eval`) still need the real PJRT client and return an
 //! explanatory error.
 
@@ -228,11 +229,15 @@ impl Exec {
 
     /// Shared compute path. Inputs `(params, x, h)`: a rank-1 `[P]`
     /// parameter tensor selects the B=1 packed output `[W]`; a rank-2
-    /// `[N, P]` stack selects the batched output `[N, W]` (N = 1 stays
-    /// rank-2, mirroring the lowered `_b` artifacts). Writes into the
-    /// caller's `out`, reusing its buffers — the hot loops hold one
-    /// packed-output tensor per bank, so steady-state forwards allocate
-    /// nothing on this backend.
+    /// `[N, P]` stack selects the batched output `[rows, W]` (N = 1 stays
+    /// rank-2, mirroring the lowered `_b` artifacts). The input row count
+    /// may be any multiple `rows = N * R` of the param rows — the megabatch
+    /// `[N*R]` contract: rows are agent-major, input row `i` uses param row
+    /// `i / R`, so one param row serves all R of its replica rows with no
+    /// duplication. `rows = N` reproduces the pre-megabatch behaviour bit
+    /// for bit. Writes into the caller's `out`, reusing its buffers — the
+    /// hot loops hold one packed-output tensor per bank, so steady-state
+    /// forwards allocate nothing on this backend.
     fn compute_into(&self, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
         let Some(kind) = &self.net else {
             bail!(
@@ -263,18 +268,29 @@ impl Exec {
             NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
         };
         ensure!(
-            params.len() == n * p && x.len() == n * in_dim && h.len() == n * h_dim,
-            "{}: shape mismatch — params {:?}, input {:?}, h {:?} for N={n} \
-             (P={p}, in={in_dim}, H={h_dim})",
-            self.name, params.dims, x.dims, h.dims
+            params.len() == n * p && in_dim > 0 && h_dim > 0,
+            "{}: shape mismatch — params {:?} for N={n} (P={p}, in={in_dim}, H={h_dim})",
+            self.name, params.dims
         );
+        let rows = x.len() / in_dim;
+        ensure!(
+            x.len() == rows * in_dim
+                && h.len() == rows * h_dim
+                && rows >= n
+                && rows % n == 0
+                && (batched || rows == 1),
+            "{}: shape mismatch — input {:?}, h {:?} for N={n} \
+             (P={p}, in={in_dim}, H={h_dim}; rows must be a multiple of N)",
+            self.name, x.dims, h.dims
+        );
+        let reps = rows / n;
         out.dims.clear();
         if batched {
-            out.dims.push(n);
+            out.dims.push(rows);
         }
         out.dims.push(out_w);
         out.data.clear();
-        out.data.resize(n * out_w, 0.0);
+        out.data.resize(rows * out_w, 0.0);
         FWD_SCRATCH.with(|cell| {
             let mut s = cell.borrow_mut();
             match kind {
@@ -282,8 +298,9 @@ impl Exec {
                 NetKind::Aip(d) => s.fit_aip(d),
                 NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
             }
-            for i in 0..n {
-                let flat = &params.data[i * p..(i + 1) * p];
+            for i in 0..rows {
+                let a = i / reps;
+                let flat = &params.data[a * p..(a + 1) * p];
                 let xi = &x.data[i * in_dim..(i + 1) * in_dim];
                 let hi = &h.data[i * h_dim..(i + 1) * h_dim];
                 let oi = &mut out.data[i * out_w..(i + 1) * out_w];
@@ -407,6 +424,41 @@ mod tests {
         assert!(exec
             .run(&[Tensor::zeros(&[dims.param_count()]), bad, Tensor::zeros(&[1, 1])])
             .is_err());
+    }
+
+    #[test]
+    fn batched_rows_may_be_a_replica_multiple_of_param_rows() {
+        let dims = PolicyDims { obs: 3, act: 2, recurrent: false, h1: 4, h2: 4 };
+        let mut exec = fake_exec("pol_reps");
+        exec.bind_policy(dims, dims.param_count()).unwrap();
+        let w = dims.packed_out();
+        // 2 param rows: row 0 all zeros, row 1 a small deterministic ramp
+        let p = dims.param_count();
+        let mut pdata = vec![0.0f32; 2 * p];
+        for (j, v) in pdata[p..].iter_mut().enumerate() {
+            *v = 0.01 * (j % 7) as f32 - 0.02;
+        }
+        let pb = Tensor::new(vec![2, p], pdata);
+        // 4 input rows (R = 2, agent-major): rows {0,1} ↔ param row 0,
+        // rows {2,3} ↔ param row 1. Replica pairs share inputs, so they
+        // must agree bit for bit; distinct param rows must not.
+        let row = [0.3f32, -0.4, 0.5];
+        let mut xdata = Vec::new();
+        for _ in 0..4 {
+            xdata.extend_from_slice(&row);
+        }
+        let ob = Tensor::new(vec![4, 3], xdata);
+        let hb = Tensor::zeros(&[4, 1]);
+        let out = exec.run(&[pb.clone(), ob, hb]).unwrap();
+        assert_eq!(out[0].dims, vec![4, w]);
+        let o = &out[0].data;
+        assert_eq!(o[..w], o[w..2 * w], "replica rows of agent 0 diverged");
+        assert_eq!(o[2 * w..3 * w], o[3 * w..4 * w], "replica rows of agent 1 diverged");
+        assert_ne!(o[..w], o[2 * w..3 * w], "distinct param rows must give distinct rows");
+        assert_eq!(exec.call_count(), 1, "one run covers all N*R rows");
+        // a row count that is not a multiple of the param rows is an error
+        let bad_x = Tensor::new(vec![3, 3], vec![0.0; 9]);
+        assert!(exec.run(&[pb, bad_x, Tensor::zeros(&[3, 1])]).is_err());
     }
 
     #[test]

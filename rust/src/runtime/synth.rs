@@ -75,6 +75,10 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
     };
     let d = domain.name();
 
+    // `batch=0` keeps the set shape-polymorphic: the native kernels accept
+    // any row count, including megabatch `[N*R]` rows (rows a replica
+    // multiple of the N parameter rows), so no `replicas=` key is written
+    // — the default 1 only matters for shape-specialised XLA sets.
     let meta = format!(
         "domain={d}\nobs_dim={}\nact_dim={}\npolicy_recurrent={}\npolicy_hstate={}\n\
          policy_params={}\naip_feat={}\naip_recurrent={}\naip_hstate={}\naip_params={}\n\

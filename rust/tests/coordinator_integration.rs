@@ -41,6 +41,7 @@ fn tiny_cfg(domain: Domain, mode: SimMode) -> ExperimentConfig {
         gs_shards: 0,
         async_eval: 0,
         async_collect: 0,
+        ls_replicas: 0,
     }
 }
 
@@ -247,6 +248,46 @@ fn restored_adam_step_takes_identical_updates() {
         net_a.flat.data, net_c.flat.data,
         "resetting the Adam step should have changed the updates"
     );
+}
+
+/// Megabatch LS training end-to-end over real compiled artifacts:
+/// `--ls-replicas 1` must reproduce the reference path's run bit-for-bit
+/// WITH real PPO updates in the loop (the native-backend twin of this
+/// pin lives in tests/megabatch_equivalence.rs, forward-only), and
+/// higher replica counts must run to completion — via the megabatch
+/// driver when the lowered batch shape carries the replica rows, via the
+/// reference-path fallback (with a notice) when it doesn't.
+#[test]
+fn ls_replicas_one_matches_reference_run_with_real_updates() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let run = |ls_replicas: usize| {
+        let mut cfg = tiny_cfg(Domain::Traffic, SimMode::Dials);
+        // buffer fills (rollout 64) land mid-episode so the batched
+        // bootstrap peek is on the exercised path
+        cfg.horizon = 48;
+        cfg.ls_replicas = ls_replicas;
+        DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+    };
+    let reference = run(0);
+    let mega = run(1);
+    assert_eq!(reference.eval_curve.len(), mega.eval_curve.len());
+    for (a, b) in reference.eval_curve.iter().zip(mega.eval_curve.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            a.value.to_bits(),
+            b.value.to_bits(),
+            "eval at step {} diverged under --ls-replicas 1",
+            a.step
+        );
+    }
+    assert_eq!(reference.final_return.to_bits(), mega.final_return.to_bits());
+    assert_eq!(reference.ce_curve.len(), mega.ce_curve.len());
+    let wide = run(2);
+    assert!(wide.final_return.is_finite());
+    assert_eq!(wide.eval_curve.len(), reference.eval_curve.len());
 }
 
 /// The thread pool must not change results, only wall-clock: training the

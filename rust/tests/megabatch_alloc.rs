@@ -1,0 +1,70 @@
+//! Steady-state zero-allocation contract of the megabatch LS training
+//! tick (DESIGN.md §11): after warm-up, a joint tick — two batched
+//! forwards plus all per-replica sampling/stepping/pushing — performs no
+//! host heap allocation on the native backend with a 1-thread pool.
+//!
+//! Lives in its own integration-test binary: the tracking allocator is a
+//! process-global hook, and a sibling test allocating concurrently would
+//! pollute the measurement window.
+
+#![cfg(not(feature = "xla"))]
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{DialsCoordinator, LsMegabatch};
+use dials::exec::WorkerPool;
+use dials::ppo::PpoTrainer;
+use dials::runtime::{synth, Engine};
+use dials::util::alloc::{self, TrackingAlloc};
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+#[test]
+fn steady_state_megabatch_tick_allocates_nothing() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = std::env::temp_dir().join("dials_megabatch_alloc").join(domain.name());
+        let _ = std::fs::remove_dir_all(&dir);
+        synth::write_native_artifacts(&dir, domain, 13).unwrap();
+        let cfg = ExperimentConfig {
+            domain,
+            mode: SimMode::UntrainedDials,
+            grid_side: 2,
+            total_steps: 64,
+            aip_train_freq: 64,
+            aip_dataset: 40,
+            aip_epochs: 1,
+            eval_every: 32,
+            eval_episodes: 2,
+            horizon: 16,
+            seed: 9,
+            // forward-only: the buffers never fill inside the measured
+            // window (PPO updates allocate, like the reference path's)
+            ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            threads: 1,
+            gs_batch: true,
+            gs_shards: 0,
+            async_eval: 0,
+            async_collect: 0,
+            ls_replicas: 4,
+        };
+        let engine = Engine::cpu().unwrap();
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let trainer = PpoTrainer::new(cfg.ppo.clone());
+        let mut workers = coord.make_workers(cfg.seed);
+        let mut mega = LsMegabatch::new(coord.artifacts(), &cfg, &workers, 4);
+        let pool = WorkerPool::new(1);
+        let mut run = |steps: usize| {
+            mega.train_segment(coord.artifacts(), &trainer, &mut workers, &pool, steps, cfg.horizon)
+                .unwrap();
+        };
+        // Warm-up: first-tick resets, device-slot creation, scratch
+        // buffers reaching steady-state capacity.
+        run(16);
+        let ((), extra) = alloc::measure_peak(|| run(32));
+        assert_eq!(
+            extra, 0,
+            "{domain:?}: megabatch steady-state ticks allocated {extra} extra heap bytes"
+        );
+    }
+}

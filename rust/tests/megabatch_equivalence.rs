@@ -1,0 +1,424 @@
+//! Determinism + call-count invariants of the megabatch LS training
+//! driver (`coordinator::megabatch`), on the native backend with
+//! synthesized artifacts (`runtime::synth`) — no Python, no XLA.
+//!
+//! The contract under test (DESIGN.md §11):
+//!
+//! * `R = 1` is **bit-identical** to the per-agent reference path
+//!   (`AgentWorker::train_segment`): same rollout buffer contents, same
+//!   RNG stream consumption, same reward EMA — including across PPO
+//!   buffer-fill ticks (exercised with `epochs = 0`, which keeps the
+//!   XLA-only `ppo_update` artifact out while running the full
+//!   fill → bootstrap-peek → update → clear machinery).
+//! * One joint LS tick issues **exactly two** batched run calls — one
+//!   `[N*R]`-row policy forward, one `[N*R]`-row AIP forward — at any
+//!   `R ≥ 1`; a buffer-fill tick adds exactly one peek forward.
+//! * Results are invariant to the worker pool's thread count, and raising
+//!   `R` never reorders existing replicas' trajectories (replica `r`'s
+//!   stream depends only on the agent seed and `r`).
+//! * The reference path's `peek_value` bootstrap (and its megabatch
+//!   analogue) must not perturb the policy hidden state or the RNG
+//!   stream mid-episode: trajectories are bit-identical across a
+//!   buffer-capacity boundary vs an oversized buffer that never fills.
+//!
+//! Under the `xla` feature the placeholder HLO files cannot compile, so
+//! everything here is native-only.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{AgentWorker, DialsCoordinator, LsMegabatch};
+use dials::exec::WorkerPool;
+use dials::ppo::{PpoTrainer, RolloutBuffer};
+use dials::runtime::{synth, Engine};
+use dials::util::rng::Pcg64;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_megabatch_equiv").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 13).unwrap();
+    dir
+}
+
+/// Forward-only config: the rollout buffer never fills (rollout_len >
+/// total_steps) and the mode is untrained-DIALS, so segments exercise LS
+/// stepping without the update artifacts (which need XLA).
+fn fwd_cfg(domain: Domain, dir: &std::path::Path, ls_replicas: usize, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::UntrainedDials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 64,
+        aip_dataset: 40,
+        aip_epochs: 1,
+        eval_every: 32,
+        eval_episodes: 2,
+        horizon: 16,
+        seed: 9,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+        ls_replicas,
+    }
+}
+
+/// Update-exercising config: PPO fires whenever the rollout fills, but
+/// with `epochs = 0` the update is arithmetically a no-op (GAE + upload +
+/// absorb of unchanged params, zero `ppo_update` calls), so the native
+/// backend runs the full fill/bootstrap-peek/clear path for real.
+fn update_cfg(domain: Domain, dir: &std::path::Path, rollout_len: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        horizon: 48,
+        ppo: PpoConfig { rollout_len, minibatch: 16, epochs: 0, ..Default::default() },
+        ..fwd_cfg(domain, dir, 0, 1)
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One draw from a clone: fingerprints the stream position without
+/// consuming it.
+fn probe(rng: &Pcg64) -> u64 {
+    rng.clone().next_u64()
+}
+
+fn assert_buffer_eq(ctx: &str, a: &RolloutBuffer, b: &RolloutBuffer) {
+    assert_eq!(a.len(), b.len(), "{ctx}: buffer len");
+    let n = a.len();
+    let (od, hd) = (a.obs_dim, a.h_dim);
+    assert_eq!(bits(&a.obs[..n * od]), bits(&b.obs[..n * od]), "{ctx}: obs rows");
+    assert_eq!(bits(&a.hstates[..n * hd]), bits(&b.hstates[..n * hd]), "{ctx}: hstate rows");
+    assert_eq!(bits(&a.actions[..n]), bits(&b.actions[..n]), "{ctx}: actions");
+    assert_eq!(bits(&a.logps[..n]), bits(&b.logps[..n]), "{ctx}: logps");
+    assert_eq!(bits(&a.rewards[..n]), bits(&b.rewards[..n]), "{ctx}: rewards");
+    assert_eq!(bits(&a.values[..n]), bits(&b.values[..n]), "{ctx}: values");
+    assert_eq!(&a.dones[..n], &b.dones[..n], "{ctx}: dones");
+}
+
+/// Full worker-visible state. `check_reward` is off only when the two
+/// runs fold different replica counts into the EMA (R=2 vs R=3).
+fn assert_worker_eq(ctx: &str, a: &AgentWorker, b: &AgentWorker, check_reward: bool) {
+    assert_eq!(a.env_steps, b.env_steps, "{ctx}: env_steps");
+    if check_reward {
+        assert_eq!(
+            a.recent_reward.to_bits(),
+            b.recent_reward.to_bits(),
+            "{ctx}: recent_reward EMA"
+        );
+    }
+    assert_eq!(probe(&a.rng), probe(&b.rng), "{ctx}: rng stream position");
+    assert_buffer_eq(ctx, &a.buffer, &b.buffer);
+}
+
+/// Run the per-agent reference path for `steps` env steps.
+fn run_reference(
+    coord: &DialsCoordinator,
+    cfg: &ExperimentConfig,
+    steps: usize,
+) -> Vec<AgentWorker> {
+    let trainer = PpoTrainer::new(cfg.ppo.clone());
+    let mut workers = coord.make_workers(cfg.seed);
+    for w in workers.iter_mut() {
+        w.train_segment(coord.artifacts(), &trainer, steps, cfg.horizon).unwrap();
+    }
+    workers
+}
+
+/// Run the megabatch driver for `steps` joint ticks with `reps` replicas
+/// on a `threads`-wide pool; returns (workers, driver) for inspection.
+fn run_megabatch(
+    coord: &DialsCoordinator,
+    cfg: &ExperimentConfig,
+    steps: usize,
+    reps: usize,
+    threads: usize,
+) -> (Vec<AgentWorker>, LsMegabatch) {
+    let trainer = PpoTrainer::new(cfg.ppo.clone());
+    let mut workers = coord.make_workers(cfg.seed);
+    let mut mega = LsMegabatch::new(coord.artifacts(), cfg, &workers, reps);
+    let pool = WorkerPool::new(threads);
+    mega.train_segment(coord.artifacts(), &trainer, &mut workers, &pool, steps, cfg.horizon)
+        .unwrap();
+    (workers, mega)
+}
+
+#[test]
+fn megabatch_r1_is_bit_identical_to_reference_path() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("r1", domain);
+        let engine = Engine::cpu().unwrap();
+        let cfg = fwd_cfg(domain, &dir, 0, 1);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let reference = run_reference(&coord, &cfg, 48);
+        for threads in [1usize, 4] {
+            let (mega, _) = run_megabatch(&coord, &cfg, 48, 1, threads);
+            for (a, b) in reference.iter().zip(mega.iter()) {
+                let ctx = format!("{domain:?} agent {} (threads {threads})", a.id);
+                assert_worker_eq(&ctx, a, b, true);
+            }
+        }
+    }
+}
+
+#[test]
+fn megabatch_r1_matches_reference_across_buffer_fills() {
+    // rollout 32 < steps 80: two fill ticks (32, 64), both mid-episode
+    // (horizon 48), so the bootstrap peek AND the update/clear machinery
+    // run — and must leave the two paths bit-identical.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("r1_fill", domain);
+        let engine = Engine::cpu().unwrap();
+        let cfg = update_cfg(domain, &dir, 32);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let reference = run_reference(&coord, &cfg, 80);
+        let (mega, _) = run_megabatch(&coord, &cfg, 80, 1, 1);
+        for (a, b) in reference.iter().zip(mega.iter()) {
+            assert_eq!(a.buffer.len(), 16, "{domain:?}: expected 80 - 2×32 rows left");
+            assert_worker_eq(&format!("{domain:?} agent {} (fills)", a.id), a, b, true);
+        }
+    }
+}
+
+#[test]
+fn megabatch_issues_exactly_two_batched_calls_per_tick() {
+    for reps in [1usize, 4] {
+        let domain = Domain::Traffic;
+        let dir = synth_dir(&format!("calls_r{reps}"), domain);
+        let engine = Engine::cpu().unwrap();
+        let cfg = fwd_cfg(domain, &dir, 0, 1);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let steps = 48u64;
+        let _ = run_megabatch(&coord, &cfg, steps as usize, reps, 1);
+        let arts = coord.artifacts();
+        assert_eq!(
+            arts.policy_step_b.as_ref().unwrap().call_count(),
+            steps,
+            "R={reps}: one [N*R]-row policy forward per joint tick"
+        );
+        assert_eq!(
+            arts.aip_forward_b.as_ref().unwrap().call_count(),
+            steps,
+            "R={reps}: one [N*R]-row AIP forward per joint tick"
+        );
+        assert_eq!(arts.policy_step.call_count(), 0, "R={reps}: B=1 policy artifact stays cold");
+        assert_eq!(arts.aip_forward.call_count(), 0, "R={reps}: B=1 AIP artifact stays cold");
+    }
+}
+
+#[test]
+fn fill_tick_adds_exactly_one_peek_forward() {
+    let domain = Domain::Traffic;
+    let dir = synth_dir("peek_calls", domain);
+    let engine = Engine::cpu().unwrap();
+    let cfg = update_cfg(domain, &dir, 32);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    // 32 ticks with rollout 32 and horizon 48: the last tick fills every
+    // buffer mid-episode, so ONE batched peek (advance = false) rides on
+    // top of the 2-per-tick steady state.
+    let _ = run_megabatch(&coord, &cfg, 32, 2, 1);
+    let arts = coord.artifacts();
+    assert_eq!(arts.policy_step_b.as_ref().unwrap().call_count(), 33);
+    assert_eq!(arts.aip_forward_b.as_ref().unwrap().call_count(), 32);
+    assert_eq!(arts.policy_step.call_count(), 0);
+}
+
+#[test]
+fn megabatch_results_are_invariant_to_thread_count() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("threads", domain);
+        let engine = Engine::cpu().unwrap();
+        let cfg = fwd_cfg(domain, &dir, 0, 1);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let reps = 3usize;
+        let (w1, m1) = run_megabatch(&coord, &cfg, 48, reps, 1);
+        let (w4, m4) = run_megabatch(&coord, &cfg, 48, reps, 4);
+        for i in 0..w1.len() {
+            let ctx = format!("{domain:?} agent {i} (1 vs 4 threads)");
+            assert_worker_eq(&ctx, &w1[i], &w4[i], true);
+            for r in 1..reps {
+                assert_buffer_eq(
+                    &format!("{ctx} replica {r}"),
+                    m1.extra_buffer(i, r),
+                    m4.extra_buffer(i, r),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn raising_r_does_not_reorder_existing_replica_streams() {
+    // Replica r's stream is split from a CLONE of the agent RNG with tag
+    // r, so it depends only on (agent seed, r) — never on R. Running R=2
+    // and R=3 side by side, replicas 0 and 1 must produce bit-identical
+    // trajectories; replica 2 is purely additive.
+    let domain = Domain::Warehouse;
+    let dir = synth_dir("pin", domain);
+    let engine = Engine::cpu().unwrap();
+    let cfg = fwd_cfg(domain, &dir, 0, 1);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let (w2, m2) = run_megabatch(&coord, &cfg, 48, 2, 1);
+    let (w3, m3) = run_megabatch(&coord, &cfg, 48, 3, 1);
+    for i in 0..w2.len() {
+        // recent_reward folds a different replica count per tick, so it
+        // legitimately differs between the runs — everything replica 0
+        // and 1 own must not.
+        assert_worker_eq(&format!("agent {i} replica 0 (R=2 vs R=3)"), &w2[i], &w3[i], false);
+        assert_buffer_eq(
+            &format!("agent {i} replica 1 (R=2 vs R=3)"),
+            m2.extra_buffer(i, 1),
+            m3.extra_buffer(i, 1),
+        );
+        assert_eq!(m3.extra_buffer(i, 2).len(), 48, "agent {i}: replica 2 trained");
+    }
+}
+
+#[test]
+fn full_run_with_ls_replicas_matches_reference_runlog() {
+    // End-to-end coordinator integration: `ls_replicas` must not perturb
+    // anything outside the LS training phase — the GS evaluation streams
+    // and the (untrained) policies are untouched, so the whole RunLog is
+    // bit-identical to the reference path's at any R, for any thread
+    // count.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("runlog", domain);
+        let engine = Engine::cpu().unwrap();
+        let run = |ls_replicas: usize, threads: usize| {
+            let cfg = fwd_cfg(domain, &dir, ls_replicas, threads);
+            DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+        };
+        let reference = run(0, 1);
+        assert!(reference.eval_curve.len() >= 3, "expected initial + per-segment evals");
+        for (ls_replicas, threads) in [(1, 1), (1, 4), (4, 1), (4, 4)] {
+            let mega = run(ls_replicas, threads);
+            assert_eq!(reference.eval_curve.len(), mega.eval_curve.len());
+            for (a, b) in reference.eval_curve.iter().zip(mega.eval_curve.iter()) {
+                assert_eq!(a.step, b.step, "{domain:?} R={ls_replicas} threads={threads}");
+                assert_eq!(
+                    a.value.to_bits(),
+                    b.value.to_bits(),
+                    "{domain:?} R={ls_replicas} threads={threads}: eval at step {} diverged",
+                    a.step
+                );
+            }
+            assert_eq!(reference.final_return.to_bits(), mega.final_return.to_bits());
+        }
+    }
+}
+
+#[test]
+fn peek_value_leaves_hidden_state_and_stream_untouched() {
+    // The buffer-full bootstrap: `peek_value` forwards WITHOUT advancing
+    // the recurrent state and consumes no RNG, so a worker that peeks
+    // mid-episode must continue bit-identically to a twin that never
+    // peeked. Warehouse is the recurrent domain — the one where a leaked
+    // hstate advance would actually show.
+    let domain = Domain::Warehouse;
+    let dir = synth_dir("peek_unit", domain);
+    let engine = Engine::cpu().unwrap();
+    let cfg = fwd_cfg(domain, &dir, 0, 1);
+    let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+    let arts = coord.artifacts();
+    let od = arts.spec.obs_dim;
+    let mut peeker = coord.make_workers(cfg.seed);
+    let mut clean = coord.make_workers(cfg.seed);
+    let (pw, cw) = (&mut peeker[0], &mut clean[0]);
+    let mut obs_rng = Pcg64::seed(3);
+    for t in 0..6 {
+        let obs: Vec<f32> = (0..od).map(|_| obs_rng.normal() as f32).collect();
+        let a = pw.policy.act_into(arts, &obs, &mut pw.rng).unwrap();
+        let b = cw.policy.act_into(arts, &obs, &mut cw.rng).unwrap();
+        assert_eq!(a.action, b.action, "step {t}: action");
+        assert_eq!(a.logp.to_bits(), b.logp.to_bits(), "step {t}: logp");
+        assert_eq!(a.value.to_bits(), b.value.to_bits(), "step {t}: value");
+        assert_eq!(
+            bits(pw.policy.h_before()),
+            bits(cw.policy.h_before()),
+            "step {t}: pre-step hidden state"
+        );
+        if t == 2 {
+            for _ in 0..3 {
+                pw.policy.peek_value(arts, &obs).unwrap();
+            }
+        }
+    }
+    assert_eq!(probe(&pw.rng), probe(&cw.rng), "peek_value must not consume the stream");
+}
+
+#[test]
+fn bootstrap_peek_trajectory_is_bit_identical_across_buffer_boundary() {
+    // The trajectory-level pin of the same contract: a run whose buffer
+    // fills twice mid-episode (rollout 32, peek + no-op update + clear at
+    // ticks 32 and 64) vs one whose oversized buffer never fills must
+    // produce the same stream position, the same reward EMA, and the
+    // same transitions — compare the 24 rows surviving the last clear
+    // against rows 64..88 of the unbroken run.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("peek_traj", domain);
+        let engine = Engine::cpu().unwrap();
+        let steps = 88usize;
+        let cfg_small = update_cfg(domain, &dir, 32);
+        let cfg_big = update_cfg(domain, &dir, 512);
+        let coord = DialsCoordinator::new(&engine, cfg_small.clone()).unwrap();
+        let small = run_reference(&coord, &cfg_small, steps);
+        let big = run_reference(&coord, &cfg_big, steps);
+        for (a, b) in small.iter().zip(big.iter()) {
+            let ctx = format!("{domain:?} agent {}", a.id);
+            assert_eq!(a.env_steps, b.env_steps, "{ctx}: env_steps");
+            assert_eq!(
+                a.recent_reward.to_bits(),
+                b.recent_reward.to_bits(),
+                "{ctx}: recent_reward EMA"
+            );
+            assert_eq!(probe(&a.rng), probe(&b.rng), "{ctx}: rng stream position");
+            let (n, off) = (a.buffer.len(), 64);
+            assert_eq!(n, 24, "{ctx}: rows since the last fill");
+            assert_eq!(b.buffer.len(), steps, "{ctx}: oversized buffer never cleared");
+            let (od, hd) = (a.buffer.obs_dim, a.buffer.h_dim);
+            assert_eq!(
+                bits(&a.buffer.obs[..n * od]),
+                bits(&b.buffer.obs[off * od..(off + n) * od]),
+                "{ctx}: obs rows across the boundary"
+            );
+            assert_eq!(
+                bits(&a.buffer.hstates[..n * hd]),
+                bits(&b.buffer.hstates[off * hd..(off + n) * hd]),
+                "{ctx}: hstate rows across the boundary"
+            );
+            assert_eq!(
+                bits(&a.buffer.actions[..n]),
+                bits(&b.buffer.actions[off..off + n]),
+                "{ctx}: actions across the boundary"
+            );
+            assert_eq!(
+                bits(&a.buffer.logps[..n]),
+                bits(&b.buffer.logps[off..off + n]),
+                "{ctx}: logps across the boundary"
+            );
+            assert_eq!(
+                &a.buffer.dones[..n],
+                &b.buffer.dones[off..off + n],
+                "{ctx}: dones across the boundary"
+            );
+            assert_eq!(
+                bits(&a.buffer.rewards[..n]),
+                bits(&b.buffer.rewards[off..off + n]),
+                "{ctx}: rewards across the boundary"
+            );
+            assert_eq!(
+                bits(&a.buffer.values[..n]),
+                bits(&b.buffer.values[off..off + n]),
+                "{ctx}: values across the boundary"
+            );
+        }
+    }
+}

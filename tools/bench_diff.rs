@@ -10,6 +10,8 @@
 //!   zero-alloc rows gate at exactly 0);
 //! * `steps_per_s` — throughput may drop at most 20% below the baseline
 //!   (timing noise tolerance; the structural metrics above are exact);
+//! * `ls_steps_per_s` — megabatch LS training throughput (trained env
+//!   steps per second across all replicas) gets the same 20% tolerance;
 //! * `seg_eval_wall_s` / `collect_wall_s` — the overlap wall-clock of the
 //!   blocking-vs-async coordinator rows may grow at most 25% above the
 //!   baseline, so the segment+eval and segment+collect overlaps stay
@@ -135,6 +137,18 @@ fn diff(fresh: &str, baseline: &str) -> Result<Vec<String>> {
                 )),
             }
         }
+        if let Some(bv) = b.ls_steps_per_s {
+            match f.ls_steps_per_s {
+                Some(fv) if fv < bv * (1.0 - STEPS_DROP_TOL) => regressions.push(format!(
+                    "{op}: ls_steps_per_s dropped {bv:.1} -> {fv:.1} (>{:.0}% below baseline)",
+                    STEPS_DROP_TOL * 100.0
+                )),
+                Some(_) => {}
+                None => regressions.push(format!(
+                    "{op}: gated ls_steps_per_s missing (null) in fresh run"
+                )),
+            }
+        }
         for (metric, bval, fval) in [
             ("seg_eval_wall_s", b.seg_eval_wall_s, f.seg_eval_wall_s),
             ("collect_wall_s", b.collect_wall_s, f.collect_wall_s),
@@ -172,6 +186,7 @@ struct Row {
     bytes_per_step: Option<f64>,
     calls_per_step: Option<f64>,
     steps_per_s: Option<f64>,
+    ls_steps_per_s: Option<f64>,
     seg_eval_wall_s: Option<f64>,
     collect_wall_s: Option<f64>,
 }
@@ -203,6 +218,7 @@ impl Bench {
                     bytes_per_step: num(r.get("bytes_per_step")),
                     calls_per_step: num(r.get("calls_per_step")),
                     steps_per_s: num(r.get("steps_per_s")),
+                    ls_steps_per_s: num(r.get("ls_steps_per_s")),
                     seg_eval_wall_s: num(r.get("seg_eval_wall_s")),
                     collect_wall_s: num(r.get("collect_wall_s")),
                 },
@@ -446,6 +462,20 @@ mod tests {
         )
     }
 
+    /// `doc` plus one megabatch LS training row whose `ls_steps_per_s` is
+    /// the given JSON literal (a number, or "null" for ungated).
+    fn doc_with_ls(ls_sps: &str) -> String {
+        doc(1.0, 0.0, 50_000.0, true).replace(
+            "\n],",
+            &format!(
+                ",\n{{\"op\": \"traffic megabatch LS train x8 (N=4)\", \"mean_s\": 0.0001, \
+                 \"min_s\": 0.0001, \"bytes_per_step\": null, \"peak_extra_bytes\": 0, \
+                 \"calls_per_step\": 2.000, \"steps_per_s\": null, \"seg_eval_wall_s\": null, \
+                 \"collect_wall_s\": null, \"ls_steps_per_s\": {ls_sps}}}\n],"
+            ),
+        )
+    }
+
     #[test]
     fn identical_docs_pass() {
         let d = doc(1.0, 0.0, 50_000.0, true);
@@ -479,6 +509,35 @@ mod tests {
         let regs = diff(&doc(1.0, 0.0, 37_000.0, true), &base).unwrap();
         assert_eq!(regs.len(), 1, "{regs:?}");
         assert!(regs[0].contains("steps_per_s"), "{regs:?}");
+    }
+
+    #[test]
+    fn ls_steps_per_s_gets_20_percent_tolerance() {
+        let base = doc_with_ls("40000.0");
+        // 12.5% slower: inside tolerance
+        assert!(diff(&doc_with_ls("35000.0"), &base).unwrap().is_empty());
+        // improvement: always passes
+        assert!(diff(&doc_with_ls("90000.0"), &base).unwrap().is_empty());
+        // 25% slower: regression
+        let regs = diff(&doc_with_ls("30000.0"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("ls_steps_per_s"), "{regs:?}");
+    }
+
+    #[test]
+    fn null_baseline_ls_steps_per_s_is_not_gated() {
+        let base = doc_with_ls("null");
+        // fresh value present but baseline never recorded one: ungated
+        assert!(diff(&doc_with_ls("1.0"), &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gated_ls_steps_per_s_going_null_in_fresh_run_fails() {
+        let base = doc_with_ls("40000.0");
+        let regs = diff(&doc_with_ls("null"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("ls_steps_per_s"), "{regs:?}");
+        assert!(regs[0].contains("missing"), "{regs:?}");
     }
 
     #[test]
@@ -577,7 +636,8 @@ mod tests {
         let text = "{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n    {\"op\": \"x\", \
                     \"mean_s\": 0.000001234, \"min_s\": 0.000001000, \"bytes_per_step\": null, \
                     \"peak_extra_bytes\": 128, \"calls_per_step\": 1.000, \"steps_per_s\": 123.4, \
-                    \"seg_eval_wall_s\": null}\n  ],\n  \"sim_zero_alloc\": true\n}\n";
+                    \"ls_steps_per_s\": 4096.5, \"seg_eval_wall_s\": null}\n  ],\n  \
+                    \"sim_zero_alloc\": true\n}\n";
         let b = Bench::parse(text).unwrap();
         assert_eq!(b.rows.len(), 1);
         assert!(b.sim_zero_alloc);
@@ -585,6 +645,7 @@ mod tests {
         assert_eq!(row.calls_per_step, Some(1.0));
         assert_eq!(row.bytes_per_step, None);
         assert_eq!(row.steps_per_s, Some(123.4));
+        assert_eq!(row.ls_steps_per_s, Some(4096.5));
     }
 
     #[test]
