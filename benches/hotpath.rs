@@ -70,6 +70,10 @@ struct JsonRow {
     /// (`RunLog::influence_seconds` with `aip_epochs = 0`) — the
     /// blocking-vs-async collect comparison (NaN = not a collect row).
     collect_wall_s: f64,
+    /// `dials serve` end-to-end request latency percentiles in
+    /// microseconds (NaN = not a serve row). Gated by bench_diff.
+    serve_p50_us: f64,
+    serve_p99_us: f64,
 }
 
 /// Heap traffic of `steps` iterations of `f` after a warm-up pass:
@@ -93,7 +97,7 @@ fn main() -> Result<()> {
         "hot path microbenchmarks",
         &[
             "op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s",
-            "ls steps/s", "seg+eval wall", "collect wall",
+            "ls steps/s", "seg+eval wall", "collect wall", "serve p50", "serve p99",
         ],
     );
     let mut json: Vec<JsonRow> = Vec::new();
@@ -523,7 +527,7 @@ fn main() -> Result<()> {
                 &mut table, &mut json,
                 &format!("coordinator run, {label} (16 agents)"),
                 mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, mean,
-                f64::NAN,
+                f64::NAN, f64::NAN, f64::NAN,
             );
         }
         println!(
@@ -601,6 +605,69 @@ fn main() -> Result<()> {
         );
     }
 
+    // ---- dials serve: dynamic-batching inference over a policy bank
+    //
+    // End-to-end request latency of the serve tick loop under the
+    // built-in GS load generator, native backend. N = 1 (grid side 1) so
+    // S streams are S independent single-agent GS instances — the purest
+    // view of batching: S = 1 is the serial floor, S = 64 shows how far
+    // one batched `run_b` per tick amortizes the forward. The p50/p99
+    // columns land in BENCH_hotpath.json as `serve_p50_us`/`serve_p99_us`
+    // and are growth-gated by tools/bench_diff.
+    #[cfg(not(feature = "xla"))]
+    {
+        use dials::runtime::synth;
+        use dials::serve::{run_load_gen, Batcher, LoadGenOpts, PolicyStore, ServeOpts};
+
+        let domain = Domain::Traffic;
+        let dir = std::env::temp_dir().join("dials_hotpath_synth").join("serve");
+        let _ = std::fs::remove_dir_all(&dir);
+        synth::write_native_artifacts(&dir, domain, 3)?;
+        let cfg = ExperimentConfig {
+            domain,
+            mode: SimMode::Dials,
+            grid_side: 1,
+            total_steps: 64,
+            aip_train_freq: 32,
+            aip_epochs: 0,
+            eval_every: 32,
+            horizon: 100,
+            seed: 7,
+            ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        let coord = DialsCoordinator::new(&engine, cfg)?;
+        let arts = coord.artifacts();
+        let nets: Vec<_> = coord.make_workers(7).iter().map(|w| w.policy.net.clone()).collect();
+        const TOTAL_REQS: usize = 2000;
+        for streams in [1usize, 8, 64] {
+            let opts = ServeOpts {
+                streams,
+                max_batch: streams,
+                seed: 7,
+                ..Default::default()
+            };
+            let mut batcher = Batcher::new(arts, PolicyStore::from_nets(nets.clone()), &opts)?;
+            let lg = LoadGenOpts {
+                domain,
+                grid_side: 1,
+                steps_per_stream: TOTAL_REQS / streams,
+                horizon: 100,
+                seed: 7,
+            };
+            let stats = run_load_gen(arts, &mut batcher, None, &opts, &lg)?;
+            let mean_s = stats.e2e.mean_us() * 1e-6;
+            let rps = stats.requests as f64 / stats.wall_seconds;
+            push_row_serve(
+                &mut table, &mut json,
+                &format!("serve e2e S={streams} (N=1)"),
+                mean_s, mean_s, "1 request", rps,
+                stats.e2e.p50_us(), stats.e2e.p99_us(),
+            );
+        }
+    }
+
     table.print();
     table.save_csv("hotpath");
     write_json(&json, sim_zero_alloc)?;
@@ -645,7 +712,7 @@ fn push_row_steps(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step,
-        steps_per_s, f64::NAN, f64::NAN, f64::NAN,
+        steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -664,7 +731,7 @@ fn push_row_ls(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, calls_per_step, f64::NAN,
-        ls_steps_per_s, f64::NAN, f64::NAN,
+        ls_steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -681,7 +748,27 @@ fn push_row_collect(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
-        collect_wall_s,
+        collect_wall_s, f64::NAN, f64::NAN,
+    );
+}
+
+/// `push_row` for the `dials serve` load-gen rows: per-request e2e mean
+/// plus the gated latency percentile columns.
+#[allow(clippy::too_many_arguments)]
+fn push_row_serve(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    steps_per_s: f64,
+    serve_p50_us: f64,
+    serve_p99_us: f64,
+) {
+    push_row_full(
+        table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, steps_per_s, f64::NAN,
+        f64::NAN, f64::NAN, serve_p50_us, serve_p99_us,
     );
 }
 
@@ -702,6 +789,8 @@ fn push_row_full(
     ls_steps_per_s: f64,
     seg_eval_wall_s: f64,
     collect_wall_s: f64,
+    serve_p50_us: f64,
+    serve_p99_us: f64,
 ) {
     let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
     let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
@@ -709,6 +798,8 @@ fn push_row_full(
     let lsps = if ls_steps_per_s.is_nan() { "-".to_string() } else { format!("{ls_steps_per_s:.0}") };
     let wall = if seg_eval_wall_s.is_nan() { "-".to_string() } else { format!("{seg_eval_wall_s:.3}s") };
     let cwall = if collect_wall_s.is_nan() { "-".to_string() } else { format!("{collect_wall_s:.3}s") };
+    let p50 = if serve_p50_us.is_nan() { "-".to_string() } else { format!("{serve_p50_us:.1}us") };
+    let p99 = if serve_p99_us.is_nan() { "-".to_string() } else { format!("{serve_p99_us:.1}us") };
     table.row(vec![
         op.to_string(),
         us(mean),
@@ -721,6 +812,8 @@ fn push_row_full(
         lsps,
         wall,
         cwall,
+        p50,
+        p99,
     ]);
     json.push(JsonRow {
         op: op.to_string(),
@@ -733,6 +826,8 @@ fn push_row_full(
         ls_steps_per_s,
         seg_eval_wall_s,
         collect_wall_s,
+        serve_p50_us,
+        serve_p99_us,
     });
 }
 
@@ -746,9 +841,11 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
         let lsps = if r.ls_steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.ls_steps_per_s) };
         let wall = if r.seg_eval_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.seg_eval_wall_s) };
         let cwall = if r.collect_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.collect_wall_s) };
+        let p50 = if r.serve_p50_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p50_us) };
+        let p99 = if r.serve_p99_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p99_us) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, wall, cwall,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}, \"serve_p50_us\": {}, \"serve_p99_us\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, wall, cwall, p50, p99,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

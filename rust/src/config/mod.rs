@@ -166,6 +166,12 @@ pub struct ExperimentConfig {
     /// (`tests/megabatch_equivalence.rs`). Artifact sets that cannot
     /// serve `[N*R]` rows fall back to the reference path with a notice.
     pub ls_replicas: usize,
+    /// Write a full checkpoint every N training steps (at the first
+    /// segment boundary at or past each N-step mark), in addition to the
+    /// final save — a running `dials serve --watch` hot-reloads each one.
+    /// Requires a save dir (`--save-ckpt`); 0 (default) keeps only the
+    /// final save.
+    pub save_ckpt_every: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -190,6 +196,7 @@ impl Default for ExperimentConfig {
             async_eval: 0,
             async_collect: 0,
             ls_replicas: 0,
+            save_ckpt_every: 0,
         }
     }
 }
@@ -249,6 +256,7 @@ impl ExperimentConfig {
         get_usize!(exp, "async_eval", cfg.async_eval);
         get_usize!(exp, "async_collect", cfg.async_collect);
         get_usize!(exp, "ls_replicas", cfg.ls_replicas);
+        get_usize!(exp, "save_ckpt_every", cfg.save_ckpt_every);
         if let Some(v) = exp.get("seed") {
             cfg.seed = v.as_int()? as u64;
         }
@@ -306,6 +314,7 @@ impl ExperimentConfig {
         cfg.async_eval = args.get_usize("async-eval", cfg.async_eval)?;
         cfg.async_collect = args.get_usize("async-collect", cfg.async_collect)?;
         cfg.ls_replicas = args.get_usize("ls-replicas", cfg.ls_replicas)?;
+        cfg.save_ckpt_every = args.get_usize("save-ckpt-every", cfg.save_ckpt_every)?;
         if let Some(dir) = args.get("artifacts") {
             cfg.artifacts_dir = dir.to_string();
         }
@@ -436,6 +445,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ExperimentConfig::from_cli(&args).unwrap().ls_replicas, 4);
+    }
+
+    #[test]
+    fn save_ckpt_every_defaults_off_and_parses() {
+        assert_eq!(ExperimentConfig::default().save_ckpt_every, 0);
+        let doc = parse("[experiment]\nsave_ckpt_every = 256\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().save_ckpt_every, 256);
+        let args = crate::util::cli::Args::parse(
+            ["--save-ckpt-every", "128"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().save_ckpt_every, 128);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::nn::NetState;
 use crate::runtime::NetSpec;
 use crate::util::npk::{read_npk, write_npk};
 
@@ -41,7 +42,6 @@ pub fn save_checkpoint(dir: &Path, spec: &NetSpec, workers: &[AgentWorker]) -> R
             i = w.id
         ));
     }
-    std::fs::write(dir.join("checkpoint.meta"), meta)?;
     for w in workers {
         let i = w.id;
         write_npk(&dir.join(format!("agent_{i}_policy_flat.npk")), &w.policy.net.flat)?;
@@ -51,7 +51,57 @@ pub fn save_checkpoint(dir: &Path, spec: &NetSpec, workers: &[AgentWorker]) -> R
         write_npk(&dir.join(format!("agent_{i}_aip_m.npk")), &w.aip.net.m)?;
         write_npk(&dir.join(format!("agent_{i}_aip_v.npk")), &w.aip.net.v)?;
     }
+    // meta goes LAST: its mtime is the serve-side watcher's reload
+    // signal (serve::spawn_watcher), so by the time a watcher sees a new
+    // meta, every npk row of this save is already on disk.
+    std::fs::write(dir.join("checkpoint.meta"), meta)?;
     Ok(())
+}
+
+/// Load ONLY the policy nets of a checkpoint — what the serve subsystem
+/// needs (no AIPs, no workers). Performs the same interface-fingerprint
+/// validation as [`load_checkpoint`]; agents come back in id order. The
+/// Adam moment vectors and step counters ride along so a served
+/// checkpoint can later resume training unchanged, but inference reads
+/// only `flat`.
+pub fn load_policy_checkpoint(dir: &Path, spec: &NetSpec) -> Result<Vec<NetState>> {
+    let meta = std::fs::read_to_string(dir.join("checkpoint.meta"))
+        .with_context(|| format!("read checkpoint meta in {}", dir.display()))?;
+    let get = |key: &str| -> Option<&str> {
+        meta.lines().find_map(|l| l.strip_prefix(&format!("{key}=")))
+    };
+    if get("domain") != Some(spec.domain.as_str()) {
+        bail!("checkpoint domain {:?} != artifact domain {}", get("domain"), spec.domain);
+    }
+    let n: usize = get("n_agents").unwrap_or("0").parse().unwrap_or(0);
+    if n == 0 {
+        bail!("checkpoint in {} declares no agents", dir.display());
+    }
+    let pp: usize = get("policy_params").unwrap_or("0").parse().unwrap_or(0);
+    if pp != spec.policy_params {
+        bail!("checkpoint policy_params {pp} != artifact {}", spec.policy_params);
+    }
+    let mut nets = Vec::with_capacity(n);
+    for i in 0..n {
+        let step: u64 = get(&format!("agent_{i}_policy_step"))
+            .with_context(|| format!("checkpoint missing agent_{i}_policy_step"))?
+            .parse()
+            .with_context(|| format!("agent_{i}_policy_step is not an integer"))?;
+        let flat = read_npk(&dir.join(format!("agent_{i}_policy_flat.npk")))?;
+        if flat.len() != spec.policy_params {
+            bail!(
+                "agent {i} policy vector has {} params, artifact expects {}",
+                flat.len(), spec.policy_params
+            );
+        }
+        let m = read_npk(&dir.join(format!("agent_{i}_policy_m.npk")))?;
+        let v = read_npk(&dir.join(format!("agent_{i}_policy_v.npk")))?;
+        let mut net = NetState::new(&flat);
+        net.absorb(flat, m, v);
+        net.step = step;
+        nets.push(net);
+    }
+    Ok(nets)
 }
 
 pub fn load_checkpoint(dir: &Path, spec: &NetSpec, workers: &mut [AgentWorker]) -> Result<()> {

@@ -22,7 +22,7 @@ mod worker;
 
 pub use async_collect::AsyncCollect;
 pub use async_eval::AsyncEval;
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{load_checkpoint, load_policy_checkpoint, save_checkpoint};
 pub use collect::collect_datasets;
 pub(crate) use collect::{collect_staged, stage_collect_banks};
 pub(crate) use evaluate::evaluate_staged;
@@ -434,6 +434,13 @@ impl DialsCoordinator {
 
         let segments = plan_segments(cfg.total_steps, cfg.aip_train_freq, cfg.eval_every);
 
+        // cfg.save_ckpt_every > 0: periodic checkpoints at segment
+        // boundaries (in addition to the final save). Saves are only
+        // taken when a save dir is configured; the counter accumulates
+        // whole segments, so a save lands at the first boundary at or
+        // past each N-step mark.
+        let mut steps_since_save = 0usize;
+
         // Collect point for the FIRST retrain (always at step 0): no
         // preceding segment exists, so the async path degenerates to
         // blocking — the snapshot is taken and drained back-to-back.
@@ -547,6 +554,26 @@ impl DialsCoordinator {
                     &self.arts, cfg, gs.as_mut(), &workers, &mut scratch, &pool,
                     &mut timers, &mut rng, boundary, &mut log,
                 )?,
+            }
+
+            // ---- periodic checkpoint (--save-ckpt-every). Pending async
+            // eval/collect jobs are drained first so the checkpoint holds
+            // exactly the state the blocking path would hold at this
+            // boundary — a serve-side watcher (serve::spawn_watcher) may
+            // pick the files up the moment they land.
+            steps_since_save += seg.len;
+            if cfg.save_ckpt_every > 0 && steps_since_save >= cfg.save_ckpt_every {
+                if let Some(dir) = save {
+                    if let Some(ae) = async_eval.as_mut() {
+                        ae.drain_all(&mut log)?;
+                    }
+                    if let Some(ac) = async_collect.as_mut() {
+                        timers.time("collect", || ac.drain_into(&mut workers))?;
+                    }
+                    save_checkpoint(dir, &self.arts.spec, &workers)?;
+                    log.checkpoint_saves += 1;
+                }
+                steps_since_save = 0;
             }
         }
 

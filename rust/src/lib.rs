@@ -14,5 +14,6 @@ pub mod influence;
 pub mod nn;
 pub mod ppo;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;

@@ -3,24 +3,47 @@
 //! Subcommands:
 //!   train     run one experiment (GS | DIALS | untrained-DIALS)
 //!   eval      evaluate the scripted baselines on the GS
+//!   serve     dynamic-batching inference server over a checkpoint
 //!   inspect   print an artifact set's interface contract
+//!   synth     write native (no-XLA) synthetic artifacts
 //!   help      usage
 //!
 //! Examples:
 //!   dials train --domain traffic --mode dials --grid-side 2 --total-steps 4000
 //!   dials train --config configs/traffic_4.toml
 //!   dials eval --domain warehouse --grid-side 5
+//!   dials serve --ckpt ckpt/ --load-gen --streams 8 --requests 2000
 //!   dials inspect --domain traffic
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use dials::baselines::{scripted_return, GsTrainer};
 use dials::config::{Domain, ExperimentConfig, SimMode};
 use dials::coordinator::DialsCoordinator;
-use dials::runtime::{ArtifactSet, Engine};
+use dials::runtime::{synth, ArtifactSet, Engine};
+use dials::serve::{run_load_gen, spawn_watcher, Batcher, LoadGenOpts, PolicyStore, ServeOpts};
 use dials::util::cli::Args;
+
+/// Per-subcommand flag vocabularies — `Args::check_known` bails on
+/// anything outside them (a typo'd flag used to be silently ignored).
+const TRAIN_FLAGS: &[&str] = &[
+    "config", "domain", "mode", "grid-side", "total-steps", "aip-freq", "aip-dataset",
+    "aip-epochs", "eval-every", "eval-episodes", "horizon", "seed", "threads", "artifacts",
+    "gs-batch", "gs-shards", "async-eval", "async-collect", "ls-replicas", "save-ckpt-every",
+    "save-ckpt", "load-ckpt", "out",
+];
+const EVAL_FLAGS: &[&str] = &["domain", "grid-side", "episodes", "horizon", "seed"];
+const INSPECT_FLAGS: &[&str] = &["domain", "artifacts"];
+const SERVE_FLAGS: &[&str] = &[
+    "domain", "artifacts", "ckpt", "streams", "max-batch", "max-delay-us", "sample", "seed",
+    "reload-every", "watch", "load-gen", "requests", "horizon",
+];
+const SYNTH_FLAGS: &[&str] = &["domain", "out", "seed"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -37,9 +60,26 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     };
     let args = Args::parse(rest.iter().cloned())?;
     match cmd.as_str() {
-        "train" => cmd_train(&args),
-        "eval" => cmd_eval(&args),
-        "inspect" => cmd_inspect(&args),
+        "train" => {
+            args.check_known("train", TRAIN_FLAGS)?;
+            cmd_train(&args)
+        }
+        "eval" => {
+            args.check_known("eval", EVAL_FLAGS)?;
+            cmd_eval(&args)
+        }
+        "serve" => {
+            args.check_known("serve", SERVE_FLAGS)?;
+            cmd_serve(&args)
+        }
+        "inspect" => {
+            args.check_known("inspect", INSPECT_FLAGS)?;
+            cmd_inspect(&args)
+        }
+        "synth" => {
+            args.check_known("synth", SYNTH_FLAGS)?;
+            cmd_synth(&args)
+        }
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -84,6 +124,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         log.collect_snapshot_seconds, log.collect_compute_seconds,
         if cfg.async_collect > 0 { " [overlapped]" } else { "" }
     );
+    if log.checkpoint_saves > 0 {
+        eprintln!("[dials] periodic checkpoints written: {}", log.checkpoint_saves);
+    }
     // LS training throughput: every agent advances one env step per
     // joint tick per replica, so the trained-experience rate is
     // N × R × total_steps over the training critical path.
@@ -123,6 +166,80 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let domain = Domain::parse(args.get_or("domain", "traffic"))?;
+    let arts_dir = args.get_or("artifacts", "artifacts");
+    let Some(ckpt) = args.get("ckpt") else {
+        bail!("serve needs --ckpt DIR (a checkpoint written by `dials train --save-ckpt`)");
+    };
+    let ckpt_dir = Path::new(ckpt);
+    let streams = args.get_usize("streams", 1)?;
+    let opts = ServeOpts {
+        streams,
+        max_batch: args.get_usize("max-batch", streams.max(1))?,
+        max_delay: Duration::from_micros(args.get_u64("max-delay-us", 200)?),
+        shared_sample: match args.get_or("sample", "per-stream") {
+            "shared" => true,
+            "per-stream" => false,
+            other => bail!("--sample wants shared|per-stream, got {other:?}"),
+        },
+        seed: args.get_u64("seed", 0)?,
+        reload_every: args.get_u64("reload-every", 0)?,
+    };
+    let engine = Engine::cpu()?;
+    let arts = ArtifactSet::load(&engine, Path::new(arts_dir), domain)?;
+    let store = PolicyStore::load(ckpt_dir, &arts.spec)?;
+    let n = store.n_agents();
+    let mut batcher = Batcher::new(&arts, store, &opts)?;
+    eprintln!(
+        "[dials] serve: {} agents from {}, {} streams (x{} replicas), max_batch={}, \
+         max_delay={}us, policy version {}",
+        n, ckpt_dir.display(), opts.streams, batcher.reps(), opts.max_batch,
+        opts.max_delay.as_micros(), batcher.version()
+    );
+
+    // --watch: poll the checkpoint dir and hot-reload newer saves (e.g.
+    // from a concurrent `dials train --save-ckpt-every`).
+    let stop = Arc::new(AtomicBool::new(false));
+    let watcher = args.get_bool("watch").then(|| {
+        spawn_watcher(
+            ckpt_dir.to_path_buf(),
+            arts.spec.clone(),
+            Duration::from_millis(200),
+            Arc::clone(&stop),
+        )
+    });
+    let reload_rx = watcher.as_ref().map(|(rx, _)| rx);
+
+    if !args.get_bool("load-gen") {
+        bail!(
+            "no socket transport yet — run with --load-gen to drive the server with \
+             built-in GS client streams (the core is transport-agnostic: serve::Transport)"
+        );
+    }
+    let side = (1..=n).find(|s| s * s == n);
+    let Some(side) = side else {
+        bail!("checkpoint has {n} agents — not a square grid, load-gen cannot build its GS");
+    };
+    let total = args.get_usize("requests", 2000)?;
+    let gen = LoadGenOpts {
+        domain,
+        grid_side: side,
+        steps_per_stream: (total / streams.max(1)).max(1),
+        horizon: args.get_usize("horizon", 100)?,
+        seed: opts.seed,
+    };
+    let result = run_load_gen(&arts, &mut batcher, reload_rx, &opts, &gen);
+    stop.store(true, Ordering::Relaxed);
+    if let Some((rx, handle)) = watcher {
+        drop(rx);
+        let _ = handle.join();
+    }
+    let stats = result?;
+    stats.print_summary();
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let domain = Domain::parse(args.get_or("domain", "traffic"))?;
     let dir = args.get_or("artifacts", "artifacts");
@@ -138,11 +255,20 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_synth(args: &Args) -> Result<()> {
+    let domain = Domain::parse(args.get_or("domain", "traffic"))?;
+    let out = args.get_or("out", "artifacts");
+    let seed = args.get_u64("seed", 3)?;
+    synth::write_native_artifacts(Path::new(out), domain, seed)?;
+    println!("native synth artifacts ({}) written to {out}", domain.name());
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "dials — Distributed Influence-Augmented Local Simulators (NeurIPS'22 reproduction)
 
-USAGE: dials <train|eval|inspect|help> [--flags]
+USAGE: dials <train|eval|serve|inspect|synth|help> [--flags]
 
 train:
   --config FILE           TOML config (configs/*.toml); flags override
@@ -163,9 +289,26 @@ train:
                           (0 = per-agent reference path; R=1 is
                           bit-identical to it)
   --save-ckpt DIR          save nets at end     --load-ckpt DIR resume
+  --save-ckpt-every N     ALSO checkpoint every N steps (needs --save-ckpt;
+                          a running `dials serve --watch` hot-reloads each)
 eval:
   --domain D --grid-side N --episodes N --horizon N  (scripted baseline)
+serve:
+  --ckpt DIR              checkpoint to serve (required)
+  --load-gen              drive with built-in GS client streams (required
+                          until a socket transport lands)
+  --streams S             concurrent client streams (default 1; load-gen
+                          needs S to be a multiple of the agent count)
+  --max-batch B           close a tick at B distinct streams (default S)
+  --max-delay-us D        …or D microseconds after the first request (200)
+  --requests N            total requests across streams (default 2000)
+  --reload-every N        synthesize a hot reload every N requests (0=off)
+  --watch                 hot-reload newer checkpoints written to --ckpt
+  --sample shared|per-stream   sampling RNG discipline (default per-stream)
+  --domain D --artifacts DIR --horizon N --seed N
 inspect:
-  --domain D --artifacts DIR   (print artifact interface contract)"
+  --domain D --artifacts DIR   (print artifact interface contract)
+synth:
+  --domain D --out DIR --seed N   (write native no-XLA artifacts)"
     );
 }

@@ -412,6 +412,18 @@ impl PolicyBank {
         Ok(())
     }
 
+    /// Roll one row's recurrent state back to its pre-forward value —
+    /// valid until the next forward. The serve batcher forwards the whole
+    /// bank every tick (full-rows contract of `forward`) but only the
+    /// rows with a pending request may advance; idle streams' recurrence
+    /// is restored from `h_before`, which always holds every row's
+    /// pre-forward state. Exact, not approximate: the batched forward is
+    /// row-independent.
+    pub fn undo_advance_row(&mut self, i: usize) {
+        let h = self.h_dim;
+        self.hstate[i * h..(i + 1) * h].copy_from_slice(&self.h_before[i * h..(i + 1) * h]);
+    }
+
     /// Joint value query (bootstrap): one batched forward WITHOUT
     /// advancing the recurrent state; writes one value per agent.
     pub fn peek_values_into(

@@ -1,0 +1,449 @@
+//! The server core: a single-threaded batcher that aggregates pending
+//! stream requests into ONE batched `run_b` per tick.
+//!
+//! Tick protocol (DESIGN.md §12):
+//! 1. adopt any freshly loaded checkpoint (between ticks — atomicity);
+//! 2. gather requests under the `--max-batch B` / `--max-delay-us D`
+//!    policy: the tick closes when B distinct streams are waiting or D
+//!    microseconds passed since the first request arrived, whichever is
+//!    first; a second request from a stream already in the tick is
+//!    deferred to the next one (a stream's recurrent row can advance at
+//!    most once per forward);
+//! 3. stage the store (partial re-upload: only version-bumped rows
+//!    re-copy), write each request's observation into its stream's row,
+//!    zero rows flagged `reset`;
+//! 4. ONE batched forward over the whole bank — never more than one in
+//!    flight; idle streams' recurrent rows are restored from `h_before`
+//!    right after (exact, the batched kernel is row-independent);
+//! 5. sample per request in stream order and respond, every response
+//!    echoing the tick's policy version.
+//!
+//! Stream → row ownership: stream `s` of `S` maps to agent `s % N` and
+//! replica `s / N`, i.e. bank row `(s % N) * reps + s / N` with
+//! `reps = ceil(S / N)` — the megabatch replica→agent indirection, so S
+//! streams share the N parameter rows without duplication.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::nn::{sample_categorical_buf, NetState};
+use crate::runtime::{ArtifactSet, PolicyBank};
+use crate::util::metrics::LatencyHistogram;
+use crate::util::rng::Pcg64;
+
+use super::queue::{RecvOut, ServeRequest, ServeResponse, Transport};
+use super::reload::PolicyStore;
+use super::{shared_rng, stream_rng};
+
+/// How often the idle server loop wakes to re-check reloads / shutdown.
+const IDLE_POLL: Duration = Duration::from_millis(5);
+
+/// Serve policy knobs (CLI: `dials serve --help`).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Concurrent client streams S.
+    pub streams: usize,
+    /// Tick closes when this many distinct streams are batched…
+    pub max_batch: usize,
+    /// …or this long after the first request arrived.
+    pub max_delay: Duration,
+    /// Sample all rows of a tick from ONE shared RNG in row order (the
+    /// training-side `GsScratch` consumption pattern — bit-identical to
+    /// eval given full-joint ticks) instead of the default independent
+    /// per-stream RNGs (arrival-order invariant).
+    pub shared_sample: bool,
+    /// Seed for the sampling RNG streams.
+    pub seed: u64,
+    /// Load-gen mode: synthesize a hot reload every this many served
+    /// requests (0 = off). Each reload perturbs one rotating agent row,
+    /// exercising the partial re-upload + atomic swap path.
+    pub reload_every: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            streams: 1,
+            max_batch: 8,
+            max_delay: Duration::from_micros(200),
+            shared_sample: false,
+            seed: 0,
+            reload_every: 0,
+        }
+    }
+}
+
+/// What a serve run reports (printed as the serve summary; the hotpath
+/// bench rows export the percentiles).
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub ticks: u64,
+    /// Effective hot reloads (checkpoint adoptions that changed >= 1 row).
+    pub reloads: u64,
+    /// Policy version at shutdown (starts at 1, +1 per effective reload).
+    pub policy_version: u64,
+    pub wall_seconds: f64,
+    /// Client → forward-start wait.
+    pub queue_wait: LatencyHistogram,
+    /// Batched forward duration (one sample per tick).
+    pub forward: LatencyHistogram,
+    /// Client-side send → response round trip (merged from the clients).
+    pub e2e: LatencyHistogram,
+}
+
+impl ServeStats {
+    pub fn requests_per_s(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.requests as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.ticks > 0 {
+            self.requests as f64 / self.ticks as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn print_summary(&self) {
+        println!(
+            "serve: {} requests in {:.2}s ({:.0} req/s), {} ticks (mean batch {:.2}), \
+             {} reloads, final policy version {}",
+            self.requests,
+            self.wall_seconds,
+            self.requests_per_s(),
+            self.ticks,
+            self.mean_batch(),
+            self.reloads,
+            self.policy_version,
+        );
+        for (name, h) in [
+            ("queue-wait", &self.queue_wait),
+            ("forward   ", &self.forward),
+            ("end-to-end", &self.e2e),
+        ] {
+            println!(
+                "  {name}  p50 {:>8.1}us  p90 {:>8.1}us  p99 {:>8.1}us  (n={})",
+                h.p50_us(),
+                h.p90_us(),
+                h.p99_us(),
+                h.count(),
+            );
+        }
+    }
+}
+
+/// The single-threaded server core. Owns the policy store, the bank
+/// (device params + per-stream recurrent rows), the sampling RNGs, and
+/// the server-side histograms. Drive it with [`run_server`], or call
+/// [`Batcher::tick`] directly for deterministic tick-level tests.
+pub struct Batcher {
+    store: PolicyStore,
+    bank: PolicyBank,
+    n_agents: usize,
+    reps: usize,
+    streams: usize,
+    obs_dim: usize,
+    /// Persistent `[n_agents*reps × obs_dim]` forward input; idle rows
+    /// keep their last observation (their output is discarded and their
+    /// recurrence restored, so the value never matters).
+    obs_block: Vec<f32>,
+    /// Rows with a request this tick.
+    active: Vec<bool>,
+    resp_buf: Vec<ServeResponse>,
+    rng_shared: Pcg64,
+    rngs: Vec<Pcg64>,
+    shared_sample: bool,
+    logp_buf: Vec<f32>,
+    prob_buf: Vec<f32>,
+    tick_no: u64,
+    jitter_round: u64,
+    reloads: u64,
+    requests: u64,
+    queue_wait: LatencyHistogram,
+    forward: LatencyHistogram,
+}
+
+impl Batcher {
+    pub fn new(arts: &ArtifactSet, store: PolicyStore, opts: &ServeOpts) -> Result<Self> {
+        let n = store.n_agents();
+        ensure!(n > 0, "policy store is empty");
+        ensure!(opts.streams > 0, "need at least one stream");
+        ensure!(opts.max_batch > 0, "--max-batch must be >= 1");
+        let reps = opts.streams.div_ceil(n);
+        let spec = &arts.spec;
+        if arts.policy_step_b.is_none()
+            || (spec.batch_n != 0 && (spec.batch_n != n || spec.batch_replicas != reps))
+        {
+            bail!(
+                "serve needs batched policy artifacts for N={n}×R={reps} — re-run \
+                 `make artifacts` with --batch {n} --replicas {reps} (native synth \
+                 artifacts are shape-polymorphic and always work)"
+            );
+        }
+        let rows = n * reps;
+        Ok(Batcher {
+            bank: PolicyBank::with_replicas(spec, n, reps),
+            n_agents: n,
+            reps,
+            streams: opts.streams,
+            obs_dim: spec.obs_dim,
+            obs_block: vec![0.0; rows * spec.obs_dim],
+            active: vec![false; rows],
+            resp_buf: Vec::new(),
+            rng_shared: shared_rng(opts.seed),
+            rngs: (0..opts.streams).map(|s| stream_rng(opts.seed, s)).collect(),
+            shared_sample: opts.shared_sample,
+            logp_buf: Vec::with_capacity(spec.act_dim),
+            prob_buf: Vec::with_capacity(spec.act_dim),
+            tick_no: 0,
+            jitter_round: 0,
+            reloads: 0,
+            requests: 0,
+            queue_wait: LatencyHistogram::new(),
+            forward: LatencyHistogram::new(),
+            store,
+        })
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    pub fn reps(&self) -> usize {
+        self.reps
+    }
+
+    /// Bank row owned by stream `s`: agent `s % N`, replica `s / N`.
+    pub fn row_of(&self, stream: usize) -> usize {
+        (stream % self.n_agents) * self.reps + stream / self.n_agents
+    }
+
+    pub fn version(&self) -> u64 {
+        self.store.version()
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.requests
+    }
+
+    /// Bank staging observability (partial re-upload tests).
+    pub fn rows_recopied(&self) -> u64 {
+        self.bank.rows_recopied()
+    }
+
+    pub fn uploads(&self) -> u64 {
+        self.bank.uploads()
+    }
+
+    /// Adopt a freshly loaded checkpoint between ticks. Returns the
+    /// number of changed rows; counts as a reload iff > 0.
+    pub fn adopt(&mut self, fresh: Vec<NetState>) -> Result<usize> {
+        let changed = self.store.adopt(fresh)?;
+        if changed > 0 {
+            self.reloads += 1;
+        }
+        Ok(changed)
+    }
+
+    /// Load-gen reload: perturb ONE rotating agent row of a clone of the
+    /// served nets and adopt it — a deterministic stand-in for "the
+    /// trainer wrote a newer checkpoint" that exercises the same partial
+    /// re-upload + version-bump path.
+    pub fn reload_jitter(&mut self) -> Result<usize> {
+        let k = (self.jitter_round as usize) % self.n_agents;
+        self.jitter_round += 1;
+        let mut fresh: Vec<NetState> = self.store.nets().to_vec();
+        for w in fresh[k].flat.data.iter_mut() {
+            *w += 1e-3;
+        }
+        self.adopt(fresh)
+    }
+
+    /// Serve one tick: `reqs` must hold at most one request per stream
+    /// (the gather loop defers duplicates). Sorts by stream id, runs ONE
+    /// batched forward, samples per request, clears `reqs`. The returned
+    /// responses all carry the same policy version and tick number.
+    pub fn tick(
+        &mut self,
+        arts: &ArtifactSet,
+        reqs: &mut Vec<ServeRequest>,
+    ) -> Result<&[ServeResponse]> {
+        self.resp_buf.clear();
+        if reqs.is_empty() {
+            return Ok(&self.resp_buf);
+        }
+        reqs.sort_by_key(|r| r.stream);
+        for pair in reqs.windows(2) {
+            ensure!(
+                pair[0].stream != pair[1].stream,
+                "two requests for stream {} in one tick",
+                pair[0].stream
+            );
+        }
+        for r in reqs.iter() {
+            ensure!(r.stream < self.streams, "unknown stream {}", r.stream);
+            ensure!(
+                r.obs.len() == self.obs_dim,
+                "stream {}: obs has {} floats, want {}",
+                r.stream, r.obs.len(), self.obs_dim
+            );
+        }
+        // Swap point: params staged here; every row this forward reads is
+        // from one store version, echoed in every response below.
+        self.store.stage_into(&arts.engine, &mut self.bank)?;
+        let version = self.store.version();
+        for r in reqs.iter() {
+            let row = self.row_of(r.stream);
+            if r.reset {
+                self.bank.reset_episode_row(row);
+            }
+            self.obs_block[row * self.obs_dim..(row + 1) * self.obs_dim]
+                .copy_from_slice(&r.obs);
+            self.active[row] = true;
+        }
+        let t0 = Instant::now();
+        for r in reqs.iter() {
+            self.queue_wait.record(t0.saturating_duration_since(r.enqueued));
+        }
+        self.bank.forward_batched(arts, &self.obs_block, true)?;
+        self.forward.record(t0.elapsed());
+        for row in 0..self.active.len() {
+            if self.active[row] {
+                self.active[row] = false;
+            } else {
+                // idle stream: roll its recurrence back to pre-forward
+                self.bank.undo_advance_row(row);
+            }
+        }
+        for r in reqs.iter() {
+            let row = self.row_of(r.stream);
+            let rng = if self.shared_sample {
+                &mut self.rng_shared
+            } else {
+                &mut self.rngs[r.stream]
+            };
+            let logits = self.bank.logits_row(row);
+            let (action, logp) =
+                sample_categorical_buf(logits, &mut self.logp_buf, &mut self.prob_buf, rng);
+            self.resp_buf.push(ServeResponse {
+                stream: r.stream,
+                seq: r.seq,
+                action,
+                logp,
+                value: self.bank.value_row(row),
+                policy_version: version,
+                tick: self.tick_no,
+            });
+        }
+        self.requests += reqs.len() as u64;
+        self.tick_no += 1;
+        reqs.clear();
+        Ok(&self.resp_buf)
+    }
+
+    /// Finalize into the summary stats (consumes the histograms).
+    pub fn finish(&mut self, wall_seconds: f64) -> ServeStats {
+        ServeStats {
+            requests: self.requests,
+            ticks: self.tick_no,
+            reloads: self.reloads,
+            policy_version: self.store.version(),
+            wall_seconds,
+            queue_wait: std::mem::take(&mut self.queue_wait),
+            forward: std::mem::take(&mut self.forward),
+            e2e: LatencyHistogram::new(),
+        }
+    }
+}
+
+/// The server loop: gather → tick → respond until every client hung up
+/// and the queue drained. Reloads adopt between ticks, from the watcher
+/// channel (`reload_rx`) and/or the load-gen `--reload-every` schedule.
+pub fn run_server(
+    arts: &ArtifactSet,
+    batcher: &mut Batcher,
+    transport: &mut dyn Transport,
+    reload_rx: Option<&Receiver<Vec<NetState>>>,
+    opts: &ServeOpts,
+) -> Result<ServeStats> {
+    let start = Instant::now();
+    let mut pending: VecDeque<ServeRequest> = VecDeque::new();
+    let mut batch: Vec<ServeRequest> = Vec::new();
+    let mut in_batch = vec![false; opts.streams];
+    let mut next_reload = opts.reload_every;
+    loop {
+        // between ticks: adopt whatever the watcher loaded
+        if let Some(rx) = reload_rx {
+            while let Ok(nets) = rx.try_recv() {
+                batcher.adopt(nets)?;
+            }
+        }
+        // start the batch from deferred requests (one per stream)
+        let mut i = 0;
+        while i < pending.len() && batch.len() < opts.max_batch {
+            if in_batch[pending[i].stream] {
+                i += 1;
+            } else {
+                let r = pending.remove(i).expect("index in range");
+                in_batch[r.stream] = true;
+                batch.push(r);
+            }
+        }
+        // wait for a first live request if still empty
+        if batch.is_empty() {
+            match transport.recv_timeout(IDLE_POLL) {
+                RecvOut::Req(r) => {
+                    ensure!(r.stream < opts.streams, "unknown stream {}", r.stream);
+                    in_batch[r.stream] = true;
+                    batch.push(r);
+                }
+                RecvOut::Empty => continue, // idle: re-check reloads
+                RecvOut::Closed => {
+                    if pending.is_empty() {
+                        break;
+                    }
+                    continue; // drain deferred requests first
+                }
+            }
+        }
+        // gather until max_batch distinct streams or max_delay elapsed
+        let deadline = Instant::now() + opts.max_delay;
+        while batch.len() < opts.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match transport.recv_timeout(deadline - now) {
+                RecvOut::Req(r) => {
+                    ensure!(r.stream < opts.streams, "unknown stream {}", r.stream);
+                    if in_batch[r.stream] {
+                        pending.push_back(r); // same stream twice → next tick
+                    } else {
+                        in_batch[r.stream] = true;
+                        batch.push(r);
+                    }
+                }
+                RecvOut::Empty | RecvOut::Closed => break,
+            }
+        }
+        for r in &batch {
+            in_batch[r.stream] = false;
+        }
+        for &resp in batcher.tick(arts, &mut batch)? {
+            transport.send(resp)?;
+        }
+        if opts.reload_every > 0 && batcher.requests_served() >= next_reload {
+            batcher.reload_jitter()?;
+            next_reload += opts.reload_every;
+        }
+    }
+    Ok(batcher.finish(start.elapsed().as_secs_f64()))
+}

@@ -1,0 +1,133 @@
+//! Built-in GS load generator: real client traffic without sockets.
+//!
+//! `dials serve --load-gen` spawns one client thread per GS *instance*
+//! (S streams over an N-agent checkpoint → S/N instances; stream
+//! `k*N + a` is agent `a` of instance `k`). Each instance owns a real
+//! `GlobalSim`, and every joint step sends all N observations, waits for
+//! all N actions, then advances the simulator — so concurrent instances
+//! produce exactly the bursty, interleaved arrival pattern a dynamic
+//! batcher exists to absorb. End-to-end latency is recorded client-side
+//! per request and merged into the serve summary at join.
+
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Domain;
+use crate::coordinator::make_global_sim;
+use crate::nn::NetState;
+use crate::runtime::ArtifactSet;
+use crate::util::metrics::LatencyHistogram;
+use crate::util::rng::Pcg64;
+
+use super::batcher::{run_server, Batcher, ServeOpts, ServeStats};
+use super::queue::{in_proc, StreamClient};
+
+/// Load-generator knobs (the GS side of `dials serve --load-gen`).
+#[derive(Clone, Debug)]
+pub struct LoadGenOpts {
+    pub domain: Domain,
+    /// GS grid side; `side^2` must equal the checkpoint's agent count.
+    pub grid_side: usize,
+    /// Joint steps each instance drives (= requests per stream).
+    pub steps_per_stream: usize,
+    /// Episode length: streams send `reset` every this many steps.
+    pub horizon: usize,
+    /// Seed for the per-instance environment RNG streams.
+    pub seed: u64,
+}
+
+/// Drive the server with S concurrent GS-backed client streams; returns
+/// the merged serve stats (server histograms + client e2e).
+pub fn run_load_gen(
+    arts: &ArtifactSet,
+    batcher: &mut Batcher,
+    reload_rx: Option<&Receiver<Vec<NetState>>>,
+    opts: &ServeOpts,
+    gen: &LoadGenOpts,
+) -> Result<ServeStats> {
+    let n = batcher.n_agents();
+    if gen.grid_side * gen.grid_side != n {
+        bail!(
+            "load-gen grid side {} gives {} agents, checkpoint has {n}",
+            gen.grid_side,
+            gen.grid_side * gen.grid_side
+        );
+    }
+    if opts.streams % n != 0 {
+        bail!(
+            "load-gen needs --streams ({}) to be a multiple of the checkpoint's \
+             agent count ({n}): each group of {n} streams drives one GS instance",
+            opts.streams
+        );
+    }
+    let instances = opts.streams / n;
+    let (mut queue, mut clients) = in_proc(opts.streams);
+    let mut handles = Vec::with_capacity(instances);
+    for k in 0..instances {
+        // instance k owns streams [k*n, (k+1)*n); clients was built in
+        // stream order, so repeated drains from the front hand instance
+        // k exactly its block
+        let mine: Vec<StreamClient> = clients.drain(..n).collect();
+        let gen = gen.clone();
+        handles.push(std::thread::spawn(move || drive_instance(k, mine, &gen)));
+    }
+    let stats = run_server(arts, batcher, &mut queue, reload_rx, opts);
+    let mut e2e = LatencyHistogram::new();
+    let mut client_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(hist)) => e2e.merge(&hist),
+            Ok(Err(e)) => client_err = Some(e),
+            Err(_) => client_err = Some(anyhow::anyhow!("load-gen client panicked")),
+        }
+    }
+    if let Some(e) = client_err {
+        return Err(e).context("load-gen client failed");
+    }
+    let mut stats = stats?;
+    stats.e2e = e2e;
+    Ok(stats)
+}
+
+/// One instance: a real GS episode loop where the policy lives on the
+/// other side of the transport. Returns the merged e2e histogram of its
+/// N streams.
+fn drive_instance(
+    k: usize,
+    mut clients: Vec<StreamClient>,
+    gen: &LoadGenOpts,
+) -> Result<LatencyHistogram> {
+    let n = clients.len();
+    let mut gs = make_global_sim(gen.domain, gen.grid_side);
+    let mut rng = Pcg64::new(gen.seed, 0x10ad_0000 + k as u64);
+    let mut obs = vec![0.0f32; gs.obs_dim()];
+    let mut actions = vec![0usize; n];
+    let mut rewards = vec![0.0f32; n];
+    let mut sent_at = vec![Instant::now(); n];
+    for t in 0..gen.steps_per_stream {
+        let reset = t % gen.horizon == 0;
+        if reset {
+            gs.reset(&mut rng);
+        }
+        // burst all N observations, then collect all N actions — the
+        // in-flight window the batcher aggregates
+        for (a, c) in clients.iter_mut().enumerate() {
+            gs.observe(a, &mut obs);
+            sent_at[a] = Instant::now();
+            c.send(&obs, reset)?;
+        }
+        for (a, c) in clients.iter_mut().enumerate() {
+            let resp = c.recv()?;
+            c.e2e.record(sent_at[a].elapsed());
+            actions[a] = resp.action;
+        }
+        gs.step(&actions, &mut rewards, &mut rng);
+    }
+    let mut merged = LatencyHistogram::new();
+    for c in &clients {
+        merged.merge(&c.e2e);
+    }
+    Ok(merged)
+}

@@ -1,0 +1,66 @@
+//! `dials serve` — dynamic-batching inference server over checkpointed
+//! policy banks (DESIGN.md §12).
+//!
+//! Training runs end at a checkpoint; this subsystem is what puts one in
+//! front of traffic. The batch-first runtime is already the core of a
+//! dynamic-batching inference server — `PolicyBank` stacks every agent's
+//! parameters device-side and forwards any number of rows with ONE
+//! `run_b` call, and the replica→agent row indirection lets one param
+//! row back many concurrent streams — so serving reuses the bank
+//! machinery instead of duplicating it:
+//!
+//! * [`queue`] — the transport layer: `ServeRequest`/`ServeResponse`,
+//!   the [`Transport`] trait (sockets slot in later), the in-process
+//!   [`RequestQueue`] + [`StreamClient`] pair built on mpsc channels.
+//! * [`batcher`] — the single-threaded server core: gather pending
+//!   requests under the `--max-batch B` / `--max-delay-us D` policy,
+//!   run ONE batched forward per tick (never more than one in flight),
+//!   sample per request, restore idle streams' recurrence. Hidden state
+//!   lives as bank rows keyed by stream id.
+//! * [`reload`] — hot reload: [`PolicyStore`] diffs a freshly loaded
+//!   checkpoint against the served one and version-bumps only changed
+//!   rows (the bank's partial re-upload then moves only those), plus the
+//!   checkpoint-directory watcher thread. Swaps happen between ticks;
+//!   every response echoes the monotonically increasing policy version.
+//! * [`loadgen`] — the built-in GS load generator: S client threads
+//!   drive real `GlobalSim` instances through the server and fold their
+//!   end-to-end latency histograms into the summary.
+//!
+//! Observability is `util::metrics::LatencyHistogram` (lock-free fixed
+//! log-bucket): queue-wait, batch-forward, and end-to-end per-request
+//! latency, summarised as p50/p90/p99 and gated in CI via the hotpath
+//! bench rows (`serve_p50_us` / `serve_p99_us` in `BENCH_hotpath.json`).
+
+mod batcher;
+mod loadgen;
+mod queue;
+mod reload;
+
+pub use batcher::{run_server, Batcher, ServeOpts, ServeStats};
+pub use loadgen::{run_load_gen, LoadGenOpts};
+pub use queue::{in_proc, RecvOut, RequestQueue, ServeRequest, ServeResponse, StreamClient, Transport};
+pub use reload::{spawn_watcher, PolicyStore};
+
+use crate::util::rng::Pcg64;
+
+/// Stream tag base for per-stream sampling RNGs — shared between the
+/// server and the equivalence tests so reference sequences cannot drift.
+const STREAM_RNG_TAG: u64 = 0x5e52_7e00;
+
+/// The sampling RNG for stream `s` in per-stream mode: an independent
+/// PCG64 stream per client, so a stream's action sequence depends only
+/// on its own observation sequence — never on how the batcher happened
+/// to interleave it with other streams (the arrival-order-invariance
+/// contract, `tests/serve_batcher.rs`).
+pub fn stream_rng(seed: u64, s: usize) -> Pcg64 {
+    Pcg64::new(seed, STREAM_RNG_TAG + s as u64)
+}
+
+/// The single sampling RNG of shared mode: one stream consumed in row
+/// (= agent) order per tick, the same consumption pattern as the
+/// training-side `GsScratch` eval loop. Bit-identity with `GsScratch`
+/// additionally requires full-joint ticks (`max_batch >= N` and every
+/// stream present each tick) — see DESIGN.md §12.
+pub fn shared_rng(seed: u64) -> Pcg64 {
+    Pcg64::seed(seed)
+}

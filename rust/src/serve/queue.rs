@@ -1,0 +1,215 @@
+//! Serve transport: request/response types, the `Transport` trait the
+//! batcher consumes, and the in-process mpsc implementation.
+//!
+//! The server core never sees threads or channels directly — it pulls
+//! `ServeRequest`s from a [`Transport`] and pushes `ServeResponse`s back
+//! through it. The in-process [`RequestQueue`] (one shared mpsc request
+//! channel, one response channel per stream) is the only implementation
+//! today; a socket transport implements the same three methods and slots
+//! in without touching the batcher.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::metrics::LatencyHistogram;
+
+/// One observation from one client stream.
+pub struct ServeRequest {
+    pub stream: usize,
+    /// Client-side sequence number, echoed in the response.
+    pub seq: u64,
+    /// Zero the stream's recurrent state before this forward (episode
+    /// boundary — the client knows its episode clock, the server doesn't).
+    pub reset: bool,
+    pub obs: Vec<f32>,
+    /// When the client handed the request to the transport (queue-wait
+    /// latency is measured from here to the batched forward's start).
+    pub enqueued: Instant,
+}
+
+/// One sampled action back to one client stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeResponse {
+    pub stream: usize,
+    pub seq: u64,
+    pub action: usize,
+    pub logp: f32,
+    pub value: f32,
+    /// Policy version the forward ran under — monotonically increasing,
+    /// bumped by every hot reload that changed at least one row. All
+    /// responses of one tick carry the same version (swap atomicity).
+    pub policy_version: u64,
+    /// Batcher tick that served this request (atomicity assertions).
+    pub tick: u64,
+}
+
+/// Outcome of one transport poll.
+pub enum RecvOut {
+    Req(ServeRequest),
+    /// Nothing arrived within the timeout; more may come.
+    Empty,
+    /// Every client hung up — no request will ever arrive again.
+    Closed,
+}
+
+/// What the batcher needs from a transport. Implementations must be
+/// `Send` so the server loop can run on a dedicated thread.
+pub trait Transport: Send {
+    fn recv_timeout(&mut self, timeout: Duration) -> RecvOut;
+    fn send(&mut self, resp: ServeResponse) -> Result<()>;
+}
+
+/// In-process transport: all clients share one request channel; each
+/// stream owns its response channel.
+pub struct RequestQueue {
+    rx: Receiver<ServeRequest>,
+    resp_tx: Vec<Sender<ServeResponse>>,
+}
+
+impl Transport for RequestQueue {
+    fn recv_timeout(&mut self, timeout: Duration) -> RecvOut {
+        if timeout.is_zero() {
+            return match self.rx.try_recv() {
+                Ok(r) => RecvOut::Req(r),
+                Err(TryRecvError::Empty) => RecvOut::Empty,
+                Err(TryRecvError::Disconnected) => RecvOut::Closed,
+            };
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => RecvOut::Req(r),
+            Err(RecvTimeoutError::Timeout) => RecvOut::Empty,
+            Err(RecvTimeoutError::Disconnected) => RecvOut::Closed,
+        }
+    }
+
+    fn send(&mut self, resp: ServeResponse) -> Result<()> {
+        self.resp_tx
+            .get(resp.stream)
+            .ok_or_else(|| anyhow!("response for unknown stream {}", resp.stream))?
+            .send(resp)
+            .map_err(|_| anyhow!("stream {} hung up before its response", resp.stream))
+    }
+}
+
+/// Client handle for one stream: send observations, receive actions,
+/// record end-to-end latency. Dropping the client closes its side of the
+/// request channel; the server exits when all clients are gone and the
+/// queue is drained.
+pub struct StreamClient {
+    pub stream: usize,
+    tx: Sender<ServeRequest>,
+    rx: Receiver<ServeResponse>,
+    seq: u64,
+    /// End-to-end latency (send → response received), recorded
+    /// client-side and merged into the serve summary by the load
+    /// generator.
+    pub e2e: LatencyHistogram,
+}
+
+impl StreamClient {
+    /// Enqueue one observation; returns the sequence number to match the
+    /// response against.
+    pub fn send(&mut self, obs: &[f32], reset: bool) -> Result<u64> {
+        let seq = self.seq;
+        self.seq += 1;
+        self.tx
+            .send(ServeRequest {
+                stream: self.stream,
+                seq,
+                reset,
+                obs: obs.to_vec(),
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("server hung up (stream {})", self.stream))?;
+        Ok(seq)
+    }
+
+    /// Block for the next response on this stream.
+    pub fn recv(&mut self) -> Result<ServeResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("server hung up before responding (stream {})", self.stream))
+    }
+
+    /// Synchronous round trip: send, wait, record end-to-end latency.
+    pub fn request(&mut self, obs: &[f32], reset: bool) -> Result<ServeResponse> {
+        let sent = Instant::now();
+        let seq = self.send(obs, reset)?;
+        let resp = self.recv()?;
+        self.e2e.record(sent.elapsed());
+        debug_assert_eq!(resp.seq, seq, "stream {} response out of order", self.stream);
+        Ok(resp)
+    }
+}
+
+/// Build the in-process harness: one server-side queue + `streams`
+/// client handles.
+pub fn in_proc(streams: usize) -> (RequestQueue, Vec<StreamClient>) {
+    let (req_tx, req_rx) = channel::<ServeRequest>();
+    let mut resp_tx = Vec::with_capacity(streams);
+    let mut clients = Vec::with_capacity(streams);
+    for s in 0..streams {
+        let (tx, rx) = channel::<ServeResponse>();
+        resp_tx.push(tx);
+        clients.push(StreamClient {
+            stream: s,
+            tx: req_tx.clone(),
+            rx,
+            seq: 0,
+            e2e: LatencyHistogram::new(),
+        });
+    }
+    (RequestQueue { rx: req_rx, resp_tx }, clients)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_proc_round_trip() {
+        let (mut queue, mut clients) = in_proc(2);
+        clients[1].send(&[1.0, 2.0], true).unwrap();
+        let req = match queue.recv_timeout(Duration::from_millis(100)) {
+            RecvOut::Req(r) => r,
+            _ => panic!("expected a request"),
+        };
+        assert_eq!(req.stream, 1);
+        assert_eq!(req.seq, 0);
+        assert!(req.reset);
+        assert_eq!(req.obs, vec![1.0, 2.0]);
+        queue
+            .send(ServeResponse {
+                stream: 1,
+                seq: 0,
+                action: 3,
+                logp: -0.5,
+                value: 0.25,
+                policy_version: 1,
+                tick: 0,
+            })
+            .unwrap();
+        let resp = clients[1].recv().unwrap();
+        assert_eq!(resp.action, 3);
+        assert_eq!(resp.policy_version, 1);
+    }
+
+    #[test]
+    fn queue_reports_closed_when_all_clients_drop() {
+        let (mut queue, clients) = in_proc(3);
+        drop(clients);
+        assert!(matches!(queue.recv_timeout(Duration::ZERO), RecvOut::Closed));
+        assert!(matches!(queue.recv_timeout(Duration::from_millis(1)), RecvOut::Closed));
+    }
+
+    #[test]
+    fn queue_drains_pending_before_closed() {
+        let (mut queue, mut clients) = in_proc(1);
+        clients[0].send(&[0.0], false).unwrap();
+        drop(clients);
+        assert!(matches!(queue.recv_timeout(Duration::ZERO), RecvOut::Req(_)));
+        assert!(matches!(queue.recv_timeout(Duration::ZERO), RecvOut::Closed));
+    }
+}

@@ -1,0 +1,178 @@
+//! Hot reload: the policy store the batcher serves from, plus the
+//! checkpoint-directory watcher thread.
+//!
+//! Swap protocol: a new checkpoint is loaded OFF the serving thread (the
+//! watcher), shipped as plain `Vec<NetState>`, and adopted by the
+//! batcher BETWEEN ticks — the forward never observes a half-staged
+//! bank. [`PolicyStore::adopt`] diffs the fresh params row-by-row
+//! against the served ones and bumps `NetState::version` only for rows
+//! that actually changed, so the bank's `stage` re-copies exactly those
+//! rows (the version-tracked partial re-upload, `runtime::batch`). The
+//! store-level version increments once per effective reload and is
+//! echoed in every response.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::load_policy_checkpoint;
+use crate::nn::NetState;
+use crate::runtime::{Engine, NetSpec, PolicyBank};
+
+/// The policy bank's source of truth: one `NetState` per agent, plus the
+/// monotonically increasing serve-side version.
+pub struct PolicyStore {
+    nets: Vec<NetState>,
+    version: u64,
+}
+
+impl PolicyStore {
+    /// Load the initial checkpoint; the store starts at version 1.
+    pub fn load(dir: &Path, spec: &NetSpec) -> Result<Self> {
+        let nets = load_policy_checkpoint(dir, spec)?;
+        Ok(PolicyStore { nets, version: 1 })
+    }
+
+    /// Build a store from in-memory nets (tests, load-gen jitter mode).
+    pub fn from_nets(nets: Vec<NetState>) -> Self {
+        PolicyStore { nets, version: 1 }
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.nets.len()
+    }
+
+    /// The version every response of the next tick will echo.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn nets(&self) -> &[NetState] {
+        &self.nets
+    }
+
+    /// Adopt a freshly loaded checkpoint: rows whose parameters differ
+    /// replace the served ones with a `NetState::version` strictly above
+    /// the old row's (so the bank re-copies exactly those rows at the
+    /// next stage); identical rows are kept untouched (no re-copy). The
+    /// store version bumps once iff anything changed. Returns the number
+    /// of changed rows.
+    pub fn adopt(&mut self, fresh: Vec<NetState>) -> Result<usize> {
+        ensure!(
+            fresh.len() == self.nets.len(),
+            "reload checkpoint has {} agents, serving {}",
+            fresh.len(), self.nets.len()
+        );
+        let mut changed = 0usize;
+        for (cur, mut new) in self.nets.iter_mut().zip(fresh) {
+            ensure!(
+                new.flat.len() == cur.flat.len(),
+                "reload param width {} != served {}",
+                new.flat.len(), cur.flat.len()
+            );
+            if new.flat.data != cur.flat.data {
+                new.version = cur.version + 1;
+                *cur = new;
+                changed += 1;
+            }
+        }
+        if changed > 0 {
+            self.version += 1;
+        }
+        Ok(changed)
+    }
+
+    /// Stage every row into the bank (no-op per row unless its version
+    /// changed since the last stage — the partial re-upload).
+    pub fn stage_into(&self, engine: &Engine, bank: &mut PolicyBank) -> Result<()> {
+        for (i, net) in self.nets.iter().enumerate() {
+            bank.stage(engine, i, net)?;
+        }
+        Ok(())
+    }
+}
+
+/// Watch `dir` for a new checkpoint: polls `checkpoint.meta`'s mtime
+/// every `poll`; on change, loads the policy nets and ships them through
+/// the returned channel. Mid-write load errors are swallowed and retried
+/// next poll (the trainer writes npk files first and `checkpoint.meta`
+/// last, but a save in progress when the meta mtime flips can still
+/// yield a torn read — retrying is the defense, not an error). Set
+/// `stop` to wind the thread down.
+pub fn spawn_watcher(
+    dir: PathBuf,
+    spec: NetSpec,
+    poll: Duration,
+    stop: Arc<AtomicBool>,
+) -> (Receiver<Vec<NetState>>, JoinHandle<()>) {
+    let (tx, rx) = channel();
+    let handle = std::thread::spawn(move || {
+        let meta = dir.join("checkpoint.meta");
+        let mtime_of = |p: &Path| -> Option<SystemTime> {
+            std::fs::metadata(p).and_then(|m| m.modified()).ok()
+        };
+        let mut last_seen = mtime_of(&meta);
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(poll);
+            let now = mtime_of(&meta);
+            if now.is_some() && now != last_seen {
+                // a failed load is a torn write mid-save: retry next poll
+                if let Ok(nets) = load_policy_checkpoint(&dir, &spec) {
+                    last_seen = now;
+                    if tx.send(nets).is_err() {
+                        break; // server gone
+                    }
+                }
+            }
+        }
+    });
+    (rx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::npk::Tensor;
+
+    fn net(p: usize, fill: f32) -> NetState {
+        let mut n = NetState::new(&Tensor::new(vec![p], vec![fill; p]));
+        n.version = 1;
+        n
+    }
+
+    #[test]
+    fn adopt_bumps_only_changed_rows() {
+        let mut store = PolicyStore::from_nets(vec![net(3, 1.0), net(3, 2.0), net(3, 3.0)]);
+        assert_eq!(store.version(), 1);
+
+        // identical checkpoint: nothing changes, version holds
+        let changed =
+            store.adopt(vec![net(3, 1.0), net(3, 2.0), net(3, 3.0)]).unwrap();
+        assert_eq!(changed, 0);
+        assert_eq!(store.version(), 1);
+
+        // one row changed: its NetState version moves past the old one,
+        // the others keep theirs, the store version bumps once
+        let v_before: Vec<u64> = store.nets().iter().map(|n| n.version).collect();
+        let changed =
+            store.adopt(vec![net(3, 1.0), net(3, 9.0), net(3, 3.0)]).unwrap();
+        assert_eq!(changed, 1);
+        assert_eq!(store.version(), 2);
+        assert_eq!(store.nets()[0].version, v_before[0]);
+        assert!(store.nets()[1].version > v_before[1]);
+        assert_eq!(store.nets()[1].flat.data, vec![9.0; 3]);
+        assert_eq!(store.nets()[2].version, v_before[2]);
+    }
+
+    #[test]
+    fn adopt_rejects_shape_mismatch() {
+        let mut store = PolicyStore::from_nets(vec![net(3, 1.0)]);
+        assert!(store.adopt(vec![net(3, 1.0), net(3, 2.0)]).is_err(), "agent count");
+        assert!(store.adopt(vec![net(4, 1.0)]).is_err(), "param width");
+    }
+}

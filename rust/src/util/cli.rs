@@ -89,6 +89,51 @@ impl Args {
                 .collect(),
         }
     }
+
+    /// Reject flags the subcommand does not know. A typo'd flag used to be
+    /// silently parsed and ignored (`--total-step 100` trained the default
+    /// 100k steps); now it bails, suggesting the closest known flag when
+    /// one is within editing distance.
+    pub fn check_known(&self, cmd: &str, known: &[&str]) -> Result<()> {
+        for flag in self.flags.keys() {
+            if known.contains(&flag.as_str()) {
+                continue;
+            }
+            let best = known
+                .iter()
+                .map(|k| (edit_distance(flag, k), *k))
+                .min()
+                .filter(|(d, _)| *d <= 3);
+            match best {
+                Some((_, suggestion)) => {
+                    bail!("unknown flag --{flag} for `{cmd}` (did you mean --{suggestion}?)")
+                }
+                None => bail!(
+                    "unknown flag --{flag} for `{cmd}` (known flags: {})",
+                    known.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+                ),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Levenshtein distance, small-string sized (flag names): one rolling row.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut row: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut prev_diag = row[0];
+        row[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let cost = if ca == cb { 0 } else { 1 };
+            let next = (prev_diag + cost).min(row[j] + 1).min(row[j + 1] + 1);
+            prev_diag = row[j + 1];
+            row[j + 1] = next;
+        }
+    }
+    row[b.len()]
 }
 
 #[cfg(test)]
@@ -135,5 +180,37 @@ mod tests {
         let a = args(&["--sizes", "2,5, 7"]);
         assert_eq!(a.get_usize_list("sizes", &[]).unwrap(), vec![2, 5, 7]);
         assert_eq!(a.get_usize_list("other", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn known_flags_pass() {
+        let a = args(&["--steps", "10", "--domain", "traffic"]);
+        a.check_known("train", &["steps", "domain", "seed"]).unwrap();
+    }
+
+    #[test]
+    fn typo_suggests_closest_flag() {
+        let a = args(&["--total-step", "100"]);
+        let err = a
+            .check_known("train", &["total-steps", "seed"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag --total-step"), "{err}");
+        assert!(err.contains("did you mean --total-steps?"), "{err}");
+    }
+
+    #[test]
+    fn far_typo_lists_known_flags() {
+        let a = args(&["--bananas"]);
+        let err = a.check_known("eval", &["ckpt", "seed"]).unwrap_err().to_string();
+        assert!(err.contains("known flags: --ckpt, --seed"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("total-step", "total-steps"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

@@ -6,6 +6,8 @@
 
 use std::fmt::Write as _;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -83,6 +85,9 @@ pub struct RunLog {
     /// (`tests/async_collect_equivalence.rs` diffs these against the
     /// blocking reference).
     pub dataset_fingerprints: Vec<u64>,
+    /// Checkpoints written by `--save-ckpt-every` during the run
+    /// (excludes the final save that every `--save-ckpt` run performs).
+    pub checkpoint_saves: usize,
 }
 
 impl RunLog {
@@ -92,6 +97,144 @@ impl RunLog {
             let _ = writeln!(s, "{},{}", p.step, p.value);
         }
         s
+    }
+}
+
+/// Number of linear sub-buckets per power-of-two range (8 = 2^3): every
+/// recorded value lands in a bucket whose width is 1/8 of its magnitude,
+/// bounding the relative quantile error at 12.5%.
+const HIST_SUB: usize = 8;
+const HIST_LOG_SUB: u32 = 3;
+/// Bucket count: values 0..8 get exact buckets, then 8 sub-buckets per
+/// power of two up to 2^63 ns (~292 years) — 8 + 61*8 = 496, padded.
+const HIST_BUCKETS: usize = 512;
+
+/// Lock-free fixed-bucket latency histogram (HdrHistogram-lite).
+///
+/// Log-linear buckets over nanoseconds: exact below `HIST_SUB`, then
+/// `HIST_SUB` linear sub-buckets per power of two, so quantile estimates
+/// carry at most 1/HIST_SUB (12.5%) relative error at any magnitude.
+/// `record_ns` is a single relaxed atomic increment — safe to call from
+/// any thread through a shared reference with no locking; independent
+/// per-thread histograms can be folded together with `merge`.
+///
+/// The serve subsystem (DESIGN.md §12) keeps three of these per server
+/// (queue-wait, batch-forward, end-to-end) and reports p50/p90/p99 in
+/// the run summary, the hotpath bench rows, and `BENCH_hotpath.json`.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket_of(ns: u64) -> usize {
+        if ns < HIST_SUB as u64 {
+            return ns as usize;
+        }
+        // msb >= 3 here; the top HIST_LOG_SUB bits below the msb select
+        // the linear sub-bucket within the power-of-two range.
+        let msb = 63 - ns.leading_zeros();
+        let sub = ((ns >> (msb - HIST_LOG_SUB)) as usize) - HIST_SUB;
+        let idx = HIST_SUB + ((msb - HIST_LOG_SUB) as usize) * HIST_SUB + sub;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Lower edge and width of bucket `idx` (midpoint = representative).
+    fn bucket_bounds(idx: usize) -> (u64, u64) {
+        if idx < HIST_SUB {
+            return (idx as u64, 1);
+        }
+        let range = (idx - HIST_SUB) / HIST_SUB; // power-of-two range index
+        let sub = (idx - HIST_SUB) % HIST_SUB;
+        let width = 1u64 << range;
+        let lo = (HIST_SUB as u64 + sub as u64) << range;
+        (lo, width)
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Fold `other`'s counts into `self` (per-thread histogram collection).
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                a.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Quantile `p` in [0, 1], in microseconds (0.0 when empty). Returns
+    /// the midpoint of the bucket holding the p-th recorded value.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                let (lo, width) = Self::bucket_bounds(idx);
+                return (lo as f64 + width as f64 / 2.0) / 1_000.0;
+            }
+        }
+        let (lo, width) = Self::bucket_bounds(HIST_BUCKETS - 1);
+        (lo as f64 + width as f64 / 2.0) / 1_000.0
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.percentile_us(0.50)
+    }
+
+    pub fn p90_us(&self) -> f64 {
+        self.percentile_us(0.90)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.percentile_us(0.99)
+    }
+
+    /// Bucket-midpoint-weighted mean, in microseconds (0.0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let mut total = 0u64;
+        let mut sum = 0.0f64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                let (lo, width) = Self::bucket_bounds(idx);
+                sum += n as f64 * (lo as f64 + width as f64 / 2.0);
+                total += n;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            sum / total as f64 / 1_000.0
+        }
     }
 }
 
@@ -231,6 +374,90 @@ mod tests {
         let c1 = vec![CurvePoint { step: 0, value: 1.0 }, CurvePoint { step: 10, value: 2.0 }];
         let c2 = vec![CurvePoint { step: 0, value: 3.0 }, CurvePoint { step: 16, value: 4.0 }];
         let _ = aggregate_curves(&[c1, c2]);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50_us(), 0.0);
+        assert_eq!(h.p99_us(), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let h = LatencyHistogram::new();
+        for ns in 0..8u64 {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 8);
+        // values 0..8 land in exact unit buckets; p50 of {0..7} is the
+        // bucket holding the 4th value (ns=3), midpoint 3.5ns
+        assert!((h.percentile_us(0.5) - 0.0035).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_relative_error_bounded() {
+        // Across magnitudes, the bucket midpoint is within 12.5% of the
+        // recorded value (1/HIST_SUB log-linear bound).
+        for ns in [10u64, 97, 1_000, 12_345, 1_000_000, 87_654_321] {
+            let h = LatencyHistogram::new();
+            h.record_ns(ns);
+            let est_ns = h.percentile_us(0.5) * 1_000.0;
+            let rel = (est_ns - ns as f64).abs() / ns as f64;
+            assert!(rel <= 0.125, "ns={ns} est={est_ns} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1_000); // 1us..1ms uniform
+        }
+        let (p50, p90, p99) = (h.p50_us(), h.p90_us(), h.p99_us());
+        assert!(p50 < p90 && p90 < p99, "{p50} {p90} {p99}");
+        assert!((p50 - 500.0).abs() / 500.0 < 0.13, "p50={p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.13, "p99={p99}");
+        assert!((h.mean_us() - 500.0).abs() / 500.0 < 0.13);
+    }
+
+    #[test]
+    fn histogram_merge_across_threads() {
+        use std::sync::Arc;
+        let shared = Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let h = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || {
+                let local = LatencyHistogram::new();
+                for i in 0..250u64 {
+                    local.record_ns((t * 250 + i) * 1_000);
+                    h.record_ns((t * 250 + i) * 1_000); // shared path too
+                }
+                local
+            }));
+        }
+        let folded = LatencyHistogram::new();
+        for hd in handles {
+            folded.merge(&hd.join().unwrap());
+        }
+        assert_eq!(folded.count(), 1000);
+        assert_eq!(shared.count(), 1000);
+        // identical data via merge vs shared recording → identical quantiles
+        assert_eq!(folded.p50_us(), shared.p50_us());
+        assert_eq!(folded.p99_us(), shared.p99_us());
+    }
+
+    #[test]
+    fn histogram_duration_and_overflow() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(42));
+        assert!((h.p50_us() - 42.0).abs() / 42.0 < 0.13);
+        // huge values clamp into the last bucket instead of panicking
+        h.record_ns(u64::MAX);
+        assert_eq!(h.count(), 2);
     }
 
     #[test]

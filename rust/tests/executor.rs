@@ -127,6 +127,7 @@ fn tiny_cfg(threads: usize) -> ExperimentConfig {
         async_eval: 0,
         async_collect: 0,
         ls_replicas: 0,
+        save_ckpt_every: 0,
     }
 }
 

@@ -47,6 +47,7 @@ fn steady_state_megabatch_tick_allocates_nothing() {
             async_eval: 0,
             async_collect: 0,
             ls_replicas: 4,
+            save_ckpt_every: 0,
         };
         let engine = Engine::cpu().unwrap();
         let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();

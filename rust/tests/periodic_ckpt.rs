@@ -1,0 +1,129 @@
+//! Periodic checkpointing (`--save-ckpt-every`), on the native backend:
+//! saving mid-run must be a pure observer — eval and CE curves stay
+//! bit-identical to a run that never saves, in blocking AND async
+//! eval/collect modes (the drains before each save land pending work
+//! early but never change it) — and the saved checkpoint must be loadable
+//! by both the trainer-side and the serve-side loaders.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{load_policy_checkpoint, DialsCoordinator};
+use dials::runtime::{synth, Engine};
+use dials::util::metrics::RunLog;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_periodic_ckpt").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 23).unwrap();
+    dir
+}
+
+fn tiny_cfg(domain: Domain, dir: &std::path::Path) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::Dials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 32,
+        aip_dataset: 20,
+        aip_epochs: 0,
+        eval_every: 32,
+        eval_episodes: 1,
+        horizon: 12,
+        seed: 3,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 1,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+        ls_replicas: 0,
+        save_ckpt_every: 0,
+    }
+}
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_periodic_ckpt_out").join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_same_curves(a: &RunLog, b: &RunLog, what: &str) {
+    assert_eq!(a.eval_curve.len(), b.eval_curve.len(), "{what}: eval curve length");
+    for (x, y) in a.eval_curve.iter().zip(b.eval_curve.iter()) {
+        assert_eq!(x.step, y.step, "{what}: eval step");
+        assert_eq!(x.value.to_bits(), y.value.to_bits(), "{what}: eval at step {}", x.step);
+    }
+    assert_eq!(a.ce_curve.len(), b.ce_curve.len(), "{what}: ce curve length");
+    for (x, y) in a.ce_curve.iter().zip(b.ce_curve.iter()) {
+        assert_eq!(x.step, y.step, "{what}: ce step");
+        assert_eq!(x.value.to_bits(), y.value.to_bits(), "{what}: ce at step {}", x.step);
+    }
+    assert_eq!(a.dataset_fingerprints, b.dataset_fingerprints, "{what}: datasets");
+}
+
+#[test]
+fn periodic_saves_do_not_perturb_training() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("pure", domain);
+    let engine = Engine::cpu().unwrap();
+    for (async_eval, async_collect) in [(0usize, 0usize), (2, 1)] {
+        let run = |save_every: usize, dir: Option<&std::path::Path>| {
+            let mut cfg = tiny_cfg(domain, &adir);
+            cfg.async_eval = async_eval;
+            cfg.async_collect = async_collect;
+            cfg.save_ckpt_every = save_every;
+            DialsCoordinator::new(&engine, cfg).unwrap().run_ckpt(None, dir).unwrap()
+        };
+        let reference = run(0, None);
+        assert_eq!(reference.checkpoint_saves, 0);
+
+        let dir = ckpt_dir(&format!("pure_{async_eval}_{async_collect}"));
+        let periodic = run(16, Some(dir.as_path()));
+        // 64 steps in 32-step segments, save every 16 → a save lands at
+        // BOTH segment boundaries (the counter passes 16 each time)
+        assert_eq!(periodic.checkpoint_saves, 2, "saves at steps 32 and 64");
+        assert_same_curves(
+            &reference,
+            &periodic,
+            &format!("async_eval={async_eval} async_collect={async_collect}"),
+        );
+
+        // the dir holds a complete, loadable checkpoint (the final save
+        // overwrote the periodic ones in place)
+        let spec = {
+            let cfg = tiny_cfg(domain, &adir);
+            DialsCoordinator::new(&engine, cfg).unwrap().artifacts().spec.clone()
+        };
+        let nets = load_policy_checkpoint(&dir, &spec).unwrap();
+        assert_eq!(nets.len(), 4);
+    }
+}
+
+#[test]
+fn save_every_without_save_dir_is_inert() {
+    let domain = Domain::Warehouse;
+    let adir = synth_dir("nodir", domain);
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = tiny_cfg(domain, &adir);
+    cfg.save_ckpt_every = 16;
+    let log = DialsCoordinator::new(&engine, cfg).unwrap().run_ckpt(None, None).unwrap();
+    assert_eq!(log.checkpoint_saves, 0, "no save dir → nothing to write");
+}
+
+#[test]
+fn coarse_save_every_lands_once() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("coarse", domain);
+    let engine = Engine::cpu().unwrap();
+    let mut cfg = tiny_cfg(domain, &adir);
+    cfg.save_ckpt_every = 50; // first boundary at or past 50 is step 64
+    let dir = ckpt_dir("coarse");
+    let log =
+        DialsCoordinator::new(&engine, cfg).unwrap().run_ckpt(None, Some(dir.as_path())).unwrap();
+    assert_eq!(log.checkpoint_saves, 1, "one periodic save at the 64-step boundary");
+}

@@ -1,0 +1,184 @@
+//! Batcher arrival-order invariance, on the native backend: in
+//! per-stream sampling mode (the serve default), a stream's action
+//! sequence is a function of its OWN observation sequence only — however
+//! the batcher happens to interleave it with other streams, and however
+//! the OS schedules the client threads. The reference for stream `s` is
+//! a dedicated batcher fed only `s`'s requests, one per tick (the S=1
+//! serial server).
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::nn::NetState;
+use dials::runtime::{synth, ArtifactSet, Engine};
+use dials::serve::{in_proc, run_server, Batcher, PolicyStore, ServeOpts, ServeRequest};
+use dials::util::rng::Pcg64;
+
+const STREAMS: usize = 8;
+const STEPS: usize = 12;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_serve_batcher").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 23).unwrap();
+    dir
+}
+
+fn tiny_cfg(domain: Domain, dir: &std::path::Path) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::Dials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 32,
+        aip_dataset: 20,
+        aip_epochs: 0,
+        eval_every: 32,
+        eval_episodes: 1,
+        horizon: 12,
+        seed: 3,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 1,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+        ls_replicas: 0,
+        save_ckpt_every: 0,
+    }
+}
+
+/// Deterministic synthetic observation for stream `s` at its step `t`.
+fn obs_of(s: usize, t: usize, obs_dim: usize) -> Vec<f32> {
+    (0..obs_dim).map(|d| ((s * 31 + t * 7 + d * 3) % 13) as f32 * 0.1 - 0.6).collect()
+}
+
+fn reset_at(t: usize) -> bool {
+    t % 4 == 0
+}
+
+fn req(s: usize, t: usize, obs_dim: usize) -> ServeRequest {
+    ServeRequest {
+        stream: s,
+        seq: t as u64,
+        reset: reset_at(t),
+        obs: obs_of(s, t, obs_dim),
+        enqueued: Instant::now(),
+    }
+}
+
+fn serve_opts(seed: u64) -> ServeOpts {
+    ServeOpts { streams: STREAMS, max_batch: STREAMS, seed, ..Default::default() }
+}
+
+/// The S=1 serial reference: each stream's action sequence from a
+/// dedicated batcher that only ever sees that stream.
+fn reference_sequences(
+    arts: &ArtifactSet,
+    nets: &[NetState],
+    seed: u64,
+    obs_dim: usize,
+) -> Vec<Vec<usize>> {
+    (0..STREAMS)
+        .map(|s| {
+            let mut b =
+                Batcher::new(arts, PolicyStore::from_nets(nets.to_vec()), &serve_opts(seed))
+                    .unwrap();
+            let mut reqs = Vec::new();
+            (0..STEPS)
+                .map(|t| {
+                    reqs.push(req(s, t, obs_dim));
+                    let r = b.tick(arts, &mut reqs).unwrap();
+                    assert_eq!(r.len(), 1);
+                    r[0].action
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn any_tick_interleaving_matches_serial_reference() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("prop", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let arts = coord.artifacts();
+    let obs_dim = arts.spec.obs_dim;
+    let nets: Vec<_> = coord.make_workers(5).iter().map(|w| w.policy.net.clone()).collect();
+    let seed = 17u64;
+    let reference = reference_sequences(arts, &nets, seed, obs_dim);
+
+    // 10 random interleavings: each tick batches a random non-empty
+    // subset of the streams that still have requests left
+    let mut shuffle_rng = Pcg64::seed(99);
+    for trial in 0..10 {
+        let mut b =
+            Batcher::new(arts, PolicyStore::from_nets(nets.clone()), &serve_opts(seed)).unwrap();
+        let mut next = [0usize; STREAMS];
+        let mut got: Vec<Vec<usize>> = vec![Vec::new(); STREAMS];
+        let mut reqs = Vec::new();
+        while next.iter().any(|&t| t < STEPS) {
+            for s in 0..STREAMS {
+                if next[s] < STEPS && shuffle_rng.bernoulli(0.4) {
+                    reqs.push(req(s, next[s], obs_dim));
+                    next[s] += 1;
+                }
+            }
+            if reqs.is_empty() {
+                continue; // roll the subset again
+            }
+            for resp in b.tick(arts, &mut reqs).unwrap() {
+                got[resp.stream].push(resp.action);
+            }
+        }
+        assert_eq!(got, reference, "trial {trial}: interleaving changed a stream's actions");
+    }
+}
+
+#[test]
+fn threaded_clients_match_serial_reference() {
+    let domain = Domain::Warehouse;
+    let adir = synth_dir("threads", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let arts = coord.artifacts();
+    let obs_dim = arts.spec.obs_dim;
+    let nets: Vec<_> = coord.make_workers(5).iter().map(|w| w.policy.net.clone()).collect();
+    let seed = 23u64;
+    let reference = reference_sequences(arts, &nets, seed, obs_dim);
+
+    // small max_delay + free-running clients → ticks of whatever mix of
+    // streams the scheduler produced; per-stream sequences must not care
+    let opts = ServeOpts {
+        max_delay: Duration::from_micros(50),
+        max_batch: 3,
+        ..serve_opts(seed)
+    };
+    let mut batcher =
+        Batcher::new(arts, PolicyStore::from_nets(nets.clone()), &opts).unwrap();
+    let (mut queue, clients) = in_proc(STREAMS);
+    let handles: Vec<_> = clients
+        .into_iter()
+        .map(|mut c| {
+            std::thread::spawn(move || {
+                let s = c.stream;
+                (0..STEPS)
+                    .map(|t| c.request(&obs_of(s, t, obs_dim), reset_at(t)).unwrap().action)
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let stats = run_server(arts, &mut batcher, &mut queue, None, &opts).unwrap();
+    for (s, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        assert_eq!(got, reference[s], "stream {s}: threaded run changed its actions");
+    }
+    assert_eq!(stats.requests as usize, STREAMS * STEPS);
+    assert!(stats.ticks >= (STEPS as u64), "at least one tick per serial round");
+}

@@ -1,0 +1,172 @@
+//! Hot-reload contract, on the native backend: checkpoint swaps are
+//! atomic at tick granularity (every response of a tick echoes one
+//! policy version, and versions only move between ticks), the staged
+//! re-upload is partial (an adoption that bumps one agent row re-copies
+//! exactly one bank row), and the checkpoint-directory watcher ships a
+//! newer save to the serving thread.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{save_checkpoint, DialsCoordinator};
+use dials::runtime::{synth, Engine};
+use dials::serve::{spawn_watcher, Batcher, PolicyStore, ServeOpts, ServeRequest};
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_serve_reload").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 23).unwrap();
+    dir
+}
+
+fn tiny_cfg(domain: Domain, dir: &std::path::Path) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::Dials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 32,
+        aip_dataset: 20,
+        aip_epochs: 0,
+        eval_every: 32,
+        eval_episodes: 1,
+        horizon: 12,
+        seed: 3,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 1,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+        ls_replicas: 0,
+        save_ckpt_every: 0,
+    }
+}
+
+fn joint_reqs(n: usize, obs_dim: usize, t: u64) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|a| ServeRequest {
+            stream: a,
+            seq: t,
+            reset: t == 0,
+            obs: vec![0.1 * (a as f32 + 1.0); obs_dim],
+            enqueued: Instant::now(),
+        })
+        .collect()
+}
+
+#[test]
+fn reload_is_tick_atomic_and_partially_restaged() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("atomic", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let arts = coord.artifacts();
+    let spec = &arts.spec;
+    let workers = coord.make_workers(5);
+    let nets: Vec<_> = workers.iter().map(|w| w.policy.net.clone()).collect();
+    drop(workers);
+    let n = nets.len();
+
+    let store = PolicyStore::from_nets(nets.clone());
+    let opts = ServeOpts { streams: n, max_batch: n, seed: 9, ..Default::default() };
+    let mut batcher = Batcher::new(arts, store, &opts).unwrap();
+
+    // tick 0: first stage uploads every row, all responses at version 1
+    let mut reqs = joint_reqs(n, spec.obs_dim, 0);
+    let resps = batcher.tick(arts, &mut reqs).unwrap().to_vec();
+    assert!(resps.iter().all(|r| r.policy_version == 1 && r.tick == 0));
+    assert_eq!(batcher.rows_recopied() as usize, n, "initial stage copies every row");
+
+    // tick 1, nothing adopted: staging is a no-op, version holds
+    let mut reqs = joint_reqs(n, spec.obs_dim, 1);
+    let resps = batcher.tick(arts, &mut reqs).unwrap().to_vec();
+    assert!(resps.iter().all(|r| r.policy_version == 1 && r.tick == 1));
+    assert_eq!(batcher.rows_recopied() as usize, n, "unchanged params re-copy nothing");
+
+    // adopt a checkpoint with ONE changed agent row between ticks
+    let mut fresh = nets.clone();
+    fresh[2].flat.data.iter_mut().for_each(|x| *x += 0.5);
+    assert_eq!(batcher.adopt(fresh).unwrap(), 1);
+
+    // tick 2: exactly one row re-staged, every response at version 2 —
+    // no response of any tick mixes versions
+    let mut reqs = joint_reqs(n, spec.obs_dim, 2);
+    let resps = batcher.tick(arts, &mut reqs).unwrap().to_vec();
+    assert!(resps.iter().all(|r| r.policy_version == 2 && r.tick == 2));
+    assert_eq!(batcher.rows_recopied() as usize, n + 1, "partial re-upload: one bumped row");
+
+    // adopting the identical checkpoint is a no-op: no version bump, no
+    // re-copy, not counted as a reload
+    let mut fresh = nets.clone();
+    fresh[2].flat.data.iter_mut().for_each(|x| *x += 0.5);
+    assert_eq!(batcher.adopt(fresh).unwrap(), 0);
+    let mut reqs = joint_reqs(n, spec.obs_dim, 3);
+    let resps = batcher.tick(arts, &mut reqs).unwrap().to_vec();
+    assert!(resps.iter().all(|r| r.policy_version == 2 && r.tick == 3));
+    assert_eq!(batcher.rows_recopied() as usize, n + 1);
+
+    let stats = batcher.finish(1.0);
+    assert_eq!(stats.requests as usize, 4 * n);
+    assert_eq!(stats.ticks, 4);
+    assert_eq!(stats.reloads, 1, "only the effective adoption counts");
+    assert_eq!(stats.policy_version, 2);
+}
+
+#[test]
+fn jitter_reload_rotates_one_agent_row_per_round() {
+    let domain = Domain::Warehouse;
+    let adir = synth_dir("jitter", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let arts = coord.artifacts();
+    let workers = coord.make_workers(5);
+    let nets: Vec<_> = workers.iter().map(|w| w.policy.net.clone()).collect();
+    drop(workers);
+    let n = nets.len();
+
+    let opts = ServeOpts { streams: n, max_batch: n, ..Default::default() };
+    let mut batcher = Batcher::new(arts, PolicyStore::from_nets(nets), &opts).unwrap();
+    for round in 0..(n + 1) {
+        assert_eq!(batcher.reload_jitter().unwrap(), 1, "round {round} perturbs one row");
+        assert_eq!(batcher.version(), 1 + round as u64 + 1);
+    }
+}
+
+#[test]
+fn watcher_ships_newer_checkpoints() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("watch", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let spec = coord.artifacts().spec.clone();
+    let mut workers = coord.make_workers(5);
+
+    let ckpt = std::env::temp_dir().join("dials_serve_reload_ckpt").join("watch");
+    let _ = std::fs::remove_dir_all(&ckpt);
+    save_checkpoint(&ckpt, &spec, &workers).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (rx, handle) =
+        spawn_watcher(ckpt.clone(), spec.clone(), Duration::from_millis(20), Arc::clone(&stop));
+    // the initial checkpoint predates the watcher: nothing should arrive
+    assert!(rx.recv_timeout(Duration::from_millis(200)).is_err());
+
+    // a newer save lands → the watcher loads and ships it
+    workers[1].policy.net.flat.data.iter_mut().for_each(|x| *x += 1.0);
+    save_checkpoint(&ckpt, &spec, &workers).unwrap();
+    let nets = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("watcher should deliver the newer checkpoint");
+    assert_eq!(nets.len(), workers.len());
+    assert_eq!(nets[1].flat.data, workers[1].policy.net.flat.data);
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+}

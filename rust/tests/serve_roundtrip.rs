@@ -1,0 +1,181 @@
+//! Checkpoint → serve round trip, on the native backend with synthesized
+//! artifacts: `load_policy_checkpoint` restores exactly the policy nets
+//! the trainer saved, and a `dials serve` batcher in shared-sample mode
+//! (full-joint ticks) produces bit-identical actions, log-probs, and
+//! values to the training-side per-agent `PolicyRuntime` loop over the
+//! same GS episode — the contract that promoting a checkpoint to serving
+//! changes WHERE the policy runs, never WHAT it does.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{
+    load_policy_checkpoint, make_global_sim, save_checkpoint, DialsCoordinator, PolicyRuntime,
+};
+use dials::runtime::{synth, Engine};
+use dials::serve::{shared_rng, Batcher, PolicyStore, ServeOpts, ServeRequest};
+use dials::util::rng::Pcg64;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_serve_rt").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 23).unwrap();
+    dir
+}
+
+fn tiny_cfg(domain: Domain, dir: &std::path::Path) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::Dials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 32,
+        aip_dataset: 20,
+        aip_epochs: 0,
+        eval_every: 32,
+        eval_episodes: 1,
+        horizon: 12,
+        seed: 3,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 1,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+        ls_replicas: 0,
+        save_ckpt_every: 0,
+    }
+}
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_serve_rt_ckpt").join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn load_policy_checkpoint_restores_saved_nets() {
+    let domain = Domain::Traffic;
+    let adir = synth_dir("load", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let mut workers = coord.make_workers(5);
+    for (i, w) in workers.iter_mut().enumerate() {
+        // distinct per-agent params + Adam steps, so order mixups show
+        w.policy.net.flat.data.iter_mut().for_each(|x| *x += 0.125 * (i as f32 + 1.0));
+        w.policy.net.step = 40 + i as u64;
+    }
+    let dir = ckpt_dir("load");
+    save_checkpoint(&dir, &coord.artifacts().spec, &workers).unwrap();
+
+    let nets = load_policy_checkpoint(&dir, &coord.artifacts().spec).unwrap();
+    assert_eq!(nets.len(), workers.len());
+    for (i, (net, w)) in nets.iter().zip(workers.iter()).enumerate() {
+        assert_eq!(net.flat.data, w.policy.net.flat.data, "agent {i} params");
+        assert_eq!(net.step, w.policy.net.step, "agent {i} Adam step");
+        assert!(net.version > 0, "agent {i}: version must mark the row stale for staging");
+    }
+
+    // fingerprint checks inherited from the full loader: a tampered
+    // policy_params line must be refused
+    let meta_path = dir.join("checkpoint.meta");
+    let meta = std::fs::read_to_string(&meta_path).unwrap();
+    let p = coord.artifacts().spec.policy_params;
+    std::fs::write(
+        &meta_path,
+        meta.replace(&format!("policy_params={p}"), &format!("policy_params={}", p + 1)),
+    )
+    .unwrap();
+    let err = load_policy_checkpoint(&dir, &coord.artifacts().spec).unwrap_err();
+    assert!(format!("{err:#}").contains("policy_params"), "{err:#}");
+}
+
+/// The serve batcher in shared-sample mode replays the training-side
+/// consumption pattern exactly: same checkpoint, same observations, same
+/// shared RNG → bit-identical actions/logps/values to N independent
+/// `PolicyRuntime`s sampled in agent order.
+#[test]
+fn served_actions_match_policy_runtime_reference() {
+    let domain = Domain::Warehouse;
+    let adir = synth_dir("equiv", domain);
+    let engine = Engine::cpu().unwrap();
+    let coord = DialsCoordinator::new(&engine, tiny_cfg(domain, &adir)).unwrap();
+    let workers = coord.make_workers(9);
+    let dir = ckpt_dir("equiv");
+    let spec = &coord.artifacts().spec;
+    save_checkpoint(&dir, spec, &workers).unwrap();
+    drop(workers);
+
+    let arts = coord.artifacts();
+    let sample_seed = 11u64;
+    let horizon = 7usize;
+    let steps = 20usize;
+
+    // serve side: one stream per agent, full-joint ticks, shared RNG
+    let store = PolicyStore::load(&dir, spec).unwrap();
+    let n = store.n_agents();
+    let nets = store.nets().to_vec();
+    let opts = ServeOpts {
+        streams: n,
+        max_batch: n,
+        shared_sample: true,
+        seed: sample_seed,
+        ..Default::default()
+    };
+    let mut batcher = Batcher::new(arts, store, &opts).unwrap();
+
+    // reference side: the per-agent B=1 runtimes of the training loop
+    let mut refs: Vec<PolicyRuntime> =
+        nets.into_iter().map(|net| PolicyRuntime::new(spec, net)).collect();
+    let mut ref_rng = shared_rng(sample_seed);
+
+    // one GS drives both sides (actions are asserted equal each step, so
+    // the trajectories cannot fork)
+    let mut gs = make_global_sim(domain, 2);
+    let mut env_rng = Pcg64::new(42, 7);
+    let mut obs = vec![0.0f32; gs.obs_dim()];
+    let mut actions = vec![0usize; n];
+    let mut rewards = vec![0.0f32; n];
+    let mut reqs: Vec<ServeRequest> = Vec::new();
+    for t in 0..steps {
+        let reset = t % horizon == 0;
+        if reset {
+            gs.reset(&mut env_rng);
+            refs.iter_mut().for_each(|r| r.reset_episode());
+        }
+        for a in 0..n {
+            gs.observe(a, &mut obs);
+            reqs.push(ServeRequest {
+                stream: a,
+                seq: t as u64,
+                reset,
+                obs: obs.clone(),
+                enqueued: Instant::now(),
+            });
+        }
+        let resps = batcher.tick(arts, &mut reqs).unwrap().to_vec();
+        assert_eq!(resps.len(), n);
+        for (a, resp) in resps.iter().enumerate() {
+            assert_eq!(resp.stream, a, "tick responses come back in stream order");
+            gs.observe(a, &mut obs);
+            let reference = refs[a].act_into(arts, &obs, &mut ref_rng).unwrap();
+            assert_eq!(resp.action, reference.action, "step {t} agent {a}: action diverged");
+            assert_eq!(
+                resp.logp.to_bits(),
+                reference.logp.to_bits(),
+                "step {t} agent {a}: logp diverged"
+            );
+            assert_eq!(
+                resp.value.to_bits(),
+                reference.value.to_bits(),
+                "step {t} agent {a}: value diverged"
+            );
+            actions[a] = resp.action;
+        }
+        gs.step(&actions, &mut rewards, &mut env_rng);
+    }
+}

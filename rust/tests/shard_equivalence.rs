@@ -261,6 +261,7 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path, gs_shards: usize, threads: us
         async_eval: 0,
         async_collect: 0,
         ls_replicas: 0,
+        save_ckpt_every: 0,
     }
 }
 

@@ -16,6 +16,9 @@
 //!   blocking-vs-async coordinator rows may grow at most 25% above the
 //!   baseline, so the segment+eval and segment+collect overlaps stay
 //!   regression-gated once the baseline records CI-measured values;
+//! * `serve_p50_us` / `serve_p99_us` — the `dials serve` end-to-end
+//!   request latency percentiles of the serve load-gen rows get the same
+//!   25% growth tolerance (latency, so growth is the regression);
 //! * `sim_zero_alloc` — the bench's own hard gate must still be true.
 //!
 //! Rows are matched by their `op` string. A baseline metric of `null`
@@ -149,14 +152,16 @@ fn diff(fresh: &str, baseline: &str) -> Result<Vec<String>> {
                 )),
             }
         }
-        for (metric, bval, fval) in [
-            ("seg_eval_wall_s", b.seg_eval_wall_s, f.seg_eval_wall_s),
-            ("collect_wall_s", b.collect_wall_s, f.collect_wall_s),
+        for (metric, unit, bval, fval) in [
+            ("seg_eval_wall_s", "s", b.seg_eval_wall_s, f.seg_eval_wall_s),
+            ("collect_wall_s", "s", b.collect_wall_s, f.collect_wall_s),
+            ("serve_p50_us", "us", b.serve_p50_us, f.serve_p50_us),
+            ("serve_p99_us", "us", b.serve_p99_us, f.serve_p99_us),
         ] {
             let Some(bv) = bval else { continue };
             match fval {
                 Some(fv) if fv > bv * (1.0 + WALL_GROW_TOL) => regressions.push(format!(
-                    "{op}: {metric} grew {bv:.3}s -> {fv:.3}s (>{:.0}% above baseline)",
+                    "{op}: {metric} grew {bv:.3}{unit} -> {fv:.3}{unit} (>{:.0}% above baseline)",
                     WALL_GROW_TOL * 100.0
                 )),
                 Some(_) => {}
@@ -189,6 +194,8 @@ struct Row {
     ls_steps_per_s: Option<f64>,
     seg_eval_wall_s: Option<f64>,
     collect_wall_s: Option<f64>,
+    serve_p50_us: Option<f64>,
+    serve_p99_us: Option<f64>,
 }
 
 struct Bench {
@@ -221,6 +228,8 @@ impl Bench {
                     ls_steps_per_s: num(r.get("ls_steps_per_s")),
                     seg_eval_wall_s: num(r.get("seg_eval_wall_s")),
                     collect_wall_s: num(r.get("collect_wall_s")),
+                    serve_p50_us: num(r.get("serve_p50_us")),
+                    serve_p99_us: num(r.get("serve_p99_us")),
                 },
             );
         }
@@ -476,6 +485,20 @@ mod tests {
         )
     }
 
+    /// `doc` plus one `dials serve` load-gen row whose percentile columns
+    /// are the given JSON literals (numbers, or "null" for ungated).
+    fn doc_with_serve(p50: &str, p99: &str) -> String {
+        doc(1.0, 0.0, 50_000.0, true).replace(
+            "\n],",
+            &format!(
+                ",\n{{\"op\": \"serve e2e S=8 (N=1)\", \"mean_s\": 0.0001, \
+                 \"min_s\": 0.0001, \"bytes_per_step\": null, \"peak_extra_bytes\": 0, \
+                 \"calls_per_step\": null, \"steps_per_s\": null, \"seg_eval_wall_s\": null, \
+                 \"collect_wall_s\": null, \"serve_p50_us\": {p50}, \"serve_p99_us\": {p99}}}\n],"
+            ),
+        )
+    }
+
     #[test]
     fn identical_docs_pass() {
         let d = doc(1.0, 0.0, 50_000.0, true);
@@ -538,6 +561,39 @@ mod tests {
         assert_eq!(regs.len(), 1, "{regs:?}");
         assert!(regs[0].contains("ls_steps_per_s"), "{regs:?}");
         assert!(regs[0].contains("missing"), "{regs:?}");
+    }
+
+    #[test]
+    fn serve_percentiles_get_25_percent_growth_tolerance() {
+        let base = doc_with_serve("120.0", "400.0");
+        // +20% on both: inside tolerance
+        assert!(diff(&doc_with_serve("144.0", "480.0"), &base).unwrap().is_empty());
+        // improvement: always passes
+        assert!(diff(&doc_with_serve("60.0", "200.0"), &base).unwrap().is_empty());
+        // +50% p50: regression
+        let regs = diff(&doc_with_serve("180.0", "400.0"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("serve_p50_us"), "{regs:?}");
+        // +50% p99: regression
+        let regs = diff(&doc_with_serve("120.0", "600.0"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("serve_p99_us"), "{regs:?}");
+    }
+
+    #[test]
+    fn null_baseline_serve_percentiles_are_not_gated() {
+        let base = doc_with_serve("null", "null");
+        // fresh percentiles present but the baseline never recorded any
+        assert!(diff(&doc_with_serve("9999.0", "9999.0"), &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gated_serve_percentile_going_null_in_fresh_run_fails() {
+        let base = doc_with_serve("120.0", "400.0");
+        let regs = diff(&doc_with_serve("null", "null"), &base).unwrap();
+        assert_eq!(regs.len(), 2, "{regs:?}");
+        assert!(regs[0].contains("serve_p50_us") && regs[0].contains("missing"), "{regs:?}");
+        assert!(regs[1].contains("serve_p99_us") && regs[1].contains("missing"), "{regs:?}");
     }
 
     #[test]
