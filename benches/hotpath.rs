@@ -20,7 +20,12 @@
 //!   per agent (R ∈ {1, 8, 64}, both domains) behind one `[N*R]`-row
 //!   forward and reports `ls_steps_per_s` — trained env steps per second
 //!   across ALL replicas, the headline scaling number of the megabatch
-//!   redesign — plus the two-batched-calls-per-tick invariant.
+//!   redesign — plus the two-batched-calls-per-tick invariant;
+//! * the fused-update section re-runs megabatch training WITH native PPO
+//!   updates (R ∈ {8, 64, 512}) in fused (`ppo_update_b`, one call chain
+//!   for all N agents) vs per-agent fallback mode and reports
+//!   `update_wall_s` — the update share of the segment wall, growth-gated
+//!   by tools/bench_diff — plus heap bytes per update.
 //!
 //! Results are printed, saved as `results/hotpath.csv`, and emitted as
 //! machine-readable `BENCH_hotpath.json` in the working directory (CI
@@ -62,6 +67,10 @@ struct JsonRow {
     /// Megabatch LS training throughput: trained env steps per second
     /// summed across all N*R replicas (NaN = not a megabatch row).
     ls_steps_per_s: f64,
+    /// Seconds spent inside the fill-tick PPO update phases of one
+    /// megabatch training segment (the fused-vs-per-agent comparison;
+    /// NaN = not an update row). Gated by bench_diff.
+    update_wall_s: f64,
     /// End-to-end wall seconds of a training run whose segments and GS
     /// evaluations may overlap — the blocking-vs-async eval comparison
     /// (NaN = not a segment+eval row).
@@ -97,7 +106,7 @@ fn main() -> Result<()> {
         "hot path microbenchmarks",
         &[
             "op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s",
-            "ls steps/s", "seg+eval wall", "collect wall", "serve p50", "serve p99",
+            "ls steps/s", "upd wall", "seg+eval wall", "collect wall", "serve p50", "serve p99",
         ],
     );
     let mut json: Vec<JsonRow> = Vec::new();
@@ -478,6 +487,90 @@ fn main() -> Result<()> {
         }
     }
 
+    // ---- fused [N]-wide PPO updates on the megabatch fill-tick path
+    //
+    // Giant-R training WITH real native updates: rollout 16 fills twice in
+    // a 32-tick segment, so each measured segment pays 2 fill ticks of
+    // `epochs × minibatches` PPO update calls — ONE `ppo_update_b` chain
+    // for all N agents on the fused path vs N per-agent `ppo_update`
+    // chains on the fallback (the same artifact set with `ppo_update_b`
+    // stripped). `upd wall` is the update share of the segment wall
+    // (growth-gated by tools/bench_diff); B/step is heap bytes per PPO
+    // update — the forward ticks are allocation-free in steady state
+    // (tests/megabatch_alloc.rs), so the whole segment's traffic is the
+    // updates', and the fused rows undercutting the per-agent rows is the
+    // saved-bytes-per-update number of the device-chained state redesign.
+    // `ls steps/s` now includes update cost: the R = 512 fused row beating
+    // its per-agent twin is the headline of this PR.
+    #[cfg(not(feature = "xla"))]
+    {
+        use dials::coordinator::LsMegabatch;
+        use dials::runtime::{synth, ArtifactSet};
+
+        let domain = Domain::Traffic;
+        let dir = std::env::temp_dir().join("dials_hotpath_synth").join("fused_update");
+        let _ = std::fs::remove_dir_all(&dir);
+        synth::write_native_artifacts(&dir, domain, 3)?;
+        let horizon = 32usize;
+        let ticks_per_iter = 32usize; // 2 fill ticks at rollout 16
+        let fills_per_iter = 2.0f64;
+        let mut stripped = ArtifactSet::load(&engine, &dir, domain)?;
+        std::sync::Arc::get_mut(&mut stripped).unwrap().ppo_update_b = None;
+        for reps_per_agent in [8usize, 64, 512] {
+            let cfg = ExperimentConfig {
+                domain,
+                mode: SimMode::UntrainedDials,
+                grid_side: 2,
+                horizon,
+                ppo: PpoConfig { rollout_len: 16, minibatch: 16, epochs: 1, ..Default::default() },
+                artifacts_dir: dir.to_string_lossy().into_owned(),
+                ls_replicas: reps_per_agent,
+                ..Default::default()
+            };
+            let n = cfg.n_agents();
+            let coord = DialsCoordinator::new(&engine, cfg.clone())?;
+            let trainer = PpoTrainer::new(cfg.ppo.clone());
+            let pool = WorkerPool::new(1);
+            for (label, arts) in
+                [("fused", coord.artifacts().as_ref()), ("per-agent", stripped.as_ref())]
+            {
+                let mut workers = coord.make_workers(cfg.seed);
+                let mut mega = LsMegabatch::new(arts, &cfg, &workers, reps_per_agent);
+                // warm-up: one full segment incl. a fill tick (device
+                // slots, bank upload, scratch capacity)
+                mega.train_segment(arts, &trainer, &mut workers, &pool, ticks_per_iter, horizon)?;
+                let mut iters = 0u64;
+                let mut update_wall = 0.0f64;
+                let (mean, min) = time_n(3, || {
+                    let (_, upd) = mega
+                        .train_segment(
+                            arts, &trainer, &mut workers, &pool, ticks_per_iter, horizon,
+                        )
+                        .unwrap();
+                    update_wall += upd;
+                    iters += 1;
+                });
+                let upd_per_iter = update_wall / iters as f64;
+                let (bytes_iter, peak) = alloc_per_step(3, || {
+                    mega.train_segment(
+                        arts, &trainer, &mut workers, &pool, ticks_per_iter, horizon,
+                    )
+                    .unwrap();
+                });
+                let ls_sps = (n * reps_per_agent * ticks_per_iter) as f64 / mean;
+                push_row_update(
+                    &mut table, &mut json,
+                    &format!(
+                        "{} megabatch PPO update x{reps_per_agent} ({label}, N={n})",
+                        domain.name()
+                    ),
+                    mean / ticks_per_iter as f64, min / ticks_per_iter as f64,
+                    "per joint tick", bytes_iter / fills_per_iter, peak, ls_sps, upd_per_iter,
+                );
+            }
+        }
+    }
+
     // ---- async GS evaluation overlapped with training segments
     //
     // The tentpole comparison: the same coordinator run (untrained-DIALS,
@@ -526,8 +619,8 @@ fn main() -> Result<()> {
             push_row_full(
                 &mut table, &mut json,
                 &format!("coordinator run, {label} (16 agents)"),
-                mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, mean,
-                f64::NAN, f64::NAN, f64::NAN,
+                mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN,
+                f64::NAN, mean, f64::NAN, f64::NAN, f64::NAN,
             );
         }
         println!(
@@ -712,7 +805,7 @@ fn push_row_steps(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step,
-        steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -731,7 +824,30 @@ fn push_row_ls(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, calls_per_step, f64::NAN,
-        ls_steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        ls_steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+    );
+}
+
+/// `push_row` for the fused-update megabatch training rows: per-tick
+/// timing, heap bytes per PPO update, replica-summed throughput, and the
+/// gated update-wall column (seconds inside the fill-tick update phases
+/// per measured segment).
+#[allow(clippy::too_many_arguments)]
+fn push_row_update(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    bytes_per_update: f64,
+    peak_extra: usize,
+    ls_steps_per_s: f64,
+    update_wall_s: f64,
+) {
+    push_row_full(
+        table, json, op, mean, min, unit, bytes_per_update, peak_extra, f64::NAN, f64::NAN,
+        ls_steps_per_s, update_wall_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -748,7 +864,7 @@ fn push_row_collect(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
-        collect_wall_s, f64::NAN, f64::NAN,
+        f64::NAN, collect_wall_s, f64::NAN, f64::NAN,
     );
 }
 
@@ -768,7 +884,7 @@ fn push_row_serve(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, steps_per_s, f64::NAN,
-        f64::NAN, f64::NAN, serve_p50_us, serve_p99_us,
+        f64::NAN, f64::NAN, f64::NAN, serve_p50_us, serve_p99_us,
     );
 }
 
@@ -787,6 +903,7 @@ fn push_row_full(
     calls_per_step: f64,
     steps_per_s: f64,
     ls_steps_per_s: f64,
+    update_wall_s: f64,
     seg_eval_wall_s: f64,
     collect_wall_s: f64,
     serve_p50_us: f64,
@@ -796,6 +913,7 @@ fn push_row_full(
     let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
     let sps = if steps_per_s.is_nan() { "-".to_string() } else { format!("{steps_per_s:.0}") };
     let lsps = if ls_steps_per_s.is_nan() { "-".to_string() } else { format!("{ls_steps_per_s:.0}") };
+    let uwall = if update_wall_s.is_nan() { "-".to_string() } else { format!("{update_wall_s:.3}s") };
     let wall = if seg_eval_wall_s.is_nan() { "-".to_string() } else { format!("{seg_eval_wall_s:.3}s") };
     let cwall = if collect_wall_s.is_nan() { "-".to_string() } else { format!("{collect_wall_s:.3}s") };
     let p50 = if serve_p50_us.is_nan() { "-".to_string() } else { format!("{serve_p50_us:.1}us") };
@@ -810,6 +928,7 @@ fn push_row_full(
         cps,
         sps,
         lsps,
+        uwall,
         wall,
         cwall,
         p50,
@@ -824,6 +943,7 @@ fn push_row_full(
         calls_per_step,
         steps_per_s,
         ls_steps_per_s,
+        update_wall_s,
         seg_eval_wall_s,
         collect_wall_s,
         serve_p50_us,
@@ -839,13 +959,14 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
         let cps = if r.calls_per_step.is_nan() { "null".to_string() } else { format!("{:.3}", r.calls_per_step) };
         let sps = if r.steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.steps_per_s) };
         let lsps = if r.ls_steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.ls_steps_per_s) };
+        let uwall = if r.update_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.update_wall_s) };
         let wall = if r.seg_eval_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.seg_eval_wall_s) };
         let cwall = if r.collect_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.collect_wall_s) };
         let p50 = if r.serve_p50_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p50_us) };
         let p99 = if r.serve_p99_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p99_us) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}, \"serve_p50_us\": {}, \"serve_p99_us\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, wall, cwall, p50, p99,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"update_wall_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}, \"serve_p50_us\": {}, \"serve_p99_us\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, uwall, wall, cwall, p50, p99,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -10,6 +10,8 @@ Per domain (traffic, warehouse) this emits:
     <dom>_policy_step_b.hlo.txt (flats[N,P],obs[N,D],h[N,H]) -> packed[N,·]
                                 (one call per joint step; N = --batch)
     <dom>_ppo_update.hlo.txt    one PPO minibatch Adam step
+    <dom>_ppo_update_b.hlo.txt  fused [N]-wide PPO minibatch step (one call
+                                updates all N agents' packed states)
     <dom>_aip_forward.hlo.txt   (flat,feat[1,F],h[1,H]) -> packed (B=1)
     <dom>_aip_forward_b.hlo.txt batched joint-step AIP forward
     <dom>_aip_update.hlo.txt    one AIP cross-entropy Adam step
@@ -129,7 +131,9 @@ def write_golden(fn, arg_specs, gold_dir, seed, n_cases=2, label_heads=None,
 
     arg_kinds: optional {arg_index: kind} map with semantic constraints —
       "nonneg" (Adam second moment: |x|), "step" (Adam step counter: 1.0),
-      "tfirst" (packed batch whose element 0 is the step counter).
+      "tfirst" (packed batch whose element 0 is the step counter),
+      "tfirst_rows" (stacked packed batches: element 0 of EVERY row is a
+      step counter).
     """
     os.makedirs(gold_dir, exist_ok=True)
     rng = np.random.default_rng(seed)
@@ -153,6 +157,8 @@ def write_golden(fn, arg_specs, gold_dir, seed, n_cases=2, label_heads=None,
                     a = np.ones(spec.shape, np.float32)
                 elif kind == "tfirst":
                     a.flat[0] = 1.0
+                elif kind == "tfirst_rows":
+                    a[..., 0] = 1.0
             ins.append(a)
         outs = jfn(*ins)
         if not isinstance(outs, (tuple, list)):
@@ -209,6 +215,17 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
         _spec(1 + mb * (ps.obs + ps.hstate + 4)),
     )
     lower_and_write(ppo_update, upd_args, os.path.join(out_dir, f"{d}_ppo_update.hlo.txt"))
+
+    # ---- fused [N]-wide PPO update: one call per minibatch step updates
+    # every agent's packed state against its own [N]-row staging tensor
+    # (the Rust TrainBank / update_fused path).
+    ppo_update_b = M.make_ppo_update_b(ps, cfg.ppo, pol_unravel, pdim, mb)
+    upd_b_args = (
+        _spec(batch, 3 * pdim + 4),
+        _spec(batch, 1 + mb * (ps.obs + ps.hstate + 4)),
+    )
+    lower_and_write(ppo_update_b, upd_b_args,
+                    os.path.join(out_dir, f"{d}_ppo_update_b.hlo.txt"))
 
     # ---- AIP forward (B=1 streaming + batched joint step)
     aip_forward = M.make_aip_forward(asp, aip_unravel)
@@ -270,6 +287,17 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
         # replica rows per agent the `_b` artifacts were lowered for (the
         # megabatch LS-training shape; 1 = plain joint step).
         "replicas": replicas,
+        # PPO hyperparameters baked into the update graphs — the native
+        # backward kernels (runtime::layout) bind these so the default
+        # no-XLA build trains with the same pinned Table-6 values.
+        "clip_eps": cfg.ppo.clip_eps,
+        "vf_coef": cfg.ppo.vf_coef,
+        "ent_coef": cfg.ppo.ent_coef,
+        "max_grad_norm": cfg.ppo.max_grad_norm,
+        "lr": cfg.ppo.adam.lr,
+        "adam_b1": cfg.ppo.adam.b1,
+        "adam_b2": cfg.ppo.adam.b2,
+        "adam_eps": cfg.ppo.adam.eps,
     }
     with open(os.path.join(out_dir, f"{d}.meta"), "w") as f:
         for k, v in meta.items():
@@ -290,6 +318,10 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
         write_golden(
             ppo_update, upd_args, os.path.join(gd, f"{d}_ppo_update"), seed + 3,
             n_cases=1, arg_kinds=adam_kinds,
+        )
+        write_golden(
+            ppo_update_b, upd_b_args, os.path.join(gd, f"{d}_ppo_update_b"), seed + 3,
+            n_cases=1, arg_kinds={0: "nonneg", 1: "tfirst_rows"},
         )
         write_golden(
             aip_update, au_args, os.path.join(gd, f"{d}_aip_update"), seed + 4,

@@ -380,6 +380,27 @@ def make_ppo_update(spec: PolicySpec, cfg: PpoCfg, unravel, pdim: int, mb: int):
     return update
 
 
+def make_ppo_update_b(spec: PolicySpec, cfg: PpoCfg, unravel, pdim: int, mb: int):
+    """Fused [N]-wide PPO minibatch step: vmap of `make_ppo_update`'s row
+    over all N agents' stacked packed states, so every minibatch step of
+    the whole system is ONE executable call (the Rust
+    `runtime::batch::TrainBank` / `PpoTrainer::update_fused` path; the
+    per-agent minibatch loop still lives in Rust). The vmapped program is
+    the B=1 row per agent, but XLA batches the matmuls, so lowered
+    numerics match the per-agent executable to f32-reassociation
+    tolerance rather than bitwise (the native backend's row loop is the
+    bit-identical one, pinned by `tests/native_training.rs`).
+
+    (states[N, 3P+4], batches[N, 1 + MB*(D+H+4)]) -> states'[N, 3P+4]
+    """
+    row = make_ppo_update(spec, cfg, unravel, pdim, mb)
+
+    def update(states, batches):
+        return jax.vmap(row)(states, batches)
+
+    return update
+
+
 def make_aip_update(spec: AipSpec, adam_cfg: AdamCfg, unravel, adim: int,
                     batch_shape, label_shape):
     """Packed-state AIP update (see make_ppo_update):

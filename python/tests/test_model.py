@@ -149,6 +149,53 @@ def test_ppo_update_descends(spec):
     assert np.all(np.isfinite(np.asarray(state)))
 
 
+@pytest.mark.parametrize("spec", [TRAFFIC_POL, WARE_POL], ids=["fnn", "gru"])
+def test_ppo_update_b_matches_per_agent_rows(spec):
+    """The fused [N]-wide update is the per-agent update per row.
+
+    vmap batches the matmuls, so the lowered numerics are allclose
+    (f32-reassociation tolerance), not bitwise — bit-identity is the
+    native backend's contract (rust/tests/native_training.rs).
+    """
+    cfg = M.PpoCfg()
+    flat, unravel = _flat_policy(spec)
+    pdim = flat.shape[0]
+    mb, n = 4, 3
+    upd = jax.jit(M.make_ppo_update(spec, cfg, unravel, pdim, mb))
+    upd_b = jax.jit(M.make_ppo_update_b(spec, cfg, unravel, pdim, mb))
+    rng = np.random.default_rng(3)
+    d, h = spec.obs, spec.hstate
+
+    def mk_batch(t):
+        return jnp.concatenate([
+            jnp.asarray([float(t)]),
+            jnp.asarray(rng.standard_normal(mb * d), jnp.float32),
+            jnp.asarray(0.5 * rng.standard_normal(mb * h), jnp.float32),
+            jnp.asarray(rng.integers(0, spec.act, mb), jnp.float32),
+            jnp.asarray(-np.log(spec.act) + 0.1 * rng.standard_normal(mb), jnp.float32),
+            jnp.asarray(rng.standard_normal(mb), jnp.float32),
+            jnp.asarray(rng.standard_normal(mb), jnp.float32),
+        ])
+
+    states = jnp.stack([
+        jnp.concatenate([
+            _flat_policy(spec, seed=i + 1)[0], jnp.zeros(2 * pdim + 4, jnp.float32),
+        ])
+        for i in range(n)
+    ])
+    seq = states
+    fused = states
+    # Chained minibatch steps: Adam moments and params must track too.
+    for t in range(1, 4):
+        batches = jnp.stack([mk_batch(t) for _ in range(n)])
+        seq = jnp.stack([upd(seq[i], batches[i]) for i in range(n)])
+        fused = upd_b(fused, batches)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(seq), rtol=1e-4, atol=1e-6)
+    assert np.all(np.isfinite(np.asarray(fused)))
+    # The update did move the params.
+    assert not np.array_equal(np.asarray(fused[:, :pdim]), np.asarray(states[:, :pdim]))
+
+
 @pytest.mark.parametrize("spec,seq", [(TRAFFIC_AIP, 1), (WARE_AIP, 5)], ids=["fnn", "gru"])
 def test_aip_update_descends(spec, seq):
     flat, unravel = _flat_aip(spec)

@@ -315,6 +315,9 @@ impl ExperimentConfig {
         cfg.async_collect = args.get_usize("async-collect", cfg.async_collect)?;
         cfg.ls_replicas = args.get_usize("ls-replicas", cfg.ls_replicas)?;
         cfg.save_ckpt_every = args.get_usize("save-ckpt-every", cfg.save_ckpt_every)?;
+        cfg.ppo.rollout_len = args.get_usize("rollout", cfg.ppo.rollout_len)?;
+        cfg.ppo.minibatch = args.get_usize("minibatch", cfg.ppo.minibatch)?;
+        cfg.ppo.epochs = args.get_usize("epochs", cfg.ppo.epochs)?;
         if let Some(dir) = args.get("artifacts") {
             cfg.artifacts_dir = dir.to_string();
         }
@@ -375,6 +378,24 @@ mod tests {
         assert_eq!(cfg.mode, SimMode::GlobalSim);
         assert_eq!(cfg.n_agents(), 9);
         assert_eq!(cfg.seed, 9);
+        // PPO hypers are CLI-overridable too (the native-training CI leg
+        // shrinks rollout/minibatch to fit a 64-step smoke run).
+        let ppo_args = crate::util::cli::Args::parse(
+            ["--rollout", "16", "--minibatch", "8", "--epochs", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let ppo_cfg = ExperimentConfig::from_cli(&ppo_args).unwrap();
+        assert_eq!(ppo_cfg.ppo.rollout_len, 16);
+        assert_eq!(ppo_cfg.ppo.minibatch, 8);
+        assert_eq!(ppo_cfg.ppo.epochs, 3);
+        // a rollout that the minibatch does not divide is rejected at parse
+        let bad_ppo = crate::util::cli::Args::parse(
+            ["--rollout", "100", "--minibatch", "32"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_cli(&bad_ppo).is_err());
         // invalid override rejected
         let bad = crate::util::cli::Args::parse(
             ["--grid-side", "0"].iter().map(|s| s.to_string()),

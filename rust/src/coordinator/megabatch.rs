@@ -29,8 +29,15 @@
 //!    bank-row zeroing defers to the next tick's serial phase).
 //! 7. on buffer-fill ticks only: one extra batched peek forward
 //!    (`advance = false`) bootstraps truncated episodes — the megabatch
-//!    analogue of the reference path's `peek_value` B=1 call — then each
-//!    agent consumes its R buffers as ONE `PpoTrainer::update_megabatch`.
+//!    analogue of the reference path's `peek_value` B=1 call — then ALL
+//!    agents' PPO updates run as one fused [`PpoTrainer::update_fused`]
+//!    chain against the persistent [`TrainBank`]: exactly
+//!    `epochs × minibatches` `ppo_update_b` calls per fill tick,
+//!    independent of N and R. When the artifact set lacks `ppo_update_b`
+//!    (or was lowered for a different shape) the driver falls back to the
+//!    per-agent reference scatter, each agent one
+//!    `PpoTrainer::update_megabatch` — bit-identical by the fused path's
+//!    RNG contract, just 2·N·epochs·minibatches more run calls.
 //!
 //! Determinism contract (`tests/megabatch_equivalence.rs`):
 //! * Replica 0 IS the worker: it steps the worker's own `ls`, `buffer`,
@@ -58,9 +65,10 @@ use crate::config::ExperimentConfig;
 use crate::exec::WorkerPool;
 use crate::influence::encode_alsh;
 use crate::nn::sample_categorical_buf;
-use crate::ppo::{PpoTrainer, RolloutBuffer};
-use crate::runtime::{sample_u, AipBank, ArtifactSet, PolicyBank};
+use crate::ppo::{FusedAgent, PpoTrainer, RolloutBuffer, UpdateMetrics};
+use crate::runtime::{sample_u, AipBank, ArtifactSet, PolicyBank, TrainBank};
 use crate::sim::LocalSim;
+use crate::util::metrics::AgentUpdateStats;
 use crate::util::rng::Pcg64;
 
 use super::{make_local_sim, AgentWorker};
@@ -105,6 +113,27 @@ struct Pair<'a> {
     s: &'a mut ReplicaSet,
 }
 
+/// Running per-agent sums of the PPO update diagnostics (f64 so long runs
+/// don't lose precision folding f32 losses).
+#[derive(Clone, Default)]
+struct UpdateAcc {
+    updates: u64,
+    total: f64,
+    pg: f64,
+    vf: f64,
+    entropy: f64,
+}
+
+impl UpdateAcc {
+    fn add(&mut self, m: &UpdateMetrics) {
+        self.updates += 1;
+        self.total += m.total as f64;
+        self.pg += m.pg as f64;
+        self.vf += m.vf as f64;
+        self.entropy += m.entropy as f64;
+    }
+}
+
 /// The megabatch LS training driver: shared `[N*R]`-row policy/AIP banks
 /// plus per-agent replica state, persistent across segments.
 pub struct LsMegabatch {
@@ -119,6 +148,13 @@ pub struct LsMegabatch {
     h_dim: usize,
     policy: PolicyBank,
     aip: AipBank,
+    /// Device-side stack of all N agents' packed PPO states for the fused
+    /// update path; `None` = the artifact set cannot serve `ppo_update_b`
+    /// at this (N, R), so fill ticks fall back to the per-agent scatter.
+    train_bank: Option<TrainBank>,
+    /// Per-agent running sums of the PPO `UpdateMetrics` (both paths), so
+    /// the run summary stays per-agent attributable under fused updates.
+    stats: Vec<UpdateAcc>,
     sets: Vec<ReplicaSet>,
     /// Joint blocks, agent-major: row `i*R + r` is agent i's replica r.
     obs_block: Vec<f32>,
@@ -184,6 +220,17 @@ impl LsMegabatch {
             h_dim: spec.policy_hstate,
             policy: PolicyBank::with_replicas(spec, n, reps),
             aip: AipBank::with_replicas(spec, n, reps),
+            train_bank: if arts.supports_fused_update(n, reps) {
+                Some(TrainBank::new(n, spec.policy_params))
+            } else {
+                eprintln!(
+                    "[dials] fused PPO updates unavailable for this artifact set \
+                     (missing `ppo_update_b` or lowered shape != {n}x{reps}); \
+                     falling back to per-agent updates — re-run `make artifacts`"
+                );
+                None
+            },
+            stats: vec![UpdateAcc::default(); n],
             sets,
             obs_block: vec![0.0; n * reps * spec.obs_dim],
             feats_block: vec![0.0; n * reps * spec.aip_feat],
@@ -197,6 +244,33 @@ impl LsMegabatch {
         self.reps
     }
 
+    /// Whether fill ticks run the fused `ppo_update_b` path (vs the
+    /// per-agent reference scatter).
+    pub fn fused(&self) -> bool {
+        self.train_bank.is_some()
+    }
+
+    /// Per-agent aggregates of every PPO update this driver has applied,
+    /// fused or fallback — the run-summary rows that keep loss curves
+    /// per-agent attributable when updates batch across agents.
+    pub fn update_stats(&self) -> Vec<AgentUpdateStats> {
+        self.stats
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                let k = a.updates.max(1) as f64;
+                AgentUpdateStats {
+                    agent: i,
+                    updates: a.updates,
+                    mean_total: (a.total / k) as f32,
+                    mean_pg: (a.pg / k) as f32,
+                    mean_vf: (a.vf / k) as f32,
+                    mean_entropy: (a.entropy / k) as f32,
+                }
+            })
+            .collect()
+    }
+
     /// Replica `r`'s rollout buffer for `agent`, `1 ≤ r < R` (replica 0's
     /// is the worker's own `buffer`) — observability for the determinism
     /// tests: raising R must not reorder existing replicas' trajectories.
@@ -205,9 +279,12 @@ impl LsMegabatch {
     }
 
     /// Train all agents' IALS replicas for `steps` joint ticks (one
-    /// megabatch segment); returns the phase wall seconds. The segment is
-    /// one globally-synchronised phase, so its wall time IS its critical
-    /// path (unlike the embarrassingly-parallel reference segments).
+    /// megabatch segment); returns `(total, update)` phase wall seconds —
+    /// `update` is the part spent inside the fill-tick PPO update phases
+    /// (fused or fallback), so `total - update` is the forward/scatter
+    /// side of the fill-tick timer split. The segment is one
+    /// globally-synchronised phase, so its wall time IS its critical path
+    /// (unlike the embarrassingly-parallel reference segments).
     pub fn train_segment(
         &mut self,
         arts: &ArtifactSet,
@@ -216,7 +293,7 @@ impl LsMegabatch {
         pool: &WorkerPool,
         steps: usize,
         horizon: usize,
-    ) -> Result<f64> {
+    ) -> Result<(f64, f64)> {
         ensure!(
             workers.len() == self.n,
             "megabatch built for {} agents, got {}",
@@ -224,6 +301,7 @@ impl LsMegabatch {
             workers.len()
         );
         let t0 = Instant::now();
+        let mut update_wall = 0.0f64;
         // Inline serial loops on a 1-thread pool: `pool.run` allocates its
         // per-task timing vector even on the serial fast path, which would
         // break the zero-alloc steady-state contract.
@@ -342,17 +420,57 @@ impl LsMegabatch {
                         }
                     }
                 }
-                if serial {
+                let t_up = Instant::now();
+                if let Some(bank) = self.train_bank.as_mut() {
+                    // Fused path: ONE update chain for all N agents —
+                    // exactly epochs × minibatches `ppo_update_b` calls
+                    // per fill tick, independent of N and R.
+                    let mut agents: Vec<FusedAgent<'_>> = workers
+                        .iter_mut()
+                        .zip(self.sets.iter())
+                        .map(|(w, s)| {
+                            let mut bufs: Vec<&RolloutBuffer> =
+                                Vec::with_capacity(1 + s.extra_bufs.len());
+                            bufs.push(&w.buffer);
+                            bufs.extend(s.extra_bufs.iter());
+                            FusedAgent {
+                                net: &mut w.policy.net,
+                                bufs,
+                                last_values: &s.last_values,
+                                rng: &mut w.rng,
+                            }
+                        })
+                        .collect();
+                    let metrics = trainer.update_fused(arts, bank, &mut agents)?;
+                    drop(agents);
+                    for (acc, m) in self.stats.iter_mut().zip(&metrics) {
+                        acc.add(m);
+                    }
                     for (w, s) in workers.iter_mut().zip(self.sets.iter_mut()) {
-                        update_agent(arts, trainer, w, s)?;
+                        w.buffer.clear();
+                        for b in &mut s.extra_bufs {
+                            b.clear();
+                        }
+                    }
+                } else if serial {
+                    for (k, (w, s)) in
+                        workers.iter_mut().zip(self.sets.iter_mut()).enumerate()
+                    {
+                        let m = update_agent(arts, trainer, w, s)?;
+                        self.stats[k].add(&m);
                     }
                 } else {
                     let mut ps = pairs(workers, &mut self.sets);
-                    pool.run(&mut ps, |_i, p| update_agent(arts, trainer, p.w, p.s))?;
+                    let report =
+                        pool.run_map(&mut ps, |_i, p| update_agent(arts, trainer, p.w, p.s))?;
+                    for (acc, m) in self.stats.iter_mut().zip(&report.outputs) {
+                        acc.add(m);
+                    }
                 }
+                update_wall += t_up.elapsed().as_secs_f64();
             }
         }
-        Ok(t0.elapsed().as_secs_f64())
+        Ok((t0.elapsed().as_secs_f64(), update_wall))
     }
 }
 
@@ -482,22 +600,25 @@ fn step_and_push(
     }
 }
 
-/// Tick phase 4 for one agent: consume the R full rollout buffers as one
-/// PPO megabatch (minibatches draw across replicas; the update shuffles
-/// from the worker's own stream, exactly like the reference path).
+/// Tick phase 4 for one agent — the per-agent REFERENCE update (the fused
+/// path's bit-identity anchor and its fallback when the artifact set has
+/// no `ppo_update_b`): consume the R full rollout buffers as one PPO
+/// megabatch (minibatches draw across replicas; the update shuffles from
+/// the worker's own stream, exactly like the reference path).
 fn update_agent(
     arts: &ArtifactSet,
     trainer: &PpoTrainer,
     w: &mut AgentWorker,
     s: &mut ReplicaSet,
-) -> Result<()> {
+) -> Result<UpdateMetrics> {
     let mut bufs: Vec<&RolloutBuffer> = Vec::with_capacity(1 + s.extra_bufs.len());
     bufs.push(&w.buffer);
     bufs.extend(s.extra_bufs.iter());
-    trainer.update_megabatch(arts, &mut w.policy.net, &bufs, &s.last_values, &mut w.rng)?;
+    let m =
+        trainer.update_megabatch(arts, &mut w.policy.net, &bufs, &s.last_values, &mut w.rng)?;
     w.buffer.clear();
     for b in &mut s.extra_bufs {
         b.clear();
     }
-    Ok(())
+    Ok(m)
 }

@@ -514,10 +514,11 @@ impl DialsCoordinator {
                 // scattered over the pool inside), so its wall time IS the
                 // critical path — no per-agent slot packing applies.
                 Some(m) => {
-                    let wall = m.train_segment(
+                    let (wall, upd) = m.train_segment(
                         &self.arts, &trainer, &mut workers, &pool, seg_len, horizon,
                     )?;
                     timers.add("agent_train", wall);
+                    timers.add("ls_update", upd);
                     train_cp_total += wall;
                 }
                 None => {
@@ -597,6 +598,15 @@ impl DialsCoordinator {
         log.final_return = log.eval_curve.last().map(|p| p.value).unwrap_or(0.0);
         log.dataset_fingerprints = workers.iter().map(|w| w.dataset.fingerprint()).collect();
         log.agent_train_seconds = train_cp_total;
+        // Megabatch fill-tick split + per-agent update aggregates (the
+        // reference path's updates run inside its per-agent tasks, so the
+        // split only exists in megabatch mode).
+        if let Some(m) = mega.as_ref() {
+            log.ls_update_seconds = timers.get("ls_update");
+            log.ls_forward_seconds =
+                (timers.get("agent_train") - log.ls_update_seconds).max(0.0);
+            log.agent_update_stats = m.update_stats();
+        }
         // On-path influence cost: the snapshot staging plus the inline
         // loop (blocking) or the residual drain stall (async), plus the
         // AIP retrain critical path. The overlapped loop seconds are

@@ -35,7 +35,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "config", "domain", "mode", "grid-side", "total-steps", "aip-freq", "aip-dataset",
     "aip-epochs", "eval-every", "eval-episodes", "horizon", "seed", "threads", "artifacts",
     "gs-batch", "gs-shards", "async-eval", "async-collect", "ls-replicas", "save-ckpt-every",
-    "save-ckpt", "load-ckpt", "out",
+    "save-ckpt", "load-ckpt", "out", "rollout", "minibatch", "epochs",
 ];
 const EVAL_FLAGS: &[&str] = &["domain", "grid-side", "episodes", "horizon", "seed"];
 const INSPECT_FLAGS: &[&str] = &["domain", "artifacts"];
@@ -139,6 +139,21 @@ fn cmd_train(args: &Args) -> Result<()> {
             ls_steps,
             log.agent_train_seconds
         );
+    }
+    // Megabatch fill-tick split: forward/scatter ticks vs PPO update
+    // phases, plus the per-agent update aggregates that keep loss curves
+    // attributable when updates batch across agents.
+    if !log.agent_update_stats.is_empty() {
+        eprintln!(
+            "[dials] ls fill-tick split: forward={:.2}s update={:.2}s",
+            log.ls_forward_seconds, log.ls_update_seconds
+        );
+        for s in &log.agent_update_stats {
+            eprintln!(
+                "[dials]   agent {:>3}: updates={} loss={:.4} pg={:.4} vf={:.4} ent={:.4}",
+                s.agent, s.updates, s.mean_total, s.mean_pg, s.mean_vf, s.mean_entropy
+            );
+        }
     }
     if let Some(out) = args.get("out") {
         if let Some(parent) = Path::new(out).parent() {
@@ -288,6 +303,10 @@ train:
                           replicas per agent behind one [N*R]-row forward
                           (0 = per-agent reference path; R=1 is
                           bit-identical to it)
+  --rollout N             PPO rollout length   --minibatch N   --epochs N
+                          (PPO update hypers; the minibatch must divide
+                          the rollout, and epochs > 0 runs native fused
+                          updates on the no-XLA build)
   --save-ckpt DIR          save nets at end     --load-ckpt DIR resume
   --save-ckpt-every N     ALSO checkpoint every N steps (needs --save-ckpt;
                           a running `dials serve --watch` hot-reloads each)

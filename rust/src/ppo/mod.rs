@@ -6,7 +6,7 @@ mod buffer;
 mod trainer;
 
 pub use buffer::RolloutBuffer;
-pub use trainer::{PpoTrainer, UpdateMetrics};
+pub use trainer::{FusedAgent, PpoTrainer, UpdateMetrics};
 
 /// Generalised Advantage Estimation over a (possibly episode-spanning)
 /// rollout. `dones[t]` marks that step `t` TERMINATED its episode (the

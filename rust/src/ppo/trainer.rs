@@ -2,15 +2,25 @@
 //! into the `ppo_update` artifact (clipped surrogate + Adam in-graph).
 //!
 //! Hot path (§Perf): params / Adam moments are uploaded to the device once
-//! per update and the (params', m', v') outputs chain straight into the
-//! next minibatch via `run_b`; only the small staging tensors and the loss
-//! metrics cross the host boundary per minibatch.
+//! per update, the packed state chains device-resident across the WHOLE
+//! update via `run_inout` (in place on the native backend; handle-swap on
+//! XLA), and the minibatch staging tensor re-stages into one reused device
+//! slot — so the steady-state per-minibatch loop performs no heap
+//! allocation on the native backend and downloads the state exactly once
+//! at the end.
+//!
+//! [`PpoTrainer::update_fused`] is the [N]-wide variant: all N agents'
+//! states stack in a [`TrainBank`] and every minibatch step is ONE
+//! `ppo_update_b` call, bit-identical to N sequential
+//! [`PpoTrainer::update_megabatch`] calls (per-agent shuffles are
+//! pre-drawn from each agent's RNG in agent order — engine calls consume
+//! no RNG, so the streams match the sequential path exactly).
 
 use anyhow::{ensure, Result};
 
 use crate::config::PpoConfig;
 use crate::nn::NetState;
-use crate::runtime::ArtifactSet;
+use crate::runtime::{ArtifactSet, DeviceTensor, TrainBank};
 use crate::util::npk::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -121,6 +131,10 @@ impl PpoTrainer {
         let o_act = o_h + mb * hd;
         let (o_logp, o_adv, o_ret) = (o_act + mb, o_act + 2 * mb, o_act + 3 * mb);
 
+        // One reused device slot for the minibatch staging tensor and an
+        // in-place state chain (`run_inout`): the steady-state minibatch
+        // loop moves zero fresh device tensors on the native backend.
+        let mut d_batch: Option<DeviceTensor> = None;
         for _epoch in 0..self.cfg.epochs {
             rng.shuffle(&mut indices);
             for chunk in indices.chunks_exact(mb) {
@@ -137,9 +151,9 @@ impl PpoTrainer {
                 }
                 net.step += 1;
                 t_batch.data[0] = net.step as f32;
-                let d_batch = engine.upload(&t_batch)?;
-                let mut outs = arts.ppo_update.run_b(&[&d_state, &d_batch])?;
-                d_state = outs.pop().unwrap();
+                engine.upload_to(&t_batch, &mut d_batch)?;
+                arts.ppo_update
+                    .run_inout(&mut d_state, d_batch.as_ref().expect("staged"))?;
                 metrics.minibatches += 1;
             }
         }
@@ -157,4 +171,179 @@ impl PpoTrainer {
         metrics.entropy = out[3 * p + 3];
         Ok(metrics)
     }
+
+    /// Run the full PPO update for ALL N agents as one fused chain:
+    /// exactly `epochs × minibatches` `ppo_update_b` calls, independent of
+    /// N and R, each consuming an `[N, batch_len]` staging tensor against
+    /// the bank's `[N, 3P+4]` state stack.
+    ///
+    /// Bit-identical to calling [`PpoTrainer::update_megabatch`] once per
+    /// agent in agent order: the per-agent arithmetic is row-independent
+    /// (the batched artifact runs the identical per-agent update row), and
+    /// each agent's `epochs` shuffles are pre-drawn from its own RNG
+    /// consecutively — the same draws, in the same order, the sequential
+    /// path makes, because engine calls consume no RNG. Returns one
+    /// [`UpdateMetrics`] per agent (tail = that agent's LAST minibatch),
+    /// keeping curves per-agent attributable.
+    pub fn update_fused(
+        &self,
+        arts: &ArtifactSet,
+        bank: &mut TrainBank,
+        agents: &mut [FusedAgent<'_>],
+    ) -> Result<Vec<UpdateMetrics>> {
+        ensure!(!agents.is_empty(), "no agents to update");
+        let n_agents = agents.len();
+        ensure!(
+            bank.n() == n_agents,
+            "train bank holds {} rows but {} agents were passed",
+            bank.n(), n_agents
+        );
+        let mb = self.cfg.minibatch;
+        let reps = agents[0].bufs.len();
+        ensure!(reps > 0, "agent 0 has no rollout buffers");
+        let n = agents[0].bufs[0].len();
+        let (od, hd) = (agents[0].bufs[0].obs_dim, agents[0].bufs[0].h_dim);
+        ensure!(n > 0, "empty rollout");
+        ensure!(n % mb == 0, "rollout length {n} not a multiple of minibatch {mb}");
+        for (i, a) in agents.iter().enumerate() {
+            ensure!(
+                a.bufs.len() == reps && a.last_values.len() == reps,
+                "agent {i}: {} buffers / {} bootstraps, want R = {reps} of each",
+                a.bufs.len(), a.last_values.len()
+            );
+            for b in &a.bufs {
+                ensure!(
+                    b.len() == n && b.obs_dim == od && b.h_dim == hd,
+                    "agent {i}: rollout shape mismatch ({} vs {n} rows)",
+                    b.len()
+                );
+            }
+        }
+        ensure!(
+            arts.supports_fused_update(n_agents, reps),
+            "artifact set does not support the fused update at N={n_agents}, R={reps} — \
+             re-run `make artifacts` (or use the per-agent update path)"
+        );
+        let total = reps * n;
+        let p = agents[0].net.flat.len();
+
+        // Per-agent GAE + normalisation + pre-drawn epoch shuffles, in
+        // agent order (the RNG-stream contract — see the method docs).
+        struct Plan {
+            adv: Vec<f32>,
+            ret: Vec<f32>,
+            /// One shuffled index vector per epoch (cumulative shuffles of
+            /// the same vector, exactly like the sequential loop).
+            orders: Vec<Vec<usize>>,
+        }
+        let mut plans = Vec::with_capacity(n_agents);
+        for a in agents.iter_mut() {
+            let mut adv = Vec::with_capacity(total);
+            let mut ret = Vec::with_capacity(total);
+            for (buf, &lv) in a.bufs.iter().zip(a.last_values) {
+                let (av, rv) = gae(
+                    &buf.rewards[..n],
+                    &buf.values[..n],
+                    &buf.dones[..n],
+                    lv,
+                    self.cfg.gamma,
+                    self.cfg.gae_lambda,
+                );
+                adv.extend_from_slice(&av);
+                ret.extend_from_slice(&rv);
+            }
+            normalise(&mut adv);
+            let mut indices: Vec<usize> = (0..total).collect();
+            let mut orders = Vec::with_capacity(self.cfg.epochs);
+            for _ in 0..self.cfg.epochs {
+                a.rng.shuffle(&mut indices);
+                orders.push(indices.clone());
+            }
+            plans.push(Plan { adv, ret, orders });
+        }
+
+        // Stack all agents' states device-side (no-op re-stages + no
+        // re-upload in the steady state — see TrainBank).
+        for (i, a) in agents.iter().enumerate() {
+            bank.stage(i, a.net)?;
+        }
+        // Materialise the device stack even at `epochs = 0`, where the
+        // update degenerates to upload → download → absorb exactly like
+        // the sequential path (the loop below never runs).
+        bank.state(&arts.engine)?;
+
+        let batch_len = 1 + mb * (od + hd + 4);
+        let mut t_batch = Tensor::zeros(&[n_agents, batch_len]);
+        let mut d_batch: Option<DeviceTensor> = None;
+        let n_minibatches = total / mb;
+        let engine = &arts.engine;
+        let exec = arts.ppo_update_batched()?;
+        for e in 0..self.cfg.epochs {
+            for k in 0..n_minibatches {
+                for (i, a) in agents.iter_mut().enumerate() {
+                    let chunk = &plans[i].orders[e][k * mb..(k + 1) * mb];
+                    let base = i * batch_len;
+                    let (o_obs, o_h) = (base + 1, base + 1 + mb * od);
+                    let o_act = o_h + mb * hd;
+                    let (o_logp, o_adv, o_ret) =
+                        (o_act + mb, o_act + 2 * mb, o_act + 3 * mb);
+                    for (row, &ix) in chunk.iter().enumerate() {
+                        let (buf, t) = (&a.bufs[ix / n], ix % n);
+                        t_batch.data[o_obs + row * od..o_obs + (row + 1) * od]
+                            .copy_from_slice(buf.obs_row(t));
+                        t_batch.data[o_h + row * hd..o_h + (row + 1) * hd]
+                            .copy_from_slice(buf.hstate_row(t));
+                        t_batch.data[o_act + row] = buf.actions[t];
+                        t_batch.data[o_logp + row] = buf.logps[t];
+                        t_batch.data[o_adv + row] = plans[i].adv[ix];
+                        t_batch.data[o_ret + row] = plans[i].ret[ix];
+                    }
+                    a.net.step += 1;
+                    t_batch.data[base] = a.net.step as f32;
+                }
+                engine.upload_to(&t_batch, &mut d_batch)?;
+                let d_state = bank.state(engine)?;
+                exec.run_inout(d_state, d_batch.as_ref().expect("staged"))?;
+            }
+        }
+
+        // ONE download for all agents, then per-agent absorption. The
+        // device stack keeps the post-update state, so mark_absorbed makes
+        // the next fill tick's stage round a no-op.
+        bank.download_into_staged()?;
+        let mut out = Vec::with_capacity(n_agents);
+        for (i, a) in agents.iter_mut().enumerate() {
+            let row = bank.staged_row(i);
+            ensure!(
+                row.len() == 3 * p + 4,
+                "agent {i}: bank row width {} != 3P+4 = {}",
+                row.len(), 3 * p + 4
+            );
+            let flat = Tensor::new(vec![p], row[..p].to_vec());
+            let m = Tensor::new(vec![p], row[p..2 * p].to_vec());
+            let v = Tensor::new(vec![p], row[2 * p..3 * p].to_vec());
+            let metrics = UpdateMetrics {
+                total: row[3 * p],
+                pg: row[3 * p + 1],
+                vf: row[3 * p + 2],
+                entropy: row[3 * p + 3],
+                minibatches: self.cfg.epochs * n_minibatches,
+            };
+            a.net.absorb(flat, m, v);
+            bank.mark_absorbed(i, a.net.version);
+            out.push(metrics);
+        }
+        Ok(out)
+    }
+}
+
+/// One agent's inputs to [`PpoTrainer::update_fused`]: its mutable net
+/// (step counter + absorbed result), its R replica rollouts with their
+/// bootstrap values, and its own RNG (shuffle stream — consumed exactly
+/// like the sequential per-agent path).
+pub struct FusedAgent<'a> {
+    pub net: &'a mut NetState,
+    pub bufs: Vec<&'a RolloutBuffer>,
+    pub last_values: &'a [f32],
+    pub rng: &'a mut Pcg64,
 }

@@ -11,7 +11,7 @@ use crate::config::Domain;
 use crate::sim;
 use crate::util::npk::{read_npk, Tensor};
 
-use super::layout::{AipDims, PolicyDims};
+use super::layout::{AipDims, PolicyDims, PpoHypers};
 use super::{Engine, Exec};
 
 /// Parsed `<domain>.meta` — the interface contract emitted by aot.py.
@@ -48,6 +48,12 @@ pub struct NetSpec {
     /// (pre-megabatch artifacts) and irrelevant when `batch_n = 0`
     /// (shape-polymorphic native artifacts accept any row multiple).
     pub batch_replicas: usize,
+    /// PPO + Adam hyperparameters of the update graph (`clip_eps`, `lr`,
+    /// … keys in `.meta`). The XLA artifacts bake these in at lowering
+    /// time; the native backward kernels take them at bind time.
+    /// `PpoHypers::default()` (the paper Table 6 values) fills in for
+    /// artifact sets that predate the keys.
+    pub ppo: PpoHypers,
 }
 
 impl NetSpec {
@@ -73,7 +79,24 @@ impl NetSpec {
         let opt = |k: &str| -> usize {
             kv.get(k).and_then(|v| v.parse::<usize>().ok()).unwrap_or(0)
         };
+        // Float hyperparameter keys (fused-update work); the pinned
+        // model.py defaults stand in for older .meta files.
+        let optf = |k: &str, default: f32| -> f32 {
+            kv.get(k).and_then(|v| v.parse::<f32>().ok()).unwrap_or(default)
+        };
+        let dh = PpoHypers::default();
+        let ppo = PpoHypers {
+            clip_eps: optf("clip_eps", dh.clip_eps),
+            vf_coef: optf("vf_coef", dh.vf_coef),
+            ent_coef: optf("ent_coef", dh.ent_coef),
+            max_grad_norm: optf("max_grad_norm", dh.max_grad_norm),
+            lr: optf("lr", dh.lr),
+            adam_b1: optf("adam_b1", dh.adam_b1),
+            adam_b2: optf("adam_b2", dh.adam_b2),
+            adam_eps: optf("adam_eps", dh.adam_eps),
+        };
         Ok(NetSpec {
+            ppo,
             policy_h1: opt("policy_h1"),
             policy_h2: opt("policy_h2"),
             aip_hid: opt("aip_hid"),
@@ -176,6 +199,7 @@ impl NetSpec {
             aip_hid: 0,
             batch_n: 0,
             batch_replicas: 1,
+            ppo: PpoHypers::default(),
         }
     }
 
@@ -223,6 +247,11 @@ pub struct ArtifactSet {
     /// Absent from artifact sets emitted before the batch-first redesign.
     pub policy_step_b: Option<Exec>,
     pub aip_forward_b: Option<Exec>,
+    /// Fused all-agents PPO update (`[N, 3P+4]` state stack, one call per
+    /// minibatch step). Absent from artifact sets emitted before the
+    /// fused-update work; the coordinator then falls back to N per-agent
+    /// `ppo_update` chains.
+    pub ppo_update_b: Option<Exec>,
     pub policy_init: Tensor,
     pub aip_init: Tensor,
     pub dir: PathBuf,
@@ -260,6 +289,7 @@ impl ArtifactSet {
             aip_eval: load("aip_eval")?,
             policy_step_b: load_opt("policy_step_b")?,
             aip_forward_b: load_opt("aip_forward_b")?,
+            ppo_update_b: load_opt("ppo_update_b")?,
             policy_init: read_npk(&dir.join(format!("{d}_policy_init.npk")))?,
             aip_init: read_npk(&dir.join(format!("{d}_aip_init.npk")))?,
             spec,
@@ -272,6 +302,13 @@ impl ArtifactSet {
             set.policy_step.bind_policy(pd, set.spec.policy_params)?;
             if let Some(e) = set.policy_step_b.as_mut() {
                 e.bind_policy(pd, set.spec.policy_params)?;
+            }
+            // The PPO update runs natively too (backward row kernels +
+            // in-graph Adam); one binding covers the B=1 chain and the
+            // fused [N]-wide variant.
+            set.ppo_update.bind_ppo_update(pd, set.spec.ppo, set.spec.policy_params)?;
+            if let Some(e) = set.ppo_update_b.as_mut() {
+                e.bind_ppo_update(pd, set.spec.ppo, set.spec.policy_params)?;
             }
         }
         if let Some(ad) = set.spec.aip_dims() {
@@ -320,6 +357,32 @@ impl ArtifactSet {
             && reps >= 1
             && (self.spec.batch_n == 0
                 || (self.spec.batch_n == n && self.spec.batch_replicas == reps))
+    }
+
+    /// Whether the fused all-agents PPO update can run for `n` agents at
+    /// replica count `reps`: `ppo_update_b` is present and, when it was
+    /// lowered for fixed shapes (`batch` ≠ 0 in `.meta` — the XLA vmap),
+    /// both N and R match what was baked in (R fixes the per-agent
+    /// minibatch row count and thus the lowered batch length). The
+    /// shape-polymorphic native binding (`batch = 0`) accepts any N and
+    /// any minibatch length. The coordinator falls back to the per-agent
+    /// `ppo_update` reference chains when this is false.
+    pub fn supports_fused_update(&self, n: usize, reps: usize) -> bool {
+        self.ppo_update_b.is_some()
+            && reps >= 1
+            && (self.spec.batch_n == 0
+                || (self.spec.batch_n == n && self.spec.batch_replicas == reps))
+    }
+
+    /// The fused PPO update executable; required by the fused train path.
+    pub fn ppo_update_batched(&self) -> Result<&Exec> {
+        self.ppo_update_b.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact set in {} has no ppo_update_b — re-run `make artifacts` \
+                 (or fall back to per-agent updates)",
+                self.dir.display()
+            )
+        })
     }
 
     /// The batched policy executable; required by the batched bank path.
@@ -372,6 +435,19 @@ mod tests {
         let pd = spec.policy_dims().unwrap();
         assert_eq!(pd.param_count(), 6147);
         assert_eq!(spec.aip_dims().unwrap().param_count(), 6340);
+    }
+
+    #[test]
+    fn ppo_hyper_keys_parse_with_pinned_defaults() {
+        // absent keys → the pinned model.py defaults
+        let spec = NetSpec::parse(META).unwrap();
+        assert_eq!(spec.ppo, crate::runtime::layout::PpoHypers::default());
+        // explicit keys override
+        let meta = format!("{META}clip_eps=0.2\nlr=0.001\nadam_eps=0.00001\n");
+        let spec = NetSpec::parse(&meta).unwrap();
+        assert_eq!(spec.ppo.clip_eps, 0.2);
+        assert_eq!(spec.ppo.lr, 0.001);
+        assert_eq!(spec.ppo.vf_coef, 1.0, "untouched keys keep defaults");
     }
 
     #[test]

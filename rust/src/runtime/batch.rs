@@ -142,6 +142,132 @@ impl NetBank {
     }
 }
 
+/// Device-resident stack of all N agents' packed PPO training states:
+/// one `[N, 3P+4]` tensor of `[flat | m | v | metrics]` rows, consumed by
+/// the fused `ppo_update_b` entry point (one call updates every agent).
+///
+/// Version-tracked like [`NetBank`], with one extra twist: the fused
+/// update mutates the device tensor in place (`run_inout`), so after
+/// [`TrainBank::download_into_staged`] + per-agent absorption +
+/// [`TrainBank::mark_absorbed`] the bank already holds every agent's
+/// post-update state on BOTH sides — the next fill tick's `stage` round
+/// no-ops and nothing is re-uploaded. Steady-state fused training
+/// uploads only the minibatch staging tensor.
+pub struct TrainBank {
+    n: usize,
+    p: usize,
+    /// Host mirror `[N, 3P+4]`; kept in sync with the device stack so a
+    /// partial re-stage (one agent restored from a checkpoint, say) can
+    /// re-upload the whole stack without clobbering other agents.
+    staged: Tensor,
+    versions: Vec<Option<u64>>,
+    dev: Option<DeviceTensor>,
+    dirty: bool,
+    rows_recopied: u64,
+    uploads: u64,
+}
+
+impl TrainBank {
+    pub fn new(n: usize, p: usize) -> Self {
+        TrainBank {
+            n,
+            p,
+            staged: Tensor::zeros(&[n, 3 * p + 4]),
+            versions: vec![None; n],
+            dev: None,
+            dirty: false,
+            rows_recopied: 0,
+            uploads: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Width of one packed row (`3P + 4`).
+    pub fn row_len(&self) -> usize {
+        3 * self.p + 4
+    }
+
+    /// Make row `i` current for `net` (`[flat | m | v | 0;4]`). No-op when
+    /// the bank already holds this `NetState::version` — which after the
+    /// first fused update is the steady state, because the updated device
+    /// rows were absorbed straight back into the nets.
+    pub fn stage(&mut self, i: usize, net: &NetState) -> Result<()> {
+        ensure!(i < self.n, "train bank row {i} out of range (n = {})", self.n);
+        ensure!(
+            net.flat.len() == self.p && net.m.len() == self.p && net.v.len() == self.p,
+            "train bank row {i}: net has {} params, bank rows are {}",
+            net.flat.len(), self.p
+        );
+        if self.versions[i] == Some(net.version) {
+            return Ok(());
+        }
+        self.versions[i] = Some(net.version);
+        self.rows_recopied += 1;
+        let row = &mut self.staged.data[i * (3 * self.p + 4)..(i + 1) * (3 * self.p + 4)];
+        row[..self.p].copy_from_slice(&net.flat.data);
+        row[self.p..2 * self.p].copy_from_slice(&net.m.data);
+        row[2 * self.p..3 * self.p].copy_from_slice(&net.v.data);
+        row[3 * self.p..].fill(0.0);
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// The device-resident `[N, 3P+4]` stack, mutable so the fused update
+    /// can chain `run_inout` calls on it. Re-uploaded only if some row was
+    /// re-staged since the last call.
+    pub fn state(&mut self, engine: &Engine) -> Result<&mut DeviceTensor> {
+        if self.dirty || self.dev.is_none() {
+            self.dev = Some(engine.upload(&self.staged)?);
+            self.dirty = false;
+            self.uploads += 1;
+        }
+        Ok(self.dev.as_mut().unwrap())
+    }
+
+    /// Download the whole device stack into the host mirror (the ONE
+    /// download of a fused update).
+    pub fn download_into_staged(&mut self) -> Result<()> {
+        let dev = self
+            .dev
+            .as_ref()
+            .ok_or_else(|| anyhow!("train bank has no device state — call state() first"))?;
+        let t = dev.to_tensor()?;
+        ensure!(
+            t.len() == self.staged.len(),
+            "device train stack has {} floats, bank rows hold {}",
+            t.len(), self.staged.len()
+        );
+        self.staged.data.copy_from_slice(&t.data);
+        Ok(())
+    }
+
+    /// Agent `i`'s packed `[flat | m | v | metrics]` row in the host
+    /// mirror (valid after `download_into_staged`).
+    pub fn staged_row(&self, i: usize) -> &[f32] {
+        let w = 3 * self.p + 4;
+        &self.staged.data[i * w..(i + 1) * w]
+    }
+
+    /// Record that row `i`'s absorbed state now carries `version` — the
+    /// device stack already holds it, so the next `stage(i, …)` no-ops.
+    pub fn mark_absorbed(&mut self, i: usize, version: u64) {
+        self.versions[i] = Some(version);
+    }
+
+    /// Rows re-copied because their `NetState::version` changed.
+    pub fn rows_recopied(&self) -> u64 {
+        self.rows_recopied
+    }
+
+    /// Whole-stack device uploads performed.
+    pub fn uploads(&self) -> u64 {
+        self.uploads
+    }
+}
+
 /// Batched front-end over the `policy_step[_b]` artifacts for N agents.
 ///
 /// A bank may carry `reps` replica rows per agent (the megabatch LS
@@ -766,6 +892,58 @@ mod tests {
         assert!(bank.stage(&engine, 0, &net(4, 0.0)).is_err(), "param width mismatch");
         let mut row_mode = NetBank::new(2, 3, false);
         assert!(row_mode.params(&engine).is_err(), "params() needs stacked mode");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn train_bank_stages_uploads_and_steadies() {
+        let engine = Engine::cpu().unwrap();
+        let p = 4;
+        let mut bank = TrainBank::new(2, p);
+        assert_eq!(bank.row_len(), 3 * p + 4);
+        let mut nets = [net(p, 1.0), net(p, 2.0)];
+        nets[0].m.data.fill(0.5);
+        nets[1].v.data.fill(0.25);
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(i, n).unwrap();
+        }
+        assert_eq!(bank.rows_recopied(), 2);
+        bank.state(&engine).unwrap();
+        assert_eq!(bank.uploads(), 1);
+        // packed layout: [flat | m | v | 0;4]
+        bank.download_into_staged().unwrap();
+        let r0 = bank.staged_row(0);
+        assert_eq!(&r0[..p], &[1.0; 4]);
+        assert_eq!(&r0[p..2 * p], &[0.5; 4]);
+        assert_eq!(&r0[3 * p..], &[0.0; 4]);
+        assert_eq!(&bank.staged_row(1)[2 * p..3 * p], &[0.25; 4]);
+
+        // unchanged versions → no re-copies, no re-upload
+        for (i, n) in nets.iter().enumerate() {
+            bank.stage(i, n).unwrap();
+        }
+        bank.state(&engine).unwrap();
+        assert_eq!(bank.rows_recopied(), 2);
+        assert_eq!(bank.uploads(), 1);
+
+        // mark_absorbed pins the steady state: a net whose version the
+        // bank recorded after absorption stages as a no-op too
+        nets[0].version += 3;
+        bank.mark_absorbed(0, nets[0].version);
+        bank.stage(0, &nets[0]).unwrap();
+        assert_eq!(bank.rows_recopied(), 2);
+
+        // a genuinely new version re-copies and re-uploads
+        nets[1].version += 1;
+        bank.stage(1, &nets[1]).unwrap();
+        assert_eq!(bank.rows_recopied(), 3);
+        bank.state(&engine).unwrap();
+        assert_eq!(bank.uploads(), 2);
+
+        // bad rows rejected
+        assert!(bank.stage(2, &nets[0]).is_err());
+        assert!(bank.stage(0, &net(p + 1, 0.0)).is_err());
+        assert!(TrainBank::new(1, p).download_into_staged().is_err());
     }
 
     #[test]

@@ -180,6 +180,30 @@ impl Exec {
         Ok(())
     }
 
+    /// Backend-parity no-op (see `bind_policy`): the compiled `ppo_update`
+    /// HLO bakes the loss + Adam graph in; dims/hypers were fixed by aot.py.
+    pub fn bind_ppo_update(
+        &mut self,
+        _dims: crate::runtime::layout::PolicyDims,
+        _hyp: crate::runtime::layout::PpoHypers,
+        _expect_params: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// In-place update parity with the native backend: execute the
+    /// `(state, batch) -> state'` graph and swap the output buffer into
+    /// `state`. PJRT buffers are immutable, so "in place" here means the
+    /// handle is replaced; the caller still holds exactly one device
+    /// state across the whole epochs × minibatches chain and downloads
+    /// once at the end.
+    pub fn run_inout(&self, state: &mut DeviceTensor, batch: &DeviceTensor) -> Result<()> {
+        let mut outs = self.run_b(&[&*state, batch])?;
+        anyhow::ensure!(!outs.is_empty(), "{}: executable produced no outputs", self.name);
+        *state = outs.swap_remove(0);
+        Ok(())
+    }
+
     /// Execute with host tensors, returning host tensors (simple path).
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> = inputs

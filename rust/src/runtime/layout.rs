@@ -1,5 +1,5 @@
-//! Flat-parameter layout + pure-Rust forward passes for the two network
-//! families (policy, AIP).
+//! Flat-parameter layout + pure-Rust forward AND backward passes for the
+//! two network families (policy, AIP).
 //!
 //! The Python side flattens every parameter pytree with `ravel_pytree`,
 //! which serialises dict leaves in **sorted-key order** (verified against
@@ -29,6 +29,15 @@
 //! dispatcher (`native::compute_into`) maps data row `i` to parameter row
 //! `i / R` (agent-major replica rows), so R replicas of an agent run the
 //! identical per-row math over one shared parameter row.
+//!
+//! The training half (`ppo_update_row` + the `_bwd` kernels) follows the
+//! same discipline: the forward inside the update IS `dense_row`/`gru_row`
+//! (so update-time activations cannot drift from inference), the backward
+//! consumes the cached pre-activations, and the batched `ppo_update_b`
+//! entry point loops the identical per-agent row — which is what makes the
+//! fused [N]-wide update bit-identical to N sequential per-agent updates.
+//! Gradient contracts are pinned by finite-difference checks in the tests
+//! below (per layer, documented f32 tolerances).
 
 /// Dims of one policy network (`policy_step` artifact family).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -441,6 +450,405 @@ pub fn aip_ce_windows(
     (acc / (b * t * dims.heads) as f64) as f32
 }
 
+// --------------------------------------------------------------------------
+// PPO training update: backward row kernels + in-place Adam
+// --------------------------------------------------------------------------
+
+/// PPO + Adam hyperparameters of the update graph (`model.py::PpoCfg` /
+/// `AdamCfg`, paper Table 6). The XLA artifacts bake these in at lowering
+/// time; the native backward kernels take them at bind time from the
+/// `.meta` keys (`clip_eps`, `vf_coef`, `ent_coef`, `max_grad_norm`,
+/// `lr`, `adam_b1`, `adam_b2`, `adam_eps`), with these defaults filling
+/// in for artifact sets that predate the keys.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PpoHypers {
+    pub clip_eps: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    pub max_grad_norm: f32,
+    pub lr: f32,
+    pub adam_b1: f32,
+    pub adam_b2: f32,
+    pub adam_eps: f32,
+}
+
+impl Default for PpoHypers {
+    fn default() -> Self {
+        PpoHypers {
+            clip_eps: 0.1,
+            vf_coef: 1.0,
+            ent_coef: 1.0e-2,
+            max_grad_norm: 0.5,
+            lr: 2.5e-4,
+            adam_b1: 0.9,
+            adam_b2: 0.999,
+            adam_eps: 1.0e-5,
+        }
+    }
+}
+
+/// Sub-ranges of each layer's block inside the flat policy vector, in
+/// the pinned sorted-key order (`emb|fc1 < fc2|gru < pi < vf`). `l2` is
+/// the GRU block when recurrent, the `fc2` dense block otherwise.
+struct PolicySlices {
+    l1: std::ops::Range<usize>,
+    l2: std::ops::Range<usize>,
+    pi: std::ops::Range<usize>,
+    vf: std::ops::Range<usize>,
+}
+
+fn policy_slices(d: &PolicyDims) -> PolicySlices {
+    let n1 = dense_len(d.obs, d.h1);
+    let n2 = if d.recurrent { gru_len(d.h1, d.h2) } else { dense_len(d.h1, d.h2) };
+    let npi = dense_len(d.h2, d.act);
+    let nvf = dense_len(d.h2, 1);
+    let l1 = 0..n1;
+    let l2 = n1..n1 + n2;
+    let pi = l2.end..l2.end + npi;
+    let vf = pi.end..pi.end + nvf;
+    PolicySlices { l1, l2, pi, vf }
+}
+
+/// Backward through one dense layer `out = b + x·W` (activation backprop
+/// is the caller's: pass `d_out` already multiplied by the activation
+/// derivative). Accumulates `gb += d_out` and `gW[k][j] += x[k]·d_out[j]`
+/// into `gflat` (same `b|w` layout as `flat`), and, when `d_x` is given,
+/// `d_x[k] += Σ_j W[k][j]·d_out[j]`. Skipping `x[k] == 0` rows mirrors
+/// the forward's sparsity trick and is exact (those gradient rows are 0).
+fn dense_bwd(flat: &[f32], gflat: &mut [f32], x: &[f32], d_out: &[f32], d_x: Option<&mut [f32]>) {
+    let o = d_out.len();
+    let i = x.len();
+    debug_assert_eq!(flat.len(), dense_len(i, o));
+    debug_assert_eq!(gflat.len(), dense_len(i, o));
+    let (_b, w) = flat.split_at(o);
+    let (gb, gw) = gflat.split_at_mut(o);
+    for (g, d) in gb.iter_mut().zip(d_out) {
+        *g += d;
+    }
+    for (k, &xk) in x.iter().enumerate() {
+        if xk == 0.0 {
+            continue;
+        }
+        let row = &mut gw[k * o..(k + 1) * o];
+        for (g, d) in row.iter_mut().zip(d_out) {
+            *g += xk * d;
+        }
+    }
+    if let Some(dx) = d_x {
+        debug_assert_eq!(dx.len(), i);
+        for (k, dxk) in dx.iter_mut().enumerate() {
+            let row = &w[k * o..(k + 1) * o];
+            let mut acc = 0.0f32;
+            for (wj, dj) in row.iter().zip(d_out) {
+                acc += wj * dj;
+            }
+            *dxk += acc;
+        }
+    }
+}
+
+/// Backward through one GRU cell step (`gru_row`'s exact math). Takes the
+/// cached pre-activation sums `gx = bx + x·Wx`, `gh = bh + h·Wh` from the
+/// forward and recomputes the gates from them with the forward's own
+/// expressions. `h0` is a constant input here (it comes from the rollout
+/// buffer; the PPO update backpropagates a single step, exactly like
+/// `model.py::policy_apply` under `jax.grad`), so no `d_h0` is produced.
+/// Accumulates layer grads into `gflat` (layout `bh | bx | wh | wx`,
+/// gate order `r, z, n`) and `d_x[k] += Σ_j Wx[k][j]·d_gx[j]`.
+#[allow(clippy::too_many_arguments)]
+fn gru_bwd(
+    flat: &[f32],
+    gflat: &mut [f32],
+    x: &[f32],
+    h0: &[f32],
+    gx: &[f32],
+    gh: &[f32],
+    d_h: &[f32],
+    d_gx: &mut [f32],
+    d_gh: &mut [f32],
+    d_x: &mut [f32],
+) {
+    let d = x.len();
+    let hid = h0.len();
+    let g = 3 * hid;
+    debug_assert_eq!(flat.len(), gru_len(d, hid));
+    debug_assert_eq!(gflat.len(), gru_len(d, hid));
+    debug_assert_eq!(d_gx.len(), g);
+    debug_assert_eq!(d_gh.len(), g);
+    let (_bh, rest) = flat.split_at(g);
+    let (_bx, rest) = rest.split_at(g);
+    let (_wh, wx) = rest.split_at(hid * g);
+    let (gbh, grest) = gflat.split_at_mut(g);
+    let (gbx, grest) = grest.split_at_mut(g);
+    let (gwh, gwx) = grest.split_at_mut(hid * g);
+    for j in 0..hid {
+        let r = sigmoid(gx[j] + gh[j]);
+        let z = sigmoid(gx[hid + j] + gh[hid + j]);
+        let n = (gx[2 * hid + j] + r * gh[2 * hid + j]).tanh();
+        // h' = (1-z)·n + z·h0
+        let d_n = d_h[j] * (1.0 - z);
+        let d_z = d_h[j] * (h0[j] - n);
+        let d_pre_n = d_n * (1.0 - n * n);
+        let d_r = d_pre_n * gh[2 * hid + j];
+        let d_pre_r = d_r * r * (1.0 - r);
+        let d_pre_z = d_z * z * (1.0 - z);
+        d_gx[j] = d_pre_r;
+        d_gh[j] = d_pre_r;
+        d_gx[hid + j] = d_pre_z;
+        d_gh[hid + j] = d_pre_z;
+        d_gx[2 * hid + j] = d_pre_n;
+        d_gh[2 * hid + j] = d_pre_n * r;
+    }
+    for (gb, dg) in gbh.iter_mut().zip(d_gh.iter()) {
+        *gb += dg;
+    }
+    for (gb, dg) in gbx.iter_mut().zip(d_gx.iter()) {
+        *gb += dg;
+    }
+    for (k, &hk) in h0.iter().enumerate() {
+        if hk == 0.0 {
+            continue;
+        }
+        let row = &mut gwh[k * g..(k + 1) * g];
+        for (gw, dg) in row.iter_mut().zip(d_gh.iter()) {
+            *gw += hk * dg;
+        }
+    }
+    for (k, &xk) in x.iter().enumerate() {
+        if xk == 0.0 {
+            continue;
+        }
+        let row = &mut gwx[k * g..(k + 1) * g];
+        for (gw, dg) in row.iter_mut().zip(d_gx.iter()) {
+            *gw += xk * dg;
+        }
+    }
+    for (k, dxk) in d_x.iter_mut().enumerate() {
+        let row = &wx[k * g..(k + 1) * g];
+        let mut acc = 0.0f32;
+        for (wj, dj) in row.iter().zip(d_gx.iter()) {
+            acc += wj * dj;
+        }
+        *dxk += acc;
+    }
+}
+
+/// Reused scratch for the PPO backward pass — the native backend keeps
+/// one per thread, like `FwdScratch` (which it embeds for the in-update
+/// forward). Holds the per-row forward caches the backward consumes plus
+/// the accumulated flat minibatch gradient.
+#[derive(Clone, Debug, Default)]
+pub struct PpoScratch {
+    fwd: FwdScratch,
+    /// `[P]` accumulated minibatch gradient.
+    grad: Vec<f32>,
+    logits: Vec<f32>,
+    logp: Vec<f32>,
+    value: Vec<f32>,
+    d_logits: Vec<f32>,
+    /// Trunk-output gradient `[h2]`.
+    d_z: Vec<f32>,
+    /// First-layer-output gradient `[h1]`.
+    d_z1: Vec<f32>,
+    /// First-layer pre-activation gradient `[h1]`.
+    d_p1: Vec<f32>,
+    d_gx: Vec<f32>,
+    d_gh: Vec<f32>,
+}
+
+impl PpoScratch {
+    pub fn fit(&mut self, d: &PolicyDims) {
+        self.fwd.fit_policy(d);
+        self.grad.resize(d.param_count(), 0.0);
+        self.logits.resize(d.act, 0.0);
+        self.logp.resize(d.act, 0.0);
+        self.value.resize(1, 0.0);
+        self.d_logits.resize(d.act, 0.0);
+        self.d_z.resize(d.h2, 0.0);
+        self.d_z1.resize(d.h1, 0.0);
+        self.d_p1.resize(d.h1, 0.0);
+        self.d_gx.resize(3 * d.h2, 0.0);
+        self.d_gh.resize(3 * d.h2, 0.0);
+    }
+}
+
+/// Accumulate the clipped-surrogate PPO minibatch gradient into `s.grad`
+/// (pre-clip, pre-Adam) and return the loss metrics
+/// `(total, pg, v_loss, entropy)` at the CURRENT params — exactly the
+/// quantities `model.py::ppo_loss` + `jax.value_and_grad` produce.
+///
+/// `batch = [t | obs(MB·D) | h0(MB·H) | act(MB) | old_logp(MB) | adv(MB)
+/// | ret(MB)]`; MB is derived from the batch length, so the kernel is
+/// shape-polymorphic in the minibatch size. Per-row gradient pieces:
+/// `d logp/d logit_j = 1[j=a] − softmax_j`; the PG min-branch sends
+/// `−adv·ratio/B` through `d logp` when the unclipped surrogate is
+/// active (`ratio·adv <= clip(ratio)·adv`, which includes the equal-case
+/// interior where both branches coincide) and 0 otherwise;
+/// `d entropy/d logit_k = −p_k(logp_k − Σ_j p_j·logp_j)`;
+/// `d v_loss/d value = 2(value − ret)/B`.
+fn ppo_grad_row(
+    dims: &PolicyDims,
+    hyp: &PpoHypers,
+    flat: &[f32],
+    batch: &[f32],
+    s: &mut PpoScratch,
+) -> (f32, f32, f32, f32) {
+    let (d_dim, h_dim, a_dim) = (dims.obs, dims.hstate(), dims.act);
+    let per = d_dim + h_dim + 4;
+    debug_assert_eq!(flat.len(), dims.param_count());
+    debug_assert_eq!((batch.len() - 1) % per, 0);
+    let mb = (batch.len() - 1) / per;
+    s.fit(dims);
+    s.grad.fill(0.0);
+    let sl = policy_slices(dims);
+    let o_obs = 1;
+    let o_h = o_obs + mb * d_dim;
+    let o_act = o_h + mb * h_dim;
+    let inv_b = 1.0 / mb as f32;
+    let (mut min_sum, mut vl_sum, mut ent_sum) = (0.0f32, 0.0f32, 0.0f32);
+    for i in 0..mb {
+        let obs = &batch[o_obs + i * d_dim..o_obs + (i + 1) * d_dim];
+        let h0 = &batch[o_h + i * h_dim..o_h + (i + 1) * h_dim];
+        let act = (batch[o_act + i] as usize).min(a_dim - 1);
+        let old_logp = batch[o_act + mb + i];
+        let adv = batch[o_act + 2 * mb + i];
+        let ret = batch[o_act + 3 * mb + i];
+
+        // ---- forward through the inference row kernels, caching the
+        // pre-activations the backward needs (z1, gx, gh, trunk out z2).
+        if dims.recurrent {
+            let rest = dense_row(flat, obs, dims.h1, &mut s.fwd.z1, true);
+            let rest =
+                gru_row(rest, &s.fwd.z1, h0, &mut s.fwd.z2, &mut s.fwd.gx, &mut s.fwd.gh);
+            let rest = dense_row(rest, &s.fwd.z2, a_dim, &mut s.logits, false);
+            dense_row(rest, &s.fwd.z2, 1, &mut s.value, false);
+        } else {
+            let rest = dense_row(flat, obs, dims.h1, &mut s.fwd.z1, true);
+            let rest = dense_row(rest, &s.fwd.z1, dims.h2, &mut s.fwd.z2, true);
+            let rest = dense_row(rest, &s.fwd.z2, a_dim, &mut s.logits, false);
+            dense_row(rest, &s.fwd.z2, 1, &mut s.value, false);
+        }
+
+        // ---- loss pieces (log-softmax, ratio, clip, entropy, value)
+        let max = s.logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut zsum = 0.0f32;
+        for &l in &s.logits {
+            zsum += (l - max).exp();
+        }
+        let logz = zsum.ln() + max;
+        for (lp, &l) in s.logp.iter_mut().zip(&s.logits) {
+            *lp = l - logz;
+        }
+        let value = s.value[0];
+        let logp = s.logp[act];
+        let ratio = (logp - old_logp).exp();
+        let clipped = ratio.clamp(1.0 - hyp.clip_eps, 1.0 + hyp.clip_eps);
+        let surr1 = ratio * adv;
+        let surr2 = clipped * adv;
+        min_sum += surr1.min(surr2);
+        vl_sum += (value - ret) * (value - ret);
+        let mut srow = 0.0f32;
+        for &lp in &s.logp {
+            srow += lp.exp() * lp;
+        }
+        ent_sum += -srow;
+
+        // ---- upstream gradients for this row
+        let g_lp = if surr1 <= surr2 { -adv * ratio * inv_b } else { 0.0 };
+        for j in 0..a_dim {
+            let pj = s.logp[j].exp();
+            let ind = if j == act { 1.0 } else { 0.0 };
+            s.d_logits[j] =
+                g_lp * (ind - pj) + hyp.ent_coef * inv_b * pj * (s.logp[j] - srow);
+        }
+        let d_value = 2.0 * hyp.vf_coef * (value - ret) * inv_b;
+
+        // ---- heads → trunk output
+        s.d_z.fill(0.0);
+        dense_bwd(
+            &flat[sl.pi.clone()], &mut s.grad[sl.pi.clone()],
+            &s.fwd.z2, &s.d_logits, Some(&mut s.d_z),
+        );
+        dense_bwd(
+            &flat[sl.vf.clone()], &mut s.grad[sl.vf.clone()],
+            &s.fwd.z2, &[d_value], Some(&mut s.d_z),
+        );
+
+        // ---- trunk
+        if dims.recurrent {
+            s.d_z1.fill(0.0);
+            gru_bwd(
+                &flat[sl.l2.clone()], &mut s.grad[sl.l2.clone()],
+                &s.fwd.z1, h0, &s.fwd.gx, &s.fwd.gh, &s.d_z,
+                &mut s.d_gx, &mut s.d_gh, &mut s.d_z1,
+            );
+        } else {
+            // fc2 tanh: d_pre2 = d_z·(1 − z2²), then into fc1's output.
+            for (dz, &z) in s.d_z.iter_mut().zip(&s.fwd.z2) {
+                *dz *= 1.0 - z * z;
+            }
+            s.d_z1.fill(0.0);
+            dense_bwd(
+                &flat[sl.l2.clone()], &mut s.grad[sl.l2.clone()],
+                &s.fwd.z1, &s.d_z, Some(&mut s.d_z1),
+            );
+        }
+        // first layer tanh: d_pre1 = d_z1·(1 − z1²)
+        for (dp, (&dz, &z)) in s.d_p1.iter_mut().zip(s.d_z1.iter().zip(&s.fwd.z1)) {
+            *dp = dz * (1.0 - z * z);
+        }
+        dense_bwd(&flat[sl.l1.clone()], &mut s.grad[sl.l1.clone()], obs, &s.d_p1, None);
+    }
+    let pg = -min_sum * inv_b;
+    let vl = vl_sum * inv_b;
+    let ent = ent_sum * inv_b;
+    let total = pg + hyp.vf_coef * vl - hyp.ent_coef * ent;
+    (total, pg, vl, ent)
+}
+
+/// One full PPO minibatch update on a packed state, IN PLACE:
+/// `state = [flat | m | v | tail(ignored)]` becomes
+/// `[flat' | m' | v' | metrics(total, pg, vf, entropy)]`. Matches
+/// `model.py::make_ppo_update`: clipped-surrogate gradient
+/// (`ppo_grad_row`), global-norm clip
+/// (`scale = min(1, c/(‖g‖ + 1e-8))`), then Adam with f32 `powf`
+/// bias correction at `t = batch[0]` (the 1-based f32 step counter).
+/// The in-place contract is what lets the native backend chain a whole
+/// epochs × minibatches update sequence on one device tensor with zero
+/// per-minibatch allocation.
+pub fn ppo_update_row(
+    dims: &PolicyDims,
+    hyp: &PpoHypers,
+    state: &mut [f32],
+    batch: &[f32],
+    s: &mut PpoScratch,
+) {
+    let p = dims.param_count();
+    debug_assert_eq!(state.len(), 3 * p + 4);
+    let t = batch[0];
+    let (flat, rest) = state.split_at_mut(p);
+    let (m, rest) = rest.split_at_mut(p);
+    let (v, metrics) = rest.split_at_mut(p);
+    let (total, pg, vl, ent) = ppo_grad_row(dims, hyp, flat, batch, s);
+    let mut sq = 0.0f32;
+    for &g in &s.grad {
+        sq += g * g;
+    }
+    let scale = (hyp.max_grad_norm / (sq.sqrt() + 1e-8)).min(1.0);
+    let bc1 = 1.0 - hyp.adam_b1.powf(t);
+    let bc2 = 1.0 - hyp.adam_b2.powf(t);
+    for k in 0..p {
+        let g = s.grad[k] * scale;
+        m[k] = hyp.adam_b1 * m[k] + (1.0 - hyp.adam_b1) * g;
+        v[k] = hyp.adam_b2 * v[k] + (1.0 - hyp.adam_b2) * g * g;
+        flat[k] -= hyp.lr * (m[k] / bc1) / ((v[k] / bc2).sqrt() + hyp.adam_eps);
+    }
+    metrics[0] = total;
+    metrics[1] = pg;
+    metrics[2] = vl;
+    metrics[3] = ent;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -593,5 +1001,216 @@ mod tests {
             assert!((sum - 1.0).abs() < 1e-5, "{head:?}");
             assert!(head.iter().all(|&p| (0.0..=1.0).contains(&p)));
         }
+    }
+
+    // ---------------------------------------------------------------
+    // Backward kernels: finite-difference grad checks.
+    //
+    // All FD checks use f32 central differences with δ = 1e-3. Error
+    // budget (the documented f32 tolerance): the loss carries ≈1e-7·|L|
+    // of quantization, so the difference quotient carries ≈1e-4 of
+    // absolute noise at |L| ≈ 1, plus O(δ²) truncation — hence a
+    // 2e-3 absolute + 3% relative acceptance band per component.
+    // ---------------------------------------------------------------
+
+    const FD_DELTA: f32 = 1e-3;
+
+    fn fd_close(fd: f32, an: f32) -> bool {
+        (fd - an).abs() <= 2e-3 + 0.03 * an.abs()
+    }
+
+    #[test]
+    fn dense_bwd_matches_finite_differences() {
+        let (i, o) = (3usize, 4usize);
+        let mut rng = crate::util::rng::Pcg64::seed(11);
+        let flat: Vec<f32> =
+            (0..dense_len(i, o)).map(|_| 0.5 * rng.normal() as f32).collect();
+        // x carries one exact zero to exercise the sparsity skip.
+        let x = [0.8f32, 0.0, -1.2];
+        let c: Vec<f32> = (0..o).map(|_| rng.normal() as f32).collect();
+        let loss = |fl: &[f32], xx: &[f32]| -> f32 {
+            let mut out = vec![0.0f32; o];
+            dense_row(fl, xx, o, &mut out, false);
+            out.iter().zip(&c).map(|(a, b)| a * b).sum()
+        };
+        let mut gflat = vec![0.0f32; flat.len()];
+        let mut dx = vec![0.0f32; i];
+        dense_bwd(&flat, &mut gflat, &x, &c, Some(&mut dx));
+        for k in 0..flat.len() {
+            let mut fp = flat.clone();
+            fp[k] += FD_DELTA;
+            let mut fm = flat.clone();
+            fm[k] -= FD_DELTA;
+            let fd = (loss(&fp, &x) - loss(&fm, &x)) / (2.0 * FD_DELTA);
+            assert!(fd_close(fd, gflat[k]), "param {k}: fd={fd} analytic={}", gflat[k]);
+        }
+        for k in 0..i {
+            let mut xp = x;
+            xp[k] += FD_DELTA;
+            let mut xm = x;
+            xm[k] -= FD_DELTA;
+            let fd = (loss(&flat, &xp) - loss(&flat, &xm)) / (2.0 * FD_DELTA);
+            assert!(fd_close(fd, dx[k]), "dx {k}: fd={fd} analytic={}", dx[k]);
+        }
+    }
+
+    #[test]
+    fn gru_bwd_matches_finite_differences() {
+        let (d, hid) = (3usize, 4usize);
+        let mut rng = crate::util::rng::Pcg64::seed(12);
+        let flat: Vec<f32> =
+            (0..gru_len(d, hid)).map(|_| 0.4 * rng.normal() as f32).collect();
+        // x and h0 each carry an exact zero to exercise the skips.
+        let x = [0.9f32, 0.0, -0.6];
+        let h0 = [0.5f32, -0.8, 0.0, 1.1];
+        let c: Vec<f32> = (0..hid).map(|_| rng.normal() as f32).collect();
+        let loss = |fl: &[f32], xx: &[f32]| -> f32 {
+            let mut h_new = vec![0.0f32; hid];
+            let mut gx = vec![0.0f32; 3 * hid];
+            let mut gh = vec![0.0f32; 3 * hid];
+            gru_row(fl, xx, &h0, &mut h_new, &mut gx, &mut gh);
+            h_new.iter().zip(&c).map(|(a, b)| a * b).sum()
+        };
+        let mut h_new = vec![0.0f32; hid];
+        let mut gx = vec![0.0f32; 3 * hid];
+        let mut gh = vec![0.0f32; 3 * hid];
+        gru_row(&flat, &x, &h0, &mut h_new, &mut gx, &mut gh);
+        let mut gflat = vec![0.0f32; flat.len()];
+        let mut d_gx = vec![0.0f32; 3 * hid];
+        let mut d_gh = vec![0.0f32; 3 * hid];
+        let mut dx = vec![0.0f32; d];
+        gru_bwd(&flat, &mut gflat, &x, &h0, &gx, &gh, &c, &mut d_gx, &mut d_gh, &mut dx);
+        for k in 0..flat.len() {
+            let mut fp = flat.clone();
+            fp[k] += FD_DELTA;
+            let mut fm = flat.clone();
+            fm[k] -= FD_DELTA;
+            let fd = (loss(&fp, &x) - loss(&fm, &x)) / (2.0 * FD_DELTA);
+            assert!(fd_close(fd, gflat[k]), "param {k}: fd={fd} analytic={}", gflat[k]);
+        }
+        for k in 0..d {
+            let mut xp = x;
+            xp[k] += FD_DELTA;
+            let mut xm = x;
+            xm[k] -= FD_DELTA;
+            let fd = (loss(&flat, &xp) - loss(&flat, &xm)) / (2.0 * FD_DELTA);
+            assert!(fd_close(fd, dx[k]), "dx {k}: fd={fd} analytic={}", dx[k]);
+        }
+    }
+
+    /// A deterministic packed PPO batch whose rows exercise both PG
+    /// min-branches with safe margins: logits of a small random net sit
+    /// near 0, so `logp ≈ −ln A`; `old_logp` offsets of ±0.5 put the
+    /// ratio well outside the ±0.1 clip band (0.0 keeps it inside), far
+    /// from any branch boundary an FD perturbation could cross.
+    fn mk_batch(dims: &PolicyDims, mb: usize, rng: &mut crate::util::rng::Pcg64) -> Vec<f32> {
+        let per = dims.obs + dims.hstate() + 4;
+        let mut b = vec![0.0f32; 1 + mb * per];
+        b[0] = 3.0; // Adam step counter t
+        let o_obs = 1;
+        let o_h = o_obs + mb * dims.obs;
+        let o_act = o_h + mb * dims.hstate();
+        for v in &mut b[o_obs..o_act] {
+            *v = 0.5 * rng.normal() as f32;
+        }
+        for i in 0..mb {
+            b[o_act + i] = rng.below(dims.act as u64) as f32;
+            let off = match i % 3 {
+                0 => 0.0,
+                1 => 0.5,
+                _ => -0.5,
+            };
+            b[o_act + mb + i] = -(dims.act as f32).ln() + off;
+            b[o_act + 2 * mb + i] = if i % 2 == 0 { 1.0 } else { -1.0 };
+            b[o_act + 3 * mb + i] = 0.3 * rng.normal() as f32;
+        }
+        b
+    }
+
+    /// Per-layer FD check of the full clipped-surrogate loss gradient.
+    fn fd_check_policy(dims: PolicyDims, seed: u64) {
+        let mut rng = crate::util::rng::Pcg64::seed(seed);
+        let p = dims.param_count();
+        let flat: Vec<f32> = (0..p).map(|_| 0.3 * rng.normal() as f32).collect();
+        let batch = mk_batch(&dims, 4, &mut rng);
+        let hyp = PpoHypers::default();
+        let mut s = PpoScratch::default();
+        ppo_grad_row(&dims, &hyp, &flat, &batch, &mut s);
+        let grad = s.grad.clone();
+        let sl = policy_slices(&dims);
+        let layers =
+            [("l1", sl.l1), ("l2", sl.l2), ("pi", sl.pi), ("vf", sl.vf)];
+        let mut s2 = PpoScratch::default();
+        for (name, range) in layers {
+            for k in range {
+                let mut fp = flat.clone();
+                fp[k] += FD_DELTA;
+                let (lp, ..) = ppo_grad_row(&dims, &hyp, &fp, &batch, &mut s2);
+                let mut fm = flat.clone();
+                fm[k] -= FD_DELTA;
+                let (lm, ..) = ppo_grad_row(&dims, &hyp, &fm, &batch, &mut s2);
+                let fd = (lp - lm) / (2.0 * FD_DELTA);
+                assert!(
+                    fd_close(fd, grad[k]),
+                    "{name}[{k}]: fd={fd} analytic={}",
+                    grad[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ppo_grad_fnn_matches_finite_differences_per_layer() {
+        fd_check_policy(PolicyDims { obs: 3, act: 2, recurrent: false, h1: 4, h2: 4 }, 21);
+    }
+
+    #[test]
+    fn ppo_grad_recurrent_matches_finite_differences_per_layer() {
+        fd_check_policy(PolicyDims { obs: 3, act: 3, recurrent: true, h1: 4, h2: 5 }, 22);
+    }
+
+    #[test]
+    fn ppo_update_row_is_global_norm_clip_plus_adam() {
+        let dims = PolicyDims { obs: 3, act: 2, recurrent: false, h1: 4, h2: 4 };
+        let hyp = PpoHypers::default();
+        let p = dims.param_count();
+        let mut rng = crate::util::rng::Pcg64::seed(23);
+        let flat: Vec<f32> = (0..p).map(|_| 0.3 * rng.normal() as f32).collect();
+        let m0: Vec<f32> = (0..p).map(|_| 0.1 * rng.normal() as f32).collect();
+        let v0: Vec<f32> = (0..p).map(|_| (0.1 * rng.normal() as f32).abs()).collect();
+        let batch = mk_batch(&dims, 4, &mut rng);
+        let t = batch[0];
+        let mut state: Vec<f32> = flat
+            .iter()
+            .chain(m0.iter())
+            .chain(v0.iter())
+            .cloned()
+            .chain([0.0; 4])
+            .collect();
+        let mut s = PpoScratch::default();
+        let (total, pg, vl, ent) = ppo_grad_row(&dims, &hyp, &flat, &batch, &mut s);
+        // manual clip + Adam, replicating the kernel's op order exactly
+        let norm = s.grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+        let scale = (hyp.max_grad_norm / (norm + 1e-8)).min(1.0);
+        let bc1 = 1.0 - hyp.adam_b1.powf(t);
+        let bc2 = 1.0 - hyp.adam_b2.powf(t);
+        let mut want_flat = flat.clone();
+        let mut want_m = m0.clone();
+        let mut want_v = v0.clone();
+        for k in 0..p {
+            let g = s.grad[k] * scale;
+            want_m[k] = hyp.adam_b1 * want_m[k] + (1.0 - hyp.adam_b1) * g;
+            want_v[k] = hyp.adam_b2 * want_v[k] + (1.0 - hyp.adam_b2) * g * g;
+            want_flat[k] -=
+                hyp.lr * (want_m[k] / bc1) / ((want_v[k] / bc2).sqrt() + hyp.adam_eps);
+        }
+        let mut s2 = PpoScratch::default();
+        ppo_update_row(&dims, &hyp, &mut state, &batch, &mut s2);
+        assert_eq!(&state[..p], &want_flat[..], "flat'");
+        assert_eq!(&state[p..2 * p], &want_m[..], "m'");
+        assert_eq!(&state[2 * p..3 * p], &want_v[..], "v'");
+        assert_eq!(&state[3 * p..], &[total, pg, vl, ent][..], "metrics");
+        // the update must actually move the params
+        assert!(state[..p].iter().zip(&flat).any(|(a, b)| a != b));
     }
 }

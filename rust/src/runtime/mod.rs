@@ -12,9 +12,11 @@
 //! * `native` (default): a dependency-free host backend with the same
 //!   surface. Since the batch-first redesign it **executes the forward
 //!   artifact families for real** through the pure-Rust row kernels in
-//!   [`layout`] (bound from the `.meta` layer dims), so evaluation,
-//!   collection, and the forward-only ablations run end-to-end without
-//!   the XLA toolchain; only the update artifacts still require `xla`.
+//!   [`layout`] (bound from the `.meta` layer dims), and since the
+//!   fused-update work the **PPO update too** (backward row kernels +
+//!   in-graph Adam, `ppo_update` / fused `ppo_update_b`), so full DIALS
+//!   training at `epochs > 0` runs end-to-end without the XLA toolchain;
+//!   only the AIP update artifact still requires `xla`.
 //!
 //! On top of the backends sits the batch-first inference surface
 //! ([`batch`]): `NetBank` stacks all N agents' parameters into one
@@ -39,7 +41,7 @@ mod native;
 pub mod synth;
 
 pub use artifacts::{ArtifactSet, NetSpec};
-pub use batch::{sample_u, ActOut, AipBank, NetBank, PolicyBank};
+pub use batch::{sample_u, ActOut, AipBank, NetBank, PolicyBank, TrainBank};
 #[cfg(feature = "xla")]
 pub use exec::{DeviceTensor, Engine, Exec};
 #[cfg(not(feature = "xla"))]

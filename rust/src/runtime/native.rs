@@ -13,9 +13,16 @@
 //! over every input row, mapping `[N*R]` input rows onto the stacked
 //! `[N, P]` parameter tensor by `row / R` (megabatch replica indirection;
 //! `R = 1` is the plain batched case), so the one `run_b`-per-joint-step
-//! bank path and the per-agent B=1 path are bit-identical by construction. The update artifacts (`ppo_update`,
-//! `aip_update`, `aip_eval`) still need the real PJRT client and return an
-//! explanatory error.
+//! bank path and the per-agent B=1 path are bit-identical by construction.
+//!
+//! Since the fused-update work the **PPO update executes natively too**:
+//! `ppo_update` / `ppo_update_b` bind to `layout::ppo_update_row` (backward
+//! row kernels + in-graph Adam), so the default build trains end-to-end at
+//! `epochs > 0` with zero XLA on the critical path. The batched variant
+//! loops the identical per-agent row over a `[N, 3P+4]` state stack, so the
+//! fused path is bit-identical to N sequential B=1 updates by construction.
+//! Only the AIP update artifact (`aip_update`) still needs the real PJRT
+//! client and returns an explanatory error.
 
 use std::cell::RefCell;
 use std::path::Path;
@@ -26,8 +33,8 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::util::npk::Tensor;
 
 use super::layout::{
-    aip_ce_flat, aip_ce_windows, aip_forward_row, policy_forward_row, AipDims, CeScratch,
-    FwdScratch, PolicyDims,
+    aip_ce_flat, aip_ce_windows, aip_forward_row, policy_forward_row, ppo_update_row, AipDims,
+    CeScratch, FwdScratch, PolicyDims, PpoHypers, PpoScratch,
 };
 
 thread_local! {
@@ -36,6 +43,9 @@ thread_local! {
     /// so a per-`Exec` lock would serialise the whole phase. Each thread
     /// grows one scratch to the largest net it has run.
     static FWD_SCRATCH: RefCell<FwdScratch> = RefCell::new(FwdScratch::default());
+    /// Per-thread backward scratch for the PPO update kernels — same
+    /// rationale (per-agent fallback updates run on pool threads too).
+    static PPO_SCRATCH: RefCell<PpoScratch> = RefCell::new(PpoScratch::default());
 }
 
 /// Host stand-in for the PJRT CPU client. Cheap to clone.
@@ -112,6 +122,14 @@ enum NetKind {
     /// their Fig. 4 CE curves) go end-to-end without the XLA toolchain;
     /// only the update artifacts still need PJRT.
     AipEval(AipDims),
+    /// The PPO training update (`ppo_update` / `ppo_update_b`):
+    /// `(state, batch) -> state'` on the packed `[3P+4]` Adam-state row
+    /// (see `layout::ppo_update_row`). Rank decides the contract like the
+    /// forwards: rank-1 `[3P+4]` is the per-agent B=1 chain, rank-2
+    /// `[N, 3P+4]` + `[N, L]` is the fused all-agents variant. The
+    /// minibatch size is derived from `L`, so one binding is
+    /// shape-polymorphic in both N and MB.
+    PpoUpdate(PolicyDims, PpoHypers),
 }
 
 /// One loaded artifact. Forward artifacts execute through the bound
@@ -172,6 +190,25 @@ impl Exec {
         Ok(())
     }
 
+    /// Bind this artifact to the native PPO update (backward row kernels
+    /// + in-graph Adam — `layout::ppo_update_row`). One binding serves
+    /// both the B=1 `ppo_update` and the stacked `ppo_update_b` contract.
+    pub fn bind_ppo_update(
+        &mut self,
+        dims: PolicyDims,
+        hyp: PpoHypers,
+        expect_params: usize,
+    ) -> Result<()> {
+        ensure!(
+            dims.param_count() == expect_params,
+            "{}: policy layer dims {dims:?} imply {} params but .meta says {} — \
+             re-run `make artifacts`",
+            self.name, dims.param_count(), expect_params
+        );
+        self.net = Some(NetKind::PpoUpdate(dims, hyp));
+        Ok(())
+    }
+
     /// The `aip_eval` contract: `(flat[P], feats, labels) -> ce[1]`.
     /// FNN sets take `feats [B, F]` + `labels [B, heads]`; recurrent sets
     /// take `feats [B, T, F]` + `labels [B, T, heads]` (class indices).
@@ -227,6 +264,88 @@ impl Exec {
         Ok(())
     }
 
+    /// The `ppo_update` contract, in place on a host tensor:
+    /// `state = [3P+4]` + `batch = [L]` (B=1), or `state = [N, 3P+4]` +
+    /// `batch = [N, L]` (fused). Each agent row is updated by the exact
+    /// same `ppo_update_row` kernel the B=1 path runs, in agent order, so
+    /// fused == N sequential per-agent updates bit for bit. One `calls`
+    /// tick covers all N rows (the call-count-pin invariant).
+    fn update_rows_in_place(
+        &self,
+        dims: &PolicyDims,
+        hyp: &PpoHypers,
+        state: &mut Tensor,
+        batch: &Tensor,
+    ) -> Result<()> {
+        let p = dims.param_count();
+        let row = 3 * p + 4;
+        let batched = state.dims.len() == 2;
+        let n = if batched { state.dims[0] } else { 1 };
+        ensure!(
+            state.len() == n * row && (batched || state.dims.len() == 1),
+            "{}: state {:?} does not hold N={n} packed [3P+4 = {row}] rows",
+            self.name, state.dims
+        );
+        ensure!(
+            batch.dims.len() == state.dims.len() && (!batched || batch.dims[0] == n),
+            "{}: batch {:?} does not match state {:?} (one batch row per agent row)",
+            self.name, batch.dims, state.dims
+        );
+        let per = dims.obs + dims.hstate() + 4;
+        let l = batch.len() / n;
+        ensure!(
+            batch.len() == n * l && l > per && (l - 1) % per == 0,
+            "{}: batch {:?} is not N={n} packed [1 + MB·(D+H+4 = {per})] rows",
+            self.name, batch.dims
+        );
+        PPO_SCRATCH.with(|cell| {
+            let mut s = cell.borrow_mut();
+            for i in 0..n {
+                let st = &mut state.data[i * row..(i + 1) * row];
+                let bt = &batch.data[i * l..(i + 1) * l];
+                ppo_update_row(dims, hyp, st, bt, &mut s);
+            }
+        });
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn compute_update_into(
+        &self,
+        dims: &PolicyDims,
+        hyp: &PpoHypers,
+        inputs: &[&Tensor],
+        out: &mut Tensor,
+    ) -> Result<()> {
+        ensure!(
+            inputs.len() == 2,
+            "{}: expected (state, batch), got {} inputs",
+            self.name, inputs.len()
+        );
+        let (state, batch) = (inputs[0], inputs[1]);
+        out.dims.clear();
+        out.dims.extend_from_slice(&state.dims);
+        out.data.clear();
+        out.data.extend_from_slice(&state.data);
+        self.update_rows_in_place(dims, hyp, out, batch)
+    }
+
+    /// Execute a bound `ppo_update` IN PLACE on a device-resident state
+    /// (the device is the host here, so this is the true zero-copy chain:
+    /// a whole epochs × minibatches update sequence touches one buffer and
+    /// allocates nothing per minibatch). `run`/`run_b` keep the pure
+    /// `(state, batch) -> state'` contract for parity with XLA.
+    pub fn run_inout(&self, state: &mut DeviceTensor, batch: &DeviceTensor) -> Result<()> {
+        let Some(NetKind::PpoUpdate(dims, hyp)) = &self.net else {
+            bail!(
+                "{}: run_inout needs a bound ppo_update artifact (bind_ppo_update)",
+                self.name
+            )
+        };
+        let (dims, hyp) = (*dims, *hyp);
+        self.update_rows_in_place(&dims, &hyp, &mut state.host, &batch.host)
+    }
+
     /// Shared compute path. Inputs `(params, x, h)`: a rank-1 `[P]`
     /// parameter tensor selects the B=1 packed output `[W]`; a rank-2
     /// `[N, P]` stack selects the batched output `[rows, W]` (N = 1 stays
@@ -242,15 +361,20 @@ impl Exec {
         let Some(kind) = &self.net else {
             bail!(
                 "cannot execute artifact {:?}: no native executor is bound for it \
-                 (only the policy_step / aip_forward / aip_eval families run \
-                 natively). Rebuild with `--features xla` and a real xla-rs \
-                 checkout under rust/vendor/xla to execute the update artifacts.",
+                 (the policy_step / aip_forward / aip_eval / ppo_update families \
+                 run natively). Rebuild with `--features xla` and a real xla-rs \
+                 checkout under rust/vendor/xla to execute the remaining update \
+                 artifacts (aip_update).",
                 self.name
             )
         };
         if let NetKind::AipEval(dims) = kind {
             let dims = *dims;
             return self.compute_ce_into(&dims, inputs, out);
+        }
+        if let NetKind::PpoUpdate(dims, hyp) = kind {
+            let (dims, hyp) = (*dims, *hyp);
+            return self.compute_update_into(&dims, &hyp, inputs, out);
         }
         ensure!(
             inputs.len() == 3,
@@ -265,7 +389,7 @@ impl Exec {
         let (p, in_dim, h_dim, out_w) = match kind {
             NetKind::Policy(d) => (d.param_count(), d.obs, d.hstate(), d.packed_out()),
             NetKind::Aip(d) => (d.param_count(), d.feat, d.hstate(), d.packed_out()),
-            NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
+            NetKind::AipEval(_) | NetKind::PpoUpdate(..) => unreachable!("dispatched above"),
         };
         ensure!(
             params.len() == n * p && in_dim > 0 && h_dim > 0,
@@ -296,7 +420,9 @@ impl Exec {
             match kind {
                 NetKind::Policy(d) => s.fit_policy(d),
                 NetKind::Aip(d) => s.fit_aip(d),
-                NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
+                NetKind::AipEval(_) | NetKind::PpoUpdate(..) => {
+                    unreachable!("dispatched above")
+                }
             }
             for i in 0..rows {
                 let a = i / reps;
@@ -307,7 +433,9 @@ impl Exec {
                 match kind {
                     NetKind::Policy(d) => policy_forward_row(d, flat, xi, hi, oi, &mut s),
                     NetKind::Aip(d) => aip_forward_row(d, flat, xi, hi, oi, &mut s),
-                    NetKind::AipEval(_) => unreachable!("handled by compute_ce_into"),
+                    NetKind::AipEval(_) | NetKind::PpoUpdate(..) => {
+                        unreachable!("dispatched above")
+                    }
                 }
             }
         });
@@ -523,6 +651,91 @@ mod tests {
         // malformed shapes are errors, not UB
         let bad = Tensor::zeros(&[12]);
         assert!(exec.run(&[flat, bad.clone(), bad]).is_err());
+    }
+
+    #[test]
+    fn bound_ppo_update_executes_b1_fused_and_inout() {
+        use crate::util::rng::Pcg64;
+        let dims = PolicyDims { obs: 3, act: 2, recurrent: false, h1: 4, h2: 4 };
+        let p = dims.param_count();
+        let row = 3 * p + 4;
+        let per = dims.obs + dims.hstate() + 4;
+        let mb = 4;
+        let blen = 1 + mb * per;
+        let mut exec = fake_exec("upd");
+        exec.bind_ppo_update(dims, PpoHypers::default(), p).unwrap();
+        // wrong param count rejected at bind time
+        assert!(fake_exec("upd2")
+            .bind_ppo_update(dims, PpoHypers::default(), p + 1)
+            .is_err());
+
+        let mut rng = Pcg64::seed(9);
+        let mk_state = |rng: &mut Pcg64| {
+            let mut d = vec![0.0f32; row];
+            for v in &mut d[..p] {
+                *v = 0.2 * rng.normal() as f32;
+            }
+            d
+        };
+        let mk_batch = |rng: &mut Pcg64| {
+            let mut b = vec![0.0f32; blen];
+            b[0] = 1.0; // Adam t
+            for v in &mut b[1..] {
+                *v = 0.3 * rng.normal() as f32;
+            }
+            let o_act = 1 + mb * (dims.obs + dims.hstate());
+            for i in 0..mb {
+                b[o_act + i] = (i % dims.act) as f32;
+                b[o_act + mb + i] = -(dims.act as f32).ln();
+            }
+            b
+        };
+        let s0 = mk_state(&mut rng);
+        let s1 = mk_state(&mut rng);
+        let b0 = mk_batch(&mut rng);
+        let b1 = mk_batch(&mut rng);
+
+        // B=1 pure calls
+        let out0 = exec
+            .run(&[Tensor::new(vec![row], s0.clone()), Tensor::new(vec![blen], b0.clone())])
+            .unwrap();
+        assert_eq!(out0[0].dims, vec![row]);
+        assert!(out0[0].data.iter().all(|v| v.is_finite()));
+        assert_ne!(out0[0].data[..p], s0[..p], "params must move");
+        let out1 = exec
+            .run(&[Tensor::new(vec![row], s1.clone()), Tensor::new(vec![blen], b1.clone())])
+            .unwrap();
+
+        // fused [2, row] + [2, L] == the two B=1 results stacked, one call
+        let stacked = Tensor::new(vec![2, row], s0.iter().chain(&s1).cloned().collect());
+        let batches = Tensor::new(vec![2, blen], b0.iter().chain(&b1).cloned().collect());
+        let calls_before = exec.call_count();
+        let fused = exec.run(&[stacked.clone(), batches.clone()]).unwrap();
+        assert_eq!(exec.call_count(), calls_before + 1, "one call covers all N rows");
+        assert_eq!(fused[0].dims, vec![2, row]);
+        assert_eq!(fused[0].data[..row], out0[0].data[..], "agent 0 fused != B=1");
+        assert_eq!(fused[0].data[row..], out1[0].data[..], "agent 1 fused != B=1");
+
+        // run_inout mutates the device state in place, bit-identically
+        let engine = Engine::cpu().unwrap();
+        let mut dstate = engine.upload(&stacked).unwrap();
+        let dbatch = engine.upload(&batches).unwrap();
+        exec.run_inout(&mut dstate, &dbatch).unwrap();
+        assert_eq!(dstate.to_tensor().unwrap().data, fused[0].data);
+
+        // malformed shapes are errors, not UB
+        assert!(exec
+            .run(&[Tensor::zeros(&[row + 1]), Tensor::zeros(&[blen])])
+            .is_err());
+        assert!(exec
+            .run(&[Tensor::zeros(&[2, row]), Tensor::zeros(&[blen])])
+            .is_err());
+        // run_inout on a non-update binding is an error
+        let mut fwd = fake_exec("fwd_not_upd");
+        fwd.bind_policy(dims, p).unwrap();
+        let mut ds = engine.upload(&Tensor::zeros(&[row])).unwrap();
+        let db = engine.upload(&Tensor::zeros(&[blen])).unwrap();
+        assert!(fwd.run_inout(&mut ds, &db).is_err());
     }
 
     #[test]

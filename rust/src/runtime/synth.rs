@@ -10,10 +10,12 @@
 //! `python/compile/aot.py` (`domain_cfgs("small")`).
 //!
 //! Used by the batch-equivalence tests, the hotpath bench's NN rows, and
-//! anyone who wants to drive the forward-only phases (evaluation,
-//! collection, untrained-DIALS) on a box without jax. Update artifacts
-//! (`ppo_update` etc.) still require the real toolchain; the placeholders
-//! produce an explanatory error if executed.
+//! anyone who wants to drive full DIALS training (`epochs > 0`) on a box
+//! without jax: the forward families AND the PPO update (`ppo_update` /
+//! `ppo_update_b`, backward row kernels + in-graph Adam) all execute
+//! natively from the `.meta` dims + hyperparameters. Only `aip_update`
+//! still requires the real toolchain; its placeholder produces an
+//! explanatory error if executed.
 
 use std::path::Path;
 
@@ -78,13 +80,18 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
     // `batch=0` keeps the set shape-polymorphic: the native kernels accept
     // any row count, including megabatch `[N*R]` rows (rows a replica
     // multiple of the N parameter rows), so no `replicas=` key is written
-    // — the default 1 only matters for shape-specialised XLA sets.
+    // — the default 1 only matters for shape-specialised XLA sets. The PPO
+    // hyperparameter keys are what the native backward kernels bind; the
+    // values are the pinned model.py defaults (paper Table 6).
+    let hyp = super::layout::PpoHypers::default();
     let meta = format!(
         "domain={d}\nobs_dim={}\nact_dim={}\npolicy_recurrent={}\npolicy_hstate={}\n\
          policy_params={}\naip_feat={}\naip_recurrent={}\naip_hstate={}\naip_params={}\n\
          aip_heads={}\naip_cls={}\nu_dim={u_dim}\nminibatch={minibatch}\n\
          aip_batch={aip_batch}\naip_seq={aip_seq}\nseed={seed}\n\
-         policy_h1={}\npolicy_h2={}\naip_hid={}\nbatch=0\n",
+         policy_h1={}\npolicy_h2={}\naip_hid={}\nbatch=0\n\
+         clip_eps={}\nvf_coef={}\nent_coef={}\nmax_grad_norm={}\n\
+         lr={}\nadam_b1={}\nadam_b2={}\nadam_eps={}\n",
         pd.obs,
         pd.act,
         pd.recurrent as usize,
@@ -99,6 +106,14 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
         pd.h1,
         pd.h2,
         ad.hid,
+        hyp.clip_eps,
+        hyp.vf_coef,
+        hyp.ent_coef,
+        hyp.max_grad_norm,
+        hyp.lr,
+        hyp.adam_b1,
+        hyp.adam_b2,
+        hyp.adam_eps,
     );
     std::fs::write(dir.join(format!("{d}.meta")), meta)?;
 
@@ -115,24 +130,37 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
         &init(&mut rng, ad.param_count(), 0.08),
     )?;
 
+    // Artifacts that execute natively (bound to runtime::layout kernels).
+    // This now includes the PPO update family — the old text claiming the
+    // update needed XLA was misleading once the backward kernels landed.
     for name in [
         "policy_step",
         "policy_step_b",
         "ppo_update",
+        "ppo_update_b",
         "aip_forward",
         "aip_forward_b",
-        "aip_update",
         "aip_eval",
     ] {
         std::fs::write(
             dir.join(format!("{d}_{name}.hlo.txt")),
             format!(
-                "HloModule {d}_{name}\n; native artifact placeholder — the forward \
-                 families execute through runtime::layout; update artifacts need \
-                 `make artifacts` + the xla feature.\n"
+                "HloModule {d}_{name}\n; native artifact placeholder — this family \
+                 executes through runtime::layout (forwards, CE eval, and the \
+                 ppo_update backward kernels), driven by the dims + hyperparameters \
+                 in {d}.meta.\n"
             ),
         )?;
     }
+    // aip_update is the one artifact the native backend cannot execute.
+    std::fs::write(
+        dir.join(format!("{d}_aip_update.hlo.txt")),
+        format!(
+            "HloModule {d}_aip_update\n; native artifact placeholder — the AIP \
+             update still needs `make artifacts` + the xla feature; executing \
+             this placeholder produces an explanatory error.\n"
+        ),
+    )?;
     Ok(())
 }
 
@@ -160,9 +188,19 @@ mod tests {
             assert_eq!(arts.spec.domain, domain.name());
             assert!(arts.policy_step_b.is_some());
             assert!(arts.aip_forward_b.is_some());
+            assert!(arts.ppo_update_b.is_some());
+            assert!(
+                arts.supports_fused_update(5, 8),
+                "shape-polymorphic sets accept any N and R for the fused update"
+            );
             assert_eq!(arts.policy_init.len(), arts.spec.policy_params);
             assert_eq!(arts.aip_init.len(), arts.spec.aip_params);
             assert_eq!(arts.spec.batch_n, 0, "native artifacts are shape-polymorphic");
+            assert_eq!(
+                arts.spec.ppo,
+                crate::runtime::layout::PpoHypers::default(),
+                "synth meta hypers round-trip to the pinned defaults"
+            );
         }
     }
 

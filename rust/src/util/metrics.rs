@@ -45,6 +45,22 @@ pub struct CurvePoint {
     pub value: f64,
 }
 
+/// Per-agent aggregate of the PPO `UpdateMetrics` a training run produced.
+/// The fused megabatch path applies all N agents' updates in one batched
+/// call per minibatch step; these rows keep the loss statistics per-agent
+/// attributable regardless of which update path ran.
+#[derive(Clone, Debug, Default)]
+pub struct AgentUpdateStats {
+    pub agent: usize,
+    /// PPO updates this agent consumed (one per buffer-fill tick).
+    pub updates: u64,
+    /// Means over those updates of the per-update loss diagnostics.
+    pub mean_total: f32,
+    pub mean_pg: f32,
+    pub mean_vf: f32,
+    pub mean_entropy: f32,
+}
+
 /// Everything a single training run reports.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
@@ -79,6 +95,14 @@ pub struct RunLog {
     /// `influence_seconds`); the blocking path reports the same number
     /// for comparison.
     pub collect_compute_seconds: f64,
+    /// Megabatch-mode split of `agent_train_seconds`: seconds outside the
+    /// PPO update phases (forward ticks + scatter work) vs inside them.
+    /// Both stay 0 on the per-agent reference path, whose updates run
+    /// inside the per-agent segment tasks.
+    pub ls_forward_seconds: f64,
+    pub ls_update_seconds: f64,
+    /// Per-agent PPO update aggregates (megabatch mode; empty otherwise).
+    pub agent_update_stats: Vec<AgentUpdateStats>,
     pub final_return: f64,
     /// Per-agent `InfluenceDataset::fingerprint` at the end of the run —
     /// the dataset half of the async-collect determinism contract

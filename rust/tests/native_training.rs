@@ -1,0 +1,398 @@
+//! Native PPO training invariants (no Python, no XLA): the fused
+//! [N]-wide update path (`TrainBank` + `PpoTrainer::update_fused` +
+//! `ppo_update_b`) against its per-agent reference, and full-run
+//! determinism of `epochs > 0` training on the default build.
+//!
+//! The contract under test (DESIGN.md §13):
+//!
+//! * `update_fused` is **bit-identical** to N sequential
+//!   `update_megabatch` calls in agent order — same params, same Adam
+//!   moments, same step counters, same RNG stream positions, same
+//!   metrics — at any (N, R), because the per-agent arithmetic is
+//!   row-independent and the epoch shuffles are pre-drawn from each
+//!   agent's own stream in agent order.
+//! * A megabatch fill tick issues exactly `epochs × minibatches` fused
+//!   `ppo_update_b` calls, independent of N and R; the B=1 `ppo_update`
+//!   artifact stays cold.
+//! * The fused path and the per-agent fallback (artifact set without
+//!   `ppo_update_b`) produce bit-identical training runs at any pool
+//!   width.
+//! * A full `epochs > 0` coordinator run on the native backend is
+//!   deterministic: two runs with the same seed produce bit-identical
+//!   RunLogs (curves, final return, fingerprints, update stats).
+//!
+//! Under the `xla` feature the placeholder HLO files cannot compile, so
+//! everything here is native-only.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::{AgentWorker, DialsCoordinator, LsMegabatch};
+use dials::exec::WorkerPool;
+use dials::nn::NetState;
+use dials::ppo::{FusedAgent, PpoTrainer, RolloutBuffer, UpdateMetrics};
+use dials::runtime::{synth, ArtifactSet, Engine, TrainBank};
+use dials::util::metrics::RunLog;
+use dials::util::rng::Pcg64;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_native_training").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 13).unwrap();
+    dir
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One draw from a clone: fingerprints the stream position without
+/// consuming it.
+fn probe(rng: &Pcg64) -> u64 {
+    rng.clone().next_u64()
+}
+
+/// Synthetic but shape-correct rollout: `len` rows of plausible PPO data
+/// drawn from `rng` (episode boundaries included so GAE restarts are
+/// exercised).
+fn synth_rollout(
+    len: usize,
+    obs_dim: usize,
+    h_dim: usize,
+    act_dim: usize,
+    rng: &mut Pcg64,
+) -> RolloutBuffer {
+    let mut buf = RolloutBuffer::new(len, obs_dim, h_dim);
+    for t in 0..len {
+        let obs: Vec<f32> = (0..obs_dim).map(|_| rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..h_dim).map(|_| 0.5 * rng.normal() as f32).collect();
+        let action = rng.below(act_dim as u64) as usize;
+        let logp = -(act_dim as f32).ln() + 0.2 * rng.normal() as f32;
+        let reward = rng.normal() as f32;
+        let value = 0.3 * rng.normal() as f32;
+        let done = t % 13 == 12;
+        buf.push(&obs, &h, action, logp, reward, value, done);
+    }
+    buf
+}
+
+struct Fixture {
+    nets: Vec<NetState>,
+    rngs: Vec<Pcg64>,
+    /// `bufs[i][r]` = agent i's replica-r rollout.
+    bufs: Vec<Vec<RolloutBuffer>>,
+    last_values: Vec<Vec<f32>>,
+}
+
+fn fixture(arts: &ArtifactSet, n: usize, reps: usize, rollout: usize, seed: u64) -> Fixture {
+    let spec = &arts.spec;
+    let mut root = Pcg64::new(seed, 5150);
+    let mut nets = Vec::new();
+    let mut rngs = Vec::new();
+    let mut bufs = Vec::new();
+    let mut last_values = Vec::new();
+    for i in 0..n {
+        let mut rng = root.split(i as u64 + 1);
+        nets.push(NetState::jittered(&arts.policy_init, &mut rng, 0.02));
+        bufs.push(
+            (0..reps)
+                .map(|_| {
+                    synth_rollout(
+                        rollout, spec.obs_dim, spec.policy_hstate, spec.act_dim, &mut rng,
+                    )
+                })
+                .collect(),
+        );
+        last_values.push((0..reps).map(|_| 0.4 * rng.normal() as f32).collect());
+        rngs.push(rng);
+    }
+    Fixture { nets, rngs, bufs, last_values }
+}
+
+fn assert_metrics_eq(ctx: &str, a: &UpdateMetrics, b: &UpdateMetrics) {
+    assert_eq!(a.minibatches, b.minibatches, "{ctx}: minibatches");
+    assert_eq!(a.total.to_bits(), b.total.to_bits(), "{ctx}: total loss");
+    assert_eq!(a.pg.to_bits(), b.pg.to_bits(), "{ctx}: pg loss");
+    assert_eq!(a.vf.to_bits(), b.vf.to_bits(), "{ctx}: vf loss");
+    assert_eq!(a.entropy.to_bits(), b.entropy.to_bits(), "{ctx}: entropy");
+}
+
+#[test]
+fn fused_update_is_bit_identical_to_sequential_reference() {
+    // N = 3 is deliberately not a square: the trainer-level contract has
+    // no grid assumption. Both domains so the recurrent (GRU) backward
+    // path is covered too.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        for (n, reps) in [(1usize, 1usize), (1, 4), (3, 1), (3, 4)] {
+            let dir = synth_dir(&format!("fused_n{n}_r{reps}"), domain);
+            let engine = Engine::cpu().unwrap();
+            let arts = ArtifactSet::load(&engine, &dir, domain).unwrap();
+            let trainer = PpoTrainer::new(PpoConfig {
+                rollout_len: 32,
+                minibatch: 16,
+                epochs: 2,
+                ..Default::default()
+            });
+            let f_seq = fixture(&arts, n, reps, 32, 99);
+            let f_fus = fixture(&arts, n, reps, 32, 99);
+
+            // Sequential reference: one update_megabatch per agent, in
+            // agent order.
+            let mut seq_nets = f_seq.nets;
+            let mut seq_rngs = f_seq.rngs;
+            let mut seq_metrics = Vec::new();
+            for i in 0..n {
+                let refs: Vec<&RolloutBuffer> = f_seq.bufs[i].iter().collect();
+                seq_metrics.push(
+                    trainer
+                        .update_megabatch(
+                            &arts,
+                            &mut seq_nets[i],
+                            &refs,
+                            &f_seq.last_values[i],
+                            &mut seq_rngs[i],
+                        )
+                        .unwrap(),
+                );
+            }
+
+            // Fused path: one TrainBank chain for all agents.
+            let mut fus_nets = f_fus.nets;
+            let mut fus_rngs = f_fus.rngs;
+            let mut bank = TrainBank::new(n, arts.spec.policy_params);
+            let mut agents: Vec<FusedAgent<'_>> = fus_nets
+                .iter_mut()
+                .zip(fus_rngs.iter_mut())
+                .enumerate()
+                .map(|(i, (net, rng))| FusedAgent {
+                    net,
+                    bufs: f_fus.bufs[i].iter().collect(),
+                    last_values: &f_fus.last_values[i],
+                    rng,
+                })
+                .collect();
+            let fus_metrics = trainer.update_fused(&arts, &mut bank, &mut agents).unwrap();
+            drop(agents);
+
+            assert_eq!(fus_metrics.len(), n);
+            for i in 0..n {
+                let ctx = format!("{domain:?} N={n} R={reps} agent {i}");
+                assert_eq!(bits(&seq_nets[i].flat.data), bits(&fus_nets[i].flat.data), "{ctx}: params");
+                assert_eq!(bits(&seq_nets[i].m.data), bits(&fus_nets[i].m.data), "{ctx}: adam m");
+                assert_eq!(bits(&seq_nets[i].v.data), bits(&fus_nets[i].v.data), "{ctx}: adam v");
+                assert_eq!(seq_nets[i].step, fus_nets[i].step, "{ctx}: step counter");
+                assert_eq!(seq_nets[i].version, fus_nets[i].version, "{ctx}: version");
+                assert_eq!(probe(&seq_rngs[i]), probe(&fus_rngs[i]), "{ctx}: rng position");
+                assert_metrics_eq(&ctx, &seq_metrics[i], &fus_metrics[i]);
+                assert!(
+                    seq_metrics[i].minibatches > 0,
+                    "{ctx}: the update must actually have run minibatches"
+                );
+            }
+        }
+    }
+}
+
+/// Config driving the megabatch coordinator path with real `epochs > 0`
+/// native updates: rollout 32 < total 64 fills every buffer twice.
+fn train_cfg(
+    domain: Domain,
+    dir: &std::path::Path,
+    ls_replicas: usize,
+    threads: usize,
+    seed: u64,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::UntrainedDials,
+        grid_side: 2,
+        total_steps: 64,
+        aip_train_freq: 64,
+        aip_dataset: 40,
+        aip_epochs: 1,
+        eval_every: 32,
+        eval_episodes: 2,
+        horizon: 48,
+        seed,
+        ppo: PpoConfig { rollout_len: 32, minibatch: 16, epochs: 2, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads,
+        gs_batch: true,
+        gs_shards: 0,
+        async_eval: 0,
+        async_collect: 0,
+        ls_replicas,
+        save_ckpt_every: 0,
+    }
+}
+
+/// Drive `LsMegabatch` for `steps` ticks against `arts`; returns the
+/// workers for state comparison.
+fn run_megabatch(
+    arts: &ArtifactSet,
+    coord: &DialsCoordinator,
+    cfg: &ExperimentConfig,
+    steps: usize,
+    reps: usize,
+    threads: usize,
+) -> (Vec<AgentWorker>, LsMegabatch) {
+    let trainer = PpoTrainer::new(cfg.ppo.clone());
+    let mut workers = coord.make_workers(cfg.seed);
+    let mut mega = LsMegabatch::new(arts, cfg, &workers, reps);
+    let pool = WorkerPool::new(threads);
+    mega.train_segment(arts, &trainer, &mut workers, &pool, steps, cfg.horizon).unwrap();
+    (workers, mega)
+}
+
+#[test]
+fn fused_fill_ticks_are_call_count_pinned() {
+    // epochs × minibatches calls per fill tick, independent of N and R:
+    // with epochs = 2 and R·rollout/mb minibatches, 64 ticks at rollout 32
+    // give 2 fill ticks → 2 · 2 · (R·32/16) fused calls total. The B=1
+    // update artifact must stay cold.
+    let domain = Domain::Traffic;
+    for reps in [1usize, 4] {
+        let dir = synth_dir(&format!("calls_r{reps}"), domain);
+        let engine = Engine::cpu().unwrap();
+        let cfg = train_cfg(domain, &dir, reps, 1, 9);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let arts = coord.artifacts();
+        let (_, mega) = run_megabatch(arts, &coord, &cfg, 64, reps, 1);
+        assert!(mega.fused(), "synth artifacts must serve the fused path");
+        let minibatches = reps * 32 / 16;
+        let fill_ticks = 2u64;
+        assert_eq!(
+            arts.ppo_update_b.as_ref().unwrap().call_count(),
+            fill_ticks * (2 * minibatches) as u64,
+            "R={reps}: epochs × minibatches fused calls per fill tick"
+        );
+        assert_eq!(
+            arts.ppo_update.call_count(),
+            0,
+            "R={reps}: the B=1 update artifact stays cold on the fused path"
+        );
+        let stats = mega.update_stats();
+        assert_eq!(stats.len(), cfg.n_agents());
+        for s in &stats {
+            assert_eq!(s.updates, fill_ticks, "agent {}: one update per fill tick", s.agent);
+        }
+    }
+}
+
+#[test]
+fn fused_path_matches_per_agent_fallback_at_any_thread_count() {
+    // The same run with the fused path vs an artifact set stripped of
+    // `ppo_update_b` (the automatic fallback) must be bit-identical —
+    // trained params included — at 1 and 4 pool threads.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("fallback", domain);
+        let engine = Engine::cpu().unwrap();
+        let cfg = train_cfg(domain, &dir, 2, 1, 9);
+        let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();
+        let mut stripped = ArtifactSet::load(&engine, &dir, domain).unwrap();
+        Arc::get_mut(&mut stripped).unwrap().ppo_update_b = None;
+
+        let (fused_w, fused_m) = run_megabatch(coord.artifacts(), &coord, &cfg, 64, 2, 1);
+        assert!(fused_m.fused());
+        for threads in [1usize, 4] {
+            let (fb_w, fb_m) = run_megabatch(&stripped, &coord, &cfg, 64, 2, threads);
+            assert!(!fb_m.fused(), "stripped set must take the per-agent fallback");
+            for (a, b) in fused_w.iter().zip(fb_w.iter()) {
+                let ctx = format!("{domain:?} agent {} (threads {threads})", a.id);
+                assert_eq!(
+                    bits(&a.policy.net.flat.data),
+                    bits(&b.policy.net.flat.data),
+                    "{ctx}: trained params"
+                );
+                assert_eq!(
+                    bits(&a.policy.net.m.data),
+                    bits(&b.policy.net.m.data),
+                    "{ctx}: adam m"
+                );
+                assert_eq!(a.policy.net.step, b.policy.net.step, "{ctx}: step counter");
+                assert_eq!(a.env_steps, b.env_steps, "{ctx}: env_steps");
+                assert_eq!(probe(&a.rng), probe(&b.rng), "{ctx}: rng position");
+                assert_eq!(
+                    a.recent_reward.to_bits(),
+                    b.recent_reward.to_bits(),
+                    "{ctx}: reward EMA"
+                );
+            }
+            // Per-agent update aggregates match across paths too.
+            let (sa, sb) = (fused_m.update_stats(), fb_m.update_stats());
+            for (x, y) in sa.iter().zip(sb.iter()) {
+                assert_eq!(x.updates, y.updates, "agent {}: update count", x.agent);
+                assert_eq!(
+                    x.mean_total.to_bits(),
+                    y.mean_total.to_bits(),
+                    "agent {}: mean loss",
+                    x.agent
+                );
+            }
+        }
+    }
+}
+
+fn deterministic_view(log: &RunLog) -> (Vec<(usize, u64)>, Vec<(usize, u64)>, u64, Vec<u64>, usize) {
+    (
+        log.eval_curve.iter().map(|p| (p.step, p.value.to_bits())).collect(),
+        log.ce_curve.iter().map(|p| (p.step, p.value.to_bits())).collect(),
+        log.final_return.to_bits(),
+        log.dataset_fingerprints.clone(),
+        log.checkpoint_saves,
+    )
+}
+
+#[test]
+fn native_epochs_gt_0_runlog_is_deterministic() {
+    // Full coordinator runs with real native PPO updates (`epochs = 2`,
+    // two fill ticks): same seed → bit-identical RunLog, different seed →
+    // different curves. Both domains, two seeds each.
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("runlog", domain);
+        let engine = Engine::cpu().unwrap();
+        let run = |seed: u64| {
+            let cfg = train_cfg(domain, &dir, 2, 1, seed);
+            DialsCoordinator::new(&engine, cfg).unwrap().run().unwrap()
+        };
+        let mut logs = Vec::new();
+        for seed in [5u64, 6] {
+            let a = run(seed);
+            let b = run(seed);
+            assert!(a.eval_curve.len() >= 3, "{domain:?}: expected initial + boundary evals");
+            assert_eq!(
+                deterministic_view(&a),
+                deterministic_view(&b),
+                "{domain:?} seed {seed}: RunLog diverged between identical runs"
+            );
+            assert_eq!(
+                a.agent_update_stats.len(),
+                b.agent_update_stats.len(),
+                "{domain:?} seed {seed}"
+            );
+            for (x, y) in a.agent_update_stats.iter().zip(b.agent_update_stats.iter()) {
+                assert_eq!(x.updates, y.updates, "{domain:?} seed {seed} agent {}", x.agent);
+                assert_eq!(
+                    x.mean_total.to_bits(),
+                    y.mean_total.to_bits(),
+                    "{domain:?} seed {seed} agent {}",
+                    x.agent
+                );
+            }
+            assert!(
+                a.agent_update_stats.iter().all(|s| s.updates == 2),
+                "{domain:?} seed {seed}: both fill ticks must have updated every agent"
+            );
+            assert!(a.ls_update_seconds > 0.0, "{domain:?}: update split recorded");
+            logs.push(a);
+        }
+        assert_ne!(
+            deterministic_view(&logs[0]).0,
+            deterministic_view(&logs[1]).0,
+            "{domain:?}: different seeds must produce different eval curves"
+        );
+    }
+}
