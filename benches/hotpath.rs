@@ -25,7 +25,11 @@
 //!   updates (R ∈ {8, 64, 512}) in fused (`ppo_update_b`, one call chain
 //!   for all N agents) vs per-agent fallback mode and reports
 //!   `update_wall_s` — the update share of the segment wall, growth-gated
-//!   by tools/bench_diff — plus heap bytes per update.
+//!   by tools/bench_diff — plus heap bytes per update;
+//! * the AIP-retrain section times one whole-system influence retrain
+//!   (N agents × epochs cross-entropy Adam steps) fused (`aip_update_b`)
+//!   vs per-agent fallback and reports `aip_update_wall_s`, growth-gated
+//!   by tools/bench_diff.
 //!
 //! Results are printed, saved as `results/hotpath.csv`, and emitted as
 //! machine-readable `BENCH_hotpath.json` in the working directory (CI
@@ -79,6 +83,10 @@ struct JsonRow {
     /// (`RunLog::influence_seconds` with `aip_epochs = 0`) — the
     /// blocking-vs-async collect comparison (NaN = not a collect row).
     collect_wall_s: f64,
+    /// Wall seconds of one whole-system AIP retrain (N agents × `epochs`
+    /// gradient steps) — the fused-vs-per-agent comparison (NaN = not an
+    /// AIP retrain row). Gated by bench_diff.
+    aip_update_wall_s: f64,
     /// `dials serve` end-to-end request latency percentiles in
     /// microseconds (NaN = not a serve row). Gated by bench_diff.
     serve_p50_us: f64,
@@ -106,7 +114,8 @@ fn main() -> Result<()> {
         "hot path microbenchmarks",
         &[
             "op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s",
-            "ls steps/s", "upd wall", "seg+eval wall", "collect wall", "serve p50", "serve p99",
+            "ls steps/s", "upd wall", "seg+eval wall", "collect wall", "aip wall", "serve p50",
+            "serve p99",
         ],
     );
     let mut json: Vec<JsonRow> = Vec::new();
@@ -620,7 +629,7 @@ fn main() -> Result<()> {
                 &mut table, &mut json,
                 &format!("coordinator run, {label} (16 agents)"),
                 mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN,
-                f64::NAN, mean, f64::NAN, f64::NAN, f64::NAN,
+                f64::NAN, mean, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
             );
         }
         println!(
@@ -696,6 +705,102 @@ fn main() -> Result<()> {
              {:.3}s vs async {:.3}s on-path collect -> {:.2}x",
             collect_walls[0], collect_walls[1], collect_walls[0] / collect_walls[1]
         );
+    }
+
+    // ---- fused [N]-wide AIP retrains on the native CE backward kernels
+    //
+    // The influence twin of the fused-PPO section: one whole-system AIP
+    // retrain (N agents x `epochs` cross-entropy Adam steps over their
+    // influence datasets) on the fused path — `aip_update_b`, one call
+    // per epoch for all N packed state rows — vs the per-agent
+    // `dataset.train` fallback the coordinator drops to when the batched
+    // executable is absent. Results are bit-identical either way
+    // (tests/native_retrain.rs); the aip-wall column is the wall seconds
+    // of one whole retrain, growth-gated by tools/bench_diff.
+    #[cfg(not(feature = "xla"))]
+    {
+        use dials::influence::{train_aip_fused, FusedAipAgent, InfluenceDataset};
+        use dials::nn::NetState;
+        use dials::runtime::{synth, ArtifactSet, NetSpec};
+
+        fn build_dataset(
+            spec: &NetSpec,
+            n_eps: usize,
+            ep_len: usize,
+            rng: &mut Pcg64,
+        ) -> InfluenceDataset {
+            let mut ds = InfluenceDataset::new(spec.aip_feat, spec.aip_heads, n_eps * ep_len);
+            let classes = if spec.aip_recurrent { spec.aip_cls as u64 } else { 2 };
+            let mut feat = vec![0.0f32; spec.aip_feat];
+            let mut label = vec![0.0f32; spec.aip_heads];
+            for _ in 0..n_eps {
+                ds.begin_episode();
+                for _ in 0..ep_len {
+                    for f in feat.iter_mut() {
+                        *f = 0.5 * rng.normal() as f32;
+                    }
+                    for l in label.iter_mut() {
+                        *l = rng.below(classes) as f32;
+                    }
+                    ds.push(&feat, &label);
+                }
+            }
+            ds
+        }
+
+        let n = 16usize;
+        let epochs = 8usize;
+        for domain in [Domain::Traffic, Domain::Warehouse] {
+            let dir = std::env::temp_dir()
+                .join("dials_hotpath_synth")
+                .join(format!("aip_retrain_{}", domain.name()));
+            let _ = std::fs::remove_dir_all(&dir);
+            synth::write_native_artifacts(&dir, domain, 3)?;
+            let arts = ArtifactSet::load(&engine, &dir, domain)?;
+            let spec = &arts.spec;
+            let ep_len = spec.aip_seq.max(1) + 4;
+            let mut root = Pcg64::new(23, 4242);
+            let mut datasets = Vec::new();
+            let mut nets = Vec::new();
+            for i in 0..n {
+                let mut rng = root.split(i as u64 + 1);
+                nets.push(NetState::jittered(&arts.aip_init, &mut rng, 0.02));
+                datasets.push(build_dataset(spec, 8, ep_len, &mut rng));
+            }
+            for (label, fused) in [("fused", true), ("per-agent", false)] {
+                let mut my_nets = nets.clone();
+                let mut rngs: Vec<Pcg64> =
+                    (0..n).map(|i| Pcg64::new(29, i as u64)).collect();
+                let mut retrain = |nets: &mut [NetState], rngs: &mut [Pcg64]| {
+                    if fused {
+                        let mut agents: Vec<FusedAipAgent<'_>> = nets
+                            .iter_mut()
+                            .zip(rngs.iter_mut())
+                            .zip(datasets.iter())
+                            .map(|((net, rng), dataset)| FusedAipAgent { net, dataset, rng })
+                            .collect();
+                        train_aip_fused(&arts, &mut agents, epochs).unwrap();
+                    } else {
+                        for ((net, rng), dataset) in
+                            nets.iter_mut().zip(rngs.iter_mut()).zip(datasets.iter())
+                        {
+                            dataset.train(&arts, net, epochs, rng).unwrap();
+                        }
+                    }
+                };
+                // warm-up: bank/device-slot allocation and scratch sizing
+                retrain(&mut my_nets, &mut rngs);
+                let (mean, min) = time_n(3, || retrain(&mut my_nets, &mut rngs));
+                push_row_aip(
+                    &mut table, &mut json,
+                    &format!(
+                        "{} AIP retrain x{epochs} epochs ({label}, N={n})",
+                        domain.name()
+                    ),
+                    mean, min, "1 retrain", mean,
+                );
+            }
+        }
     }
 
     // ---- dials serve: dynamic-batching inference over a policy bank
@@ -805,7 +910,7 @@ fn push_row_steps(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step,
-        steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -824,7 +929,7 @@ fn push_row_ls(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, calls_per_step, f64::NAN,
-        ls_steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        ls_steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -847,7 +952,7 @@ fn push_row_update(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_update, peak_extra, f64::NAN, f64::NAN,
-        ls_steps_per_s, update_wall_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        ls_steps_per_s, update_wall_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -864,7 +969,24 @@ fn push_row_collect(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
-        f64::NAN, collect_wall_s, f64::NAN, f64::NAN,
+        f64::NAN, collect_wall_s, f64::NAN, f64::NAN, f64::NAN,
+    );
+}
+
+/// `push_row` for the fused-vs-per-agent AIP retrain rows: the aip-wall
+/// column carries the wall seconds of one whole-system retrain.
+fn push_row_aip(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    aip_update_wall_s: f64,
+) {
+    push_row_full(
+        table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        f64::NAN, f64::NAN, aip_update_wall_s, f64::NAN, f64::NAN,
     );
 }
 
@@ -884,7 +1006,7 @@ fn push_row_serve(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, steps_per_s, f64::NAN,
-        f64::NAN, f64::NAN, f64::NAN, serve_p50_us, serve_p99_us,
+        f64::NAN, f64::NAN, f64::NAN, f64::NAN, serve_p50_us, serve_p99_us,
     );
 }
 
@@ -906,6 +1028,7 @@ fn push_row_full(
     update_wall_s: f64,
     seg_eval_wall_s: f64,
     collect_wall_s: f64,
+    aip_update_wall_s: f64,
     serve_p50_us: f64,
     serve_p99_us: f64,
 ) {
@@ -916,6 +1039,7 @@ fn push_row_full(
     let uwall = if update_wall_s.is_nan() { "-".to_string() } else { format!("{update_wall_s:.3}s") };
     let wall = if seg_eval_wall_s.is_nan() { "-".to_string() } else { format!("{seg_eval_wall_s:.3}s") };
     let cwall = if collect_wall_s.is_nan() { "-".to_string() } else { format!("{collect_wall_s:.3}s") };
+    let awall = if aip_update_wall_s.is_nan() { "-".to_string() } else { format!("{aip_update_wall_s:.3}s") };
     let p50 = if serve_p50_us.is_nan() { "-".to_string() } else { format!("{serve_p50_us:.1}us") };
     let p99 = if serve_p99_us.is_nan() { "-".to_string() } else { format!("{serve_p99_us:.1}us") };
     table.row(vec![
@@ -931,6 +1055,7 @@ fn push_row_full(
         uwall,
         wall,
         cwall,
+        awall,
         p50,
         p99,
     ]);
@@ -946,6 +1071,7 @@ fn push_row_full(
         update_wall_s,
         seg_eval_wall_s,
         collect_wall_s,
+        aip_update_wall_s,
         serve_p50_us,
         serve_p99_us,
     });
@@ -962,11 +1088,12 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
         let uwall = if r.update_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.update_wall_s) };
         let wall = if r.seg_eval_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.seg_eval_wall_s) };
         let cwall = if r.collect_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.collect_wall_s) };
+        let awall = if r.aip_update_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.aip_update_wall_s) };
         let p50 = if r.serve_p50_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p50_us) };
         let p99 = if r.serve_p99_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p99_us) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"update_wall_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}, \"serve_p50_us\": {}, \"serve_p99_us\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, uwall, wall, cwall, p50, p99,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"update_wall_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}, \"aip_update_wall_s\": {}, \"serve_p50_us\": {}, \"serve_p99_us\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, uwall, wall, cwall, awall, p50, p99,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -15,6 +15,8 @@ Per domain (traffic, warehouse) this emits:
     <dom>_aip_forward.hlo.txt   (flat,feat[1,F],h[1,H]) -> packed (B=1)
     <dom>_aip_forward_b.hlo.txt batched joint-step AIP forward
     <dom>_aip_update.hlo.txt    one AIP cross-entropy Adam step
+    <dom>_aip_update_b.hlo.txt  fused [N]-wide AIP cross-entropy step (one
+                                call retrains all N agents' packed states)
     <dom>_aip_eval.hlo.txt      batch CE loss (Fig. 4 curves)
     <dom>_policy_init.npk       initial flat policy params
     <dom>_aip_init.npk          initial flat AIP params
@@ -258,6 +260,17 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
     lower_and_write(aip_eval, (_spec(adim), feats, labels),
                     os.path.join(out_dir, f"{d}_aip_eval.hlo.txt"))
 
+    # ---- fused [N]-wide AIP update: one call per retrain epoch updates
+    # every agent's packed AIP state against its own sampled batch row
+    # (the Rust influence::train_aip_fused path).
+    aip_update_b = M.make_aip_update_b(asp, adam, aip_unravel, adim, fshape, lshape)
+    au_b_args = (
+        _spec(batch, 3 * adim + 1),
+        _spec(batch, 1 + int(_np.prod(fshape)) + int(_np.prod(lshape))),
+    )
+    lower_and_write(aip_update_b, au_b_args,
+                    os.path.join(out_dir, f"{d}_aip_update_b.hlo.txt"))
+
     # ---- interface contract for the Rust loader
     meta = {
         "domain": d,
@@ -298,6 +311,12 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
         "adam_b1": cfg.ppo.adam.b1,
         "adam_b2": cfg.ppo.adam.b2,
         "adam_eps": cfg.ppo.adam.eps,
+        # AIP retrain hyperparameters (Table 4) — baked into the
+        # aip_update graphs and bound by the native CE backward kernels.
+        "aip_lr": adam.lr,
+        "aip_adam_b1": adam.b1,
+        "aip_adam_b2": adam.b2,
+        "aip_adam_eps": adam.eps,
     }
     with open(os.path.join(out_dir, f"{d}.meta"), "w") as f:
         for k, v in meta.items():
@@ -326,6 +345,10 @@ def emit_domain(cfg: DomainCfg, out_dir: str, seed: int, goldens: bool, batch: i
         write_golden(
             aip_update, au_args, os.path.join(gd, f"{d}_aip_update"), seed + 4,
             n_cases=1, arg_kinds=adam_kinds,
+        )
+        write_golden(
+            aip_update_b, au_b_args, os.path.join(gd, f"{d}_aip_update_b"), seed + 4,
+            n_cases=1, arg_kinds={0: "nonneg", 1: "tfirst_rows"},
         )
     print(f"[aot] {d}: policy_params={pdim} aip_params={adim}")
 

@@ -432,6 +432,28 @@ def make_aip_update(spec: AipSpec, adam_cfg: AdamCfg, unravel, adim: int,
     return update
 
 
+def make_aip_update_b(spec: AipSpec, adam_cfg: AdamCfg, unravel, adim: int,
+                      batch_shape, label_shape):
+    """Fused [N]-wide AIP cross-entropy step: vmap of `make_aip_update`'s
+    row over all N agents' stacked packed states, so every retrain epoch
+    of the whole system is ONE executable call (the Rust
+    `influence::train_aip_fused` path; the epoch loop and batch sampling
+    still live in Rust). Same caveat as `make_ppo_update_b`: the lowered
+    numerics match the per-agent executable to f32-reassociation
+    tolerance; the native backend's row loop is the bit-identical one,
+    pinned by `tests/native_retrain.rs`.
+
+    (states[N, 3P+1], batches[N, 1 + prod(feats) + prod(labels)])
+        -> states'[N, 3P+1]
+    """
+    row = make_aip_update(spec, adam_cfg, unravel, adim, batch_shape, label_shape)
+
+    def update(states, batches):
+        return jax.vmap(row)(states, batches)
+
+    return update
+
+
 def make_aip_eval(spec: AipSpec, unravel):
     """(flat, feats, labels) -> ce[1] — used for the Fig. 4 CE-loss curves."""
 

@@ -220,6 +220,51 @@ def test_aip_update_descends(spec, seq):
     assert ces[-1] < ces[0], f"CE did not descend: {ces[0]} -> {ces[-1]}"
 
 
+@pytest.mark.parametrize("spec,seq", [(TRAFFIC_AIP, 1), (WARE_AIP, 5)], ids=["fnn", "gru"])
+def test_aip_update_b_matches_per_agent_rows(spec, seq):
+    """The fused [N]-wide AIP update is the per-agent update per row.
+
+    Same contract as test_ppo_update_b_matches_per_agent_rows: allclose
+    under vmap's matmul re-batching; bitwise identity is the native
+    backend's job (rust/tests/native_retrain.rs).
+    """
+    flat, unravel = _flat_aip(spec)
+    adim = flat.shape[0]
+    b, n = 4, 3
+    if spec.recurrent:
+        fshape, lshape = (b, seq, spec.feat), (b, seq, spec.n_heads)
+        label_hi = spec.n_cls
+    else:
+        fshape, lshape = (b, spec.feat), (b, spec.n_heads)
+        label_hi = 2
+    adam = M.AdamCfg(lr=3e-3)
+    upd = jax.jit(M.make_aip_update(spec, adam, unravel, adim, fshape, lshape))
+    upd_b = jax.jit(M.make_aip_update_b(spec, adam, unravel, adim, fshape, lshape))
+    rng = np.random.default_rng(4)
+
+    def mk_batch(t):
+        feats = rng.standard_normal(fshape).astype(np.float32)
+        labels = rng.integers(0, label_hi, lshape).astype(np.float32)
+        return jnp.concatenate([jnp.asarray([float(t)]), jnp.ravel(feats), jnp.ravel(labels)])
+
+    states = jnp.stack([
+        jnp.concatenate([
+            _flat_aip(spec, seed=i + 1)[0], jnp.zeros(2 * adim + 1, jnp.float32),
+        ])
+        for i in range(n)
+    ])
+    seq_s = states
+    fused = states
+    # Chained epochs: Adam moments, params, and the CE tail must track.
+    for t in range(1, 4):
+        batches = jnp.stack([mk_batch(t) for _ in range(n)])
+        seq_s = jnp.stack([upd(seq_s[i], batches[i]) for i in range(n)])
+        fused = upd_b(fused, batches)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(seq_s), rtol=1e-4, atol=1e-6)
+    assert np.all(np.isfinite(np.asarray(fused)))
+    assert not np.array_equal(np.asarray(fused[:, :adim]), np.asarray(states[:, :adim]))
+
+
 def test_aip_ce_loss_matches_manual_bernoulli():
     spec = TRAFFIC_AIP
     flat, unravel = _flat_aip(spec)

@@ -155,6 +155,20 @@ pub struct ExperimentConfig {
     /// eval curves are bit-identical between 0 and 1 for the same seed
     /// (`tests/async_collect_equivalence.rs`).
     pub async_collect: usize,
+    /// Overlap the AIP retrain with the training segment after its
+    /// boundary (`coordinator::AsyncRetrain`): at every retrain boundary
+    /// the job (CE probes + `aip_epochs` gradient steps, fused over all N
+    /// agents when the artifact set allows) launches as a deferred job on
+    /// the worker pool and its result is absorbed at the NEXT segment
+    /// boundary. 0 (default) = the blocking reference path, which runs
+    /// the identical job inline at the launch and parks the result for
+    /// the same absorption point — so the one-segment AIP staleness is
+    /// shared and curves, RNG streams, and dataset fingerprints are
+    /// bit-identical between 0 and 1 for the same seed
+    /// (`tests/native_retrain.rs`). Any value >= 1 enables the single
+    /// overlapped slot (a retrain never outlives the next boundary, so
+    /// deeper queues cannot exist).
+    pub async_retrain: usize,
     /// Megabatch LS training (`coordinator::megabatch`): run this many
     /// local-simulator replicas per agent, stepped SoA-style behind
     /// exactly TWO batched run calls per joint LS tick — one `[N*R]`-row
@@ -195,6 +209,7 @@ impl Default for ExperimentConfig {
             gs_shards: 0,
             async_eval: 0,
             async_collect: 0,
+            async_retrain: 0,
             ls_replicas: 0,
             save_ckpt_every: 0,
         }
@@ -255,6 +270,7 @@ impl ExperimentConfig {
         get_usize!(exp, "gs_shards", cfg.gs_shards);
         get_usize!(exp, "async_eval", cfg.async_eval);
         get_usize!(exp, "async_collect", cfg.async_collect);
+        get_usize!(exp, "async_retrain", cfg.async_retrain);
         get_usize!(exp, "ls_replicas", cfg.ls_replicas);
         get_usize!(exp, "save_ckpt_every", cfg.save_ckpt_every);
         if let Some(v) = exp.get("seed") {
@@ -313,6 +329,7 @@ impl ExperimentConfig {
         cfg.gs_shards = args.get_usize("gs-shards", cfg.gs_shards)?;
         cfg.async_eval = args.get_usize("async-eval", cfg.async_eval)?;
         cfg.async_collect = args.get_usize("async-collect", cfg.async_collect)?;
+        cfg.async_retrain = args.get_usize("async-retrain", cfg.async_retrain)?;
         cfg.ls_replicas = args.get_usize("ls-replicas", cfg.ls_replicas)?;
         cfg.save_ckpt_every = args.get_usize("save-ckpt-every", cfg.save_ckpt_every)?;
         cfg.ppo.rollout_len = args.get_usize("rollout", cfg.ppo.rollout_len)?;
@@ -454,6 +471,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ExperimentConfig::from_cli(&args).unwrap().async_collect, 1);
+    }
+
+    #[test]
+    fn async_retrain_defaults_off_and_parses() {
+        assert_eq!(ExperimentConfig::default().async_retrain, 0);
+        let doc = parse("[experiment]\nasync_retrain = 1\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().async_retrain, 1);
+        let args = crate::util::cli::Args::parse(
+            ["--async-retrain", "1"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().async_retrain, 1);
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Deferred AIP retraining: overlap the whole influence-update phase
+//! (pre-CE probe → retrain → post-CE probe) with the training segment
+//! that follows its boundary (DESIGN.md §14).
+//!
+//! After async eval (PR 4) and async collect (PR 5) moved the GS phases
+//! off the critical path, the AIP retrain itself was the last serial
+//! influence block: every `aip_train_freq` boundary stalled all agents
+//! while the AIPs took their gradient steps. The retrain consumes data
+//! that is already one segment stale by design (the pipelined collection
+//! schedule, DESIGN.md §10), so holding the training loop hostage for it
+//! buys nothing — the paper's influence-sync thesis tolerates one more
+//! segment of AIP staleness.
+//!
+//! **Both modes run the SAME schedule** so they are bit-identical:
+//!
+//! 1. **launch** — at a retrain boundary `B_k` (after the async-collect
+//!    drain has merged the staging datasets), split one retrain RNG off
+//!    every worker's RNG (in agent order — the workers' streams are
+//!    mode-independent), clone the AIP nets, and move the datasets out of
+//!    the workers (an empty unbounded staging dataset is left behind; a
+//!    blocking collect that lands mid-flight pushes into it and the rows
+//!    are replayed at the drain). The job computes, per agent and on its
+//!    own RNG stream: CE before the update (Fig. 4), the `epochs`
+//!    gradient steps, CE after. With `async_retrain = 0` the job body
+//!    runs inline right here (timed `aip_train`, on the critical path);
+//!    with `async_retrain > 0` it is ONE deferred pool job
+//!    (`WorkerPool::submit_deferred`) overlapping the next segment.
+//! 2. **drain** — at the NEXT boundary `B_{k+1}` (and before checkpoint
+//!    saves and at end of run), restore the datasets (replaying any
+//!    placeholder rows through `InfluenceDataset::append_from`), install
+//!    the retrained nets, and push the two CE curve points at steps
+//!    `B_k` / `B_k + 1`. Blocking mode parks its precomputed result and
+//!    absorbs at the same drain point, so the absorption step — and
+//!    therefore every curve, fingerprint, and RNG stream — is identical
+//!    in both modes (`tests/native_retrain.rs`).
+//!
+//! One-segment staleness, both modes: the segment after `B_k` trains on
+//! the pre-retrain AIPs; the retrained AIPs take over at `B_{k+1}`.
+//!
+//! Inside the job the update is **fused** when the artifact set carries
+//! `aip_update_b` and every agent's dataset can assemble a full batch
+//! (`influence::train_aip_fused`: one `aip_update_b` call per epoch over
+//! the `[N, 3P+1]` state stack); otherwise it falls back to the per-agent
+//! `InfluenceDataset::train` chain — bit-identical by construction, so
+//! old artifact sets lose only throughput.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::exec::{DeferredHandle, WorkerPool};
+use crate::influence::{train_aip_fused, FusedAipAgent, InfluenceDataset};
+use crate::nn::NetState;
+use crate::runtime::ArtifactSet;
+use crate::util::metrics::{CurvePoint, RunLog};
+use crate::util::rng::Pcg64;
+
+use super::worker::AgentWorker;
+
+/// What a finished retrain job hands back.
+struct RetrainDone {
+    datasets: Vec<InfluenceDataset>,
+    /// The retrained AIP nets (untouched clones when no step ran).
+    nets: Vec<NetState>,
+    /// Mean CE across agents before / after the update (Fig. 4).
+    ce_pre: Option<f32>,
+    ce_post: Option<f32>,
+    /// Job-internal compute wall, measured inside the job (both modes).
+    secs: f64,
+    fused: bool,
+}
+
+enum PendingJob {
+    /// Overlapped mode: the job is (or will be) running on the pool.
+    Deferred(DeferredHandle<RetrainDone>),
+    /// Blocking mode: the job already ran inline at the launch site; the
+    /// result is parked so absorption happens at the same drain point as
+    /// the overlapped mode.
+    Ready(RetrainDone),
+}
+
+struct Pending {
+    /// Boundary the retrain launched at (labels the CE curve points).
+    step: usize,
+    job: PendingJob,
+}
+
+/// The single-slot deferred-retrain subsystem. Built once per run for
+/// every retraining mode (`SimMode::Dials`); `cfg.async_retrain` only
+/// selects where the job body executes.
+pub struct AsyncRetrain {
+    arts: Arc<ArtifactSet>,
+    pool: Arc<WorkerPool>,
+    epochs: usize,
+    overlap: bool,
+    pending: Option<Pending>,
+    /// Launch steps in order (test observability).
+    history: Vec<usize>,
+    /// Sum of job-internal compute walls (both modes).
+    compute_seconds: f64,
+    fused_retrains: usize,
+    fallback_retrains: usize,
+}
+
+impl AsyncRetrain {
+    pub fn new(arts: &Arc<ArtifactSet>, pool: &Arc<WorkerPool>, cfg: &ExperimentConfig) -> Self {
+        AsyncRetrain {
+            arts: Arc::clone(arts),
+            pool: Arc::clone(pool),
+            epochs: cfg.aip_epochs,
+            overlap: cfg.async_retrain > 0,
+            pending: None,
+            history: Vec::new(),
+            compute_seconds: 0.0,
+            fused_retrains: 0,
+            fallback_retrains: 0,
+        }
+    }
+
+    /// Launch the retrain for boundary `step`. Splits one RNG off every
+    /// worker's stream (in agent order, identically in both modes), clones
+    /// the AIP nets, and moves the datasets into the job. Call AFTER the
+    /// async-collect drain so the job sees the freshly-merged data.
+    pub fn launch(&mut self, workers: &mut [AgentWorker], step: usize) -> Result<()> {
+        if self.pending.is_some() {
+            bail!(
+                "retrain launch at step {step} while the retrain from step {} is still \
+                 pending — the drain-at-next-boundary discipline was violated",
+                self.history.last().copied().unwrap_or(0)
+            );
+        }
+        let mut datasets = Vec::with_capacity(workers.len());
+        let mut nets = Vec::with_capacity(workers.len());
+        let mut rngs = Vec::with_capacity(workers.len());
+        for w in workers.iter_mut() {
+            rngs.push(w.rng.split(step as u64));
+            nets.push(w.aip.net.clone());
+            let placeholder = w.dataset.staging_like();
+            datasets.push(std::mem::replace(&mut w.dataset, placeholder));
+        }
+        self.history.push(step);
+
+        let arts = Arc::clone(&self.arts);
+        let epochs = self.epochs;
+        let job = move || retrain_job(&arts, datasets, nets, rngs, epochs);
+        let job = if self.overlap {
+            PendingJob::Deferred(self.pool.submit_deferred(job))
+        } else {
+            PendingJob::Ready(job().with_context(|| format!("AIP retrain at step {step}"))?)
+        };
+        self.pending = Some(Pending { step, job });
+        Ok(())
+    }
+
+    /// Absorb the pending retrain (if any): block until the job lands,
+    /// restore every worker's dataset (replaying rows a blocking collect
+    /// pushed into the placeholder mid-flight), install the retrained
+    /// nets, and push the CE curve points. Called at every segment
+    /// boundary, before checkpoint saves, and at end of run. Returns
+    /// whether a retrain actually drained.
+    pub fn drain_into(&mut self, workers: &mut [AgentWorker], log: &mut RunLog) -> Result<bool> {
+        let Some(p) = self.pending.take() else {
+            return Ok(false);
+        };
+        let done = match p.job {
+            PendingJob::Deferred(h) => h
+                .wait()
+                .with_context(|| format!("async AIP retrain (launched step {}) failed", p.step))?,
+            PendingJob::Ready(d) => d,
+        };
+        debug_assert_eq!(done.datasets.len(), workers.len());
+        let nets_and_data = done.datasets.into_iter().zip(done.nets);
+        for (w, (mut ds, net)) in workers.iter_mut().zip(nets_and_data) {
+            // w.dataset currently holds the placeholder; swap the real
+            // dataset back and replay whatever landed in the placeholder.
+            std::mem::swap(&mut w.dataset, &mut ds);
+            w.dataset.append_from(&mut ds);
+            w.aip.net = net;
+        }
+        if let Some(ce) = done.ce_pre {
+            log.ce_curve.push(CurvePoint { step: p.step, value: ce as f64 });
+        }
+        if let Some(ce) = done.ce_post {
+            log.ce_curve.push(CurvePoint { step: p.step + 1, value: ce as f64 });
+        }
+        self.compute_seconds += done.secs;
+        if done.fused {
+            self.fused_retrains += 1;
+        } else {
+            self.fallback_retrains += 1;
+        }
+        Ok(true)
+    }
+
+    /// Whether a retrain is currently in flight (or parked, blocking mode).
+    pub fn pending_len(&self) -> usize {
+        usize::from(self.pending.is_some())
+    }
+
+    /// Launch steps so far, in order.
+    pub fn launch_steps(&self) -> &[usize] {
+        &self.history
+    }
+
+    /// Total job-internal compute seconds — overlapped with training in
+    /// async mode, a subset of the `aip_train` timer in blocking mode.
+    pub fn compute_seconds(&self) -> f64 {
+        self.compute_seconds
+    }
+
+    /// Drained retrains that ran the fused `[N]`-wide update.
+    pub fn fused_retrains(&self) -> usize {
+        self.fused_retrains
+    }
+
+    /// Drained retrains that took the per-agent fallback chain.
+    pub fn fallback_retrains(&self) -> usize {
+        self.fallback_retrains
+    }
+}
+
+/// The job body: per agent (all on the agent's own RNG stream, in order)
+/// CE before the update, the `epochs` gradient steps, CE after. Fused
+/// when the artifact set and every dataset allow it; the per-agent
+/// fallback is bit-identical (`tests/native_retrain.rs`).
+fn retrain_job(
+    arts: &ArtifactSet,
+    datasets: Vec<InfluenceDataset>,
+    mut nets: Vec<NetState>,
+    mut rngs: Vec<Pcg64>,
+    epochs: usize,
+) -> Result<RetrainDone> {
+    let t0 = Instant::now();
+    let ce_pre = mean_ce(arts, &datasets, &nets, &mut rngs)?;
+    let spec = &arts.spec;
+    let seq = if spec.aip_recurrent { spec.aip_seq } else { 1 };
+    let fused = arts.supports_fused_aip_update(nets.len())
+        && datasets
+            .iter()
+            .all(|d| !d.is_empty() && d.can_sample(spec.aip_recurrent, seq));
+    if fused {
+        let mut agents: Vec<FusedAipAgent<'_>> = nets
+            .iter_mut()
+            .zip(datasets.iter())
+            .zip(rngs.iter_mut())
+            .map(|((net, dataset), rng)| FusedAipAgent { net, dataset, rng })
+            .collect();
+        train_aip_fused(arts, &mut agents, epochs)?;
+    } else {
+        for (i, ((net, ds), rng)) in
+            nets.iter_mut().zip(datasets.iter()).zip(rngs.iter_mut()).enumerate()
+        {
+            ds.train(arts, net, epochs, rng)
+                .with_context(|| format!("AIP retrain for agent {i}"))?;
+        }
+    }
+    let ce_post = mean_ce(arts, &datasets, &nets, &mut rngs)?;
+    Ok(RetrainDone { datasets, nets, ce_pre, ce_post, secs: t0.elapsed().as_secs_f64(), fused })
+}
+
+/// Mean AIP CE over the agents whose dataset can assemble an eval batch
+/// (Fig. 4 right; the retrain-job twin of the old coordinator probe).
+fn mean_ce(
+    arts: &ArtifactSet,
+    datasets: &[InfluenceDataset],
+    nets: &[NetState],
+    rngs: &mut [Pcg64],
+) -> Result<Option<f32>> {
+    let mut acc = 0.0f32;
+    let mut k = 0usize;
+    for ((ds, net), rng) in datasets.iter().zip(nets).zip(rngs.iter_mut()) {
+        if let Some(ce) = ds.evaluate(arts, net, rng)? {
+            acc += ce;
+            k += 1;
+        }
+    }
+    Ok(if k == 0 { None } else { Some(acc / k as f32) })
+}

@@ -13,6 +13,7 @@
 
 mod async_collect;
 mod async_eval;
+mod async_retrain;
 mod checkpoint;
 mod collect;
 mod evaluate;
@@ -22,6 +23,7 @@ mod worker;
 
 pub use async_collect::AsyncCollect;
 pub use async_eval::AsyncEval;
+pub use async_retrain::AsyncRetrain;
 pub use checkpoint::{load_checkpoint, load_policy_checkpoint, save_checkpoint};
 pub use collect::collect_datasets;
 pub(crate) use collect::{collect_staged, stage_collect_banks};
@@ -379,7 +381,6 @@ impl DialsCoordinator {
         // Critical paths accumulate per parallel phase: each segment's CP is
         // the max over agents; segments are sequential, so CPs add up.
         let mut train_cp_total = 0.0f64;
-        let mut aip_cp_total = 0.0f64;
         let mut log = RunLog { label: cfg.mode.label().to_string(), ..Default::default() };
 
         // ONE persistent pool for the whole run: threads are spawned here
@@ -421,6 +422,15 @@ impl DialsCoordinator {
         let mut async_collect = (retrains && cfg.async_collect > 0)
             .then(|| AsyncCollect::new(&self.arts, &pool, cfg, batched, shards));
 
+        // Every retraining run owns an AsyncRetrain: launch at a retrain
+        // boundary, absorb at the NEXT boundary — one-segment staleness in
+        // BOTH modes (cfg.async_retrain only picks where the job body
+        // runs: 0 = inline at the launch, on the critical path; >= 1 = a
+        // deferred pool job overlapping the next segment). Curves, RNG
+        // streams, and fingerprints are bit-identical between the modes
+        // (tests/native_retrain.rs).
+        let mut async_retrain = retrains.then(|| AsyncRetrain::new(&self.arts, &pool, cfg));
+
         // initial evaluation point (step 0)
         match async_eval.as_mut() {
             Some(ae) => {
@@ -452,6 +462,16 @@ impl DialsCoordinator {
         }
 
         for (k, seg) in segments.iter().enumerate() {
+            // ---- absorb the retrain launched at the PREVIOUS boundary
+            // (both modes absorb here — the one-segment-staleness
+            // schedule; blocking mode parks its inline-computed result).
+            // The stall is the residual retrain time the preceding
+            // segment could not hide; blocking mode already paid the
+            // whole job under `aip_train` at the launch.
+            if let Some(ar) = async_retrain.as_mut() {
+                timers.time("aip_drain", || ar.drain_into(&mut workers, &mut log))?;
+            }
+
             // ---- influence phase (DIALS only; Algorithm 1 lines 3-6)
             if seg.retrain_before && retrains {
                 // Drain point: a pending eval never crosses an AIP retrain
@@ -462,34 +482,21 @@ impl DialsCoordinator {
                 }
                 // Drain point: the pipelined collection lands — and its
                 // staging datasets merge into the workers' datasets in
-                // agent order — before the CE probe or the retrain reads
-                // them. The stall is the residual collect time the
-                // preceding segment could not hide; blocking mode paid
-                // the whole loop under this timer at the snapshot point.
+                // agent order — before the retrain job takes them. The
+                // stall is the residual collect time the preceding
+                // segment could not hide; blocking mode paid the whole
+                // loop under this timer at the snapshot point.
                 if let Some(ac) = async_collect.as_mut() {
                     timers.time("collect", || ac.drain_into(&mut workers))?;
                 }
-                // CE BEFORE retraining (Fig. 4), on the data this retrain
-                // consumes — collected at the preceding boundary under
-                // one-segment-stale policies (the pipelined schedule,
-                // DESIGN.md §10; identical in both modes).
-                let ce_pre = mean_ce(&self.arts, &pool, &mut workers)?;
-                if let Some(ce) = ce_pre {
-                    log.ce_curve.push(CurvePoint { step: seg.start, value: ce as f64 });
-                }
-                // parallel AIP retraining (timed per agent by the pool)
-                let durations = pool.run(&mut workers, |_i, w| {
-                    w.train_aip(&self.arts, self.cfg.aip_epochs).map(|_| ())
-                })?;
-                let mut cp = CriticalPath::new();
-                for d in &durations {
-                    cp.record(*d);
-                    timers.add("aip_train", *d);
-                }
-                aip_cp_total += cp.with_slots(cfg.n_agents());
-                if let Some(ce) = mean_ce(&self.arts, &pool, &mut workers)? {
-                    log.ce_curve.push(CurvePoint { step: seg.start + 1, value: ce as f64 });
-                }
+                // Launch the retrain job on the freshly-merged datasets:
+                // the CE probes (Fig. 4) and the `aip_epochs` update run
+                // inside the job, fused over all N agents when the
+                // artifact set allows. Blocking mode computes the job
+                // inline under this timer; overlapped mode only pays the
+                // snapshot (RNG splits + net clones + dataset moves).
+                let ar = async_retrain.as_mut().expect("retraining mode owns the subsystem");
+                timers.time("aip_train", || ar.launch(&mut workers, seg.start))?;
             }
 
             // ---- collect point for the NEXT retrain (the boundary
@@ -565,6 +572,9 @@ impl DialsCoordinator {
             steps_since_save += seg.len;
             if cfg.save_ckpt_every > 0 && steps_since_save >= cfg.save_ckpt_every {
                 if let Some(dir) = save {
+                    if let Some(ar) = async_retrain.as_mut() {
+                        timers.time("aip_drain", || ar.drain_into(&mut workers, &mut log))?;
+                    }
                     if let Some(ae) = async_eval.as_mut() {
                         ae.drain_all(&mut log)?;
                     }
@@ -578,11 +588,15 @@ impl DialsCoordinator {
             }
         }
 
-        // Final drain points: every pending eval lands before final_return
-        // is computed, and any pending collection lands before the
-        // checkpoint save (a snapshot is only ever taken for the NEXT
-        // retrain, which drains it, so this is a safety net — it matters
-        // only if a schedule change ever leaves a tail snapshot).
+        // Final drain points: the tail retrain (launched at the last
+        // retrain boundary) absorbs before anything reads the nets or
+        // datasets, every pending eval lands before final_return is
+        // computed, and any pending collection lands before the
+        // checkpoint save (a collect snapshot is only ever taken for the
+        // NEXT retrain, which drains it, so that one is a safety net).
+        if let Some(ar) = async_retrain.as_mut() {
+            timers.time("aip_drain", || ar.drain_into(&mut workers, &mut log))?;
+        }
         if let Some(ae) = async_eval.as_mut() {
             ae.drain_all(&mut log)?;
             timers.add("eval_compute", ae.compute_seconds());
@@ -607,12 +621,16 @@ impl DialsCoordinator {
                 (timers.get("agent_train") - log.ls_update_seconds).max(0.0);
             log.agent_update_stats = m.update_stats();
         }
-        // On-path influence cost: the snapshot staging plus the inline
-        // loop (blocking) or the residual drain stall (async), plus the
-        // AIP retrain critical path. The overlapped loop seconds are
-        // reported separately as collect_compute (like eval_compute).
+        // On-path influence cost: the collect snapshot staging plus the
+        // inline loop (blocking) or residual drain stall (async), plus
+        // the retrain's on-path share — the launch (which contains the
+        // whole job in blocking mode and only the snapshot in overlapped
+        // mode) and the drain stall. The overlapped job seconds are
+        // reported separately as aip_train_compute_seconds (like
+        // eval_compute / collect_compute).
         let collect_on_path = timers.get("collect_snapshot") + timers.get("collect");
-        log.influence_seconds = collect_on_path + aip_cp_total;
+        let aip_on_path = timers.get("aip_train") + timers.get("aip_drain");
+        log.influence_seconds = collect_on_path + aip_on_path;
         // Runtime totals stay honest under async eval: the snapshot cost
         // stalls training in both modes and is charged to the critical
         // path; the eval compute is overlapped (async) or off-path by
@@ -621,12 +639,12 @@ impl DialsCoordinator {
         log.eval_compute_seconds = timers.get("eval_compute");
         log.collect_snapshot_seconds = timers.get("collect_snapshot");
         log.collect_compute_seconds = timers.get("collect_compute");
-        log.wall_seconds = collect_on_path
-            + timers.get("aip_train")
-            + timers.get("agent_train")
-            + timers.get("eval_snapshot");
+        log.aip_train_compute_seconds =
+            async_retrain.as_ref().map(|ar| ar.compute_seconds()).unwrap_or(0.0);
+        log.wall_seconds =
+            collect_on_path + aip_on_path + timers.get("agent_train") + timers.get("eval_snapshot");
         log.critical_path_seconds =
-            collect_on_path + aip_cp_total + train_cp_total + timers.get("eval_snapshot");
+            collect_on_path + aip_on_path + train_cp_total + timers.get("eval_snapshot");
         Ok(log)
     }
 }
@@ -767,25 +785,6 @@ pub(crate) fn effective_threads(requested: usize, n_agents: usize) -> usize {
     let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let t = if requested == 0 { hw } else { requested };
     t.clamp(1, n_agents)
-}
-
-/// Mean AIP CE over all agents (on their freshly-collected datasets).
-/// Evaluations are independent per agent (each uses its own dataset, net,
-/// and RNG stream), so they fan out over the persistent pool — this runs
-/// twice per retrain (pre/post, Fig. 4) and was a serial loop before.
-fn mean_ce(
-    arts: &ArtifactSet,
-    pool: &WorkerPool,
-    workers: &mut [AgentWorker],
-) -> Result<Option<f32>> {
-    let ces = pool.run_map(workers, |_i, w| w.eval_aip_ce(arts))?.outputs;
-    let mut acc = 0.0f32;
-    let mut k = 0usize;
-    for ce in ces.into_iter().flatten() {
-        acc += ce;
-        k += 1;
-    }
-    Ok(if k == 0 { None } else { Some(acc / k as f32) })
 }
 
 /// Run `task` once per worker over a transient work-stealing pool and

@@ -144,14 +144,10 @@ impl AgentWorker {
         Ok(())
     }
 
-    /// Retrain this agent's AIP on its dataset (paper Algorithm 1 line 5).
-    /// Returns the mean training CE.
-    pub fn train_aip(&mut self, arts: &ArtifactSet, epochs: usize) -> Result<f32> {
-        self.dataset.train(arts, &mut self.aip.net, epochs, &mut self.rng)
-    }
-
-    /// CE of the AIP on the current dataset (Fig. 4 right curves).
-    pub fn eval_aip_ce(&mut self, arts: &ArtifactSet) -> Result<Option<f32>> {
-        self.dataset.evaluate(arts, &self.aip.net, &mut self.rng)
-    }
 }
+
+// AIP retraining (paper Algorithm 1 line 5) no longer lives on the
+// worker: `coordinator::AsyncRetrain` splits a retrain RNG off this
+// worker's stream, clones `aip.net`, moves `dataset` into the job, and
+// runs the CE probes + update there — fused over all N agents through
+// `influence::train_aip_fused` when the artifact set allows.

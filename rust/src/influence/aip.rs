@@ -107,6 +107,8 @@ mod tests {
             aip_hid: 0,
             batch_n: 0,
             batch_replicas: 1,
+            ppo: crate::runtime::layout::PpoHypers::default(),
+            aip: crate::runtime::layout::AipHypers::default(),
         }
     }
 

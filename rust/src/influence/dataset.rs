@@ -214,6 +214,21 @@ impl InfluenceDataset {
         Some((feats, labels))
     }
 
+    /// Whether a training batch can be assembled for `spec`'s AIP — the
+    /// RNG-free twin of the samplers' `None` condition. Sampling
+    /// None-ness is content-only (flat: empty dataset; recurrent: no
+    /// episode holding a full `aip_seq` window) and the dataset is
+    /// immutable during a retrain, so per agent an update run performs
+    /// either all of its epochs or zero — the all-or-zero property the
+    /// fused retrain's eligibility gate relies on.
+    pub fn can_sample(&self, recurrent: bool, seq: usize) -> bool {
+        if recurrent {
+            self.episodes.iter().any(|e| e.len >= seq)
+        } else {
+            self.total_rows > 0
+        }
+    }
+
     fn random_row(&self, rng: &mut Pcg64) -> (&Episode, usize) {
         let mut idx = rng.below(self.total_rows as u64) as usize;
         for ep in &self.episodes {

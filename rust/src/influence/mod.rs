@@ -4,9 +4,11 @@
 
 mod aip;
 mod dataset;
+mod trainer;
 
 pub use aip::AipRuntime;
 pub use dataset::InfluenceDataset;
+pub use trainer::{train_aip_fused, FusedAipAgent};
 
 /// Encode one ALSH step as AIP features: local state ⊕ one-hot action.
 /// (The d-separating set of both domains — App. E.1.)

@@ -1,0 +1,131 @@
+//! Fused [N]-wide AIP retraining: every epoch is ONE `aip_update_b` call
+//! over a [`TrainBank`]'s `[N, 3P+1]` state stack, bit-identical to N
+//! sequential [`InfluenceDataset::train`] calls in agent order (the
+//! equivalence is pinned in `tests/native_retrain.rs`).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::nn::NetState;
+use crate::runtime::{ArtifactSet, DeviceTensor, TrainBank};
+use crate::util::npk::Tensor;
+use crate::util::rng::Pcg64;
+
+use super::InfluenceDataset;
+
+/// One agent's inputs to [`train_aip_fused`]: its mutable AIP net (step
+/// counter + absorbed result), its dataset (immutable for the duration of
+/// the retrain), and its own RNG (batch-sampling stream — consumed
+/// exactly like the sequential per-agent path).
+pub struct FusedAipAgent<'a> {
+    pub net: &'a mut NetState,
+    pub dataset: &'a InfluenceDataset,
+    pub rng: &'a mut Pcg64,
+}
+
+/// Retrain ALL N agents' AIPs as one fused chain: exactly `epochs`
+/// `aip_update_b` calls, independent of N, each consuming an
+/// `[N, batch_len]` staging tensor against the bank's `[N, 3P+1]` state
+/// stack. Returns the per-agent CE of the LAST gradient step — the same
+/// scalar [`InfluenceDataset::train`] reports — and `NAN` (with no
+/// absorption) at `epochs = 0`, also like the sequential path.
+///
+/// Bit-identical to calling [`InfluenceDataset::train`] once per agent in
+/// agent order: the batched artifact runs the identical per-agent update
+/// row, each agent samples its `epochs` batches from its OWN RNG (agent
+/// i's stream is consumed only by agent i's draws, in epoch order — the
+/// epoch-major interleaving cannot reorder a single agent's draws), and
+/// engine calls consume no RNG.
+///
+/// Callers must gate on [`InfluenceDataset::can_sample`] for every agent:
+/// per agent a retrain performs either all of its epochs or zero (the
+/// samplers' `None` condition is content-only and the dataset is
+/// immutable here), so a mixed set must take the sequential fallback to
+/// preserve the ineligible agents' NAN / no-absorb semantics.
+pub fn train_aip_fused(
+    arts: &ArtifactSet,
+    agents: &mut [FusedAipAgent<'_>],
+    epochs: usize,
+) -> Result<Vec<f32>> {
+    ensure!(!agents.is_empty(), "no agents to retrain");
+    let n = agents.len();
+    let spec = &arts.spec;
+    let p = spec.aip_params;
+    let recurrent = spec.aip_recurrent;
+    let seq = if recurrent { spec.aip_seq } else { 1 };
+    for (i, a) in agents.iter().enumerate() {
+        ensure!(
+            a.net.flat.len() == p,
+            "agent {i}: AIP net has {} params, artifact set trains {p}",
+            a.net.flat.len()
+        );
+        ensure!(!a.dataset.is_empty(), "agent {i}: cannot train AIP on an empty dataset");
+        ensure!(
+            a.dataset.can_sample(recurrent, seq),
+            "agent {i}: dataset cannot assemble a full AIP batch — gate the fused \
+             path on InfluenceDataset::can_sample and fall back to per-agent training"
+        );
+    }
+    // Sequential parity at epochs = 0: no gradient step, no absorption,
+    // CE reported as NAN.
+    if epochs == 0 {
+        return Ok(vec![f32::NAN; n]);
+    }
+    ensure!(
+        arts.supports_fused_aip_update(n),
+        "artifact set does not support the fused AIP update at N={n} — \
+         re-run `make artifacts` (or use the per-agent retrain path)"
+    );
+    let exec = arts.aip_update_batched()?;
+    let engine = &arts.engine;
+
+    // Stack all agents' [flat|m|v|ce] rows device-side.
+    let mut bank = TrainBank::with_tail(n, p, 1);
+    for (i, a) in agents.iter().enumerate() {
+        bank.stage(i, a.net)?;
+    }
+
+    // Single packed staging tensor per epoch, one row per agent:
+    // [t | feats | labels], re-staged into one reused device slot.
+    let batch_len = 1 + spec.aip_batch * seq * (spec.aip_feat + spec.aip_heads);
+    let mut t_batch = Tensor::zeros(&[n, batch_len]);
+    let mut d_batch: Option<DeviceTensor> = None;
+    for _epoch in 0..epochs {
+        for (i, a) in agents.iter_mut().enumerate() {
+            let batch = if recurrent {
+                a.dataset.sample_windows(spec.aip_batch, spec.aip_seq, a.rng)
+            } else {
+                a.dataset.sample_flat(spec.aip_batch, a.rng)
+            };
+            let Some((feats, labels)) = batch else {
+                bail!(
+                    "agent {i}: dataset stopped sampling mid-retrain (can_sample is \
+                     content-only and the dataset is immutable here — this is a bug)"
+                );
+            };
+            let base = i * batch_len;
+            a.net.step += 1;
+            t_batch.data[base] = a.net.step as f32;
+            t_batch.data[base + 1..base + 1 + feats.len()].copy_from_slice(&feats.data);
+            t_batch.data[base + 1 + feats.len()..base + batch_len]
+                .copy_from_slice(&labels.data);
+        }
+        engine.upload_to(&t_batch, &mut d_batch)?;
+        let d_state = bank.state(engine)?;
+        exec.run_inout(d_state, d_batch.as_ref().expect("staged"))?;
+    }
+
+    // ONE download for all agents, then per-agent absorption (tail = that
+    // agent's last-step CE).
+    bank.download_into_staged()?;
+    let mut ces = Vec::with_capacity(n);
+    for (i, a) in agents.iter_mut().enumerate() {
+        let row = bank.staged_row(i);
+        let flat = Tensor::new(vec![p], row[..p].to_vec());
+        let m = Tensor::new(vec![p], row[p..2 * p].to_vec());
+        let v = Tensor::new(vec![p], row[2 * p..3 * p].to_vec());
+        a.net.absorb(flat, m, v);
+        bank.mark_absorbed(i, a.net.version);
+        ces.push(row[3 * p]);
+    }
+    Ok(ces)
+}

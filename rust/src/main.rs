@@ -34,7 +34,8 @@ use dials::util::cli::Args;
 const TRAIN_FLAGS: &[&str] = &[
     "config", "domain", "mode", "grid-side", "total-steps", "aip-freq", "aip-dataset",
     "aip-epochs", "eval-every", "eval-episodes", "horizon", "seed", "threads", "artifacts",
-    "gs-batch", "gs-shards", "async-eval", "async-collect", "ls-replicas", "save-ckpt-every",
+    "gs-batch", "gs-shards", "async-eval", "async-collect", "async-retrain", "ls-replicas",
+    "save-ckpt-every",
     "save-ckpt", "load-ckpt", "out", "rollout", "minibatch", "epochs",
 ];
 const EVAL_FLAGS: &[&str] = &["domain", "grid-side", "episodes", "horizon", "seed"];
@@ -116,13 +117,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     eprintln!(
         "[dials] final_return={:.4} wall={:.2}s critical_path={:.2}s (agents={:.2}s \
          influence={:.2}s eval_snapshot={:.3}s eval_compute={:.2}s{} \
-         collect_snapshot={:.3}s collect_compute={:.2}s{})",
+         collect_snapshot={:.3}s collect_compute={:.2}s{} aip_compute={:.2}s{})",
         log.final_return, log.wall_seconds, log.critical_path_seconds,
         log.agent_train_seconds, log.influence_seconds,
         log.eval_snapshot_seconds, log.eval_compute_seconds,
         if cfg.async_eval > 0 { " [overlapped]" } else { "" },
         log.collect_snapshot_seconds, log.collect_compute_seconds,
-        if cfg.async_collect > 0 { " [overlapped]" } else { "" }
+        if cfg.async_collect > 0 { " [overlapped]" } else { "" },
+        log.aip_train_compute_seconds,
+        if cfg.async_retrain > 0 { " [overlapped]" } else { "" }
     );
     if log.checkpoint_saves > 0 {
         eprintln!("[dials] periodic checkpoints written: {}", log.checkpoint_saves);
@@ -299,6 +302,11 @@ train:
   --async-collect N       pipeline Algorithm-2 influence collection over
                           the segment before each AIP retrain (1 = on,
                           0 = blocking reference; DIALS mode only)
+  --async-retrain N       overlap the AIP retrain itself with the next
+                          training segment as a deferred pool job (1 = on,
+                          0 = blocking reference; both modes absorb the
+                          retrained AIPs at the next boundary, so curves
+                          are bit-identical)
   --ls-replicas R         megabatch LS training: R vectorized IALS
                           replicas per agent behind one [N*R]-row forward
                           (0 = per-agent reference path; R=1 is

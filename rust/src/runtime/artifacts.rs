@@ -11,7 +11,7 @@ use crate::config::Domain;
 use crate::sim;
 use crate::util::npk::{read_npk, Tensor};
 
-use super::layout::{AipDims, PolicyDims, PpoHypers};
+use super::layout::{AipDims, AipHypers, PolicyDims, PpoHypers};
 use super::{Engine, Exec};
 
 /// Parsed `<domain>.meta` — the interface contract emitted by aot.py.
@@ -54,6 +54,11 @@ pub struct NetSpec {
     /// `PpoHypers::default()` (the paper Table 6 values) fills in for
     /// artifact sets that predate the keys.
     pub ppo: PpoHypers,
+    /// AIP Adam hyperparameters of the `aip_update` graph (`aip_lr`,
+    /// `aip_adam_b1`, … keys in `.meta`; no clipping by design).
+    /// `AipHypers::default()` (the pinned aot.py values) fills in for
+    /// artifact sets that predate the keys.
+    pub aip: AipHypers,
 }
 
 impl NetSpec {
@@ -84,6 +89,13 @@ impl NetSpec {
         let optf = |k: &str, default: f32| -> f32 {
             kv.get(k).and_then(|v| v.parse::<f32>().ok()).unwrap_or(default)
         };
+        let da = AipHypers::default();
+        let aip = AipHypers {
+            lr: optf("aip_lr", da.lr),
+            adam_b1: optf("aip_adam_b1", da.adam_b1),
+            adam_b2: optf("aip_adam_b2", da.adam_b2),
+            adam_eps: optf("aip_adam_eps", da.adam_eps),
+        };
         let dh = PpoHypers::default();
         let ppo = PpoHypers {
             clip_eps: optf("clip_eps", dh.clip_eps),
@@ -97,6 +109,7 @@ impl NetSpec {
         };
         Ok(NetSpec {
             ppo,
+            aip,
             policy_h1: opt("policy_h1"),
             policy_h2: opt("policy_h2"),
             aip_hid: opt("aip_hid"),
@@ -200,6 +213,7 @@ impl NetSpec {
             batch_n: 0,
             batch_replicas: 1,
             ppo: PpoHypers::default(),
+            aip: AipHypers::default(),
         }
     }
 
@@ -252,6 +266,11 @@ pub struct ArtifactSet {
     /// fused-update work; the coordinator then falls back to N per-agent
     /// `ppo_update` chains.
     pub ppo_update_b: Option<Exec>,
+    /// Fused all-agents AIP update (`[N, 3P+1]` state stack, one call per
+    /// retrain epoch). Absent from artifact sets emitted before the native
+    /// AIP-retrain work; the retrain then falls back to N per-agent
+    /// `aip_update` chains (bit-identical by construction).
+    pub aip_update_b: Option<Exec>,
     pub policy_init: Tensor,
     pub aip_init: Tensor,
     pub dir: PathBuf,
@@ -290,6 +309,7 @@ impl ArtifactSet {
             policy_step_b: load_opt("policy_step_b")?,
             aip_forward_b: load_opt("aip_forward_b")?,
             ppo_update_b: load_opt("ppo_update_b")?,
+            aip_update_b: load_opt("aip_update_b")?,
             policy_init: read_npk(&dir.join(format!("{d}_policy_init.npk")))?,
             aip_init: read_npk(&dir.join(format!("{d}_aip_init.npk")))?,
             spec,
@@ -319,6 +339,14 @@ impl ArtifactSet {
             // The CE evaluator shares the AIP trunk dims; binding it lets
             // DIALS-mode CE monitoring (Fig. 4) run on the native backend.
             set.aip_eval.bind_aip_eval(ad, set.spec.aip_params)?;
+            // The AIP update runs natively too (CE backward row kernels +
+            // in-graph Adam, no clipping); the bound window length lets
+            // the executor derive B from the batch row length.
+            let seq = if ad.recurrent { set.spec.aip_seq.max(1) } else { 1 };
+            set.aip_update.bind_aip_update(ad, set.spec.aip, seq, set.spec.aip_params)?;
+            if let Some(e) = set.aip_update_b.as_mut() {
+                e.bind_aip_update(ad, set.spec.aip, seq, set.spec.aip_params)?;
+            }
         }
         if set.policy_init.len() != set.spec.policy_params {
             bail!(
@@ -372,6 +400,29 @@ impl ArtifactSet {
             && reps >= 1
             && (self.spec.batch_n == 0
                 || (self.spec.batch_n == n && self.spec.batch_replicas == reps))
+    }
+
+    /// Whether the fused all-agents AIP update can run for `n` agents:
+    /// `aip_update_b` is present and, when it was lowered for a fixed N
+    /// (`batch` ≠ 0 in `.meta` — the XLA vmap), that N matches. The
+    /// shape-polymorphic native binding (`batch = 0`) accepts any N (the
+    /// retrain batch size is derived per call, so no replica dimension
+    /// applies). The retrain falls back to the per-agent `aip_update`
+    /// chains when this is false.
+    pub fn supports_fused_aip_update(&self, n: usize) -> bool {
+        self.aip_update_b.is_some()
+            && (self.spec.batch_n == 0 || self.spec.batch_n == n)
+    }
+
+    /// The fused AIP update executable; required by the fused retrain path.
+    pub fn aip_update_batched(&self) -> Result<&Exec> {
+        self.aip_update_b.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact set in {} has no aip_update_b — re-run `make artifacts` \
+                 (or fall back to per-agent AIP updates)",
+                self.dir.display()
+            )
+        })
     }
 
     /// The fused PPO update executable; required by the fused train path.
@@ -448,6 +499,21 @@ mod tests {
         assert_eq!(spec.ppo.clip_eps, 0.2);
         assert_eq!(spec.ppo.lr, 0.001);
         assert_eq!(spec.ppo.vf_coef, 1.0, "untouched keys keep defaults");
+    }
+
+    #[test]
+    fn aip_hyper_keys_parse_with_pinned_defaults() {
+        // absent keys → the pinned aot.py values (lr 1e-4, no clipping)
+        let spec = NetSpec::parse(META).unwrap();
+        assert_eq!(spec.aip, crate::runtime::layout::AipHypers::default());
+        assert_eq!(spec.aip.lr, 1.0e-4);
+        // explicit keys override, and don't leak into the PPO hypers
+        let meta = format!("{META}aip_lr=0.0005\naip_adam_eps=0.0001\n");
+        let spec = NetSpec::parse(&meta).unwrap();
+        assert_eq!(spec.aip.lr, 0.0005);
+        assert_eq!(spec.aip.adam_eps, 0.0001);
+        assert_eq!(spec.aip.adam_b1, 0.9, "untouched keys keep defaults");
+        assert_eq!(spec.ppo, crate::runtime::layout::PpoHypers::default());
     }
 
     #[test]

@@ -142,9 +142,11 @@ impl NetBank {
     }
 }
 
-/// Device-resident stack of all N agents' packed PPO training states:
-/// one `[N, 3P+4]` tensor of `[flat | m | v | metrics]` rows, consumed by
-/// the fused `ppo_update_b` entry point (one call updates every agent).
+/// Device-resident stack of all N agents' packed training states: one
+/// `[N, 3P+tail]` tensor of `[flat | m | v | metrics]` rows, consumed by
+/// a fused update entry point (one call updates every agent). The tail
+/// width is the update family's metrics slot count: 4 for `ppo_update_b`
+/// (`TrainBank::new`), 1 for `aip_update_b` (`TrainBank::with_tail`).
 ///
 /// Version-tracked like [`NetBank`], with one extra twist: the fused
 /// update mutates the device tensor in place (`run_inout`), so after
@@ -156,8 +158,9 @@ impl NetBank {
 pub struct TrainBank {
     n: usize,
     p: usize,
-    /// Host mirror `[N, 3P+4]`; kept in sync with the device stack so a
-    /// partial re-stage (one agent restored from a checkpoint, say) can
+    tail: usize,
+    /// Host mirror `[N, 3P+tail]`; kept in sync with the device stack so
+    /// a partial re-stage (one agent restored from a checkpoint, say) can
     /// re-upload the whole stack without clobbering other agents.
     staged: Tensor,
     versions: Vec<Option<u64>>,
@@ -168,11 +171,19 @@ pub struct TrainBank {
 }
 
 impl TrainBank {
+    /// A bank over the PPO packed-row protocol (`[3P+4]` rows).
     pub fn new(n: usize, p: usize) -> Self {
+        Self::with_tail(n, p, 4)
+    }
+
+    /// A bank with an explicit metrics-tail width (1 for the AIP
+    /// cross-entropy rows, 4 for PPO).
+    pub fn with_tail(n: usize, p: usize, tail: usize) -> Self {
         TrainBank {
             n,
             p,
-            staged: Tensor::zeros(&[n, 3 * p + 4]),
+            tail,
+            staged: Tensor::zeros(&[n, 3 * p + tail]),
             versions: vec![None; n],
             dev: None,
             dirty: false,
@@ -185,9 +196,9 @@ impl TrainBank {
         self.n
     }
 
-    /// Width of one packed row (`3P + 4`).
+    /// Width of one packed row (`3P + tail`).
     pub fn row_len(&self) -> usize {
-        3 * self.p + 4
+        3 * self.p + self.tail
     }
 
     /// Make row `i` current for `net` (`[flat | m | v | 0;4]`). No-op when
@@ -206,7 +217,8 @@ impl TrainBank {
         }
         self.versions[i] = Some(net.version);
         self.rows_recopied += 1;
-        let row = &mut self.staged.data[i * (3 * self.p + 4)..(i + 1) * (3 * self.p + 4)];
+        let w = self.row_len();
+        let row = &mut self.staged.data[i * w..(i + 1) * w];
         row[..self.p].copy_from_slice(&net.flat.data);
         row[self.p..2 * self.p].copy_from_slice(&net.m.data);
         row[2 * self.p..3 * self.p].copy_from_slice(&net.v.data);
@@ -215,7 +227,7 @@ impl TrainBank {
         Ok(())
     }
 
-    /// The device-resident `[N, 3P+4]` stack, mutable so the fused update
+    /// The device-resident `[N, 3P+tail]` stack, mutable so the fused update
     /// can chain `run_inout` calls on it. Re-uploaded only if some row was
     /// re-staged since the last call.
     pub fn state(&mut self, engine: &Engine) -> Result<&mut DeviceTensor> {
@@ -247,7 +259,7 @@ impl TrainBank {
     /// Agent `i`'s packed `[flat | m | v | metrics]` row in the host
     /// mirror (valid after `download_into_staged`).
     pub fn staged_row(&self, i: usize) -> &[f32] {
-        let w = 3 * self.p + 4;
+        let w = self.row_len();
         &self.staged.data[i * w..(i + 1) * w]
     }
 
@@ -944,6 +956,27 @@ mod tests {
         assert!(bank.stage(2, &nets[0]).is_err());
         assert!(bank.stage(0, &net(p + 1, 0.0)).is_err());
         assert!(TrainBank::new(1, p).download_into_staged().is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn train_bank_tail_width_is_parametric() {
+        // The AIP packed rows carry a 1-slot CE tail instead of PPO's 4.
+        let engine = Engine::cpu().unwrap();
+        let p = 3;
+        let mut bank = TrainBank::with_tail(2, p, 1);
+        assert_eq!(bank.row_len(), 3 * p + 1);
+        let mut n1 = net(p, 7.0);
+        n1.m.data.fill(0.5);
+        bank.stage(0, &net(p, 1.0)).unwrap();
+        bank.stage(1, &n1).unwrap();
+        bank.state(&engine).unwrap();
+        bank.download_into_staged().unwrap();
+        assert_eq!(bank.staged_row(0), &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let r1 = bank.staged_row(1);
+        assert_eq!(&r1[..p], &[7.0; 3]);
+        assert_eq!(&r1[p..2 * p], &[0.5; 3]);
+        assert_eq!(r1[3 * p], 0.0, "zero-filled tail");
     }
 
     #[test]

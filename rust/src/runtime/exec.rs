@@ -191,6 +191,19 @@ impl Exec {
         Ok(())
     }
 
+    /// Backend-parity no-op (see `bind_policy`): the compiled `aip_update`
+    /// HLO bakes the CE loss + Adam graph in; dims/hypers/window length
+    /// were fixed by aot.py.
+    pub fn bind_aip_update(
+        &mut self,
+        _dims: crate::runtime::layout::AipDims,
+        _hyp: crate::runtime::layout::AipHypers,
+        _seq: usize,
+        _expect_params: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+
     /// In-place update parity with the native backend: execute the
     /// `(state, batch) -> state'` graph and swap the output buffer into
     /// `state`. PJRT buffers are immutable, so "in place" here means the

@@ -13,10 +13,12 @@
 //!   surface. Since the batch-first redesign it **executes the forward
 //!   artifact families for real** through the pure-Rust row kernels in
 //!   [`layout`] (bound from the `.meta` layer dims), and since the
-//!   fused-update work the **PPO update too** (backward row kernels +
-//!   in-graph Adam, `ppo_update` / fused `ppo_update_b`), so full DIALS
-//!   training at `epochs > 0` runs end-to-end without the XLA toolchain;
-//!   only the AIP update artifact still requires `xla`.
+//!   fused-update work **both update families too** (backward row kernels
+//!   + in-graph Adam: `ppo_update` / fused `ppo_update_b`, and the
+//!   cross-entropy `aip_update` / fused `aip_update_b`), so full DIALS
+//!   training at `epochs > 0` — AIP retrains at `aip_epochs > 0`
+//!   included — runs end-to-end without the XLA toolchain. No artifact
+//!   family requires `xla` anymore.
 //!
 //! On top of the backends sits the batch-first inference surface
 //! ([`batch`]): `NetBank` stacks all N agents' parameters into one

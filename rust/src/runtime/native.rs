@@ -15,14 +15,15 @@
 //! `R = 1` is the plain batched case), so the one `run_b`-per-joint-step
 //! bank path and the per-agent B=1 path are bit-identical by construction.
 //!
-//! Since the fused-update work the **PPO update executes natively too**:
-//! `ppo_update` / `ppo_update_b` bind to `layout::ppo_update_row` (backward
-//! row kernels + in-graph Adam), so the default build trains end-to-end at
-//! `epochs > 0` with zero XLA on the critical path. The batched variant
-//! loops the identical per-agent row over a `[N, 3P+4]` state stack, so the
-//! fused path is bit-identical to N sequential B=1 updates by construction.
-//! Only the AIP update artifact (`aip_update`) still needs the real PJRT
-//! client and returns an explanatory error.
+//! Since the fused-update work the **update artifacts execute natively
+//! too**: `ppo_update` / `ppo_update_b` bind to `layout::ppo_update_row`
+//! and `aip_update` / `aip_update_b` bind to `layout::aip_update_row`
+//! (backward row kernels + in-graph Adam), so the default build trains
+//! end-to-end at `epochs > 0` AND retrains its influence predictors at
+//! `aip_epochs > 0` with zero XLA anywhere. The batched variants loop the
+//! identical per-agent row over a stacked state tensor, so the fused paths
+//! are bit-identical to N sequential B=1 updates by construction. No
+//! artifact family needs the real PJRT client anymore.
 
 use std::cell::RefCell;
 use std::path::Path;
@@ -33,8 +34,9 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::util::npk::Tensor;
 
 use super::layout::{
-    aip_ce_flat, aip_ce_windows, aip_forward_row, policy_forward_row, ppo_update_row, AipDims,
-    CeScratch, FwdScratch, PolicyDims, PpoHypers, PpoScratch,
+    aip_ce_flat, aip_ce_windows, aip_forward_row, aip_update_row, policy_forward_row,
+    ppo_update_row, AipDims, AipHypers, AipTrainScratch, CeScratch, FwdScratch, PolicyDims,
+    PpoHypers, PpoScratch,
 };
 
 thread_local! {
@@ -46,6 +48,8 @@ thread_local! {
     /// Per-thread backward scratch for the PPO update kernels — same
     /// rationale (per-agent fallback updates run on pool threads too).
     static PPO_SCRATCH: RefCell<PpoScratch> = RefCell::new(PpoScratch::default());
+    /// Per-thread backward scratch for the AIP CE update kernels.
+    static AIP_SCRATCH: RefCell<AipTrainScratch> = RefCell::new(AipTrainScratch::default());
 }
 
 /// Host stand-in for the PJRT CPU client. Cheap to clone.
@@ -119,8 +123,7 @@ enum NetKind {
     /// The batch CE-loss evaluator (`aip_eval`): same trunk as `Aip`, but
     /// a `(flat, feats, labels) -> ce[1]` contract instead of a packed
     /// forward. Executing it natively is what lets DIALS-mode runs (and
-    /// their Fig. 4 CE curves) go end-to-end without the XLA toolchain;
-    /// only the update artifacts still need PJRT.
+    /// their Fig. 4 CE curves) go end-to-end without the XLA toolchain.
     AipEval(AipDims),
     /// The PPO training update (`ppo_update` / `ppo_update_b`):
     /// `(state, batch) -> state'` on the packed `[3P+4]` Adam-state row
@@ -130,10 +133,20 @@ enum NetKind {
     /// minibatch size is derived from `L`, so one binding is
     /// shape-polymorphic in both N and MB.
     PpoUpdate(PolicyDims, PpoHypers),
+    /// The AIP training update (`aip_update` / `aip_update_b`):
+    /// `(state, batch) -> state'` on the packed `[3P+1]` Adam-state row
+    /// (see `layout::aip_update_row`; the 1-slot tail is the CE at the
+    /// pre-step params, matching `jax.value_and_grad`). The `usize` is
+    /// the bound window length `aip_seq` (1 for feedforward sets), which
+    /// lets the executor derive the batch size B from the row length:
+    /// `L = 1 + B·seq·(F + heads)` — shape-polymorphic in B like the PPO
+    /// minibatch contract.
+    AipUpdate(AipDims, AipHypers, usize),
 }
 
-/// One loaded artifact. Forward artifacts execute through the bound
-/// `runtime::layout` kernels; everything else reports the missing feature.
+/// One loaded artifact. Every bound artifact executes through the
+/// `runtime::layout` row kernels; an unbound one reports how to rebuild
+/// the artifact set.
 pub struct Exec {
     name: String,
     calls: AtomicU64,
@@ -206,6 +219,33 @@ impl Exec {
             self.name, dims.param_count(), expect_params
         );
         self.net = Some(NetKind::PpoUpdate(dims, hyp));
+        Ok(())
+    }
+
+    /// Bind this artifact to the native AIP update (CE backward row
+    /// kernels + in-graph Adam, no clipping — `layout::aip_update_row`).
+    /// One binding serves both the B=1 `aip_update` and the stacked
+    /// `aip_update_b` contract. `seq` is the window length the artifact
+    /// was lowered for (`aip_seq`; 1 on feedforward sets).
+    pub fn bind_aip_update(
+        &mut self,
+        dims: AipDims,
+        hyp: AipHypers,
+        seq: usize,
+        expect_params: usize,
+    ) -> Result<()> {
+        ensure!(
+            dims.param_count() == expect_params,
+            "{}: AIP layer dims {dims:?} imply {} params but .meta says {} — \
+             re-run `make artifacts`",
+            self.name, dims.param_count(), expect_params
+        );
+        ensure!(
+            seq >= 1 && (dims.recurrent || seq == 1),
+            "{}: aip_seq = {seq} is invalid for {dims:?}",
+            self.name
+        );
+        self.net = Some(NetKind::AipUpdate(dims, hyp, seq));
         Ok(())
     }
 
@@ -310,13 +350,56 @@ impl Exec {
         Ok(())
     }
 
-    fn compute_update_into(
+    /// The `aip_update` contract, in place on a host tensor:
+    /// `state = [3P+1]` + `batch = [L]` (B=1), or `state = [N, 3P+1]` +
+    /// `batch = [N, L]` (fused). `L = 1 + B·seq·(F + heads)` derives the
+    /// batch size at the bound window length, so one binding serves any
+    /// B. Each agent row runs the exact `aip_update_row` the B=1 path
+    /// runs, in agent order — fused == N sequential updates bit for bit,
+    /// one `calls` tick for all N rows.
+    fn aip_update_rows_in_place(
         &self,
-        dims: &PolicyDims,
-        hyp: &PpoHypers,
-        inputs: &[&Tensor],
-        out: &mut Tensor,
+        dims: &AipDims,
+        hyp: &AipHypers,
+        seq: usize,
+        state: &mut Tensor,
+        batch: &Tensor,
     ) -> Result<()> {
+        let p = dims.param_count();
+        let row = 3 * p + 1;
+        let batched = state.dims.len() == 2;
+        let n = if batched { state.dims[0] } else { 1 };
+        ensure!(
+            state.len() == n * row && (batched || state.dims.len() == 1),
+            "{}: state {:?} does not hold N={n} packed [3P+1 = {row}] rows",
+            self.name, state.dims
+        );
+        ensure!(
+            batch.dims.len() == state.dims.len() && (!batched || batch.dims[0] == n),
+            "{}: batch {:?} does not match state {:?} (one batch row per agent row)",
+            self.name, batch.dims, state.dims
+        );
+        let per = seq * (dims.feat + dims.heads);
+        let l = batch.len() / n;
+        ensure!(
+            batch.len() == n * l && l > per && (l - 1) % per == 0,
+            "{}: batch {:?} is not N={n} packed [1 + B·seq·(F+heads = {per})] rows",
+            self.name, batch.dims
+        );
+        let b = (l - 1) / per;
+        AIP_SCRATCH.with(|cell| {
+            let mut s = cell.borrow_mut();
+            for i in 0..n {
+                let st = &mut state.data[i * row..(i + 1) * row];
+                let bt = &batch.data[i * l..(i + 1) * l];
+                aip_update_row(dims, hyp, st, bt, b, seq, &mut s);
+            }
+        });
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn compute_update_into(&self, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
         ensure!(
             inputs.len() == 2,
             "{}: expected (state, batch), got {} inputs",
@@ -327,23 +410,41 @@ impl Exec {
         out.dims.extend_from_slice(&state.dims);
         out.data.clear();
         out.data.extend_from_slice(&state.data);
-        self.update_rows_in_place(dims, hyp, out, batch)
+        match &self.net {
+            Some(NetKind::PpoUpdate(dims, hyp)) => {
+                let (dims, hyp) = (*dims, *hyp);
+                self.update_rows_in_place(&dims, &hyp, out, batch)
+            }
+            Some(NetKind::AipUpdate(dims, hyp, seq)) => {
+                let (dims, hyp, seq) = (*dims, *hyp, *seq);
+                self.aip_update_rows_in_place(&dims, &hyp, seq, out, batch)
+            }
+            _ => unreachable!("dispatched on an update binding"),
+        }
     }
 
-    /// Execute a bound `ppo_update` IN PLACE on a device-resident state
+    /// Execute a bound update artifact IN PLACE on a device-resident state
     /// (the device is the host here, so this is the true zero-copy chain:
     /// a whole epochs × minibatches update sequence touches one buffer and
-    /// allocates nothing per minibatch). `run`/`run_b` keep the pure
+    /// allocates nothing per minibatch). Serves both `ppo_update` and
+    /// `aip_update` bindings; `run`/`run_b` keep the pure
     /// `(state, batch) -> state'` contract for parity with XLA.
     pub fn run_inout(&self, state: &mut DeviceTensor, batch: &DeviceTensor) -> Result<()> {
-        let Some(NetKind::PpoUpdate(dims, hyp)) = &self.net else {
-            bail!(
-                "{}: run_inout needs a bound ppo_update artifact (bind_ppo_update)",
+        match &self.net {
+            Some(NetKind::PpoUpdate(dims, hyp)) => {
+                let (dims, hyp) = (*dims, *hyp);
+                self.update_rows_in_place(&dims, &hyp, &mut state.host, &batch.host)
+            }
+            Some(NetKind::AipUpdate(dims, hyp, seq)) => {
+                let (dims, hyp, seq) = (*dims, *hyp, *seq);
+                self.aip_update_rows_in_place(&dims, &hyp, seq, &mut state.host, &batch.host)
+            }
+            _ => bail!(
+                "{}: run_inout needs a bound update artifact \
+                 (bind_ppo_update / bind_aip_update)",
                 self.name
-            )
-        };
-        let (dims, hyp) = (*dims, *hyp);
-        self.update_rows_in_place(&dims, &hyp, &mut state.host, &batch.host)
+            ),
+        }
     }
 
     /// Shared compute path. Inputs `(params, x, h)`: a rank-1 `[P]`
@@ -360,11 +461,11 @@ impl Exec {
     fn compute_into(&self, inputs: &[&Tensor], out: &mut Tensor) -> Result<()> {
         let Some(kind) = &self.net else {
             bail!(
-                "cannot execute artifact {:?}: no native executor is bound for it \
-                 (the policy_step / aip_forward / aip_eval / ppo_update families \
-                 run natively). Rebuild with `--features xla` and a real xla-rs \
-                 checkout under rust/vendor/xla to execute the remaining update \
-                 artifacts (aip_update).",
+                "cannot execute artifact {:?}: no native executor is bound for it. \
+                 Every artifact family (policy_step / aip_forward / aip_eval / \
+                 ppo_update / aip_update) runs natively when its `.meta` declares \
+                 the layer dims — re-run `make artifacts` (or `dials synth`) to \
+                 refresh the set.",
                 self.name
             )
         };
@@ -372,9 +473,8 @@ impl Exec {
             let dims = *dims;
             return self.compute_ce_into(&dims, inputs, out);
         }
-        if let NetKind::PpoUpdate(dims, hyp) = kind {
-            let (dims, hyp) = (*dims, *hyp);
-            return self.compute_update_into(&dims, &hyp, inputs, out);
+        if matches!(kind, NetKind::PpoUpdate(..) | NetKind::AipUpdate(..)) {
+            return self.compute_update_into(inputs, out);
         }
         ensure!(
             inputs.len() == 3,
@@ -389,7 +489,7 @@ impl Exec {
         let (p, in_dim, h_dim, out_w) = match kind {
             NetKind::Policy(d) => (d.param_count(), d.obs, d.hstate(), d.packed_out()),
             NetKind::Aip(d) => (d.param_count(), d.feat, d.hstate(), d.packed_out()),
-            NetKind::AipEval(_) | NetKind::PpoUpdate(..) => unreachable!("dispatched above"),
+            NetKind::AipEval(_) | NetKind::PpoUpdate(..) | NetKind::AipUpdate(..) => unreachable!("dispatched above"),
         };
         ensure!(
             params.len() == n * p && in_dim > 0 && h_dim > 0,
@@ -420,7 +520,7 @@ impl Exec {
             match kind {
                 NetKind::Policy(d) => s.fit_policy(d),
                 NetKind::Aip(d) => s.fit_aip(d),
-                NetKind::AipEval(_) | NetKind::PpoUpdate(..) => {
+                NetKind::AipEval(_) | NetKind::PpoUpdate(..) | NetKind::AipUpdate(..) => {
                     unreachable!("dispatched above")
                 }
             }
@@ -433,7 +533,7 @@ impl Exec {
                 match kind {
                     NetKind::Policy(d) => policy_forward_row(d, flat, xi, hi, oi, &mut s),
                     NetKind::Aip(d) => aip_forward_row(d, flat, xi, hi, oi, &mut s),
-                    NetKind::AipEval(_) | NetKind::PpoUpdate(..) => {
+                    NetKind::AipEval(_) | NetKind::PpoUpdate(..) | NetKind::AipUpdate(..) => {
                         unreachable!("dispatched above")
                     }
                 }
@@ -508,12 +608,12 @@ mod tests {
     }
 
     #[test]
-    fn unbound_execution_reports_missing_feature() {
+    fn unbound_execution_reports_how_to_rebind() {
         let exec = fake_exec("fake");
         assert_eq!(exec.name(), "fake.hlo");
         assert_eq!(exec.call_count(), 0);
         let err = exec.run(&[]).unwrap_err();
-        assert!(format!("{err}").contains("xla"), "{err}");
+        assert!(format!("{err}").contains("make artifacts"), "{err}");
         assert!(exec.run_b(&[]).is_err());
     }
 
@@ -736,6 +836,94 @@ mod tests {
         let mut ds = engine.upload(&Tensor::zeros(&[row])).unwrap();
         let db = engine.upload(&Tensor::zeros(&[blen])).unwrap();
         assert!(fwd.run_inout(&mut ds, &db).is_err());
+    }
+
+    #[test]
+    fn bound_aip_update_executes_b1_fused_and_inout() {
+        use crate::util::rng::Pcg64;
+        // recurrent dims so the seq-derived batch-size arithmetic is the
+        // interesting case (seq > 1).
+        let dims = AipDims { feat: 3, recurrent: true, hid: 4, heads: 2, cls: 3 };
+        let (seq, b) = (4usize, 2usize);
+        let p = dims.param_count();
+        let row = 3 * p + 1;
+        let per = seq * (dims.feat + dims.heads);
+        let blen = 1 + b * per;
+        let mut exec = fake_exec("aupd");
+        exec.bind_aip_update(dims, AipHypers::default(), seq, p).unwrap();
+        // wrong param count / seq rejected at bind time
+        assert!(fake_exec("aupd2")
+            .bind_aip_update(dims, AipHypers::default(), seq, p + 1)
+            .is_err());
+        assert!(fake_exec("aupd3")
+            .bind_aip_update(
+                AipDims { recurrent: false, ..dims },
+                AipHypers::default(),
+                2,
+                AipDims { recurrent: false, ..dims }.param_count(),
+            )
+            .is_err());
+
+        let mut rng = Pcg64::seed(13);
+        let mk_state = |rng: &mut Pcg64| {
+            let mut d = vec![0.0f32; row];
+            for v in &mut d[..p] {
+                *v = 0.3 * rng.normal() as f32;
+            }
+            d
+        };
+        let mk_batch = |rng: &mut Pcg64| {
+            let mut d = vec![0.0f32; blen];
+            d[0] = 1.0; // Adam t
+            for v in &mut d[1..1 + b * seq * dims.feat] {
+                *v = 0.5 * rng.normal() as f32;
+            }
+            for v in &mut d[1 + b * seq * dims.feat..] {
+                *v = rng.below(dims.cls as u64) as f32;
+            }
+            d
+        };
+        let s0 = mk_state(&mut rng);
+        let s1 = mk_state(&mut rng);
+        let b0 = mk_batch(&mut rng);
+        let b1 = mk_batch(&mut rng);
+
+        // B=1 pure calls
+        let out0 = exec
+            .run(&[Tensor::new(vec![row], s0.clone()), Tensor::new(vec![blen], b0.clone())])
+            .unwrap();
+        assert_eq!(out0[0].dims, vec![row]);
+        assert!(out0[0].data.iter().all(|v| v.is_finite()));
+        assert_ne!(out0[0].data[..p], s0[..p], "params must move");
+        assert!(out0[0].data[3 * p] > 0.0, "tail must carry the CE");
+        let out1 = exec
+            .run(&[Tensor::new(vec![row], s1.clone()), Tensor::new(vec![blen], b1.clone())])
+            .unwrap();
+
+        // fused [2, row] + [2, L] == the two B=1 results stacked, one call
+        let stacked = Tensor::new(vec![2, row], s0.iter().chain(&s1).cloned().collect());
+        let batches = Tensor::new(vec![2, blen], b0.iter().chain(&b1).cloned().collect());
+        let calls_before = exec.call_count();
+        let fused = exec.run(&[stacked.clone(), batches.clone()]).unwrap();
+        assert_eq!(exec.call_count(), calls_before + 1, "one call covers all N rows");
+        assert_eq!(fused[0].dims, vec![2, row]);
+        assert_eq!(fused[0].data[..row], out0[0].data[..], "agent 0 fused != B=1");
+        assert_eq!(fused[0].data[row..], out1[0].data[..], "agent 1 fused != B=1");
+
+        // run_inout mutates the device state in place, bit-identically
+        let engine = Engine::cpu().unwrap();
+        let mut dstate = engine.upload(&stacked).unwrap();
+        let dbatch = engine.upload(&batches).unwrap();
+        exec.run_inout(&mut dstate, &dbatch).unwrap();
+        assert_eq!(dstate.to_tensor().unwrap().data, fused[0].data);
+
+        // malformed shapes are errors, not UB
+        assert!(exec
+            .run(&[Tensor::zeros(&[row + 1]), Tensor::zeros(&[blen])])
+            .is_err());
+        assert!(exec
+            .run(&[Tensor::zeros(&[row]), Tensor::zeros(&[blen + 1])])
+            .is_err());
     }
 
     #[test]

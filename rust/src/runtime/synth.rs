@@ -10,12 +10,12 @@
 //! `python/compile/aot.py` (`domain_cfgs("small")`).
 //!
 //! Used by the batch-equivalence tests, the hotpath bench's NN rows, and
-//! anyone who wants to drive full DIALS training (`epochs > 0`) on a box
-//! without jax: the forward families AND the PPO update (`ppo_update` /
-//! `ppo_update_b`, backward row kernels + in-graph Adam) all execute
-//! natively from the `.meta` dims + hyperparameters. Only `aip_update`
-//! still requires the real toolchain; its placeholder produces an
-//! explanatory error if executed.
+//! anyone who wants to drive full DIALS training (`epochs > 0`, and with
+//! the native AIP retrains `aip_epochs > 0` too) on a box without jax:
+//! every artifact family — forwards, CE eval, and both update families
+//! (`ppo_update`/`ppo_update_b` and `aip_update`/`aip_update_b`, backward
+//! row kernels + in-graph Adam) — executes natively from the `.meta`
+//! dims + hyperparameters. Nothing requires the real toolchain.
 
 use std::path::Path;
 
@@ -84,6 +84,7 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
     // hyperparameter keys are what the native backward kernels bind; the
     // values are the pinned model.py defaults (paper Table 6).
     let hyp = super::layout::PpoHypers::default();
+    let ahyp = super::layout::AipHypers::default();
     let meta = format!(
         "domain={d}\nobs_dim={}\nact_dim={}\npolicy_recurrent={}\npolicy_hstate={}\n\
          policy_params={}\naip_feat={}\naip_recurrent={}\naip_hstate={}\naip_params={}\n\
@@ -91,7 +92,8 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
          aip_batch={aip_batch}\naip_seq={aip_seq}\nseed={seed}\n\
          policy_h1={}\npolicy_h2={}\naip_hid={}\nbatch=0\n\
          clip_eps={}\nvf_coef={}\nent_coef={}\nmax_grad_norm={}\n\
-         lr={}\nadam_b1={}\nadam_b2={}\nadam_eps={}\n",
+         lr={}\nadam_b1={}\nadam_b2={}\nadam_eps={}\n\
+         aip_lr={}\naip_adam_b1={}\naip_adam_b2={}\naip_adam_eps={}\n",
         pd.obs,
         pd.act,
         pd.recurrent as usize,
@@ -114,6 +116,10 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
         hyp.adam_b1,
         hyp.adam_b2,
         hyp.adam_eps,
+        ahyp.lr,
+        ahyp.adam_b1,
+        ahyp.adam_b2,
+        ahyp.adam_eps,
     );
     std::fs::write(dir.join(format!("{d}.meta")), meta)?;
 
@@ -130,9 +136,9 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
         &init(&mut rng, ad.param_count(), 0.08),
     )?;
 
-    // Artifacts that execute natively (bound to runtime::layout kernels).
-    // This now includes the PPO update family — the old text claiming the
-    // update needed XLA was misleading once the backward kernels landed.
+    // Artifacts that execute natively (bound to runtime::layout kernels)
+    // — which is every family: forwards, CE eval, and both update
+    // families' backward kernels.
     for name in [
         "policy_step",
         "policy_step_b",
@@ -141,26 +147,19 @@ pub fn write_native_artifacts(dir: &Path, domain: Domain, seed: u64) -> Result<(
         "aip_forward",
         "aip_forward_b",
         "aip_eval",
+        "aip_update",
+        "aip_update_b",
     ] {
         std::fs::write(
             dir.join(format!("{d}_{name}.hlo.txt")),
             format!(
                 "HloModule {d}_{name}\n; native artifact placeholder — this family \
                  executes through runtime::layout (forwards, CE eval, and the \
-                 ppo_update backward kernels), driven by the dims + hyperparameters \
-                 in {d}.meta.\n"
+                 ppo_update/aip_update backward kernels), driven by the dims + \
+                 hyperparameters in {d}.meta.\n"
             ),
         )?;
     }
-    // aip_update is the one artifact the native backend cannot execute.
-    std::fs::write(
-        dir.join(format!("{d}_aip_update.hlo.txt")),
-        format!(
-            "HloModule {d}_aip_update\n; native artifact placeholder — the AIP \
-             update still needs `make artifacts` + the xla feature; executing \
-             this placeholder produces an explanatory error.\n"
-        ),
-    )?;
     Ok(())
 }
 
@@ -189,9 +188,14 @@ mod tests {
             assert!(arts.policy_step_b.is_some());
             assert!(arts.aip_forward_b.is_some());
             assert!(arts.ppo_update_b.is_some());
+            assert!(arts.aip_update_b.is_some());
             assert!(
                 arts.supports_fused_update(5, 8),
                 "shape-polymorphic sets accept any N and R for the fused update"
+            );
+            assert!(
+                arts.supports_fused_aip_update(5),
+                "shape-polymorphic sets accept any N for the fused AIP update"
             );
             assert_eq!(arts.policy_init.len(), arts.spec.policy_params);
             assert_eq!(arts.aip_init.len(), arts.spec.aip_params);
@@ -200,6 +204,11 @@ mod tests {
                 arts.spec.ppo,
                 crate::runtime::layout::PpoHypers::default(),
                 "synth meta hypers round-trip to the pinned defaults"
+            );
+            assert_eq!(
+                arts.spec.aip,
+                crate::runtime::layout::AipHypers::default(),
+                "synth meta AIP hypers round-trip to the pinned defaults"
             );
         }
     }

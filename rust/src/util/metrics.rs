@@ -95,6 +95,14 @@ pub struct RunLog {
     /// `influence_seconds`); the blocking path reports the same number
     /// for comparison.
     pub collect_compute_seconds: f64,
+    /// Seconds spent inside the AIP retrain jobs (CE probes + gradient
+    /// steps), measured inside the job in both modes. Under async retrain
+    /// (`async_retrain >= 1`) these overlap the segment after the launch
+    /// boundary and only the launch snapshot + drain stall stay inside
+    /// `influence_seconds`; the blocking path additionally pays the whole
+    /// job on the critical path (inside `influence_seconds`) and reports
+    /// the same number here for comparison.
+    pub aip_train_compute_seconds: f64,
     /// Megabatch-mode split of `agent_train_seconds`: seconds outside the
     /// PPO update phases (forward ticks + scatter work) vs inside them.
     /// Both stay 0 on the per-agent reference path, whose updates run

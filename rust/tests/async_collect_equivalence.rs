@@ -75,6 +75,7 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path, seed: u64) -> ExperimentConfi
         gs_shards: 0,
         async_eval: 0,
         async_collect: 0,
+        async_retrain: 0,
         ls_replicas: 0,
         save_ckpt_every: 0,
     }

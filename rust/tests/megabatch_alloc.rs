@@ -46,6 +46,7 @@ fn steady_state_megabatch_tick_allocates_nothing() {
             gs_shards: 0,
             async_eval: 0,
             async_collect: 0,
+            async_retrain: 0,
             ls_replicas: 4,
             save_ckpt_every: 0,
         };

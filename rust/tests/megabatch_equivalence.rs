@@ -65,6 +65,7 @@ fn fwd_cfg(domain: Domain, dir: &std::path::Path, ls_replicas: usize, threads: u
         gs_shards: 0,
         async_eval: 0,
         async_collect: 0,
+        async_retrain: 0,
         ls_replicas,
         save_ckpt_every: 0,
     }

@@ -224,6 +224,7 @@ fn train_cfg(
         gs_shards: 0,
         async_eval: 0,
         async_collect: 0,
+        async_retrain: 0,
         ls_replicas,
         save_ckpt_every: 0,
     }

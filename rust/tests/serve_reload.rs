@@ -44,6 +44,7 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path) -> ExperimentConfig {
         gs_shards: 0,
         async_eval: 0,
         async_collect: 0,
+        async_retrain: 0,
         ls_replicas: 0,
         save_ckpt_every: 0,
     }

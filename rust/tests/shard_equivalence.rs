@@ -260,6 +260,7 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path, gs_shards: usize, threads: us
         gs_shards,
         async_eval: 0,
         async_collect: 0,
+        async_retrain: 0,
         ls_replicas: 0,
         save_ckpt_every: 0,
     }

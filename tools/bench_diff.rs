@@ -19,6 +19,9 @@
 //! * `update_wall_s` — the PPO update share of a megabatch training
 //!   segment's wall (the fused-vs-per-agent update rows) gets the same
 //!   25% growth tolerance, keeping the fused-update win gated;
+//! * `aip_update_wall_s` — the wall seconds of one whole-system AIP
+//!   retrain (the fused-vs-per-agent retrain rows) gets the same 25%
+//!   growth tolerance, keeping the fused influence retrain gated;
 //! * `serve_p50_us` / `serve_p99_us` — the `dials serve` end-to-end
 //!   request latency percentiles of the serve load-gen rows get the same
 //!   25% growth tolerance (latency, so growth is the regression);
@@ -159,6 +162,7 @@ fn diff(fresh: &str, baseline: &str) -> Result<Vec<String>> {
             ("seg_eval_wall_s", "s", b.seg_eval_wall_s, f.seg_eval_wall_s),
             ("collect_wall_s", "s", b.collect_wall_s, f.collect_wall_s),
             ("update_wall_s", "s", b.update_wall_s, f.update_wall_s),
+            ("aip_update_wall_s", "s", b.aip_update_wall_s, f.aip_update_wall_s),
             ("serve_p50_us", "us", b.serve_p50_us, f.serve_p50_us),
             ("serve_p99_us", "us", b.serve_p99_us, f.serve_p99_us),
         ] {
@@ -199,6 +203,7 @@ struct Row {
     update_wall_s: Option<f64>,
     seg_eval_wall_s: Option<f64>,
     collect_wall_s: Option<f64>,
+    aip_update_wall_s: Option<f64>,
     serve_p50_us: Option<f64>,
     serve_p99_us: Option<f64>,
 }
@@ -234,6 +239,7 @@ impl Bench {
                     update_wall_s: num(r.get("update_wall_s")),
                     seg_eval_wall_s: num(r.get("seg_eval_wall_s")),
                     collect_wall_s: num(r.get("collect_wall_s")),
+                    aip_update_wall_s: num(r.get("aip_update_wall_s")),
                     serve_p50_us: num(r.get("serve_p50_us")),
                     serve_p99_us: num(r.get("serve_p99_us")),
                 },
@@ -506,6 +512,21 @@ mod tests {
         )
     }
 
+    /// `doc` plus one fused AIP-retrain row whose `aip_update_wall_s` is
+    /// the given JSON literal (a number, or "null" for ungated).
+    fn doc_with_aip(aip_wall: &str) -> String {
+        doc(1.0, 0.0, 50_000.0, true).replace(
+            "\n],",
+            &format!(
+                ",\n{{\"op\": \"traffic AIP retrain x8 epochs (fused, N=16)\", \
+                 \"mean_s\": 0.0001, \"min_s\": 0.0001, \"bytes_per_step\": null, \
+                 \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \
+                 \"seg_eval_wall_s\": null, \"collect_wall_s\": null, \
+                 \"aip_update_wall_s\": {aip_wall}}}\n],"
+            ),
+        )
+    }
+
     /// `doc` plus one `dials serve` load-gen row whose percentile columns
     /// are the given JSON literals (numbers, or "null" for ungated).
     fn doc_with_serve(p50: &str, p99: &str) -> String {
@@ -610,6 +631,35 @@ mod tests {
         let regs = diff(&doc_with_update("null"), &base).unwrap();
         assert_eq!(regs.len(), 1, "{regs:?}");
         assert!(regs[0].contains("update_wall_s"), "{regs:?}");
+        assert!(regs[0].contains("missing"), "{regs:?}");
+    }
+
+    #[test]
+    fn aip_update_wall_gets_25_percent_growth_tolerance() {
+        let base = doc_with_aip("0.40");
+        // +20%: inside tolerance
+        assert!(diff(&doc_with_aip("0.48"), &base).unwrap().is_empty());
+        // improvement: always passes
+        assert!(diff(&doc_with_aip("0.10"), &base).unwrap().is_empty());
+        // +50%: regression
+        let regs = diff(&doc_with_aip("0.60"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("aip_update_wall_s"), "{regs:?}");
+    }
+
+    #[test]
+    fn null_baseline_aip_update_wall_is_not_gated() {
+        let base = doc_with_aip("null");
+        // fresh value present but the baseline never recorded one
+        assert!(diff(&doc_with_aip("99.0"), &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gated_aip_update_wall_going_null_in_fresh_run_fails() {
+        let base = doc_with_aip("0.40");
+        let regs = diff(&doc_with_aip("null"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("aip_update_wall_s"), "{regs:?}");
         assert!(regs[0].contains("missing"), "{regs:?}");
     }
 
