@@ -29,7 +29,12 @@
 //! * the AIP-retrain section times one whole-system influence retrain
 //!   (N agents × epochs cross-entropy Adam steps) fused (`aip_update_b`)
 //!   vs per-agent fallback and reports `aip_update_wall_s`, growth-gated
-//!   by tools/bench_diff.
+//!   by tools/bench_diff;
+//! * the distributed-GS section steps `DistPlan` over loopback shard
+//!   workers (real wire frames + serve loops, in-process transport) at
+//!   procs ∈ {1, 2, 4} in both domains and reports `dist_steps_per_s`
+//!   — joint GS steps per second through the process-boundary protocol,
+//!   growth-gated by tools/bench_diff.
 //!
 //! Results are printed, saved as `results/hotpath.csv`, and emitted as
 //! machine-readable `BENCH_hotpath.json` in the working directory (CI
@@ -91,6 +96,9 @@ struct JsonRow {
     /// microseconds (NaN = not a serve row). Gated by bench_diff.
     serve_p50_us: f64,
     serve_p99_us: f64,
+    /// Joint GS steps per second through the multi-process `DistPlan`
+    /// loopback protocol (NaN = not a dist row). Gated by bench_diff.
+    dist_steps_per_s: f64,
 }
 
 /// Heap traffic of `steps` iterations of `f` after a warm-up pass:
@@ -115,7 +123,7 @@ fn main() -> Result<()> {
         &[
             "op", "mean", "min", "per-unit", "B/step", "peak extra", "calls/step", "steps/s",
             "ls steps/s", "upd wall", "seg+eval wall", "collect wall", "aip wall", "serve p50",
-            "serve p99",
+            "serve p99", "dist steps/s",
         ],
     );
     let mut json: Vec<JsonRow> = Vec::new();
@@ -287,6 +295,51 @@ fn main() -> Result<()> {
             "\nsharded GS speedup @ 8 shards (traffic, {n} ints, {threads} threads): \
              {speedup_8:.2}x over serial"
         );
+    }
+
+    // ---- multi-process GS stepping (DistPlan over loopback workers)
+    //
+    // The process-boundary twin of the sharded rows: every joint step
+    // round-trips scoped actions, boundary-event sync, and shard state
+    // through the real wire codec and worker serve loops (in-process
+    // channel transport — no socket syscalls, so the rows isolate the
+    // protocol cost: encode/decode, state export/import, merge). Results
+    // are bit-identical to `--gs-shards` at every process count
+    // (tests/dist_equivalence.rs); `dist steps/s` is throughput only and
+    // is growth-gated by tools/bench_diff.
+    {
+        use dials::coordinator::make_global_sim;
+        use dials::dist::DistPlan;
+
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let pool = WorkerPool::new(threads);
+        for (domain, side) in [(Domain::Traffic, 24usize), (Domain::Warehouse, 8)] {
+            for procs in [1usize, 2, 4] {
+                let mut gs = make_global_sim(domain, side);
+                let n = gs.n_agents();
+                let acts: Vec<usize> = (0..n).map(|i| i % gs.n_actions()).collect();
+                let mut rewards = vec![0.0f32; n];
+                let mut plan = DistPlan::loopback(procs, domain, side, gs.as_mut())?;
+                let mut rng = Pcg64::seed(31);
+                let raw = rng.to_raw();
+                gs.reset(&mut rng);
+                plan.reseed(raw, &mut rng);
+                for _ in 0..16 {
+                    plan.step(gs.as_mut(), &pool, &acts, &mut rewards)?; // warm up
+                }
+                let (mean, min) = time_n(64, || {
+                    plan.step(gs.as_mut(), &pool, &acts, &mut rewards).unwrap();
+                });
+                // No thread count in the op name: the rows must match the
+                // committed baseline across runners (threads only shift
+                // throughput, which the 20% tolerance absorbs).
+                push_row_dist(
+                    &mut table, &mut json,
+                    &format!("{} dist GS step x{procs} procs (N={n})", domain.name()),
+                    mean, min, "1 joint step", 1.0 / mean,
+                );
+            }
+        }
     }
 
     // ---- PJRT executable calls + e2e training step (need artifacts)
@@ -629,7 +682,7 @@ fn main() -> Result<()> {
                 &mut table, &mut json,
                 &format!("coordinator run, {label} (16 agents)"),
                 mean, min, "4 segs + 5 evals", f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN,
-                f64::NAN, mean, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+                f64::NAN, mean, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
             );
         }
         println!(
@@ -911,6 +964,7 @@ fn push_row_steps(
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_step, peak_extra, calls_per_step,
         steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        f64::NAN,
     );
 }
 
@@ -929,7 +983,7 @@ fn push_row_ls(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, calls_per_step, f64::NAN,
-        ls_steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        ls_steps_per_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -953,6 +1007,7 @@ fn push_row_update(
     push_row_full(
         table, json, op, mean, min, unit, bytes_per_update, peak_extra, f64::NAN, f64::NAN,
         ls_steps_per_s, update_wall_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        f64::NAN,
     );
 }
 
@@ -969,7 +1024,7 @@ fn push_row_collect(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
-        f64::NAN, collect_wall_s, f64::NAN, f64::NAN, f64::NAN,
+        f64::NAN, collect_wall_s, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -986,7 +1041,7 @@ fn push_row_aip(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
-        f64::NAN, f64::NAN, aip_update_wall_s, f64::NAN, f64::NAN,
+        f64::NAN, f64::NAN, aip_update_wall_s, f64::NAN, f64::NAN, f64::NAN,
     );
 }
 
@@ -1006,7 +1061,25 @@ fn push_row_serve(
 ) {
     push_row_full(
         table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, steps_per_s, f64::NAN,
-        f64::NAN, f64::NAN, f64::NAN, f64::NAN, serve_p50_us, serve_p99_us,
+        f64::NAN, f64::NAN, f64::NAN, f64::NAN, serve_p50_us, serve_p99_us, f64::NAN,
+    );
+}
+
+/// `push_row` for the multi-process `DistPlan` loopback rows: the gated
+/// `dist steps/s` column carries joint GS steps per second through the
+/// process-boundary protocol.
+fn push_row_dist(
+    table: &mut Table,
+    json: &mut Vec<JsonRow>,
+    op: &str,
+    mean: f64,
+    min: f64,
+    unit: &str,
+    dist_steps_per_s: f64,
+) {
+    push_row_full(
+        table, json, op, mean, min, unit, f64::NAN, 0, f64::NAN, f64::NAN, f64::NAN, f64::NAN,
+        f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN, dist_steps_per_s,
     );
 }
 
@@ -1031,6 +1104,7 @@ fn push_row_full(
     aip_update_wall_s: f64,
     serve_p50_us: f64,
     serve_p99_us: f64,
+    dist_steps_per_s: f64,
 ) {
     let bps = if bytes_per_step.is_nan() { "-".to_string() } else { format!("{bytes_per_step:.1}") };
     let cps = if calls_per_step.is_nan() { "-".to_string() } else { format!("{calls_per_step:.2}") };
@@ -1042,6 +1116,7 @@ fn push_row_full(
     let awall = if aip_update_wall_s.is_nan() { "-".to_string() } else { format!("{aip_update_wall_s:.3}s") };
     let p50 = if serve_p50_us.is_nan() { "-".to_string() } else { format!("{serve_p50_us:.1}us") };
     let p99 = if serve_p99_us.is_nan() { "-".to_string() } else { format!("{serve_p99_us:.1}us") };
+    let dsps = if dist_steps_per_s.is_nan() { "-".to_string() } else { format!("{dist_steps_per_s:.0}") };
     table.row(vec![
         op.to_string(),
         us(mean),
@@ -1058,6 +1133,7 @@ fn push_row_full(
         awall,
         p50,
         p99,
+        dsps,
     ]);
     json.push(JsonRow {
         op: op.to_string(),
@@ -1074,6 +1150,7 @@ fn push_row_full(
         aip_update_wall_s,
         serve_p50_us,
         serve_p99_us,
+        dist_steps_per_s,
     });
 }
 
@@ -1091,9 +1168,10 @@ fn write_json(rows: &[JsonRow], sim_zero_alloc: bool) -> Result<()> {
         let awall = if r.aip_update_wall_s.is_nan() { "null".to_string() } else { format!("{:.6}", r.aip_update_wall_s) };
         let p50 = if r.serve_p50_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p50_us) };
         let p99 = if r.serve_p99_us.is_nan() { "null".to_string() } else { format!("{:.3}", r.serve_p99_us) };
+        let dsps = if r.dist_steps_per_s.is_nan() { "null".to_string() } else { format!("{:.1}", r.dist_steps_per_s) };
         s.push_str(&format!(
-            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"update_wall_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}, \"aip_update_wall_s\": {}, \"serve_p50_us\": {}, \"serve_p99_us\": {}}}{}\n",
-            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, uwall, wall, cwall, awall, p50, p99,
+            "    {{\"op\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"bytes_per_step\": {}, \"peak_extra_bytes\": {}, \"calls_per_step\": {}, \"steps_per_s\": {}, \"ls_steps_per_s\": {}, \"update_wall_s\": {}, \"seg_eval_wall_s\": {}, \"collect_wall_s\": {}, \"aip_update_wall_s\": {}, \"serve_p50_us\": {}, \"serve_p99_us\": {}, \"dist_steps_per_s\": {}}}{}\n",
+            r.op, r.mean_s, r.min_s, bps, r.peak_extra_bytes, cps, sps, lsps, uwall, wall, cwall, awall, p50, p99, dsps,
             if k + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -186,6 +186,22 @@ pub struct ExperimentConfig {
     /// Requires a save dir (`--save-ckpt`); 0 (default) keeps only the
     /// final save.
     pub save_ckpt_every: usize,
+    /// Multi-process GS stepping (`dist::DistPlan`): this many shard
+    /// workers each own a contiguous agent range of a full GS replica,
+    /// with the coordinator merging boundary events on its mirror and
+    /// shipping each resolved batch only to the shards that consume it.
+    /// 0 (default) = in-process stepping (`gs_shards` or serial). Takes
+    /// precedence over `gs_shards` on the main training loop and is
+    /// bit-identical to it at any process count
+    /// (`tests/dist_equivalence.rs`).
+    pub gs_procs: usize,
+    /// Socket address for the shard workers when `gs_procs > 0`: a
+    /// `host:port` TCP address or a Unix socket path (any value with a
+    /// `/`). Empty (default) = spawn loopback worker threads in-process
+    /// (same protocol, same wire bytes, no sockets). With an address, the
+    /// coordinator binds it and waits for `gs_procs` `dials shard-worker`
+    /// processes to connect.
+    pub shard_addr: String,
 }
 
 impl Default for ExperimentConfig {
@@ -212,6 +228,8 @@ impl Default for ExperimentConfig {
             async_retrain: 0,
             ls_replicas: 0,
             save_ckpt_every: 0,
+            gs_procs: 0,
+            shard_addr: String::new(),
         }
     }
 }
@@ -273,6 +291,10 @@ impl ExperimentConfig {
         get_usize!(exp, "async_retrain", cfg.async_retrain);
         get_usize!(exp, "ls_replicas", cfg.ls_replicas);
         get_usize!(exp, "save_ckpt_every", cfg.save_ckpt_every);
+        get_usize!(exp, "gs_procs", cfg.gs_procs);
+        if let Some(v) = exp.get("shard_addr") {
+            cfg.shard_addr = v.as_str()?.to_string();
+        }
         if let Some(v) = exp.get("seed") {
             cfg.seed = v.as_int()? as u64;
         }
@@ -332,6 +354,10 @@ impl ExperimentConfig {
         cfg.async_retrain = args.get_usize("async-retrain", cfg.async_retrain)?;
         cfg.ls_replicas = args.get_usize("ls-replicas", cfg.ls_replicas)?;
         cfg.save_ckpt_every = args.get_usize("save-ckpt-every", cfg.save_ckpt_every)?;
+        cfg.gs_procs = args.get_usize("gs-procs", cfg.gs_procs)?;
+        if let Some(addr) = args.get("shard-addr") {
+            cfg.shard_addr = addr.to_string();
+        }
         cfg.ppo.rollout_len = args.get_usize("rollout", cfg.ppo.rollout_len)?;
         cfg.ppo.minibatch = args.get_usize("minibatch", cfg.ppo.minibatch)?;
         cfg.ppo.epochs = args.get_usize("epochs", cfg.ppo.epochs)?;
@@ -507,6 +533,30 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ExperimentConfig::from_cli(&args).unwrap().save_ckpt_every, 128);
+    }
+
+    #[test]
+    fn gs_procs_defaults_off_and_parses() {
+        assert_eq!(ExperimentConfig::default().gs_procs, 0);
+        let doc = parse("[experiment]\ngs_procs = 4\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().gs_procs, 4);
+        let args = crate::util::cli::Args::parse(
+            ["--gs-procs", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().gs_procs, 2);
+    }
+
+    #[test]
+    fn shard_addr_defaults_empty_and_parses() {
+        assert!(ExperimentConfig::default().shard_addr.is_empty());
+        let doc = parse("[experiment]\nshard_addr = \"127.0.0.1:7401\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().shard_addr, "127.0.0.1:7401");
+        let args = crate::util::cli::Args::parse(
+            ["--shard-addr", "/tmp/dials.sock"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(ExperimentConfig::from_cli(&args).unwrap().shard_addr, "/tmp/dials.sock");
     }
 
     #[test]

@@ -40,6 +40,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::{Domain, ExperimentConfig, SimMode};
+use crate::dist::DistPlan;
 use crate::exec::WorkerPool;
 use crate::influence::{AipRuntime, InfluenceDataset};
 use crate::nn::NetState;
@@ -85,6 +86,11 @@ pub struct GsScratch {
     /// per-agent RNG streams, and event merge spool. `None` = the serial
     /// reference `GlobalSim::step`.
     pub(crate) shard: Option<ShardPlan>,
+    /// Multi-process GS stepping (`cfg.gs_procs > 0`): shard-worker
+    /// processes (or loopback threads) behind `dist::DistPlan`. Takes
+    /// precedence over `shard` in `gs_step`; bit-identical to it at any
+    /// process count (tests/dist_equivalence.rs).
+    pub(crate) dist: Option<DistPlan>,
 }
 
 impl GsScratch {
@@ -130,6 +136,7 @@ impl GsScratch {
             policy_bank: PolicyBank::new(spec, n_agents, batched),
             aip_bank: AipBank::new(spec, aip_rows, batched),
             shard: None,
+            dist: None,
         }
     }
 
@@ -149,10 +156,31 @@ impl GsScratch {
             if shards == 0 { None } else { Some(ShardPlan::new(self.actions.len(), shards)) };
     }
 
+    /// Enable multi-process GS stepping: `gs_step` then drives the shard
+    /// workers behind `plan` instead of the in-process paths.
+    pub fn enable_dist(&mut self, plan: DistPlan) {
+        self.dist = Some(plan);
+    }
+
+    /// Speculative re-executions performed so far by the distributed
+    /// plan (0 when `gs_procs = 0`) — surfaced in the `RunLog`.
+    pub(crate) fn dist_speculations(&self) -> u64 {
+        self.dist.as_ref().map(|d| d.speculations()).unwrap_or(0)
+    }
+
     /// Reset the GS for a new episode; in sharded mode this also
     /// re-derives the per-agent RNG streams from `rng` (in agent order,
-    /// so the derivation is independent of the shard count).
+    /// so the derivation is independent of the shard count). The
+    /// distributed path additionally replays the reset on every worker
+    /// replica from the pre-reset RNG words, so all replicas agree
+    /// byte-for-byte.
     pub(crate) fn gs_reset(&mut self, gs: &mut dyn GlobalSim, rng: &mut Pcg64) {
+        if let Some(plan) = self.dist.as_mut() {
+            let raw = rng.to_raw();
+            gs.reset(rng);
+            plan.reseed(raw, rng);
+            return;
+        }
         gs.reset(rng);
         if let Some(plan) = self.shard.as_mut() {
             plan.reseed(rng);
@@ -169,6 +197,9 @@ impl GsScratch {
         pool: &WorkerPool,
         rng: &mut Pcg64,
     ) -> Result<()> {
+        if let Some(plan) = self.dist.as_mut() {
+            return plan.step(gs, pool, &self.actions, &mut self.rewards);
+        }
         match self.shard.as_mut() {
             None => {
                 gs.step(&self.actions, &mut self.rewards, rng);
@@ -391,8 +422,27 @@ impl DialsCoordinator {
         let pool = Arc::new(WorkerPool::new(effective_threads(cfg.threads, cfg.n_agents())));
         let batched = gs_batch_mode(&self.arts, cfg);
         let shards = gs_shard_mode(gs.as_mut(), cfg);
+        let procs = gs_dist_mode(gs.as_mut(), cfg);
         let mut scratch = GsScratch::new(&self.arts.spec, cfg.n_agents(), batched);
-        scratch.enable_shards(shards);
+        if procs > 0 {
+            // Multi-process GS for the MAIN training loop: loopback worker
+            // threads by default, real `dials shard-worker` processes when
+            // `--shard-addr` names a socket. Takes precedence over
+            // `gs_shards` in `gs_step`; bit-identical to it by design.
+            let plan = if cfg.shard_addr.is_empty() {
+                DistPlan::loopback(procs, cfg.domain, cfg.grid_side, gs.as_mut())?
+            } else {
+                DistPlan::listen(&cfg.shard_addr, procs, cfg.domain, cfg.grid_side, gs.as_mut())?
+            };
+            scratch.enable_dist(plan);
+        } else {
+            scratch.enable_shards(shards);
+        }
+        // The async eval/collect slots always step their own GS replicas
+        // in-process (a socket cannot be shared across overlapping
+        // episodes); shard-count invariance keeps their curves
+        // bit-identical whichever count they use.
+        let slot_shards = if procs > 0 && shards == 0 { procs } else { shards };
 
         // cfg.async_eval > 0: evaluation overlaps the following training
         // segments as deferred pool jobs (coordinator::async_eval);
@@ -400,7 +450,7 @@ impl DialsCoordinator {
         // off the episode RNG at the boundary step, so their curves are
         // bit-identical (tests/async_eval_equivalence.rs).
         let mut async_eval = (cfg.async_eval > 0)
-            .then(|| AsyncEval::new(&self.arts, &pool, cfg, batched, shards));
+            .then(|| AsyncEval::new(&self.arts, &pool, cfg, batched, slot_shards));
 
         // cfg.async_collect > 0: the Algorithm-2 collection loop overlaps
         // the training segment preceding each AIP retrain as a deferred
@@ -420,7 +470,7 @@ impl DialsCoordinator {
 
         let retrains = cfg.mode == SimMode::Dials;
         let mut async_collect = (retrains && cfg.async_collect > 0)
-            .then(|| AsyncCollect::new(&self.arts, &pool, cfg, batched, shards));
+            .then(|| AsyncCollect::new(&self.arts, &pool, cfg, batched, slot_shards));
 
         // Every retraining run owns an AsyncRetrain: launch at a retrain
         // boundary, absorb at the NEXT boundary — one-segment staleness in
@@ -611,6 +661,7 @@ impl DialsCoordinator {
         }
         log.final_return = log.eval_curve.last().map(|p| p.value).unwrap_or(0.0);
         log.dataset_fingerprints = workers.iter().map(|w| w.dataset.fingerprint()).collect();
+        log.dist_speculations = scratch.dist_speculations();
         log.agent_train_seconds = train_cp_total;
         // Megabatch fill-tick split + per-agent update aggregates (the
         // reference path's updates run inside its per-agent tasks, so the
@@ -779,6 +830,25 @@ pub(crate) fn gs_shard_mode(gs: &mut dyn GlobalSim, cfg: &ExperimentConfig) -> u
         return 0;
     }
     cfg.gs_shards.min(cfg.n_agents())
+}
+
+/// Resolve the multi-process GS mode: `cfg.gs_procs` clamped to the agent
+/// count, downgraded to 0 (in-process stepping) with a notice when the
+/// simulator does not implement the `PartitionedGs` protocol.
+pub(crate) fn gs_dist_mode(gs: &mut dyn GlobalSim, cfg: &ExperimentConfig) -> usize {
+    if cfg.gs_procs == 0 {
+        return 0;
+    }
+    if gs.as_partitioned().is_none() {
+        eprintln!(
+            "[dials] gs_procs={} requested but the {} global simulator has no \
+             sharded stepping protocol; falling back to in-process GS stepping",
+            cfg.gs_procs,
+            cfg.domain.name()
+        );
+        return 0;
+    }
+    cfg.gs_procs.min(cfg.n_agents())
 }
 
 pub(crate) fn effective_threads(requested: usize, n_agents: usize) -> usize {

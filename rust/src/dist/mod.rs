@@ -1,0 +1,35 @@
+//! Multi-process GS sharding (DESIGN.md §15).
+//!
+//! Promotes the `sim::PartitionedGs` scatter/merge protocol from a thread
+//! boundary to a PROCESS boundary: `P` shard-worker processes (`dials
+//! shard-worker`) each own a contiguous agent range of a full GS replica
+//! and run the shard-local phase, while one coordinator performs the
+//! deterministic `key()`-ordered merge on its authoritative mirror and
+//! ships each resolved boundary-event batch only to the shards whose
+//! agents consume it (one-hop scoping, after DARL1N, Wang et al. 2022).
+//!
+//! Layers:
+//! * [`wire`] — dependency-free binary frame codec ([`Frame`],
+//!   [`WIRE_VERSION`]);
+//! * [`transport`] — [`ShardTransport`]: mpsc loopback
+//!   ([`ChannelTransport`]) and TCP/Unix sockets ([`SocketTransport`],
+//!   [`ShardListener`]) with length-prefixed frames, read timeouts, and
+//!   reconnect backoff;
+//! * [`worker`] — the shard-worker serve loop;
+//! * [`plan`] — [`DistPlan`]: the coordinator driver with EWMA step
+//!   deadlines and speculative local re-execution of stragglers.
+//!
+//! The distributed path is pinned bit-identical to the in-process
+//! `--gs-shards` path at any process count, including under injected
+//! straggler delay and worker loss (`tests/dist_equivalence.rs`,
+//! `tests/dist_smoke.rs`).
+
+pub mod plan;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use plan::DistPlan;
+pub use transport::{ChannelTransport, ShardListener, ShardTransport, SocketTransport};
+pub use wire::{Frame, WIRE_VERSION};
+pub use worker::{serve, StraggleInjection};

@@ -1,0 +1,709 @@
+//! The distributed sharded-stepping driver (DESIGN.md §15).
+//!
+//! [`DistPlan`] is the multi-process sibling of `sim::ShardPlan`: the
+//! same scatter/merge decomposition of the joint GS transition, with the
+//! scatter phase running in `P` shard-worker PROCESSES behind a
+//! [`ShardTransport`] instead of on pool threads. The coordinator keeps
+//! the authoritative full-GS mirror (always post-merge) plus its own copy
+//! of every agent's PCG64 stream, which is what makes the two safety nets
+//! below possible.
+//!
+//! **One-hop sync scoping (DARL1N-style).** After the deterministic
+//! `key()`-ordered merge, each resolved `(event, applied)` pair is shipped
+//! only to the shards owning one of the event's consumers
+//! (`BoundaryEvent::consumers`) — never broadcast. Shard adjacency derived
+//! from the domain topology (`PartitionedGs::neighbours`) double-checks
+//! the scoping in debug builds: consumers of one event always lie in
+//! adjacent shards.
+//!
+//! **Straggler speculation.** Every shard gets a step deadline from an
+//! EWMA of its observed step wall times (or `DIALS_DIST_DEADLINE_MS`).
+//! A shard that misses it has its range re-executed speculatively by the
+//! local pool, using the coordinator's stream copies and pre-step mirror
+//! state — bit-identical to what the worker is still computing, because
+//! `step_local` is deterministic given (state, actions, streams). The
+//! plan COMMITS to the speculation: the worker's late reply is drained
+//! and discarded at the next step, so there is never a race between an
+//! import and a speculative write. A shard whose transport errors is
+//! marked disconnected and speculated every step from then on — a lost
+//! worker degrades throughput, never correctness
+//! (`tests/dist_equivalence.rs`, `tests/dist_transport.rs`).
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Domain;
+use crate::exec::{DeferredHandle, WorkerPool};
+use crate::sim::{
+    partition_ranges, BoundaryEvent, GlobalSim, PartitionedGs, ShardRange, ShardSlots,
+};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Ewma;
+
+use super::transport::{ChannelTransport, ShardListener, ShardTransport};
+use super::wire::{Frame, WIRE_VERSION};
+use super::worker::StraggleInjection;
+
+/// Read timeout on coordinator-side sockets: bounds how long a drain of a
+/// dead-but-connected peer can hang before it degrades to a disconnect.
+const COORD_READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Smoothing of the per-shard step-time EWMA.
+const EWMA_ALPHA: f64 = 0.3;
+/// Deadline = max(this floor, EWMA * DEADLINE_MULT): generous enough that
+/// scheduler noise does not trigger speculation storms.
+const DEADLINE_FLOOR: Duration = Duration::from_millis(250);
+const DEADLINE_MULT: f64 = 4.0;
+/// Before the first observed sample there is no EWMA; allow a cold
+/// worker (artifact mmap, allocator warmup) plenty of time.
+const FIRST_STEP_DEADLINE: Duration = Duration::from_secs(30);
+
+type SharedTransport = Arc<Mutex<Box<dyn ShardTransport + Send>>>;
+
+/// Per-shard speculation scratch. `events` doubles as the per-step event
+/// stash for EVERY shard: an in-time worker reply parks its events here,
+/// a speculative re-execution writes its own — either way the merge
+/// gathers from one place, in shard order.
+struct SpecScratch {
+    range: ShardRange,
+    /// Re-execute this range locally this step (straggler/disconnect).
+    active: bool,
+    events: Vec<BoundaryEvent>,
+    rewards: Vec<f32>,
+}
+
+/// Multi-process sharded GS stepping, bit-identical to the in-process
+/// `--gs-shards` path at any process count.
+pub struct DistPlan {
+    ranges: Vec<ShardRange>,
+    /// Agent -> owning shard.
+    owner: Vec<usize>,
+    /// Shard x shard one-hop adjacency (self-inclusive), from the domain
+    /// topology. Debug-checks the sync scoping.
+    adjacent: Vec<Vec<bool>>,
+    transports: Vec<SharedTransport>,
+    /// Outstanding receive of a shard that missed its deadline; drained
+    /// (and discarded) before that shard's next send.
+    pending: Vec<Option<DeferredHandle<Frame>>>,
+    disconnected: Vec<bool>,
+    ewma: Vec<Ewma>,
+    deadline_override: Option<Duration>,
+    /// Coordinator copies of ALL agent streams (speculation + import).
+    rngs: ShardSlots<Pcg64>,
+    spec: Vec<SpecScratch>,
+    merged: Vec<BoundaryEvent>,
+    outcomes: Vec<bool>,
+    /// Next step's per-shard resolved-event sync, built by the merge.
+    sync_next: Vec<Vec<(BoundaryEvent, bool)>>,
+    step_id: u64,
+    speculations: u64,
+    n_agents: usize,
+    /// Loopback worker threads (empty for socket transports).
+    workers: Vec<JoinHandle<Result<()>>>,
+}
+
+impl DistPlan {
+    /// Spawn `procs` in-process worker threads over [`ChannelTransport`]
+    /// loopback — same protocol, same wire bytes, no sockets. The
+    /// reference distributed path (benches, equivalence tests).
+    pub fn loopback(
+        procs: usize,
+        domain: Domain,
+        grid_side: usize,
+        gs: &mut dyn GlobalSim,
+    ) -> Result<DistPlan> {
+        Self::loopback_straggle(procs, domain, grid_side, gs, None)
+    }
+
+    /// [`DistPlan::loopback`] with an artificial per-worker straggle
+    /// injection (tests/benches of the speculation path).
+    pub fn loopback_straggle(
+        procs: usize,
+        domain: Domain,
+        grid_side: usize,
+        gs: &mut dyn GlobalSim,
+        straggle: Option<StraggleInjection>,
+    ) -> Result<DistPlan> {
+        let procs = procs.clamp(1, gs.n_agents());
+        let mut transports: Vec<Box<dyn ShardTransport + Send>> = Vec::with_capacity(procs);
+        let mut workers = Vec::with_capacity(procs);
+        for k in 0..procs {
+            let (coord, worker) = ChannelTransport::pair();
+            transports.push(Box::new(coord));
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dials-shard-{k}"))
+                    .spawn(move || {
+                        let mut t = worker;
+                        super::worker::serve(&mut t, straggle)
+                    })
+                    .context("spawn loopback shard worker")?,
+            );
+        }
+        let mut plan = Self::from_transports(transports, domain, grid_side, gs)?;
+        plan.workers = workers;
+        Ok(plan)
+    }
+
+    /// Bind `addr` and accept `procs` shard-worker connections (the
+    /// `--shard-addr` path; workers are separate `dials shard-worker`
+    /// processes). Accept order assigns shard ranges.
+    pub fn listen(
+        addr: &str,
+        procs: usize,
+        domain: Domain,
+        grid_side: usize,
+        gs: &mut dyn GlobalSim,
+    ) -> Result<DistPlan> {
+        let listener = ShardListener::bind(addr)?;
+        eprintln!("[dist] waiting for {procs} shard worker(s) on {addr}");
+        let mut transports: Vec<Box<dyn ShardTransport + Send>> = Vec::with_capacity(procs);
+        for _ in 0..procs {
+            transports.push(Box::new(listener.accept(Some(COORD_READ_TIMEOUT))?));
+        }
+        Self::from_transports(transports, domain, grid_side, gs)
+    }
+
+    /// Build a plan over already-connected transports, performing the
+    /// `Hello`/`Init` handshake with each worker in order.
+    pub fn from_transports(
+        transports: Vec<Box<dyn ShardTransport + Send>>,
+        domain: Domain,
+        grid_side: usize,
+        gs: &mut dyn GlobalSim,
+    ) -> Result<DistPlan> {
+        let n = gs.n_agents();
+        if grid_side * grid_side != n {
+            bail!("grid side {grid_side} does not square to {n} agents");
+        }
+        let procs = transports.len();
+        if procs == 0 {
+            bail!("a distributed plan needs at least one shard transport");
+        }
+        let ranges = partition_ranges(n, procs);
+        if ranges.len() != procs {
+            bail!("more shard workers ({procs}) than agents ({n})");
+        }
+        let part = gs.as_partitioned().ok_or_else(|| {
+            anyhow!("this global simulator does not implement the sharded stepping protocol")
+        })?;
+
+        let mut owner = vec![0usize; n];
+        for (s, r) in ranges.iter().enumerate() {
+            for a in r.start..r.end {
+                owner[a] = s;
+            }
+        }
+        // Shard adjacency from the domain topology: two shards are
+        // adjacent iff they own one-hop-neighbouring agents.
+        let mut adjacent = vec![vec![false; procs]; procs];
+        let mut nb = Vec::new();
+        for a in 0..n {
+            adjacent[owner[a]][owner[a]] = true;
+            nb.clear();
+            part.neighbours(a, &mut nb);
+            for &b in &nb {
+                adjacent[owner[a]][owner[b]] = true;
+                adjacent[owner[b]][owner[a]] = true;
+            }
+        }
+
+        let mut shared = Vec::with_capacity(procs);
+        for (s, mut t) in transports.into_iter().enumerate() {
+            match t.recv().with_context(|| format!("handshake with shard {s}"))? {
+                Frame::Hello { version } if version == WIRE_VERSION => {}
+                Frame::Hello { version } => bail!(
+                    "shard {s} speaks wire version {version}, this coordinator speaks {WIRE_VERSION}"
+                ),
+                other => bail!("expected Hello from shard {s}, got {}", other.name()),
+            }
+            t.send(&Frame::Init {
+                domain,
+                grid_side,
+                start: ranges[s].start,
+                end: ranges[s].end,
+                n_agents: n,
+            })
+            .with_context(|| format!("init shard {s}"))?;
+            shared.push(Arc::new(Mutex::new(t)));
+        }
+
+        let deadline_override = std::env::var("DIALS_DIST_DEADLINE_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_millis);
+        let spec = ranges
+            .iter()
+            .map(|&range| SpecScratch {
+                range,
+                active: false,
+                events: Vec::new(),
+                rewards: vec![0.0; range.len()],
+            })
+            .collect();
+        Ok(DistPlan {
+            owner,
+            adjacent,
+            transports: shared,
+            pending: (0..procs).map(|_| None).collect(),
+            disconnected: vec![false; procs],
+            ewma: (0..procs).map(|_| Ewma::new(EWMA_ALPHA)).collect(),
+            deadline_override,
+            rngs: ShardSlots::new(vec![Pcg64::new(0, 0); n]),
+            spec,
+            merged: Vec::new(),
+            outcomes: Vec::new(),
+            sync_next: vec![Vec::new(); procs],
+            step_id: 0,
+            speculations: 0,
+            n_agents: n,
+            ranges,
+            workers: Vec::new(),
+        })
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Speculative local re-executions so far (straggler timeouts plus
+    /// every step of a disconnected shard). Lands in the RunLog.
+    pub fn speculations(&self) -> u64 {
+        self.speculations
+    }
+
+    /// Shards currently marked disconnected.
+    pub fn n_disconnected(&self) -> usize {
+        self.disconnected.iter().filter(|&&d| d).count()
+    }
+
+    /// Fixed per-step deadline override (tests/benches force the
+    /// speculation path with a tiny one; `DIALS_DIST_DEADLINE_MS` is the
+    /// process-wide equivalent).
+    pub fn set_deadline_override(&mut self, d: Duration) {
+        self.deadline_override = Some(d);
+    }
+
+    fn deadline(&self, s: usize) -> Duration {
+        if let Some(d) = self.deadline_override {
+            return d;
+        }
+        match self.ewma[s].value() {
+            Some(v) => DEADLINE_FLOOR.max(Duration::from_secs_f64(v * DEADLINE_MULT)),
+            None => FIRST_STEP_DEADLINE,
+        }
+    }
+
+    fn mark_disconnected(&mut self, s: usize) {
+        if !self.disconnected[s] {
+            self.disconnected[s] = true;
+            let r = self.ranges[s];
+            eprintln!(
+                "[dist] shard {s} disconnected; agents [{}, {}) now run on the local pool",
+                r.start, r.end
+            );
+        }
+    }
+
+    /// Replay an episode reset on every connected worker. `raw` is the
+    /// episode RNG captured BEFORE `GlobalSim::reset` ran on the
+    /// coordinator; `rng` is that same RNG AFTER the reset, from which
+    /// the per-agent streams are re-derived in global order — the exact
+    /// `ShardPlan::reseed` accounting, so dist and in-process runs share
+    /// every stream. Transport failures degrade to disconnects, never
+    /// errors: the mirror is always able to run the whole system.
+    pub fn reseed(&mut self, raw: (u128, u128), rng: &mut Pcg64) {
+        for s in 0..self.ranges.len() {
+            if let Some(h) = self.pending[s].take() {
+                // A late reply from the previous episode: drain, discard.
+                if h.wait().is_err() {
+                    self.mark_disconnected(s);
+                }
+            }
+        }
+        self.step_id = 0;
+        for v in self.sync_next.iter_mut() {
+            v.clear();
+        }
+        for s in 0..self.ranges.len() {
+            if self.disconnected[s] {
+                continue;
+            }
+            let ok = self.transports[s]
+                .lock()
+                .unwrap()
+                .send(&Frame::Reset { state: raw.0, inc: raw.1 })
+                .is_ok();
+            if !ok {
+                self.mark_disconnected(s);
+            }
+        }
+        for (k, slot) in self.rngs.as_mut_slice().iter_mut().enumerate() {
+            *slot = rng.split(k as u64 + 1);
+        }
+    }
+
+    /// One distributed joint transition.
+    pub fn step(
+        &mut self,
+        gs: &mut dyn GlobalSim,
+        pool: &WorkerPool,
+        actions: &[usize],
+        rewards: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(actions.len(), self.n_agents);
+        debug_assert_eq!(rewards.len(), self.n_agents);
+        let part = gs.as_partitioned().ok_or_else(|| {
+            anyhow!("this global simulator does not implement the sharded stepping protocol")
+        })?;
+        let procs = self.ranges.len();
+        let step_id = self.step_id;
+        self.step_id += 1;
+        // With no helper threads the deferred lane never runs; fall back
+        // to blocking receives (no straggler mitigation on 1 thread).
+        let can_defer = pool.threads() > 1;
+        let t0 = Instant::now();
+
+        // -- Phase A: drain stale replies, ship Step frames, post recvs.
+        let mut handles: Vec<Option<DeferredHandle<Frame>>> = (0..procs).map(|_| None).collect();
+        for s in 0..procs {
+            self.spec[s].active = false;
+            if self.disconnected[s] {
+                self.spec[s].active = true;
+                continue;
+            }
+            if let Some(h) = self.pending[s].take() {
+                // The late reply of a speculated step. The speculation
+                // already committed, so the payload is discarded whatever
+                // it says; only a transport error matters.
+                if h.wait().is_err() {
+                    self.mark_disconnected(s);
+                    self.spec[s].active = true;
+                    continue;
+                }
+            }
+            let r = self.ranges[s];
+            let frame = Frame::Step {
+                step_id,
+                actions: actions[r.start..r.end].iter().map(|&a| a as u32).collect(),
+                sync: std::mem::take(&mut self.sync_next[s]),
+            };
+            let sent = self.transports[s].lock().unwrap().send(&frame).is_ok();
+            if !sent {
+                self.mark_disconnected(s);
+                self.spec[s].active = true;
+                continue;
+            }
+            let tr = Arc::clone(&self.transports[s]);
+            handles[s] = Some(pool.submit_deferred(move || tr.lock().unwrap().recv()));
+        }
+
+        // -- Phase A2: collect replies within each shard's deadline.
+        for s in 0..procs {
+            let Some(mut handle) = handles[s].take() else { continue };
+            let deadline = t0 + self.deadline(s);
+            loop {
+                let res = if can_defer {
+                    match handle.wait_until(deadline) {
+                        Some(r) => r,
+                        None => {
+                            // Straggler: park the receive, speculate.
+                            self.pending[s] = Some(handle);
+                            self.spec[s].active = true;
+                            break;
+                        }
+                    }
+                } else {
+                    handle.wait()
+                };
+                match res {
+                    Ok(Frame::StepRes { step_id: sid, events, state, rngs })
+                        if sid == step_id =>
+                    {
+                        self.ewma[s].observe(t0.elapsed().as_secs_f64());
+                        if let Err(e) = self.import_step_res(part, s, events, &state, &rngs) {
+                            eprintln!("[dist] shard {s} sent a bad StepRes: {e:#}");
+                            self.mark_disconnected(s);
+                            self.spec[s].active = true;
+                        }
+                        break;
+                    }
+                    Ok(Frame::StepRes { step_id: sid, .. }) if sid < step_id => {
+                        // Defensive: a stale reply that slipped past the
+                        // phase-A drain. Discard and keep waiting.
+                        let tr = Arc::clone(&self.transports[s]);
+                        handle = pool.submit_deferred(move || tr.lock().unwrap().recv());
+                        continue;
+                    }
+                    Ok(other) => {
+                        eprintln!(
+                            "[dist] shard {s} sent {} where StepRes was expected",
+                            other.name()
+                        );
+                        self.mark_disconnected(s);
+                        self.spec[s].active = true;
+                        break;
+                    }
+                    Err(_) => {
+                        self.mark_disconnected(s);
+                        self.spec[s].active = true;
+                        break;
+                    }
+                }
+            }
+        }
+        self.speculations += self.spec.iter().filter(|sc| sc.active).count() as u64;
+
+        // -- Phase B: speculative local re-execution of late/lost ranges,
+        // from the pre-step mirror state and the coordinator's stream
+        // copies — bit-identical to the worker's own execution.
+        if self.spec.iter().any(|sc| sc.active) {
+            let shared: &dyn PartitionedGs = &*part;
+            let rng_slots = &self.rngs;
+            pool.run(&mut self.spec, |_k, sc| {
+                if !sc.active {
+                    return Ok(());
+                }
+                sc.events.clear();
+                for r in sc.rewards.iter_mut() {
+                    *r = 0.0;
+                }
+                // SAFETY: active ranges are disjoint (they partition the
+                // agents), each scratch goes to exactly one pool task,
+                // in-time ranges' slots are untouched serially during the
+                // phase, and the phase barrier ends all views before
+                // serial code resumes.
+                unsafe {
+                    let rs = rng_slots.range_mut(sc.range);
+                    shared.step_local(sc.range, actions, &mut sc.rewards, &mut sc.events, rs);
+                }
+                Ok(())
+            })?;
+        }
+
+        // -- Phase C: deterministic merge on the mirror, then one-hop
+        // scoped sync for the NEXT step.
+        for r in rewards.iter_mut() {
+            *r = 0.0;
+        }
+        self.merged.clear();
+        for sc in &self.spec {
+            self.merged.extend_from_slice(&sc.events);
+        }
+        self.merged.sort_unstable_by_key(|e| e.key());
+        self.outcomes.clear();
+        part.apply_boundary_resolved(&self.merged, rewards, Some(&mut self.outcomes));
+        debug_assert_eq!(self.outcomes.len(), self.merged.len());
+
+        for v in self.sync_next.iter_mut() {
+            v.clear();
+        }
+        for (e, &applied) in self.merged.iter().zip(self.outcomes.iter()) {
+            // An event reaches each consuming shard exactly once, even
+            // when both consumers live in the same shard.
+            let mut shards = [usize::MAX; 2];
+            let mut m = 0;
+            for c in e.consumers() {
+                let s = self.owner[c];
+                if !shards[..m].contains(&s) {
+                    shards[m] = s;
+                    m += 1;
+                }
+            }
+            if m == 2 {
+                debug_assert!(
+                    self.adjacent[shards[0]][shards[1]],
+                    "event consumers span non-adjacent shards: {e:?}"
+                );
+            }
+            for &s in &shards[..m] {
+                if !self.disconnected[s] {
+                    self.sync_next[s].push((*e, applied));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Absorb an in-time worker reply: byte-exact shard state into the
+    /// mirror, raw RNG words into the coordinator's stream copies, events
+    /// into the merge stash.
+    fn import_step_res(
+        &mut self,
+        part: &mut dyn PartitionedGs,
+        s: usize,
+        events: Vec<BoundaryEvent>,
+        state: &[u8],
+        rng_raws: &[(u128, u128)],
+    ) -> Result<()> {
+        let r = self.ranges[s];
+        if rng_raws.len() != r.len() {
+            bail!("StepRes carries {} rng streams for a {}-agent shard", rng_raws.len(), r.len());
+        }
+        part.import_shard_state(r, state)?;
+        for (slot, raw) in
+            self.rngs.as_mut_slice()[r.start..r.end].iter_mut().zip(rng_raws.iter())
+        {
+            *slot = Pcg64::from_raw(*raw);
+        }
+        self.spec[s].events = events;
+        Ok(())
+    }
+}
+
+impl Drop for DistPlan {
+    fn drop(&mut self) {
+        for s in 0..self.ranges.len() {
+            if let Some(h) = self.pending[s].take() {
+                let _ = h.wait();
+            }
+        }
+        for (s, t) in self.transports.iter().enumerate() {
+            if !self.disconnected[s] {
+                let _ = t.lock().unwrap().send(&Frame::Shutdown);
+            }
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ShardPlan;
+
+    /// Step a fresh sim T times under the in-process ShardPlan and return
+    /// (rewards trace, per-agent obs fingerprint).
+    fn reference_trace(
+        domain: Domain,
+        side: usize,
+        shards: usize,
+        steps: usize,
+    ) -> (Vec<u32>, Vec<u32>) {
+        let mut gs = crate::coordinator::make_global_sim(domain, side);
+        let n = gs.n_agents();
+        let pool = WorkerPool::new(2);
+        let mut plan = ShardPlan::new(n, shards);
+        let mut rng = Pcg64::seed(77);
+        let mut act_rng = Pcg64::seed(5);
+        gs.reset(&mut rng);
+        plan.reseed(&mut rng);
+        let mut rewards = vec![0.0f32; n];
+        let mut rtrace = Vec::new();
+        let mut actions = vec![0usize; n];
+        let n_act = gs.n_actions();
+        for _ in 0..steps {
+            for a in actions.iter_mut() {
+                *a = (act_rng.next_u64() as usize) % n_act;
+            }
+            plan.step(gs.as_mut(), &pool, &actions, &mut rewards).unwrap();
+            for r in &rewards {
+                rtrace.push(r.to_bits());
+            }
+        }
+        let mut obs = vec![0.0f32; gs.obs_dim()];
+        let mut fp = Vec::new();
+        for a in 0..n {
+            gs.observe(a, &mut obs);
+            fp.extend(obs.iter().map(|x| x.to_bits()));
+        }
+        (rtrace, fp)
+    }
+
+    fn dist_trace(
+        domain: Domain,
+        side: usize,
+        procs: usize,
+        steps: usize,
+        straggle: Option<StraggleInjection>,
+        deadline: Option<Duration>,
+    ) -> (Vec<u32>, Vec<u32>, u64) {
+        let mut gs = crate::coordinator::make_global_sim(domain, side);
+        let n = gs.n_agents();
+        let pool = WorkerPool::new(4);
+        let mut plan =
+            DistPlan::loopback_straggle(procs, domain, side, gs.as_mut(), straggle).unwrap();
+        if let Some(d) = deadline {
+            plan.set_deadline_override(d);
+        }
+        let mut rng = Pcg64::seed(77);
+        let mut act_rng = Pcg64::seed(5);
+        let raw = rng.to_raw();
+        gs.reset(&mut rng);
+        plan.reseed(raw, &mut rng);
+        let mut rewards = vec![0.0f32; n];
+        let mut rtrace = Vec::new();
+        let mut actions = vec![0usize; n];
+        let n_act = gs.n_actions();
+        for _ in 0..steps {
+            for a in actions.iter_mut() {
+                *a = (act_rng.next_u64() as usize) % n_act;
+            }
+            plan.step(gs.as_mut(), &pool, &actions, &mut rewards).unwrap();
+            for r in &rewards {
+                rtrace.push(r.to_bits());
+            }
+        }
+        let mut obs = vec![0.0f32; gs.obs_dim()];
+        let mut fp = Vec::new();
+        for a in 0..n {
+            gs.observe(a, &mut obs);
+            fp.extend(obs.iter().map(|x| x.to_bits()));
+        }
+        let specs = plan.speculations();
+        drop(plan);
+        (rtrace, fp, specs)
+    }
+
+    #[test]
+    fn loopback_matches_in_process_shards_traffic() {
+        let (r_ref, o_ref) = reference_trace(Domain::Traffic, 2, 2, 25);
+        for procs in [1usize, 2, 4] {
+            let (r, o, _) = dist_trace(Domain::Traffic, 2, procs, 25, None, None);
+            assert_eq!(r, r_ref, "traffic rewards diverged at {procs} procs");
+            assert_eq!(o, o_ref, "traffic obs diverged at {procs} procs");
+        }
+    }
+
+    #[test]
+    fn loopback_matches_in_process_shards_warehouse() {
+        let (r_ref, o_ref) = reference_trace(Domain::Warehouse, 2, 3, 25);
+        for procs in [1usize, 3] {
+            let (r, o, _) = dist_trace(Domain::Warehouse, 2, procs, 25, None, None);
+            assert_eq!(r, r_ref, "warehouse rewards diverged at {procs} procs");
+            assert_eq!(o, o_ref, "warehouse obs diverged at {procs} procs");
+        }
+    }
+
+    #[test]
+    fn forced_straggler_speculates_and_stays_bit_identical() {
+        let (r_ref, o_ref) = reference_trace(Domain::Traffic, 2, 2, 20);
+        let straggle = StraggleInjection { delay_ms: 60, every: 4 };
+        let (r, o, specs) = dist_trace(
+            Domain::Traffic,
+            2,
+            2,
+            20,
+            Some(straggle),
+            Some(Duration::from_millis(25)),
+        );
+        assert!(specs > 0, "the straggle injection must trigger speculation");
+        assert_eq!(r, r_ref, "speculation changed the rewards");
+        assert_eq!(o, o_ref, "speculation changed the state");
+    }
+
+    #[test]
+    fn adjacency_is_sparse_on_a_wide_grid() {
+        // 4 row-shards on a 4x4 grid: shard 0 touches shard 1 but not 3.
+        let mut gs = crate::coordinator::make_global_sim(Domain::Traffic, 4);
+        let plan = DistPlan::loopback(4, Domain::Traffic, 4, gs.as_mut()).unwrap();
+        assert!(plan.adjacent[0][1]);
+        assert!(!plan.adjacent[0][3], "non-neighbouring shards must not be adjacent");
+        assert_eq!(plan.n_procs(), 4);
+        assert_eq!(plan.n_disconnected(), 0);
+    }
+}

@@ -1,0 +1,344 @@
+//! The shard wire protocol (DESIGN.md §15).
+//!
+//! One coordinator process drives `P` shard-worker processes; every
+//! message between them is one [`Frame`], encoded with the dependency-free
+//! little-endian codec (`util::codec`). Frames are self-describing (tag
+//! byte first) and framed by the transport with a `u32` length prefix, so
+//! the codec layer never needs to guess where a message ends.
+//!
+//! Handshake: the worker sends `Hello{version}` as soon as it connects;
+//! the coordinator verifies [`WIRE_VERSION`] and replies `Init` with the
+//! domain, the grid side, and the worker's owned agent range. After that
+//! the coordinator speaks `Reset`/`Step`/`Shutdown` and the worker answers
+//! every `Step` with exactly one `StepRes`.
+//!
+//! Decoding errors (truncation, unknown tags, absurd counts) surface as
+//! `Err` — never a panic — so a malformed or cut-off frame cannot take the
+//! coordinator down (`tests/dist_transport.rs` cuts frames at every byte
+//! offset to pin this).
+
+use anyhow::{bail, Result};
+
+use crate::config::Domain;
+use crate::sim::BoundaryEvent;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Bumped on any incompatible change to the frame layout. The coordinator
+/// refuses a `Hello` carrying a different version instead of misreading
+/// frames from a stale binary.
+pub const WIRE_VERSION: u32 = 1;
+
+/// One message of the coordinator <-> shard-worker protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker -> coordinator, immediately after connecting.
+    Hello { version: u32 },
+    /// Coordinator -> worker: build this domain's GS at `grid_side` and
+    /// own the contiguous agent rows `[start, end)` of `n_agents`.
+    Init { domain: Domain, grid_side: usize, start: usize, end: usize, n_agents: usize },
+    /// Coordinator -> worker: replay an episode reset. Carries the raw
+    /// PCG64 words of the episode RNG captured BEFORE `GlobalSim::reset`,
+    /// so the worker reproduces the reset draws and the per-agent stream
+    /// derivation bit-exactly (`Pcg64::from_raw`).
+    Reset { state: u128, inc: u128 },
+    /// Coordinator -> worker: advance the owned range one tick. `actions`
+    /// is scoped to `[start, end)`; `sync` carries the PREVIOUS step's
+    /// merged boundary events — resolved `(event, applied)` pairs already
+    /// scoped to this shard's consumers — which the worker applies via
+    /// `PartitionedGs::apply_events_scoped` before stepping.
+    Step { step_id: u64, actions: Vec<u32>, sync: Vec<(BoundaryEvent, bool)> },
+    /// Worker -> coordinator: the result of one `Step`. `events` are the
+    /// boundary events emitted by `step_local`, `state` the byte-exact
+    /// shard state (`PartitionedGs::export_shard_state`), and `rngs` the
+    /// raw words of the owned agents' PCG64 streams after the tick.
+    StepRes { step_id: u64, events: Vec<BoundaryEvent>, state: Vec<u8>, rngs: Vec<(u128, u128)> },
+    /// Coordinator -> worker: exit the serve loop.
+    Shutdown,
+}
+
+/// Ceiling on any element count read off the wire before its payload is
+/// length-checked — purely a defence against a corrupt count causing an
+/// absurd allocation (the per-element size checks below are the real
+/// validation).
+const MAX_WIRE_ELEMS: usize = 1 << 24;
+
+impl Frame {
+    /// Human-readable frame name for protocol error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::Init { .. } => "Init",
+            Frame::Reset { .. } => "Reset",
+            Frame::Step { .. } => "Step",
+            Frame::StepRes { .. } => "StepRes",
+            Frame::Shutdown => "Shutdown",
+        }
+    }
+
+    /// Append the frame's wire form to `buf` (tag byte first).
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Frame::Hello { version } => {
+                let mut w = ByteWriter::new(buf);
+                w.put_u8(0);
+                w.put_u32(*version);
+            }
+            Frame::Init { domain, grid_side, start, end, n_agents } => {
+                let mut w = ByteWriter::new(buf);
+                w.put_u8(1);
+                w.put_u8(match domain {
+                    Domain::Traffic => 0,
+                    Domain::Warehouse => 1,
+                });
+                w.put_u32(*grid_side as u32);
+                w.put_u32(*start as u32);
+                w.put_u32(*end as u32);
+                w.put_u32(*n_agents as u32);
+            }
+            Frame::Reset { state, inc } => {
+                let mut w = ByteWriter::new(buf);
+                w.put_u8(2);
+                w.put_u128(*state);
+                w.put_u128(*inc);
+            }
+            Frame::Step { step_id, actions, sync } => {
+                {
+                    let mut w = ByteWriter::new(buf);
+                    w.put_u8(3);
+                    w.put_u64(*step_id);
+                    w.put_u32(actions.len() as u32);
+                    for a in actions {
+                        w.put_u32(*a);
+                    }
+                    w.put_u32(sync.len() as u32);
+                }
+                for (e, applied) in sync {
+                    e.encode(buf);
+                    buf.push(u8::from(*applied));
+                }
+            }
+            Frame::StepRes { step_id, events, state, rngs } => {
+                {
+                    let mut w = ByteWriter::new(buf);
+                    w.put_u8(4);
+                    w.put_u64(*step_id);
+                    w.put_u32(events.len() as u32);
+                }
+                for e in events {
+                    e.encode(buf);
+                }
+                let mut w = ByteWriter::new(buf);
+                w.put_bytes(state);
+                w.put_u32(rngs.len() as u32);
+                for (s, i) in rngs {
+                    w.put_u128(*s);
+                    w.put_u128(*i);
+                }
+            }
+            Frame::Shutdown => buf.push(5),
+        }
+    }
+
+    /// Decode one frame from its exact wire body (inverse of `encode`).
+    /// Errors on truncation, trailing garbage, unknown tags, or counts
+    /// that cannot fit the remaining bytes; never panics.
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        let mut r = ByteReader::new(bytes);
+        let frame = match r.get_u8()? {
+            0 => Frame::Hello { version: r.get_u32()? },
+            1 => {
+                let domain = match r.get_u8()? {
+                    0 => Domain::Traffic,
+                    1 => Domain::Warehouse,
+                    d => bail!("unknown domain tag {d}"),
+                };
+                Frame::Init {
+                    domain,
+                    grid_side: r.get_u32()? as usize,
+                    start: r.get_u32()? as usize,
+                    end: r.get_u32()? as usize,
+                    n_agents: r.get_u32()? as usize,
+                }
+            }
+            2 => Frame::Reset { state: r.get_u128()?, inc: r.get_u128()? },
+            3 => {
+                let step_id = r.get_u64()?;
+                let n_act = r.get_u32()? as usize;
+                let n_act = checked_count(&r, n_act, 4, "actions")?;
+                let mut actions = Vec::with_capacity(n_act);
+                for _ in 0..n_act {
+                    actions.push(r.get_u32()?);
+                }
+                // Smallest sync entry: tag + two u32 fields + applied flag.
+                let n_sync = r.get_u32()? as usize;
+                let n_sync = checked_count(&r, n_sync, 10, "sync events")?;
+                let mut sync = Vec::with_capacity(n_sync);
+                for _ in 0..n_sync {
+                    let e = BoundaryEvent::decode(&mut r)?;
+                    let applied = match r.get_u8()? {
+                        0 => false,
+                        1 => true,
+                        b => bail!("bad sync outcome flag {b}"),
+                    };
+                    sync.push((e, applied));
+                }
+                Frame::Step { step_id, actions, sync }
+            }
+            4 => {
+                let step_id = r.get_u64()?;
+                // Smallest event: tag + two u32 fields.
+                let n_ev = r.get_u32()? as usize;
+                let n_ev = checked_count(&r, n_ev, 9, "events")?;
+                let mut events = Vec::with_capacity(n_ev);
+                for _ in 0..n_ev {
+                    events.push(BoundaryEvent::decode(&mut r)?);
+                }
+                let state = r.get_bytes()?.to_vec();
+                let n_rng = r.get_u32()? as usize;
+                let n_rng = checked_count(&r, n_rng, 32, "rng streams")?;
+                let mut rngs = Vec::with_capacity(n_rng);
+                for _ in 0..n_rng {
+                    let s = r.get_u128()?;
+                    let i = r.get_u128()?;
+                    rngs.push((s, i));
+                }
+                Frame::StepRes { step_id, events, state, rngs }
+            }
+            5 => Frame::Shutdown,
+            tag => bail!("unknown frame tag {tag}"),
+        };
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after {} frame", r.remaining(), frame.name());
+        }
+        Ok(frame)
+    }
+}
+
+/// Validate an element count read off the wire: each element needs at
+/// least `min_size` bytes, so a count the remaining payload cannot hold is
+/// a corrupt frame (and must error before any allocation happens).
+fn checked_count(r: &ByteReader<'_>, n: usize, min_size: usize, what: &str) -> Result<usize> {
+    if n > MAX_WIRE_ELEMS || n.saturating_mul(min_size) > r.remaining() {
+        bail!("frame claims {n} {what} but only {} payload bytes remain", r.remaining());
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        f.encode(&mut buf);
+        Frame::decode(&buf).expect("roundtrip decode")
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { version: WIRE_VERSION },
+            Frame::Init {
+                domain: Domain::Warehouse,
+                grid_side: 3,
+                start: 4,
+                end: 9,
+                n_agents: 9,
+            },
+            Frame::Reset { state: 0xDEAD_BEEF_DEAD_BEEF_0123_4567_89AB_CDEF, inc: 42 },
+            Frame::Step {
+                step_id: 7,
+                actions: vec![0, 3, 1],
+                sync: vec![
+                    (
+                        BoundaryEvent::TrafficCross { agent: 1, lane: 2, src: 0, src_lane: 3 },
+                        true,
+                    ),
+                    (BoundaryEvent::TrafficInflow { agent: 2, lane: 0 }, false),
+                    (BoundaryEvent::WarehouseSpawn { agent: 0, slot: 5 }, true),
+                ],
+            },
+            Frame::StepRes {
+                step_id: 7,
+                events: vec![BoundaryEvent::TrafficInflow { agent: 1, lane: 3 }],
+                state: vec![1, 2, 3, 255, 0],
+                rngs: vec![(u128::MAX, 1), (2, 3)],
+            },
+            Frame::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_frame_roundtrips() {
+        for f in sample_frames() {
+            assert_eq!(roundtrip(&f), f);
+        }
+        // Empty collections roundtrip too.
+        let empty = Frame::Step { step_id: 0, actions: Vec::new(), sync: Vec::new() };
+        assert_eq!(roundtrip(&empty), empty);
+        let empty_res =
+            Frame::StepRes { step_id: 0, events: Vec::new(), state: Vec::new(), rngs: Vec::new() };
+        assert_eq!(roundtrip(&empty_res), empty_res);
+    }
+
+    #[test]
+    fn truncation_at_every_offset_errors() {
+        for f in sample_frames() {
+            let mut buf = Vec::new();
+            f.encode(&mut buf);
+            for cut in 0..buf.len() {
+                assert!(
+                    Frame::decode(&buf[..cut]).is_err(),
+                    "{} cut to {cut}/{} bytes must not decode",
+                    f.name(),
+                    buf.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_error() {
+        let mut buf = Vec::new();
+        Frame::Shutdown.encode(&mut buf);
+        buf.push(0);
+        assert!(Frame::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn corrupt_counts_and_tags_error_without_panicking() {
+        assert!(Frame::decode(&[]).is_err());
+        assert!(Frame::decode(&[99]).is_err(), "unknown frame tag");
+        assert!(Frame::decode(&[1, 7]).is_err(), "unknown domain tag");
+        // A Step frame whose action count exceeds the payload must error
+        // before it allocates.
+        let mut buf = Vec::new();
+        {
+            let mut w = ByteWriter::new(&mut buf);
+            w.put_u8(3);
+            w.put_u64(0);
+            w.put_u32(u32::MAX);
+        }
+        assert!(Frame::decode(&buf).is_err());
+        // Same for a StepRes rng count.
+        let mut buf = Vec::new();
+        {
+            let mut w = ByteWriter::new(&mut buf);
+            w.put_u8(4);
+            w.put_u64(0);
+            w.put_u32(0); // events
+            w.put_u32(0); // state bytes
+            w.put_u32(1 << 30); // rng streams
+        }
+        assert!(Frame::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_is_representable() {
+        // The coordinator-side check compares against WIRE_VERSION; pin
+        // that the field survives the wire untouched.
+        match roundtrip(&Frame::Hello { version: WIRE_VERSION + 1 }) {
+            Frame::Hello { version } => assert_eq!(version, WIRE_VERSION + 1),
+            other => panic!("wrong frame {}", other.name()),
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! The shard-worker serve loop behind `dials shard-worker` (DESIGN.md
+//! §15).
+//!
+//! A worker owns one contiguous agent range of a full GS replica. It
+//! never sees policies, rewards, or influence labels — per step it
+//! receives the scoped actions plus the PREVIOUS step's resolved boundary
+//! events, applies those merge decisions to its replica
+//! (`PartitionedGs::apply_events_scoped`), runs `step_local` on its range
+//! with the owned agents' PCG64 streams, and ships back the emitted
+//! events, the byte-exact shard state, and the advanced RNG words. The
+//! coordinator performs the deterministic `key()`-ordered merge, so every
+//! replica applies the SAME decisions and the trajectory is bit-identical
+//! to the in-process `--gs-shards` path at any process count.
+//!
+//! Determinism of resets: `Reset` carries the raw episode-RNG words
+//! captured BEFORE `GlobalSim::reset` on the coordinator. The worker
+//! replays the reset draws from the same position, then re-derives ALL
+//! `n_agents` per-agent streams in global agent order (`split(k + 1)`,
+//! exactly the `ShardPlan::reseed` accounting) and keeps its own range —
+//! so stream `k` is the same stream on every process.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::sim::ShardRange;
+use crate::util::rng::Pcg64;
+
+use super::transport::ShardTransport;
+use super::wire::{Frame, WIRE_VERSION};
+
+/// Test/bench-only artificial straggling: sleep `delay_ms` before every
+/// `every`-th step (by 1-based step count). Forces the coordinator's
+/// deadline + speculative re-execution path deterministically
+/// (`dials shard-worker --straggle-ms --straggle-every`).
+#[derive(Clone, Copy, Debug)]
+pub struct StraggleInjection {
+    pub delay_ms: u64,
+    pub every: u64,
+}
+
+impl StraggleInjection {
+    fn applies_to(&self, step_id: u64) -> bool {
+        self.delay_ms > 0 && self.every > 0 && (step_id + 1) % self.every == 0
+    }
+}
+
+/// Run the worker protocol over `transport` until the coordinator sends
+/// `Shutdown` or disconnects (both are clean exits — the coordinator owns
+/// the run's lifetime).
+pub fn serve(
+    transport: &mut dyn ShardTransport,
+    straggle: Option<StraggleInjection>,
+) -> Result<()> {
+    transport.send(&Frame::Hello { version: WIRE_VERSION })?;
+    let (domain, grid_side, range, n_agents) = match transport.recv()? {
+        Frame::Init { domain, grid_side, start, end, n_agents } => {
+            (domain, grid_side, ShardRange { start, end }, n_agents)
+        }
+        other => bail!("expected Init, got {}", other.name()),
+    };
+    let mut gs = crate::coordinator::make_global_sim(domain, grid_side);
+    if gs.n_agents() != n_agents {
+        bail!(
+            "Init claims {n_agents} agents but {} at grid side {grid_side} has {}",
+            domain.name(),
+            gs.n_agents()
+        );
+    }
+    if range.start >= range.end || range.end > n_agents {
+        bail!("Init carries invalid shard range [{}, {})", range.start, range.end);
+    }
+
+    // Owned-range scratch, reused every step (zero steady-state alloc on
+    // the sim side; the wire send owns its own buffers).
+    let mut rngs: Vec<Pcg64> = vec![Pcg64::new(0, 0); range.len()];
+    let mut actions_full = vec![0usize; n_agents];
+    let mut rewards = vec![0.0f32; range.len()];
+    let mut events = Vec::new();
+    let mut state = Vec::new();
+    let mut raws: Vec<(u128, u128)> = Vec::with_capacity(range.len());
+    let mut initialised = false;
+
+    loop {
+        let frame = match transport.recv() {
+            Ok(f) => f,
+            // Coordinator gone: normal teardown for socket transports
+            // whose peer exits without a Shutdown frame.
+            Err(_) => return Ok(()),
+        };
+        match frame {
+            Frame::Reset { state: s, inc } => {
+                let mut episode = Pcg64::from_raw((s, inc));
+                gs.reset(&mut episode);
+                // Global-order stream derivation; keep the owned range.
+                for k in 0..n_agents {
+                    let stream = episode.split(k as u64 + 1);
+                    if range.contains(k) {
+                        rngs[k - range.start] = stream;
+                    }
+                }
+                initialised = true;
+            }
+            Frame::Step { step_id, actions, sync } => {
+                if !initialised {
+                    bail!("Step before any Reset");
+                }
+                if actions.len() != range.len() {
+                    bail!(
+                        "Step carries {} actions for a {}-agent shard",
+                        actions.len(),
+                        range.len()
+                    );
+                }
+                if let Some(s) = &straggle {
+                    if s.applies_to(step_id) {
+                        std::thread::sleep(Duration::from_millis(s.delay_ms));
+                    }
+                }
+                let part = gs
+                    .as_partitioned()
+                    .ok_or_else(|| anyhow!("{} GS is not partitioned", domain.name()))?;
+                // Complete the previous tick with the coordinator's merge
+                // decisions, then advance the owned range one tick.
+                part.apply_events_scoped(&sync, range);
+                for (k, a) in actions.iter().enumerate() {
+                    actions_full[range.start + k] = *a as usize;
+                }
+                for r in rewards.iter_mut() {
+                    *r = 0.0;
+                }
+                events.clear();
+                // SAFETY: this thread is the only accessor of `gs`; the
+                // single range trivially satisfies the disjointness
+                // contract.
+                unsafe {
+                    part.step_local(range, &actions_full, &mut rewards, &mut events, &mut rngs);
+                }
+                state.clear();
+                part.export_shard_state(range, &mut state);
+                raws.clear();
+                raws.extend(rngs.iter().map(|r| r.to_raw()));
+                transport.send(&Frame::StepRes {
+                    step_id,
+                    events: events.clone(),
+                    state: state.clone(),
+                    rngs: raws.clone(),
+                })?;
+            }
+            Frame::Shutdown => return Ok(()),
+            other => bail!("unexpected {} frame in the serve loop", other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Domain;
+    use crate::dist::transport::ChannelTransport;
+
+    /// Drive one worker thread through handshake, reset, and a step; the
+    /// full coordinator-equivalence suite lives in
+    /// `tests/dist_equivalence.rs`.
+    #[test]
+    fn worker_handshakes_resets_and_steps() {
+        let (mut coord, worker) = ChannelTransport::pair();
+        let h = std::thread::spawn(move || {
+            let mut t = worker;
+            serve(&mut t, None)
+        });
+        match coord.recv().unwrap() {
+            Frame::Hello { version } => assert_eq!(version, WIRE_VERSION),
+            other => panic!("expected Hello, got {}", other.name()),
+        }
+        coord
+            .send(&Frame::Init { domain: Domain::Traffic, grid_side: 2, start: 0, end: 2, n_agents: 4 })
+            .unwrap();
+        let rng = Pcg64::seed(11);
+        coord.send(&Frame::Reset { state: rng.to_raw().0, inc: rng.to_raw().1 }).unwrap();
+        coord
+            .send(&Frame::Step { step_id: 0, actions: vec![0, 1], sync: Vec::new() })
+            .unwrap();
+        match coord.recv().unwrap() {
+            Frame::StepRes { step_id, state, rngs, .. } => {
+                assert_eq!(step_id, 0);
+                assert!(!state.is_empty());
+                assert_eq!(rngs.len(), 2);
+            }
+            other => panic!("expected StepRes, got {}", other.name()),
+        }
+        coord.send(&Frame::Shutdown).unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn worker_rejects_step_before_reset() {
+        let (mut coord, worker) = ChannelTransport::pair();
+        let h = std::thread::spawn(move || {
+            let mut t = worker;
+            serve(&mut t, None)
+        });
+        let _ = coord.recv().unwrap(); // Hello
+        coord
+            .send(&Frame::Init { domain: Domain::Warehouse, grid_side: 2, start: 2, end: 4, n_agents: 4 })
+            .unwrap();
+        coord.send(&Frame::Step { step_id: 0, actions: vec![0, 0], sync: Vec::new() }).unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("before any Reset"), "{err:#}");
+    }
+
+    #[test]
+    fn worker_rejects_bad_init() {
+        for bad in [
+            Frame::Init { domain: Domain::Traffic, grid_side: 2, start: 0, end: 9, n_agents: 4 },
+            Frame::Init { domain: Domain::Traffic, grid_side: 2, start: 3, end: 3, n_agents: 4 },
+            Frame::Init { domain: Domain::Traffic, grid_side: 2, start: 0, end: 4, n_agents: 5 },
+        ] {
+            let (mut coord, worker) = ChannelTransport::pair();
+            let h = std::thread::spawn(move || {
+                let mut t = worker;
+                serve(&mut t, None)
+            });
+            let _ = coord.recv().unwrap(); // Hello
+            coord.send(&bad).unwrap();
+            assert!(h.join().unwrap().is_err(), "worker accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn straggle_schedule_fires_every_nth_step() {
+        let s = StraggleInjection { delay_ms: 5, every: 3 };
+        let fired: Vec<u64> = (0..9).filter(|&t| s.applies_to(t)).collect();
+        assert_eq!(fired, vec![2, 5, 8]);
+        let off = StraggleInjection { delay_ms: 0, every: 3 };
+        assert!(!(0..9).any(|t| off.applies_to(t)));
+    }
+}

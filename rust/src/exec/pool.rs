@@ -144,6 +144,34 @@ impl<R: Send + 'static> DeferredHandle<R> {
         matches!(*self.state.slot.lock().unwrap(), DeferredSlot::Done(_))
     }
 
+    /// Wait for the job until `deadline`. Returns `Some(result)` if it
+    /// finished in time, `None` on timeout — WITHOUT consuming the handle,
+    /// so a later `wait` can still drain it. Unlike `wait`, a still-queued
+    /// job is NOT stolen and run inline: stealing a blocking job here
+    /// would blow the very deadline this method exists to enforce (the
+    /// distributed coordinator's straggler detection, DESIGN.md §15).
+    pub fn wait_until(&self, deadline: Instant) -> Option<Result<R>> {
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if let DeferredSlot::Done(_) = &*slot {
+                match std::mem::replace(&mut *slot, DeferredSlot::Taken) {
+                    DeferredSlot::Done(r) => return Some(r),
+                    _ => unreachable!(),
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) =
+                self.state.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+            if timeout.timed_out() && !matches!(&*slot, DeferredSlot::Done(_)) {
+                return None;
+            }
+        }
+    }
+
     /// Block until the job completes and take its result. If the job is
     /// still queued (1-thread pool, busy or shut-down helpers) it runs
     /// inline on this thread, so `wait` can never deadlock.
@@ -783,6 +811,39 @@ mod tests {
         for (k, h) in handles.into_iter().enumerate() {
             assert_eq!(h.wait().unwrap(), (k * k) as u64);
         }
+    }
+
+    #[test]
+    fn wait_until_returns_completed_result_in_time() {
+        let pool = WorkerPool::new(4);
+        let h = pool.submit_deferred(|| Ok(11u32));
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        assert_eq!(h.wait_until(deadline).unwrap().unwrap(), 11);
+    }
+
+    #[test]
+    fn wait_until_times_out_without_stealing_queued_job() {
+        // 1-thread pool: no helper will ever run the job, so wait_until
+        // must time out (NOT steal and run it inline) and leave the job
+        // drainable by a later blocking wait.
+        let pool = WorkerPool::new(1);
+        let h = pool.submit_deferred(|| Ok(5u8));
+        let deadline = Instant::now() + std::time::Duration::from_millis(20);
+        assert!(h.wait_until(deadline).is_none(), "must not steal the queued job");
+        assert_eq!(h.wait().unwrap(), 5);
+    }
+
+    #[test]
+    fn wait_until_times_out_on_slow_running_job_then_wait_drains_it() {
+        let pool = WorkerPool::new(2);
+        let h = pool.submit_deferred(|| {
+            std::thread::sleep(std::time::Duration::from_millis(80));
+            Ok(9u64)
+        });
+        let deadline = Instant::now() + std::time::Duration::from_millis(10);
+        assert!(h.wait_until(deadline).is_none());
+        // The late result is still there for the drain path.
+        assert_eq!(h.wait().unwrap(), 9);
     }
 
     #[test]

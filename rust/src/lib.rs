@@ -9,6 +9,7 @@
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod dist;
 pub mod exec;
 pub mod influence;
 pub mod nn;

@@ -1,16 +1,19 @@
 //! `dials` — the DIALS leader binary.
 //!
 //! Subcommands:
-//!   train     run one experiment (GS | DIALS | untrained-DIALS)
-//!   eval      evaluate the scripted baselines on the GS
-//!   serve     dynamic-batching inference server over a checkpoint
-//!   inspect   print an artifact set's interface contract
-//!   synth     write native (no-XLA) synthetic artifacts
-//!   help      usage
+//!   train         run one experiment (GS | DIALS | untrained-DIALS)
+//!   eval          evaluate the scripted baselines on the GS
+//!   serve         dynamic-batching inference server over a checkpoint
+//!   shard-worker  own one GS shard for a `train --gs-procs` coordinator
+//!   inspect       print an artifact set's interface contract
+//!   synth         write native (no-XLA) synthetic artifacts
+//!   help          usage
 //!
 //! Examples:
 //!   dials train --domain traffic --mode dials --grid-side 2 --total-steps 4000
 //!   dials train --config configs/traffic_4.toml
+//!   dials train --grid-side 3 --gs-procs 2 --shard-addr 127.0.0.1:7401
+//!   dials shard-worker --shard-addr 127.0.0.1:7401
 //!   dials eval --domain warehouse --grid-side 5
 //!   dials serve --ckpt ckpt/ --load-gen --streams 8 --requests 2000
 //!   dials inspect --domain traffic
@@ -25,6 +28,7 @@ use anyhow::{bail, Result};
 use dials::baselines::{scripted_return, GsTrainer};
 use dials::config::{Domain, ExperimentConfig, SimMode};
 use dials::coordinator::DialsCoordinator;
+use dials::dist::{serve as dist_serve, SocketTransport, StraggleInjection};
 use dials::runtime::{synth, ArtifactSet, Engine};
 use dials::serve::{run_load_gen, spawn_watcher, Batcher, LoadGenOpts, PolicyStore, ServeOpts};
 use dials::util::cli::Args;
@@ -34,10 +38,11 @@ use dials::util::cli::Args;
 const TRAIN_FLAGS: &[&str] = &[
     "config", "domain", "mode", "grid-side", "total-steps", "aip-freq", "aip-dataset",
     "aip-epochs", "eval-every", "eval-episodes", "horizon", "seed", "threads", "artifacts",
-    "gs-batch", "gs-shards", "async-eval", "async-collect", "async-retrain", "ls-replicas",
-    "save-ckpt-every",
+    "gs-batch", "gs-shards", "gs-procs", "shard-addr", "async-eval", "async-collect",
+    "async-retrain", "ls-replicas", "save-ckpt-every",
     "save-ckpt", "load-ckpt", "out", "rollout", "minibatch", "epochs",
 ];
+const SHARD_WORKER_FLAGS: &[&str] = &["shard-addr", "straggle-ms", "straggle-every"];
 const EVAL_FLAGS: &[&str] = &["domain", "grid-side", "episodes", "horizon", "seed"];
 const INSPECT_FLAGS: &[&str] = &["domain", "artifacts"];
 const SERVE_FLAGS: &[&str] = &[
@@ -72,6 +77,10 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "serve" => {
             args.check_known("serve", SERVE_FLAGS)?;
             cmd_serve(&args)
+        }
+        "shard-worker" => {
+            args.check_known("shard-worker", SHARD_WORKER_FLAGS)?;
+            cmd_shard_worker(&args)
         }
         "inspect" => {
             args.check_known("inspect", INSPECT_FLAGS)?;
@@ -129,6 +138,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if log.checkpoint_saves > 0 {
         eprintln!("[dials] periodic checkpoints written: {}", log.checkpoint_saves);
+    }
+    if cfg.gs_procs > 0 {
+        eprintln!(
+            "[dials] dist: {} shard proc(s), speculative re-executions: {}",
+            cfg.gs_procs, log.dist_speculations
+        );
     }
     // LS training throughput: every agent advances one env step per
     // joint tick per replica, so the trained-experience rate is
@@ -258,6 +273,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One GS shard worker for a `dials train --gs-procs N --shard-addr A`
+/// coordinator: connect (with backoff — workers typically race the
+/// coordinator's bind), then run the `dist::serve` protocol loop until
+/// the coordinator shuts the run down or disconnects. The worker learns
+/// its domain, grid, and agent range from the `Init` frame; no config
+/// file needed. `--straggle-ms D --straggle-every K` injects a D-ms sleep
+/// before every K-th step to exercise the coordinator's deadline +
+/// speculative re-execution path (tests/CI only).
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("shard-addr") else {
+        bail!("shard-worker needs --shard-addr HOST:PORT or --shard-addr /path/to.sock");
+    };
+    let straggle_ms = args.get_u64("straggle-ms", 0)?;
+    let straggle_every = args.get_u64("straggle-every", 0)?;
+    let straggle = (straggle_ms > 0 && straggle_every > 0)
+        .then_some(StraggleInjection { delay_ms: straggle_ms, every: straggle_every });
+    let mut transport = SocketTransport::connect_with_backoff(
+        addr,
+        50,
+        Duration::from_millis(50),
+        Some(Duration::from_secs(300)),
+    )?;
+    eprintln!("[dials] shard-worker connected to {addr}");
+    dist_serve(&mut transport, straggle)?;
+    eprintln!("[dials] shard-worker done");
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let domain = Domain::parse(args.get_or("domain", "traffic"))?;
     let dir = args.get_or("artifacts", "artifacts");
@@ -297,6 +340,11 @@ train:
   --seed N  --threads N   --artifacts DIR      --out curve.csv
   --gs-batch true|false   batched joint-step inference (default true)
   --gs-shards N           parallel GS dynamics shards (0 = serial)
+  --gs-procs P            multi-process GS: P shard workers own the
+                          dynamics (0 = in-process; bit-identical to
+                          --gs-shards at any P)
+  --shard-addr A          socket for the shard workers (host:port TCP or
+                          /path unix); empty = loopback worker threads
   --async-eval N          overlap GS eval with training: N in-flight
                           eval slots (2 = double buffer, 0 = blocking)
   --async-collect N       pipeline Algorithm-2 influence collection over
@@ -320,6 +368,11 @@ train:
                           a running `dials serve --watch` hot-reloads each)
 eval:
   --domain D --grid-side N --episodes N --horizon N  (scripted baseline)
+shard-worker:
+  --shard-addr A          coordinator socket to join (required)
+  --straggle-ms D --straggle-every K   inject a D-ms sleep before every
+                          K-th step (exercises the coordinator's deadline
+                          + speculative re-execution path; tests/CI)
 serve:
   --ckpt DIR              checkpoint to serve (required)
   --load-gen              drive with built-in GS client streams (required

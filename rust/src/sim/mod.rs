@@ -15,7 +15,9 @@ pub mod shard;
 pub mod traffic;
 pub mod warehouse;
 
-pub use shard::{BoundaryEvent, ShardPlan, ShardRange, ShardSlots};
+pub use shard::{partition_ranges, BoundaryEvent, ShardPlan, ShardRange, ShardSlots};
+
+use anyhow::Result;
 
 use crate::util::rng::Pcg64;
 
@@ -102,7 +104,53 @@ pub trait PartitionedGs: GlobalSim + Sync {
     /// Serially apply the merged boundary events (pre-sorted by
     /// [`BoundaryEvent::key`]) and finalise the joint `rewards` (len =
     /// `n_agents`). Runs after every shard's `step_local` completed.
-    fn apply_boundary(&mut self, events: &[BoundaryEvent], rewards: &mut [f32]);
+    ///
+    /// When `outcomes` is given, push one bool per event — whether the
+    /// event actually applied (a `TrafficCross`/`WarehouseSpawn` is
+    /// dropped when its target cell is occupied at merge time). The
+    /// distributed coordinator ships these resolved `(event, outcome)`
+    /// pairs to shard workers so every replica applies the SAME merge
+    /// decisions the coordinator made (DESIGN.md §15); the in-process
+    /// path passes `None` and stays allocation-free.
+    fn apply_boundary_resolved(
+        &mut self,
+        events: &[BoundaryEvent],
+        rewards: &mut [f32],
+        outcomes: Option<&mut Vec<bool>>,
+    );
+
+    /// Merge entry point of the in-process path: resolved outcomes are
+    /// not recorded.
+    fn apply_boundary(&mut self, events: &[BoundaryEvent], rewards: &mut [f32]) {
+        self.apply_boundary_resolved(events, rewards, None);
+    }
+
+    /// Apply the already-resolved merge decisions of the PREVIOUS step to
+    /// the state owned by `shard` — the shard-worker half of the merge.
+    /// Only occupancy-shaped effects whose consumer lies in `shard` are
+    /// touched (a crossing pops the source stop line if the source agent
+    /// is owned, and fills the target entry cell if the target agent is
+    /// owned); rewards and influence labels are coordinator-side only.
+    /// Events with `outcome == false` were dropped by the merge and must
+    /// be skipped here too.
+    fn apply_events_scoped(&mut self, sync: &[(BoundaryEvent, bool)], shard: ShardRange);
+
+    /// Append the byte-exact step-boundary state of the agents in `shard`
+    /// to `out` (the `StepRes` wire payload). Must capture everything
+    /// `step_local` reads or `observe` reports for those agents, so an
+    /// import followed by a local re-execution is bit-identical to the
+    /// remote execution it replaces.
+    fn export_shard_state(&self, shard: ShardRange, out: &mut Vec<u8>);
+
+    /// Inverse of [`PartitionedGs::export_shard_state`]. Errors (never
+    /// panics) on truncated or malformed bytes.
+    fn import_shard_state(&mut self, shard: ShardRange, bytes: &[u8]) -> Result<()>;
+
+    /// Append the one-hop topological neighbours of `agent` to `out` —
+    /// the agents whose boundary events `agent` can consume or emit. The
+    /// distributed coordinator derives shard adjacency from this
+    /// (DARL1N-style one-hop scoping).
+    fn neighbours(&self, agent: usize, out: &mut Vec<usize>);
 }
 
 /// A local simulator of one agent's region, driven by sampled influence

@@ -52,6 +52,29 @@ impl ShardRange {
     pub fn is_empty(self) -> bool {
         self.start == self.end
     }
+
+    pub fn contains(self, agent: usize) -> bool {
+        self.start <= agent && agent < self.end
+    }
+}
+
+/// Partition `n_agents` into `shards` contiguous near-equal ranges
+/// (`shards` is clamped to `[1, n_agents]`). Shared by the in-process
+/// [`ShardPlan`] and the multi-process `dist::DistPlan` so both cut the
+/// agent rows identically — a prerequisite of their bit-identity.
+pub fn partition_ranges(n_agents: usize, shards: usize) -> Vec<ShardRange> {
+    assert!(n_agents > 0, "partition over zero agents");
+    let s = shards.clamp(1, n_agents);
+    let (base, extra) = (n_agents / s, n_agents % s);
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0usize;
+    for k in 0..s {
+        let len = base + usize::from(k < extra);
+        out.push(ShardRange { start, end: start + len });
+        start += len;
+    }
+    debug_assert_eq!(start, n_agents);
+    out
 }
 
 /// A cross-shard effect of one shard-local step, applied during the merge.
@@ -86,6 +109,68 @@ impl BoundaryEvent {
             BoundaryEvent::TrafficInflow { agent, lane } => (1, agent, lane, 0, 0),
             BoundaryEvent::WarehouseSpawn { agent, slot } => (2, agent, slot, 0, 0),
         }
+    }
+
+    /// The agents whose shard-local state the merged event touches — the
+    /// event-consumer metadata the distributed coordinator uses for
+    /// one-hop sync scoping (DARL1N-style): a shard receives an event iff
+    /// it owns at least one consumer. A `TrafficCross` touches both ends
+    /// (the target's entry cell AND the source's stop line); an inflow
+    /// only its target; a `WarehouseSpawn` touches no shard-local worker
+    /// state at all (item shelves live on the coordinator only).
+    pub fn consumers(&self) -> impl Iterator<Item = usize> {
+        let (a, b): (Option<usize>, Option<usize>) = match *self {
+            BoundaryEvent::TrafficCross { agent, src, .. } => (Some(agent), Some(src)),
+            BoundaryEvent::TrafficInflow { agent, .. } => (Some(agent), None),
+            BoundaryEvent::WarehouseSpawn { .. } => (None, None),
+        };
+        a.into_iter().chain(b)
+    }
+
+    /// Append the wire form (tag byte + u32 fields) to `buf`.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        let mut w = crate::util::codec::ByteWriter::new(buf);
+        match *self {
+            BoundaryEvent::TrafficCross { agent, lane, src, src_lane } => {
+                w.put_u8(0);
+                w.put_u32(agent as u32);
+                w.put_u32(lane as u32);
+                w.put_u32(src as u32);
+                w.put_u32(src_lane as u32);
+            }
+            BoundaryEvent::TrafficInflow { agent, lane } => {
+                w.put_u8(1);
+                w.put_u32(agent as u32);
+                w.put_u32(lane as u32);
+            }
+            BoundaryEvent::WarehouseSpawn { agent, slot } => {
+                w.put_u8(2);
+                w.put_u32(agent as u32);
+                w.put_u32(slot as u32);
+            }
+        }
+    }
+
+    /// Decode one event from `r` (inverse of [`BoundaryEvent::encode`]).
+    /// Errors on truncation or an unknown tag; never panics.
+    pub fn decode(r: &mut crate::util::codec::ByteReader<'_>) -> Result<BoundaryEvent> {
+        Ok(match r.get_u8()? {
+            0 => BoundaryEvent::TrafficCross {
+                agent: r.get_u32()? as usize,
+                lane: r.get_u32()? as usize,
+                src: r.get_u32()? as usize,
+                src_lane: r.get_u32()? as usize,
+            },
+            1 => BoundaryEvent::TrafficInflow {
+                agent: r.get_u32()? as usize,
+                lane: r.get_u32()? as usize,
+            },
+            2 => BoundaryEvent::WarehouseSpawn {
+                agent: r.get_u32()? as usize,
+                slot: r.get_u32()? as usize,
+            },
+            tag => return Err(anyhow!("unknown BoundaryEvent tag {tag}")),
+        })
     }
 }
 
@@ -183,22 +268,15 @@ impl ShardPlan {
     /// Partition `n_agents` into `shards` contiguous near-equal ranges
     /// (`shards` is clamped to `[1, n_agents]`).
     pub fn new(n_agents: usize, shards: usize) -> Self {
-        assert!(n_agents > 0, "ShardPlan over zero agents");
-        let s = shards.clamp(1, n_agents);
-        let (base, extra) = (n_agents / s, n_agents % s);
-        let mut out = Vec::with_capacity(s);
-        let mut start = 0usize;
-        for k in 0..s {
-            let len = base + usize::from(k < extra);
-            out.push(ShardScratch {
-                range: ShardRange { start, end: start + len },
-                rewards: vec![0.0; len],
+        let out = partition_ranges(n_agents, shards)
+            .into_iter()
+            .map(|range| ShardScratch {
+                range,
+                rewards: vec![0.0; range.len()],
                 events: Vec::new(),
-                rngs: (0..len).map(|_| Pcg64::new(0, 0)).collect(),
-            });
-            start += len;
-        }
-        debug_assert_eq!(start, n_agents);
+                rngs: (0..range.len()).map(|_| Pcg64::new(0, 0)).collect(),
+            })
+            .collect();
         ShardPlan { shards: out, merged: Vec::new(), n_agents }
     }
 
@@ -328,6 +406,54 @@ mod tests {
         assert!(inflow.key() < spawn.key());
         let c2 = BoundaryEvent::TrafficCross { agent: 0, lane: 3, src: 4, src_lane: 1 };
         assert!(c2.key() < cross.key(), "same target: source index breaks the tie");
+    }
+
+    #[test]
+    fn consumers_name_both_cross_endpoints() {
+        let cross = BoundaryEvent::TrafficCross { agent: 3, lane: 1, src: 7, src_lane: 0 };
+        assert_eq!(cross.consumers().collect::<Vec<_>>(), vec![3, 7]);
+        let inflow = BoundaryEvent::TrafficInflow { agent: 5, lane: 2 };
+        assert_eq!(inflow.consumers().collect::<Vec<_>>(), vec![5]);
+        let spawn = BoundaryEvent::WarehouseSpawn { agent: 1, slot: 4 };
+        assert_eq!(spawn.consumers().count(), 0);
+    }
+
+    #[test]
+    fn event_wire_roundtrip() {
+        let events = [
+            BoundaryEvent::TrafficCross { agent: 3, lane: 1, src: 7, src_lane: 0 },
+            BoundaryEvent::TrafficInflow { agent: 5, lane: 2 },
+            BoundaryEvent::WarehouseSpawn { agent: 1, slot: 11 },
+        ];
+        let mut buf = Vec::new();
+        for e in &events {
+            e.encode(&mut buf);
+        }
+        let mut r = crate::util::codec::ByteReader::new(&buf);
+        for e in &events {
+            assert_eq!(BoundaryEvent::decode(&mut r).unwrap(), *e);
+        }
+        assert_eq!(r.remaining(), 0);
+        // Unknown tag errors instead of panicking.
+        let bad = [9u8];
+        let mut r = crate::util::codec::ByteReader::new(&bad);
+        assert!(BoundaryEvent::decode(&mut r).is_err());
+    }
+
+    #[test]
+    fn partition_ranges_matches_plan_and_contains() {
+        for (n, s) in [(9usize, 2usize), (9, 3), (16, 5), (1, 4)] {
+            let ranges = partition_ranges(n, s);
+            let plan = ShardPlan::new(n, s);
+            assert_eq!(ranges.len(), plan.n_shards());
+            for (r, sh) in ranges.iter().zip(plan.shards.iter()) {
+                assert_eq!(*r, sh.range);
+            }
+            for a in 0..n {
+                assert_eq!(ranges.iter().filter(|r| r.contains(a)).count(), 1);
+            }
+            assert!(!ranges[0].contains(n));
+        }
     }
 
     #[test]

@@ -24,10 +24,13 @@
 //! entries are applied after the CA advance (events merged in
 //! `BoundaryEvent::key` order), not interleaved with it.
 
+use anyhow::{bail, Result};
+
 use crate::sim::{
     BoundaryEvent, GlobalSim, PartitionedGs, ShardRange, ShardSlots, TRAFFIC_ACT, TRAFFIC_OBS,
     TRAFFIC_U_DIM,
 };
+use crate::util::codec::{ByteReader, ByteWriter};
 use crate::util::rng::Pcg64;
 
 use super::{exit_dir, sample_turn, Dir, Light, Segment, BOUNDARY_INFLOW, DIRS, SEG_LEN};
@@ -319,20 +322,28 @@ impl PartitionedGs for TrafficGlobalSim {
         }
     }
 
-    fn apply_boundary(&mut self, events: &[BoundaryEvent], rewards: &mut [f32]) {
+    fn apply_boundary_resolved(
+        &mut self,
+        events: &[BoundaryEvent],
+        rewards: &mut [f32],
+        mut outcomes: Option<&mut Vec<bool>>,
+    ) {
         let n = self.n_agents();
         debug_assert_eq!(rewards.len(), n);
         let cells = self.cells.as_mut_slice();
         for ev in events {
-            match *ev {
+            let applied = match *ev {
                 BoundaryEvent::TrafficCross { agent, lane, src, src_lane } => {
                     if cells[agent].incoming[lane].entry_free() {
                         cells[src].incoming[src_lane].pop_stop_line();
                         cells[agent].incoming[lane].push_entry_merged();
                         cells[agent].label[lane] = 1.0;
                         cells[src].moved += 1;
+                        true
+                    } else {
+                        // blocked by downstream congestion, car waits
+                        false
                     }
-                    // else: blocked by downstream congestion, car waits
                 }
                 BoundaryEvent::TrafficInflow { agent, lane } => {
                     if cells[agent].incoming[lane].entry_free() {
@@ -340,13 +351,106 @@ impl PartitionedGs for TrafficGlobalSim {
                         cells[agent].label[lane] = 1.0;
                         cells[agent].moved += 1;
                         cells[agent].cars += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                _ => {
+                    debug_assert!(false, "foreign boundary event {ev:?} reached the traffic GS");
+                    false
+                }
+            };
+            if let Some(out) = outcomes.as_deref_mut() {
+                out.push(applied);
+            }
+        }
+        for (cell, r) in cells.iter().zip(rewards.iter_mut()) {
+            *r = if cell.cars == 0 { 1.0 } else { cell.moved as f32 / cell.cars as f32 };
+        }
+    }
+
+    fn apply_events_scoped(&mut self, sync: &[(BoundaryEvent, bool)], shard: ShardRange) {
+        let cells = self.cells.as_mut_slice();
+        for &(ev, applied) in sync {
+            if !applied {
+                continue;
+            }
+            match ev {
+                BoundaryEvent::TrafficCross { agent, lane, src, src_lane } => {
+                    if shard.contains(src) {
+                        cells[src].incoming[src_lane].pop_stop_line();
+                    }
+                    if shard.contains(agent) {
+                        cells[agent].incoming[lane].push_entry_merged();
+                    }
+                }
+                BoundaryEvent::TrafficInflow { agent, lane } => {
+                    if shard.contains(agent) {
+                        cells[agent].incoming[lane].push_entry_merged();
                     }
                 }
                 _ => debug_assert!(false, "foreign boundary event {ev:?} reached the traffic GS"),
             }
         }
-        for (cell, r) in cells.iter().zip(rewards.iter_mut()) {
-            *r = if cell.cars == 0 { 1.0 } else { cell.moved as f32 / cell.cars as f32 };
+        // labels/moved/cars are per-tick scratch, reset at the next
+        // step_local — a worker never reads them, so they are not synced.
+    }
+
+    fn export_shard_state(&self, shard: ShardRange, out: &mut Vec<u8>) {
+        let mut w = ByteWriter::new(out);
+        for agent in shard.start..shard.end {
+            let cell = self.cells.get(agent);
+            for seg in cell.incoming.iter().chain(cell.sinks.iter()) {
+                w.put_u8(seg.occ_bits());
+            }
+            w.put_u8(match cell.light.phase {
+                super::Phase::NsGreen => 0,
+                super::Phase::EwGreen => 1,
+            });
+            w.put_u32(cell.light.time_in_phase);
+            for &l in &cell.label {
+                w.put_f32(l);
+            }
+            w.put_u32(cell.moved as u32);
+            w.put_u32(cell.cars as u32);
+        }
+    }
+
+    fn import_shard_state(&mut self, shard: ShardRange, bytes: &[u8]) -> Result<()> {
+        let cells = self.cells.as_mut_slice();
+        let mut r = ByteReader::new(bytes);
+        for agent in shard.start..shard.end {
+            let cell = &mut cells[agent];
+            for d in 0..4 {
+                cell.incoming[d].set_occ_bits(r.get_u8()?);
+            }
+            for d in 0..4 {
+                cell.sinks[d].set_occ_bits(r.get_u8()?);
+            }
+            cell.light.phase = match r.get_u8()? {
+                0 => super::Phase::NsGreen,
+                1 => super::Phase::EwGreen,
+                p => bail!("bad traffic light phase tag {p}"),
+            };
+            cell.light.time_in_phase = r.get_u32()?;
+            for l in cell.label.iter_mut() {
+                *l = r.get_f32()?;
+            }
+            cell.moved = r.get_u32()? as usize;
+            cell.cars = r.get_u32()? as usize;
+        }
+        if r.remaining() != 0 {
+            bail!("trailing bytes in traffic shard state");
+        }
+        Ok(())
+    }
+
+    fn neighbours(&self, agent: usize, out: &mut Vec<usize>) {
+        for d in DIRS {
+            if let Some(nb) = grid_neighbour(self.side, agent, d) {
+                out.push(nb);
+            }
         }
     }
 }
@@ -498,6 +602,47 @@ mod tests {
             total
         };
         assert!(reward_sum(true) > reward_sum(false));
+    }
+
+    #[test]
+    fn shard_state_export_import_roundtrip() {
+        let mut gs = TrafficGlobalSim::new(2);
+        let mut rng = Pcg64::seed(12);
+        gs.reset(&mut rng);
+        for _ in 0..15 {
+            gs_step_vec(&mut gs, &keep_all(4), &mut rng);
+        }
+        let shard = ShardRange { start: 1, end: 3 };
+        let mut bytes = Vec::new();
+        gs.export_shard_state(shard, &mut bytes);
+        let mut gs2 = TrafficGlobalSim::new(2);
+        let mut rng2 = Pcg64::seed(0);
+        gs2.reset(&mut rng2);
+        gs2.import_shard_state(shard, &bytes).unwrap();
+        for agent in shard.start..shard.end {
+            assert_eq!(observe_vec_global(&gs, agent), observe_vec_global(&gs2, agent));
+            let (mut ua, mut ub) = ([0.0f32; 4], [0.0f32; 4]);
+            gs.influence_label(agent, &mut ua);
+            gs2.influence_label(agent, &mut ub);
+            assert_eq!(ua, ub);
+        }
+        // A frame cut at any offset errors instead of panicking.
+        for cut in 0..bytes.len() {
+            assert!(gs2.import_shard_state(shard, &bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn neighbours_are_the_grid_adjacency() {
+        let gs = TrafficGlobalSim::new(3);
+        let mut nb = Vec::new();
+        gs.neighbours(4, &mut nb); // centre of a 3x3 grid
+        nb.sort_unstable();
+        assert_eq!(nb, vec![1, 3, 5, 7]);
+        nb.clear();
+        gs.neighbours(0, &mut nb); // corner
+        nb.sort_unstable();
+        assert_eq!(nb, vec![1, 3]);
     }
 
     #[test]

@@ -89,6 +89,30 @@ impl Segment {
         moved + self.advance()
     }
 
+    /// Pack occupancy into a bitmask for the shard-state wire codec.
+    ///
+    /// Only valid at a step boundary, where `advance` has already cleared
+    /// every fresh mark — the mask does not carry them, so importing
+    /// mid-tick would lose which cars already moved.
+    pub fn occ_bits(&self) -> u8 {
+        debug_assert!(self.fresh.iter().all(|&f| !f));
+        let mut bits = 0u8;
+        for (j, &o) in self.occ.iter().enumerate() {
+            if o {
+                bits |= 1 << j;
+            }
+        }
+        bits
+    }
+
+    /// Unpack a step-boundary occupancy bitmask (inverse of `occ_bits`).
+    pub fn set_occ_bits(&mut self, bits: u8) {
+        for (j, o) in self.occ.iter_mut().enumerate() {
+            *o = bits & (1 << j) != 0;
+        }
+        self.fresh = [false; SEG_LEN];
+    }
+
     /// Copy occupancy into an observation slice (len SEG_LEN).
     pub fn write_occupancy(&self, out: &mut [f32]) {
         for (o, &c) in out.iter_mut().zip(self.occ.iter()) {
@@ -159,6 +183,16 @@ mod tests {
         let before = s.car_count();
         s.advance();
         assert_eq!(s.car_count(), before);
+    }
+
+    #[test]
+    fn occ_bits_roundtrip() {
+        for pattern in 0..(1u8 << SEG_LEN) {
+            let mut s = Segment::new();
+            s.set_occ_bits(pattern);
+            assert_eq!(s.occ_bits(), pattern);
+            assert_eq!(s.car_count() as u32, pattern.count_ones());
+        }
     }
 
     #[test]

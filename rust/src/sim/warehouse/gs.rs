@@ -21,11 +21,14 @@
 //! tick. The sharded trajectory therefore differs from the serial
 //! reference only in RNG accounting.
 
+use anyhow::{bail, Result};
+
 use crate::sim::{
     BoundaryEvent, GlobalSim, PartitionedGs, ShardRange, ShardSlots, WAREHOUSE_ACT,
     WAREHOUSE_ITEM_SLOTS, WAREHOUSE_N_CLS, WAREHOUSE_N_HEADS, WAREHOUSE_OBS, WAREHOUSE_REGION,
     WAREHOUSE_U_DIM,
 };
+use crate::util::codec::{ByteReader, ByteWriter};
 use crate::util::rng::Pcg64;
 
 use super::{apply_move, slot_local, CLS_ABSENT, ITEM_SPAWN_P};
@@ -347,7 +350,12 @@ impl PartitionedGs for WarehouseGlobalSim {
         }
     }
 
-    fn apply_boundary(&mut self, events: &[BoundaryEvent], rewards: &mut [f32]) {
+    fn apply_boundary_resolved(
+        &mut self,
+        events: &[BoundaryEvent],
+        rewards: &mut [f32],
+        mut outcomes: Option<&mut Vec<bool>>,
+    ) {
         let n = self.n_agents();
         debug_assert_eq!(rewards.len(), n);
         let (side, gside) = (self.side, self.global_side);
@@ -363,14 +371,65 @@ impl PartitionedGs for WarehouseGlobalSim {
         // spawn events land on still-empty cells (same distribution as
         // the serial tick's empty-cell Bernoulli)
         for ev in events {
-            match *ev {
+            let applied = match *ev {
                 BoundaryEvent::WarehouseSpawn { agent, slot } => {
                     let g = slot_global(side, gside, agent, slot);
                     if self.items[g].is_none() {
                         self.items[g] = Some(0);
+                        true
+                    } else {
+                        false
                     }
                 }
-                _ => debug_assert!(false, "foreign boundary event {ev:?} reached the warehouse GS"),
+                _ => {
+                    debug_assert!(
+                        false,
+                        "foreign boundary event {ev:?} reached the warehouse GS"
+                    );
+                    false
+                }
+            };
+            if let Some(out) = outcomes.as_deref_mut() {
+                out.push(applied);
+            }
+        }
+    }
+
+    fn apply_events_scoped(&mut self, _sync: &[(BoundaryEvent, bool)], _shard: ShardRange) {
+        // Warehouse spawn events only touch the item shelves, which live
+        // on the coordinator alone — `step_local` never reads them, so a
+        // shard worker has nothing to apply (`consumers()` is empty).
+    }
+
+    fn export_shard_state(&self, shard: ShardRange, out: &mut Vec<u8>) {
+        let mut w = ByteWriter::new(out);
+        for agent in shard.start..shard.end {
+            let (r, c) = self.cells.get(agent).robot;
+            w.put_u32(r as u32);
+            w.put_u32(c as u32);
+        }
+    }
+
+    fn import_shard_state(&mut self, shard: ShardRange, bytes: &[u8]) -> Result<()> {
+        let cells = self.cells.as_mut_slice();
+        let mut r = ByteReader::new(bytes);
+        for agent in shard.start..shard.end {
+            let (row, col) = (r.get_u32()? as usize, r.get_u32()? as usize);
+            if row >= WAREHOUSE_REGION || col >= WAREHOUSE_REGION {
+                bail!("robot position ({row}, {col}) outside the region");
+            }
+            cells[agent].robot = (row, col);
+        }
+        if r.remaining() != 0 {
+            bail!("trailing bytes in warehouse shard state");
+        }
+        Ok(())
+    }
+
+    fn neighbours(&self, agent: usize, out: &mut Vec<usize>) {
+        for head in 0..WAREHOUSE_N_HEADS {
+            if let Some(nb) = head_neighbour(self.side, agent, head) {
+                out.push(nb);
             }
         }
     }
@@ -520,6 +579,49 @@ mod tests {
                 assert_eq!(u[head * WAREHOUSE_N_CLS + CLS_ABSENT], 1.0);
             }
         }
+    }
+
+    #[test]
+    fn shard_state_export_import_roundtrip() {
+        let mut sim = WarehouseGlobalSim::new(2);
+        let mut rng = Pcg64::seed(9);
+        sim.reset(&mut rng);
+        for t in 0..10 {
+            let acts: Vec<usize> = (0..4).map(|i| (t + i) % 5).collect();
+            gs_step_vec(&mut sim, &acts, &mut rng);
+        }
+        let shard = ShardRange { start: 0, end: 3 };
+        let mut bytes = Vec::new();
+        sim.export_shard_state(shard, &mut bytes);
+        let mut sim2 = WarehouseGlobalSim::new(2);
+        let mut rng2 = Pcg64::seed(0);
+        sim2.reset(&mut rng2);
+        sim2.import_shard_state(shard, &bytes).unwrap();
+        for agent in shard.start..shard.end {
+            assert_eq!(sim.robot_local(agent), sim2.robot_local(agent));
+        }
+        for cut in 0..bytes.len() {
+            assert!(sim2.import_shard_state(shard, &bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // Out-of-region robot coordinates are rejected.
+        let mut bad = Vec::new();
+        {
+            let mut w = ByteWriter::new(&mut bad);
+            for _ in shard.start..shard.end {
+                w.put_u32(99);
+                w.put_u32(0);
+            }
+        }
+        assert!(sim2.import_shard_state(shard, &bad).is_err());
+    }
+
+    #[test]
+    fn neighbours_are_the_region_adjacency() {
+        let sim = WarehouseGlobalSim::new(2);
+        let mut nb = Vec::new();
+        sim.neighbours(0, &mut nb);
+        nb.sort_unstable();
+        assert_eq!(nb, vec![1, 2]);
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Dependency-free binary codec for the distributed-shard wire protocol.
+//!
+//! Little-endian, fixed-width primitives behind a bounds-checked reader:
+//! every `get_*` returns `Err` on truncation instead of panicking, so a
+//! frame cut at any byte offset degrades to a transport error, never a
+//! crash (DESIGN.md §15). No serde — the offline vendor ships none.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian writer over a caller-owned buffer.
+pub struct ByteWriter<'a> {
+    buf: &'a mut Vec<u8>,
+}
+
+impl<'a> ByteWriter<'a> {
+    pub fn new(buf: &'a mut Vec<u8>) -> Self {
+        ByteWriter { buf }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A `put_bytes` payload: u32 length prefix, then the bytes. The length
+    /// is validated against the remaining buffer before any slice is taken,
+    /// so a corrupt prefix errors instead of over-reading.
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_u32()? as usize;
+        self.take(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut buf = Vec::new();
+        let mut w = ByteWriter::new(&mut buf);
+        w.put_u8(0xab);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 3);
+        w.put_u128(0x0123_4567_89ab_cdef_0011_2233_4455_6677);
+        w.put_f32(-1.5);
+        w.put_bytes(b"hello");
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 0xab);
+        assert_eq!(r.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(
+            r.get_u128().unwrap(),
+            0x0123_4567_89ab_cdef_0011_2233_4455_6677
+        );
+        assert_eq!(r.get_f32().unwrap(), -1.5);
+        assert_eq!(r.get_bytes().unwrap(), b"hello");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_at_every_offset_errors() {
+        let mut buf = Vec::new();
+        let mut w = ByteWriter::new(&mut buf);
+        w.put_u32(7);
+        w.put_u64(9);
+        w.put_bytes(b"xyz");
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut]);
+            let ok = (|| -> Result<()> {
+                r.get_u32()?;
+                r.get_u64()?;
+                r.get_bytes()?;
+                Ok(())
+            })();
+            assert!(ok.is_err(), "cut at {cut} should error");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefix_errors() {
+        let mut buf = Vec::new();
+        ByteWriter::new(&mut buf).put_u32(u32::MAX); // claims 4 GiB payload
+        let mut r = ByteReader::new(&buf);
+        assert!(r.get_bytes().is_err());
+    }
+}

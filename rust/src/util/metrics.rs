@@ -120,6 +120,11 @@ pub struct RunLog {
     /// Checkpoints written by `--save-ckpt-every` during the run
     /// (excludes the final save that every `--save-ckpt` run performs).
     pub checkpoint_saves: usize,
+    /// Multi-process GS (`--gs-procs`): speculative local re-executions
+    /// the coordinator performed for late or lost shard workers. 0 on a
+    /// healthy cluster and always 0 when `gs_procs = 0`; the trajectory
+    /// is bit-identical either way (dist::DistPlan).
+    pub dist_speculations: u64,
 }
 
 impl RunLog {

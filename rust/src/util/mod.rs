@@ -4,6 +4,7 @@
 pub mod alloc;
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod metrics;
 pub mod npk;
 pub mod prop;

@@ -49,6 +49,36 @@ impl PhaseTimers {
     }
 }
 
+/// Exponentially-weighted moving average of observed durations.
+///
+/// The distributed coordinator derives per-shard step deadlines from an
+/// EWMA of each shard's wall times (DESIGN.md §15): `observe` folds in a
+/// sample, `value` reads the current estimate (None until the first
+/// sample).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        debug_assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, sample: f64) {
+        self.value = Some(match self.value {
+            None => sample,
+            Some(v) => self.alpha * sample + (1.0 - self.alpha) * v,
+        });
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
 /// Track the critical path of a parallel phase executed serially: record
 /// each worker's duration, report the max (what N cores would measure).
 #[derive(Default, Debug, Clone)]
@@ -137,6 +167,22 @@ mod tests {
         assert_eq!(c.with_slots(10), 3.0);
         // single slot -> sum
         assert_eq!(c.with_slots(1), 8.0);
+    }
+
+    #[test]
+    fn ewma_first_sample_then_blend() {
+        let mut e = Ewma::new(0.25);
+        assert_eq!(e.value(), None);
+        e.observe(4.0);
+        assert_eq!(e.value(), Some(4.0));
+        e.observe(8.0);
+        // 0.25*8 + 0.75*4 = 5.0
+        assert!((e.value().unwrap() - 5.0).abs() < 1e-12);
+        // Repeated observations converge toward the sample.
+        for _ in 0..200 {
+            e.observe(8.0);
+        }
+        assert!((e.value().unwrap() - 8.0).abs() < 1e-6);
     }
 
     #[test]

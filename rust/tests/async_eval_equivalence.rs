@@ -61,6 +61,8 @@ fn tiny_cfg(domain: Domain, dir: &std::path::Path, seed: u64) -> ExperimentConfi
         async_retrain: 0,
         ls_replicas: 0,
         save_ckpt_every: 0,
+        gs_procs: 0,
+        shard_addr: String::new(),
     }
 }
 

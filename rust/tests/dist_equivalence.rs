@@ -1,0 +1,117 @@
+//! Process-count invariance of the distributed GS path (DESIGN.md §15):
+//! a full untrained-DIALS run whose GS dynamics are owned by `gs_procs`
+//! loopback shard workers (`dist::DistPlan` — real wire frames, real
+//! worker serve loops, in-process transport) is bit-identical to the
+//! in-process `--gs-shards` reference for EVERY process count, in both
+//! domains — eval curves, final returns, and per-agent dataset
+//! fingerprints. This is the PR's headline acceptance criterion; the
+//! socket-transport twin (real `dials shard-worker` processes over
+//! loopback TCP) lives in `tests/dist_smoke.rs`.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::PathBuf;
+
+use dials::config::{Domain, ExperimentConfig, PpoConfig, SimMode};
+use dials::coordinator::DialsCoordinator;
+use dials::runtime::{synth, Engine};
+use dials::util::metrics::RunLog;
+
+fn synth_dir(tag: &str, domain: Domain) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_dist_equiv").join(tag).join(domain.name());
+    let _ = std::fs::remove_dir_all(&dir);
+    synth::write_native_artifacts(&dir, domain, 13).unwrap();
+    dir
+}
+
+fn tiny_cfg(
+    domain: Domain,
+    dir: &std::path::Path,
+    gs_shards: usize,
+    gs_procs: usize,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        domain,
+        mode: SimMode::UntrainedDials,
+        grid_side: 3, // 9 agents so procs=4 is a real partition
+        total_steps: 48,
+        aip_train_freq: 48,
+        aip_dataset: 30,
+        aip_epochs: 1,
+        eval_every: 24,
+        eval_episodes: 2,
+        horizon: 12,
+        seed: 21,
+        ppo: PpoConfig { rollout_len: 256, minibatch: 32, epochs: 1, ..Default::default() },
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        threads: 2,
+        gs_batch: true,
+        gs_shards,
+        async_eval: 0,
+        async_collect: 0,
+        async_retrain: 0,
+        ls_replicas: 0,
+        save_ckpt_every: 0,
+        gs_procs,
+        shard_addr: String::new(),
+    }
+}
+
+fn assert_runs_identical(a: &RunLog, b: &RunLog, what: &str) {
+    assert_eq!(a.eval_curve.len(), b.eval_curve.len(), "{what}: curve lengths");
+    for (x, y) in a.eval_curve.iter().zip(b.eval_curve.iter()) {
+        assert_eq!(x.step, y.step, "{what}");
+        assert_eq!(
+            x.value.to_bits(),
+            y.value.to_bits(),
+            "{what}: eval at step {} diverged: {} vs {}",
+            x.step, x.value, y.value
+        );
+    }
+    assert_eq!(a.final_return.to_bits(), b.final_return.to_bits(), "{what}: final return");
+    assert_eq!(a.dataset_fingerprints, b.dataset_fingerprints, "{what}: dataset fingerprints");
+}
+
+#[test]
+fn dist_runs_bit_identical_to_in_process_shards_both_domains() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = synth_dir("runs", domain);
+        let engine = Engine::cpu().unwrap();
+        let run = |gs_shards: usize, gs_procs: usize| {
+            let coord =
+                DialsCoordinator::new(&engine, tiny_cfg(domain, &dir, gs_shards, gs_procs))
+                    .unwrap();
+            coord.run().unwrap()
+        };
+        let reference = run(2, 0);
+        assert!(reference.eval_curve.len() >= 3, "expected initial + per-segment evals");
+        assert_eq!(reference.dist_speculations, 0, "shard path must not speculate");
+        for procs in [1usize, 2, 4] {
+            let dist = run(0, procs);
+            assert_runs_identical(&reference, &dist, &format!("{domain:?} gs_procs={procs}"));
+            assert_eq!(
+                dist.dist_speculations, 0,
+                "{domain:?}: healthy loopback workers must never miss a deadline"
+            );
+        }
+    }
+}
+
+#[test]
+fn dist_path_composes_with_gs_shards_for_the_slots() {
+    // gs_procs takes the MAIN loop; an explicit gs_shards then only picks
+    // the in-process shard count of the async eval/collect slots. Any
+    // combination stays on the same trajectory.
+    let domain = Domain::Traffic;
+    let dir = synth_dir("compose", domain);
+    let engine = Engine::cpu().unwrap();
+    let run = |gs_shards: usize, gs_procs: usize, async_eval: usize| {
+        let mut cfg = tiny_cfg(domain, &dir, gs_shards, gs_procs);
+        cfg.async_eval = async_eval;
+        let coord = DialsCoordinator::new(&engine, cfg).unwrap();
+        coord.run().unwrap()
+    };
+    let reference = run(2, 0, 0);
+    assert_runs_identical(&reference, &run(3, 2, 0), "gs_shards=3 + gs_procs=2");
+    assert_runs_identical(&reference, &run(0, 3, 1), "gs_procs=3 + async_eval=1");
+}

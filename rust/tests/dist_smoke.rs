@@ -1,0 +1,191 @@
+//! End-to-end multi-process smoke (DESIGN.md §15): real `dials
+//! shard-worker` OS processes over loopback TCP, driven by a real `dials
+//! train --gs-procs 2 --shard-addr` coordinator process, must produce a
+//! curve file byte-identical to the in-process `--gs-shards 2` reference
+//! — on a healthy cluster AND under injected straggler delay (where the
+//! coordinator's speculative re-execution path is exercised and
+//! reported). Also pins the `shard-worker` CLI surface: required flags
+//! and typo suggestions.
+//!
+//! This is the test the CI `dist-smoke` leg runs by name.
+
+#![cfg(not(feature = "xla"))]
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use dials::config::Domain;
+use dials::runtime::synth;
+
+fn dials_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dials")
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dials_dist_smoke").join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A free loopback port: bind :0, read the assignment, release it. The
+/// coordinator re-binds it immediately; shard workers retry with backoff,
+/// so the tiny release window cannot race them.
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn train_args(domain: Domain, arts: &Path, out: &Path) -> Vec<String> {
+    [
+        "train", "--domain", domain.name(), "--mode", "untrained",
+        "--grid-side", "3", "--total-steps", "48", "--aip-freq", "48",
+        "--aip-dataset", "30", "--aip-epochs", "1", "--eval-every", "24",
+        "--eval-episodes", "2", "--horizon", "12", "--seed", "21", "--threads", "2",
+        "--rollout", "256", "--minibatch", "32", "--epochs", "1",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain(["--artifacts".into(), arts.to_string_lossy().into_owned()])
+    .chain(["--out".into(), out.to_string_lossy().into_owned()])
+    .collect()
+}
+
+fn spawn_worker(addr: &str, straggle: Option<(u64, u64)>) -> Child {
+    let mut cmd = Command::new(dials_bin());
+    cmd.args(["shard-worker", "--shard-addr", addr]);
+    if let Some((ms, every)) = straggle {
+        cmd.args(["--straggle-ms", &ms.to_string(), "--straggle-every", &every.to_string()]);
+    }
+    cmd.stdout(Stdio::null()).stderr(Stdio::null()).spawn().expect("spawn shard-worker")
+}
+
+/// Run the socket-path coordinator with two real worker processes;
+/// returns the coordinator's stderr.
+fn run_dist(
+    domain: Domain,
+    arts: &Path,
+    out: &Path,
+    addr: &str,
+    straggle: Option<(u64, u64)>,
+    deadline_ms: Option<u64>,
+) -> String {
+    let mut cmd = Command::new(dials_bin());
+    cmd.args(train_args(domain, arts, out));
+    cmd.args(["--gs-procs", "2", "--shard-addr", addr]);
+    if let Some(ms) = deadline_ms {
+        cmd.env("DIALS_DIST_DEADLINE_MS", ms.to_string());
+    }
+    cmd.stdout(Stdio::null()).stderr(Stdio::piped());
+    let coord = cmd.spawn().expect("spawn coordinator");
+    let workers = [spawn_worker(addr, straggle), spawn_worker(addr, straggle)];
+    let got = coord.wait_with_output().expect("coordinator wait");
+    let stderr = String::from_utf8_lossy(&got.stderr).into_owned();
+    assert!(got.status.success(), "dist coordinator failed ({domain:?}):\n{stderr}");
+    for mut w in workers {
+        let st = w.wait().expect("worker wait");
+        assert!(st.success(), "shard-worker exited nonzero ({domain:?})");
+    }
+    stderr
+}
+
+/// The single-process reference: same run with `--gs-shards 2`.
+fn run_reference(domain: Domain, arts: &Path, out: &Path) {
+    let got = Command::new(dials_bin())
+        .args(train_args(domain, arts, out))
+        .args(["--gs-shards", "2"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .output()
+        .expect("reference run");
+    assert!(
+        got.status.success(),
+        "reference run failed ({domain:?}):\n{}",
+        String::from_utf8_lossy(&got.stderr)
+    );
+}
+
+fn assert_same_curve(reference: &Path, dist: &Path, what: &str) {
+    let a = std::fs::read(reference).unwrap();
+    let b = std::fs::read(dist).unwrap();
+    assert!(!a.is_empty(), "{what}: reference curve is empty");
+    assert_eq!(
+        a, b,
+        "{what}: distributed curve differs from the --gs-shards 2 reference:\n--- ref\n{}\n--- dist\n{}",
+        String::from_utf8_lossy(&a),
+        String::from_utf8_lossy(&b)
+    );
+}
+
+#[test]
+fn two_process_tcp_run_matches_in_process_shards() {
+    for domain in [Domain::Traffic, Domain::Warehouse] {
+        let dir = tmp(&format!("plain_{}", domain.name()));
+        let arts = dir.join("artifacts");
+        synth::write_native_artifacts(&arts, domain, 13).unwrap();
+        let ref_out = dir.join("ref.csv");
+        let dist_out = dir.join("dist.csv");
+        run_reference(domain, &arts, &ref_out);
+        let addr = format!("127.0.0.1:{}", free_port());
+        let stderr = run_dist(domain, &arts, &dist_out, &addr, None, None);
+        assert_same_curve(&ref_out, &dist_out, domain.name());
+        assert!(
+            stderr.contains("speculative re-executions: 0"),
+            "healthy workers should never be speculated:\n{stderr}"
+        );
+    }
+}
+
+#[test]
+fn straggling_workers_are_speculated_and_stay_bit_identical() {
+    let domain = Domain::Traffic;
+    let dir = tmp("straggle");
+    let arts = dir.join("artifacts");
+    synth::write_native_artifacts(&arts, domain, 13).unwrap();
+    let ref_out = dir.join("ref.csv");
+    let dist_out = dir.join("dist.csv");
+    run_reference(domain, &arts, &ref_out);
+    let addr = format!("127.0.0.1:{}", free_port());
+    // Workers sleep 60ms before every 4th step; the coordinator's
+    // deadline is pinned to 25ms, so those steps MUST speculate.
+    let stderr = run_dist(domain, &arts, &dist_out, &addr, Some((60, 4)), Some(25));
+    assert_same_curve(&ref_out, &dist_out, "straggle");
+    let specs: u64 = stderr
+        .lines()
+        .find_map(|l| l.split("speculative re-executions: ").nth(1))
+        .and_then(|n| n.trim().parse().ok())
+        .unwrap_or_else(|| panic!("no speculation report in stderr:\n{stderr}"));
+    assert!(specs > 0, "forced stragglers should have been speculated:\n{stderr}");
+}
+
+#[test]
+fn shard_worker_cli_surface_is_validated() {
+    // Missing --shard-addr is a hard error naming the flag.
+    let got = Command::new(dials_bin())
+        .args(["shard-worker"])
+        .output()
+        .expect("run shard-worker without flags");
+    assert!(!got.status.success());
+    let msg = String::from_utf8_lossy(&got.stderr).into_owned();
+    assert!(msg.contains("--shard-addr"), "error should name the missing flag: {msg}");
+
+    // A typo'd flag gets a Levenshtein suggestion, not silence.
+    let got = Command::new(dials_bin())
+        .args(["shard-worker", "--shard-adr", "127.0.0.1:1"])
+        .output()
+        .expect("run shard-worker with typo");
+    assert!(!got.status.success());
+    let msg = String::from_utf8_lossy(&got.stderr).into_owned();
+    assert!(
+        msg.contains("shard-addr"),
+        "typo should suggest the real flag: {msg}"
+    );
+
+    // The new train flags are known (a typo in them still suggests).
+    let got = Command::new(dials_bin())
+        .args(["train", "--gs-proc", "2"])
+        .output()
+        .expect("run train with typo");
+    assert!(!got.status.success());
+    let msg = String::from_utf8_lossy(&got.stderr).into_owned();
+    assert!(msg.contains("gs-procs"), "typo should suggest --gs-procs: {msg}");
+}

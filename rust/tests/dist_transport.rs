@@ -1,0 +1,265 @@
+//! Failure modes of the multi-process GS transport (DESIGN.md §15).
+//!
+//! A distributed run must never let transport trouble perturb the
+//! trajectory: a shard worker that dies mid-run degrades to permanent
+//! local re-execution; a straggler's late reply is discarded after the
+//! coordinator already speculated its range; corrupt or truncated socket
+//! bytes surface as `Err`, never a panic. Each test pins the degraded
+//! trajectory bit-identical to the in-process `ShardPlan` reference.
+
+#![cfg(not(feature = "xla"))]
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use dials::config::Domain;
+use dials::coordinator::make_global_sim;
+use dials::dist::{
+    serve, ChannelTransport, DistPlan, Frame, ShardListener, ShardTransport, SocketTransport,
+    StraggleInjection,
+};
+use dials::exec::WorkerPool;
+use dials::sim::{GlobalSim, ShardPlan};
+use dials::util::rng::Pcg64;
+
+fn fingerprint(gs: &dyn GlobalSim, rewards: &[f32]) -> Vec<u32> {
+    let n = gs.n_agents();
+    let mut obs = vec![0.0f32; gs.obs_dim()];
+    let mut out = Vec::new();
+    for a in 0..n {
+        gs.observe(a, &mut obs);
+        out.extend(obs.iter().map(|x| x.to_bits()));
+        out.push(rewards[a].to_bits());
+    }
+    out
+}
+
+/// The in-process reference trajectory every degraded run must match.
+fn reference_trace(domain: Domain, side: usize, steps: usize) -> Vec<Vec<u32>> {
+    let mut gs = make_global_sim(domain, side);
+    let n = gs.n_agents();
+    let pool = WorkerPool::new(2);
+    let mut plan = ShardPlan::new(n, 2);
+    let mut rng = Pcg64::seed(77);
+    let mut act_rng = Pcg64::seed(5);
+    gs.reset(&mut rng);
+    plan.reseed(&mut rng);
+    let n_act = gs.n_actions();
+    let mut rewards = vec![0.0f32; n];
+    let mut out = Vec::new();
+    for _ in 0..steps {
+        let actions: Vec<usize> =
+            (0..n).map(|_| (act_rng.next_u64() % n_act as u64) as usize).collect();
+        plan.step(gs.as_mut(), &pool, &actions, &mut rewards).unwrap();
+        out.push(fingerprint(gs.as_ref(), &rewards));
+    }
+    out
+}
+
+/// A transport whose `send` starts failing after a budget — the worker
+/// behind it dies mid-run exactly like a crashed process would.
+struct FailAfterSends {
+    inner: ChannelTransport,
+    sends_left: usize,
+}
+
+impl ShardTransport for FailAfterSends {
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        if self.sends_left == 0 {
+            anyhow::bail!("injected worker death");
+        }
+        self.sends_left -= 1;
+        self.inner.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        self.inner.recv()
+    }
+}
+
+#[test]
+fn worker_death_mid_run_degrades_without_perturbing_the_trajectory() {
+    let domain = Domain::Traffic;
+    let side = 3;
+    let steps = 20;
+    let reference = reference_trace(domain, side, steps);
+
+    let mut gs = make_global_sim(domain, side);
+    let n = gs.n_agents();
+    // Shard 0's worker dies after its 5th StepRes (budget = Hello + 5);
+    // shard 1 serves the whole run.
+    let (c0, w0) = ChannelTransport::pair();
+    let (c1, w1) = ChannelTransport::pair();
+    let h0 = std::thread::spawn(move || {
+        let mut t = FailAfterSends { inner: w0, sends_left: 6 };
+        serve(&mut t, None)
+    });
+    let h1 = std::thread::spawn(move || {
+        let mut t = w1;
+        serve(&mut t, None)
+    });
+    let mut plan =
+        DistPlan::from_transports(vec![Box::new(c0), Box::new(c1)], domain, side, gs.as_mut())
+            .unwrap();
+    let pool = WorkerPool::new(2);
+    let mut rng = Pcg64::seed(77);
+    let mut act_rng = Pcg64::seed(5);
+    let raw = rng.to_raw();
+    gs.reset(&mut rng);
+    plan.reseed(raw, &mut rng);
+    let n_act = gs.n_actions();
+    let mut rewards = vec![0.0f32; n];
+    for (t, want) in reference.iter().enumerate() {
+        let actions: Vec<usize> =
+            (0..n).map(|_| (act_rng.next_u64() % n_act as u64) as usize).collect();
+        plan.step(gs.as_mut(), &pool, &actions, &mut rewards).unwrap();
+        assert_eq!(
+            want,
+            &fingerprint(gs.as_ref(), &rewards),
+            "trajectory diverged at step {t} after the shard-0 worker died"
+        );
+    }
+    assert_eq!(plan.n_disconnected(), 1, "shard 0 should be marked disconnected");
+    assert!(
+        plan.speculations() >= (steps - 6) as u64,
+        "every post-death step should re-execute shard 0 locally (got {})",
+        plan.speculations()
+    );
+    drop(plan); // Shutdown to the survivor, drain the dead shard.
+    assert!(h0.join().unwrap().is_err(), "the dying worker should surface its send error");
+    h1.join().unwrap().unwrap();
+}
+
+#[test]
+fn late_replies_after_speculation_are_discarded_without_state_drift() {
+    // Every worker straggles on every step and the deadline is tiny, so
+    // EVERY step speculates and EVERY reply arrives late — the maximal
+    // discard schedule. The trajectory must still match the in-process
+    // reference bit-for-bit, including across an episode reset.
+    let domain = Domain::Warehouse;
+    let side = 3;
+    let steps = 8;
+    let reference = reference_trace(domain, side, steps);
+
+    let mut gs = make_global_sim(domain, side);
+    let n = gs.n_agents();
+    let straggle = StraggleInjection { delay_ms: 40, every: 1 };
+    let mut plan =
+        DistPlan::loopback_straggle(2, domain, side, gs.as_mut(), Some(straggle)).unwrap();
+    plan.set_deadline_override(Duration::from_millis(5));
+    let pool = WorkerPool::new(4);
+    let mut rng = Pcg64::seed(77);
+    let mut act_rng = Pcg64::seed(5);
+    let raw = rng.to_raw();
+    gs.reset(&mut rng);
+    plan.reseed(raw, &mut rng);
+    let n_act = gs.n_actions();
+    let mut rewards = vec![0.0f32; n];
+    for (t, want) in reference.iter().enumerate() {
+        let actions: Vec<usize> =
+            (0..n).map(|_| (act_rng.next_u64() % n_act as u64) as usize).collect();
+        plan.step(gs.as_mut(), &pool, &actions, &mut rewards).unwrap();
+        assert_eq!(
+            want,
+            &fingerprint(gs.as_ref(), &rewards),
+            "state drifted at step {t} under an all-late reply schedule"
+        );
+    }
+    assert!(plan.speculations() >= steps as u64, "every step should have speculated");
+    assert_eq!(plan.n_disconnected(), 0, "late is not dead: no shard should be dropped");
+    // An episode reset drains the parked late replies and reconverges.
+    let mut rng2 = Pcg64::seed(123);
+    let raw2 = rng2.to_raw();
+    gs.reset(&mut rng2);
+    plan.reseed(raw2, &mut rng2);
+    let actions = vec![0usize; n];
+    plan.step(gs.as_mut(), &pool, &actions, &mut rewards).unwrap();
+    assert_eq!(plan.n_disconnected(), 0);
+}
+
+#[test]
+fn truncated_socket_frames_error_instead_of_panicking() {
+    // A peer that writes a partial frame then closes must surface as a
+    // clean Err on the reader side, wherever the cut lands.
+    let listener = ShardListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_port().unwrap();
+    let mut full = Vec::new();
+    Frame::Hello { version: 1 }.encode(&mut full);
+    let mut wire = (full.len() as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(&full);
+    for cut in 0..wire.len() {
+        let partial = wire[..cut].to_vec();
+        let writer = std::thread::spawn(move || {
+            use std::io::Write;
+            let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            s.write_all(&partial).unwrap();
+            // drop: closes the socket mid-frame
+        });
+        let mut t = listener.accept(Some(Duration::from_secs(5))).unwrap();
+        let err = t.recv().expect_err("truncated frame must not decode");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("closed") || msg.contains("timed out"),
+            "unexpected error shape at cut {cut}: {msg}"
+        );
+        writer.join().unwrap();
+    }
+    // The intact frame still decodes on a fresh connection.
+    let whole = wire.clone();
+    let writer = std::thread::spawn(move || {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        s.write_all(&whole).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+    });
+    let mut t = listener.accept(Some(Duration::from_secs(5))).unwrap();
+    match t.recv().unwrap() {
+        Frame::Hello { version } => assert_eq!(version, 1),
+        other => panic!("expected Hello, got {}", other.name()),
+    }
+    writer.join().unwrap();
+}
+
+#[test]
+fn worker_survives_coordinator_disconnect_mid_step() {
+    // The coordinator vanishing (no Shutdown frame) is a CLEAN worker
+    // exit: serve returns Ok on the dropped transport.
+    let (mut coord, worker) = ChannelTransport::pair();
+    let h = std::thread::spawn(move || {
+        let mut t = worker;
+        serve(&mut t, None)
+    });
+    match coord.recv().unwrap() {
+        Frame::Hello { .. } => {}
+        other => panic!("expected Hello, got {}", other.name()),
+    }
+    coord
+        .send(&Frame::Init { domain: Domain::Traffic, grid_side: 2, start: 0, end: 2, n_agents: 4 })
+        .unwrap();
+    let rng = Pcg64::seed(3);
+    let (s, inc) = rng.to_raw();
+    coord.send(&Frame::Reset { state: s, inc }).unwrap();
+    coord.send(&Frame::Step { step_id: 0, actions: vec![0, 1], sync: Vec::new() }).unwrap();
+    let _ = coord.recv().unwrap(); // StepRes
+    drop(coord); // no Shutdown: simulate a coordinator crash
+    h.join().unwrap().expect("a vanished coordinator must be a clean worker exit");
+}
+
+#[test]
+fn socket_transport_read_timeout_is_an_error_not_a_hang() {
+    let listener = ShardListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_port().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut t = SocketTransport::connect(
+            &format!("127.0.0.1:{port}"),
+            Some(Duration::from_millis(50)),
+        )
+        .unwrap();
+        t.recv()
+    });
+    // Accept but never send: the client's recv must time out.
+    let _silent = listener.accept(Some(Duration::from_secs(5))).unwrap();
+    let err = client.join().unwrap().expect_err("silent peer must time the read out");
+    assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+}

@@ -129,6 +129,8 @@ fn tiny_cfg(threads: usize) -> ExperimentConfig {
         async_retrain: 0,
         ls_replicas: 0,
         save_ckpt_every: 0,
+        gs_procs: 0,
+        shard_addr: String::new(),
     }
 }
 

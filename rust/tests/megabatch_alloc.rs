@@ -49,6 +49,8 @@ fn steady_state_megabatch_tick_allocates_nothing() {
             async_retrain: 0,
             ls_replicas: 4,
             save_ckpt_every: 0,
+            gs_procs: 0,
+            shard_addr: String::new(),
         };
         let engine = Engine::cpu().unwrap();
         let coord = DialsCoordinator::new(&engine, cfg.clone()).unwrap();

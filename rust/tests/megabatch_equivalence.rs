@@ -68,6 +68,8 @@ fn fwd_cfg(domain: Domain, dir: &std::path::Path, ls_replicas: usize, threads: u
         async_retrain: 0,
         ls_replicas,
         save_ckpt_every: 0,
+        gs_procs: 0,
+        shard_addr: String::new(),
     }
 }
 

@@ -249,6 +249,8 @@ fn retrain_cfg(domain: Domain, dir: &std::path::Path, seed: u64) -> ExperimentCo
         async_retrain: 0,
         ls_replicas: 0,
         save_ckpt_every: 0,
+        gs_procs: 0,
+        shard_addr: String::new(),
     }
 }
 

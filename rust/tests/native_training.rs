@@ -227,6 +227,8 @@ fn train_cfg(
         async_retrain: 0,
         ls_replicas,
         save_ckpt_every: 0,
+        gs_procs: 0,
+        shard_addr: String::new(),
     }
 }
 

@@ -12,6 +12,8 @@
 //!   (timing noise tolerance; the structural metrics above are exact);
 //! * `ls_steps_per_s` — megabatch LS training throughput (trained env
 //!   steps per second across all replicas) gets the same 20% tolerance;
+//! * `dist_steps_per_s` — joint GS throughput through the multi-process
+//!   `DistPlan` loopback protocol gets the same 20% tolerance;
 //! * `seg_eval_wall_s` / `collect_wall_s` — the overlap wall-clock of the
 //!   blocking-vs-async coordinator rows may grow at most 25% above the
 //!   baseline, so the segment+eval and segment+collect overlaps stay
@@ -158,6 +160,18 @@ fn diff(fresh: &str, baseline: &str) -> Result<Vec<String>> {
                 )),
             }
         }
+        if let Some(bv) = b.dist_steps_per_s {
+            match f.dist_steps_per_s {
+                Some(fv) if fv < bv * (1.0 - STEPS_DROP_TOL) => regressions.push(format!(
+                    "{op}: dist_steps_per_s dropped {bv:.1} -> {fv:.1} (>{:.0}% below baseline)",
+                    STEPS_DROP_TOL * 100.0
+                )),
+                Some(_) => {}
+                None => regressions.push(format!(
+                    "{op}: gated dist_steps_per_s missing (null) in fresh run"
+                )),
+            }
+        }
         for (metric, unit, bval, fval) in [
             ("seg_eval_wall_s", "s", b.seg_eval_wall_s, f.seg_eval_wall_s),
             ("collect_wall_s", "s", b.collect_wall_s, f.collect_wall_s),
@@ -200,6 +214,7 @@ struct Row {
     calls_per_step: Option<f64>,
     steps_per_s: Option<f64>,
     ls_steps_per_s: Option<f64>,
+    dist_steps_per_s: Option<f64>,
     update_wall_s: Option<f64>,
     seg_eval_wall_s: Option<f64>,
     collect_wall_s: Option<f64>,
@@ -236,6 +251,7 @@ impl Bench {
                     calls_per_step: num(r.get("calls_per_step")),
                     steps_per_s: num(r.get("steps_per_s")),
                     ls_steps_per_s: num(r.get("ls_steps_per_s")),
+                    dist_steps_per_s: num(r.get("dist_steps_per_s")),
                     update_wall_s: num(r.get("update_wall_s")),
                     seg_eval_wall_s: num(r.get("seg_eval_wall_s")),
                     collect_wall_s: num(r.get("collect_wall_s")),
@@ -527,6 +543,22 @@ mod tests {
         )
     }
 
+    /// `doc` plus one multi-process `DistPlan` loopback row whose
+    /// `dist_steps_per_s` is the given JSON literal (a number, or "null"
+    /// for ungated).
+    fn doc_with_dist(dist_sps: &str) -> String {
+        doc(1.0, 0.0, 50_000.0, true).replace(
+            "\n],",
+            &format!(
+                ",\n{{\"op\": \"traffic dist GS step x2 procs (N=576)\", \
+                 \"mean_s\": 0.0001, \"min_s\": 0.0001, \"bytes_per_step\": null, \
+                 \"peak_extra_bytes\": 0, \"calls_per_step\": null, \"steps_per_s\": null, \
+                 \"seg_eval_wall_s\": null, \"collect_wall_s\": null, \
+                 \"dist_steps_per_s\": {dist_sps}}}\n],"
+            ),
+        )
+    }
+
     /// `doc` plus one `dials serve` load-gen row whose percentile columns
     /// are the given JSON literals (numbers, or "null" for ungated).
     fn doc_with_serve(p50: &str, p99: &str) -> String {
@@ -602,6 +634,35 @@ mod tests {
         let regs = diff(&doc_with_ls("null"), &base).unwrap();
         assert_eq!(regs.len(), 1, "{regs:?}");
         assert!(regs[0].contains("ls_steps_per_s"), "{regs:?}");
+        assert!(regs[0].contains("missing"), "{regs:?}");
+    }
+
+    #[test]
+    fn dist_steps_per_s_gets_20_percent_tolerance() {
+        let base = doc_with_dist("10000.0");
+        // 12.5% slower: inside tolerance
+        assert!(diff(&doc_with_dist("8750.0"), &base).unwrap().is_empty());
+        // improvement: always passes
+        assert!(diff(&doc_with_dist("30000.0"), &base).unwrap().is_empty());
+        // 25% slower: regression
+        let regs = diff(&doc_with_dist("7500.0"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("dist_steps_per_s"), "{regs:?}");
+    }
+
+    #[test]
+    fn null_baseline_dist_steps_per_s_is_not_gated() {
+        let base = doc_with_dist("null");
+        // fresh value present but the baseline never recorded one: ungated
+        assert!(diff(&doc_with_dist("1.0"), &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gated_dist_steps_per_s_going_null_in_fresh_run_fails() {
+        let base = doc_with_dist("10000.0");
+        let regs = diff(&doc_with_dist("null"), &base).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("dist_steps_per_s"), "{regs:?}");
         assert!(regs[0].contains("missing"), "{regs:?}");
     }
 
